@@ -1,0 +1,55 @@
+//! Quickstart: plan, evaluate, execute and verify one model on a simulated
+//! edge cluster.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use flexpie::cost::CostSource;
+use flexpie::engine;
+use flexpie::model::zoo;
+use flexpie::net::{Bandwidth, Testbed, Topology};
+use flexpie::planner::Dpp;
+
+fn main() {
+    // 1. A model (the EdgeNet quickstart CNN) and a testbed: 4 edge devices
+    //    on a 5 Gb/s ring — the paper's SRIO-class configuration.
+    let model = zoo::edgenet(64);
+    let testbed = Testbed::new(4, Topology::Ring, Bandwidth::gbps(5.0));
+    println!(
+        "model: {} ({} layers, {:.1} MFLOPs)",
+        model.name,
+        model.n_layers(),
+        model.total_flops() / 1e6
+    );
+
+    // 2. Plan with FlexPie's DPP (here against the analytic cost oracle;
+    //    pass a GBDT CostSource for the paper's learned-CE setup).
+    let cost = CostSource::analytic(&testbed);
+    let (plan, stats) = Dpp::new(&model, &cost).plan_with_stats();
+    println!("plan:  {}", plan.render());
+    println!(
+        "search: {:.2} ms, {} compute + {} sync estimator queries ({} pruned)",
+        stats.elapsed.as_secs_f64() * 1e3,
+        stats.compute_queries,
+        stats.sync_queries,
+        stats.candidates_pruned
+    );
+
+    // 3. Evaluate on the simulated testbed (the virtual clock).
+    let report = engine::evaluate(&model, &plan, &testbed);
+    println!(
+        "simulated inference: {:.3} ms total = {:.3} ms compute + {:.3} ms sync ({} B moved)",
+        report.total_ms(),
+        report.compute * 1e3,
+        report.sync * 1e3,
+        report.bytes_moved
+    );
+
+    // 4. Execute with real numerics on the simulated cluster and verify
+    //    against the single-node reference.
+    let diff = engine::verify_plan(&model, &plan, &testbed, 42);
+    println!("distributed vs single-node reference: max |diff| = {diff}");
+    assert_eq!(diff, 0.0);
+    println!("quickstart OK");
+}

@@ -1,0 +1,75 @@
+//! Testbed sweep: how FlexPie's chosen plan *adapts* to the cluster — the
+//! paper's core motivation ("the optimal partition scheme obtained from one
+//! testbed will no longer be the optimal after we switch to another").
+//!
+//! Sweeps node count × topology × bandwidth for MobileNet and prints the
+//! plan shape (scheme histogram + fusion count) and the win over the best
+//! fixed baseline.
+//!
+//! ```bash
+//! cargo run --release --example testbed_sweep
+//! ```
+
+use flexpie::cost::CostSource;
+use flexpie::engine;
+use flexpie::model::zoo;
+use flexpie::net::{Bandwidth, Testbed, Topology};
+use flexpie::partition::{Plan, Scheme};
+use flexpie::planner::Dpp;
+use flexpie::util::bench::Table;
+
+fn scheme_histogram(plan: &Plan) -> String {
+    let mut counts = [0usize; 4];
+    for s in &plan.steps {
+        counts[s.scheme.code() as usize] += 1;
+    }
+    Scheme::ALL
+        .iter()
+        .zip(counts)
+        .filter(|(_, c)| *c > 0)
+        .map(|(s, c)| format!("{s}×{c}"))
+        .collect::<Vec<_>>()
+        .join(" ")
+}
+
+fn main() {
+    let model = zoo::mobilenet_v1(224, 1000);
+    let mut table = Table::new([
+        "nodes", "topology", "bw", "FlexPie (ms)", "best fixed (ms)", "speedup", "NT", "schemes",
+    ]);
+
+    for nodes in [3usize, 4, 5, 6] {
+        for topology in [Topology::Ring, Topology::Ps] {
+            for gbps in [5.0, 1.0, 0.5] {
+                let tb = Testbed::new(nodes, topology, Bandwidth::gbps(gbps));
+                let cost = CostSource::analytic(&tb);
+                let plan = Dpp::new(&model, &cost).plan();
+                let flex = engine::evaluate(&model, &plan, &tb).total_ms();
+                let best_fixed = Scheme::ALL
+                    .iter()
+                    .map(|&s| {
+                        engine::evaluate(
+                            &model,
+                            &Plan::uniform(s, model.n_layers()),
+                            &tb,
+                        )
+                        .total_ms()
+                    })
+                    .fold(f64::INFINITY, f64::min);
+                table.row([
+                    nodes.to_string(),
+                    topology.name().to_string(),
+                    format!("{gbps} Gb/s"),
+                    format!("{flex:.2}"),
+                    format!("{best_fixed:.2}"),
+                    format!("{:.2}x", best_fixed / flex),
+                    plan.n_fused_layers().to_string(),
+                    scheme_histogram(&plan),
+                ]);
+            }
+        }
+    }
+    table.print();
+    println!("\nNote how the scheme mix and fusion count shift with the testbed —");
+    println!("no fixed partition scheme is optimal everywhere (paper §2.2).");
+}

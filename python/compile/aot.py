@@ -1,0 +1,102 @@
+"""AOT pipeline: lower every artifact-menu layer to HLO **text** and write
+`artifacts/manifest.json`.
+
+HLO text (not `.serialize()`) is the interchange format: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids, which the `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Run once at build time (`make artifacts`); Python never runs at inference
+time.
+
+Usage: python -m compile.aot --out-dir ../artifacts [--check]
+"""
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+
+import jax
+
+from .model import LayerSpec, artifact_menu, example_args, layer_fn
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → XlaComputation → HLO text (the version-safe path)."""
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_spec(spec: LayerSpec) -> str:
+    fn = layer_fn(spec, use_pallas=True)
+    lowered = jax.jit(fn).lower(*example_args(spec))
+    return to_hlo_text(lowered)
+
+
+def self_check(spec: LayerSpec) -> float:
+    """Numerically check the pallas lowering against the pure-jnp reference
+    (returns max abs diff)."""
+    import numpy as np
+    import jax.numpy as jnp
+
+    rng = np.random.RandomState(hash(spec.signature()) % (2**31))
+    args = [
+        jnp.asarray(rng.randn(*a.shape).astype("float32") * 0.1)
+        for a in example_args(spec)
+    ]
+    (got,) = layer_fn(spec, use_pallas=True)(*args)
+    (want,) = layer_fn(spec, use_pallas=False)(*args)
+    return float(jnp.abs(got - want).max())
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--check", action="store_true",
+                    help="numerically check each kernel vs the reference")
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    manifest: dict[str, str] = {}
+    t0 = time.time()
+    for spec in artifact_menu():
+        sig = spec.signature()
+        fname = f"{sig}.hlo.txt"
+        text = lower_spec(spec)
+        (out_dir / fname).write_text(text)
+        manifest[sig] = fname
+        extra = ""
+        if args.check:
+            diff = self_check(spec)
+            extra = f"  maxdiff={diff:.2e}"
+            assert diff < 1e-4, f"{sig}: pallas vs ref diff {diff}"
+        print(f"  {sig:<44} -> {fname} ({len(text)} chars){extra}")
+
+    (out_dir / "manifest.json").write_text(
+        json.dumps(
+            {
+                "artifacts": manifest,
+                "generated_by": "python/compile/aot.py",
+                "jax_version": jax.__version__,
+                "format": "hlo-text (xla_extension 0.5.1 compatible)",
+            },
+            indent=2,
+            sort_keys=True,
+        )
+    )
+    print(f"wrote {len(manifest)} artifacts + manifest.json to {out_dir} "
+          f"in {time.time() - t0:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

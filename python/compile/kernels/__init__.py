@@ -1,0 +1,5 @@
+"""Layer-1 Pallas kernels (build-time only; never on the request path)."""
+
+from .conv2d import conv2d  # noqa: F401
+from .dwconv import dwconv  # noqa: F401
+from .matmul import dense_hwc, matmul  # noqa: F401

@@ -1,0 +1,101 @@
+"""Layer-1 Pallas kernel: tiled direct convolution.
+
+The paper's compute hot-spot is the per-device convolution over a
+partitioned feature-map tile. The DSP implementation stages L2-SRAM stripes
+of the input; the TPU adaptation (DESIGN.md §Hardware-Adaptation) maps that
+staging onto VMEM tiles:
+
+* grid over **output-row blocks** — each grid step owns `block_rows` output
+  rows; the pipeline double-buffers the next stripe while the MXU works;
+* the inner computation is expressed as K·K **per-tap matmuls**
+  `(rows·W, InC) @ (InC, OutC)` so the MXU systolic array (not a scalar MAC
+  loop) does the accumulation;
+* the halo (the paper's boundary data, §2.3) is materialized by passing the
+  *padded* input resident and slicing `block_rows·s + k − 1` rows per step —
+  the in-VMEM equivalent of the T-mode boundary transfer.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; real-TPU numbers are estimated from the BlockSpec footprint in
+DESIGN.md.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _conv_kernel(x_ref, w_ref, b_ref, o_ref, *, k: int, stride: int, block_rows: int):
+    """One grid step: compute `block_rows` output rows."""
+    row0 = pl.program_id(0) * block_rows
+    x = x_ref[...]  # padded input, resident (small edge tiles fit VMEM)
+    w = w_ref[...]
+    oh, ow, oc = o_ref.shape
+    acc = jnp.zeros((block_rows, ow, oc), jnp.float32) + b_ref[...]
+    for ky in range(k):
+        for kx in range(k):
+            # rows row0*s+ky .. step s; cols kx .. step s — a (block_rows, ow,
+            # ic) patch, contracted against the (ic, oc) tap on the MXU.
+            patch = jax.lax.dynamic_slice(
+                x,
+                (row0 * stride + ky, kx, 0),
+                ((block_rows - 1) * stride + 1, (ow - 1) * stride + 1, x.shape[2]),
+            )
+            patch = patch[::stride, ::stride, :]
+            acc = acc + jax.lax.dot_general(
+                patch,
+                w[ky, kx],
+                (((2,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+    o_ref[...] = acc
+
+
+def conv2d(x, w, b, *, stride: int = 1, pad: int = 0, relu: bool = False,
+           block_rows: int | None = None, interpret: bool = True):
+    """Pallas direct conv. x: (h, w, c); w: (k, k, ic, oc); b: (oc,)."""
+    k = int(w.shape[0])
+    oc = int(w.shape[3])
+    oh = (x.shape[0] + 2 * pad - k) // stride + 1
+    ow = (x.shape[1] + 2 * pad - k) // stride + 1
+    xp = jnp.pad(x, ((pad, pad), (pad, pad), (0, 0)))
+
+    if block_rows is None:
+        # pick the largest divisor of oh that keeps the out stripe ≲ 2 MiB
+        block_rows = oh
+        budget = 2 * 1024 * 1024 // 4
+        for cand in range(oh, 0, -1):
+            if oh % cand == 0 and cand * ow * oc <= budget:
+                block_rows = cand
+                break
+    assert oh % block_rows == 0, (oh, block_rows)
+
+    kernel = functools.partial(_conv_kernel, k=k, stride=stride, block_rows=block_rows)
+    out = pl.pallas_call(
+        kernel,
+        grid=(oh // block_rows,),
+        in_specs=[
+            pl.BlockSpec(xp.shape, lambda i: (0, 0, 0)),  # padded input resident
+            pl.BlockSpec(w.shape, lambda i: (0, 0, 0, 0)),
+            pl.BlockSpec(b.shape, lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, ow, oc), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((oh, ow, oc), jnp.float32),
+        interpret=interpret,
+    )(xp, w, b)
+    return jnp.maximum(out, 0.0) if relu else out
+
+
+def vmem_estimate_bytes(h: int, w: int, c_in: int, c_out: int, k: int, stride: int,
+                        pad: int, block_rows: int) -> int:
+    """Estimated VMEM working set of one grid step (DESIGN.md §Perf):
+    resident padded input + weights + bias + one output stripe + accumulator."""
+    hp, wp = h + 2 * pad, w + 2 * pad
+    ow = (w + 2 * pad - k) // stride + 1
+    return 4 * (
+        hp * wp * c_in  # input stripe (resident here; stripes on real TPU)
+        + k * k * c_in * c_out  # weights
+        + c_out  # bias
+        + 2 * block_rows * ow * c_out  # out stripe + accumulator
+    )

@@ -1,0 +1,63 @@
+"""Layer-1 Pallas kernel: depthwise convolution (MobileNet's dominant op).
+
+Same VMEM staging pattern as `conv2d.py`, but the per-tap inner op is an
+elementwise multiply-accumulate over the channel lane dimension (the VPU,
+not the MXU — depthwise convs are memory-bound, which is exactly why the
+analytic device model gives them a low efficiency factor).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dw_kernel(x_ref, w_ref, b_ref, o_ref, *, k: int, stride: int, block_rows: int):
+    row0 = pl.program_id(0) * block_rows
+    x = x_ref[...]
+    w = w_ref[...]
+    _, ow, c = o_ref.shape
+    acc = jnp.zeros((block_rows, ow, c), jnp.float32) + b_ref[...]
+    for ky in range(k):
+        for kx in range(k):
+            patch = jax.lax.dynamic_slice(
+                x,
+                (row0 * stride + ky, kx, 0),
+                ((block_rows - 1) * stride + 1, (ow - 1) * stride + 1, c),
+            )
+            acc = acc + patch[::stride, ::stride, :] * w[ky, kx]
+    o_ref[...] = acc
+
+
+def dwconv(x, w, b, *, stride: int = 1, pad: int = 0, relu: bool = False,
+           block_rows: int | None = None, interpret: bool = True):
+    """Pallas depthwise conv. x: (h, w, c); w: (k, k, c); b: (c,)."""
+    k = int(w.shape[0])
+    c = int(x.shape[2])
+    oh = (x.shape[0] + 2 * pad - k) // stride + 1
+    ow = (x.shape[1] + 2 * pad - k) // stride + 1
+    xp = jnp.pad(x, ((pad, pad), (pad, pad), (0, 0)))
+
+    if block_rows is None:
+        block_rows = oh
+        for cand in range(oh, 0, -1):
+            if oh % cand == 0 and cand * ow * c <= 2 * 1024 * 1024 // 4:
+                block_rows = cand
+                break
+    assert oh % block_rows == 0
+
+    kernel = functools.partial(_dw_kernel, k=k, stride=stride, block_rows=block_rows)
+    out = pl.pallas_call(
+        kernel,
+        grid=(oh // block_rows,),
+        in_specs=[
+            pl.BlockSpec(xp.shape, lambda i: (0, 0, 0)),
+            pl.BlockSpec(w.shape, lambda i: (0, 0, 0)),
+            pl.BlockSpec(b.shape, lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, ow, c), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((oh, ow, c), jnp.float32),
+        interpret=interpret,
+    )(xp, w, b)
+    return jnp.maximum(out, 0.0) if relu else out

@@ -1,0 +1,68 @@
+"""Layer-1 Pallas kernel: blocked matmul (FC / BERT layers).
+
+Classic MXU-shaped tiling: grid over (M-blocks × N-blocks); each step
+contracts a (bm, K) × (K, bn) pair with an f32 accumulator. Block sizes
+default to 128 (the MXU lane width) clamped to the problem size.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mm_kernel(x_ref, w_ref, b_ref, o_ref):
+    o_ref[...] = (
+        jax.lax.dot_general(
+            x_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        + b_ref[...]
+    )
+
+
+def matmul(x, w, b, *, relu: bool = False, bm: int | None = None,
+           bn: int | None = None, interpret: bool = True):
+    """(M, K) @ (K, N) + b. Grid-blocked over M and N."""
+    m, k = int(x.shape[0]), int(x.shape[1])
+    n = int(w.shape[1])
+
+    def pick(dim, pref):
+        for cand in (pref, 64, 32, 16, 8, 4, 2, 1):
+            if cand <= dim and dim % cand == 0:
+                return cand
+        return 1
+
+    bm = bm or pick(m, 128)
+    bn = bn or pick(n, 128)
+    assert m % bm == 0 and n % bn == 0
+
+    out = pl.pallas_call(
+        _mm_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, w, b)
+    return jnp.maximum(out, 0.0) if relu else out
+
+
+def dense_hwc(x, w, b, *, relu: bool = False, interpret: bool = True):
+    """HWC-embedded dense layer: (rows, 1, in_c) → (rows, 1, out_c)."""
+    rows = x.shape[0]
+    out = matmul(x.reshape(rows, x.shape[2]), w, b, relu=relu, interpret=interpret)
+    return out.reshape(rows, 1, w.shape[1])
+
+
+def mxu_utilization(m: int, k: int, n: int, bm: int = 128, bn: int = 128) -> float:
+    """Fraction of MXU work that is useful (edge-tile padding waste), for
+    DESIGN.md §Perf: util = (m·k·n) / (ceil(m/bm)·bm · k · ceil(n/bn)·bn)."""
+    import math
+
+    mp = math.ceil(m / bm) * bm
+    np_ = math.ceil(n / bn) * bn
+    return (m * k * n) / (mp * k * np_)

@@ -1,0 +1,85 @@
+"""Pure-jnp reference oracles for the Layer-1 Pallas kernels.
+
+Hand-rolled per-tap accumulation (no ``lax.conv``) so the reference is a
+transparent, independently-checkable statement of the semantics the Rust
+native kernels (`rust/src/compute/`) and the Pallas kernels must both match.
+
+Layout conventions (shared across all three layers of the stack):
+  feature maps  — HWC, f32
+  conv weights  — (k, k, in_c, out_c)
+  dwconv weights— (k, k, c)
+  dense weights — (in_c, out_c)
+  bias          — (out_c,)
+"""
+
+import jax.numpy as jnp
+
+
+def conv2d_ref(x, w, b, stride: int, pad: int):
+    """Standard convolution; zero padding, square kernel/stride."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((pad, pad), (pad, pad), (0, 0)))
+    oh = (x.shape[0] + 2 * pad - k) // stride + 1
+    ow = (x.shape[1] + 2 * pad - k) // stride + 1
+    out = jnp.broadcast_to(b, (oh, ow, w.shape[3])).astype(jnp.float32)
+    for ky in range(k):
+        for kx in range(k):
+            patch = xp[
+                ky : ky + (oh - 1) * stride + 1 : stride,
+                kx : kx + (ow - 1) * stride + 1 : stride,
+                :,
+            ]
+            out = out + jnp.einsum(
+                "hwi,io->hwo", patch, w[ky, kx], preferred_element_type=jnp.float32
+            )
+    return out
+
+
+def dwconv_ref(x, w, b, stride: int, pad: int):
+    """Depthwise convolution: one k×k filter per channel."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((pad, pad), (pad, pad), (0, 0)))
+    oh = (x.shape[0] + 2 * pad - k) // stride + 1
+    ow = (x.shape[1] + 2 * pad - k) // stride + 1
+    out = jnp.broadcast_to(b, (oh, ow, x.shape[2])).astype(jnp.float32)
+    for ky in range(k):
+        for kx in range(k):
+            patch = xp[
+                ky : ky + (oh - 1) * stride + 1 : stride,
+                kx : kx + (ow - 1) * stride + 1 : stride,
+                :,
+            ]
+            out = out + patch * w[ky, kx]
+    return out
+
+
+def dense_ref(x, w, b):
+    """Row-wise matmul: (rows, in_c) @ (in_c, out_c) + b.
+
+    ``x`` may be (rows, 1, in_c) (the HWC embedding used by the Rust IR) or
+    (rows, in_c).
+    """
+    squeeze = x.ndim == 3
+    if squeeze:
+        x = x[:, 0, :]
+    out = x @ w + b
+    return out[:, None, :] if squeeze else out
+
+
+def avgpool_ref(x, k: int, stride: int):
+    """Average pooling, no padding (matches the Rust kernel: divide by k²)."""
+    oh = (x.shape[0] - k) // stride + 1
+    ow = (x.shape[1] - k) // stride + 1
+    out = jnp.zeros((oh, ow, x.shape[2]), jnp.float32)
+    for ky in range(k):
+        for kx in range(k):
+            out = out + x[
+                ky : ky + (oh - 1) * stride + 1 : stride,
+                kx : kx + (ow - 1) * stride + 1 : stride,
+                :,
+            ]
+    return out / float(k * k)
+
+
+def relu(x):
+    return jnp.maximum(x, 0.0)

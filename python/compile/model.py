@@ -1,0 +1,155 @@
+"""Layer-2: the JAX layer ops and model graphs that call the Layer-1 Pallas
+kernels. Build-time only — `aot.py` lowers these functions to HLO text once;
+the Rust runtime executes the artifacts at inference time.
+
+The shape menu mirrors `rust/src/model/zoo.rs::edgenet` exactly; the two
+sides meet at `artifacts/manifest.json` via the shared signature scheme
+(`rust/src/runtime/mod.rs::signature`).
+"""
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+from .kernels import conv2d, dense_hwc, dwconv
+from .kernels import ref
+
+
+@dataclass(frozen=True)
+class LayerSpec:
+    """Mirror of the Rust `LayerMeta` fields that matter for lowering."""
+
+    name: str
+    op: str  # conv2d | dwconv | dense | avgpool
+    in_h: int
+    in_w: int
+    in_c: int
+    out_c: int
+    k: int
+    s: int
+    p: int
+    relu: bool = False
+
+    @property
+    def out_h(self) -> int:
+        if self.op == "dense":
+            return self.in_h
+        return (self.in_h + 2 * self.p - self.k) // self.s + 1
+
+    @property
+    def out_w(self) -> int:
+        if self.op == "dense":
+            return 1
+        return (self.in_w + 2 * self.p - self.k) // self.s + 1
+
+    def signature(self) -> str:
+        """Must match rust/src/runtime/mod.rs::signature."""
+        relu = "_relu" if self.relu else ""
+        if self.op == "dense":
+            return f"dense_m{self.in_h}_k{self.in_c}_n{self.out_c}{relu}"
+        return (
+            f"{self.op}_ih{self.in_h}_iw{self.in_w}_ic{self.in_c}"
+            f"_oc{self.out_c}_k{self.k}_s{self.s}_p{self.p}{relu}"
+        )
+
+
+def layer_fn(spec: LayerSpec, use_pallas: bool = True):
+    """The jax function for one layer, returning a 1-tuple (the AOT recipe
+    lowers with return_tuple=True and the Rust side unwraps to_tuple1)."""
+    if spec.op == "conv2d":
+        def fn(x, w, b):
+            if use_pallas:
+                out = conv2d(x, w, b, stride=spec.s, pad=spec.p, relu=spec.relu)
+            else:
+                out = ref.conv2d_ref(x, w, b, spec.s, spec.p)
+                if spec.relu:
+                    out = ref.relu(out)
+            return (out,)
+        return fn
+    if spec.op == "dwconv":
+        def fn(x, w, b):
+            if use_pallas:
+                out = dwconv(x, w, b, stride=spec.s, pad=spec.p, relu=spec.relu)
+            else:
+                out = ref.dwconv_ref(x, w, b, spec.s, spec.p)
+                if spec.relu:
+                    out = ref.relu(out)
+            return (out,)
+        return fn
+    if spec.op == "dense":
+        def fn(x, w, b):
+            if use_pallas:
+                out = dense_hwc(x, w, b, relu=spec.relu)
+            else:
+                out = ref.dense_ref(x, w, b)
+                if spec.relu:
+                    out = ref.relu(out)
+            return (out,)
+        return fn
+    if spec.op == "avgpool":
+        def fn(x):
+            return (ref.avgpool_ref(x, spec.k, spec.s),)
+        return fn
+    raise ValueError(f"unknown op {spec.op}")
+
+
+def example_args(spec: LayerSpec):
+    """ShapeDtypeStructs for lowering."""
+    import jax
+
+    f32 = jnp.float32
+    x = jax.ShapeDtypeStruct((spec.in_h, spec.in_w, spec.in_c), f32)
+    if spec.op == "avgpool":
+        return (x,)
+    if spec.op == "dense":
+        w = jax.ShapeDtypeStruct((spec.in_c, spec.out_c), f32)
+    elif spec.op == "dwconv":
+        w = jax.ShapeDtypeStruct((spec.k, spec.k, spec.out_c), f32)
+    else:
+        w = jax.ShapeDtypeStruct((spec.k, spec.k, spec.in_c, spec.out_c), f32)
+    b = jax.ShapeDtypeStruct((spec.out_c,), f32)
+    return (x, w, b)
+
+
+def edgenet_specs(input_size: int = 16) -> list[LayerSpec]:
+    """Mirror of rust zoo::edgenet(input) — the quickstart/AOT model."""
+    assert input_size % 8 == 0
+    h1, h2 = input_size // 2, input_size // 4
+    return [
+        LayerSpec("c0", "conv2d", input_size, input_size, 3, 8, 3, 1, 1),
+        LayerSpec("dw1", "dwconv", input_size, input_size, 8, 8, 3, 2, 1),
+        LayerSpec("pw1", "conv2d", h1, h1, 8, 16, 1, 1, 0),
+        LayerSpec("c2", "conv2d", h1, h1, 16, 16, 3, 1, 1),
+        LayerSpec("dw2", "dwconv", h1, h1, 16, 16, 3, 2, 1),
+        LayerSpec("pw2", "conv2d", h2, h2, 16, 32, 1, 1, 0),
+        LayerSpec("c3", "conv2d", h2, h2, 32, 32, 3, 1, 1),
+        LayerSpec("avgpool", "avgpool", h2, h2, 32, 32, h2, h2, 0),
+        LayerSpec("fc", "dense", 1, 1, 32, 10, 1, 1, 0),
+    ]
+
+
+def artifact_menu() -> list[LayerSpec]:
+    """Every (op, shape) lowered by aot.py: the EdgeNet quickstart model at
+    input sizes 16/32/64 (the Rust e2e_runtime test uses 16; the e2e_serving
+    example uses 64, where distribution genuinely pays off)."""
+    menu: list[LayerSpec] = []
+    seen: set[str] = set()
+    for size in (16, 32, 64):
+        for spec in edgenet_specs(size):
+            sig = spec.signature()
+            if sig not in seen:
+                seen.add(sig)
+                menu.append(spec)
+    return menu
+
+
+def run_chain(specs: list[LayerSpec], x, params, use_pallas: bool = True):
+    """Run a whole chain (used by tests to check L2 composition)."""
+    for spec in specs:
+        fn = layer_fn(spec, use_pallas=use_pallas)
+        if spec.op == "avgpool":
+            (x,) = fn(x)
+        else:
+            w, b = params[spec.name]
+            (x,) = fn(x, w, b)
+    return x

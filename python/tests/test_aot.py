@@ -1,0 +1,43 @@
+"""AOT pipeline tests: HLO-text lowering and manifest structure."""
+
+import json
+import pathlib
+import subprocess
+import sys
+
+from compile.aot import lower_spec, self_check
+from compile.model import edgenet_specs
+
+
+def test_lower_spec_produces_hlo_text():
+    spec = edgenet_specs(16)[0]
+    text = lower_spec(spec)
+    assert "HloModule" in text
+    # pallas interpret-mode lowers to plain HLO ops, no mosaic custom-calls
+    assert "custom-call" not in text.lower() or "mosaic" not in text.lower()
+    # entry computation returns a tuple (return_tuple=True)
+    assert "ROOT" in text
+
+
+def test_self_check_all_edgenet16_layers():
+    for spec in edgenet_specs(16):
+        diff = self_check(spec)
+        assert diff < 1e-4, f"{spec.signature()}: {diff}"
+
+
+def test_aot_main_writes_manifest(tmp_path):
+    out = tmp_path / "artifacts"
+    res = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(out)],
+        cwd=pathlib.Path(__file__).resolve().parents[1],
+        capture_output=True,
+        text=True,
+        timeout=600,
+    )
+    assert res.returncode == 0, res.stderr
+    manifest = json.loads((out / "manifest.json").read_text())
+    assert "artifacts" in manifest
+    for sig, fname in manifest["artifacts"].items():
+        path = out / fname
+        assert path.exists(), sig
+        assert "HloModule" in path.read_text()[:200]

@@ -1,0 +1,81 @@
+"""Layer-2 tests: layer specs, signatures, and full-chain composition."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from numpy.testing import assert_allclose
+
+from compile.model import (
+    LayerSpec,
+    artifact_menu,
+    edgenet_specs,
+    example_args,
+    layer_fn,
+    run_chain,
+)
+
+
+def make_params(specs, seed=0):
+    rng = np.random.RandomState(seed)
+    params = {}
+    for spec in specs:
+        if spec.op == "avgpool":
+            continue
+        args = example_args(spec)
+        w = jnp.asarray(rng.randn(*args[1].shape).astype(np.float32) * 0.2)
+        b = jnp.asarray(rng.randn(*args[2].shape).astype(np.float32) * 0.1)
+        params[spec.name] = (w, b)
+    return params
+
+
+def test_edgenet_specs_chain_shapes():
+    specs = edgenet_specs(16)
+    assert len(specs) == 9
+    # consecutive shape compatibility
+    for a, b in zip(specs, specs[1:]):
+        assert (a.out_h, a.out_w if a.op != "dense" else 1, a.out_c)[2] == b.in_c
+        assert a.out_h == b.in_h
+    assert specs[-1].out_c == 10
+
+
+def test_signatures_match_rust_scheme():
+    specs = edgenet_specs(16)
+    assert specs[0].signature() == "conv2d_ih16_iw16_ic3_oc8_k3_s1_p1"
+    assert specs[1].signature() == "dwconv_ih16_iw16_ic8_oc8_k3_s2_p1"
+    assert specs[-1].signature() == "dense_m1_k32_n10"
+    assert specs[-2].signature() == "avgpool_ih4_iw4_ic32_oc32_k4_s4_p0"
+
+
+def test_artifact_menu_unique_and_covers_edgenet16():
+    menu = artifact_menu()
+    sigs = [s.signature() for s in menu]
+    assert len(sigs) == len(set(sigs))
+    for spec in edgenet_specs(16):
+        assert spec.signature() in sigs
+
+
+def test_chain_pallas_matches_ref():
+    specs = edgenet_specs(16)
+    params = make_params(specs)
+    x = jnp.asarray(np.random.RandomState(7).randn(16, 16, 3).astype(np.float32))
+    got = run_chain(specs, x, params, use_pallas=True)
+    want = run_chain(specs, x, params, use_pallas=False)
+    assert got.shape == (1, 1, 10)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_layer_fns_jittable():
+    for spec in edgenet_specs(16)[:3]:
+        fn = jax.jit(layer_fn(spec))
+        args = [
+            jnp.zeros(a.shape, a.dtype) for a in example_args(spec)
+        ]
+        (out,) = fn(*args)
+        assert out.shape == (spec.out_h, spec.out_w, spec.out_c)
+
+
+def test_out_shape_arithmetic():
+    s = LayerSpec("t", "conv2d", 224, 224, 3, 32, 3, 2, 1)
+    assert (s.out_h, s.out_w) == (112, 112)
+    d = LayerSpec("fc", "dense", 1, 1, 32, 10, 1, 1, 0)
+    assert (d.out_h, d.out_w, d.out_c) == (1, 1, 10)

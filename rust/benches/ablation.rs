@@ -1,0 +1,41 @@
+//! Design ablations (DESIGN.md §6): what each piece of FlexPie buys.
+//!
+//! * GBDT-CE planning regret vs the analytic oracle
+//! * fusion disabled (layerwise-only)
+//! * OutC removed (spatial schemes only)
+//! * block span capped
+//!
+//! Plus Thm-1-scale evidence: DPP vs exhaustive plan cost on a small model.
+
+use flexpie::bench::{ablation, ablation_table, scaling, scaling_table, BenchOpts};
+use flexpie::cost::CostSource;
+use flexpie::model::zoo;
+use flexpie::net::{Bandwidth, Testbed, Topology};
+use flexpie::partition::Scheme;
+use flexpie::planner::exhaustive::{exhaustive_plan, plan_cost};
+use flexpie::planner::Dpp;
+
+fn main() {
+    let opts = BenchOpts::default();
+    println!("== Ablations (evaluated on the analytic simulator) ==");
+    ablation_table(&ablation(&opts)).print();
+
+    println!("\n== Node-count scaling (Ring @ 1 Gb/s) ==");
+    scaling_table(&scaling(&opts)).print();
+
+    println!("\n== Thm 1 spot-check (DPP vs exhaustive, edgenet-6) ==");
+    let model = zoo::edgenet(16).truncated(6);
+    for gbps in [5.0, 0.5] {
+        let tb = Testbed::new(4, Topology::Ring, Bandwidth::gbps(gbps));
+        let cost = CostSource::analytic(&tb);
+        let dpp = Dpp::new(&model, &cost).plan();
+        let brute = exhaustive_plan(&model, &cost, &Scheme::ALL);
+        let dpp_cost = plan_cost(&model, &dpp, &cost).total;
+        println!(
+            "  bw={gbps:>4} Gb/s  dpp={:.6} ms  exhaustive={:.6} ms  equal={}",
+            dpp_cost * 1e3,
+            brute.est_cost * 1e3,
+            (dpp_cost - brute.est_cost).abs() < 1e-12
+        );
+    }
+}

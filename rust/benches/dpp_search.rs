@@ -1,0 +1,32 @@
+//! DPP search-time cost (paper §4 Metrics) and the pruning ablation: plan
+//! wall-clock + estimator-call counts per benchmark model, with and without
+//! the dynamic-threshold pruning, against the naive combinatorial space
+//! size DPP avoids.
+
+use flexpie::bench::{search_time, search_time_table, BenchOpts, CostKind};
+use flexpie::cost::CostSource;
+use flexpie::model::zoo;
+use flexpie::net::{Bandwidth, Testbed, Topology};
+use flexpie::planner::Dpp;
+use flexpie::util::bench::BenchRunner;
+
+fn main() {
+    let opts = BenchOpts { cost: CostKind::Analytic, ..Default::default() };
+    println!("== DPP search time (analytic CE) ==");
+    search_time_table(&search_time(&opts)).print();
+
+    // steady-state planning latency (what a deployment pays per testbed
+    // change), measured properly with warmup
+    let r = BenchRunner::new("dpp");
+    let tb = Testbed::new(4, Topology::Ring, Bandwidth::gbps(5.0));
+    let cost = CostSource::analytic(&tb);
+    for (name, model) in [
+        ("mobilenet", zoo::mobilenet_v1(224, 1000)),
+        ("resnet18", zoo::resnet18(224, 1000)),
+        ("resnet101", zoo::resnet101(224, 1000)),
+        ("bert", zoo::bert_base(128)),
+    ] {
+        let dpp = Dpp::new(&model, &cost);
+        r.bench(&format!("plan/{name}"), || dpp.plan().est_cost);
+    }
+}

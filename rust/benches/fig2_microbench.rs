@@ -1,0 +1,20 @@
+//! Fig 2 reproduction: MobileNet L2/L5/L13 micro-bench across partition
+//! schemes on 4-node and 3-node testbeds (5 Gb/s ring), plus wall-clock
+//! timing of the underlying evaluation path.
+//!
+//! Paper shape to check: L2/L5 prefer spatial partitions (InH/2D-grid),
+//! L13 prefers OutC; the winner flips between the 4-node and 3-node rows.
+
+use flexpie::bench::{fig2, fig2_table, BenchOpts, CostKind};
+use flexpie::util::bench::BenchRunner;
+
+fn main() {
+    let opts = BenchOpts { cost: CostKind::Analytic, ..Default::default() };
+    println!("== Fig 2: micro-bench (per-layer inference time) ==");
+    let rows = fig2(&opts);
+    fig2_table(&rows).print();
+
+    // wall-clock of the generator itself (regression guard)
+    let r = BenchRunner::new("fig2");
+    r.bench("generate_all_cells", || fig2(&opts).len());
+}

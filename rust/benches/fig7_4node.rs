@@ -1,0 +1,31 @@
+//! Fig 7 reproduction: 4-node testbed — MobileNet / ResNet-18 / ResNet-101 /
+//! BERT × {OutC, InH/InW, 2D-grid, Layerwise, Fused-layer, FlexPie} ×
+//! {5, 1, 0.5} Gb/s × {Ring, PS}.
+//!
+//! Paper shape to check: 2D-grid is the best fixed scheme, OutC the worst;
+//! layerwise and fused beat fixed; FlexPie wins every row (1.10–2.21×);
+//! BERT rows are nearly flat.
+//!
+//! Set FLEXPIE_BENCH_FAST=1 to truncate models for smoke runs; pass
+//! `--cost analytic` semantics via FLEXPIE_BENCH_COST=analytic.
+
+use flexpie::bench::{fig7_9, fig7_9_tables, BenchOpts, CostKind};
+
+fn opts() -> BenchOpts {
+    let mut o = BenchOpts::default();
+    if std::env::var("FLEXPIE_BENCH_COST").as_deref() == Ok("analytic") {
+        o.cost = CostKind::Analytic;
+    }
+    o
+}
+
+fn main() {
+    let opts = opts();
+    let t0 = std::time::Instant::now();
+    let cells = fig7_9(4, &opts);
+    for (title, t) in fig7_9_tables(&cells) {
+        println!("\n== Fig 7 [{title}] ==");
+        t.print();
+    }
+    println!("\n({} cells in {:.1}s)", cells.len(), t0.elapsed().as_secs_f64());
+}

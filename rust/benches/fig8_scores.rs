@@ -1,0 +1,21 @@
+//! Fig 8 reproduction: summative performance score per solution
+//! (`score = mean over test cases of min(t₁..t₆)/tᵢ`), on the 4-node and
+//! 3-node grids.
+//!
+//! Paper shape to check: FlexPie scores 1.0 (or within estimator noise of
+//! it) on both testbeds; fixed schemes score lowest.
+
+use flexpie::bench::{fig7_9, fig8, fig8_table, BenchOpts, CostKind};
+
+fn main() {
+    let mut opts = BenchOpts::default();
+    if std::env::var("FLEXPIE_BENCH_COST").as_deref() == Ok("analytic") {
+        opts.cost = CostKind::Analytic;
+    }
+    let c4 = fig7_9(4, &opts);
+    let c3 = fig7_9(3, &opts);
+    let s4 = fig8(&c4, &opts);
+    let s3 = fig8(&c3, &opts);
+    println!("== Fig 8: performance score ==");
+    fig8_table(&s4, &s3).print();
+}

@@ -1,0 +1,21 @@
+//! Fig 9 reproduction: the Fig 7 grid on the 3-node testbed.
+//!
+//! Paper shape to check: 2D-grid becomes the *worst* fixed scheme (one node
+//! carries 2× the work on a 2×2 grid over 3 devices); FlexPie still wins
+//! every row (1.08–2.39×).
+
+use flexpie::bench::{fig7_9, fig7_9_tables, BenchOpts, CostKind};
+
+fn main() {
+    let mut opts = BenchOpts::default();
+    if std::env::var("FLEXPIE_BENCH_COST").as_deref() == Ok("analytic") {
+        opts.cost = CostKind::Analytic;
+    }
+    let t0 = std::time::Instant::now();
+    let cells = fig7_9(3, &opts);
+    for (title, t) in fig7_9_tables(&cells) {
+        println!("\n== Fig 9 [{title}] ==");
+        t.print();
+    }
+    println!("\n({} cells in {:.1}s)", cells.len(), t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,89 @@
+//! Hot-path micro-benchmarks — the §Perf profiling targets.
+//!
+//! The planner's inner loop is (feature build → estimator predict) and
+//! (tile math → message matrix → topology schedule); the engine's is the
+//! native conv kernel. Each is measured in isolation so EXPERIMENTS.md §Perf
+//! can attribute end-to-end improvements.
+
+use flexpie::compute::{compute_region, PatchStore, RegionTensor, Tensor, WeightStore};
+use flexpie::cost::gbdt::{Gbdt, GbdtParams};
+use flexpie::cost::query::{boundary_query, compute_query_tiles};
+use flexpie::cost::tracegen::{generate, TraceConfig};
+use flexpie::cost::{CostSource, NF};
+use flexpie::model::{zoo, ConvType, LayerMeta, Model};
+use flexpie::net::{Bandwidth, Testbed, Topology};
+use flexpie::partition::geometry::out_tiles;
+use flexpie::partition::inflate::BlockGeometry;
+use flexpie::partition::{union_volume, Region, Scheme};
+use flexpie::planner::exhaustive::plan_cost;
+use flexpie::partition::Plan;
+use flexpie::util::bench::{black_box, BenchRunner};
+
+fn main() {
+    let r = BenchRunner::new("hotpath");
+    let tb = Testbed::new(4, Topology::Ring, Bandwidth::gbps(5.0));
+
+    // --- geometry ---------------------------------------------------------
+    let layer = LayerMeta::conv("l", ConvType::Standard, 56, 56, 128, 128, 3, 1, 1);
+    r.bench("out_tiles/4nodes", || out_tiles(&layer, Scheme::Grid2d, 4));
+    let regions: Vec<Region> =
+        (0..6).map(|i| Region::new(i, i + 10, 0, 56, 0, 128)).collect();
+    r.bench("union_volume/6boxes", || union_volume(&regions));
+    let chain = zoo::tiny_chain(4, 56, 64);
+    r.bench("block_geometry/span4", || BlockGeometry::new(&chain.layers, Scheme::InH, 4));
+
+    // --- queries ----------------------------------------------------------
+    let tiles = out_tiles(&layer, Scheme::InH, 4);
+    r.bench("compute_query", || compute_query_tiles(&layer, &tiles, Scheme::InH, &tb));
+    let next = layer.clone();
+    let geo = BlockGeometry::new(std::slice::from_ref(&next), Scheme::InW, 4);
+    r.bench("boundary_query(cross-scheme)", || {
+        boundary_query(&layer, Scheme::InH, &next, Scheme::InW, &geo.entry_need, &tb)
+    });
+
+    // --- estimators -------------------------------------------------------
+    let traces = generate(&TraceConfig { samples: 3_000, ..Default::default() });
+    let params = GbdtParams { n_trees: 200, ..Default::default() };
+    let model = Gbdt::train(&traces.compute.x, &traces.compute.y, NF, &params);
+    let probe: Vec<f64> = traces.compute.x[..NF].to_vec();
+    r.bench("gbdt_predict/200trees", || model.predict(black_box(&probe)));
+
+    // --- topology schedule --------------------------------------------------
+    let mut msgs = vec![0u64; 16];
+    for a in 0..4 {
+        for b in 0..4 {
+            if a != b {
+                msgs[a * 4 + b] = 100_000;
+            }
+        }
+    }
+    r.bench("exchange_time/ring", || tb.exchange_time(black_box(&msgs)));
+
+    // --- plan costing + planning ------------------------------------------
+    let mobilenet = zoo::mobilenet_v1(224, 1000);
+    let cost = CostSource::analytic(&tb);
+    let plan = Plan::uniform(Scheme::Grid2d, mobilenet.n_layers());
+    r.bench("plan_cost/mobilenet", || plan_cost(&mobilenet, &plan, &cost).total);
+    let dpp = flexpie::planner::Dpp::new(&mobilenet, &cost);
+    r.bench("dpp_plan/mobilenet", || dpp.plan().est_cost);
+
+    // --- native kernel ------------------------------------------------------
+    let conv = LayerMeta::conv("c", ConvType::Standard, 32, 32, 16, 16, 3, 1, 1);
+    let m = Model::new("one", vec![conv.clone()]);
+    let ws = WeightStore::for_model(&m, 1);
+    let mut store = PatchStore::new();
+    store.add(RegionTensor::new(Region::full(32, 32, 16), Tensor::random(32, 32, 16, 2)));
+    let out_r = Region::full(32, 32, 16);
+    r.bench("native_conv/32x32x16x16", || {
+        compute_region(&conv, &ws.layers[0], &store, &out_r).t.data[0]
+    });
+    let pw = LayerMeta::conv("pw", ConvType::Pointwise, 32, 32, 64, 64, 1, 1, 0);
+    let mpw = Model::new("pw", vec![pw.clone()]);
+    let wpw = WeightStore::for_model(&mpw, 2);
+    let mut store_pw = PatchStore::new();
+    store_pw.add(RegionTensor::new(Region::full(32, 32, 64), Tensor::random(32, 32, 64, 3)));
+    let out_pw = Region::full(32, 32, 64);
+    r.bench("native_pointwise/32x32x64x64", || {
+        compute_region(&pw, &wpw.layers[0], &store_pw, &out_pw).t.data[0]
+    });
+}

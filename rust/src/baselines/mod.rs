@@ -1,0 +1,215 @@
+//! Baseline partition strategies (paper §4 "Baselines").
+//!
+//! | paper baseline | systems | implementation |
+//! |---|---|---|
+//! | One-dim (OutC) | Xenos | [`fixed`] with [`Scheme::OutC`] |
+//! | One-dim (InH/InW) | MoDNN, DeepSlicing | [`one_dim_best`] — the better of InH / InW for the model (the papers pick one spatial axis) |
+//! | 2D-grid | DeepThings | [`fixed`] with [`Scheme::Grid2d`] |
+//! | layerwise | DINA, PartialDI | [`layerwise`] — per-layer scheme choice, **no fusion** (DPP restricted to span-1 blocks) |
+//! | fused-layer | AOFL, EdgeCI | [`fused_layer`] — fusion (T/NT) optimization over a **single fixed scheme** (the best fixed one) |
+//!
+//! All baselines emit ordinary [`Plan`]s, costed/executed by the same engine
+//! as FlexPie — the comparison differences are purely in planning freedom.
+
+use crate::cost::CostSource;
+use crate::model::Model;
+use crate::partition::{Plan, Scheme};
+use crate::planner::exhaustive::plan_cost;
+use crate::planner::{Dpp, DppConfig};
+
+/// All six solutions of the paper's evaluation, in figure order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Solution {
+    OutC,
+    OneDim,
+    Grid2d,
+    Layerwise,
+    FusedLayer,
+    FlexPie,
+}
+
+impl Solution {
+    pub const ALL: [Solution; 6] = [
+        Solution::OutC,
+        Solution::OneDim,
+        Solution::Grid2d,
+        Solution::Layerwise,
+        Solution::FusedLayer,
+        Solution::FlexPie,
+    ];
+
+    /// The five baselines (everything but FlexPie).
+    pub const BASELINES: [Solution; 5] = [
+        Solution::OutC,
+        Solution::OneDim,
+        Solution::Grid2d,
+        Solution::Layerwise,
+        Solution::FusedLayer,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Solution::OutC => "One-dim(OutC)",
+            Solution::OneDim => "One-dim(InH/InW)",
+            Solution::Grid2d => "2D-grid",
+            Solution::Layerwise => "Layerwise",
+            Solution::FusedLayer => "Fused-layer",
+            Solution::FlexPie => "FlexPie",
+        }
+    }
+
+    /// Produce this solution's plan for `model` under `cost`.
+    pub fn plan(self, model: &Model, cost: &CostSource) -> Plan {
+        match self {
+            Solution::OutC => fixed(model, Scheme::OutC, cost),
+            Solution::OneDim => one_dim_best(model, cost),
+            Solution::Grid2d => fixed(model, Scheme::Grid2d, cost),
+            Solution::Layerwise => layerwise(model, cost),
+            Solution::FusedLayer => fused_layer(model, cost),
+            Solution::FlexPie => Dpp::new(model, cost).plan(),
+        }
+    }
+}
+
+impl std::fmt::Display for Solution {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Fixed single-scheme plan, all-T (Xenos / DeepThings style).
+pub fn fixed(model: &Model, scheme: Scheme, cost: &CostSource) -> Plan {
+    let mut plan = Plan::uniform(scheme, model.n_layers());
+    plan.est_cost = plan_cost(model, &plan, cost).total;
+    plan
+}
+
+/// The better of the two One-dim spatial axes for this model (MoDNN and
+/// DeepSlicing pick a single spatial split axis for the whole model).
+pub fn one_dim_best(model: &Model, cost: &CostSource) -> Plan {
+    let h = fixed(model, Scheme::InH, cost);
+    let w = fixed(model, Scheme::InW, cost);
+    if h.est_cost <= w.est_cost {
+        h
+    } else {
+        w
+    }
+}
+
+/// Layerwise optimization (DINA / PartialDI): every layer independently
+/// chooses its scheme, but every boundary transmits (no fusion). Implemented
+/// as the DP restricted to single-layer blocks — which makes it *optimal*
+/// within that search space, a generous reading of the baseline.
+pub fn layerwise(model: &Model, cost: &CostSource) -> Plan {
+    Dpp::with_config(
+        model,
+        cost,
+        DppConfig { enable_fusion: false, ..Default::default() },
+    )
+    .plan()
+}
+
+/// Fused-layer optimization (AOFL / EdgeCI): T/NT fusion decisions over a
+/// single fixed partition scheme (the scheme itself is chosen as the best
+/// fixed baseline, mirroring how those systems fuse on top of their native
+/// partitioning).
+pub fn fused_layer(model: &Model, cost: &CostSource) -> Plan {
+    let mut best: Option<Plan> = None;
+    for scheme in [Scheme::InH, Scheme::InW, Scheme::Grid2d, Scheme::OutC] {
+        let plan = Dpp::with_config(
+            model,
+            cost,
+            DppConfig { schemes: vec![scheme], ..Default::default() },
+        )
+        .plan();
+        if best.as_ref().map(|b| plan.est_cost < b.est_cost).unwrap_or(true) {
+            best = Some(plan);
+        }
+    }
+    best.unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+    use crate::net::{Bandwidth, Testbed, Topology};
+    use crate::partition::Mode;
+
+    fn analytic(nodes: usize, gbps: f64) -> CostSource {
+        CostSource::analytic(&Testbed::new(nodes, Topology::Ring, Bandwidth::gbps(gbps)))
+    }
+
+    #[test]
+    fn all_solutions_produce_valid_plans() {
+        let cost = analytic(4, 1.0);
+        let model = zoo::edgenet(16);
+        for sol in Solution::ALL {
+            let plan = sol.plan(&model, &cost);
+            plan.validate().unwrap();
+            assert_eq!(plan.steps.len(), model.n_layers(), "{sol}");
+            assert!(plan.est_cost.is_finite() && plan.est_cost > 0.0, "{sol}");
+        }
+    }
+
+    #[test]
+    fn layerwise_has_no_fusion() {
+        let cost = analytic(4, 0.2);
+        let model = zoo::edgenet(16);
+        let plan = layerwise(&model, &cost);
+        assert!(plan.steps.iter().all(|s| s.mode == Mode::T));
+    }
+
+    #[test]
+    fn fused_layer_uses_single_scheme() {
+        let cost = analytic(4, 0.2);
+        let model = zoo::edgenet(16);
+        let plan = fused_layer(&model, &cost);
+        let first = plan.steps[0].scheme;
+        assert!(plan.steps.iter().all(|s| s.scheme == first));
+    }
+
+    #[test]
+    fn flexpie_dominates_all_baselines_in_estimate() {
+        // FlexPie's search space is a superset of every baseline's, so under
+        // the same (analytic) cost source its estimated cost must be ≤ all.
+        for gbps in [5.0, 0.5] {
+            for nodes in [3usize, 4] {
+                let cost = analytic(nodes, gbps);
+                let model = zoo::mobilenet_v1(224, 1000).truncated(9);
+                let flex = Solution::FlexPie.plan(&model, &cost);
+                for sol in Solution::BASELINES {
+                    let b = sol.plan(&model, &cost);
+                    assert!(
+                        flex.est_cost <= b.est_cost + 1e-9,
+                        "{sol} ({}) beat FlexPie ({}) at {gbps}Gb/s n={nodes}",
+                        b.est_cost,
+                        flex.est_cost
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn layerwise_beats_fixed_schemes() {
+        // Layerwise optimization subsumes every fixed scheme.
+        let cost = analytic(4, 1.0);
+        let model = zoo::mobilenet_v1(224, 1000).truncated(9);
+        let lw = layerwise(&model, &cost);
+        for s in Scheme::ALL {
+            let f = fixed(&model, s, &cost);
+            assert!(lw.est_cost <= f.est_cost + 1e-9);
+        }
+    }
+
+    #[test]
+    fn one_dim_picks_the_better_axis() {
+        let cost = analytic(4, 1.0);
+        let model = zoo::edgenet(16);
+        let best = one_dim_best(&model, &cost);
+        let h = fixed(&model, Scheme::InH, &cost);
+        let w = fixed(&model, Scheme::InW, &cost);
+        assert_eq!(best.est_cost, h.est_cost.min(w.est_cost));
+    }
+}

@@ -1,0 +1,793 @@
+//! Paper-figure reproduction harness.
+//!
+//! One generator per table/figure in the paper's evaluation (§4); the
+//! `rust/benches/*` targets and the `flexpie bench` CLI both call these.
+//! All results are also dumped as JSON under `bench_results/` so
+//! EXPERIMENTS.md entries are regenerable.
+//!
+//! | generator | paper artifact |
+//! |---|---|
+//! | [`fig2`] | Fig 2 — micro-bench: MobileNet L2/L5/L13 × schemes × {4,3}-node |
+//! | [`fig7_9`] | Fig 7 (4-node) / Fig 9 (3-node) — 4 models × 6 solutions × bandwidths × topologies |
+//! | [`fig8`] | Fig 8 — performance score per solution |
+//! | [`search_time`] | §4 "DPP search time cost" + pruning ablation |
+//! | [`ablation`] | design ablations: CE-vs-oracle regret, fusion-off, scheme-set restrictions |
+
+use std::sync::Arc;
+
+use crate::baselines::Solution;
+use crate::cost::estimator::Estimators;
+use crate::cost::gbdt::GbdtParams;
+use crate::cost::tracegen::TraceConfig;
+use crate::cost::CostSource;
+use crate::engine;
+use crate::model::{zoo, Model};
+use crate::net::{Bandwidth, Testbed, Topology};
+use crate::partition::{Plan, Scheme};
+use crate::planner::{Dpp, DppConfig};
+use crate::util::bench::Table;
+use crate::util::json::Json;
+
+/// Which cost source the *planners* consult (evaluation is always the
+/// analytic simulator — that is the measured ground truth).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CostKind {
+    /// Plan with the exact simulator costs (oracle CE).
+    Analytic,
+    /// Plan with the trained GBDT estimators (the paper's CE).
+    Gbdt,
+}
+
+/// Bench options shared by all generators.
+#[derive(Debug, Clone)]
+pub struct BenchOpts {
+    pub cost: CostKind,
+    /// Truncate models to at most this many layers (0 = full models). Used
+    /// by `FLEXPIE_BENCH_FAST` smoke runs.
+    pub truncate: usize,
+    /// Where trained estimators are cached.
+    pub ce_dir: std::path::PathBuf,
+    /// Trace samples when the CE must be trained from scratch.
+    pub ce_samples: usize,
+    /// Where JSON results are written (empty = skip).
+    pub out_dir: std::path::PathBuf,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        let fast = std::env::var("FLEXPIE_BENCH_FAST").is_ok();
+        BenchOpts {
+            cost: CostKind::Gbdt,
+            truncate: if fast { 12 } else { 0 },
+            ce_dir: "artifacts/ce".into(),
+            ce_samples: if fast { 4_000 } else { 20_000 },
+            out_dir: "bench_results".into(),
+        }
+    }
+}
+
+impl BenchOpts {
+    pub fn fast_analytic() -> BenchOpts {
+        BenchOpts { cost: CostKind::Analytic, ..Default::default() }
+    }
+
+    fn model(&self, name: &str) -> Model {
+        let m = zoo::by_name(name).unwrap_or_else(|| panic!("unknown model {name}"));
+        if self.truncate > 0 && m.n_layers() > self.truncate {
+            m.truncated(self.truncate)
+        } else {
+            m
+        }
+    }
+
+    /// The planner-facing cost source for a testbed.
+    pub fn cost_source(&self, tb: &Testbed) -> CostSource {
+        match self.cost {
+            CostKind::Analytic => CostSource::analytic(tb),
+            CostKind::Gbdt => {
+                let est = self.estimators();
+                CostSource::gbdt(est, tb)
+            }
+        }
+    }
+
+    /// Load-or-train the estimator pair (cached on disk and in-process).
+    pub fn estimators(&self) -> Arc<Estimators> {
+        use std::sync::OnceLock;
+        static CACHE: OnceLock<Arc<Estimators>> = OnceLock::new();
+        CACHE
+            .get_or_init(|| {
+                let cfg = TraceConfig { samples: self.ce_samples, ..Default::default() };
+                let params = GbdtParams { n_trees: 200, ..Default::default() };
+                let (est, report) = Estimators::load_or_train(&self.ce_dir, &cfg, &params)
+                    .expect("estimator training");
+                if let Some(r) = report {
+                    eprintln!(
+                        "[flexpie] trained CE: i-Est r2={:.3} ρ={:.3}; s-Est r2={:.3} ρ={:.3}",
+                        r.i_fit.r2, r.i_fit.spearman, r.s_fit.r2, r.s_fit.spearman
+                    );
+                }
+                est
+            })
+            .clone()
+    }
+
+    fn save_json(&self, name: &str, v: &Json) {
+        if self.out_dir.as_os_str().is_empty() {
+            return;
+        }
+        let path = self.out_dir.join(name);
+        if let Err(e) = v.save(&path) {
+            eprintln!("[flexpie] warning: could not save {}: {e}", path.display());
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fig 2 — micro-bench
+// ---------------------------------------------------------------------------
+
+/// One Fig-2 bar: per-layer inference time (compute + same-scheme halo sync)
+/// for a single MobileNet layer under a fixed scheme.
+#[derive(Debug, Clone)]
+pub struct Fig2Row {
+    pub group: String,
+    pub scheme: Scheme,
+    pub time_us: f64,
+}
+
+/// Reproduce Fig 2: MobileNet-stage layers L2/L5/L13 × {InH/InW, OutC,
+/// 2D-grid} × {4-node, 3-node} at 5 Gb/s (SRIO-class), Ring.
+///
+/// The measured quantity is the *steady-state per-layer inference time* as
+/// deployed in the engine: the boundary synchronization that delivers the
+/// layer's input from a producer partitioned under the same scheme, plus the
+/// (bottleneck-node) layer compute. This is what makes the schemes differ —
+/// OutC pays the input all-gather but computes perfectly balanced; spatial
+/// schemes pay only halos but inherit the integer-split imbalance
+/// (4,4,3,3 rows at 14×14 on 4 nodes; a double-loaded node on 3-node grids).
+pub fn fig2(opts: &BenchOpts) -> Vec<Fig2Row> {
+    use crate::cost::query::{boundary_query, compute_query_tiles};
+    use crate::model::{ConvType, LayerMeta};
+    use crate::partition::geometry::out_tiles;
+    use crate::partition::inflate::BlockGeometry;
+
+    // 3×3 standard convolutions at the paper's L2/L5/L13 feature-map shapes.
+    let layers: [(&str, LayerMeta); 3] = [
+        ("L2", LayerMeta::conv("l2", ConvType::Standard, 112, 112, 32, 32, 3, 1, 1)),
+        ("L5", LayerMeta::conv("l5", ConvType::Standard, 56, 56, 128, 128, 3, 1, 1)),
+        ("L13", LayerMeta::conv("l13", ConvType::Standard, 14, 14, 512, 512, 3, 1, 1)),
+    ];
+    let mut rows = Vec::new();
+    for nodes in [4usize, 3] {
+        let tb = Testbed::new(nodes, Topology::Ring, Bandwidth::gbps(5.0));
+        let cost = CostSource::analytic(&tb);
+        for (label, layer) in &layers {
+            // producer: an identically-shaped layer under the same scheme
+            let producer = LayerMeta::conv(
+                "prod",
+                ConvType::Standard,
+                layer.in_h,
+                layer.in_w,
+                layer.in_c,
+                layer.in_c,
+                3,
+                1,
+                1,
+            );
+            for scheme in [Scheme::InH, Scheme::OutC, Scheme::Grid2d] {
+                let geo = BlockGeometry::new(std::slice::from_ref(layer), scheme, nodes);
+                let bq =
+                    boundary_query(&producer, scheme, layer, scheme, &geo.entry_need, &tb);
+                let tiles = out_tiles(layer, scheme, nodes);
+                let cq = compute_query_tiles(layer, &tiles, scheme, &tb);
+                let time = cost.sync_time(&bq) + cost.compute_time(&cq);
+                rows.push(Fig2Row {
+                    group: format!("{nodes}-Node-{label}"),
+                    scheme,
+                    time_us: time * 1e6,
+                });
+            }
+        }
+    }
+    let json = Json::Arr(
+        rows.iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("group", Json::Str(r.group.clone())),
+                    ("scheme", Json::Str(r.scheme.name().into())),
+                    ("time_us", Json::Num(r.time_us)),
+                ])
+            })
+            .collect(),
+    );
+    opts.save_json("fig2.json", &json);
+    rows
+}
+
+/// Render Fig 2 as a table.
+pub fn fig2_table(rows: &[Fig2Row]) -> Table {
+    let mut t = Table::new(["group", "InH/InW", "OutC", "2D-grid", "best"]);
+    let mut groups: Vec<String> = Vec::new();
+    for r in rows {
+        if !groups.contains(&r.group) {
+            groups.push(r.group.clone());
+        }
+    }
+    for g in groups {
+        let find = |s: Scheme| {
+            rows.iter().find(|r| r.group == g && r.scheme == s).map(|r| r.time_us).unwrap()
+        };
+        let (h, o, g2) = (find(Scheme::InH), find(Scheme::OutC), find(Scheme::Grid2d));
+        let best = if h <= o && h <= g2 {
+            "InH/InW"
+        } else if o <= g2 {
+            "OutC"
+        } else {
+            "2D-grid"
+        };
+        t.row([
+            g,
+            format!("{h:.1} µs"),
+            format!("{o:.1} µs"),
+            format!("{g2:.1} µs"),
+            best.into(),
+        ]);
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Fig 7 / Fig 9 — end-to-end comparison
+// ---------------------------------------------------------------------------
+
+/// One cell of Fig 7/9: a (model, testbed, solution) inference time.
+#[derive(Debug, Clone)]
+pub struct Cell {
+    pub model: String,
+    pub nodes: usize,
+    pub topology: Topology,
+    pub bw_gbps: f64,
+    pub solution: Solution,
+    pub time_ms: f64,
+    pub plan: Plan,
+}
+
+/// Reproduce Fig 7 (nodes = 4) or Fig 9 (nodes = 3): every model × testbed
+/// (bandwidth × topology) × solution. Plans are produced with `opts.cost`;
+/// every plan is *evaluated* on the analytic simulator.
+pub fn fig7_9(nodes: usize, opts: &BenchOpts) -> Vec<Cell> {
+    let grid = crate::config::ExperimentGrid::paper();
+    let mut cells = Vec::new();
+    for model_name in &grid.models {
+        let model = opts.model(model_name);
+        for &topology in &grid.topologies {
+            for &bw in &grid.bandwidths_gbps {
+                let tb = Testbed::new(nodes, topology, Bandwidth::gbps(bw));
+                let plan_cost_src = opts.cost_source(&tb);
+                for solution in Solution::ALL {
+                    let plan = solution.plan(&model, &plan_cost_src);
+                    let report = engine::evaluate(&model, &plan, &tb);
+                    cells.push(Cell {
+                        model: model_name.clone(),
+                        nodes,
+                        topology,
+                        bw_gbps: bw,
+                        solution,
+                        time_ms: report.total_ms(),
+                        plan,
+                    });
+                }
+            }
+        }
+    }
+    let json = Json::Arr(cells.iter().map(cell_json).collect());
+    opts.save_json(&format!("fig{}.json", if nodes == 4 { 7 } else { 9 }), &json);
+    cells
+}
+
+fn cell_json(c: &Cell) -> Json {
+    Json::obj(vec![
+        ("model", Json::Str(c.model.clone())),
+        ("nodes", Json::Num(c.nodes as f64)),
+        ("topology", Json::Str(c.topology.name().into())),
+        ("bw_gbps", Json::Num(c.bw_gbps)),
+        ("solution", Json::Str(c.solution.name().into())),
+        ("time_ms", Json::Num(c.time_ms)),
+        ("plan", Json::Str(c.plan.render())),
+    ])
+}
+
+/// Render Fig 7/9 cells as one table per (topology, bandwidth).
+pub fn fig7_9_tables(cells: &[Cell]) -> Vec<(String, Table)> {
+    let mut keys: Vec<(Topology, f64)> = Vec::new();
+    for c in cells {
+        if !keys.iter().any(|&(t, b)| t == c.topology && b == c.bw_gbps) {
+            keys.push((c.topology, c.bw_gbps));
+        }
+    }
+    let mut out = Vec::new();
+    for (topo, bw) in keys {
+        let mut t = Table::new([
+            "model",
+            "One-dim(OutC)",
+            "One-dim(InH/InW)",
+            "2D-grid",
+            "Layerwise",
+            "Fused-layer",
+            "FlexPie",
+            "speedup (best..worst baseline)",
+        ]);
+        let mut models: Vec<String> = Vec::new();
+        for c in cells {
+            if c.topology == topo && c.bw_gbps == bw && !models.contains(&c.model) {
+                models.push(c.model.clone());
+            }
+        }
+        for m in models {
+            let find = |s: Solution| {
+                cells
+                    .iter()
+                    .find(|c| {
+                        c.model == m && c.topology == topo && c.bw_gbps == bw && c.solution == s
+                    })
+                    .map(|c| c.time_ms)
+                    .unwrap()
+            };
+            let times: Vec<f64> = Solution::ALL.iter().map(|&s| find(s)).collect();
+            let flex = times[5];
+            let best_baseline =
+                times[..5].iter().cloned().fold(f64::INFINITY, f64::min);
+            let worst_baseline = times[..5].iter().cloned().fold(0.0f64, f64::max);
+            t.row([
+                m,
+                format!("{:.3}", times[0]),
+                format!("{:.3}", times[1]),
+                format!("{:.3}", times[2]),
+                format!("{:.3}", times[3]),
+                format!("{:.3}", times[4]),
+                format!("{:.3}", flex),
+                format!("{:.2}x..{:.2}x", best_baseline / flex, worst_baseline / flex),
+            ]);
+        }
+        out.push((format!("{} @ {} Gb/s (times in ms)", topo.name(), bw), t));
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Fig 8 — performance score
+// ---------------------------------------------------------------------------
+
+/// Per-solution performance score over a set of cells:
+/// `score = mean over test cases of min(t₁..t₆)/tᵢ` (paper §4 Metrics).
+pub fn fig8(cells: &[Cell], opts: &BenchOpts) -> Vec<(Solution, f64)> {
+    let mut case_keys: Vec<(String, usize, Topology, f64)> = Vec::new();
+    for c in cells {
+        let key = (c.model.clone(), c.nodes, c.topology, c.bw_gbps);
+        if !case_keys.contains(&key) {
+            case_keys.push(key);
+        }
+    }
+    let mut scores: Vec<(Solution, f64)> =
+        Solution::ALL.iter().map(|&s| (s, 0.0)).collect();
+    for key in &case_keys {
+        let case: Vec<&Cell> = cells
+            .iter()
+            .filter(|c| {
+                (c.model.clone(), c.nodes, c.topology, c.bw_gbps) == *key
+            })
+            .collect();
+        let best = case.iter().map(|c| c.time_ms).fold(f64::INFINITY, f64::min);
+        for (sol, acc) in scores.iter_mut() {
+            let t = case.iter().find(|c| c.solution == *sol).unwrap().time_ms;
+            *acc += best / t;
+        }
+    }
+    for (_, acc) in scores.iter_mut() {
+        *acc /= case_keys.len() as f64;
+    }
+    let json = Json::Arr(
+        scores
+            .iter()
+            .map(|(s, v)| {
+                Json::obj(vec![
+                    ("solution", Json::Str(s.name().into())),
+                    ("score", Json::Num(*v)),
+                ])
+            })
+            .collect(),
+    );
+    opts.save_json("fig8.json", &json);
+    scores
+}
+
+pub fn fig8_table(scores_4: &[(Solution, f64)], scores_3: &[(Solution, f64)]) -> Table {
+    let mut t = Table::new(["solution", "score (4-node)", "score (3-node)"]);
+    for (i, (sol, s4)) in scores_4.iter().enumerate() {
+        t.row([
+            sol.name().to_string(),
+            format!("{s4:.3}"),
+            format!("{:.3}", scores_3[i].1),
+        ]);
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
+// DPP search time + ablations
+// ---------------------------------------------------------------------------
+
+/// Search-cost report row.
+#[derive(Debug, Clone)]
+pub struct SearchRow {
+    pub model: String,
+    pub layers: usize,
+    pub pruned_ms: f64,
+    pub unpruned_ms: f64,
+    pub pruned_syncs: usize,
+    pub unpruned_syncs: usize,
+    pub space_size: f64,
+}
+
+/// DPP search time per model, pruning on vs off, plus the raw combinatorial
+/// space size DPP avoids enumerating.
+pub fn search_time(opts: &BenchOpts) -> Vec<SearchRow> {
+    let grid = crate::config::ExperimentGrid::paper();
+    let tb = Testbed::new(4, Topology::Ring, Bandwidth::gbps(5.0));
+    let cost = opts.cost_source(&tb);
+    let mut rows = Vec::new();
+    for name in &grid.models {
+        let model = opts.model(name);
+        let (_, with) = Dpp::with_config(
+            &model,
+            &cost,
+            DppConfig { prune: true, ..Default::default() },
+        )
+        .plan_with_stats();
+        let (_, without) = Dpp::with_config(
+            &model,
+            &cost,
+            DppConfig { prune: false, ..Default::default() },
+        )
+        .plan_with_stats();
+        rows.push(SearchRow {
+            model: name.clone(),
+            layers: model.n_layers(),
+            pruned_ms: with.elapsed.as_secs_f64() * 1e3,
+            unpruned_ms: without.elapsed.as_secs_f64() * 1e3,
+            pruned_syncs: with.sync_queries,
+            unpruned_syncs: without.sync_queries,
+            space_size: crate::planner::exhaustive::search_space_size(model.n_layers(), 4),
+        });
+    }
+    let json = Json::Arr(
+        rows.iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("model", Json::Str(r.model.clone())),
+                    ("layers", Json::Num(r.layers as f64)),
+                    ("pruned_ms", Json::Num(r.pruned_ms)),
+                    ("unpruned_ms", Json::Num(r.unpruned_ms)),
+                    ("pruned_syncs", Json::Num(r.pruned_syncs as f64)),
+                    ("unpruned_syncs", Json::Num(r.unpruned_syncs as f64)),
+                    ("space_size", Json::Num(r.space_size)),
+                ])
+            })
+            .collect(),
+    );
+    opts.save_json("search_time.json", &json);
+    rows
+}
+
+pub fn search_time_table(rows: &[SearchRow]) -> Table {
+    let mut t = Table::new([
+        "model",
+        "layers",
+        "DPP (pruned)",
+        "DPP (no prune)",
+        "s-queries (pruned/full)",
+        "naive space",
+    ]);
+    for r in rows {
+        t.row([
+            r.model.clone(),
+            r.layers.to_string(),
+            format!("{:.1} ms", r.pruned_ms),
+            format!("{:.1} ms", r.unpruned_ms),
+            format!("{}/{}", r.pruned_syncs, r.unpruned_syncs),
+            format!("{:.2e}", r.space_size),
+        ]);
+    }
+    t
+}
+
+/// Ablation rows: evaluated (analytic) time of FlexPie plans produced with
+/// restricted planners, relative to the full planner with the oracle CE.
+#[derive(Debug, Clone)]
+pub struct AblationRow {
+    pub model: String,
+    pub variant: String,
+    pub time_ms: f64,
+    pub vs_full: f64,
+}
+
+/// Design ablations (DESIGN.md §6): GBDT-CE planning regret, fusion-off,
+/// scheme-set restrictions.
+pub fn ablation(opts: &BenchOpts) -> Vec<AblationRow> {
+    let tb = Testbed::new(4, Topology::Ring, Bandwidth::gbps(1.0));
+    let oracle = CostSource::analytic(&tb);
+    let gbdt = CostSource::gbdt(opts.estimators(), &tb);
+    let mut rows = Vec::new();
+    for name in ["mobilenet", "resnet18"] {
+        let model = opts.model(name);
+        let full = Dpp::new(&model, &oracle).plan();
+        let full_t = engine::evaluate(&model, &full, &tb).total_ms();
+        let mut push = |variant: &str, plan: &Plan| {
+            let t = engine::evaluate(&model, plan, &tb).total_ms();
+            rows.push(AblationRow {
+                model: name.into(),
+                variant: variant.into(),
+                time_ms: t,
+                vs_full: t / full_t,
+            });
+        };
+        push("full (oracle CE)", &full);
+        push("GBDT CE", &Dpp::new(&model, &gbdt).plan());
+        push(
+            "no fusion (layerwise)",
+            &Dpp::with_config(
+                &model,
+                &oracle,
+                DppConfig { enable_fusion: false, ..Default::default() },
+            )
+            .plan(),
+        );
+        push(
+            "spatial schemes only",
+            &Dpp::with_config(
+                &model,
+                &oracle,
+                DppConfig {
+                    schemes: vec![Scheme::InH, Scheme::InW, Scheme::Grid2d],
+                    ..Default::default()
+                },
+            )
+            .plan(),
+        );
+        push(
+            "block span ≤ 2",
+            &Dpp::with_config(
+                &model,
+                &oracle,
+                DppConfig { max_block_span: 2, ..Default::default() },
+            )
+            .plan(),
+        );
+    }
+    let json = Json::Arr(
+        rows.iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("model", Json::Str(r.model.clone())),
+                    ("variant", Json::Str(r.variant.clone())),
+                    ("time_ms", Json::Num(r.time_ms)),
+                    ("vs_full", Json::Num(r.vs_full)),
+                ])
+            })
+            .collect(),
+    );
+    opts.save_json("ablation.json", &json);
+    rows
+}
+
+// ---------------------------------------------------------------------------
+// Node-count scaling (the paper's 4~6-device deployment envelope)
+// ---------------------------------------------------------------------------
+
+/// One scaling row: FlexPie vs best fixed scheme at a node count.
+#[derive(Debug, Clone)]
+pub struct ScalingRow {
+    pub model: String,
+    pub nodes: usize,
+    pub flexpie_ms: f64,
+    pub best_fixed_ms: f64,
+    pub single_node_ms: f64,
+    pub nt_layers: usize,
+}
+
+/// Sweep cluster sizes 1–6 (the paper's "4~6 nodes" envelope plus the
+/// degenerate ends): does FlexPie keep scaling where fixed schemes stall?
+pub fn scaling(opts: &BenchOpts) -> Vec<ScalingRow> {
+    let mut rows = Vec::new();
+    for name in ["mobilenet", "resnet18"] {
+        let model = opts.model(name);
+        let single = {
+            let tb = Testbed::new(1, Topology::Ring, Bandwidth::gbps(1.0));
+            engine::evaluate(&model, &Plan::uniform(Scheme::InH, model.n_layers()), &tb)
+                .total_ms()
+        };
+        for nodes in [2usize, 3, 4, 5, 6] {
+            let tb = Testbed::new(nodes, Topology::Ring, Bandwidth::gbps(1.0));
+            let cost = opts.cost_source(&tb);
+            let plan = Dpp::new(&model, &cost).plan();
+            let flex = engine::evaluate(&model, &plan, &tb).total_ms();
+            let best_fixed = Scheme::ALL
+                .iter()
+                .map(|&s| {
+                    engine::evaluate(&model, &Plan::uniform(s, model.n_layers()), &tb)
+                        .total_ms()
+                })
+                .fold(f64::INFINITY, f64::min);
+            rows.push(ScalingRow {
+                model: name.into(),
+                nodes,
+                flexpie_ms: flex,
+                best_fixed_ms: best_fixed,
+                single_node_ms: single,
+                nt_layers: plan.n_fused_layers(),
+            });
+        }
+    }
+    let json = Json::Arr(
+        rows.iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("model", Json::Str(r.model.clone())),
+                    ("nodes", Json::Num(r.nodes as f64)),
+                    ("flexpie_ms", Json::Num(r.flexpie_ms)),
+                    ("best_fixed_ms", Json::Num(r.best_fixed_ms)),
+                    ("single_node_ms", Json::Num(r.single_node_ms)),
+                    ("nt_layers", Json::Num(r.nt_layers as f64)),
+                ])
+            })
+            .collect(),
+    );
+    opts.save_json("scaling.json", &json);
+    rows
+}
+
+pub fn scaling_table(rows: &[ScalingRow]) -> Table {
+    let mut t = Table::new([
+        "model", "nodes", "FlexPie (ms)", "best fixed (ms)", "speedup vs 1 node", "NT layers",
+    ]);
+    for r in rows {
+        t.row([
+            r.model.clone(),
+            r.nodes.to_string(),
+            format!("{:.2}", r.flexpie_ms),
+            format!("{:.2}", r.best_fixed_ms),
+            format!("{:.2}x", r.single_node_ms / r.flexpie_ms),
+            r.nt_layers.to_string(),
+        ]);
+    }
+    t
+}
+
+pub fn ablation_table(rows: &[AblationRow]) -> Table {
+    let mut t = Table::new(["model", "variant", "time (ms)", "vs full"]);
+    for r in rows {
+        t.row([
+            r.model.clone(),
+            r.variant.clone(),
+            format!("{:.3}", r.time_ms),
+            format!("{:.3}x", r.vs_full),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast_opts() -> BenchOpts {
+        BenchOpts {
+            cost: CostKind::Analytic,
+            truncate: 9,
+            out_dir: "".into(),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn fig2_shape_and_content() {
+        let rows = fig2(&fast_opts());
+        // 2 node-counts × 3 layers × 3 schemes
+        assert_eq!(rows.len(), 18);
+        assert!(rows.iter().all(|r| r.time_us > 0.0));
+        let t = fig2_table(&rows);
+        assert_eq!(t.render().lines().count(), 2 + 6);
+    }
+
+    #[test]
+    fn fig2_no_one_size_fits_all() {
+        // The paper's motivating observation: the best scheme differs across
+        // (layer, testbed) cells.
+        let rows = fig2(&fast_opts());
+        let mut groups: Vec<String> = Vec::new();
+        for r in &rows {
+            if !groups.contains(&r.group) {
+                groups.push(r.group.clone());
+            }
+        }
+        let mut winners = std::collections::BTreeSet::new();
+        for g in groups {
+            let best = rows
+                .iter()
+                .filter(|r| r.group == g)
+                .min_by(|a, b| a.time_us.partial_cmp(&b.time_us).unwrap())
+                .unwrap();
+            winners.insert(best.scheme.name());
+        }
+        assert!(winners.len() >= 2, "single scheme won everywhere: {winners:?}");
+    }
+
+    #[test]
+    fn fig7_smoke_flexpie_wins() {
+        let mut opts = fast_opts();
+        opts.truncate = 7;
+        let cells = fig7_9(4, &opts);
+        // FlexPie never loses to a baseline on any cell (oracle CE).
+        for chunk in cells.chunks(6) {
+            let flex = chunk.iter().find(|c| c.solution == Solution::FlexPie).unwrap();
+            for c in chunk {
+                assert!(
+                    flex.time_ms <= c.time_ms + 1e-9,
+                    "{} beat FlexPie on {} {}@{}",
+                    c.solution,
+                    c.model,
+                    c.topology,
+                    c.bw_gbps
+                );
+            }
+        }
+        let scores = fig8(&cells, &opts);
+        let flex_score = scores.iter().find(|(s, _)| *s == Solution::FlexPie).unwrap().1;
+        assert!((flex_score - 1.0).abs() < 1e-9, "FlexPie score = {flex_score}");
+    }
+
+    #[test]
+    fn scaling_rows_monotone_enough() {
+        let mut opts = fast_opts();
+        opts.truncate = 7;
+        let rows = scaling(&opts);
+        assert_eq!(rows.len(), 10); // 2 models × 5 node counts
+        for r in &rows {
+            // FlexPie never loses to the best fixed scheme
+            assert!(r.flexpie_ms <= r.best_fixed_ms + 1e-9, "{r:?}");
+            assert!(r.flexpie_ms > 0.0);
+        }
+        // 4 nodes must beat 2 nodes on a compute-bound truncated model
+        let t2 = rows.iter().find(|r| r.model == "mobilenet" && r.nodes == 2).unwrap();
+        let t4 = rows.iter().find(|r| r.model == "mobilenet" && r.nodes == 4).unwrap();
+        assert!(t4.flexpie_ms < t2.flexpie_ms);
+    }
+
+    #[test]
+    fn fig7_tables_render_speedup_range() {
+        let mut opts = fast_opts();
+        opts.truncate = 5;
+        let cells = fig7_9(4, &opts);
+        let tables = fig7_9_tables(&cells);
+        // 2 topologies × 3 bandwidths
+        assert_eq!(tables.len(), 6);
+        for (title, t) in &tables {
+            let rendered = t.render();
+            assert!(rendered.contains("FlexPie"), "{title}");
+            assert!(rendered.contains('x'), "speedup column missing in {title}");
+        }
+    }
+
+    #[test]
+    fn search_time_rows() {
+        let mut opts = fast_opts();
+        opts.truncate = 8;
+        let rows = search_time(&opts);
+        assert_eq!(rows.len(), 4);
+        for r in &rows {
+            assert!(r.pruned_syncs <= r.unpruned_syncs);
+            assert!(r.space_size > 1e3);
+        }
+    }
+}

@@ -1,0 +1,383 @@
+//! Simulated edge cluster — the TMS320C6678-testbed substitute.
+//!
+//! `N` worker threads stand in for the `N` edge devices. The leader (node 0)
+//! holds the model input, scatters each node's entry requirement, and
+//! gathers the final output; between blocks, nodes exchange *real tensor
+//! halos* over channels according to the exact message matrices the cost
+//! model prices. Every node derives the plan geometry independently (as the
+//! paper's devices do from the deployed partition scheme), so the exchange
+//! protocol is deterministic: each node knows precisely how many patches to
+//! expect at every boundary.
+//!
+//! Wall-clock timing of these threads is *not* the reported inference time —
+//! the host is one shared CPU, not four DSPs. Reported times come from the
+//! virtual clock (the analytic cost model) via [`crate::engine::evaluate`];
+//! this module is what makes the *numerics* of a plan real and checkable.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+use crate::compute::{compute_region, PatchStore, RegionTensor, Tensor, WeightStore};
+use crate::model::Model;
+use crate::partition::geometry::out_tiles;
+use crate::partition::inflate::BlockGeometry;
+use crate::partition::{Plan, Region, Tile};
+
+/// A halo/boundary message: a tensor patch for a given boundary index.
+struct Msg {
+    boundary: usize,
+    patch: RegionTensor,
+}
+
+/// Result of a distributed run.
+#[derive(Debug)]
+pub struct ClusterRun {
+    pub output: Tensor,
+    /// Total payload bytes moved between nodes (all boundaries).
+    pub bytes_exchanged: u64,
+    /// Number of inter-node messages.
+    pub messages: usize,
+}
+
+/// Execute `plan` for `model` on `nodes` simulated devices with real
+/// numerics. Returns the gathered output (identical to the single-node
+/// reference up to f32 associativity — exactly equal here, since each output
+/// element is computed by exactly one accumulation order).
+pub fn run_distributed(
+    model: &Model,
+    plan: &Plan,
+    weights: &WeightStore,
+    input: &Tensor,
+    nodes: usize,
+) -> ClusterRun {
+    plan.validate().expect("invalid plan");
+    assert_eq!(plan.steps.len(), model.n_layers());
+    let layers = &model.layers;
+    let blocks = plan.blocks();
+    let geos: Arc<Vec<BlockGeometry>> = Arc::new(
+        blocks
+            .iter()
+            .map(|&(s, e, scheme)| BlockGeometry::new(&layers[s..=e], scheme, nodes))
+            .collect(),
+    );
+    let blocks = Arc::new(blocks);
+    let weights = Arc::new(weights.clone());
+    let model = Arc::new(model.clone());
+    let input = Arc::new(input.clone());
+
+    // channels[to] — every node owns one receiver; all others share senders.
+    let mut senders: Vec<Sender<Msg>> = Vec::with_capacity(nodes);
+    let mut receivers: Vec<Option<Receiver<Msg>>> = Vec::with_capacity(nodes);
+    for _ in 0..nodes {
+        let (tx, rx) = channel::<Msg>();
+        senders.push(tx);
+        receivers.push(Some(rx));
+    }
+
+    let mut handles = Vec::new();
+    for node in 0..nodes {
+        let rx = Mailbox::new(receivers[node].take().unwrap());
+        let txs: Vec<Sender<Msg>> = senders.clone();
+        let model = Arc::clone(&model);
+        let weights = Arc::clone(&weights);
+        let input = Arc::clone(&input);
+        let geos = Arc::clone(&geos);
+        let blocks = Arc::clone(&blocks);
+        handles.push(std::thread::spawn(move || {
+            node_main(node, nodes, &model, &blocks, &geos, &weights, &input, rx, &txs)
+        }));
+    }
+    drop(senders);
+
+    let mut output = None;
+    let mut bytes = 0u64;
+    let mut messages = 0usize;
+    for (node, h) in handles.into_iter().enumerate() {
+        let res = h.join().expect("node thread panicked");
+        bytes += res.sent_bytes;
+        messages += res.sent_msgs;
+        if node == 0 {
+            output = res.output;
+        }
+    }
+    ClusterRun { output: output.expect("leader produced no output"), bytes_exchanged: bytes, messages }
+}
+
+struct NodeResult {
+    output: Option<Tensor>,
+    sent_bytes: u64,
+    sent_msgs: usize,
+}
+
+/// How many patches `to` receives from all peers at `boundary`, given the
+/// deterministic send rule (one patch per non-empty rect intersection).
+fn expected_patches(have: &[Tile], need: &[Tile], to: usize) -> usize {
+    let mut count = 0;
+    for (from, h) in have.iter().enumerate() {
+        if from == to {
+            continue;
+        }
+        for ra in h {
+            for rb in &need[to] {
+                if !ra.intersect(rb).is_empty() {
+                    count += 1;
+                }
+            }
+        }
+    }
+    count
+}
+
+#[allow(clippy::too_many_arguments)]
+fn node_main(
+    node: usize,
+    nodes: usize,
+    model: &Model,
+    blocks: &[(usize, usize, crate::partition::Scheme)],
+    geos: &[BlockGeometry],
+    weights: &WeightStore,
+    input: &Tensor,
+    rx: Mailbox,
+    txs: &[Sender<Msg>],
+) -> NodeResult {
+    let layers = &model.layers;
+    let n = layers.len();
+    let mut sent_bytes = 0u64;
+    let mut sent_msgs = 0usize;
+    let mut boundary = 0usize; // scatter = 0, after block b = b+1
+
+    // --- scatter -----------------------------------------------------------
+    let l0 = &layers[0];
+    let full_in = Region::full(l0.in_h, l0.in_w, l0.in_c);
+    let mut rx = rx;
+    let mut store = PatchStore::new();
+    {
+        let entry_need = &geos[0].entry_need;
+        if node == 0 {
+            let whole = RegionTensor::new(full_in, input.clone());
+            // keep own requirement locally
+            store.add(whole.clone());
+            for (to, need) in entry_need.iter().enumerate().skip(1) {
+                for r in need {
+                    let patch = whole.slice(&r.intersect(&full_in));
+                    if patch.region.is_empty() {
+                        continue;
+                    }
+                    sent_bytes += patch.t.numel() as u64 * 4;
+                    sent_msgs += 1;
+                    txs[to].send(Msg { boundary, patch }).unwrap();
+                }
+            }
+        } else {
+            let expect: usize = entry_need[node]
+                .iter()
+                .filter(|r| !r.intersect(&full_in).is_empty())
+                .count();
+            rx.recv_for(boundary, expect, &mut store);
+        }
+    }
+    boundary += 1;
+
+    // --- blocks ------------------------------------------------------------
+    for (bi, &(s, e, scheme)) in blocks.iter().enumerate() {
+        let geo = &geos[bi];
+        // compute layers s..=e on the (inflated) tiles
+        for l in s..=e {
+            let layer = &layers[l];
+            let mut next = PatchStore::new();
+            for r in &geo.tiles[l - s][node] {
+                let out = compute_region(layer, &weights.layers[l], &store, r);
+                next.add(out);
+            }
+            store = next;
+        }
+        // boundary out of this block
+        let producer = &layers[e];
+        let have = out_tiles(producer, scheme, nodes);
+        if e == n - 1 {
+            // gather to leader
+            if node != 0 {
+                for rt in &store.patches {
+                    sent_bytes += rt.t.numel() as u64 * 4;
+                    sent_msgs += 1;
+                    txs[0].send(Msg { boundary, patch: rt.clone() }).unwrap();
+                }
+            } else {
+                let expect: usize = (1..nodes)
+                    .map(|other| have[other].iter().filter(|r| !r.is_empty()).count())
+                    .sum();
+                let mut gathered = store;
+                rx.recv_for(boundary, expect, &mut gathered);
+                let last = &layers[n - 1];
+                let full = Region::full(last.out_h, last.out_w, last.out_c);
+                let out = gathered.extract(&full, &full, true);
+                return NodeResult { output: Some(out), sent_bytes, sent_msgs };
+            }
+        } else {
+            let need: Vec<Tile> = geos[bi + 1].entry_need.clone();
+            // send: my canonical tiles ∩ everyone's needs
+            for (to, nb) in need.iter().enumerate() {
+                if to == node {
+                    continue;
+                }
+                for ra in &have[node] {
+                    for rb in nb {
+                        let ov = ra.intersect(rb);
+                        if ov.is_empty() {
+                            continue;
+                        }
+                        // find the patch data (store holds this block's
+                        // outputs, which cover the canonical tile)
+                        let mut tmp = PatchStore::new();
+                        let dense = store.extract(&ov, &ov, true);
+                        tmp.add(RegionTensor::new(ov, dense));
+                        let patch = tmp.patches.pop().unwrap();
+                        sent_bytes += patch.t.numel() as u64 * 4;
+                        sent_msgs += 1;
+                        txs[to].send(Msg { boundary, patch }).unwrap();
+                    }
+                }
+            }
+            // receive + keep own data
+            let expect = expected_patches(&have, &need, node);
+            let mut next = PatchStore::new();
+            for p in store.patches.drain(..) {
+                next.add(p);
+            }
+            rx.recv_for(boundary, expect, &mut next);
+            store = next;
+        }
+        boundary += 1;
+    }
+    NodeResult { output: None, sent_bytes, sent_msgs }
+}
+
+/// Receiver with reordering: a fast peer may already be sending patches for
+/// a *later* boundary while this node still waits on the current one, so
+/// messages tagged ahead are buffered; messages tagged behind are protocol
+/// violations.
+struct Mailbox {
+    rx: Receiver<Msg>,
+    pending: Vec<Msg>,
+}
+
+impl Mailbox {
+    fn new(rx: Receiver<Msg>) -> Mailbox {
+        Mailbox { rx, pending: Vec::new() }
+    }
+
+    /// Receive exactly `expect` patches tagged `boundary` into `store`.
+    fn recv_for(&mut self, boundary: usize, expect: usize, store: &mut PatchStore) {
+        let mut got = 0usize;
+        // drain previously buffered patches for this boundary
+        let mut i = 0;
+        while i < self.pending.len() {
+            if self.pending[i].boundary == boundary {
+                let msg = self.pending.swap_remove(i);
+                store.add(msg.patch);
+                got += 1;
+            } else {
+                i += 1;
+            }
+        }
+        while got < expect {
+            let msg = self.rx.recv().expect("peer disconnected");
+            if msg.boundary == boundary {
+                store.add(msg.patch);
+                got += 1;
+            } else {
+                assert!(
+                    msg.boundary > boundary,
+                    "stale message for boundary {} while at {boundary}",
+                    msg.boundary
+                );
+                self.pending.push(msg);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compute::run_reference;
+    use crate::model::zoo;
+    use crate::partition::{Mode, Scheme};
+
+    fn check_plan(model: &Model, plan: &Plan, nodes: usize) {
+        let ws = WeightStore::for_model(model, 11);
+        let l0 = &model.layers[0];
+        let input = Tensor::random(l0.in_h, l0.in_w, l0.in_c, 99);
+        let reference = run_reference(model, &ws, &input);
+        let run = run_distributed(model, plan, &ws, &input, nodes);
+        let diff = reference.max_abs_diff(&run.output);
+        assert_eq!(diff, 0.0, "distributed != reference (diff {diff})");
+    }
+
+    #[test]
+    fn uniform_plans_match_reference() {
+        let model = zoo::edgenet(16);
+        for scheme in Scheme::ALL {
+            for nodes in [2usize, 3, 4] {
+                let plan = Plan::uniform(scheme, model.n_layers());
+                check_plan(&model, &plan, nodes);
+            }
+        }
+    }
+
+    #[test]
+    fn fused_plan_matches_reference() {
+        let model = zoo::edgenet(16);
+        let mut plan = Plan::uniform(Scheme::InH, model.n_layers());
+        // fuse the first four layers (conv, dw, pw, conv)
+        plan.steps[0].mode = Mode::NT;
+        plan.steps[1].mode = Mode::NT;
+        plan.steps[2].mode = Mode::NT;
+        plan.validate().unwrap();
+        check_plan(&model, &plan, 4);
+    }
+
+    #[test]
+    fn mixed_scheme_plan_matches_reference() {
+        let model = zoo::edgenet(16);
+        let n = model.n_layers();
+        let mut plan = Plan::uniform(Scheme::InH, n);
+        plan.steps[2].scheme = Scheme::OutC;
+        plan.steps[3].scheme = Scheme::Grid2d;
+        plan.steps[4].scheme = Scheme::InW;
+        plan.steps[6].scheme = Scheme::OutC;
+        plan.validate().unwrap();
+        check_plan(&model, &plan, 4);
+    }
+
+    #[test]
+    fn grid_on_three_nodes_matches_reference() {
+        // the imbalanced multi-rect tile case
+        let model = zoo::edgenet(16);
+        let plan = Plan::uniform(Scheme::Grid2d, model.n_layers());
+        check_plan(&model, &plan, 3);
+    }
+
+    #[test]
+    fn bytes_exchanged_positive_and_counted() {
+        let model = zoo::edgenet(16);
+        let ws = WeightStore::for_model(&model, 1);
+        let input = Tensor::random(16, 16, 3, 2);
+        let plan = Plan::uniform(Scheme::InH, model.n_layers());
+        let run = run_distributed(&model, &plan, &ws, &input, 4);
+        assert!(run.bytes_exchanged > 0);
+        assert!(run.messages > 0);
+    }
+
+    #[test]
+    fn single_node_degenerate_cluster() {
+        let model = zoo::edgenet(16);
+        let ws = WeightStore::for_model(&model, 11);
+        let input = Tensor::random(16, 16, 3, 99);
+        let reference = run_reference(&model, &ws, &input);
+        let plan = Plan::uniform(Scheme::InH, model.n_layers());
+        let run = run_distributed(&model, &plan, &ws, &input, 1);
+        assert_eq!(reference.max_abs_diff(&run.output), 0.0);
+        assert_eq!(run.bytes_exchanged, 0);
+    }
+}

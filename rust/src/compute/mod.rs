@@ -1,0 +1,675 @@
+//! Native tensor kernels — the execution substrate for real numerics.
+//!
+//! Every partitioned plan can be *executed*, not just costed: each simulated
+//! node computes its (possibly inflated) tiles with these kernels, halos are
+//! exchanged as real data, and the assembled output is compared against the
+//! single-node reference — the strongest possible check that the partition
+//! geometry (halos, NT inflation, scheme realignment) is correct.
+//!
+//! These kernels are the *fallback/oracle* path; when an AOT-compiled HLO
+//! artifact exists for a layer's exact shape, [`crate::runtime`] executes the
+//! JAX/Pallas version via PJRT instead (and tests assert both paths agree).
+//!
+//! Layout is HWC (`idx = (y·W + x)·C + c`), matching the feature-map
+//! orientation of the partition geometry and the JAX reference.
+
+use crate::model::{ConvType, LayerMeta, Model};
+use crate::partition::Region;
+use crate::util::rng::Rng;
+
+/// A dense f32 tensor over an `(h, w, c)` box.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub h: i64,
+    pub w: i64,
+    pub c: i64,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(h: i64, w: i64, c: i64) -> Tensor {
+        Tensor { h, w, c, data: vec![0.0; (h * w * c) as usize] }
+    }
+
+    #[inline]
+    pub fn at(&self, y: i64, x: i64, ch: i64) -> f32 {
+        debug_assert!(y < self.h && x < self.w && ch < self.c);
+        self.data[((y * self.w + x) * self.c + ch) as usize]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, y: i64, x: i64, ch: i64) -> &mut f32 {
+        &mut self.data[((y * self.w + x) * self.c + ch) as usize]
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Deterministic pseudo-random tensor (inputs for tests/examples).
+    pub fn random(h: i64, w: i64, c: i64, seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        let mut t = Tensor::zeros(h, w, c);
+        for v in &mut t.data {
+            *v = (rng.f64() * 2.0 - 1.0) as f32;
+        }
+        t
+    }
+
+    /// Max |a-b| against another tensor of the same shape.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!((self.h, self.w, self.c), (other.h, other.w, other.c));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max)
+    }
+}
+
+/// A tensor pinned to a region of some layer's coordinate space — what a
+/// node actually holds.
+#[derive(Debug, Clone)]
+pub struct RegionTensor {
+    pub region: Region,
+    pub t: Tensor,
+}
+
+impl RegionTensor {
+    pub fn new(region: Region, t: Tensor) -> RegionTensor {
+        assert_eq!(
+            (t.h, t.w, t.c),
+            (region.h1 - region.h0, region.w1 - region.w0, region.c1 - region.c0),
+            "tensor shape must match region extent"
+        );
+        RegionTensor { region, t }
+    }
+
+    /// Copy the overlap between this patch and `dst_region` into `dst`
+    /// (which covers `dst_region`).
+    pub fn copy_into(&self, dst_region: &Region, dst: &mut Tensor) {
+        let ov = self.region.intersect(dst_region);
+        if ov.is_empty() {
+            return;
+        }
+        for y in ov.h0..ov.h1 {
+            for x in ov.w0..ov.w1 {
+                for ch in ov.c0..ov.c1 {
+                    *dst.at_mut(y - dst_region.h0, x - dst_region.w0, ch - dst_region.c0) =
+                        self.t.at(y - self.region.h0, x - self.region.w0, ch - self.region.c0);
+                }
+            }
+        }
+    }
+
+    /// Extract a sub-region as a new RegionTensor (for sending halos).
+    pub fn slice(&self, sub: &Region) -> RegionTensor {
+        let ov = self.region.intersect(sub);
+        let mut t =
+            Tensor::zeros(ov.h1 - ov.h0, ov.w1 - ov.w0, ov.c1 - ov.c0);
+        self.copy_into(&ov, &mut t);
+        RegionTensor::new(ov, t)
+    }
+}
+
+/// A node's working set for one layer: patches covering (at least) the
+/// regions it holds.
+#[derive(Debug, Clone, Default)]
+pub struct PatchStore {
+    pub patches: Vec<RegionTensor>,
+}
+
+impl PatchStore {
+    pub fn new() -> PatchStore {
+        PatchStore { patches: Vec::new() }
+    }
+
+    pub fn add(&mut self, p: RegionTensor) {
+        if !p.region.is_empty() {
+            self.patches.push(p);
+        }
+    }
+
+    /// Materialize `region` as a dense tensor from the stored patches.
+    /// `require_full` panics on coverage gaps inside the valid extent
+    /// `valid` — gaps mean the exchange protocol failed to deliver data
+    /// (outside `valid` is implicit zero padding).
+    pub fn extract(&self, region: &Region, valid: &Region, require_full: bool) -> Tensor {
+        let mut out = Tensor::zeros(
+            region.h1 - region.h0,
+            region.w1 - region.w0,
+            region.c1 - region.c0,
+        );
+        for p in &self.patches {
+            p.copy_into(region, &mut out);
+        }
+        if require_full {
+            let needed = region.intersect(valid);
+            let covered = crate::partition::intersection_volume(
+                &self.patches.iter().map(|p| p.region).collect::<Vec<_>>(),
+                &[needed],
+            );
+            assert_eq!(
+                covered,
+                needed.volume(),
+                "coverage gap extracting {region:?}: have {covered} of {} cells",
+                needed.volume()
+            );
+        }
+        out
+    }
+}
+
+/// Per-layer weights (deterministically generated — the "pre-trained model"
+/// substitute; every node and the reference derive identical weights).
+#[derive(Debug, Clone)]
+pub struct LayerWeights {
+    /// Conv: `[k·k·in_c·out_c]` in (ky, kx, ic, oc) order.
+    /// Dense/Attention: `[in_c·out_c]`. Depthwise: `[k·k·c]`. Pool: empty.
+    pub w: Vec<f32>,
+    pub b: Vec<f32>,
+}
+
+/// All weights of a model.
+#[derive(Debug, Clone)]
+pub struct WeightStore {
+    pub layers: Vec<LayerWeights>,
+}
+
+impl WeightStore {
+    pub fn for_model(model: &Model, seed: u64) -> WeightStore {
+        let layers = model
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(i, l)| {
+                let mut rng = Rng::new(seed ^ (i as u64).wrapping_mul(0x9E3779B97F4A7C15));
+                let n_w = match l.conv_t {
+                    ConvType::Standard => l.k * l.k * l.in_c * l.out_c,
+                    ConvType::Depthwise => l.k * l.k * l.out_c,
+                    ConvType::Pointwise => l.in_c * l.out_c,
+                    ConvType::Dense | ConvType::Attention => l.in_c * l.out_c,
+                    ConvType::Pool => 0,
+                };
+                // scale keeps activations O(1) through deep stacks
+                let scale = (1.0 / (l.k * l.k * l.in_c).max(1) as f64).sqrt();
+                let w = (0..n_w)
+                    .map(|_| ((rng.f64() * 2.0 - 1.0) * scale) as f32)
+                    .collect();
+                let b = (0..l.out_c).map(|_| (rng.f64() * 0.1) as f32).collect();
+                LayerWeights { w, b }
+            })
+            .collect();
+        WeightStore { layers }
+    }
+}
+
+/// Compute the output region `out_r` of `layer`, reading input from `store`
+/// (which must cover the receptive field of `out_r` within the valid input
+/// extent; padding is implicit zeros).
+pub fn compute_region(
+    layer: &LayerMeta,
+    weights: &LayerWeights,
+    store: &PatchStore,
+    out_r: &Region,
+) -> RegionTensor {
+    if out_r.is_empty() {
+        return RegionTensor::new(Region::empty(), Tensor::zeros(0, 0, 0));
+    }
+    let in_needed = crate::partition::geometry::in_region(layer, out_r);
+    let valid = Region::full(layer.in_h, layer.in_w, layer.in_c);
+    // Hull covering the receptive field *before* clamping, so padded reads
+    // index zeros naturally.
+    let raw = unclamped_in_region(layer, out_r);
+    let input = store.extract(&raw, &valid.intersect(&in_needed), true);
+    let mut out = Tensor::zeros(out_r.h1 - out_r.h0, out_r.w1 - out_r.w0, out_r.c1 - out_r.c0);
+
+    match layer.conv_t {
+        ConvType::Standard | ConvType::Pointwise => {
+            conv2d(layer, weights, &input, &raw, out_r, &mut out, false)
+        }
+        ConvType::Depthwise => conv2d(layer, weights, &input, &raw, out_r, &mut out, true),
+        ConvType::Pool => pool_avg(layer, &input, &raw, out_r, &mut out),
+        ConvType::Dense | ConvType::Attention => dense(layer, weights, &input, &raw, out_r, &mut out),
+    }
+
+    if layer.fused_activation {
+        for v in &mut out.data {
+            *v = v.max(0.0);
+        }
+    }
+    RegionTensor::new(*out_r, out)
+}
+
+/// The receptive-field hull of `out_r` *without* clamping to the input
+/// extent — positions outside the input read as zero (the conv padding).
+pub fn unclamped_in_region(layer: &LayerMeta, r: &Region) -> Region {
+    if layer.conv_t == ConvType::Attention {
+        return Region::full(layer.in_h, layer.in_w, layer.in_c);
+    }
+    let (c0, c1) = match layer.conv_t {
+        ConvType::Depthwise | ConvType::Pool => (r.c0, r.c1),
+        _ => (0, layer.in_c),
+    };
+    Region {
+        h0: r.h0 * layer.s - layer.p,
+        h1: (r.h1 - 1) * layer.s - layer.p + layer.k,
+        w0: r.w0 * layer.s - layer.p,
+        w1: (r.w1 - 1) * layer.s - layer.p + layer.k,
+        c0,
+        c1,
+    }
+}
+
+/// Standard/pointwise conv, axpy-structured for vectorization (§Perf):
+/// per output pixel, accumulate `acc[oc_range] += x[y,x,ic] · w[ky,kx,ic,:]`
+/// over taps — the weight row over `oc` is contiguous in the
+/// `(ky, kx, ic, oc)` layout, so the inner loop autovectorizes, and all
+/// index arithmetic is hoisted out of it.
+#[allow(clippy::too_many_arguments)]
+fn conv2d(
+    layer: &LayerMeta,
+    weights: &LayerWeights,
+    input: &Tensor,
+    in_r: &Region,
+    out_r: &Region,
+    out: &mut Tensor,
+    depthwise: bool,
+) {
+    if depthwise {
+        return conv2d_depthwise(layer, weights, input, in_r, out_r, out);
+    }
+    if layer.k == 1 && layer.s == 1 && layer.p == 0 {
+        return conv2d_pointwise(layer, weights, input, in_r, out_r, out);
+    }
+    let (k, s, p) = (layer.k, layer.s, layer.p);
+    let in_c = layer.in_c as usize;
+    let out_c = layer.out_c as usize;
+    let oc0 = out_r.c0 as usize;
+    let oc1 = out_r.c1 as usize;
+    let oc_len = oc1 - oc0;
+    let bias = &weights.b[oc0..oc1];
+    let in_w_stride = (in_r.w1 - in_r.w0) as usize * in_c;
+    let mut acc = vec![0.0f32; oc_len];
+
+    for oy in out_r.h0..out_r.h1 {
+        for ox in out_r.w0..out_r.w1 {
+            acc.copy_from_slice(bias);
+            for ky in 0..k {
+                let y = oy * s - p + ky;
+                if y < 0 || y >= layer.in_h {
+                    continue;
+                }
+                let row_base = (y - in_r.h0) as usize * in_w_stride;
+                for kx in 0..k {
+                    let x = ox * s - p + kx;
+                    if x < 0 || x >= layer.in_w {
+                        continue;
+                    }
+                    let px_base = row_base
+                        + (x - in_r.w0) as usize * in_c
+                        + (0i64 - in_r.c0) as usize; // full channel range ⇒ c0 = 0
+                    let xs = &input.data[px_base..px_base + in_c];
+                    let w_tap = ((ky * k + kx) as usize) * in_c * out_c;
+                    for (ic, &xv) in xs.iter().enumerate() {
+                        if xv == 0.0 {
+                            continue; // padding-adjacent zeros are common
+                        }
+                        let wrow = &weights.w[w_tap + ic * out_c + oc0..w_tap + ic * out_c + oc1];
+                        for (a, &wv) in acc.iter_mut().zip(wrow) {
+                            *a += xv * wv;
+                        }
+                    }
+                }
+            }
+            let out_base = ((oy - out_r.h0) * (out_r.w1 - out_r.w0) + (ox - out_r.w0)) as usize
+                * oc_len;
+            out.data[out_base..out_base + oc_len].copy_from_slice(&acc);
+        }
+    }
+}
+
+/// Pointwise (1×1/s1/p0) fast path: a pure `(pixels × in_c) @ (in_c ×
+/// out_c)` matmul with 4-pixel row blocking for ILP — pointwise convs carry
+/// most of the FLOPs in MobileNet-style models (§Perf).
+fn conv2d_pointwise(
+    layer: &LayerMeta,
+    weights: &LayerWeights,
+    input: &Tensor,
+    in_r: &Region,
+    out_r: &Region,
+    out: &mut Tensor,
+) {
+    let in_c = layer.in_c as usize;
+    let out_c = layer.out_c as usize;
+    let oc0 = out_r.c0 as usize;
+    let oc1 = out_r.c1 as usize;
+    let oc_len = oc1 - oc0;
+    let bias = &weights.b[oc0..oc1];
+    let in_w_stride = (in_r.w1 - in_r.w0) as usize * in_c;
+    let ow_len = (out_r.w1 - out_r.w0) as usize;
+    let mut acc = vec![0.0f32; 4 * oc_len];
+
+    for oy in out_r.h0..out_r.h1 {
+        let row_base = (oy - in_r.h0) as usize * in_w_stride;
+        let mut ox = out_r.w0;
+        while ox < out_r.w1 {
+            let blk = ((out_r.w1 - ox) as usize).min(4);
+            for b in 0..blk {
+                acc[b * oc_len..(b + 1) * oc_len].copy_from_slice(bias);
+            }
+            for ic in 0..in_c {
+                let wrow = &weights.w[ic * out_c + oc0..ic * out_c + oc1];
+                for b in 0..blk {
+                    let xv = input.data
+                        [row_base + (ox + b as i64 - in_r.w0) as usize * in_c + ic];
+                    if xv == 0.0 {
+                        continue;
+                    }
+                    let a = &mut acc[b * oc_len..(b + 1) * oc_len];
+                    for (aj, &wv) in a.iter_mut().zip(wrow) {
+                        *aj += xv * wv;
+                    }
+                }
+            }
+            for b in 0..blk {
+                let out_base = ((oy - out_r.h0) as usize * ow_len
+                    + (ox - out_r.w0) as usize
+                    + b)
+                    * oc_len;
+                out.data[out_base..out_base + oc_len]
+                    .copy_from_slice(&acc[b * oc_len..(b + 1) * oc_len]);
+            }
+            ox += blk as i64;
+        }
+    }
+}
+
+/// Depthwise conv: one filter per channel; the inner loop runs over the
+/// contiguous channel lane (`w[ky,kx,:]` and `x[y,x,:]` are both
+/// channel-contiguous).
+fn conv2d_depthwise(
+    layer: &LayerMeta,
+    weights: &LayerWeights,
+    input: &Tensor,
+    in_r: &Region,
+    out_r: &Region,
+    out: &mut Tensor,
+) {
+    let (k, s, p) = (layer.k, layer.s, layer.p);
+    let out_c = layer.out_c as usize;
+    let c0 = out_r.c0;
+    let c_len = (out_r.c1 - out_r.c0) as usize;
+    let in_c_len = (in_r.c1 - in_r.c0) as usize;
+    let in_w_stride = (in_r.w1 - in_r.w0) as usize * in_c_len;
+    let bias = &weights.b[c0 as usize..out_r.c1 as usize];
+    let mut acc = vec![0.0f32; c_len];
+
+    for oy in out_r.h0..out_r.h1 {
+        for ox in out_r.w0..out_r.w1 {
+            acc.copy_from_slice(bias);
+            for ky in 0..k {
+                let y = oy * s - p + ky;
+                if y < 0 || y >= layer.in_h {
+                    continue;
+                }
+                for kx in 0..k {
+                    let x = ox * s - p + kx;
+                    if x < 0 || x >= layer.in_w {
+                        continue;
+                    }
+                    // input channel range mirrors the output's (c0..c1)
+                    let px = (y - in_r.h0) as usize * in_w_stride
+                        + (x - in_r.w0) as usize * in_c_len
+                        + (c0 - in_r.c0) as usize;
+                    let xs = &input.data[px..px + c_len];
+                    let wq = ((ky * k + kx) as usize) * out_c + c0 as usize;
+                    let ws = &weights.w[wq..wq + c_len];
+                    for ((a, &xv), &wv) in acc.iter_mut().zip(xs).zip(ws) {
+                        *a += xv * wv;
+                    }
+                }
+            }
+            let out_base = ((oy - out_r.h0) * (out_r.w1 - out_r.w0) + (ox - out_r.w0)) as usize
+                * c_len;
+            out.data[out_base..out_base + c_len].copy_from_slice(&acc);
+        }
+    }
+}
+
+fn pool_avg(layer: &LayerMeta, input: &Tensor, in_r: &Region, out_r: &Region, out: &mut Tensor) {
+    let (k, s, p) = (layer.k, layer.s, layer.p);
+    for oy in out_r.h0..out_r.h1 {
+        for ox in out_r.w0..out_r.w1 {
+            for oc in out_r.c0..out_r.c1 {
+                let mut acc = 0.0f32;
+                for ky in 0..k {
+                    let y = oy * s - p + ky;
+                    if y < 0 || y >= layer.in_h {
+                        continue;
+                    }
+                    for kx in 0..k {
+                        let x = ox * s - p + kx;
+                        if x < 0 || x >= layer.in_w {
+                            continue;
+                        }
+                        acc += input.at(y - in_r.h0, x - in_r.w0, oc - in_r.c0);
+                    }
+                }
+                *out.at_mut(oy - out_r.h0, ox - out_r.w0, oc - out_r.c0) =
+                    acc / (k * k) as f32;
+            }
+        }
+    }
+}
+
+fn dense(
+    layer: &LayerMeta,
+    weights: &LayerWeights,
+    input: &Tensor,
+    in_r: &Region,
+    out_r: &Region,
+    out: &mut Tensor,
+) {
+    // (rows × in_c) @ (in_c × out_c); rows live on the h axis, w == 1.
+    for row in out_r.h0..out_r.h1 {
+        for oc in out_r.c0..out_r.c1 {
+            let mut acc = weights.b[oc as usize];
+            for ic in 0..layer.in_c {
+                acc += weights.w[(ic * layer.out_c + oc) as usize]
+                    * input.at(row - in_r.h0, 0, ic - in_r.c0);
+            }
+            *out.at_mut(row - out_r.h0, 0, oc - out_r.c0) = acc;
+        }
+    }
+}
+
+/// Single-node reference: run the whole model on one device. The oracle for
+/// every distributed-execution test.
+pub fn run_reference(model: &Model, weights: &WeightStore, input: &Tensor) -> Tensor {
+    assert_eq!(
+        (input.h, input.w, input.c),
+        (model.layers[0].in_h, model.layers[0].in_w, model.layers[0].in_c),
+        "input shape mismatch"
+    );
+    let mut cur = input.clone();
+    for (i, layer) in model.layers.iter().enumerate() {
+        let mut store = PatchStore::new();
+        store.add(RegionTensor::new(
+            Region::full(layer.in_h, layer.in_w, layer.in_c),
+            cur,
+        ));
+        let out_full = Region::full(layer.out_h, layer.out_w, layer.out_c);
+        cur = compute_region(layer, &weights.layers[i], &store, &out_full).t;
+    }
+    cur
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    fn layer(h: i64, ci: i64, co: i64, k: i64, s: i64, p: i64) -> LayerMeta {
+        LayerMeta::conv("t", ConvType::Standard, h, h, ci, co, k, s, p)
+    }
+
+    fn full_store(l: &LayerMeta, t: Tensor) -> PatchStore {
+        let mut s = PatchStore::new();
+        s.add(RegionTensor::new(Region::full(l.in_h, l.in_w, l.in_c), t));
+        s
+    }
+
+    #[test]
+    fn identity_conv_1x1() {
+        // 1×1 conv with identity weights reproduces the input.
+        let l = LayerMeta::conv("id", ConvType::Pointwise, 4, 4, 2, 2, 1, 1, 0);
+        let mut w = LayerWeights { w: vec![0.0; 4], b: vec![0.0; 2] };
+        w.w[0] = 1.0; // ic0 -> oc0
+        w.w[3] = 1.0; // ic1 -> oc1
+        let input = Tensor::random(4, 4, 2, 1);
+        let store = full_store(&l, input.clone());
+        let out = compute_region(&l, &w, &store, &Region::full(4, 4, 2)).t;
+        assert_eq!(out.data, input.data);
+    }
+
+    #[test]
+    fn conv_known_values() {
+        // 3×3 all-ones kernel over all-ones input, same padding: interior
+        // outputs = 9, corners = 4, edges = 6.
+        let l = layer(4, 1, 1, 3, 1, 1);
+        let w = LayerWeights { w: vec![1.0; 9], b: vec![0.0] };
+        let input = Tensor { h: 4, w: 4, c: 1, data: vec![1.0; 16] };
+        let store = full_store(&l, input);
+        let out = compute_region(&l, &w, &store, &Region::full(4, 4, 1)).t;
+        assert_eq!(out.at(1, 1, 0), 9.0);
+        assert_eq!(out.at(0, 0, 0), 4.0);
+        assert_eq!(out.at(0, 1, 0), 6.0);
+    }
+
+    #[test]
+    fn strided_conv_shape_and_values() {
+        let l = layer(4, 1, 1, 3, 2, 1);
+        assert_eq!(l.out_h, 2);
+        let w = LayerWeights { w: vec![1.0; 9], b: vec![0.0] };
+        let input = Tensor { h: 4, w: 4, c: 1, data: vec![1.0; 16] };
+        let store = full_store(&l, input);
+        let out = compute_region(&l, &w, &store, &Region::full(2, 2, 1)).t;
+        assert_eq!(out.at(0, 0, 0), 4.0); // top-left window clipped to 2×2
+        assert_eq!(out.at(1, 1, 0), 9.0);
+    }
+
+    #[test]
+    fn partial_region_equals_slice_of_full() {
+        // Computing a sub-region directly == slicing the full output.
+        let l = layer(8, 3, 4, 3, 1, 1);
+        let ws = WeightStore::for_model(
+            &crate::model::Model::new("m", vec![l.clone()]),
+            7,
+        );
+        let input = Tensor::random(8, 8, 3, 2);
+        let store = full_store(&l, input);
+        let full = compute_region(&l, &ws.layers[0], &store, &Region::full(8, 8, 4));
+        let sub_r = Region::new(2, 5, 1, 7, 1, 3);
+        let sub = compute_region(&l, &ws.layers[0], &store, &sub_r);
+        for y in sub_r.h0..sub_r.h1 {
+            for x in sub_r.w0..sub_r.w1 {
+                for c in sub_r.c0..sub_r.c1 {
+                    assert_eq!(
+                        sub.t.at(y - sub_r.h0, x - sub_r.w0, c - sub_r.c0),
+                        full.t.at(y, x, c)
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn depthwise_channels_independent() {
+        let l = LayerMeta::conv("dw", ConvType::Depthwise, 6, 6, 2, 2, 3, 1, 1);
+        let m = crate::model::Model::new("m", vec![l.clone()]);
+        let ws = WeightStore::for_model(&m, 3);
+        let mut input = Tensor::random(6, 6, 2, 4);
+        let store = full_store(&l, input.clone());
+        let before = compute_region(&l, &ws.layers[0], &store, &Region::full(6, 6, 2)).t;
+        // perturb channel 1 only; channel 0 output must not change
+        for y in 0..6 {
+            for x in 0..6 {
+                *input.at_mut(y, x, 1) += 1.0;
+            }
+        }
+        let store2 = full_store(&l, input);
+        let after = compute_region(&l, &ws.layers[0], &store2, &Region::full(6, 6, 2)).t;
+        for y in 0..6 {
+            for x in 0..6 {
+                assert_eq!(before.at(y, x, 0), after.at(y, x, 0));
+                assert_ne!(before.at(y, x, 1), after.at(y, x, 1));
+            }
+        }
+    }
+
+    #[test]
+    fn global_avg_pool() {
+        let l = LayerMeta::pool("gap", 4, 4, 2, 4, 4);
+        assert_eq!((l.out_h, l.out_w), (1, 1));
+        let mut input = Tensor::zeros(4, 4, 2);
+        for y in 0..4 {
+            for x in 0..4 {
+                *input.at_mut(y, x, 0) = 2.0;
+                *input.at_mut(y, x, 1) = (y * 4 + x) as f32;
+            }
+        }
+        let store = full_store(&l, input);
+        let w = LayerWeights { w: vec![], b: vec![] };
+        let out = compute_region(&l, &w, &store, &Region::full(1, 1, 2)).t;
+        assert_eq!(out.at(0, 0, 0), 2.0);
+        assert_eq!(out.at(0, 0, 1), 7.5);
+    }
+
+    #[test]
+    fn dense_matches_manual_matmul() {
+        let l = LayerMeta::dense("fc", 3, 4, 2);
+        let m = crate::model::Model::new("m", vec![l.clone()]);
+        let ws = WeightStore::for_model(&m, 5);
+        let input = Tensor::random(3, 1, 4, 6);
+        let store = full_store(&l, input.clone());
+        let out = compute_region(&l, &ws.layers[0], &store, &Region::full(3, 1, 2)).t;
+        for row in 0..3 {
+            for oc in 0..2 {
+                let mut acc = ws.layers[0].b[oc as usize];
+                for ic in 0..4 {
+                    acc += ws.layers[0].w[(ic * 2 + oc) as usize] * input.at(row, 0, ic);
+                }
+                assert!((out.at(row, 0, oc) - acc).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "coverage gap")]
+    fn missing_halo_panics() {
+        // A store holding only rows 0..2 cannot compute output rows 0..3 of
+        // a 3×3 conv (row 2 needs input row 3).
+        let l = layer(6, 1, 1, 3, 1, 1);
+        let mut store = PatchStore::new();
+        store.add(RegionTensor::new(
+            Region::new(0, 2, 0, 6, 0, 1),
+            Tensor::zeros(2, 6, 1),
+        ));
+        let w = LayerWeights { w: vec![1.0; 9], b: vec![0.0] };
+        let _ = compute_region(&l, &w, &store, &Region::new(0, 3, 0, 6, 0, 1));
+    }
+
+    #[test]
+    fn reference_runs_edgenet() {
+        let model = zoo::edgenet(16);
+        let ws = WeightStore::for_model(&model, 42);
+        let input = Tensor::random(16, 16, 3, 1);
+        let out = run_reference(&model, &ws, &input);
+        assert_eq!((out.h, out.w, out.c), (1, 1, 10));
+        assert!(out.data.iter().all(|v| v.is_finite()));
+        // deterministic
+        let out2 = run_reference(&model, &ws, &input);
+        assert_eq!(out.data, out2.data);
+    }
+}

@@ -1,0 +1,139 @@
+//! Experiment configuration: the testbed/benchmark grids of the paper's §4,
+//! loadable from JSON for custom sweeps.
+
+use crate::net::{Bandwidth, Testbed, Topology};
+use crate::util::json::Json;
+
+/// The sweep grid for the figure benches.
+#[derive(Debug, Clone)]
+pub struct ExperimentGrid {
+    pub models: Vec<String>,
+    pub node_counts: Vec<usize>,
+    pub topologies: Vec<Topology>,
+    pub bandwidths_gbps: Vec<f64>,
+}
+
+impl ExperimentGrid {
+    /// The paper's evaluation grid: 4 benchmarks; 4-node and 3-node
+    /// testbeds; Ring and PS topologies (Mesh ≈ Ring per §4 footnote);
+    /// 5 Gb/s, 1 Gb/s and 500 Mb/s SRIO-class bandwidths.
+    pub fn paper() -> ExperimentGrid {
+        ExperimentGrid {
+            models: vec![
+                "mobilenet".into(),
+                "resnet18".into(),
+                "resnet101".into(),
+                "bert".into(),
+            ],
+            node_counts: vec![4, 3],
+            topologies: vec![Topology::Ring, Topology::Ps],
+            bandwidths_gbps: vec![5.0, 1.0, 0.5],
+        }
+    }
+
+    /// A fast grid for CI / smoke runs (truncated models handled by caller).
+    pub fn smoke() -> ExperimentGrid {
+        ExperimentGrid {
+            models: vec!["mobilenet".into()],
+            node_counts: vec![4],
+            topologies: vec![Topology::Ring],
+            bandwidths_gbps: vec![1.0],
+        }
+    }
+
+    pub fn testbeds(&self) -> Vec<Testbed> {
+        let mut out = Vec::new();
+        for &n in &self.node_counts {
+            for &t in &self.topologies {
+                for &bw in &self.bandwidths_gbps {
+                    out.push(Testbed::new(n, t, Bandwidth::gbps(bw)));
+                }
+            }
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "models",
+                Json::Arr(self.models.iter().map(|m| Json::Str(m.clone())).collect()),
+            ),
+            (
+                "node_counts",
+                Json::Arr(self.node_counts.iter().map(|&n| Json::Num(n as f64)).collect()),
+            ),
+            (
+                "topologies",
+                Json::Arr(
+                    self.topologies.iter().map(|t| Json::Str(t.name().to_string())).collect(),
+                ),
+            ),
+            ("bandwidths_gbps", Json::num_arr(&self.bandwidths_gbps)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<ExperimentGrid, String> {
+        let strings = |key: &str| -> Result<Vec<String>, String> {
+            Ok(v.req(key)?
+                .as_arr()
+                .ok_or(key.to_string())?
+                .iter()
+                .filter_map(|x| x.as_str().map(String::from))
+                .collect())
+        };
+        let topologies = strings("topologies")?
+            .iter()
+            .map(|s| s.parse::<Topology>())
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(ExperimentGrid {
+            models: strings("models")?,
+            node_counts: v
+                .req("node_counts")?
+                .as_arr()
+                .ok_or("node_counts")?
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect(),
+            topologies,
+            bandwidths_gbps: v.req("bandwidths_gbps")?.as_f64_vec().ok_or("bandwidths")?,
+        })
+    }
+
+    pub fn load(path: &std::path::Path) -> std::io::Result<ExperimentGrid> {
+        let v = Json::load(path)?;
+        Self::from_json(&v).map_err(std::io::Error::other)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_grid_shape() {
+        let g = ExperimentGrid::paper();
+        assert_eq!(g.models.len(), 4);
+        assert_eq!(g.testbeds().len(), 2 * 2 * 3);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let g = ExperimentGrid::paper();
+        let j = g.to_json();
+        let g2 = ExperimentGrid::from_json(&j).unwrap();
+        assert_eq!(g.models, g2.models);
+        assert_eq!(g.node_counts, g2.node_counts);
+        assert_eq!(g.topologies, g2.topologies);
+        assert_eq!(g.bandwidths_gbps, g2.bandwidths_gbps);
+    }
+
+    #[test]
+    fn load_from_file() {
+        let dir = crate::util::tmp::TempDir::new("grid");
+        let p = dir.path().join("grid.json");
+        ExperimentGrid::smoke().to_json().save(&p).unwrap();
+        let g = ExperimentGrid::load(&p).unwrap();
+        assert_eq!(g.models, vec!["mobilenet"]);
+    }
+}

@@ -1,0 +1,61 @@
+//! Analytic ground-truth cost model — the simulator's physics.
+//!
+//! The paper measures real hardware; our substitute is this model: per-node
+//! compute time from the device profile (peak throughput × per-op-family
+//! efficiency + launch overhead), boundary time from the topology's link
+//! schedule. The execution engine charges these costs to its virtual clock,
+//! the trace generator labels CE training data with them (plus measurement
+//! noise), and `CostSource::Analytic` exposes them to the planner as the
+//! oracle used in the Thm-1 optimality tests.
+
+use super::{ComputeQuery, SyncQuery};
+use crate::net::Testbed;
+
+/// Layer compute time: barrier semantics — the layer completes when the
+/// slowest node finishes its (speed-adjusted) share.
+pub fn compute_time(tb: &Testbed, q: &ComputeQuery) -> f64 {
+    let mut worst = 0.0f64;
+    for node in 0..q.nodes {
+        let t = tb.device.compute_time(q.per_node_flops[node], q.conv_t);
+        worst = worst.max(t);
+    }
+    worst
+}
+
+/// Boundary synchronization time: the topology's schedule of the byte
+/// matrix.
+pub fn sync_time(tb: &Testbed, q: &SyncQuery) -> f64 {
+    tb.exchange_time(&q.msgs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::features::Features;
+    use crate::cost::MAX_NODES;
+    use crate::model::ConvType;
+    use crate::net::{Bandwidth, Topology};
+
+    #[test]
+    fn compute_is_bottleneck_bound() {
+        let tb = Testbed::new(4, Topology::Ring, Bandwidth::gbps(5.0));
+        let mut per_node = [0.0; MAX_NODES];
+        per_node[..4].copy_from_slice(&[1e9, 1e9, 4e9, 1e9]);
+        let q = ComputeQuery {
+            features: Features::zeros(),
+            per_node_flops: per_node,
+            nodes: 4,
+            conv_t: ConvType::Standard,
+        };
+        let t = compute_time(&tb, &q);
+        let expect = 4e9 / (128e9 * 0.55) + 20e-6;
+        assert!((t - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sync_zero_matrix_is_free() {
+        let tb = Testbed::new(3, Topology::Ps, Bandwidth::gbps(1.0));
+        let q = SyncQuery { features: Features::zeros(), msgs: vec![0; 9] };
+        assert_eq!(sync_time(&tb, &q), 0.0);
+    }
+}

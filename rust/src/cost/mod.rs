@@ -1,0 +1,147 @@
+//! Cost estimation — the paper's §3.2 (data-driven cost estimator) plus the
+//! analytic ground-truth model it learns from.
+//!
+//! The planner asks two questions, each phrased as a *query*:
+//!
+//! * [`ComputeQuery`] — "how long does one layer's (possibly inflated)
+//!   partitioned computation take?" — answered by the **i-Estimator**.
+//! * [`SyncQuery`] — "how long does the boundary synchronization between two
+//!   partition schemes take?" — answered by the **s-Estimator**.
+//!
+//! A query carries both the exact geometric facts (per-node FLOPs, the byte
+//! matrix) and the learned-estimator feature vector, so the same query can be
+//! answered by either cost source:
+//!
+//! * [`CostSource::Analytic`] — the simulator's ground truth (device profile
+//!   + topology link schedule). This is what the execution engine charges,
+//!   and what the trace generator labels training data with.
+//! * [`CostSource::Gbdt`] — the paper's data-driven estimators: two GBDT
+//!   regressors trained on traces ([`tracegen`]). Planning with GBDT and
+//!   evaluating on the simulator measures the *planning regret* of the
+//!   learned model (an ablation in the benches).
+
+pub mod analytic;
+pub mod estimator;
+pub mod features;
+pub mod gbdt;
+pub mod query;
+pub mod tracegen;
+
+pub use estimator::Estimators;
+pub use features::{Features, NF};
+
+use crate::model::ConvType;
+use crate::net::Testbed;
+
+/// Maximum cluster size supported by the fixed-size per-node arrays on the
+/// planner hot path (edge clusters are 3–6 nodes; 16 is generous headroom).
+pub const MAX_NODES: usize = 16;
+
+/// A compute-cost question: one layer, one scheme, possibly NT-inflated.
+#[derive(Debug, Clone)]
+pub struct ComputeQuery {
+    /// Feature vector for the i-Estimator.
+    pub features: Features,
+    /// Exact per-node FLOPs (already divided by per-node speed factors), for
+    /// the analytic answer. Indices `nodes..` are zero.
+    pub per_node_flops: [f64; MAX_NODES],
+    pub nodes: usize,
+    pub conv_t: ConvType,
+}
+
+/// A synchronization-cost question: one T boundary (or scatter/gather).
+#[derive(Debug, Clone)]
+pub struct SyncQuery {
+    /// Feature vector for the s-Estimator.
+    pub features: Features,
+    /// Exact byte matrix `msgs[a*nodes+b]`, for the analytic answer.
+    pub msgs: Vec<u64>,
+}
+
+impl SyncQuery {
+    pub fn total_bytes(&self) -> u64 {
+        self.msgs.iter().sum()
+    }
+}
+
+/// The cost oracle the planner consults. Mirrors the paper's CE interface:
+/// "DPP contacts CE to get an estimated time cost for the partition scheme in
+/// its consideration".
+#[derive(Debug, Clone)]
+pub enum CostSource {
+    /// Exact simulator costs (device profile + topology schedule).
+    Analytic(Testbed),
+    /// Learned i/s-Estimators (GBDT), as in the paper.
+    Gbdt { estimators: std::sync::Arc<Estimators>, testbed: Testbed },
+}
+
+impl CostSource {
+    pub fn analytic(testbed: &Testbed) -> CostSource {
+        CostSource::Analytic(testbed.clone())
+    }
+
+    pub fn gbdt(estimators: std::sync::Arc<Estimators>, testbed: &Testbed) -> CostSource {
+        CostSource::Gbdt { estimators, testbed: testbed.clone() }
+    }
+
+    pub fn testbed(&self) -> &Testbed {
+        match self {
+            CostSource::Analytic(tb) => tb,
+            CostSource::Gbdt { testbed, .. } => testbed,
+        }
+    }
+
+    /// Estimated seconds for the layer computation described by `q`
+    /// (max over nodes — layers synchronize at barriers).
+    pub fn compute_time(&self, q: &ComputeQuery) -> f64 {
+        match self {
+            CostSource::Analytic(tb) => analytic::compute_time(tb, q),
+            CostSource::Gbdt { estimators, .. } => estimators.i_est.predict(&q.features.0),
+        }
+    }
+
+    /// Estimated seconds for the synchronization described by `q`.
+    pub fn sync_time(&self, q: &SyncQuery) -> f64 {
+        match self {
+            CostSource::Analytic(tb) => analytic::sync_time(tb, q),
+            CostSource::Gbdt { estimators, .. } => estimators.s_est.predict(&q.features.0),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CostSource::Analytic(_) => "analytic",
+            CostSource::Gbdt { .. } => "gbdt",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::{Bandwidth, Topology};
+
+    #[test]
+    fn analytic_source_answers_queries() {
+        let tb = Testbed::new(4, Topology::Ring, Bandwidth::gbps(5.0));
+        let src = CostSource::analytic(&tb);
+        let mut per_node = [0.0; MAX_NODES];
+        per_node[..4].copy_from_slice(&[1e6, 2e6, 1e6, 1e6]);
+        let q = ComputeQuery {
+            features: Features::zeros(),
+            per_node_flops: per_node,
+            nodes: 4,
+            conv_t: ConvType::Standard,
+        };
+        let t = src.compute_time(&q);
+        // bottleneck node: 2e6 flops at 128e9*0.55 + 20us overhead
+        let expect = 2e6 / (128e9 * 0.55) + 20e-6;
+        assert!((t - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sync_query_total_bytes() {
+        let q = SyncQuery { features: Features::zeros(), msgs: vec![0, 5, 7, 0] };
+        assert_eq!(q.total_bytes(), 12);
+    }
+}

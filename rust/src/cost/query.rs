@@ -1,0 +1,267 @@
+//! Query builders — the single place where partition geometry is turned into
+//! cost questions. The DPP, the baselines, the evaluation engine and the
+//! trace generator all build queries through these functions, so an
+//! estimated plan and an executed plan are costed identically.
+
+use super::features::{idx, Features, LEADER_SCHEME_CODE};
+use super::{ComputeQuery, SyncQuery, MAX_NODES};
+use crate::model::LayerMeta;
+use crate::net::Testbed;
+use crate::partition::geometry::{boundary_messages, gather_messages, out_tiles, scatter_messages};
+use crate::partition::inflate::BlockGeometry;
+use crate::partition::{union_volume, Region, Scheme, Tile};
+use crate::DTYPE_BYTES;
+
+/// Build the compute query for block layer `l` of a fused block.
+pub fn compute_query(
+    layers: &[LayerMeta],
+    geo: &BlockGeometry,
+    l: usize,
+    tb: &Testbed,
+) -> ComputeQuery {
+    compute_query_tiles(&layers[l], &geo.tiles[l], geo.scheme, tb)
+}
+
+/// Build the compute query for one layer given each node's (possibly
+/// inflated) output tiles — the planner's incremental hot path. Feature
+/// shape dims are the **bottleneck node's hull tile** (the paper's estimator
+/// sees the per-device workload, which is the partitioned tile, not the full
+/// layer).
+pub fn compute_query_tiles(
+    layer: &LayerMeta,
+    tiles: &[Tile],
+    scheme: Scheme,
+    tb: &Testbed,
+) -> ComputeQuery {
+    let nodes = tiles.len();
+    debug_assert_eq!(nodes, tb.nodes);
+    let mut per_node_flops = [0.0; MAX_NODES];
+    let mut bottleneck = 0.0f64;
+    let mut busiest = 0usize;
+    let mut busiest_vol = -1i64;
+    let fpe = layer.flops_per_out_elem();
+    for (node, t) in tiles.iter().enumerate() {
+        let vol = union_volume(t);
+        let f = fpe * vol as f64 / tb.speed[node];
+        per_node_flops[node] = f;
+        if f > bottleneck {
+            bottleneck = f;
+        }
+        if vol > busiest_vol {
+            busiest_vol = vol;
+            busiest = node;
+        }
+    }
+    let out_hull = tiles[busiest].iter().fold(Region::empty(), |acc, r| acc.hull(r));
+    let ins = crate::partition::geometry::in_regions(layer, &tiles[busiest]);
+    let in_hull = ins.iter().fold(Region::empty(), |acc, r| acc.hull(r));
+
+    let mut f = Features::zeros();
+    f[idx::IN_H] = (in_hull.h1 - in_hull.h0) as f64;
+    f[idx::IN_W] = (in_hull.w1 - in_hull.w0) as f64;
+    f[idx::IN_C] = (in_hull.c1 - in_hull.c0) as f64;
+    f[idx::OUT_H] = (out_hull.h1 - out_hull.h0) as f64;
+    f[idx::OUT_W] = (out_hull.w1 - out_hull.w0) as f64;
+    f[idx::OUT_C] = (out_hull.c1 - out_hull.c0) as f64;
+    f[idx::K] = layer.k as f64;
+    f[idx::S] = layer.s as f64;
+    f[idx::P] = layer.p as f64;
+    f[idx::CONV_T] = layer.conv_t.code();
+    f[idx::BW_GBPS] = tb.bandwidth.as_gbps();
+    f[idx::ARCH] = tb.topology.code();
+    f[idx::SCHEME_FROM] = scheme.code();
+    f[idx::SCHEME_TO] = scheme.code();
+    f[idx::NODES] = nodes as f64;
+    f[idx::MAGNITUDE] = bottleneck / 1e9; // GFLOPs
+
+    ComputeQuery { features: f, per_node_flops, nodes, conv_t: layer.conv_t }
+}
+
+/// Build the sync query for the T boundary after `producer` (partitioned
+/// under `p_from`), delivering `entry_need` — the input requirement of the
+/// next block (whose first layer is `consumer`, scheme `p_to`).
+pub fn boundary_query(
+    producer: &LayerMeta,
+    p_from: Scheme,
+    consumer: &LayerMeta,
+    p_to: Scheme,
+    entry_need: &[Tile],
+    tb: &Testbed,
+) -> SyncQuery {
+    let have = out_tiles(producer, p_from, tb.nodes);
+    let msgs = boundary_messages(&have, entry_need, DTYPE_BYTES);
+    let features = sync_features(
+        producer,
+        Some(consumer),
+        p_from.code(),
+        p_to.code(),
+        tb,
+        &msgs,
+    );
+    SyncQuery { features, msgs }
+}
+
+/// Sync query for the initial scatter: leader holds the model input; every
+/// node receives the input region required by the first block.
+pub fn scatter_query(
+    first: &LayerMeta,
+    p_to: Scheme,
+    entry_need: &[Tile],
+    tb: &Testbed,
+) -> SyncQuery {
+    let msgs = scatter_messages(first, entry_need, DTYPE_BYTES);
+    let features =
+        sync_features(first, Some(first), LEADER_SCHEME_CODE, p_to.code(), tb, &msgs);
+    SyncQuery { features, msgs }
+}
+
+/// Sync query for the final gather of the last layer's tiles to the leader.
+pub fn gather_query(last: &LayerMeta, p_from: Scheme, tb: &Testbed) -> SyncQuery {
+    let tiles = out_tiles(last, p_from, tb.nodes);
+    let msgs = gather_messages(&tiles, DTYPE_BYTES);
+    let features =
+        sync_features(last, None, p_from.code(), LEADER_SCHEME_CODE, tb, &msgs);
+    SyncQuery { features, msgs }
+}
+
+/// Shared s-Estimator feature layout: producer output shape in the IN dims,
+/// consumer kernel geometry in the K/S/P dims, transfer magnitude last.
+fn sync_features(
+    producer: &LayerMeta,
+    consumer: Option<&LayerMeta>,
+    from_code: f64,
+    to_code: f64,
+    tb: &Testbed,
+    msgs: &[u64],
+) -> Features {
+    let n = tb.nodes;
+    let total: u64 = msgs.iter().sum();
+    let mut f = Features::zeros();
+    f[idx::IN_H] = producer.out_h as f64;
+    f[idx::IN_W] = producer.out_w as f64;
+    f[idx::IN_C] = producer.out_c as f64;
+    if let Some(c) = consumer {
+        f[idx::OUT_H] = c.out_h as f64;
+        f[idx::OUT_W] = c.out_w as f64;
+        f[idx::OUT_C] = c.out_c as f64;
+        f[idx::K] = c.k as f64;
+        f[idx::S] = c.s as f64;
+        f[idx::P] = c.p as f64;
+        f[idx::CONV_T] = c.conv_t.code();
+    }
+    f[idx::BW_GBPS] = tb.bandwidth.as_gbps();
+    f[idx::ARCH] = tb.topology.code();
+    f[idx::SCHEME_FROM] = from_code;
+    f[idx::SCHEME_TO] = to_code;
+    f[idx::NODES] = n as f64;
+    f[idx::MAGNITUDE] = total as f64 / 1e6; // MB
+    f
+}
+
+/// Convenience: the canonical entry requirement of a block starting at
+/// `layers[0]` under `scheme` (used by single-layer boundaries and tests).
+pub fn block_entry_need(layers: &[LayerMeta], scheme: Scheme, nodes: usize) -> Vec<Tile> {
+    BlockGeometry::new(layers, scheme, nodes).entry_need
+}
+
+/// Total bytes a plan's boundary would move (diagnostic).
+pub fn boundary_bytes(q: &SyncQuery) -> u64 {
+    q.total_bytes()
+}
+
+/// Bottleneck-node output volume share of a compute query (diagnostic):
+/// max per-node flops / total flops.
+pub fn compute_imbalance(q: &ComputeQuery) -> f64 {
+    let total: f64 = q.per_node_flops[..q.nodes].iter().sum();
+    let max = q.per_node_flops[..q.nodes].iter().fold(0.0f64, |a, &b| a.max(b));
+    if total == 0.0 {
+        1.0
+    } else {
+        max * q.nodes as f64 / total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ConvType;
+    use crate::net::{Bandwidth, Topology};
+
+    fn tb4() -> Testbed {
+        Testbed::new(4, Topology::Ring, Bandwidth::gbps(5.0))
+    }
+
+    fn conv(h: i64, c: i64) -> LayerMeta {
+        LayerMeta::conv("t", ConvType::Standard, h, h, c, c, 3, 1, 1)
+    }
+
+    #[test]
+    fn compute_query_features_track_tile() {
+        let layers = vec![conv(16, 8)];
+        let geo = BlockGeometry::new(&layers, Scheme::InH, 4);
+        let q = compute_query(&layers, &geo, 0, &tb4());
+        assert_eq!(q.features[idx::OUT_H], 4.0);
+        assert_eq!(q.features[idx::OUT_C], 8.0);
+        assert_eq!(q.features[idx::NODES], 4.0);
+        assert_eq!(q.nodes, 4);
+        // all nodes do equal work on a 16-row map
+        let f = q.per_node_flops;
+        assert!((f[0] - f[3]).abs() < 1.0);
+    }
+
+    #[test]
+    fn boundary_query_same_scheme_halo() {
+        let a = conv(16, 8);
+        let b = conv(16, 8);
+        let tb = tb4();
+        let need = block_entry_need(std::slice::from_ref(&b), Scheme::InH, 4);
+        let q = boundary_query(&a, Scheme::InH, &b, Scheme::InH, &need, &tb);
+        // halo rows only: 6 messages of one 16×8 row
+        assert_eq!(q.total_bytes(), 6 * 16 * 8 * 4);
+        assert_eq!(q.features[idx::SCHEME_FROM], Scheme::InH.code());
+    }
+
+    #[test]
+    fn scheme_change_boundary_costs_more_than_same() {
+        let a = conv(16, 8);
+        let b = conv(16, 8);
+        let tb = tb4();
+        let need_same = block_entry_need(std::slice::from_ref(&b), Scheme::InH, 4);
+        let same = boundary_query(&a, Scheme::InH, &b, Scheme::InH, &need_same, &tb);
+        let need_x = block_entry_need(std::slice::from_ref(&b), Scheme::InW, 4);
+        let cross = boundary_query(&a, Scheme::InH, &b, Scheme::InW, &need_x, &tb);
+        assert!(cross.total_bytes() > same.total_bytes());
+    }
+
+    #[test]
+    fn scatter_gather_queries() {
+        let l = conv(16, 8);
+        let tb = tb4();
+        let need = block_entry_need(std::slice::from_ref(&l), Scheme::InH, 4);
+        let sq = scatter_query(&l, Scheme::InH, &need, &tb);
+        assert!(sq.total_bytes() > 0);
+        assert_eq!(sq.features[idx::SCHEME_FROM], LEADER_SCHEME_CODE);
+        let gq = gather_query(&l, Scheme::InH, &tb);
+        // 3 non-leader tiles of 4 rows each
+        assert_eq!(gq.total_bytes(), 3 * 4 * 16 * 8 * 4);
+    }
+
+    #[test]
+    fn imbalance_diagnostic() {
+        let layers = vec![conv(14, 8)];
+        let geo = BlockGeometry::new(&layers, Scheme::InH, 4);
+        let q = compute_query(&layers, &geo, 0, &tb4());
+        // 14 rows over 4 nodes: 4/3.5
+        assert!((compute_imbalance(&q) - 4.0 / 3.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn heterogeneous_speed_shifts_bottleneck() {
+        let layers = vec![conv(16, 8)];
+        let geo = BlockGeometry::new(&layers, Scheme::InH, 4);
+        let tb = tb4().with_speed(vec![1.0, 0.5, 1.0, 1.0]);
+        let q = compute_query(&layers, &geo, 0, &tb);
+        let max = q.per_node_flops[..4].iter().cloned().fold(0.0f64, f64::max);
+        assert!((max - q.per_node_flops[1]).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,127 @@
+//! The inference engine: evaluates plans on the virtual clock and executes
+//! them with real numerics.
+//!
+//! * [`evaluate`] — the paper's reported metric: end-to-end inference time
+//!   of a plan on a testbed, from the analytic ground-truth model (the
+//!   simulator's physics). Deterministic and noise-free.
+//! * [`execute`] — runs the plan on the simulated cluster
+//!   ([`crate::cluster`]) with real tensors, returning the output plus the
+//!   virtual-clock timing; [`verify_plan`] compares the distributed output
+//!   against the single-node reference bit-for-bit.
+
+use crate::compute::{run_reference, Tensor, WeightStore};
+use crate::cost::CostSource;
+use crate::model::Model;
+use crate::net::Testbed;
+use crate::partition::Plan;
+use crate::planner::exhaustive::plan_cost;
+
+pub use crate::planner::exhaustive::PlanCost as TimingReport;
+
+impl TimingReport {
+    pub fn total_ms(&self) -> f64 {
+        self.total * 1e3
+    }
+}
+
+/// Evaluate `plan` on `testbed` — the simulator's ground-truth inference
+/// time (what every figure reports).
+pub fn evaluate(model: &Model, plan: &Plan, testbed: &Testbed) -> TimingReport {
+    plan_cost(model, plan, &CostSource::analytic(testbed))
+}
+
+/// Result of a real-numerics execution.
+#[derive(Debug)]
+pub struct ExecutionResult {
+    pub output: Tensor,
+    pub timing: TimingReport,
+    /// Payload bytes actually exchanged by the cluster threads.
+    pub bytes_exchanged: u64,
+    pub messages: usize,
+}
+
+/// Execute `plan` on the simulated cluster with real numerics.
+pub fn execute(
+    model: &Model,
+    plan: &Plan,
+    weights: &WeightStore,
+    input: &Tensor,
+    testbed: &Testbed,
+) -> ExecutionResult {
+    let run = crate::cluster::run_distributed(model, plan, weights, input, testbed.nodes);
+    ExecutionResult {
+        output: run.output,
+        timing: evaluate(model, plan, testbed),
+        bytes_exchanged: run.bytes_exchanged,
+        messages: run.messages,
+    }
+}
+
+/// Execute `plan` and compare against the single-node reference; returns the
+/// max abs difference (0.0 expected — each output element has exactly one
+/// accumulation order).
+pub fn verify_plan(model: &Model, plan: &Plan, testbed: &Testbed, seed: u64) -> f32 {
+    let weights = WeightStore::for_model(model, seed);
+    let l0 = &model.layers[0];
+    let input = Tensor::random(l0.in_h, l0.in_w, l0.in_c, seed ^ 0xdead);
+    let reference = run_reference(model, &weights, &input);
+    let result = execute(model, plan, &weights, &input, testbed);
+    reference.max_abs_diff(&result.output)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+    use crate::net::{Bandwidth, Topology};
+    use crate::partition::Scheme;
+    use crate::planner::Dpp;
+
+    fn tb(nodes: usize, gbps: f64) -> Testbed {
+        Testbed::new(nodes, Topology::Ring, Bandwidth::gbps(gbps))
+    }
+
+    #[test]
+    fn evaluate_agrees_with_dpp_estimate() {
+        let testbed = tb(4, 1.0);
+        let cost = CostSource::analytic(&testbed);
+        let model = zoo::edgenet(16);
+        let plan = Dpp::new(&model, &cost).plan();
+        let report = evaluate(&model, &plan, &testbed);
+        assert!((report.total - plan.est_cost).abs() < 1e-9 * plan.est_cost.max(1.0));
+        assert!(report.total_ms() > 0.0);
+    }
+
+    #[test]
+    fn dpp_plan_executes_correctly() {
+        // The headline end-to-end property: the optimizer's plan, executed
+        // distributed with real numerics, equals the single-node reference.
+        let testbed = tb(4, 1.0);
+        let cost = CostSource::analytic(&testbed);
+        let model = zoo::edgenet(16);
+        let plan = Dpp::new(&model, &cost).plan();
+        assert_eq!(verify_plan(&model, &plan, &testbed, 7), 0.0);
+    }
+
+    #[test]
+    fn execute_reports_bytes_consistent_with_estimate() {
+        // Cluster-exchanged payload bytes must equal the cost model's
+        // bytes_moved (same geometry → same intersections).
+        let testbed = tb(4, 5.0);
+        let model = zoo::edgenet(16);
+        let plan = Plan::uniform(Scheme::InH, model.n_layers());
+        let ws = WeightStore::for_model(&model, 3);
+        let input = Tensor::random(16, 16, 3, 5);
+        let res = execute(&model, &plan, &ws, &input, &testbed);
+        assert_eq!(res.bytes_exchanged, res.timing.bytes_moved);
+    }
+
+    #[test]
+    fn faster_network_reduces_estimated_time() {
+        let model = zoo::edgenet(32);
+        let plan = Plan::uniform(Scheme::OutC, model.n_layers());
+        let fast = evaluate(&model, &plan, &tb(4, 5.0)).total;
+        let slow = evaluate(&model, &plan, &tb(4, 0.1)).total;
+        assert!(slow > fast);
+    }
+}

@@ -1,0 +1,78 @@
+//! # FlexPie — flexible combinatorial optimization for distributed edge inference
+//!
+//! Reproduction of *"FlexPie: Accelerate Distributed Inference on Edge Devices
+//! with Flexible Combinatorial Optimization"* (Zhang et al., 2025).
+//!
+//! FlexPie partitions a DNN's feature maps across a small cluster (3–6) of
+//! edge devices and chooses, **per layer**, both a partition scheme
+//! (`InH`, `InW`, `OutC`, `2D-grid`) and a transmission mode (`T` — exchange
+//! boundary data after the layer, or `NT` — fuse into the next layer by doing
+//! redundant computation). The choice is made by a dynamic-programming planner
+//! ([`planner`]) driven by a data-driven cost estimator ([`cost`]): two GBDT
+//! regressors (i-Estimator for compute, s-Estimator for synchronization)
+//! trained on traces from the simulated testbed.
+//!
+//! ## Crate layout (Layer-3 of the three-layer stack)
+//!
+//! | module | role |
+//! |--------|------|
+//! | [`model`] | graph IR + model zoo (MobileNet, ResNet-18/101, BERT) + pre-optimization passes |
+//! | [`partition`] | partition geometry: tiles, halos, NT inflation (the paper's §2.1/§2.3) |
+//! | [`cost`] | feature extraction, from-scratch GBDT, i/s-Estimators, analytic ground truth, trace generator |
+//! | [`planner`] | DPP — the paper's Algorithm 1 (reverse DP + pruning) + exhaustive reference for Thm 1 |
+//! | [`baselines`] | OutC (Xenos), InH/InW (MoDNN/DeepSlicing), 2D-grid (DeepThings), layerwise (DINA), fused-layer (AOFL/EdgeCI) |
+//! | [`net`] | network simulator: Ring / PS / Mesh topologies, bandwidth + latency |
+//! | [`cluster`] | simulated edge cluster: leader/worker threads, message passing, virtual clock |
+//! | [`engine`] | plan executor: analytic evaluation + real-numerics distributed execution |
+//! | [`compute`] | native Rust tensor kernels (conv/dwconv/pool/matmul) — fallback + oracle |
+//! | [`runtime`] | PJRT client wrapper: loads `artifacts/*.hlo.txt` (AOT-compiled JAX/Pallas) |
+//! | [`serve`] | serving front-end: request router + dynamic batcher |
+//! | [`bench`] | generators for every paper table/figure (Fig 2, 7, 8, 9, search time, ablations) |
+//!
+//! Layers 1/2 (Pallas kernels + JAX model) live under `python/compile/` and
+//! run **only at build time** (`make artifacts`); this crate is self-contained
+//! at runtime.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use flexpie::prelude::*;
+//!
+//! let model = flexpie::model::zoo::mobilenet_v1(224, 1000);
+//! let testbed = Testbed::new(4, Topology::Ring, Bandwidth::gbps(5.0));
+//! let cost = CostSource::analytic(&testbed);
+//! let plan = flexpie::planner::Dpp::new(&model, &cost).plan();
+//! let report = flexpie::engine::evaluate(&model, &plan, &testbed);
+//! println!("estimated inference time: {:.3} ms", report.total_ms());
+//! ```
+
+pub mod baselines;
+pub mod bench;
+pub mod cluster;
+pub mod compute;
+pub mod config;
+pub mod cost;
+pub mod engine;
+pub mod metrics;
+pub mod model;
+pub mod net;
+pub mod partition;
+pub mod planner;
+pub mod runtime;
+pub mod serve;
+pub mod util;
+
+/// Commonly used types, re-exported for ergonomic downstream use.
+pub mod prelude {
+    pub use crate::cost::{CostSource, Estimators};
+    // TimingReport / Dpp re-exports enabled once those modules land (below).
+    pub use crate::engine::TimingReport;
+    pub use crate::model::{ConvType, LayerMeta, Model, OpKind};
+    pub use crate::net::{Bandwidth, Testbed, Topology};
+    pub use crate::partition::{Mode, Plan, PlanStep, Scheme};
+    pub use crate::planner::Dpp;
+}
+
+/// Bytes per element of the (single) runtime dtype. The paper's DSP testbed
+/// runs f32 inference; we do the same end-to-end.
+pub const DTYPE_BYTES: u64 = 4;

@@ -1,0 +1,404 @@
+//! `flexpie` — CLI for the FlexPie distributed-inference framework.
+//!
+//! ```text
+//! flexpie zoo                                    list models
+//! flexpie plan      --model mobilenet --nodes 4 --topology ring --bw 5gbps [--cost gbdt]
+//! flexpie evaluate  --model mobilenet --nodes 4 ...      all six solutions
+//! flexpie verify    --model edgenet --nodes 4    execute distributed vs reference
+//! flexpie trace-gen --samples 60000 --out artifacts/traces.json
+//! flexpie train-ce  --samples 60000 [--trees 300] --out artifacts/ce
+//! flexpie bench     --fig 2|7|8|9 | --search-time | --ablation [--cost analytic]
+//! flexpie serve     --model edgenet --requests 64 --batch 8
+//! ```
+
+use std::sync::Arc;
+
+use flexpie::baselines::Solution;
+use flexpie::bench::{BenchOpts, CostKind};
+use flexpie::compute::{Tensor, WeightStore};
+use flexpie::cost::estimator::Estimators;
+use flexpie::cost::gbdt::GbdtParams;
+use flexpie::cost::tracegen::{self, TraceConfig};
+use flexpie::cost::CostSource;
+use flexpie::engine;
+use flexpie::model::zoo;
+use flexpie::net::{Testbed, Topology};
+use flexpie::planner::Dpp;
+use flexpie::serve::{ServeConfig, Server};
+use flexpie::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let code = match args.command.as_deref() {
+        Some("zoo") => cmd_zoo(),
+        Some("plan") => cmd_plan(&args),
+        Some("evaluate") => cmd_evaluate(&args),
+        Some("verify") => cmd_verify(&args),
+        Some("trace-gen") => cmd_trace_gen(&args),
+        Some("train-ce") => cmd_train_ce(&args),
+        Some("bench") => cmd_bench(&args),
+        Some("export-model") => cmd_export_model(&args),
+        Some("serve") => cmd_serve(&args),
+        Some(other) => {
+            eprintln!("unknown command {other:?}");
+            usage();
+            2
+        }
+        None => {
+            usage();
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn usage() {
+    eprintln!(
+        "flexpie — distributed edge inference with flexible combinatorial optimization\n\
+         commands: zoo | plan | evaluate | verify | trace-gen | train-ce | bench | serve | export-model\n\
+         common flags: --model <name> --nodes <n> --topology ring|ps|mesh --bw 5gbps|500mbps\n\
+         see README.md for full usage"
+    );
+}
+
+/// Resolve a model from `--model <zoo-name>` or `--model-file <path>` (the
+/// JSON import format of `model::import`).
+fn model_from(args: &Args, default: &str) -> Option<flexpie::model::Model> {
+    if let Some(path) = args.get("model-file") {
+        match flexpie::model::import::load(std::path::Path::new(path)) {
+            Ok((model, stats)) => {
+                println!(
+                    "imported {} ({} layers; folded {} BN, {} act, {} residual)",
+                    model.name, model.n_layers(), stats.bn_folded,
+                    stats.activations_fused, stats.residuals_folded
+                );
+                return Some(model);
+            }
+            Err(e) => {
+                eprintln!("model import failed: {e}");
+                return None;
+            }
+        }
+    }
+    zoo::by_name(args.get_or("model", default))
+}
+
+fn testbed_from(args: &Args) -> Testbed {
+    let nodes = args.usize_or("nodes", 4);
+    let topology: Topology = args.get_or("topology", "ring").parse().unwrap_or(Topology::Ring);
+    let bw = args.bandwidth_or("bw", 5.0);
+    Testbed::new(nodes, topology, bw)
+}
+
+fn cost_from(args: &Args, tb: &Testbed) -> CostSource {
+    match args.get_or("cost", "analytic") {
+        "gbdt" => {
+            let dir = std::path::PathBuf::from(args.get_or("ce", "artifacts/ce"));
+            let cfg =
+                TraceConfig { samples: args.usize_or("samples", 20_000), ..Default::default() };
+            let params = GbdtParams { n_trees: args.usize_or("trees", 200), ..Default::default() };
+            let (est, report) =
+                Estimators::load_or_train(&dir, &cfg, &params).expect("train/load CE");
+            if let Some(r) = report {
+                println!(
+                    "trained CE: i-Est r2={:.3} ρ={:.3}; s-Est r2={:.3} ρ={:.3}",
+                    r.i_fit.r2, r.i_fit.spearman, r.s_fit.r2, r.s_fit.spearman
+                );
+            }
+            CostSource::gbdt(est, tb)
+        }
+        _ => CostSource::analytic(tb),
+    }
+}
+
+fn cmd_zoo() -> i32 {
+    let mut t = flexpie::util::bench::Table::new(["model", "layers", "GFLOPs", "params (M)"]);
+    for m in zoo::paper_benchmarks().iter().chain([zoo::edgenet(16)].iter()) {
+        t.row([
+            m.name.clone(),
+            m.n_layers().to_string(),
+            format!("{:.2}", m.total_flops() / 1e9),
+            format!("{:.2}", m.total_params() as f64 / 1e6),
+        ]);
+    }
+    t.print();
+    0
+}
+
+fn cmd_plan(args: &Args) -> i32 {
+    let Some(model) = model_from(args, "mobilenet") else {
+        eprintln!("unknown model (use --model <zoo> or --model-file <path>)");
+        return 2;
+    };
+    let tb = testbed_from(args);
+    let cost = cost_from(args, &tb);
+    let dpp = Dpp::new(&model, &cost);
+    let (plan, stats) = dpp.plan_with_stats();
+    println!(
+        "model={} nodes={} topo={} bw={:.2}Gb/s cost={}",
+        model.name,
+        tb.nodes,
+        tb.topology,
+        tb.bandwidth.as_gbps(),
+        cost.name()
+    );
+    println!("plan: {}", plan.render());
+    println!(
+        "estimated {:.3} ms | search {:.1} ms, {} i-queries, {} s-queries, {} pruned",
+        plan.est_cost * 1e3,
+        stats.elapsed.as_secs_f64() * 1e3,
+        stats.compute_queries,
+        stats.sync_queries,
+        stats.candidates_pruned
+    );
+    let report = engine::evaluate(&model, &plan, &tb);
+    println!(
+        "simulator: total {:.3} ms (compute {:.3} ms, sync {:.3} ms, {:.2} MB moved)",
+        report.total_ms(),
+        report.compute * 1e3,
+        report.sync * 1e3,
+        report.bytes_moved as f64 / 1e6
+    );
+    0
+}
+
+fn cmd_evaluate(args: &Args) -> i32 {
+    let Some(model) = model_from(args, "mobilenet") else {
+        eprintln!("unknown model (use --model <zoo> or --model-file <path>)");
+        return 2;
+    };
+    let tb = testbed_from(args);
+    let cost = cost_from(args, &tb);
+    let mut t =
+        flexpie::util::bench::Table::new(["solution", "time (ms)", "plan (first 6 steps)"]);
+    for sol in Solution::ALL {
+        let plan = sol.plan(&model, &cost);
+        let report = engine::evaluate(&model, &plan, &tb);
+        let prefix: Vec<String> =
+            plan.steps.iter().take(6).map(|s| format!("{}·{}", s.scheme, s.mode)).collect();
+        t.row([sol.name().to_string(), format!("{:.3}", report.total_ms()), prefix.join(" ")]);
+    }
+    t.print();
+    0
+}
+
+fn cmd_verify(args: &Args) -> i32 {
+    let Some(model) = model_from(args, "edgenet") else {
+        eprintln!("unknown model (use --model <zoo> or --model-file <path>)");
+        return 2;
+    };
+    if model.total_flops() > 5e9 {
+        eprintln!(
+            "warning: {} is large for real-numerics verification; consider --model edgenet",
+            model.name
+        );
+    }
+    let tb = testbed_from(args);
+    let cost = cost_from(args, &tb);
+    let plan = Dpp::new(&model, &cost).plan();
+    println!("plan: {}", plan.render());
+    let diff = engine::verify_plan(&model, &plan, &tb, args.u64_or("seed", 7));
+    println!("max |distributed - reference| = {diff}");
+    if diff == 0.0 {
+        println!("verify OK");
+        0
+    } else {
+        eprintln!("verify FAILED");
+        1
+    }
+}
+
+fn cmd_trace_gen(args: &Args) -> i32 {
+    let cfg = TraceConfig {
+        samples: args.usize_or("samples", 60_000),
+        noise_sigma: args.f64_or("noise", 0.04),
+        seed: args.u64_or("seed", 0x7ace),
+        max_block: args.usize_or("max-block", 5),
+    };
+    let out = std::path::PathBuf::from(args.get_or("out", "artifacts/traces.json"));
+    let t0 = std::time::Instant::now();
+    let traces = tracegen::generate(&cfg);
+    println!(
+        "generated {} compute + {} sync samples in {:.1}s",
+        traces.compute.len(),
+        traces.sync.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    traces.save(&out).expect("save traces");
+    println!("wrote {}", out.display());
+    0
+}
+
+fn cmd_train_ce(args: &Args) -> i32 {
+    let params = GbdtParams {
+        n_trees: args.usize_or("trees", 300),
+        max_depth: args.usize_or("depth", 7),
+        ..Default::default()
+    };
+    let out = std::path::PathBuf::from(args.get_or("out", "artifacts/ce"));
+    let t0 = std::time::Instant::now();
+    let (est, report) = if let Some(traces_path) = args.get("traces") {
+        let traces =
+            tracegen::Traces::load(std::path::Path::new(traces_path)).expect("load traces");
+        Estimators::train(&traces, &params)
+    } else {
+        let cfg = TraceConfig { samples: args.usize_or("samples", 60_000), ..Default::default() };
+        Estimators::train_from_scratch(&cfg, &params)
+    };
+    println!(
+        "trained in {:.1}s\n  i-Estimator: r2={:.4} mare={:.4} spearman={:.4} (n={})\n  s-Estimator: r2={:.4} mare={:.4} spearman={:.4} (n={})",
+        t0.elapsed().as_secs_f64(),
+        report.i_fit.r2,
+        report.i_fit.mare,
+        report.i_fit.spearman,
+        report.i_fit.n,
+        report.s_fit.r2,
+        report.s_fit.mare,
+        report.s_fit.spearman,
+        report.s_fit.n
+    );
+    est.save(&out).expect("save estimators");
+    println!("wrote {}/i_est.json and s_est.json", out.display());
+    0
+}
+
+fn cmd_bench(args: &Args) -> i32 {
+    let mut opts = BenchOpts {
+        cost: match args.get_or("cost", "gbdt") {
+            "analytic" => CostKind::Analytic,
+            _ => CostKind::Gbdt,
+        },
+        ..Default::default()
+    };
+    if let Some(t) = args.get("truncate") {
+        opts.truncate = t.parse().unwrap_or(0);
+    }
+    use flexpie::bench as b;
+    if args.has("search-time") {
+        b::search_time_table(&b::search_time(&opts)).print();
+        return 0;
+    }
+    if args.has("ablation") {
+        b::ablation_table(&b::ablation(&opts)).print();
+        return 0;
+    }
+    if args.has("scaling") {
+        b::scaling_table(&b::scaling(&opts)).print();
+        return 0;
+    }
+    match args.get_or("fig", "all") {
+        "2" => b::fig2_table(&b::fig2(&opts)).print(),
+        "7" => {
+            for (title, t) in b::fig7_9_tables(&b::fig7_9(4, &opts)) {
+                println!("\n== Fig 7 [{title}] ==");
+                t.print();
+            }
+        }
+        "9" => {
+            for (title, t) in b::fig7_9_tables(&b::fig7_9(3, &opts)) {
+                println!("\n== Fig 9 [{title}] ==");
+                t.print();
+            }
+        }
+        "8" => {
+            let c4 = b::fig7_9(4, &opts);
+            let c3 = b::fig7_9(3, &opts);
+            let s4 = b::fig8(&c4, &opts);
+            let s3 = b::fig8(&c3, &opts);
+            b::fig8_table(&s4, &s3).print();
+        }
+        _ => {
+            println!("== Fig 2 ==");
+            b::fig2_table(&b::fig2(&opts)).print();
+            let c4 = b::fig7_9(4, &opts);
+            for (title, t) in b::fig7_9_tables(&c4) {
+                println!("\n== Fig 7 [{title}] ==");
+                t.print();
+            }
+            let c3 = b::fig7_9(3, &opts);
+            for (title, t) in b::fig7_9_tables(&c3) {
+                println!("\n== Fig 9 [{title}] ==");
+                t.print();
+            }
+            let s4 = b::fig8(&c4, &opts);
+            let s3 = b::fig8(&c3, &opts);
+            println!("\n== Fig 8 ==");
+            b::fig8_table(&s4, &s3).print();
+            println!("\n== DPP search time ==");
+            b::search_time_table(&b::search_time(&opts)).print();
+        }
+    }
+    0
+}
+
+/// Export a zoo model to the JSON import format (round-trip with
+/// `--model-file`): `flexpie export-model --model mobilenet --out m.json`.
+fn cmd_export_model(args: &Args) -> i32 {
+    let Some(model) = zoo::by_name(args.get_or("model", "edgenet")) else {
+        eprintln!("unknown model");
+        return 2;
+    };
+    let out = std::path::PathBuf::from(
+        args.get_or("out", &format!("{}.flexpie.json", model.name)),
+    );
+    let json = flexpie::model::import::export_json(&model);
+    if let Err(e) = json.save(&out) {
+        eprintln!("write failed: {e}");
+        return 1;
+    }
+    println!("wrote {} ({} layers)", out.display(), model.n_layers());
+    0
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    let Some(model) = model_from(args, "edgenet") else {
+        eprintln!("unknown model (use --model <zoo> or --model-file <path>)");
+        return 2;
+    };
+    let tb = testbed_from(args);
+    let cost = cost_from(args, &tb);
+    let plan = Dpp::new(&model, &cost).plan();
+    println!("serving {} with plan: {}", model.name, plan.render());
+    let weights = WeightStore::for_model(&model, 42);
+    let cfg = ServeConfig {
+        max_batch: args.usize_or("batch", 8),
+        batch_window: std::time::Duration::from_millis(args.u64_or("window-ms", 2)),
+        queue_depth: args.usize_or("queue", 128),
+    };
+    let server = Server::start(model.clone(), plan, weights, tb, cfg);
+    let server = Arc::new(server);
+
+    let n_requests = args.usize_or("requests", 64);
+    let l0 = &model.layers[0];
+    let t0 = std::time::Instant::now();
+    let mut lat = Vec::new();
+    let mut vtimes = Vec::new();
+    let mut rxs = Vec::new();
+    for i in 0..n_requests {
+        let input = Tensor::random(l0.in_h, l0.in_w, l0.in_c, i as u64);
+        match server.submit(input) {
+            Ok(rx) => rxs.push((std::time::Instant::now(), rx)),
+            Err(e) => eprintln!("request {i} rejected: {e:?}"),
+        }
+    }
+    for (t_submit, rx) in rxs {
+        if let Ok(resp) = rx.recv() {
+            lat.push(t_submit.elapsed());
+            vtimes.push(resp.virtual_time);
+        }
+    }
+    let wall = t0.elapsed();
+    println!("latency (host wall-clock): {}", flexpie::metrics::summarize(&lat));
+    println!(
+        "throughput: {:.1} req/s (host) | per-request simulated inference: {:.3} ms",
+        lat.len() as f64 / wall.as_secs_f64(),
+        vtimes.first().copied().unwrap_or(0.0) * 1e3
+    );
+    let server = Arc::try_unwrap(server).ok().expect("server still shared");
+    let stats = server.shutdown();
+    println!(
+        "router: {} requests in {} batches (max batch {})",
+        stats.requests, stats.batches, stats.max_batch_seen
+    );
+    0
+}

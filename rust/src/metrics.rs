@@ -1,0 +1,115 @@
+//! Serving metrics: latency summaries and throughput accounting.
+
+use std::time::Duration;
+
+/// Latency summary over a set of samples.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub count: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p90: Duration,
+    pub p99: Duration,
+    pub max: Duration,
+}
+
+/// Summarize a sample set (empty input → all-zero summary).
+pub fn summarize(samples: &[Duration]) -> Summary {
+    if samples.is_empty() {
+        let z = Duration::ZERO;
+        return Summary { count: 0, mean: z, p50: z, p90: z, p99: z, max: z };
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort();
+    let pct = |p: f64| {
+        let i = ((sorted.len() as f64 - 1.0) * p).round() as usize;
+        sorted[i]
+    };
+    let total: Duration = sorted.iter().sum();
+    Summary {
+        count: sorted.len(),
+        mean: total / sorted.len() as u32,
+        p50: pct(0.50),
+        p90: pct(0.90),
+        p99: pct(0.99),
+        max: *sorted.last().unwrap(),
+    }
+}
+
+impl std::fmt::Display for Summary {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        use crate::util::bench::fmt_dur;
+        write!(
+            f,
+            "n={} mean={} p50={} p90={} p99={} max={}",
+            self.count,
+            fmt_dur(self.mean),
+            fmt_dur(self.p50),
+            fmt_dur(self.p90),
+            fmt_dur(self.p99),
+            fmt_dur(self.max)
+        )
+    }
+}
+
+/// Simple throughput window: items per second of wall-clock.
+#[derive(Debug)]
+pub struct Throughput {
+    started: std::time::Instant,
+    items: u64,
+}
+
+impl Default for Throughput {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Throughput {
+    pub fn new() -> Throughput {
+        Throughput { started: std::time::Instant::now(), items: 0 }
+    }
+
+    pub fn record(&mut self, n: u64) {
+        self.items += n;
+    }
+
+    pub fn per_sec(&self) -> f64 {
+        self.items as f64 / self.started.elapsed().as_secs_f64().max(1e-9)
+    }
+
+    pub fn items(&self) -> u64 {
+        self.items
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_percentiles() {
+        let samples: Vec<Duration> = (1..=100).map(Duration::from_millis).collect();
+        let s = summarize(&samples);
+        assert_eq!(s.count, 100);
+        assert_eq!(s.p50, Duration::from_millis(51)); // round((100-1)*0.5)=50 → sorted[50]=51ms
+        assert_eq!(s.p99, Duration::from_millis(99));
+        assert_eq!(s.max, Duration::from_millis(100));
+    }
+
+    #[test]
+    fn empty_summary() {
+        let s = summarize(&[]);
+        assert_eq!(s.count, 0);
+        assert_eq!(s.max, Duration::ZERO);
+    }
+
+    #[test]
+    fn throughput_counts() {
+        let mut t = Throughput::new();
+        t.record(5);
+        t.record(3);
+        assert_eq!(t.items(), 8);
+        assert!(t.per_sec() > 0.0);
+    }
+}

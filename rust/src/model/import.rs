@@ -1,0 +1,275 @@
+//! Model import — the "computation graph as general intermediate input"
+//! interface of paper §3.1.
+//!
+//! FlexPie supports models exported from any training framework via a small
+//! JSON description (`.flexpie.json`): a chain of layer records that map
+//! 1:1 onto [`LayerMeta`]. The raw (pre-optimization) form may still contain
+//! `batch_norm` / `activation` / `residual_add` nodes, which
+//! [`super::passes::preoptimize`] folds exactly like Xenos does.
+//!
+//! ```json
+//! {
+//!   "name": "my_model",
+//!   "nodes": [
+//!     {"kind": "conv",     "name": "c0", "in_h": 32, "in_w": 32, "in_c": 3,
+//!      "out_c": 16, "k": 3, "s": 1, "p": 1, "conv_t": "standard"},
+//!     {"kind": "batch_norm"},
+//!     {"kind": "activation"},
+//!     {"kind": "pool",     "name": "gap", "k": 32, "s": 32},
+//!     {"kind": "dense",    "name": "fc", "out_c": 10}
+//!   ]
+//! }
+//! ```
+//!
+//! Shapes chain automatically: `in_h/in_w/in_c` may be omitted after the
+//! first layer (they default to the previous layer's output), so exporters
+//! only state what changes.
+
+use super::passes::{preoptimize, PassStats, RawGraph, RawNode};
+use super::{ConvType, LayerMeta, Model};
+use crate::util::json::Json;
+
+/// Parse a ConvT name.
+fn conv_type(s: &str) -> Result<ConvType, String> {
+    match s {
+        "standard" | "conv" => Ok(ConvType::Standard),
+        "depthwise" | "dw" => Ok(ConvType::Depthwise),
+        "pointwise" | "pw" => Ok(ConvType::Pointwise),
+        "dense" | "fc" => Ok(ConvType::Dense),
+        "attention" => Ok(ConvType::Attention),
+        "pool" => Ok(ConvType::Pool),
+        other => Err(format!("unknown conv_t {other:?}")),
+    }
+}
+
+/// Import a model description, returning the planner-ready chain plus the
+/// pre-optimization statistics.
+pub fn import_json(v: &Json) -> Result<(Model, PassStats), String> {
+    let name = v.req("name")?.as_str().ok_or("name must be a string")?.to_string();
+    let nodes_json = v.req("nodes")?.as_arr().ok_or("nodes must be an array")?;
+
+    // running output shape for shape chaining
+    let mut cur: Option<(i64, i64, i64)> = None;
+    let mut nodes: Vec<RawNode> = Vec::new();
+
+    for (i, nj) in nodes_json.iter().enumerate() {
+        let kind = nj.req("kind").map_err(|e| format!("node {i}: {e}"))?;
+        let kind = kind.as_str().ok_or(format!("node {i}: kind must be a string"))?;
+        let get_i64 = |key: &str| nj.get(key).and_then(Json::as_i64);
+        let dim = |key: &str, inherited: Option<i64>| -> Result<i64, String> {
+            get_i64(key)
+                .or(inherited)
+                .ok_or(format!("node {i} ({kind}): missing {key} and nothing to inherit"))
+        };
+
+        match kind {
+            "conv" | "pool" | "dense" => {
+                let lname = nj
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .map(String::from)
+                    .unwrap_or_else(|| format!("n{i}"));
+                let (ph, pw, pc) = match cur {
+                    Some((h, w, c)) => (Some(h), Some(w), Some(c)),
+                    None => (None, None, None),
+                };
+                let layer = match kind {
+                    "dense" => {
+                        let rows = dim("rows", ph)?;
+                        let in_f = dim("in_c", pc)?;
+                        let out_f = dim("out_c", None)?;
+                        let ct = nj
+                            .get("conv_t")
+                            .and_then(Json::as_str)
+                            .map(conv_type)
+                            .transpose()?
+                            .unwrap_or(ConvType::Dense);
+                        let mut l = LayerMeta::dense(lname, rows, in_f, out_f);
+                        l.conv_t = ct;
+                        l
+                    }
+                    "pool" => {
+                        let in_h = dim("in_h", ph)?;
+                        let in_w = dim("in_w", pw)?;
+                        let in_c = dim("in_c", pc)?;
+                        let k = dim("k", None)?;
+                        let s = get_i64("s").unwrap_or(k);
+                        LayerMeta::pool(lname, in_h, in_w, in_c, k, s)
+                    }
+                    _ => {
+                        let in_h = dim("in_h", ph)?;
+                        let in_w = dim("in_w", pw)?;
+                        let in_c = dim("in_c", pc)?;
+                        let ct = nj
+                            .get("conv_t")
+                            .and_then(Json::as_str)
+                            .map(conv_type)
+                            .transpose()?
+                            .unwrap_or(ConvType::Standard);
+                        let out_c = match ct {
+                            ConvType::Depthwise => dim("out_c", Some(in_c))?,
+                            _ => dim("out_c", None)?,
+                        };
+                        let k = dim("k", None)?;
+                        let s = get_i64("s").unwrap_or(1);
+                        let p = get_i64("p").unwrap_or(0);
+                        LayerMeta::conv(lname, ct, in_h, in_w, in_c, out_c, k, s, p)
+                    }
+                };
+                cur = Some((layer.out_h, layer.out_w, layer.out_c));
+                nodes.push(RawNode::Layer(layer));
+            }
+            "batch_norm" | "activation" | "residual_add" => {
+                let (h, w, c) =
+                    cur.ok_or(format!("node {i}: {kind} before any layer"))?;
+                nodes.push(match kind {
+                    "batch_norm" => RawNode::BatchNorm { h, w, c },
+                    "activation" => RawNode::Activation { h, w, c },
+                    _ => RawNode::ResidualAdd { h, w, c },
+                });
+            }
+            "dead" => nodes.push(RawNode::Dead),
+            other => return Err(format!("node {i}: unknown kind {other:?}")),
+        }
+    }
+
+    let raw = RawGraph { name, nodes };
+    let (model, stats) = preoptimize(&raw);
+    model.validate()?;
+    Ok((model, stats))
+}
+
+/// Load a `.flexpie.json` model file.
+pub fn load(path: &std::path::Path) -> Result<(Model, PassStats), String> {
+    let v = Json::load(path).map_err(|e| e.to_string())?;
+    import_json(&v)
+}
+
+/// Export a model back to the JSON description (round-trip support, useful
+/// for generating descriptions from the zoo).
+pub fn export_json(model: &Model) -> Json {
+    let nodes: Vec<Json> = model
+        .layers
+        .iter()
+        .map(|l| {
+            let kind = match l.conv_t {
+                ConvType::Pool => "pool",
+                ConvType::Dense | ConvType::Attention => "dense",
+                _ => "conv",
+            };
+            let conv_t = match l.conv_t {
+                ConvType::Standard => "standard",
+                ConvType::Depthwise => "depthwise",
+                ConvType::Pointwise => "pointwise",
+                ConvType::Dense => "dense",
+                ConvType::Attention => "attention",
+                ConvType::Pool => "pool",
+            };
+            let mut fields = vec![
+                ("kind", Json::Str(kind.into())),
+                ("name", Json::Str(l.name.clone())),
+                ("in_h", Json::Num(l.in_h as f64)),
+                ("in_w", Json::Num(l.in_w as f64)),
+                ("in_c", Json::Num(l.in_c as f64)),
+                ("out_c", Json::Num(l.out_c as f64)),
+                ("k", Json::Num(l.k as f64)),
+                ("s", Json::Num(l.s as f64)),
+                ("p", Json::Num(l.p as f64)),
+                ("conv_t", Json::Str(conv_t.into())),
+            ];
+            if kind == "dense" {
+                fields.push(("rows", Json::Num(l.in_h as f64)));
+            }
+            Json::obj(fields)
+        })
+        .collect();
+    Json::obj(vec![
+        ("name", Json::Str(model.name.clone())),
+        ("nodes", Json::Arr(nodes)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    const SAMPLE: &str = r#"{
+        "name": "imported_cnn",
+        "nodes": [
+            {"kind": "conv", "name": "c0", "in_h": 32, "in_w": 32, "in_c": 3,
+             "out_c": 16, "k": 3, "s": 1, "p": 1},
+            {"kind": "batch_norm"},
+            {"kind": "activation"},
+            {"kind": "conv", "name": "dw1", "conv_t": "depthwise", "k": 3, "s": 2, "p": 1},
+            {"kind": "conv", "name": "pw1", "conv_t": "pointwise", "out_c": 32, "k": 1},
+            {"kind": "residual_add"},
+            {"kind": "pool", "name": "gap", "k": 16},
+            {"kind": "dense", "name": "fc", "out_c": 10}
+        ]
+    }"#;
+
+    #[test]
+    fn imports_chain_with_shape_inheritance() {
+        let v = parse(SAMPLE).unwrap();
+        let (model, stats) = import_json(&v).unwrap();
+        assert_eq!(model.name, "imported_cnn");
+        assert_eq!(model.n_layers(), 5); // BN/act/residual folded
+        assert_eq!(stats.bn_folded, 1);
+        assert_eq!(stats.activations_fused, 1);
+        assert_eq!(stats.residuals_folded, 1);
+        // dw inherits 32×32×16; pw output 16×16×32; gap → 1×1×32; fc → 10
+        assert_eq!((model.layers[1].in_h, model.layers[1].in_c), (32, 16));
+        assert_eq!(model.layers[2].out_c, 32);
+        let last = model.layers.last().unwrap();
+        assert_eq!((last.out_h, last.out_w, last.out_c), (1, 1, 10));
+    }
+
+    #[test]
+    fn imported_model_is_plannable_and_executes() {
+        let v = parse(SAMPLE).unwrap();
+        let (model, _) = import_json(&v).unwrap();
+        let tb = crate::net::Testbed::new(
+            4,
+            crate::net::Topology::Ring,
+            crate::net::Bandwidth::gbps(1.0),
+        );
+        let cost = crate::cost::CostSource::analytic(&tb);
+        let plan = crate::planner::Dpp::new(&model, &cost).plan();
+        assert_eq!(crate::engine::verify_plan(&model, &plan, &tb, 1), 0.0);
+    }
+
+    #[test]
+    fn export_import_roundtrip_zoo() {
+        for m in [super::super::zoo::edgenet(16), super::super::zoo::mobilenet_v1(224, 1000)] {
+            let j = export_json(&m);
+            let (back, _) = import_json(&j).unwrap();
+            assert_eq!(back.n_layers(), m.n_layers());
+            for (a, b) in back.layers.iter().zip(&m.layers) {
+                assert_eq!((a.in_h, a.in_w, a.in_c), (b.in_h, b.in_w, b.in_c));
+                assert_eq!((a.out_h, a.out_w, a.out_c), (b.out_h, b.out_w, b.out_c));
+                assert_eq!(a.conv_t, b.conv_t);
+            }
+        }
+    }
+
+    #[test]
+    fn import_errors_are_descriptive() {
+        let missing = parse(r#"{"name": "x", "nodes": [{"kind": "conv", "k": 3}]}"#).unwrap();
+        let err = import_json(&missing).unwrap_err();
+        assert!(err.contains("missing in_h"), "{err}");
+        let badkind = parse(r#"{"name": "x", "nodes": [{"kind": "wat"}]}"#).unwrap();
+        assert!(import_json(&badkind).unwrap_err().contains("unknown kind"));
+        let orphan_bn = parse(r#"{"name": "x", "nodes": [{"kind": "batch_norm"}]}"#).unwrap();
+        assert!(import_json(&orphan_bn).unwrap_err().contains("before any layer"));
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = crate::util::tmp::TempDir::new("import");
+        let p = dir.path().join("m.flexpie.json");
+        export_json(&super::super::zoo::edgenet(16)).save(&p).unwrap();
+        let (model, _) = load(&p).unwrap();
+        assert_eq!(model.n_layers(), 9);
+    }
+}

@@ -1,0 +1,345 @@
+//! Graph IR for inference models.
+//!
+//! FlexPie consumes a *computation graph* as its intermediate input (paper
+//! §3.1). The planner only needs per-layer **metadata** — shapes, kernel
+//! geometry, convolution type — so the IR is a linearized chain of
+//! [`LayerMeta`] (the paper treats models as layer sequences `L0..Ln`;
+//! residual edges are folded into their tail convolution by the
+//! pre-optimization passes in [`passes`], mirroring how Xenos fuses
+//! element-wise ops into their producers).
+//!
+//! Spatial coordinates are `(h, w, c)`; dense/matmul layers are embedded in
+//! the same coordinate algebra with `h = rows (tokens)`, `w = 1`,
+//! `c = features`, which lets the partition geometry in [`crate::partition`]
+//! treat every layer uniformly.
+
+pub mod import;
+pub mod passes;
+pub mod zoo;
+
+
+/// Convolution (op) type — the `ConvT` categorical feature of the paper's
+/// cost-estimator feature vector (Fig 4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ConvType {
+    /// Standard dense convolution (`K×K×InC` per output channel).
+    Standard,
+    /// Depthwise convolution (MobileNet): one `K×K` filter per channel.
+    Depthwise,
+    /// Pointwise (`1×1`) convolution.
+    Pointwise,
+    /// Fully-connected / generic matmul (`rows × in_c → rows × out_c`).
+    Dense,
+    /// Attention-style matmul whose output rows depend on **all** input rows
+    /// (e.g. `QKᵀ`, `softmax(QKᵀ)V`). Forces a full gather when row-split.
+    Attention,
+    /// Spatial pooling (max/avg).
+    Pool,
+}
+
+impl ConvType {
+    /// Categorical code fed to the cost estimators.
+    pub fn code(self) -> f64 {
+        match self {
+            ConvType::Standard => 0.0,
+            ConvType::Depthwise => 1.0,
+            ConvType::Pointwise => 2.0,
+            ConvType::Dense => 3.0,
+            ConvType::Attention => 4.0,
+            ConvType::Pool => 5.0,
+        }
+    }
+
+    pub const ALL: [ConvType; 6] = [
+        ConvType::Standard,
+        ConvType::Depthwise,
+        ConvType::Pointwise,
+        ConvType::Dense,
+        ConvType::Attention,
+        ConvType::Pool,
+    ];
+}
+
+/// Coarse op family; decides which compute kernel executes the layer and how
+/// channel ranges propagate through [`crate::partition`] region arithmetic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    Conv,
+    Pool,
+    MatMul,
+}
+
+/// Metadata for one model layer — exactly the information the paper's cost
+/// estimator consumes (Fig 4), plus bookkeeping for execution.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerMeta {
+    pub name: String,
+    pub op: OpKind,
+    pub conv_t: ConvType,
+    /// Input feature-map shape.
+    pub in_h: i64,
+    pub in_w: i64,
+    pub in_c: i64,
+    /// Output feature-map shape.
+    pub out_h: i64,
+    pub out_w: i64,
+    pub out_c: i64,
+    /// Kernel size (square), stride, padding. `k=1, s=1, p=0` for matmuls.
+    pub k: i64,
+    pub s: i64,
+    pub p: i64,
+    /// Whether a residual edge terminates at this layer's output (the add is
+    /// fused into the layer by [`passes::fold_residuals`]).
+    pub fused_residual: bool,
+    /// Whether a ReLU/GELU is fused into this layer.
+    pub fused_activation: bool,
+}
+
+impl LayerMeta {
+    /// Standard convolution layer constructor; output shape derived from the
+    /// usual conv arithmetic `out = (in + 2p - k)/s + 1`.
+    pub fn conv(
+        name: impl Into<String>,
+        conv_t: ConvType,
+        in_h: i64,
+        in_w: i64,
+        in_c: i64,
+        out_c: i64,
+        k: i64,
+        s: i64,
+        p: i64,
+    ) -> Self {
+        let out_h = (in_h + 2 * p - k) / s + 1;
+        let out_w = (in_w + 2 * p - k) / s + 1;
+        let op = match conv_t {
+            ConvType::Pool => OpKind::Pool,
+            ConvType::Dense | ConvType::Attention => OpKind::MatMul,
+            _ => OpKind::Conv,
+        };
+        debug_assert!(
+            conv_t != ConvType::Depthwise || in_c == out_c,
+            "depthwise conv must preserve channel count ({name:?}: {in_c} -> {out_c})",
+            name = name.into()
+        );
+        LayerMeta {
+            name: name.into(),
+            op,
+            conv_t,
+            in_h,
+            in_w,
+            in_c,
+            out_h,
+            out_w,
+            out_c,
+            k,
+            s,
+            p,
+            fused_residual: false,
+            fused_activation: false,
+        }
+    }
+
+    /// Pooling layer.
+    pub fn pool(name: impl Into<String>, in_h: i64, in_w: i64, c: i64, k: i64, s: i64) -> Self {
+        Self::conv(name, ConvType::Pool, in_h, in_w, c, c, k, s, 0)
+    }
+
+    /// Dense / fully-connected layer over `rows` tokens:
+    /// `(rows × in_f) @ (in_f × out_f)`.
+    pub fn dense(name: impl Into<String>, rows: i64, in_f: i64, out_f: i64) -> Self {
+        LayerMeta {
+            name: name.into(),
+            op: OpKind::MatMul,
+            conv_t: ConvType::Dense,
+            in_h: rows,
+            in_w: 1,
+            in_c: in_f,
+            out_h: rows,
+            out_w: 1,
+            out_c: out_f,
+            k: 1,
+            s: 1,
+            p: 0,
+            fused_residual: false,
+            fused_activation: false,
+        }
+    }
+
+    /// Attention-style matmul: output rows depend on all input rows.
+    pub fn attention(name: impl Into<String>, rows: i64, in_f: i64, out_f: i64) -> Self {
+        let mut l = Self::dense(name, rows, in_f, out_f);
+        l.conv_t = ConvType::Attention;
+        l
+    }
+
+    /// FLOPs to produce **one output element** of this layer (multiply+add
+    /// counted as 2). Used by both the analytic cost model and the partition
+    /// cost accounting (inflated NT tiles multiply this by tile volume).
+    pub fn flops_per_out_elem(&self) -> f64 {
+        let k2 = (self.k * self.k) as f64;
+        match self.conv_t {
+            ConvType::Standard => 2.0 * k2 * self.in_c as f64,
+            ConvType::Depthwise => 2.0 * k2,
+            ConvType::Pointwise => 2.0 * self.in_c as f64,
+            ConvType::Dense | ConvType::Attention => 2.0 * self.in_c as f64,
+            ConvType::Pool => k2,
+        }
+    }
+
+    /// Total FLOPs for the full (unpartitioned) layer.
+    pub fn flops(&self) -> f64 {
+        self.flops_per_out_elem() * self.out_volume() as f64
+    }
+
+    pub fn in_volume(&self) -> i64 {
+        self.in_h * self.in_w * self.in_c
+    }
+
+    pub fn out_volume(&self) -> i64 {
+        self.out_h * self.out_w * self.out_c
+    }
+
+    /// Parameter count (weights) of this layer.
+    pub fn params(&self) -> i64 {
+        match self.conv_t {
+            ConvType::Standard => self.k * self.k * self.in_c * self.out_c,
+            ConvType::Depthwise => self.k * self.k * self.out_c,
+            ConvType::Pointwise => self.in_c * self.out_c,
+            ConvType::Dense | ConvType::Attention => self.in_c * self.out_c,
+            ConvType::Pool => 0,
+        }
+    }
+
+    /// True when the layer's output element `(h, w)` depends only on a local
+    /// input window (convolution-like); false when it depends on all rows
+    /// (attention). Local layers admit spatial (InH/InW/2D-grid) partitioning
+    /// without full gathers.
+    pub fn is_spatially_local(&self) -> bool {
+        self.conv_t != ConvType::Attention
+    }
+}
+
+/// A model: a named chain of layers with validated shape compatibility.
+#[derive(Debug, Clone)]
+pub struct Model {
+    pub name: String,
+    pub layers: Vec<LayerMeta>,
+}
+
+impl Model {
+    /// Build a model, validating that consecutive layer shapes match.
+    pub fn new(name: impl Into<String>, layers: Vec<LayerMeta>) -> Self {
+        let m = Model { name: name.into(), layers };
+        m.validate().expect("invalid model");
+        m
+    }
+
+    /// Check inter-layer shape compatibility.
+    pub fn validate(&self) -> Result<(), String> {
+        for (i, pair) in self.layers.windows(2).enumerate() {
+            let (a, b) = (&pair[0], &pair[1]);
+            if (a.out_h, a.out_w, a.out_c) != (b.in_h, b.in_w, b.in_c) {
+                return Err(format!(
+                    "{}: layer {} ({}) out {}x{}x{} != layer {} ({}) in {}x{}x{}",
+                    self.name, i, a.name, a.out_h, a.out_w, a.out_c, i + 1, b.name, b.in_h,
+                    b.in_w, b.in_c
+                ));
+            }
+        }
+        for (i, l) in self.layers.iter().enumerate() {
+            if l.in_h <= 0 || l.in_w <= 0 || l.in_c <= 0 || l.out_h <= 0 || l.out_w <= 0
+                || l.out_c <= 0
+            {
+                return Err(format!("{}: layer {} ({}) has non-positive dims", self.name, i, l.name));
+            }
+            if l.k <= 0 || l.s <= 0 || l.p < 0 {
+                return Err(format!("{}: layer {} ({}) has invalid k/s/p", self.name, i, l.name));
+            }
+        }
+        Ok(())
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Total FLOPs for one inference.
+    pub fn total_flops(&self) -> f64 {
+        self.layers.iter().map(|l| l.flops()).sum()
+    }
+
+    /// Total parameter count.
+    pub fn total_params(&self) -> i64 {
+        self.layers.iter().map(|l| l.params()).sum()
+    }
+
+    /// Truncate to the first `n` layers (used by the Thm-1 brute-force tests
+    /// and micro-benches).
+    pub fn truncated(&self, n: usize) -> Model {
+        Model {
+            name: format!("{}[..{}]", self.name, n),
+            layers: self.layers[..n.min(self.layers.len())].to_vec(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_shape_arithmetic() {
+        let l = LayerMeta::conv("c", ConvType::Standard, 224, 224, 3, 32, 3, 2, 1);
+        assert_eq!((l.out_h, l.out_w, l.out_c), (112, 112, 32));
+    }
+
+    #[test]
+    fn conv_same_padding_preserves_shape() {
+        let l = LayerMeta::conv("c", ConvType::Standard, 56, 56, 64, 64, 3, 1, 1);
+        assert_eq!((l.out_h, l.out_w), (56, 56));
+    }
+
+    #[test]
+    fn flops_standard_conv() {
+        let l = LayerMeta::conv("c", ConvType::Standard, 8, 8, 4, 16, 3, 1, 1);
+        // 2 * 3*3*4 per out elem, 8*8*16 out elems
+        assert_eq!(l.flops(), 2.0 * 36.0 * (8 * 8 * 16) as f64);
+    }
+
+    #[test]
+    fn flops_depthwise_much_cheaper_than_standard() {
+        let dw = LayerMeta::conv("dw", ConvType::Depthwise, 56, 56, 128, 128, 3, 1, 1);
+        let st = LayerMeta::conv("st", ConvType::Standard, 56, 56, 128, 128, 3, 1, 1);
+        assert!(dw.flops() * 64.0 < st.flops());
+    }
+
+    #[test]
+    fn dense_embedding_in_spatial_coords() {
+        let l = LayerMeta::dense("fc", 128, 768, 3072);
+        assert_eq!((l.in_h, l.in_w, l.in_c), (128, 1, 768));
+        assert_eq!((l.out_h, l.out_w, l.out_c), (128, 1, 3072));
+        assert_eq!(l.flops(), 2.0 * 768.0 * (128 * 3072) as f64);
+    }
+
+    #[test]
+    fn model_validation_rejects_shape_mismatch() {
+        let a = LayerMeta::conv("a", ConvType::Standard, 32, 32, 3, 16, 3, 1, 1);
+        let b = LayerMeta::conv("b", ConvType::Standard, 32, 32, 8, 16, 3, 1, 1);
+        let m = Model { name: "bad".into(), layers: vec![a, b] };
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn attention_is_not_spatially_local() {
+        assert!(!LayerMeta::attention("qk", 128, 768, 128).is_spatially_local());
+        assert!(LayerMeta::dense("fc", 128, 768, 768).is_spatially_local());
+    }
+
+    #[test]
+    fn truncated_keeps_prefix() {
+        let m = zoo::mobilenet_v1(224, 1000);
+        let t = m.truncated(5);
+        assert_eq!(t.n_layers(), 5);
+        assert_eq!(t.layers[..], m.layers[..5]);
+    }
+}

@@ -1,0 +1,191 @@
+//! Pre-optimization passes (paper §3.1: "FlexPie also integrates
+//! pre-optimization strategies from Xenos to optimize [the] computation graph
+//! before it is fed into the automatic optimizer").
+//!
+//! Xenos' dataflow-centric rewrites that matter for partition planning are
+//! the ones that change the *layer chain* the planner sees:
+//!
+//! * **BN folding** — batch-norm scales/shifts fold into the preceding conv's
+//!   weights, removing the BN node entirely.
+//! * **Activation fusion** — element-wise activations fuse into their
+//!   producer (marked `fused_activation`).
+//! * **Residual folding** — the residual add fuses into the tail conv of its
+//!   block (marked `fused_residual`).
+//! * **Dead-layer elimination** — layers whose output feeds nothing.
+//!
+//! The zoo emits post-pass chains directly, but the passes are exercised (and
+//! tested) against a "raw" graph form that still contains BN / activation /
+//! add nodes, to mirror the paper's import path.
+
+use super::{ConvType, LayerMeta, Model, OpKind};
+
+/// A raw imported node — the pre-pass graph form (a strict superset of the
+/// planner IR: it still contains element-wise nodes).
+#[derive(Debug, Clone, PartialEq)]
+pub enum RawNode {
+    Layer(LayerMeta),
+    /// Batch normalization over `c` channels of an `h×w×c` map.
+    BatchNorm { h: i64, w: i64, c: i64 },
+    /// Element-wise activation (ReLU/GELU/...).
+    Activation { h: i64, w: i64, c: i64 },
+    /// Residual add joining the current value with a skip edge started
+    /// `from_offset` nodes earlier.
+    ResidualAdd { h: i64, w: i64, c: i64 },
+    /// A node with no consumers (e.g. an auxiliary head dropped at export).
+    Dead,
+}
+
+/// Raw graph: a chain of nodes as imported from a training framework.
+#[derive(Debug, Clone)]
+pub struct RawGraph {
+    pub name: String,
+    pub nodes: Vec<RawNode>,
+}
+
+/// Statistics reported by [`preoptimize`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PassStats {
+    pub bn_folded: usize,
+    pub activations_fused: usize,
+    pub residuals_folded: usize,
+    pub dead_eliminated: usize,
+}
+
+/// Run the full pre-optimization pipeline, producing the planner-ready
+/// [`Model`] chain plus rewrite statistics.
+pub fn preoptimize(graph: &RawGraph) -> (Model, PassStats) {
+    let mut stats = PassStats::default();
+    let mut layers: Vec<LayerMeta> = Vec::new();
+
+    for node in &graph.nodes {
+        match node {
+            RawNode::Layer(l) => layers.push(l.clone()),
+            RawNode::BatchNorm { h, w, c } => {
+                // Fold into the producing layer; shape must match its output.
+                let prev = layers
+                    .last_mut()
+                    .unwrap_or_else(|| panic!("{}: BN with no producer", graph.name));
+                assert_eq!(
+                    (prev.out_h, prev.out_w, prev.out_c),
+                    (*h, *w, *c),
+                    "{}: BN shape mismatch after {}",
+                    graph.name,
+                    prev.name
+                );
+                stats.bn_folded += 1;
+            }
+            RawNode::Activation { h, w, c } => {
+                let prev = layers
+                    .last_mut()
+                    .unwrap_or_else(|| panic!("{}: activation with no producer", graph.name));
+                assert_eq!((prev.out_h, prev.out_w, prev.out_c), (*h, *w, *c));
+                prev.fused_activation = true;
+                stats.activations_fused += 1;
+            }
+            RawNode::ResidualAdd { h, w, c } => {
+                let prev = layers
+                    .last_mut()
+                    .unwrap_or_else(|| panic!("{}: residual add with no producer", graph.name));
+                assert_eq!((prev.out_h, prev.out_w, prev.out_c), (*h, *w, *c));
+                prev.fused_residual = true;
+                stats.residuals_folded += 1;
+            }
+            RawNode::Dead => {
+                stats.dead_eliminated += 1;
+            }
+        }
+    }
+
+    (Model::new(graph.name.clone(), layers), stats)
+}
+
+/// Build the raw (pre-pass) form of a simple conv→BN→ReLU stack — used by
+/// tests and by the `flexpie zoo --raw` demo path.
+pub fn raw_conv_bn_relu_chain(name: &str, n: usize, h: i64, c: i64) -> RawGraph {
+    let mut nodes = Vec::new();
+    let mut in_c = 3;
+    for i in 0..n {
+        let l = LayerMeta::conv(format!("c{i}"), ConvType::Standard, h, h, in_c, c, 3, 1, 1);
+        let (oh, ow, oc) = (l.out_h, l.out_w, l.out_c);
+        nodes.push(RawNode::Layer(l));
+        nodes.push(RawNode::BatchNorm { h: oh, w: ow, c: oc });
+        nodes.push(RawNode::Activation { h: oh, w: ow, c: oc });
+        in_c = c;
+    }
+    RawGraph { name: name.into(), nodes }
+}
+
+/// Sanity pass run on every model before planning: shape chain validity plus
+/// planner-relevant invariants (final layer present, no zero-volume layers).
+pub fn verify_planner_ready(model: &Model) -> Result<(), String> {
+    model.validate()?;
+    if model.layers.is_empty() {
+        return Err(format!("{}: empty model", model.name));
+    }
+    for (i, l) in model.layers.iter().enumerate() {
+        if l.op == OpKind::Conv && l.k > l.in_h + 2 * l.p {
+            return Err(format!("{}: layer {i} kernel exceeds padded input", model.name));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn folds_bn_and_fuses_activation() {
+        let g = raw_conv_bn_relu_chain("t", 3, 16, 8);
+        let (m, stats) = preoptimize(&g);
+        assert_eq!(m.n_layers(), 3);
+        assert_eq!(stats.bn_folded, 3);
+        assert_eq!(stats.activations_fused, 3);
+        assert!(m.layers.iter().all(|l| l.fused_activation));
+    }
+
+    #[test]
+    fn folds_residual_add() {
+        let l1 = LayerMeta::conv("a", ConvType::Standard, 8, 8, 4, 4, 3, 1, 1);
+        let l2 = LayerMeta::conv("b", ConvType::Standard, 8, 8, 4, 4, 3, 1, 1);
+        let g = RawGraph {
+            name: "res".into(),
+            nodes: vec![
+                RawNode::Layer(l1),
+                RawNode::Layer(l2),
+                RawNode::ResidualAdd { h: 8, w: 8, c: 4 },
+            ],
+        };
+        let (m, stats) = preoptimize(&g);
+        assert_eq!(stats.residuals_folded, 1);
+        assert!(m.layers[1].fused_residual);
+        assert!(!m.layers[0].fused_residual);
+    }
+
+    #[test]
+    fn eliminates_dead_nodes() {
+        let l1 = LayerMeta::conv("a", ConvType::Standard, 8, 8, 4, 4, 3, 1, 1);
+        let g = RawGraph { name: "d".into(), nodes: vec![RawNode::Layer(l1), RawNode::Dead] };
+        let (m, stats) = preoptimize(&g);
+        assert_eq!(stats.dead_eliminated, 1);
+        assert_eq!(m.n_layers(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "BN shape mismatch")]
+    fn bn_shape_mismatch_panics() {
+        let l1 = LayerMeta::conv("a", ConvType::Standard, 8, 8, 4, 4, 3, 1, 1);
+        let g = RawGraph {
+            name: "bad".into(),
+            nodes: vec![RawNode::Layer(l1), RawNode::BatchNorm { h: 9, w: 8, c: 4 }],
+        };
+        preoptimize(&g);
+    }
+
+    #[test]
+    fn planner_ready_accepts_zoo() {
+        for m in super::super::zoo::paper_benchmarks() {
+            verify_planner_ready(&m).unwrap();
+        }
+    }
+}

@@ -1,0 +1,409 @@
+//! Network simulator — the SRIO-interconnect substitute.
+//!
+//! The paper's testbed connects 4 TMS320C6678 DSPs over SRIO at 5 Gb/s /
+//! 1 Gb/s / 500 Mb/s, under three communication architectures: Ring-based,
+//! parameter-server (PS)-based and Mesh-based. We model the interconnect at
+//! message level: a boundary exchange is a byte matrix `msgs[a][b]` (from
+//! [`crate::partition::geometry::boundary_messages`]) and the topology turns
+//! it into elapsed time by scheduling the messages over its links:
+//!
+//! * **Mesh** — a dedicated full-duplex link per node pair; a node's TX and
+//!   RX ports serialize their own traffic, so the exchange takes the busiest
+//!   port's time.
+//! * **Ring** — messages travel the shortest arc; each directed ring link
+//!   serializes everything routed through it.
+//! * **PS** — all traffic is relayed through the parameter server (node 0);
+//!   the server's single full-duplex port is the bottleneck.
+//!
+//! Per-message latency models SRIO doorbell + DMA setup cost.
+
+
+/// Communication architecture (the paper's "Arch" categorical feature).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Topology {
+    Ring,
+    /// Parameter-server (star) — node 0 is the server/leader.
+    Ps,
+    Mesh,
+}
+
+impl Topology {
+    pub const ALL: [Topology; 3] = [Topology::Ring, Topology::Ps, Topology::Mesh];
+
+    pub fn code(self) -> f64 {
+        match self {
+            Topology::Ring => 0.0,
+            Topology::Ps => 1.0,
+            Topology::Mesh => 2.0,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Topology::Ring => "Ring",
+            Topology::Ps => "PS",
+            Topology::Mesh => "Mesh",
+        }
+    }
+}
+
+impl std::fmt::Display for Topology {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for Topology {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "ring" => Ok(Topology::Ring),
+            "ps" | "star" => Ok(Topology::Ps),
+            "mesh" => Ok(Topology::Mesh),
+            other => Err(format!("unknown topology {other:?}")),
+        }
+    }
+}
+
+/// Link bandwidth.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Bandwidth {
+    bits_per_sec: f64,
+}
+
+impl Bandwidth {
+    pub fn gbps(g: f64) -> Bandwidth {
+        Bandwidth { bits_per_sec: g * 1e9 }
+    }
+
+    pub fn mbps(m: f64) -> Bandwidth {
+        Bandwidth { bits_per_sec: m * 1e6 }
+    }
+
+    pub fn as_gbps(&self) -> f64 {
+        self.bits_per_sec / 1e9
+    }
+
+    /// Seconds to move `bytes` over one link.
+    pub fn transfer_time(&self, bytes: u64) -> f64 {
+        (bytes as f64 * 8.0) / self.bits_per_sec
+    }
+}
+
+/// Per-device compute profile — the TMS320C6678 substitute. The DSP peaks at
+/// ~128 GFLOP/s (single precision, 8 cores); achievable efficiency varies by
+/// op type (depthwise convs are memory-bound, matmuls near peak), which is
+/// what makes different layers prefer different partition schemes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeviceProfile {
+    /// Peak single-precision throughput, FLOP/s.
+    pub peak_flops: f64,
+    /// Achievable fraction of peak per op family, indexed by
+    /// [`crate::model::ConvType::code`].
+    pub efficiency: [f64; 6],
+    /// Fixed per-layer overhead (kernel launch, DMA descriptor setup), s.
+    pub layer_overhead: f64,
+}
+
+impl Default for DeviceProfile {
+    fn default() -> Self {
+        DeviceProfile {
+            peak_flops: 128e9,
+            // Standard, Depthwise, Pointwise, Dense, Attention, Pool
+            efficiency: [0.55, 0.12, 0.50, 0.70, 0.60, 0.08],
+            layer_overhead: 20e-6,
+        }
+    }
+}
+
+impl DeviceProfile {
+    /// Seconds for this device to execute `flops` of op family `conv_t`.
+    pub fn compute_time(&self, flops: f64, conv_t: crate::model::ConvType) -> f64 {
+        if flops <= 0.0 {
+            // A node with an empty tile still pays the sync barrier, not the
+            // launch overhead.
+            return 0.0;
+        }
+        let eff = self.efficiency[conv_t.code() as usize];
+        flops / (self.peak_flops * eff) + self.layer_overhead
+    }
+}
+
+/// A testbed: the cluster specification the planner adapts to.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Testbed {
+    pub nodes: usize,
+    pub topology: Topology,
+    pub bandwidth: Bandwidth,
+    /// Per-message latency (doorbell + DMA setup), seconds.
+    pub latency: f64,
+    pub device: DeviceProfile,
+    /// Per-node relative speed factors (1.0 = profile speed). Length must be
+    /// `nodes`; heterogeneous clusters are an ablation.
+    pub speed: Vec<f64>,
+}
+
+impl Testbed {
+    pub fn new(nodes: usize, topology: Topology, bandwidth: Bandwidth) -> Testbed {
+        assert!(nodes >= 1 && nodes <= 16, "edge clusters are small (got {nodes})");
+        Testbed {
+            nodes,
+            topology,
+            bandwidth,
+            latency: 5e-6,
+            device: DeviceProfile::default(),
+            speed: vec![1.0; nodes],
+        }
+    }
+
+    pub fn with_speed(mut self, speed: Vec<f64>) -> Testbed {
+        assert_eq!(speed.len(), self.nodes);
+        self.speed = speed;
+        self
+    }
+
+    /// Elapsed time for the boundary exchange described by the byte matrix
+    /// `msgs[a*nodes+b]` under this testbed's topology.
+    pub fn exchange_time(&self, msgs: &[u64]) -> f64 {
+        let n = self.nodes;
+        debug_assert_eq!(msgs.len(), n * n);
+        if msgs.iter().all(|&m| m == 0) {
+            return 0.0;
+        }
+        match self.topology {
+            Topology::Mesh => self.mesh_time(msgs),
+            Topology::Ring => self.ring_time(msgs),
+            Topology::Ps => self.ps_time(msgs),
+        }
+    }
+
+    /// Mesh: per-node TX/RX port serialization; latency per distinct message
+    /// on the busiest port.
+    fn mesh_time(&self, msgs: &[u64]) -> f64 {
+        let n = self.nodes;
+        let mut best: f64 = 0.0;
+        for node in 0..n {
+            let (mut tx, mut rx) = (0u64, 0u64);
+            let (mut tx_msgs, mut rx_msgs) = (0u64, 0u64);
+            for other in 0..n {
+                let out = msgs[node * n + other];
+                let inc = msgs[other * n + node];
+                tx += out;
+                rx += inc;
+                tx_msgs += (out > 0) as u64;
+                rx_msgs += (inc > 0) as u64;
+            }
+            let t_tx = self.bandwidth.transfer_time(tx) + self.latency * tx_msgs as f64;
+            let t_rx = self.bandwidth.transfer_time(rx) + self.latency * rx_msgs as f64;
+            best = best.max(t_tx).max(t_rx);
+        }
+        best
+    }
+
+    /// Ring: route each message along the shorter arc; every directed link
+    /// serializes the bytes routed through it.
+    fn ring_time(&self, msgs: &[u64]) -> f64 {
+        let n = self.nodes;
+        // link_cw[i]: i -> (i+1)%n ; link_ccw[i]: i -> (i-1+n)%n
+        let mut link_cw = vec![0u64; n];
+        let mut link_ccw = vec![0u64; n];
+        let mut msgs_cw = vec![0u64; n];
+        let mut msgs_ccw = vec![0u64; n];
+        let mut max_hops = 0u64;
+        for a in 0..n {
+            for b in 0..n {
+                let bytes = msgs[a * n + b];
+                if bytes == 0 || a == b {
+                    continue;
+                }
+                let fwd = ((b + n) - a) % n; // hops clockwise
+                let bwd = n - fwd; // hops counter-clockwise
+                if fwd <= bwd {
+                    max_hops = max_hops.max(fwd as u64);
+                    let mut cur = a;
+                    for _ in 0..fwd {
+                        link_cw[cur] += bytes;
+                        msgs_cw[cur] += 1;
+                        cur = (cur + 1) % n;
+                    }
+                } else {
+                    max_hops = max_hops.max(bwd as u64);
+                    let mut cur = a;
+                    for _ in 0..bwd {
+                        link_ccw[cur] += bytes;
+                        msgs_ccw[cur] += 1;
+                        cur = (cur + n - 1) % n;
+                    }
+                }
+            }
+        }
+        let mut busiest = 0.0f64;
+        for i in 0..n {
+            busiest = busiest
+                .max(self.bandwidth.transfer_time(link_cw[i]) + self.latency * msgs_cw[i] as f64)
+                .max(self.bandwidth.transfer_time(link_ccw[i]) + self.latency * msgs_ccw[i] as f64);
+        }
+        busiest
+    }
+
+    /// PS: messages not touching the server are relayed (a→0, 0→b); the
+    /// server's full-duplex port serializes all inbound and all outbound
+    /// bytes independently; leaf ports can also bottleneck.
+    fn ps_time(&self, msgs: &[u64]) -> f64 {
+        let n = self.nodes;
+        let (mut srv_in, mut srv_out) = (0u64, 0u64);
+        let (mut srv_in_msgs, mut srv_out_msgs) = (0u64, 0u64);
+        let mut leaf_tx = vec![0u64; n];
+        let mut leaf_rx = vec![0u64; n];
+        for a in 0..n {
+            for b in 0..n {
+                let bytes = msgs[a * n + b];
+                if bytes == 0 || a == b {
+                    continue;
+                }
+                if a != 0 {
+                    srv_in += bytes;
+                    srv_in_msgs += 1;
+                    leaf_tx[a] += bytes;
+                }
+                if b != 0 {
+                    srv_out += bytes;
+                    srv_out_msgs += 1;
+                    leaf_rx[b] += bytes;
+                }
+            }
+        }
+        let t_srv = self
+            .bandwidth
+            .transfer_time(srv_in)
+            .max(self.bandwidth.transfer_time(srv_out))
+            + self.latency * (srv_in_msgs.max(srv_out_msgs)) as f64;
+        let t_leaf = (0..n)
+            .map(|i| {
+                self.bandwidth
+                    .transfer_time(leaf_tx[i])
+                    .max(self.bandwidth.transfer_time(leaf_rx[i]))
+            })
+            .fold(0.0f64, f64::max);
+        t_srv.max(t_leaf)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn msgs(n: usize, entries: &[(usize, usize, u64)]) -> Vec<u64> {
+        let mut m = vec![0u64; n * n];
+        for &(a, b, bytes) in entries {
+            m[a * n + b] = bytes;
+        }
+        m
+    }
+
+    #[test]
+    fn bandwidth_units() {
+        assert!((Bandwidth::gbps(5.0).transfer_time(625_000_000) - 1.0).abs() < 1e-9);
+        assert!((Bandwidth::mbps(500.0).as_gbps() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_exchange_is_free() {
+        let tb = Testbed::new(4, Topology::Ring, Bandwidth::gbps(5.0));
+        assert_eq!(tb.exchange_time(&vec![0; 16]), 0.0);
+    }
+
+    #[test]
+    fn mesh_parallelizes_disjoint_pairs() {
+        let tb = Testbed::new(4, Topology::Mesh, Bandwidth::gbps(1.0));
+        // 0->1 and 2->3 in parallel
+        let m = msgs(4, &[(0, 1, 1_000_000), (2, 3, 1_000_000)]);
+        let t = tb.exchange_time(&m);
+        let single = tb.exchange_time(&msgs(4, &[(0, 1, 1_000_000)]));
+        assert!((t - single).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ps_serializes_through_server() {
+        let bw = Bandwidth::gbps(1.0);
+        let mesh = Testbed::new(4, Topology::Mesh, bw);
+        let ps = Testbed::new(4, Topology::Ps, bw);
+        // leaf-to-leaf traffic: PS must relay both through node 0
+        let m = msgs(4, &[(1, 2, 1_000_000), (3, 1, 1_000_000)]);
+        assert!(ps.exchange_time(&m) > 1.9 * mesh.exchange_time(&m));
+    }
+
+    #[test]
+    fn ring_neighbor_exchange_is_cheap() {
+        let bw = Bandwidth::gbps(1.0);
+        let ring = Testbed::new(4, Topology::Ring, bw);
+        // neighbor halo pattern: i <-> i+1
+        let m = msgs(
+            4,
+            &[(0, 1, 1_000), (1, 0, 1_000), (1, 2, 1_000), (2, 1, 1_000), (2, 3, 1_000), (3, 2, 1_000)],
+        );
+        // each link carries exactly one message per direction
+        let expect = bw.transfer_time(1_000) + ring.latency;
+        assert!((ring.exchange_time(&m) - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn allgather_topology_ordering() {
+        // All-to-all (OutC gather pattern): under per-port serialization the
+        // 4-ring ties the mesh (3 MB through the busiest cw link vs 3 MB out
+        // of one mesh port); the PS relay is strictly worse, and a larger
+        // ring falls behind the mesh (longer shortest arcs).
+        let bw = Bandwidth::gbps(1.0);
+        let all2all = |n: usize| {
+            let mut m = vec![0u64; n * n];
+            for a in 0..n {
+                for b in 0..n {
+                    if a != b {
+                        m[a * n + b] = 1_000_000;
+                    }
+                }
+            }
+            m
+        };
+        let m4 = all2all(4);
+        let ring = Testbed::new(4, Topology::Ring, bw).exchange_time(&m4);
+        let mesh = Testbed::new(4, Topology::Mesh, bw).exchange_time(&m4);
+        let ps = Testbed::new(4, Topology::Ps, bw).exchange_time(&m4);
+        assert!(ring >= mesh);
+        assert!(ps > mesh);
+        let m6 = all2all(6);
+        let ring6 = Testbed::new(6, Topology::Ring, bw).exchange_time(&m6);
+        let mesh6 = Testbed::new(6, Topology::Mesh, bw).exchange_time(&m6);
+        assert!(ring6 > mesh6);
+    }
+
+    #[test]
+    fn ring_uses_shortest_arc() {
+        let bw = Bandwidth::gbps(1.0);
+        let ring = Testbed::new(6, Topology::Ring, bw);
+        // 0 -> 5 is one hop counter-clockwise, not five clockwise
+        let m = msgs(6, &[(0, 5, 1_000_000)]);
+        let expect = bw.transfer_time(1_000_000) + ring.latency;
+        assert!((ring.exchange_time(&m) - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn device_profile_ordering() {
+        let d = DeviceProfile::default();
+        use crate::model::ConvType::*;
+        // same flops: depthwise slower than standard slower than dense
+        let f = 1e9;
+        assert!(d.compute_time(f, Depthwise) > d.compute_time(f, Standard));
+        assert!(d.compute_time(f, Standard) > d.compute_time(f, Dense));
+        assert_eq!(d.compute_time(0.0, Standard), 0.0);
+    }
+
+    #[test]
+    fn bandwidth_sweep_monotone() {
+        let m = msgs(4, &[(0, 1, 10_000_000)]);
+        let t5 = Testbed::new(4, Topology::Ring, Bandwidth::gbps(5.0)).exchange_time(&m);
+        let t1 = Testbed::new(4, Topology::Ring, Bandwidth::gbps(1.0)).exchange_time(&m);
+        let t05 = Testbed::new(4, Topology::Ring, Bandwidth::mbps(500.0)).exchange_time(&m);
+        assert!(t5 < t1 && t1 < t05);
+    }
+}

@@ -1,0 +1,373 @@
+//! Tile geometry: canonical per-node output tiles for each scheme, input
+//! region arithmetic (receptive fields), and boundary message matrices.
+//!
+//! These functions are the single source of truth for "who holds what" and
+//! "who needs what" — the analytic cost model, the trace generator, the DPP
+//! feature extraction and the real-numerics execution engine all consume the
+//! same geometry, so a plan that is estimated is exactly the plan that is
+//! executed.
+
+use super::{Region, Scheme, Tile};
+use crate::model::{ConvType, LayerMeta};
+
+/// Split `len` into `n` near-even contiguous parts; parts `0..len%n` get one
+/// extra element (so part sizes differ by at most 1). Returns the half-open
+/// range of part `i`.
+pub fn split_even(len: i64, n: i64, i: i64) -> (i64, i64) {
+    debug_assert!(n > 0 && i >= 0 && i < n);
+    let base = len / n;
+    let rem = len % n;
+    let start = i * base + i.min(rem);
+    let extra = if i < rem { 1 } else { 0 };
+    (start, start + base + extra)
+}
+
+/// Grid dimensions `(gh, gw)` for the 2D-grid scheme on `n` nodes.
+///
+/// `gw = ⌈√n⌉`, `gh = ⌈n/gw⌉`; the grid may have more cells than nodes
+/// (3 nodes → 2×2 grid → one node owns two cells and does ~2× the work),
+/// which is exactly the imbalance the paper observes on the 3-node testbed.
+pub fn grid_dims(n: usize) -> (i64, i64) {
+    let gw = (n as f64).sqrt().ceil() as i64;
+    let gh = (n as i64 + gw - 1) / gw;
+    (gh, gw)
+}
+
+/// Canonical output tile of `node` for `layer` under `scheme` with `nodes`
+/// devices. Tiles across nodes are disjoint and partition the output space
+/// (modulo empty tiles when a dimension is smaller than the split count).
+pub fn out_tile(layer: &LayerMeta, scheme: Scheme, nodes: usize, node: usize) -> Tile {
+    let n = nodes as i64;
+    let i = node as i64;
+    match scheme {
+        Scheme::InH => {
+            let (h0, h1) = split_even(layer.out_h, n, i);
+            vec![Region::new(h0, h1, 0, layer.out_w, 0, layer.out_c)]
+        }
+        Scheme::InW => {
+            let (w0, w1) = split_even(layer.out_w, n, i);
+            vec![Region::new(0, layer.out_h, w0, w1, 0, layer.out_c)]
+        }
+        Scheme::OutC => {
+            let (c0, c1) = split_even(layer.out_c, n, i);
+            vec![Region::new(0, layer.out_h, 0, layer.out_w, c0, c1)]
+        }
+        Scheme::Grid2d => {
+            let (gh, gw) = grid_dims(nodes);
+            let mut tile = Tile::new();
+            for cell in 0..(gh * gw) {
+                if cell % n != i {
+                    continue;
+                }
+                let (r, c) = (cell / gw, cell % gw);
+                let (h0, h1) = split_even(layer.out_h, gh, r);
+                let (w0, w1) = split_even(layer.out_w, gw, c);
+                let reg = Region::new(h0, h1, w0, w1, 0, layer.out_c);
+                if !reg.is_empty() {
+                    tile.push(reg);
+                }
+            }
+            tile
+        }
+    }
+}
+
+/// All nodes' canonical tiles for one layer.
+pub fn out_tiles(layer: &LayerMeta, scheme: Scheme, nodes: usize) -> Vec<Tile> {
+    (0..nodes).map(|i| out_tile(layer, scheme, nodes, i)).collect()
+}
+
+/// The input region `layer` needs in order to compute the output region `r`
+/// (receptive-field arithmetic, clamped to the valid input extent — padding
+/// contributes zeros, not transfers).
+pub fn in_region(layer: &LayerMeta, r: &Region) -> Region {
+    if r.is_empty() {
+        return Region::empty();
+    }
+    if layer.conv_t == ConvType::Attention {
+        // Every output row depends on all input rows (e.g. softmax(QKᵀ)V).
+        return Region::full(layer.in_h, layer.in_w, layer.in_c);
+    }
+    let h0 = (r.h0 * layer.s - layer.p).max(0);
+    let h1 = ((r.h1 - 1) * layer.s - layer.p + layer.k).min(layer.in_h);
+    let w0 = (r.w0 * layer.s - layer.p).max(0);
+    let w1 = ((r.w1 - 1) * layer.s - layer.p + layer.k).min(layer.in_w);
+    let (c0, c1) = match layer.conv_t {
+        // Channel-preserving ops: input channel range mirrors the output's.
+        ConvType::Depthwise | ConvType::Pool => (r.c0, r.c1),
+        // Dense / standard / pointwise: every output channel reads all input
+        // channels.
+        _ => (0, layer.in_c),
+    };
+    Region { h0, h1, w0, w1, c0, c1 }
+}
+
+/// Input regions needed for a whole tile.
+pub fn in_regions(layer: &LayerMeta, tile: &Tile) -> Tile {
+    tile.iter().map(|r| in_region(layer, r)).filter(|r| !r.is_empty()).collect()
+}
+
+/// Byte matrix `msgs[a*nodes + b]` = bytes node `a` must send node `b` so
+/// that every node `b` obtains `need[b]`, given node `a` currently holds
+/// `have[a]`. `have` tiles must be disjoint across nodes (canonical tiles
+/// are); data a node already holds is never transferred.
+pub fn boundary_messages(have: &[Tile], need: &[Tile], elem_bytes: u64) -> Vec<u64> {
+    let nodes = have.len();
+    debug_assert_eq!(need.len(), nodes);
+    let mut msgs = vec![0u64; nodes * nodes];
+    for b in 0..nodes {
+        for a in 0..nodes {
+            if a == b {
+                continue;
+            }
+            let vol = super::intersection_volume(&have[a], &need[b]);
+            msgs[a * nodes + b] = vol as u64 * elem_bytes;
+        }
+    }
+    msgs
+}
+
+/// Message matrix for the initial input scatter: the leader (node 0) holds
+/// the whole input; every other node receives the input region its first
+/// tile requires.
+pub fn scatter_messages(layer0: &LayerMeta, need: &[Tile], elem_bytes: u64) -> Vec<u64> {
+    let nodes = need.len();
+    let full = vec![Region::full(layer0.in_h, layer0.in_w, layer0.in_c)];
+    let mut msgs = vec![0u64; nodes * nodes];
+    for (b, nb) in need.iter().enumerate().skip(1) {
+        msgs[b] = super::intersection_volume(&full, nb) as u64 * elem_bytes; // 0 -> b
+    }
+    msgs
+}
+
+/// Message matrix for the final gather: every node ships its output tile to
+/// the leader.
+pub fn gather_messages(tiles: &[Tile], elem_bytes: u64) -> Vec<u64> {
+    let nodes = tiles.len();
+    let mut msgs = vec![0u64; nodes * nodes];
+    for (a, t) in tiles.iter().enumerate().skip(1) {
+        msgs[a * nodes] = super::union_volume(t) as u64 * elem_bytes; // a -> 0
+    }
+    msgs
+}
+
+/// The bottleneck (maximum) per-node output volume under a scheme — drives
+/// the compute imbalance effects of §4 (e.g. 14×14 maps on 4 nodes).
+pub fn bottleneck_out_volume(layer: &LayerMeta, scheme: Scheme, nodes: usize) -> i64 {
+    (0..nodes)
+        .map(|i| super::union_volume(&out_tile(layer, scheme, nodes, i)))
+        .max()
+        .unwrap_or(0)
+}
+
+/// Compute imbalance factor: bottleneck volume / ideal even share.
+pub fn imbalance(layer: &LayerMeta, scheme: Scheme, nodes: usize) -> f64 {
+    let bottleneck = bottleneck_out_volume(layer, scheme, nodes) as f64;
+    let ideal = layer.out_volume() as f64 / nodes as f64;
+    if ideal == 0.0 {
+        1.0
+    } else {
+        bottleneck / ideal
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{ConvType, LayerMeta};
+    use crate::partition::union_volume;
+
+    fn conv(h: i64, c_in: i64, c_out: i64, k: i64, s: i64, p: i64) -> LayerMeta {
+        LayerMeta::conv("t", ConvType::Standard, h, h, c_in, c_out, k, s, p)
+    }
+
+    #[test]
+    fn split_even_covers_exactly() {
+        for len in [1i64, 7, 14, 56, 224] {
+            for n in 1..=6i64 {
+                let mut covered = 0;
+                let mut prev_end = 0;
+                for i in 0..n {
+                    let (s, e) = split_even(len, n, i);
+                    assert_eq!(s, prev_end);
+                    assert!(e - s >= len / n && e - s <= len / n + 1);
+                    covered += e - s;
+                    prev_end = e;
+                }
+                assert_eq!(covered, len);
+            }
+        }
+    }
+
+    #[test]
+    fn grid_dims_match_paper() {
+        assert_eq!(grid_dims(4), (2, 2));
+        assert_eq!(grid_dims(3), (2, 2)); // 4 cells on 3 nodes → imbalance
+        assert_eq!(grid_dims(6), (2, 3));
+        assert_eq!(grid_dims(5), (2, 3));
+        assert_eq!(grid_dims(2), (1, 2));
+    }
+
+    #[test]
+    fn tiles_partition_output_space() {
+        let l = conv(14, 512, 512, 3, 1, 1);
+        for scheme in Scheme::ALL {
+            for nodes in 2..=6 {
+                let tiles = out_tiles(&l, scheme, nodes);
+                let total: i64 = tiles.iter().map(|t| union_volume(t)).sum();
+                assert_eq!(total, l.out_volume(), "{scheme} n={nodes}");
+                // disjointness across nodes
+                for a in 0..nodes {
+                    for b in (a + 1)..nodes {
+                        assert_eq!(
+                            crate::partition::intersection_volume(&tiles[a], &tiles[b]),
+                            0,
+                            "{scheme} n={nodes} tiles {a},{b} overlap"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn grid_3node_has_double_loaded_node() {
+        // Paper §4.2: with 3 nodes the 2D-grid gives one node twice the work.
+        let l = conv(56, 64, 64, 3, 1, 1);
+        let vols: Vec<i64> = (0..3)
+            .map(|i| union_volume(&out_tile(&l, Scheme::Grid2d, 3, i)))
+            .collect();
+        let max = *vols.iter().max().unwrap() as f64;
+        let min = *vols.iter().min().unwrap() as f64;
+        assert!(max / min > 1.9, "vols = {vols:?}");
+    }
+
+    #[test]
+    fn imbalance_14x14_on_4_nodes() {
+        // 14 rows on 4 nodes → 4,4,3,3: bottleneck 4/3.5 ≈ 1.14 for InH;
+        // 2D-grid 7×7 cells are exact → 1.0.
+        let l = conv(14, 512, 512, 3, 1, 1);
+        assert!((imbalance(&l, Scheme::InH, 4) - 4.0 / 3.5).abs() < 1e-9);
+        assert!((imbalance(&l, Scheme::Grid2d, 4) - 1.0).abs() < 1e-9);
+        // OutC: 512 channels split 128 each → perfectly balanced.
+        assert!((imbalance(&l, Scheme::OutC, 4) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn in_region_same_padding() {
+        let l = conv(16, 8, 8, 3, 1, 1);
+        // interior rows need one halo row each side
+        let r = Region::new(4, 8, 0, 16, 0, 8);
+        let ir = in_region(&l, &r);
+        assert_eq!((ir.h0, ir.h1), (3, 9));
+        assert_eq!((ir.w0, ir.w1), (0, 16));
+        assert_eq!((ir.c0, ir.c1), (0, 8));
+        // border rows clamp at the feature-map edge
+        let r0 = Region::new(0, 4, 0, 16, 0, 8);
+        let ir0 = in_region(&l, &r0);
+        assert_eq!((ir0.h0, ir0.h1), (0, 5));
+    }
+
+    #[test]
+    fn in_region_strided() {
+        let l = conv(16, 8, 8, 3, 2, 1);
+        assert_eq!(l.out_h, 8);
+        let r = Region::new(2, 4, 0, 8, 0, 8);
+        let ir = in_region(&l, &r);
+        // rows 2..4 of out need input rows 2*2-1 .. 3*2-1+3 = 3..8
+        assert_eq!((ir.h0, ir.h1), (3, 8));
+    }
+
+    #[test]
+    fn in_region_depthwise_preserves_channels() {
+        let l = LayerMeta::conv("dw", ConvType::Depthwise, 16, 16, 8, 8, 3, 1, 1);
+        let r = Region::new(0, 16, 0, 16, 2, 6);
+        let ir = in_region(&l, &r);
+        assert_eq!((ir.c0, ir.c1), (2, 6));
+    }
+
+    #[test]
+    fn in_region_attention_needs_all_rows() {
+        let l = LayerMeta::attention("att", 128, 768, 128);
+        let r = Region::new(0, 32, 0, 1, 0, 128);
+        let ir = in_region(&l, &r);
+        assert_eq!((ir.h0, ir.h1), (0, 128));
+        assert_eq!((ir.c0, ir.c1), (0, 768));
+    }
+
+    #[test]
+    fn boundary_messages_inh_halo_only() {
+        // Same-scheme InH boundary on a same-padded conv: each node needs one
+        // halo row from each spatial neighbour.
+        let l = conv(16, 8, 8, 3, 1, 1);
+        let nodes = 4;
+        let have = out_tiles(&l, Scheme::InH, nodes);
+        let next = conv(16, 8, 8, 3, 1, 1);
+        let need: Vec<Tile> = (0..nodes)
+            .map(|b| in_regions(&next, &out_tile(&next, Scheme::InH, nodes, b)))
+            .collect();
+        let msgs = boundary_messages(&have, &need, 4);
+        // node1 needs row 3 from node0 and row 8 from node2: 16*8*4 bytes each
+        let row_bytes = 16 * 8 * 4u64;
+        assert_eq!(msgs[0 * nodes + 1], row_bytes);
+        assert_eq!(msgs[2 * nodes + 1], row_bytes);
+        assert_eq!(msgs[3 * nodes + 1], 0);
+        // symmetric: corner nodes receive one halo row only
+        assert_eq!(msgs[1 * nodes + 0], row_bytes);
+        assert_eq!(msgs[2 * nodes + 0], 0);
+    }
+
+    #[test]
+    fn boundary_messages_outc_allgather() {
+        // OutC→anything: each node holds a channel slice of the previous
+        // output; a standard conv next layer needs all channels everywhere.
+        let l = conv(8, 16, 16, 1, 1, 0);
+        let nodes = 4;
+        let have = out_tiles(&l, Scheme::OutC, nodes);
+        let next = LayerMeta::conv("n", ConvType::Pointwise, 8, 8, 16, 32, 1, 1, 0);
+        let need: Vec<Tile> = (0..nodes)
+            .map(|b| in_regions(&next, &out_tile(&next, Scheme::OutC, nodes, b)))
+            .collect();
+        let msgs = boundary_messages(&have, &need, 4);
+        // every node must receive 3/4 of the full map: from each other node,
+        // its full channel slice = 8*8*4 elems
+        for a in 0..nodes {
+            for b in 0..nodes {
+                if a != b {
+                    assert_eq!(msgs[a * nodes + b], 8 * 8 * 4 * 4);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn same_scheme_matmul_rows_no_traffic() {
+        // Row-split dense chains need zero sync (no receptive-field overlap):
+        // BERT's "easy parallelism" (paper §4.1 Limitation).
+        let l = LayerMeta::dense("fc1", 128, 768, 768);
+        let next = LayerMeta::dense("fc2", 128, 768, 768);
+        let nodes = 4;
+        let have = out_tiles(&l, Scheme::InH, nodes);
+        let need: Vec<Tile> = (0..nodes)
+            .map(|b| in_regions(&next, &out_tile(&next, Scheme::InH, nodes, b)))
+            .collect();
+        let msgs = boundary_messages(&have, &need, 4);
+        assert!(msgs.iter().all(|&m| m == 0));
+    }
+
+    #[test]
+    fn scatter_and_gather_shapes() {
+        let l = conv(16, 3, 8, 3, 1, 1);
+        let nodes = 4;
+        let need: Vec<Tile> = (0..nodes)
+            .map(|b| in_regions(&l, &out_tile(&l, Scheme::InH, nodes, b)))
+            .collect();
+        let sc = scatter_messages(&l, &need, 4);
+        assert_eq!(sc[0], 0); // leader keeps its part
+        assert!(sc[1] > 0 && sc[2] > 0 && sc[3] > 0);
+        let tiles = out_tiles(&l, Scheme::InH, nodes);
+        let ga = gather_messages(&tiles, 4);
+        assert_eq!(ga[1 * nodes], (16 / 4) * 16 * 8 * 4);
+        assert_eq!(ga[0], 0);
+    }
+}

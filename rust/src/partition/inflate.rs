@@ -1,0 +1,247 @@
+//! NT-mode tile inflation — the redundant-computation geometry of §2.3/§3.3.
+//!
+//! A *fused block* is a maximal run of layers `i..=j` executed under one
+//! scheme with no inter-node communication inside (`tᵢ..t_{j-1} = NT`,
+//! `t_j = T`). Each node must therefore compute, at every interior layer, an
+//! **inflated** output region: starting from its canonical tile at the block
+//! end, the requirement is propagated backwards through the receptive field
+//! (`req[l] = in_region(layer_{l+1}, req[l+1])`). The deeper the block and
+//! the larger the kernels/strides, the more redundant work — the trade-off
+//! the planner prices via the i-Estimator.
+
+use super::geometry::{in_regions, out_tile};
+use super::{union_volume, Scheme, Tile};
+use crate::model::LayerMeta;
+
+/// Geometry of one fused block for every node.
+#[derive(Debug, Clone)]
+pub struct BlockGeometry {
+    /// `tiles[l][node]` — the (possibly inflated) output regions node `node`
+    /// computes at block layer `l` (index 0 = first layer of the block).
+    /// The last layer's tiles are always the canonical partition.
+    pub tiles: Vec<Vec<Tile>>,
+    /// `entry_need[node]` — the input region of the block's first layer that
+    /// node `node` must hold before the block starts (delivered by the
+    /// preceding T-boundary or the initial scatter).
+    pub entry_need: Vec<Tile>,
+    pub scheme: Scheme,
+    pub nodes: usize,
+}
+
+impl BlockGeometry {
+    /// Compute the geometry of block `layers` (a contiguous sub-slice of the
+    /// model) under `scheme` with `nodes` devices.
+    pub fn new(layers: &[LayerMeta], scheme: Scheme, nodes: usize) -> BlockGeometry {
+        assert!(!layers.is_empty());
+        let n = layers.len();
+        let mut tiles: Vec<Vec<Tile>> = vec![Vec::new(); n];
+        // Block end: canonical tiles.
+        tiles[n - 1] = (0..nodes).map(|i| out_tile(&layers[n - 1], scheme, nodes, i)).collect();
+        // Backward propagation through interior layers.
+        for l in (0..n - 1).rev() {
+            tiles[l] = (0..nodes)
+                .map(|node| in_regions(&layers[l + 1], &tiles[l + 1][node]))
+                .collect();
+        }
+        let entry_need: Vec<Tile> =
+            (0..nodes).map(|node| in_regions(&layers[0], &tiles[0][node])).collect();
+        BlockGeometry { tiles, entry_need, scheme, nodes }
+    }
+
+    /// FLOPs node `node` performs at block layer `l`.
+    pub fn node_flops(&self, layers: &[LayerMeta], l: usize, node: usize) -> f64 {
+        layers[l].flops_per_out_elem() * union_volume(&self.tiles[l][node]) as f64
+    }
+
+    /// Bottleneck (max-over-nodes) FLOPs at block layer `l` — layer
+    /// completion is gated by the slowest node (barrier semantics).
+    pub fn bottleneck_flops(&self, layers: &[LayerMeta], l: usize) -> f64 {
+        (0..self.nodes)
+            .map(|i| self.node_flops(layers, l, i))
+            .fold(0.0, f64::max)
+    }
+
+    /// Total redundant FLOPs across the block: work beyond what a perfect
+    /// non-redundant partition would do.
+    pub fn redundant_flops(&self, layers: &[LayerMeta]) -> f64 {
+        let mut extra = 0.0;
+        for (l, layer) in layers.iter().enumerate() {
+            let done: f64 =
+                (0..self.nodes).map(|i| self.node_flops(layers, l, i)).sum();
+            extra += done - layer.flops();
+        }
+        extra.max(0.0)
+    }
+
+    /// Inflation ratio of layer `l`: computed volume / canonical volume.
+    /// 1.0 at the block end; grows towards the block entry.
+    pub fn inflation(&self, layers: &[LayerMeta], l: usize) -> f64 {
+        let computed: i64 =
+            (0..self.nodes).map(|i| union_volume(&self.tiles[l][i])).sum();
+        let canonical = layers[l].out_volume();
+        if canonical == 0 {
+            1.0
+        } else {
+            computed as f64 / canonical as f64
+        }
+    }
+
+    /// Bottleneck in/out tile dimensions of layer `l` — the hull box of the
+    /// busiest node's tile, used for cost-estimator features.
+    pub fn bottleneck_tile_dims(&self, layers: &[LayerMeta], l: usize) -> TileDims {
+        let busiest = (0..self.nodes)
+            .max_by(|&a, &b| {
+                union_volume(&self.tiles[l][a])
+                    .cmp(&union_volume(&self.tiles[l][b]))
+            })
+            .unwrap_or(0);
+        let out_hull = self.tiles[l][busiest]
+            .iter()
+            .fold(super::Region::empty(), |acc, r| acc.hull(r));
+        let ins = in_regions(&layers[l], &self.tiles[l][busiest]);
+        let in_hull = ins.iter().fold(super::Region::empty(), |acc, r| acc.hull(r));
+        TileDims {
+            in_h: in_hull.h1 - in_hull.h0,
+            in_w: in_hull.w1 - in_hull.w0,
+            in_c: in_hull.c1 - in_hull.c0,
+            out_h: out_hull.h1 - out_hull.h0,
+            out_w: out_hull.w1 - out_hull.w0,
+            out_c: out_hull.c1 - out_hull.c0,
+            out_volume: union_volume(&self.tiles[l][busiest]),
+        }
+    }
+}
+
+/// Hull dimensions of a node's tile (feature-vector input).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TileDims {
+    pub in_h: i64,
+    pub in_w: i64,
+    pub in_c: i64,
+    pub out_h: i64,
+    pub out_w: i64,
+    pub out_c: i64,
+    pub out_volume: i64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{ConvType, LayerMeta};
+
+    fn conv(h: i64, c: i64, k: i64) -> LayerMeta {
+        LayerMeta::conv("t", ConvType::Standard, h, h, c, c, k, 1, (k - 1) / 2)
+    }
+
+    #[test]
+    fn single_layer_block_is_canonical() {
+        let layers = vec![conv(16, 8, 3)];
+        let g = BlockGeometry::new(&layers, Scheme::InH, 4);
+        for node in 0..4 {
+            assert_eq!(g.tiles[0][node], out_tile(&layers[0], Scheme::InH, 4, node));
+        }
+        assert!((g.inflation(&layers, 0) - 1.0).abs() < 1e-12);
+        assert_eq!(g.redundant_flops(&layers), 0.0);
+    }
+
+    #[test]
+    fn two_layer_block_inflates_interior_by_halo() {
+        // Two same-padded 3×3 convs, InH over 4 nodes on a 16-row map:
+        // interior nodes must compute 2 extra rows (one halo row each side)
+        // at the first layer.
+        let layers = vec![conv(16, 8, 3), conv(16, 8, 3)];
+        let g = BlockGeometry::new(&layers, Scheme::InH, 4);
+        // node 1 canonical rows at layer1: 4..8 → needs layer0 out rows 3..9.
+        let t = &g.tiles[0][1];
+        assert_eq!(t.len(), 1);
+        assert_eq!((t[0].h0, t[0].h1), (3, 9));
+        // block end is canonical
+        assert_eq!((g.tiles[1][1][0].h0, g.tiles[1][1][0].h1), (4, 8));
+        assert!(g.redundant_flops(&layers) > 0.0);
+        assert!(g.inflation(&layers, 0) > 1.0);
+    }
+
+    #[test]
+    fn inflation_grows_towards_block_entry() {
+        let layers = vec![conv(32, 8, 3), conv(32, 8, 3), conv(32, 8, 3), conv(32, 8, 3)];
+        let g = BlockGeometry::new(&layers, Scheme::InH, 4);
+        let infl: Vec<f64> = (0..4).map(|l| g.inflation(&layers, l)).collect();
+        assert!(infl[0] > infl[1] && infl[1] > infl[2] && infl[2] > infl[3]);
+        assert!((infl[3] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn entry_need_covers_inflated_first_layer() {
+        let layers = vec![conv(16, 8, 3), conv(16, 8, 3)];
+        let g = BlockGeometry::new(&layers, Scheme::InH, 4);
+        // entry_need = in_region of the inflated first-layer tile
+        for node in 0..4 {
+            let expect = in_regions(&layers[0], &g.tiles[0][node]);
+            assert_eq!(g.entry_need[node], expect);
+        }
+        // node1 inflated rows 3..9 → input rows 2..10
+        assert_eq!((g.entry_need[1][0].h0, g.entry_need[1][0].h1), (2, 10));
+    }
+
+    #[test]
+    fn strided_block_inflation() {
+        // stride-2 conv after a same conv: receptive field grows faster.
+        let l0 = conv(32, 8, 3);
+        let l1 = LayerMeta::conv("s2", ConvType::Standard, 32, 32, 8, 8, 3, 2, 1);
+        let layers = vec![l0, l1];
+        let g = BlockGeometry::new(&layers, Scheme::InH, 4);
+        // layer1 out = 16 rows; node0 rows 0..4 → layer0 rows [0·2-1, 3·2-1+3)
+        // clamped = [0, 8)
+        let t = &g.tiles[0][0];
+        assert_eq!((t[0].h0, t[0].h1), (0, 8));
+    }
+
+    #[test]
+    fn grid_block_multi_rect_tiles() {
+        let layers = vec![conv(14, 16, 3), conv(14, 16, 3)];
+        let g = BlockGeometry::new(&layers, Scheme::Grid2d, 3);
+        // 2×2 grid on 3 nodes: node0 owns two cells, so its inflated tile at
+        // layer0 has two boxes.
+        assert_eq!(g.tiles[0][0].len(), 2);
+        assert!(g.bottleneck_flops(&layers, 0) > g.node_flops(&layers, 0, 1));
+    }
+
+    #[test]
+    fn pointwise_block_no_spatial_inflation() {
+        // 1×1 convs have no halo → NT costs nothing extra spatially.
+        let l0 = LayerMeta::conv("pw0", ConvType::Pointwise, 16, 16, 8, 8, 1, 1, 0);
+        let l1 = LayerMeta::conv("pw1", ConvType::Pointwise, 16, 16, 8, 8, 1, 1, 0);
+        let layers = vec![l0, l1];
+        let g = BlockGeometry::new(&layers, Scheme::InH, 4);
+        assert_eq!(g.redundant_flops(&layers), 0.0);
+    }
+
+    #[test]
+    fn outc_block_recomputes_everything() {
+        // NT under OutC: the next layer needs all input channels, so each
+        // node must recompute the *entire* previous layer — geometrically
+        // legal, economically absurd; the planner prices it out.
+        let l0 = LayerMeta::conv("pw0", ConvType::Pointwise, 8, 8, 16, 16, 1, 1, 0);
+        let l1 = LayerMeta::conv("pw1", ConvType::Pointwise, 8, 8, 16, 16, 1, 1, 0);
+        let layers = vec![l0, l1];
+        let g = BlockGeometry::new(&layers, Scheme::OutC, 4);
+        // each node's layer-0 tile = full map
+        let full = 8 * 8 * 16;
+        for node in 0..4 {
+            assert_eq!(union_volume(&g.tiles[0][node]), full);
+        }
+        assert!((g.inflation(&layers, 0) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bottleneck_tile_dims_sane() {
+        let layers = vec![conv(16, 8, 3)];
+        let g = BlockGeometry::new(&layers, Scheme::InH, 4);
+        let d = g.bottleneck_tile_dims(&layers, 0);
+        assert_eq!(d.out_h, 4);
+        assert_eq!(d.out_w, 16);
+        assert_eq!(d.out_c, 8);
+        assert!(d.in_h >= 4 && d.in_h <= 6); // halo rows included
+        assert_eq!(d.out_volume, 4 * 16 * 8);
+    }
+}

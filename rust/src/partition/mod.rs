@@ -1,0 +1,391 @@
+//! Partition geometry — the paper's §2.1 (partition schemes), §2.3
+//! (computation/communication trade-off) and the NT-mode redundant-compute
+//! inflation that underlies layer fusion.
+//!
+//! Everything is expressed over half-open 3-D boxes ([`Region`]) in a layer's
+//! `(h, w, c)` output coordinate space. A node's share of a layer is a
+//! [`Tile`] — a set of disjoint boxes (a single box for One-dim schemes; up
+//! to ⌈cells/nodes⌉ boxes for 2D-grid when the grid has more cells than
+//! nodes, which is exactly how the paper's 3-node 2D-grid imbalance arises).
+
+pub mod geometry;
+pub mod inflate;
+
+
+/// Partition scheme — the paper's Step-1 choice, `pᵢ ∈ {InH, InW, OutC,
+/// 2D-grid}` (Fig 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Scheme {
+    /// Split along the feature-map height.
+    InH,
+    /// Split along the feature-map width.
+    InW,
+    /// Split along output channels.
+    OutC,
+    /// Split along both height and width (load-balance grid).
+    Grid2d,
+}
+
+impl Scheme {
+    pub const ALL: [Scheme; 4] = [Scheme::InH, Scheme::InW, Scheme::OutC, Scheme::Grid2d];
+
+    /// Categorical code for the cost-estimator feature vector.
+    pub fn code(self) -> f64 {
+        match self {
+            Scheme::InH => 0.0,
+            Scheme::InW => 1.0,
+            Scheme::OutC => 2.0,
+            Scheme::Grid2d => 3.0,
+        }
+    }
+
+    /// True for schemes that split spatial dimensions (candidates for cheap
+    /// halo-only synchronization and NT fusion).
+    pub fn is_spatial(self) -> bool {
+        !matches!(self, Scheme::OutC)
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Scheme::InH => "InH",
+            Scheme::InW => "InW",
+            Scheme::OutC => "OutC",
+            Scheme::Grid2d => "2D-grid",
+        }
+    }
+}
+
+impl std::fmt::Display for Scheme {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for Scheme {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "inh" => Ok(Scheme::InH),
+            "inw" => Ok(Scheme::InW),
+            "outc" => Ok(Scheme::OutC),
+            "grid" | "2d-grid" | "grid2d" | "2dgrid" => Ok(Scheme::Grid2d),
+            other => Err(format!("unknown scheme {other:?}")),
+        }
+    }
+}
+
+/// Transmission mode — the paper's Step-2 choice, `tᵢ ∈ {T, NT}` (§3.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Mode {
+    /// Transmit: boundary data is exchanged between nodes after this layer.
+    T,
+    /// Non-Transmit: no exchange; earlier layers perform redundant
+    /// computation so the local output already covers the next layer's needs.
+    NT,
+}
+
+impl std::fmt::Display for Mode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Mode::T => "T",
+            Mode::NT => "NT",
+        })
+    }
+}
+
+/// Per-layer decision: the pair `Pᵢ = (pᵢ, tᵢ)` of the paper.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PlanStep {
+    pub scheme: Scheme,
+    pub mode: Mode,
+}
+
+/// A full partition plan: the sequence `S = [P₀ … Pₙ]`.
+///
+/// Invariant: the final step's mode is `T` (the last layer "must be
+/// transmitted after computation" — its output is gathered at the leader),
+/// and within a maximal run of `NT` steps followed by its terminating `T`
+/// step (a *fused block*), every step uses the same scheme (cross-scheme
+/// realignment without transmission is geometrically impossible).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Plan {
+    pub steps: Vec<PlanStep>,
+    /// Cost estimated by the cost source that produced the plan (seconds).
+    pub est_cost: f64,
+}
+
+impl Plan {
+    /// A plan that uses a single scheme for every layer, all-T (the fixed
+    /// baselines of the paper).
+    pub fn uniform(scheme: Scheme, n_layers: usize) -> Plan {
+        let mut steps = vec![PlanStep { scheme, mode: Mode::T }; n_layers];
+        if let Some(last) = steps.last_mut() {
+            last.mode = Mode::T;
+        }
+        Plan { steps, est_cost: f64::NAN }
+    }
+
+    /// Validate the structural invariants (see type docs).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.steps.is_empty() {
+            return Err("empty plan".into());
+        }
+        if self.steps.last().unwrap().mode != Mode::T {
+            return Err("last layer must be T (gathered at leader)".into());
+        }
+        // Within each fused block [i..=j] (NT at i..j-1, T at j), schemes match.
+        let mut block_scheme: Option<Scheme> = None;
+        for (i, st) in self.steps.iter().enumerate() {
+            if let Some(s) = block_scheme {
+                if st.scheme != s {
+                    return Err(format!(
+                        "layer {i}: scheme {} differs from its fused block's scheme {}",
+                        st.scheme, s
+                    ));
+                }
+            }
+            block_scheme = match st.mode {
+                Mode::NT => Some(st.scheme),
+                Mode::T => None,
+            };
+        }
+        Ok(())
+    }
+
+    /// Iterate over the fused blocks of the plan: `(start, end_inclusive,
+    /// scheme)`, where layers `start..end` are NT and layer `end` is T.
+    pub fn blocks(&self) -> Vec<(usize, usize, Scheme)> {
+        let mut out = Vec::new();
+        let mut start = 0usize;
+        for (i, st) in self.steps.iter().enumerate() {
+            if st.mode == Mode::T {
+                out.push((start, i, self.steps[start].scheme));
+                start = i + 1;
+            }
+        }
+        out
+    }
+
+    pub fn n_fused_layers(&self) -> usize {
+        self.steps.iter().filter(|s| s.mode == Mode::NT).count()
+    }
+
+    /// Short human-readable rendering, e.g. `InH·NT InH·T OutC·T`.
+    pub fn render(&self) -> String {
+        self.steps
+            .iter()
+            .map(|s| format!("{}·{}", s.scheme, s.mode))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+/// Half-open 3-D box `[h0,h1) × [w0,w1) × [c0,c1)` in a layer's output
+/// coordinate space.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Region {
+    pub h0: i64,
+    pub h1: i64,
+    pub w0: i64,
+    pub w1: i64,
+    pub c0: i64,
+    pub c1: i64,
+}
+
+impl Region {
+    pub fn new(h0: i64, h1: i64, w0: i64, w1: i64, c0: i64, c1: i64) -> Region {
+        Region { h0, h1, w0, w1, c0, c1 }
+    }
+
+    pub fn full(h: i64, w: i64, c: i64) -> Region {
+        Region::new(0, h, 0, w, 0, c)
+    }
+
+    pub fn empty() -> Region {
+        Region::new(0, 0, 0, 0, 0, 0)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.h0 >= self.h1 || self.w0 >= self.w1 || self.c0 >= self.c1
+    }
+
+    pub fn volume(&self) -> i64 {
+        if self.is_empty() {
+            0
+        } else {
+            (self.h1 - self.h0) * (self.w1 - self.w0) * (self.c1 - self.c0)
+        }
+    }
+
+    pub fn intersect(&self, o: &Region) -> Region {
+        Region {
+            h0: self.h0.max(o.h0),
+            h1: self.h1.min(o.h1),
+            w0: self.w0.max(o.w0),
+            w1: self.w1.min(o.w1),
+            c0: self.c0.max(o.c0),
+            c1: self.c1.min(o.c1),
+        }
+    }
+
+    pub fn contains(&self, o: &Region) -> bool {
+        o.is_empty()
+            || (self.h0 <= o.h0
+                && o.h1 <= self.h1
+                && self.w0 <= o.w0
+                && o.w1 <= self.w1
+                && self.c0 <= o.c0
+                && o.c1 <= self.c1)
+    }
+
+    /// Smallest box covering both.
+    pub fn hull(&self, o: &Region) -> Region {
+        if self.is_empty() {
+            return *o;
+        }
+        if o.is_empty() {
+            return *self;
+        }
+        Region {
+            h0: self.h0.min(o.h0),
+            h1: self.h1.max(o.h1),
+            w0: self.w0.min(o.w0),
+            w1: self.w1.max(o.w1),
+            c0: self.c0.min(o.c0),
+            c1: self.c1.max(o.c1),
+        }
+    }
+}
+
+/// A node's share of one layer: a set of boxes. Disjoint for canonical tiles;
+/// possibly overlapping after NT inflation (volume accounting always goes
+/// through [`union_volume`]).
+pub type Tile = Vec<Region>;
+
+/// Exact volume of the union of a set of boxes, via coordinate compression.
+/// Lists here are tiny (≤ a handful of boxes), so the O(n³·n) sweep is cheap.
+pub fn union_volume(regions: &[Region]) -> i64 {
+    let boxes: Vec<&Region> = regions.iter().filter(|r| !r.is_empty()).collect();
+    match boxes.len() {
+        0 => return 0,
+        1 => return boxes[0].volume(),
+        _ => {}
+    }
+    let mut hs: Vec<i64> = boxes.iter().flat_map(|r| [r.h0, r.h1]).collect();
+    let mut ws: Vec<i64> = boxes.iter().flat_map(|r| [r.w0, r.w1]).collect();
+    let mut cs: Vec<i64> = boxes.iter().flat_map(|r| [r.c0, r.c1]).collect();
+    for v in [&mut hs, &mut ws, &mut cs] {
+        v.sort_unstable();
+        v.dedup();
+    }
+    let mut total = 0i64;
+    for hi in 0..hs.len() - 1 {
+        for wi in 0..ws.len() - 1 {
+            for ci in 0..cs.len() - 1 {
+                let probe = Region::new(hs[hi], hs[hi] + 1, ws[wi], ws[wi] + 1, cs[ci], cs[ci] + 1);
+                if boxes.iter().any(|b| !b.intersect(&probe).is_empty()) {
+                    total += (hs[hi + 1] - hs[hi]) * (ws[wi + 1] - ws[wi]) * (cs[ci + 1] - cs[ci]);
+                }
+            }
+        }
+    }
+    total
+}
+
+/// Union volume of the pairwise intersections between two box sets — the
+/// exact byte count one node must receive from another.
+pub fn intersection_volume(a: &[Region], b: &[Region]) -> i64 {
+    let mut parts: Vec<Region> = Vec::with_capacity(a.len() * b.len());
+    for ra in a {
+        for rb in b {
+            let x = ra.intersect(rb);
+            if !x.is_empty() {
+                parts.push(x);
+            }
+        }
+    }
+    union_volume(&parts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn region_volume_and_empty() {
+        let r = Region::new(0, 4, 0, 3, 0, 2);
+        assert_eq!(r.volume(), 24);
+        assert!(Region::new(2, 2, 0, 3, 0, 2).is_empty());
+        assert_eq!(Region::new(3, 2, 0, 3, 0, 2).volume(), 0);
+    }
+
+    #[test]
+    fn intersect_and_contains() {
+        let a = Region::new(0, 10, 0, 10, 0, 4);
+        let b = Region::new(5, 15, 2, 8, 0, 4);
+        let x = a.intersect(&b);
+        assert_eq!(x, Region::new(5, 10, 2, 8, 0, 4));
+        assert!(a.contains(&x));
+        assert!(!b.contains(&a));
+        assert!(a.contains(&Region::empty()));
+    }
+
+    #[test]
+    fn union_volume_disjoint_and_overlapping() {
+        let a = Region::new(0, 2, 0, 2, 0, 1);
+        let b = Region::new(2, 4, 0, 2, 0, 1);
+        assert_eq!(union_volume(&[a, b]), 8);
+        let c = Region::new(1, 3, 0, 2, 0, 1); // overlaps both
+        assert_eq!(union_volume(&[a, b, c]), 8);
+        let d = Region::new(0, 2, 5, 7, 0, 1);
+        assert_eq!(union_volume(&[a, d]), 8);
+    }
+
+    #[test]
+    fn union_volume_identical_boxes_counted_once() {
+        let a = Region::new(0, 3, 0, 3, 0, 3);
+        assert_eq!(union_volume(&[a, a, a]), 27);
+    }
+
+    #[test]
+    fn intersection_volume_counts_overlap_once() {
+        let have = vec![Region::new(0, 4, 0, 4, 0, 2)];
+        // two needed boxes overlapping within `have`
+        let need = vec![Region::new(0, 2, 0, 4, 0, 2), Region::new(1, 3, 0, 4, 0, 2)];
+        assert_eq!(intersection_volume(&have, &need), 3 * 4 * 2);
+    }
+
+    #[test]
+    fn plan_validate_rules() {
+        let mut p = Plan::uniform(Scheme::InH, 3);
+        p.validate().unwrap();
+        p.steps[2].mode = Mode::NT;
+        assert!(p.validate().is_err(), "last layer must be T");
+        let mut q = Plan::uniform(Scheme::InH, 3);
+        q.steps[0].mode = Mode::NT;
+        q.steps[1].scheme = Scheme::InW; // scheme change inside fused block
+        assert!(q.validate().is_err());
+        let mut r = Plan::uniform(Scheme::InH, 3);
+        r.steps[0].mode = Mode::NT; // block [0..=1] same scheme, ok
+        r.validate().unwrap();
+    }
+
+    #[test]
+    fn plan_blocks_decomposition() {
+        let mut p = Plan::uniform(Scheme::InH, 5);
+        p.steps[1].mode = Mode::NT;
+        p.steps[2].mode = Mode::NT;
+        // blocks: [0..=0], [1..=3], [4..=4]
+        let blocks = p.blocks();
+        assert_eq!(blocks, vec![(0, 0, Scheme::InH), (1, 3, Scheme::InH), (4, 4, Scheme::InH)]);
+        assert_eq!(p.n_fused_layers(), 2);
+    }
+
+    #[test]
+    fn scheme_parse_roundtrip() {
+        for s in Scheme::ALL {
+            let parsed: Scheme = s.name().parse().unwrap();
+            assert_eq!(parsed, s);
+        }
+    }
+}

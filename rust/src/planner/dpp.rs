@@ -1,0 +1,391 @@
+//! The dynamic-programming core of DPP (Algorithm 1 of the paper).
+//!
+//! ## DP formulation
+//!
+//! Let the model be `L₀ … L_{n-1}`. A plan is a partition of the chain into
+//! *fused blocks* `[i..=j]` — NT at layers `i..j`, T at layer `j` — each
+//! under a single scheme (cross-scheme realignment requires transmission).
+//! Define
+//!
+//! ```text
+//! after[i][q] = minimal cost of the boundary entering layer i (producer =
+//!               layer i-1 partitioned under q) plus all of layers i..n-1
+//! after[n][q] = cost of gathering layer n-1's tiles (scheme q) to the leader
+//! ```
+//!
+//! with the recurrence (block `[i..=j]` under scheme `r`):
+//!
+//! ```text
+//! after[i][q] = min over j ≥ i, r:
+//!     s-Est(boundary: q → entry_need(block i..=j under r))
+//!   + Σ_{l=i..j} i-Est(layer l, inflated tile under r)
+//!   + after[j+1][r]
+//! answer = min over j, r: s-Est(scatter) + Σ i-Est + after[j+1][r]
+//! ```
+//!
+//! The search runs block ends `j` from `n-1` down to `0` (reverse search) and
+//! extends each block backwards `i = j..0`, growing the NT-inflated tiles
+//! incrementally — one receptive-field step per layer, so the whole search
+//! does `O(n²k)` compute queries and `O(n²k²)` sync queries before pruning.
+//!
+//! ## Pruning (paper §3.3 "Piecing together")
+//!
+//! 1. NT-prefixed substructures are never enumerated (structural).
+//! 2. `after[j+1]` memoization bounds every extension (`tail` below).
+//! 3. Dynamic thresholds: a block extension whose compute-plus-tail already
+//!    meets or exceeds every incumbent at its entry layer is skipped before
+//!    any s-Estimator call; both rules are *sound* (they never discard an
+//!    improving candidate), so pruned and unpruned searches return plans of
+//!    equal cost — asserted by the Thm-1 tests.
+
+use std::time::{Duration, Instant};
+
+use crate::cost::query::{boundary_query, compute_query_tiles, gather_query, scatter_query};
+use crate::cost::CostSource;
+use crate::model::Model;
+use crate::partition::geometry::{in_regions, out_tiles};
+use crate::partition::{Mode, Plan, PlanStep, Scheme, Tile};
+
+/// Planner configuration. The defaults reproduce the paper's FlexPie; the
+/// restrictions implement baselines and ablations:
+/// `enable_fusion = false` → layerwise optimization (DINA/PartialDI);
+/// `schemes = [s]` with fusion → fused-layer optimization (AOFL/EdgeCI).
+#[derive(Debug, Clone)]
+pub struct DppConfig {
+    /// Candidate schemes (the paper's `k` dimensions).
+    pub schemes: Vec<Scheme>,
+    /// Allow NT fusion (multi-layer blocks).
+    pub enable_fusion: bool,
+    /// Enable the dynamic-threshold pruning (ablation switch; pruning is
+    /// sound, so plans are identical either way — only search time differs).
+    pub prune: bool,
+    /// Maximum fused-block span (`0` = unlimited).
+    pub max_block_span: usize,
+}
+
+impl Default for DppConfig {
+    fn default() -> Self {
+        DppConfig {
+            schemes: Scheme::ALL.to_vec(),
+            enable_fusion: true,
+            prune: true,
+            max_block_span: 0,
+        }
+    }
+}
+
+/// Search-effort statistics (the paper reports DPP search time; the ablation
+/// bench also reports estimator-call counts with pruning on/off).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SearchStats {
+    pub compute_queries: usize,
+    pub sync_queries: usize,
+    pub candidates_pruned: usize,
+    pub elapsed: Duration,
+}
+
+/// The Dynamic Partition Planner.
+pub struct Dpp<'a> {
+    pub model: &'a Model,
+    pub cost: &'a CostSource,
+    pub cfg: DppConfig,
+}
+
+impl<'a> Dpp<'a> {
+    pub fn new(model: &'a Model, cost: &'a CostSource) -> Dpp<'a> {
+        Dpp { model, cost, cfg: DppConfig::default() }
+    }
+
+    pub fn with_config(model: &'a Model, cost: &'a CostSource, cfg: DppConfig) -> Dpp<'a> {
+        assert!(!cfg.schemes.is_empty(), "need at least one scheme");
+        Dpp { model, cost, cfg }
+    }
+
+    pub fn plan(&self) -> Plan {
+        self.plan_with_stats().0
+    }
+
+    pub fn plan_with_stats(&self) -> (Plan, SearchStats) {
+        let t0 = Instant::now();
+        let mut stats = SearchStats::default();
+        let tb = self.cost.testbed();
+        let nodes = tb.nodes;
+        let layers = &self.model.layers;
+        let n = layers.len();
+        assert!(n > 0, "empty model");
+        let schemes = &self.cfg.schemes;
+        let k = schemes.len();
+
+        // after[i][qi]: boundary-into-i (producer scheme q) + layers i..n-1.
+        let mut after = vec![vec![f64::INFINITY; k]; n + 1];
+        // choice[i][qi] = (block end j, block scheme index ri)
+        let mut choice = vec![vec![(usize::MAX, usize::MAX); k]; n + 1];
+        let mut root = f64::INFINITY;
+        let mut root_choice = (usize::MAX, usize::MAX);
+
+        // Base case: gather of the last layer.
+        for (qi, &q) in schemes.iter().enumerate() {
+            let gq = gather_query(&layers[n - 1], q, tb);
+            stats.sync_queries += 1;
+            after[n][qi] = self.cost.sync_time(&gq);
+        }
+
+        let max_span = if !self.cfg.enable_fusion {
+            1
+        } else if self.cfg.max_block_span == 0 {
+            n
+        } else {
+            self.cfg.max_block_span
+        };
+
+        // Reverse search over block ends (Key design 1).
+        for j in (0..n).rev() {
+            for (ri, &r) in schemes.iter().enumerate() {
+                let tail = after[j + 1][ri];
+                // Tiles at the current top layer of the block (out space of
+                // layer i), extended incrementally as i decreases.
+                let mut cur_tiles: Vec<Tile> = out_tiles(&layers[j], r, nodes);
+                let mut block_cost = 0.0f64;
+
+                for i in (0..=j).rev() {
+                    if j - i + 1 > max_span {
+                        break;
+                    }
+                    if i < j {
+                        // One backward receptive-field step (NT inflation).
+                        cur_tiles = cur_tiles
+                            .iter()
+                            .map(|t| in_regions(&layers[i + 1], t))
+                            .collect();
+                    }
+                    let cq = compute_query_tiles(&layers[i], &cur_tiles, r, tb);
+                    stats.compute_queries += 1;
+                    block_cost += self.cost.compute_time(&cq);
+                    let base = block_cost + tail;
+
+                    // Dynamic-threshold pruning: if compute+tail alone can no
+                    // longer beat any incumbent at this entry layer, skip the
+                    // (k) s-Estimator evaluations. Sound because sync ≥ 0.
+                    if self.cfg.prune {
+                        let worst_incumbent = if i == 0 {
+                            root
+                        } else {
+                            after[i].iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+                        };
+                        if base >= worst_incumbent {
+                            stats.candidates_pruned += 1;
+                            continue;
+                        }
+                    }
+
+                    let entry_need: Vec<Tile> =
+                        cur_tiles.iter().map(|t| in_regions(&layers[i], t)).collect();
+
+                    if i == 0 {
+                        let sq = scatter_query(&layers[0], r, &entry_need, tb);
+                        stats.sync_queries += 1;
+                        let total = self.cost.sync_time(&sq) + base;
+                        if total < root {
+                            root = total;
+                            root_choice = (j, ri);
+                        }
+                    } else {
+                        for (qi, &q) in schemes.iter().enumerate() {
+                            let bq = boundary_query(
+                                &layers[i - 1],
+                                q,
+                                &layers[i],
+                                r,
+                                &entry_need,
+                                tb,
+                            );
+                            stats.sync_queries += 1;
+                            let total = self.cost.sync_time(&bq) + base;
+                            if total < after[i][qi] {
+                                after[i][qi] = total;
+                                choice[i][qi] = (j, ri);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        assert!(root.is_finite(), "DPP found no feasible plan");
+
+        // Reconstruct the step sequence from the backpointers.
+        let mut steps = Vec::with_capacity(n);
+        let (mut j, mut ri) = root_choice;
+        let mut i = 0usize;
+        loop {
+            let r = schemes[ri];
+            for _ in i..j {
+                steps.push(PlanStep { scheme: r, mode: Mode::NT });
+            }
+            steps.push(PlanStep { scheme: r, mode: Mode::T });
+            if j + 1 >= n {
+                break;
+            }
+            let (nj, nri) = choice[j + 1][ri];
+            debug_assert_ne!(nj, usize::MAX, "broken backpointer at layer {}", j + 1);
+            i = j + 1;
+            j = nj;
+            ri = nri;
+        }
+        debug_assert_eq!(steps.len(), n);
+
+        stats.elapsed = t0.elapsed();
+        let plan = Plan { steps, est_cost: root };
+        debug_assert!(plan.validate().is_ok(), "DPP produced invalid plan: {:?}", plan.validate());
+        (plan, stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+    use crate::net::{Bandwidth, Testbed, Topology};
+    use crate::planner::exhaustive::plan_cost;
+
+    fn analytic(nodes: usize, gbps: f64) -> CostSource {
+        CostSource::analytic(&Testbed::new(nodes, Topology::Ring, Bandwidth::gbps(gbps)))
+    }
+
+    #[test]
+    fn plans_are_structurally_valid() {
+        let cost = analytic(4, 5.0);
+        for model in [zoo::edgenet(16), zoo::mobilenet_v1(224, 1000).truncated(9)] {
+            let plan = Dpp::new(&model, &cost).plan();
+            plan.validate().unwrap();
+            assert_eq!(plan.steps.len(), model.n_layers());
+            assert!(plan.est_cost.is_finite() && plan.est_cost > 0.0);
+        }
+    }
+
+    #[test]
+    fn est_cost_matches_independent_plan_costing() {
+        // The DP's accumulated cost must equal re-costing the reconstructed
+        // plan from scratch with the same cost source.
+        let cost = analytic(4, 1.0);
+        let model = zoo::edgenet(16);
+        let plan = Dpp::new(&model, &cost).plan();
+        let recost = plan_cost(&model, &plan, &cost).total;
+        assert!(
+            (plan.est_cost - recost).abs() < 1e-9 * plan.est_cost.max(1.0),
+            "dp={} recost={}",
+            plan.est_cost,
+            recost
+        );
+    }
+
+    #[test]
+    fn pruning_preserves_optimality() {
+        let cost = analytic(3, 0.5);
+        let model = zoo::mobilenet_v1(224, 1000).truncated(11);
+        let pruned = Dpp::with_config(
+            &model,
+            &cost,
+            DppConfig { prune: true, ..Default::default() },
+        )
+        .plan();
+        let unpruned = Dpp::with_config(
+            &model,
+            &cost,
+            DppConfig { prune: false, ..Default::default() },
+        )
+        .plan();
+        assert!((pruned.est_cost - unpruned.est_cost).abs() < 1e-12 * pruned.est_cost);
+    }
+
+    #[test]
+    fn pruning_reduces_work() {
+        let cost = analytic(4, 5.0);
+        let model = zoo::mobilenet_v1(224, 1000);
+        let (_, with) = Dpp::with_config(
+            &model,
+            &cost,
+            DppConfig { prune: true, ..Default::default() },
+        )
+        .plan_with_stats();
+        let (_, without) = Dpp::with_config(
+            &model,
+            &cost,
+            DppConfig { prune: false, ..Default::default() },
+        )
+        .plan_with_stats();
+        assert!(with.sync_queries < without.sync_queries);
+        assert!(with.candidates_pruned > 0);
+    }
+
+    #[test]
+    fn fusion_beats_no_fusion_at_low_bandwidth() {
+        // With a slow interconnect, NT fusion should pay off on the early
+        // (sync-heavy) layers, so the fused planner strictly improves on the
+        // layerwise-restricted one.
+        let cost = analytic(4, 0.1);
+        let model = zoo::mobilenet_v1(224, 1000).truncated(9);
+        let fused = Dpp::new(&model, &cost).plan();
+        let layerwise = Dpp::with_config(
+            &model,
+            &cost,
+            DppConfig { enable_fusion: false, ..Default::default() },
+        )
+        .plan();
+        assert!(fused.est_cost <= layerwise.est_cost + 1e-12);
+        assert!(fused.n_fused_layers() > 0, "expected NT layers: {}", fused.render());
+    }
+
+    #[test]
+    fn fused_cost_never_worse_than_any_uniform_plan() {
+        let cost = analytic(4, 1.0);
+        let model = zoo::edgenet(16);
+        let dpp = Dpp::new(&model, &cost).plan();
+        for s in Scheme::ALL {
+            let uniform = Plan::uniform(s, model.n_layers());
+            let u = plan_cost(&model, &uniform, &cost).total;
+            assert!(
+                dpp.est_cost <= u + 1e-9,
+                "DPP {} worse than uniform {s} {u}",
+                dpp.est_cost
+            );
+        }
+    }
+
+    #[test]
+    fn single_layer_model() {
+        let cost = analytic(4, 5.0);
+        let model = zoo::tiny_chain(1, 12, 8);
+        let plan = Dpp::new(&model, &cost).plan();
+        assert_eq!(plan.steps.len(), 1);
+        assert_eq!(plan.steps[0].mode, Mode::T);
+    }
+
+    #[test]
+    fn restricted_scheme_set_is_respected() {
+        let cost = analytic(4, 1.0);
+        let model = zoo::edgenet(16);
+        let plan = Dpp::with_config(
+            &model,
+            &cost,
+            DppConfig { schemes: vec![Scheme::OutC], ..Default::default() },
+        )
+        .plan();
+        assert!(plan.steps.iter().all(|s| s.scheme == Scheme::OutC));
+    }
+
+    #[test]
+    fn max_block_span_is_respected() {
+        let cost = analytic(4, 0.1);
+        let model = zoo::tiny_chain(8, 32, 16);
+        let plan = Dpp::with_config(
+            &model,
+            &cost,
+            DppConfig { max_block_span: 2, ..Default::default() },
+        )
+        .plan();
+        for (s, e, _) in plan.blocks() {
+            assert!(e - s + 1 <= 2);
+        }
+    }
+}

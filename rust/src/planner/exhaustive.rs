@@ -1,0 +1,195 @@
+//! Exhaustive search + independent plan costing — the Theorem 1 reference.
+//!
+//! [`exhaustive_plan`] enumerates *every* legal plan (all block compositions
+//! of the layer chain × all scheme assignments per block) and costs each via
+//! [`plan_cost`]; Theorem 1 says DPP must return a plan of equal cost when
+//! both consult the same cost oracle. The enumeration is
+//! `Σ_compositions k^#blocks = k(k+1)^{n-1}` plans, so tests keep `n ≤ 8`.
+//!
+//! [`plan_cost`] is also the canonical "re-cost a finished plan" routine
+//! used by the evaluation engine and the baselines: scatter + per-block
+//! inflated compute + inter-block boundaries + final gather, all through the
+//! exact same query builders the DP uses.
+
+use crate::cost::query::{boundary_query, compute_query, gather_query, scatter_query};
+use crate::cost::CostSource;
+use crate::model::Model;
+use crate::partition::inflate::BlockGeometry;
+use crate::partition::{Mode, Plan, PlanStep, Scheme};
+
+/// Cost breakdown of one plan under one cost source.
+#[derive(Debug, Clone, Default)]
+pub struct PlanCost {
+    pub total: f64,
+    pub compute: f64,
+    pub sync: f64,
+    /// Per-layer compute seconds (plan order).
+    pub per_layer_compute: Vec<f64>,
+    /// Per-boundary sync seconds: scatter, inter-block boundaries, gather.
+    pub per_boundary_sync: Vec<f64>,
+    /// Total bytes moved across all boundaries.
+    pub bytes_moved: u64,
+}
+
+/// Cost a complete plan: the sum the DP minimizes, recomputed independently.
+pub fn plan_cost(model: &Model, plan: &Plan, cost: &CostSource) -> PlanCost {
+    plan.validate().expect("invalid plan");
+    assert_eq!(plan.steps.len(), model.n_layers());
+    let tb = cost.testbed();
+    let layers = &model.layers;
+    let n = layers.len();
+    let blocks = plan.blocks();
+    let mut out = PlanCost { per_layer_compute: vec![0.0; n], ..Default::default() };
+
+    // Geometry per block (needed before boundaries: the *consumer's*
+    // entry requirement prices each boundary).
+    let geos: Vec<BlockGeometry> = blocks
+        .iter()
+        .map(|&(s, e, scheme)| BlockGeometry::new(&layers[s..=e], scheme, tb.nodes))
+        .collect();
+
+    // Scatter into the first block.
+    {
+        let (s, _, scheme) = blocks[0];
+        let q = scatter_query(&layers[s], scheme, &geos[0].entry_need, tb);
+        let t = cost.sync_time(&q);
+        out.bytes_moved += q.total_bytes();
+        out.per_boundary_sync.push(t);
+        out.sync += t;
+    }
+
+    for (bi, &(s, e, scheme)) in blocks.iter().enumerate() {
+        // Block compute (inflated tiles).
+        for l in s..=e {
+            let cq = compute_query(&layers[s..=e], &geos[bi], l - s, tb);
+            let t = cost.compute_time(&cq);
+            out.per_layer_compute[l] = t;
+            out.compute += t;
+        }
+        // Boundary out of this block.
+        let t = if e == n - 1 {
+            let gq = gather_query(&layers[n - 1], scheme, tb);
+            out.bytes_moved += gq.total_bytes();
+            cost.sync_time(&gq)
+        } else {
+            let (ns, _, nscheme) = blocks[bi + 1];
+            let bq = boundary_query(
+                &layers[e],
+                scheme,
+                &layers[ns],
+                nscheme,
+                &geos[bi + 1].entry_need,
+                tb,
+            );
+            out.bytes_moved += bq.total_bytes();
+            cost.sync_time(&bq)
+        };
+        out.per_boundary_sync.push(t);
+        out.sync += t;
+    }
+
+    out.total = out.compute + out.sync;
+    out
+}
+
+/// Enumerate every legal plan and return the cheapest. `schemes` restricts
+/// the per-block scheme choices (defaults to all four).
+pub fn exhaustive_plan(model: &Model, cost: &CostSource, schemes: &[Scheme]) -> Plan {
+    let n = model.n_layers();
+    assert!(n >= 1);
+    assert!(
+        n <= 12,
+        "exhaustive search is k(k+1)^(n-1) plans; refusing n = {n} (cap 12)"
+    );
+    let mut best: Option<Plan> = None;
+    let mut steps: Vec<PlanStep> = Vec::with_capacity(n);
+    enumerate(model, cost, schemes, 0, &mut steps, &mut best);
+    best.expect("no plan found")
+}
+
+fn enumerate(
+    model: &Model,
+    cost: &CostSource,
+    schemes: &[Scheme],
+    start: usize,
+    steps: &mut Vec<PlanStep>,
+    best: &mut Option<Plan>,
+) {
+    let n = model.n_layers();
+    if start == n {
+        let mut plan = Plan { steps: steps.clone(), est_cost: f64::NAN };
+        let c = plan_cost(model, &plan, cost).total;
+        plan.est_cost = c;
+        if best.as_ref().map(|b| c < b.est_cost).unwrap_or(true) {
+            *best = Some(plan);
+        }
+        return;
+    }
+    for end in start..n {
+        for &scheme in schemes {
+            for _ in start..end {
+                steps.push(PlanStep { scheme, mode: Mode::NT });
+            }
+            steps.push(PlanStep { scheme, mode: Mode::T });
+            enumerate(model, cost, schemes, end + 1, steps, best);
+            steps.truncate(start);
+        }
+    }
+}
+
+/// Count the number of plans the exhaustive search visits (diagnostics for
+/// the search-space figures): `k·(k+1)^{n-1}`.
+pub fn search_space_size(n_layers: usize, k: usize) -> f64 {
+    k as f64 * ((k + 1) as f64).powi(n_layers as i32 - 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+    use crate::net::{Bandwidth, Testbed, Topology};
+
+    fn analytic(nodes: usize, gbps: f64) -> CostSource {
+        CostSource::analytic(&Testbed::new(nodes, Topology::Ring, Bandwidth::gbps(gbps)))
+    }
+
+    #[test]
+    fn plan_cost_uniform_edge_cases() {
+        let cost = analytic(4, 5.0);
+        let model = zoo::tiny_chain(3, 12, 8);
+        let plan = Plan::uniform(Scheme::InH, 3);
+        let pc = plan_cost(&model, &plan, &cost);
+        assert!(pc.total > 0.0);
+        assert_eq!(pc.per_layer_compute.len(), 3);
+        // scatter + 2 inter-layer boundaries + gather
+        assert_eq!(pc.per_boundary_sync.len(), 4);
+        assert!((pc.total - pc.compute - pc.sync).abs() < 1e-15);
+    }
+
+    #[test]
+    fn exhaustive_small_model_beats_uniform() {
+        let cost = analytic(3, 1.0);
+        let model = zoo::tiny_chain(4, 12, 8);
+        let ex = exhaustive_plan(&model, &cost, &Scheme::ALL);
+        for s in Scheme::ALL {
+            let u = plan_cost(&model, &Plan::uniform(s, 4), &cost).total;
+            assert!(ex.est_cost <= u + 1e-12);
+        }
+    }
+
+    #[test]
+    fn search_space_size_formula() {
+        assert_eq!(search_space_size(1, 4), 4.0);
+        assert_eq!(search_space_size(2, 4), 20.0);
+        // n layers, k=4: 4·5^(n-1)
+        assert_eq!(search_space_size(4, 4), 4.0 * 125.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "refusing")]
+    fn exhaustive_refuses_large_models() {
+        let cost = analytic(3, 1.0);
+        let model = zoo::mobilenet_v1(224, 1000);
+        let _ = exhaustive_plan(&model, &cost, &Scheme::ALL);
+    }
+}

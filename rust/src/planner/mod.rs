@@ -1,0 +1,30 @@
+//! The Dynamic Partition Planner (DPP) — the paper's Algorithm 1.
+//!
+//! DPP searches the combinatorial space of per-layer `(scheme, mode)` pairs
+//! (`Pᵢ = (pᵢ, tᵢ)`) for the sequence `S = [P₀ … Pₙ]` with the lowest
+//! estimated end-to-end inference time. The paper's three key designs map
+//! onto this implementation as follows:
+//!
+//! * **Key design 1 — reverse search.** The DP runs from `Lₙ` down to `L₀`
+//!   ([`dpp`] iterates block ends `j = n..0`), because NT inflation
+//!   propagates *backwards*: a block's interior tiles are determined by its
+//!   end layer, so states anchored at block ends have well-defined costs.
+//! * **Key design 2 — skip NT states.** DP states exist only at T
+//!   boundaries: `best[i][p]` is the optimal cost of layers `i..n` given the
+//!   block starting at `i` was entered through a transmission from a
+//!   producer partitioned under `p`. Substructures that would *start* inside
+//!   an NT run are never evaluated (their cost is indeterminate — exactly
+//!   the paper's "Why skip NT states?").
+//! * **Key design 3 — backtrack and generate combined sequences.** For every
+//!   anchor `j`, the planner extends the fused block backwards `i = j..0`,
+//!   incrementally growing the combined sequence `CS[i..j]` and pricing it
+//!   with the i-Estimator (inflated tiles) and the s-Estimator (the entry
+//!   boundary), pruned by branch-and-bound thresholds.
+//!
+//! [`exhaustive`] provides the brute-force reference used to validate
+//! Theorem 1 (optimality under an exact cost oracle).
+
+pub mod dpp;
+pub mod exhaustive;
+
+pub use dpp::{Dpp, DppConfig, SearchStats};

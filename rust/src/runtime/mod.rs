@@ -1,0 +1,225 @@
+//! PJRT runtime — loads and executes the AOT-compiled JAX/Pallas artifacts.
+//!
+//! `make artifacts` runs `python/compile/aot.py` once at build time, lowering
+//! each (op, shape) in the artifact menu to **HLO text** (jax ≥ 0.5 emits
+//! serialized protos with 64-bit ids that xla_extension 0.5.1 rejects; the
+//! text parser reassigns ids) and writing `artifacts/manifest.json`. This
+//! module loads that manifest, compiles executables on the PJRT CPU client
+//! lazily, and exposes `execute_layer` to the engine: when a layer's exact
+//! shape signature is present, the JAX/Pallas version runs; otherwise the
+//! engine falls back to [`crate::compute`] (and tests assert both paths
+//! agree to float tolerance).
+//!
+//! Python never runs at inference time — the artifacts directory is the only
+//! interface between the layers.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::compute::Tensor;
+use crate::model::{ConvType, LayerMeta};
+use crate::util::json::Json;
+
+/// Shape signature of a layer computation — must match the naming scheme in
+/// `python/compile/aot.py` exactly.
+pub fn signature(layer: &LayerMeta, in_h: i64, in_w: i64) -> String {
+    let op = match layer.conv_t {
+        ConvType::Standard => "conv2d",
+        ConvType::Depthwise => "dwconv",
+        ConvType::Pointwise => "conv2d",
+        ConvType::Dense | ConvType::Attention => "dense",
+        ConvType::Pool => "avgpool",
+    };
+    let relu = if layer.fused_activation { "_relu" } else { "" };
+    match layer.conv_t {
+        ConvType::Dense | ConvType::Attention => {
+            format!("{op}_m{}_k{}_n{}{relu}", layer.out_h, layer.in_c, layer.out_c)
+        }
+        _ => format!(
+            "{op}_ih{in_h}_iw{in_w}_ic{}_oc{}_k{}_s{}_p{}{relu}",
+            layer.in_c, layer.out_c, layer.k, layer.s, layer.p
+        ),
+    }
+}
+
+/// The artifact manifest: signature → HLO file name.
+#[derive(Debug, Default)]
+pub struct Manifest {
+    pub entries: HashMap<String, String>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let v = Json::load(&path).with_context(|| format!("loading {}", path.display()))?;
+        let obj = v
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing 'artifacts' object"))?;
+        let mut entries = HashMap::new();
+        for (k, val) in obj {
+            entries.insert(
+                k.clone(),
+                val.as_str().ok_or_else(|| anyhow!("bad manifest entry {k}"))?.to_string(),
+            );
+        }
+        Ok(Manifest { entries })
+    }
+}
+
+/// The PJRT runtime: CPU client + lazily compiled executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    dir: PathBuf,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Load the runtime from an artifacts directory (errors if the manifest
+    /// is absent — run `make artifacts`).
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e:?}"))?;
+        Ok(Runtime { client, manifest, dir: dir.to_path_buf(), cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn has(&self, sig: &str) -> bool {
+        self.manifest.entries.contains_key(sig)
+    }
+
+    pub fn n_artifacts(&self) -> usize {
+        self.manifest.entries.len()
+    }
+
+    fn executable(&self, sig: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(sig) {
+            return Ok(e.clone());
+        }
+        let file = self
+            .manifest
+            .entries
+            .get(sig)
+            .ok_or_else(|| anyhow!("no artifact for signature {sig}"))?;
+        let path = self.dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(|e| anyhow!("compile {sig}: {e:?}"))?;
+        let exe = std::sync::Arc::new(exe);
+        self.cache.lock().unwrap().insert(sig.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute one layer via its AOT artifact. `input` must be the full
+    /// (padded-to-valid) input window in HWC layout matching the signature's
+    /// `in_h × in_w`; weights/bias use the same layout as
+    /// [`crate::compute::LayerWeights`].
+    pub fn execute_layer(
+        &self,
+        layer: &LayerMeta,
+        weights: &crate::compute::LayerWeights,
+        input: &Tensor,
+    ) -> Result<Tensor> {
+        let sig = signature(layer, input.h, input.w);
+        let exe = self.executable(&sig)?;
+
+        let in_lit = xla::Literal::vec1(&input.data)
+            .reshape(&[input.h, input.w, input.c])
+            .map_err(|e| anyhow!("reshape input: {e:?}"))?;
+        let args: Vec<xla::Literal> = match layer.conv_t {
+            ConvType::Pool => vec![in_lit],
+            ConvType::Depthwise => {
+                let w = xla::Literal::vec1(&weights.w)
+                    .reshape(&[layer.k, layer.k, layer.out_c])
+                    .map_err(|e| anyhow!("reshape w: {e:?}"))?;
+                let b = xla::Literal::vec1(&weights.b);
+                vec![in_lit, w, b]
+            }
+            ConvType::Dense | ConvType::Attention => {
+                let w = xla::Literal::vec1(&weights.w)
+                    .reshape(&[layer.in_c, layer.out_c])
+                    .map_err(|e| anyhow!("reshape w: {e:?}"))?;
+                let b = xla::Literal::vec1(&weights.b);
+                vec![in_lit, w, b]
+            }
+            _ => {
+                let w = xla::Literal::vec1(&weights.w)
+                    .reshape(&[layer.k, layer.k, layer.in_c, layer.out_c])
+                    .map_err(|e| anyhow!("reshape w: {e:?}"))?;
+                let b = xla::Literal::vec1(&weights.b);
+                vec![in_lit, w, b]
+            }
+        };
+
+        let result = exe
+            .execute::<xla::Literal>(&args)
+            .map_err(|e| anyhow!("execute {sig}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        // aot.py lowers with return_tuple=True → unwrap the 1-tuple.
+        let out = result.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        let data = out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+
+        let (oh, ow, oc) = (layer.out_h, layer.out_w, layer.out_c);
+        if data.len() != (oh * ow * oc) as usize {
+            return Err(anyhow!(
+                "artifact {sig} returned {} elements, expected {}",
+                data.len(),
+                oh * ow * oc
+            ));
+        }
+        Ok(Tensor { h: oh, w: ow, c: oc, data })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn conv(h: i64) -> LayerMeta {
+        LayerMeta::conv("c", ConvType::Standard, h, h, 3, 8, 3, 1, 1)
+    }
+
+    #[test]
+    fn signatures_are_stable() {
+        let l = conv(16);
+        assert_eq!(signature(&l, 16, 16), "conv2d_ih16_iw16_ic3_oc8_k3_s1_p1");
+        let d = LayerMeta::dense("fc", 1, 32, 10);
+        assert_eq!(signature(&d, 1, 1), "dense_m1_k32_n10");
+        let mut r = conv(16);
+        r.fused_activation = true;
+        assert!(signature(&r, 16, 16).ends_with("_relu"));
+    }
+
+    #[test]
+    fn manifest_parse() {
+        let dir = crate::util::tmp::TempDir::new("manifest");
+        std::fs::write(
+            dir.path().join("manifest.json"),
+            r#"{"artifacts": {"conv2d_ih16_iw16_ic3_oc8_k3_s1_p1": "conv0.hlo.txt"}, "generated_by": "aot.py"}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(dir.path()).unwrap();
+        assert_eq!(m.entries.len(), 1);
+        assert_eq!(
+            m.entries["conv2d_ih16_iw16_ic3_oc8_k3_s1_p1"],
+            "conv0.hlo.txt"
+        );
+    }
+
+    #[test]
+    fn missing_manifest_is_error() {
+        let dir = crate::util::tmp::TempDir::new("nomanifest");
+        assert!(Runtime::load(dir.path()).is_err());
+    }
+}

@@ -1,0 +1,199 @@
+//! Mini benchmark harness (offline replacement for `criterion`).
+//!
+//! `cargo bench` runs each `[[bench]]` target's `main()`; targets use
+//! [`BenchRunner`] for timed micro-sections and plain table printing for the
+//! paper-figure reproductions.
+
+use std::time::{Duration, Instant};
+
+/// Timing statistics over the measured iterations.
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub mean: Duration,
+    pub median: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    pub iters: usize,
+}
+
+impl Stats {
+    pub fn mean_secs(&self) -> f64 {
+        self.mean.as_secs_f64()
+    }
+}
+
+impl std::fmt::Display for Stats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "mean {:>10} median {:>10} min {:>10} ({} iters)",
+            fmt_dur(self.mean),
+            fmt_dur(self.median),
+            fmt_dur(self.min),
+            self.iters
+        )
+    }
+}
+
+pub fn fmt_dur(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Benchmark driver: warms up, then measures for a target wall-clock budget.
+pub struct BenchRunner {
+    pub name: String,
+    /// Minimum measured iterations.
+    pub min_iters: usize,
+    /// Wall-clock budget for the measurement phase.
+    pub budget: Duration,
+}
+
+impl BenchRunner {
+    pub fn new(name: &str) -> BenchRunner {
+        // honor FLEXPIE_BENCH_FAST=1 for CI-speed runs
+        let fast = std::env::var("FLEXPIE_BENCH_FAST").is_ok();
+        BenchRunner {
+            name: name.to_string(),
+            min_iters: if fast { 3 } else { 10 },
+            budget: if fast { Duration::from_millis(200) } else { Duration::from_secs(2) },
+        }
+    }
+
+    /// Measure `f`, which returns a value that is black-boxed to prevent
+    /// dead-code elimination.
+    pub fn bench<T, F: FnMut() -> T>(&self, label: &str, mut f: F) -> Stats {
+        // warmup
+        for _ in 0..2 {
+            black_box(f());
+        }
+        let mut times = Vec::new();
+        let start = Instant::now();
+        while times.len() < self.min_iters || start.elapsed() < self.budget {
+            let t0 = Instant::now();
+            black_box(f());
+            times.push(t0.elapsed());
+            if times.len() >= 10_000 {
+                break;
+            }
+        }
+        times.sort();
+        let total: Duration = times.iter().sum();
+        let stats = Stats {
+            mean: total / times.len() as u32,
+            median: times[times.len() / 2],
+            min: times[0],
+            max: *times.last().unwrap(),
+            iters: times.len(),
+        };
+        println!("{}/{label:<40} {stats}", self.name);
+        stats
+    }
+}
+
+/// Identity function the optimizer cannot see through.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Fixed-width table printer for the paper-figure benches.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new<S: Into<String>, I: IntoIterator<Item = S>>(headers: I) -> Table {
+        Table { headers: headers.into_iter().map(Into::into).collect(), rows: Vec::new() }
+    }
+
+    pub fn row<S: Into<String>, I: IntoIterator<Item = S>>(&mut self, cells: I) {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(String::len).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let line = |cells: &[String], widths: &[usize], out: &mut String| {
+            for (i, c) in cells.iter().enumerate() {
+                if i > 0 {
+                    out.push_str("  ");
+                }
+                out.push_str(&format!("{:<width$}", c, width = widths[i]));
+            }
+            out.push('\n');
+        };
+        line(&self.headers, &widths, &mut out);
+        let total: usize = widths.iter().sum::<usize>() + 2 * (widths.len() - 1);
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            line(row, &widths, &mut out);
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = BenchRunner {
+            name: "t".into(),
+            min_iters: 3,
+            budget: Duration::from_millis(10),
+        };
+        let stats = r.bench("noop", || 1 + 1);
+        assert!(stats.iters >= 3);
+        assert!(stats.min <= stats.median && stats.median <= stats.max);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(["model", "time"]);
+        t.row(["mobilenet", "1.5 ms"]);
+        t.row(["r", "2"]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("model"));
+        assert!(lines[2].starts_with("mobilenet"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new(["a", "b"]);
+        t.row(["only one"]);
+    }
+
+    #[test]
+    fn fmt_dur_units() {
+        assert_eq!(fmt_dur(Duration::from_secs(2)), "2.000 s");
+        assert_eq!(fmt_dur(Duration::from_millis(5)), "5.000 ms");
+        assert_eq!(fmt_dur(Duration::from_micros(7)), "7.000 µs");
+        assert_eq!(fmt_dur(Duration::from_nanos(3)), "3.0 ns");
+    }
+}

@@ -1,0 +1,141 @@
+//! Tiny CLI argument parser (offline replacement for `clap`).
+//!
+//! Supports `command --flag value --switch positional` style:
+//! `flexpie plan --model mobilenet --nodes 4 --topology ring --bw 5gbps`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First non-flag token (the subcommand).
+    pub command: Option<String>,
+    /// Remaining positional tokens.
+    pub positional: Vec<String>,
+    /// `--key value` pairs; a flag followed by another flag (or end of args)
+    /// is stored with an empty value (boolean switch).
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let toks: Vec<String> = argv.into_iter().collect();
+        let mut i = 0;
+        while i < toks.len() {
+            let t = &toks[i];
+            if let Some(name) = t.strip_prefix("--") {
+                // support --key=value
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if i + 1 < toks.len() && !toks[i + 1].starts_with("--") {
+                    out.flags.insert(name.to_string(), toks[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.insert(name.to_string(), String::new());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(t.clone());
+            } else {
+                out.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    /// Parse a bandwidth flag: `5gbps`, `500mbps`, or a bare number (Gb/s).
+    pub fn bandwidth_or(&self, key: &str, default_gbps: f64) -> crate::net::Bandwidth {
+        match self.get(key) {
+            None => crate::net::Bandwidth::gbps(default_gbps),
+            Some(v) => parse_bandwidth(v).unwrap_or(crate::net::Bandwidth::gbps(default_gbps)),
+        }
+    }
+}
+
+/// Parse `"5gbps"` / `"500mbps"` / `"2.5"` (Gb/s).
+pub fn parse_bandwidth(s: &str) -> Option<crate::net::Bandwidth> {
+    let lower = s.to_ascii_lowercase();
+    if let Some(v) = lower.strip_suffix("gbps") {
+        return v.trim().parse::<f64>().ok().map(crate::net::Bandwidth::gbps);
+    }
+    if let Some(v) = lower.strip_suffix("mbps") {
+        return v.trim().parse::<f64>().ok().map(crate::net::Bandwidth::mbps);
+    }
+    lower.parse::<f64>().ok().map(crate::net::Bandwidth::gbps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("plan --model mobilenet --nodes 4 --verbose");
+        assert_eq!(a.command.as_deref(), Some("plan"));
+        assert_eq!(a.get("model"), Some("mobilenet"));
+        assert_eq!(a.usize_or("nodes", 1), 4);
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn equals_style() {
+        let a = parse("bench --fig=7 --bw=500mbps");
+        assert_eq!(a.get("fig"), Some("7"));
+        assert!((a.bandwidth_or("bw", 5.0).as_gbps() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = parse("run one two");
+        assert_eq!(a.command.as_deref(), Some("run"));
+        assert_eq!(a.positional, vec!["one", "two"]);
+    }
+
+    #[test]
+    fn bandwidth_parsing() {
+        assert!((parse_bandwidth("5gbps").unwrap().as_gbps() - 5.0).abs() < 1e-12);
+        assert!((parse_bandwidth("500mbps").unwrap().as_gbps() - 0.5).abs() < 1e-12);
+        assert!((parse_bandwidth("2.5").unwrap().as_gbps() - 2.5).abs() < 1e-12);
+        assert!(parse_bandwidth("fast").is_none());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("x");
+        assert_eq!(a.f64_or("missing", 1.5), 1.5);
+        assert_eq!(a.get_or("missing", "d"), "d");
+    }
+}

@@ -1,0 +1,22 @@
+//! Self-contained utility substrates.
+//!
+//! This build environment is fully offline: only the `xla` crate's vendored
+//! dependency closure is available. The usual ecosystem crates (serde, rand,
+//! clap, criterion, proptest, tokio, rayon) are therefore replaced by the
+//! small, tested implementations in this module:
+//!
+//! * [`rng`] — deterministic PCG-style PRNG + Box-Muller normal sampling
+//! * [`json`] — minimal JSON value/parser/writer (model persistence, the
+//!   AOT `manifest.json`, bench result files)
+//! * [`cli`] — flag-style argument parsing for the `flexpie` binary
+//! * [`bench`] — a mini-criterion: warmup + timed iterations + stats
+//! * [`prop`] — property-testing driver (random cases, seed reporting,
+//!   shrink-free but reproducible)
+//! * [`tmp`] — unique temp directories for tests
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod tmp;

@@ -1,0 +1,113 @@
+//! Property-testing driver (offline replacement for `proptest`).
+//!
+//! Runs a property over many seeded random cases; on failure it reports the
+//! exact case seed so the failure replays deterministically:
+//!
+//! ```no_run
+//! use flexpie::util::prop::check;
+//! check("tiles_partition_space", 200, |rng| {
+//!     let n = rng.range_incl(2, 6);
+//!     // ... build a random case, return Err(msg) on violation ...
+//!     Ok(())
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Base seed; override with `FLEXPIE_PROP_SEED` to replay a failure.
+fn base_seed() -> u64 {
+    std::env::var("FLEXPIE_PROP_SEED").ok().and_then(|v| v.parse().ok()).unwrap_or(0x9e37)
+}
+
+/// Number of cases multiplier; `FLEXPIE_PROP_CASES` scales all checks.
+fn case_multiplier() -> f64 {
+    std::env::var("FLEXPIE_PROP_CASES").ok().and_then(|v| v.parse().ok()).unwrap_or(1.0)
+}
+
+/// Run `property` over `cases` random cases. Panics with the failing seed on
+/// the first violation.
+pub fn check<F>(name: &str, cases: usize, property: F)
+where
+    F: Fn(&mut Rng) -> Result<(), String>,
+{
+    let base = base_seed();
+    let n = ((cases as f64) * case_multiplier()).max(1.0) as u64;
+    for case in 0..n {
+        let seed = base ^ (case.wrapping_mul(0x2545F4914F6CDD1D));
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = property(&mut rng) {
+            panic!(
+                "property {name:?} failed on case {case} (replay with \
+                 FLEXPIE_PROP_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Assertion helpers that return `Result` for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+    ($cond:expr) => {
+        if !$cond {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+}
+
+/// `prop_assert_eq!(a, b)` — equality with value reporting.
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!(
+                "{} != {} ({:?} vs {:?})",
+                stringify!($a),
+                stringify!($b),
+                a,
+                b
+            ));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let counter = std::cell::Cell::new(0usize);
+        check("count", 50, |_rng| {
+            counter.set(counter.get() + 1);
+            Ok(())
+        });
+        assert!(counter.get() >= 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"fails\" failed")]
+    fn failing_property_panics_with_seed() {
+        check("fails", 10, |rng| {
+            let v = rng.below(100);
+            prop_assert!(v < 101); // always true
+            prop_assert!(v < 1000, "fine");
+            Err("boom".to_string())
+        });
+    }
+
+    #[test]
+    fn macros_compile_in_property_context() {
+        check("macros", 5, |rng| {
+            let x = rng.below(10);
+            prop_assert!(x < 10);
+            prop_assert_eq!(x, x);
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,125 @@
+//! End-to-end three-layer tests: the Rust coordinator loads the AOT-compiled
+//! JAX/Pallas artifacts via PJRT and the numerics must agree with the native
+//! Rust kernels (which the distributed engine is validated against).
+//!
+//! Requires `make artifacts` (the Makefile's `test` target runs it first).
+//! Tests skip with a loud message when artifacts are absent so plain
+//! `cargo test` still passes in a fresh checkout.
+
+use flexpie::compute::{
+    compute_region, run_reference, PatchStore, RegionTensor, Tensor, WeightStore,
+};
+use flexpie::model::zoo;
+use flexpie::partition::Region;
+use flexpie::runtime::{signature, Runtime};
+
+fn runtime() -> Option<Runtime> {
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts/manifest.json missing — run `make artifacts`");
+        return None;
+    }
+    Some(Runtime::load(dir).expect("runtime load"))
+}
+
+#[test]
+fn runtime_loads_manifest_and_platform() {
+    let Some(rt) = runtime() else { return };
+    assert!(rt.n_artifacts() >= 9, "expected the EdgeNet menu");
+    let platform = rt.platform().to_lowercase();
+    assert!(platform == "cpu" || platform == "host", "platform = {platform}");
+    // every EdgeNet(16) layer must be covered
+    for l in &zoo::edgenet(16).layers {
+        let sig = signature(l, l.in_h, l.in_w);
+        assert!(rt.has(&sig), "missing artifact {sig}");
+    }
+}
+
+#[test]
+fn pjrt_layers_match_native_kernels() {
+    let Some(rt) = runtime() else { return };
+    let model = zoo::edgenet(16);
+    let ws = WeightStore::for_model(&model, 77);
+    let mut cur = Tensor::random(16, 16, 3, 123);
+    for (i, layer) in model.layers.iter().enumerate() {
+        // native path
+        let mut store = PatchStore::new();
+        store.add(RegionTensor::new(
+            Region::full(layer.in_h, layer.in_w, layer.in_c),
+            cur.clone(),
+        ));
+        let native = compute_region(
+            layer,
+            &ws.layers[i],
+            &store,
+            &Region::full(layer.out_h, layer.out_w, layer.out_c),
+        )
+        .t;
+        // PJRT path (AOT-lowered Pallas kernel)
+        let pjrt = rt.execute_layer(layer, &ws.layers[i], &cur).expect("pjrt exec");
+        assert_eq!((pjrt.h, pjrt.w, pjrt.c), (native.h, native.w, native.c));
+        let diff = native.max_abs_diff(&pjrt);
+        assert!(
+            diff < 1e-4,
+            "layer {i} ({}): native vs PJRT diff {diff}",
+            layer.name
+        );
+        cur = native; // feed the native activations forward
+    }
+}
+
+#[test]
+fn pjrt_full_chain_matches_reference() {
+    let Some(rt) = runtime() else { return };
+    let model = zoo::edgenet(16);
+    let ws = WeightStore::for_model(&model, 5);
+    let input = Tensor::random(16, 16, 3, 9);
+    let reference = run_reference(&model, &ws, &input);
+
+    let mut cur = input;
+    for (i, layer) in model.layers.iter().enumerate() {
+        cur = rt.execute_layer(layer, &ws.layers[i], &cur).expect("pjrt exec");
+    }
+    assert_eq!((cur.h, cur.w, cur.c), (1, 1, 10));
+    let diff = reference.max_abs_diff(&cur);
+    assert!(diff < 1e-3, "full-chain PJRT vs reference diff {diff}");
+}
+
+#[test]
+fn pjrt_executable_cache_is_reused() {
+    let Some(rt) = runtime() else { return };
+    let model = zoo::edgenet(16);
+    let ws = WeightStore::for_model(&model, 1);
+    let layer = &model.layers[0];
+    let input = Tensor::random(16, 16, 3, 2);
+    // first call compiles; subsequent calls must be much faster and equal
+    let out1 = rt.execute_layer(layer, &ws.layers[0], &input).unwrap();
+    let t0 = std::time::Instant::now();
+    let out2 = rt.execute_layer(layer, &ws.layers[0], &input).unwrap();
+    let cached = t0.elapsed();
+    assert_eq!(out1.data, out2.data);
+    assert!(cached.as_millis() < 200, "cached exec too slow: {cached:?}");
+}
+
+#[test]
+fn missing_signature_is_a_clean_error() {
+    let Some(rt) = runtime() else { return };
+    let odd = flexpie::model::LayerMeta::conv(
+        "odd",
+        flexpie::model::ConvType::Standard,
+        17,
+        17,
+        3,
+        5,
+        3,
+        1,
+        1,
+    );
+    let ws = flexpie::compute::LayerWeights {
+        w: vec![0.0; (3 * 3 * 3 * 5) as usize],
+        b: vec![0.0; 5],
+    };
+    let input = Tensor::zeros(17, 17, 3);
+    let err = rt.execute_layer(&odd, &ws, &input).unwrap_err();
+    assert!(err.to_string().contains("no artifact"), "{err}");
+}

@@ -1,0 +1,234 @@
+//! Cross-module integration tests: planner → engine → cluster → serving,
+//! plus the paper's qualitative claims on the simulated testbed.
+
+use std::time::Duration;
+
+use flexpie::baselines::{self, Solution};
+use flexpie::compute::{Tensor, WeightStore};
+use flexpie::cost::CostSource;
+use flexpie::engine;
+use flexpie::model::zoo;
+use flexpie::net::{Bandwidth, Testbed, Topology};
+use flexpie::partition::{Plan, Scheme};
+use flexpie::planner::Dpp;
+use flexpie::serve::{ServeConfig, Server};
+
+fn tb(nodes: usize, topo: Topology, gbps: f64) -> Testbed {
+    Testbed::new(nodes, topo, Bandwidth::gbps(gbps))
+}
+
+// ---------------------------------------------------------------------------
+// planner → engine → cluster
+// ---------------------------------------------------------------------------
+
+#[test]
+fn dpp_plans_execute_correctly_across_testbeds() {
+    let model = zoo::edgenet(16);
+    for nodes in [2usize, 3, 4, 5] {
+        for gbps in [5.0, 0.3] {
+            let testbed = tb(nodes, Topology::Ring, gbps);
+            let cost = CostSource::analytic(&testbed);
+            let plan = Dpp::new(&model, &cost).plan();
+            let diff = engine::verify_plan(&model, &plan, &testbed, 42);
+            assert_eq!(diff, 0.0, "n={nodes} bw={gbps} plan={}", plan.render());
+        }
+    }
+}
+
+#[test]
+fn all_baseline_plans_execute_correctly() {
+    let model = zoo::edgenet(16);
+    let testbed = tb(4, Topology::Ring, 1.0);
+    let cost = CostSource::analytic(&testbed);
+    for sol in Solution::ALL {
+        let plan = sol.plan(&model, &cost);
+        let diff = engine::verify_plan(&model, &plan, &testbed, 9);
+        assert_eq!(diff, 0.0, "{sol}");
+    }
+}
+
+#[test]
+fn larger_edgenet_distributed_execution() {
+    let model = zoo::edgenet(32);
+    let testbed = tb(4, Topology::Ps, 1.0);
+    let cost = CostSource::analytic(&testbed);
+    let plan = Dpp::new(&model, &cost).plan();
+    assert_eq!(engine::verify_plan(&model, &plan, &testbed, 3), 0.0);
+}
+
+// ---------------------------------------------------------------------------
+// the paper's qualitative claims (§4) on the simulator
+// ---------------------------------------------------------------------------
+
+/// Fig 7 claim: on the 4-node testbed, 2D-grid is the best *fixed* scheme
+/// for MobileNet-class convnets (balanced 2×2 cells), OutC the worst (full
+/// feature-map all-gather per layer).
+#[test]
+fn four_node_fixed_scheme_ordering_mobilenet() {
+    let model = zoo::mobilenet_v1(224, 1000);
+    let testbed = tb(4, Topology::Ring, 1.0);
+    let _cost = CostSource::analytic(&testbed);
+    let t = |s: Scheme| {
+        engine::evaluate(&model, &Plan::uniform(s, model.n_layers()), &testbed).total
+    };
+    let (grid, outc, inh) = (t(Scheme::Grid2d), t(Scheme::OutC), t(Scheme::InH));
+    assert!(grid < outc, "grid {grid} !< outc {outc}");
+    assert!(inh < outc, "inh {inh} !< outc {outc}");
+}
+
+/// Fig 9 claim: on 3 nodes the 2D-grid collapses (one node does 2× work),
+/// falling behind One-dim.
+#[test]
+fn three_node_grid_penalty() {
+    let model = zoo::mobilenet_v1(224, 1000);
+    let testbed = tb(3, Topology::Ring, 5.0);
+    let cost = CostSource::analytic(&testbed);
+    let t = |s: Scheme| {
+        engine::evaluate(&model, &Plan::uniform(s, model.n_layers()), &testbed).total
+    };
+    assert!(t(Scheme::Grid2d) > t(Scheme::InH));
+    // and FlexPie beats them all
+    let flex = Dpp::new(&model, &cost).plan();
+    assert!(flex.est_cost < t(Scheme::InH));
+}
+
+/// §4.1 Limitation: BERT gains little from FlexPie — row-split matmuls are
+/// already balanced and sync-free, so all solutions are close.
+#[test]
+fn bert_limitation_small_speedup() {
+    let model = zoo::bert_base(128);
+    let testbed = tb(4, Topology::Ring, 5.0);
+    let cost = CostSource::analytic(&testbed);
+    let flex = Dpp::new(&model, &cost).plan();
+    let best_fixed = Scheme::ALL
+        .iter()
+        .map(|&s| engine::evaluate(&model, &Plan::uniform(s, model.n_layers()), &testbed).total)
+        .fold(f64::INFINITY, f64::min);
+    let speedup = best_fixed / flex.est_cost;
+    assert!(
+        speedup < 1.6,
+        "BERT speedup {speedup} unexpectedly large (paper: ~none)"
+    );
+    // ... while MobileNet's speedup over its best fixed scheme is larger.
+    let mn = zoo::mobilenet_v1(224, 1000);
+    let mn_tb = tb(4, Topology::Ring, 0.5);
+    let mn_cost = CostSource::analytic(&mn_tb);
+    let mn_flex = Dpp::new(&mn, &mn_cost).plan();
+    let mn_best_fixed = Scheme::ALL
+        .iter()
+        .map(|&s| engine::evaluate(&mn, &Plan::uniform(s, mn.n_layers()), &mn_tb).total)
+        .fold(f64::INFINITY, f64::min);
+    assert!(mn_best_fixed / mn_flex.est_cost > speedup);
+}
+
+/// Headline claim: FlexPie ≥ every baseline on every (model, testbed) cell,
+/// with meaningful spread somewhere (the paper reports 1.10–2.39×).
+#[test]
+fn flexpie_dominates_baselines_paper_grid_sample() {
+    let mut max_speedup = 1.0f64;
+    for (model, trunc) in [
+        (zoo::mobilenet_v1(224, 1000), 29),
+        (zoo::resnet18(224, 1000), 20),
+    ] {
+        let model = model.truncated(trunc);
+        for nodes in [4usize, 3] {
+            for gbps in [5.0, 0.5] {
+                let testbed = tb(nodes, Topology::Ring, gbps);
+                let cost = CostSource::analytic(&testbed);
+                let flex = engine::evaluate(
+                    &model,
+                    &Solution::FlexPie.plan(&model, &cost),
+                    &testbed,
+                )
+                .total;
+                for sol in Solution::BASELINES {
+                    let t =
+                        engine::evaluate(&model, &sol.plan(&model, &cost), &testbed).total;
+                    assert!(
+                        flex <= t + 1e-9,
+                        "{sol} beat FlexPie on {} n={nodes} bw={gbps}",
+                        model.name
+                    );
+                    max_speedup = max_speedup.max(t / flex);
+                }
+            }
+        }
+    }
+    assert!(max_speedup > 1.3, "no meaningful speedup anywhere: {max_speedup}");
+}
+
+/// Layer fusion matters more at low bandwidth (the §2.3 trade-off).
+#[test]
+fn fusion_count_increases_as_bandwidth_drops() {
+    let model = zoo::mobilenet_v1(224, 1000);
+    let count_nt = |gbps: f64| {
+        let testbed = tb(4, Topology::Ring, gbps);
+        let cost = CostSource::analytic(&testbed);
+        Dpp::new(&model, &cost).plan().n_fused_layers()
+    };
+    let high = count_nt(50.0);
+    let low = count_nt(0.05);
+    assert!(low >= high, "NT layers: low-bw {low} < high-bw {high}");
+    assert!(low > 0, "no fusion even at 50 Mb/s");
+}
+
+// ---------------------------------------------------------------------------
+// serving path
+// ---------------------------------------------------------------------------
+
+#[test]
+fn serving_end_to_end_with_dpp_plan() {
+    let model = zoo::edgenet(16);
+    let testbed = tb(4, Topology::Ring, 5.0);
+    let cost = CostSource::analytic(&testbed);
+    let plan = Dpp::new(&model, &cost).plan();
+    let weights = WeightStore::for_model(&model, 42);
+    let reference_ws = WeightStore::for_model(&model, 42);
+
+    let server = Server::start(
+        model.clone(),
+        plan,
+        weights,
+        testbed,
+        ServeConfig { max_batch: 4, batch_window: Duration::from_millis(5), queue_depth: 64 },
+    );
+    let mut rxs = Vec::new();
+    for i in 0..12u64 {
+        rxs.push((i, server.submit(Tensor::random(16, 16, 3, i)).unwrap()));
+    }
+    for (i, rx) in rxs {
+        let resp = rx.recv().unwrap();
+        let reference = flexpie::compute::run_reference(
+            &model,
+            &reference_ws,
+            &Tensor::random(16, 16, 3, i),
+        );
+        assert_eq!(reference.max_abs_diff(&resp.output), 0.0, "request {i}");
+        assert!(resp.virtual_time > 0.0);
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.requests, 12);
+}
+
+// ---------------------------------------------------------------------------
+// baselines coherence
+// ---------------------------------------------------------------------------
+
+#[test]
+fn solution_hierarchy_is_ordered() {
+    // layerwise ⊆ flexpie and fused ⊆ flexpie search spaces ⇒ cost ordering.
+    let model = zoo::mobilenet_v1(224, 1000).truncated(13);
+    let testbed = tb(4, Topology::Ps, 0.5);
+    let cost = CostSource::analytic(&testbed);
+    let flex = Solution::FlexPie.plan(&model, &cost).est_cost;
+    let lw = baselines::layerwise(&model, &cost).est_cost;
+    let fused = baselines::fused_layer(&model, &cost).est_cost;
+    let fixed_best = [Scheme::InH, Scheme::InW, Scheme::OutC, Scheme::Grid2d]
+        .iter()
+        .map(|&s| baselines::fixed(&model, s, &cost).est_cost)
+        .fold(f64::INFINITY, f64::min);
+    assert!(flex <= lw + 1e-12);
+    assert!(flex <= fused + 1e-12);
+    assert!(lw <= fixed_best + 1e-12);
+    assert!(fused <= fixed_best + 1e-12);
+}

@@ -1,0 +1,323 @@
+//! Property-based tests over the coordinator's core invariants (routing
+//! geometry, batching of work across nodes, plan state machine), using the
+//! in-repo property driver (`flexpie::util::prop`).
+//!
+//! Replay a failure with `FLEXPIE_PROP_SEED=<seed> cargo test --test proptests`.
+
+use flexpie::compute::{run_reference, Tensor, WeightStore};
+use flexpie::cost::query::{boundary_query, compute_query_tiles};
+use flexpie::cost::CostSource;
+use flexpie::model::{zoo, ConvType, LayerMeta};
+use flexpie::net::{Bandwidth, Testbed, Topology};
+use flexpie::partition::geometry::{in_regions, out_tiles};
+use flexpie::partition::inflate::BlockGeometry;
+use flexpie::partition::{
+    intersection_volume, union_volume, Mode, Plan, PlanStep, Region, Scheme,
+};
+use flexpie::planner::exhaustive::plan_cost;
+use flexpie::planner::Dpp;
+use flexpie::util::prop::check;
+use flexpie::util::rng::Rng;
+use flexpie::{prop_assert, prop_assert_eq};
+
+fn random_layer(rng: &mut Rng) -> LayerMeta {
+    let conv_t = *rng.pick(&[
+        ConvType::Standard,
+        ConvType::Depthwise,
+        ConvType::Pointwise,
+        ConvType::Pool,
+        ConvType::Dense,
+    ]);
+    match conv_t {
+        ConvType::Dense => {
+            let rows = *rng.pick(&[1i64, 4, 16, 64]);
+            LayerMeta::dense("p_fc", rows, *rng.pick(&[8i64, 32, 128]), *rng.pick(&[4i64, 10, 64]))
+        }
+        _ => {
+            let h = *rng.pick(&[4i64, 7, 8, 14, 16, 28]);
+            let c_in = *rng.pick(&[1i64, 3, 8, 16]);
+            let (k, p) = match conv_t {
+                ConvType::Pointwise => (1, 0),
+                _ => *rng.pick(&[(3i64, 1i64), (3, 0), (5, 2)]),
+            };
+            if h + 2 * p < k {
+                return LayerMeta::conv("p", conv_t, h, h, c_in, c_in, 1, 1, 0);
+            }
+            let s = if rng.bool(0.3) { 2 } else { 1 };
+            let c_out = match conv_t {
+                ConvType::Depthwise | ConvType::Pool => c_in,
+                _ => *rng.pick(&[4i64, 8, 16]),
+            };
+            LayerMeta::conv("p", conv_t, h, h, c_in, c_out, k, s, p)
+        }
+    }
+}
+
+fn random_scheme(rng: &mut Rng) -> Scheme {
+    *rng.pick(&Scheme::ALL)
+}
+
+#[test]
+fn prop_tiles_partition_output_space() {
+    check("tiles_partition_output_space", 300, |rng| {
+        let layer = random_layer(rng);
+        let nodes = rng.range_incl(1, 6);
+        let scheme = random_scheme(rng);
+        let tiles = out_tiles(&layer, scheme, nodes);
+        let total: i64 = tiles.iter().map(|t| union_volume(t)).sum();
+        prop_assert_eq!(total, layer.out_volume());
+        for a in 0..nodes {
+            for b in (a + 1)..nodes {
+                prop_assert!(
+                    intersection_volume(&tiles[a], &tiles[b]) == 0,
+                    "tiles {a},{b} overlap for {layer:?} {scheme} n={nodes}"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_in_region_covers_receptive_field() {
+    check("in_region_covers_receptive_field", 300, |rng| {
+        let layer = random_layer(rng);
+        let nodes = rng.range_incl(1, 6);
+        let scheme = random_scheme(rng);
+        let tiles = out_tiles(&layer, scheme, nodes);
+        for t in &tiles {
+            for need in in_regions(&layer, t) {
+                let valid = Region::full(layer.in_h, layer.in_w, layer.in_c);
+                prop_assert!(
+                    valid.contains(&need),
+                    "in_region escapes valid input: {need:?} vs {valid:?}"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_union_volume_bounds() {
+    check("union_volume_bounds", 500, |rng| {
+        let n = rng.range_incl(1, 5);
+        let mut regions = Vec::new();
+        for _ in 0..n {
+            let h0 = rng.below(10) as i64;
+            let w0 = rng.below(10) as i64;
+            let c0 = rng.below(4) as i64;
+            regions.push(Region::new(
+                h0,
+                h0 + rng.below(8) as i64,
+                w0,
+                w0 + rng.below(8) as i64,
+                c0,
+                c0 + rng.below(4) as i64,
+            ));
+        }
+        let u = union_volume(&regions);
+        let sum: i64 = regions.iter().map(Region::volume).sum();
+        let max = regions.iter().map(Region::volume).max().unwrap_or(0);
+        prop_assert!(u <= sum, "union {u} > sum {sum}");
+        prop_assert!(u >= max, "union {u} < max {max}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_block_inflation_monotone_and_anchored() {
+    check("block_inflation_monotone", 200, |rng| {
+        // same-shape conv chains so any span is geometrically valid
+        let h = *rng.pick(&[8i64, 14, 16, 28]);
+        let c = *rng.pick(&[4i64, 8]);
+        let span = rng.range_incl(1, 4);
+        let model = zoo::tiny_chain(span, h, c);
+        let nodes = rng.range_incl(2, 5);
+        let scheme = random_scheme(rng);
+        let geo = BlockGeometry::new(&model.layers, scheme, nodes);
+        let mut prev = f64::INFINITY;
+        for l in 0..span {
+            let infl = geo.inflation(&model.layers, l);
+            prop_assert!(infl >= 1.0 - 1e-12, "inflation < 1 at layer {l}");
+            prop_assert!(infl <= prev + 1e-12, "inflation not decreasing towards end");
+            prev = infl;
+        }
+        prop_assert!((geo.inflation(&model.layers, span - 1) - 1.0).abs() < 1e-12);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_boundary_messages_deliver_exactly_what_is_missing() {
+    check("boundary_delivers_missing", 200, |rng| {
+        let h = *rng.pick(&[8i64, 14, 16]);
+        let c = *rng.pick(&[4i64, 8]);
+        let producer = LayerMeta::conv("a", ConvType::Standard, h, h, c, c, 3, 1, 1);
+        let consumer = LayerMeta::conv("b", ConvType::Standard, h, h, c, c, 3, 1, 1);
+        let nodes = rng.range_incl(2, 5);
+        let p_from = random_scheme(rng);
+        let p_to = random_scheme(rng);
+        let tb = Testbed::new(nodes, Topology::Mesh, Bandwidth::gbps(1.0));
+        let geo = BlockGeometry::new(std::slice::from_ref(&consumer), p_to, nodes);
+        let q = boundary_query(&producer, p_from, &consumer, p_to, &geo.entry_need, &tb);
+        // each node's received bytes == vol(need \ have) × 4
+        let have = out_tiles(&producer, p_from, nodes);
+        for b in 0..nodes {
+            let need_vol = union_volume(&geo.entry_need[b]);
+            let held = intersection_volume(&have[b], &geo.entry_need[b]);
+            let expect = (need_vol - held) as u64 * 4;
+            let got: u64 = (0..nodes).map(|a| q.msgs[a * nodes + b]).sum();
+            prop_assert_eq!(got, expect);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_compute_query_flops_conservation() {
+    check("compute_query_flops", 200, |rng| {
+        let layer = random_layer(rng);
+        let nodes = rng.range_incl(1, 6);
+        let scheme = random_scheme(rng);
+        let tb = Testbed::new(nodes, Topology::Ring, Bandwidth::gbps(1.0));
+        let tiles = out_tiles(&layer, scheme, nodes);
+        let q = compute_query_tiles(&layer, &tiles, scheme, &tb);
+        let total: f64 = q.per_node_flops[..nodes].iter().sum();
+        // canonical tiles partition the output → per-node flops sum to the
+        // layer's total flops (speed factors are 1.0 here)
+        prop_assert!(
+            (total - layer.flops()).abs() <= 1e-6 * layer.flops().max(1.0),
+            "flops {total} vs layer {}",
+            layer.flops()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_exchange_time_monotone_in_bytes_and_bandwidth() {
+    check("exchange_monotonicity", 200, |rng| {
+        let nodes = rng.range_incl(2, 6);
+        let topo = *rng.pick(&Topology::ALL);
+        let mut msgs = vec![0u64; nodes * nodes];
+        for a in 0..nodes {
+            for b in 0..nodes {
+                if a != b && rng.bool(0.5) {
+                    msgs[a * nodes + b] = rng.below(1_000_000) as u64;
+                }
+            }
+        }
+        let fast = Testbed::new(nodes, topo, Bandwidth::gbps(5.0));
+        let slow = Testbed::new(nodes, topo, Bandwidth::gbps(0.5));
+        let t_fast = fast.exchange_time(&msgs);
+        let t_slow = slow.exchange_time(&msgs);
+        prop_assert!(t_slow >= t_fast);
+        // doubling every message can't reduce time
+        let doubled: Vec<u64> = msgs.iter().map(|&m| m * 2).collect();
+        prop_assert!(fast.exchange_time(&doubled) >= t_fast);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_plan_cost_decomposition() {
+    check("plan_cost_decomposition", 100, |rng| {
+        let model = zoo::tiny_chain(rng.range_incl(1, 5), 12, 8);
+        let nodes = rng.range_incl(2, 5);
+        let tb = Testbed::new(nodes, *rng.pick(&Topology::ALL), Bandwidth::gbps(1.0));
+        let cost = CostSource::analytic(&tb);
+        // random valid plan: random blocks, one scheme per block
+        let plan = random_plan(rng, model.n_layers());
+        let pc = plan_cost(&model, &plan, &cost);
+        prop_assert!((pc.total - pc.compute - pc.sync).abs() < 1e-12);
+        prop_assert_eq!(pc.per_layer_compute.len(), model.n_layers());
+        prop_assert_eq!(pc.per_boundary_sync.len(), plan.blocks().len() + 1);
+        prop_assert!(pc.total > 0.0);
+        Ok(())
+    });
+}
+
+fn random_plan(rng: &mut Rng, n: usize) -> Plan {
+    let mut steps = Vec::with_capacity(n);
+    let mut i = 0;
+    while i < n {
+        let span = rng.range_incl(1, (n - i).min(3));
+        let scheme = random_scheme(rng);
+        for _ in 0..span - 1 {
+            steps.push(PlanStep { scheme, mode: Mode::NT });
+        }
+        steps.push(PlanStep { scheme, mode: Mode::T });
+        i += span;
+    }
+    let plan = Plan { steps, est_cost: f64::NAN };
+    plan.validate().expect("random plan invalid");
+    plan
+}
+
+#[test]
+fn prop_random_plans_execute_to_reference() {
+    // The heavyweight end-to-end property: ANY valid plan executed on the
+    // simulated cluster reproduces the single-node reference exactly.
+    check("random_plans_execute_to_reference", 25, |rng| {
+        let model = zoo::edgenet(16);
+        let nodes = rng.range_incl(2, 5);
+        let plan = random_plan(rng, model.n_layers());
+        let ws = WeightStore::for_model(&model, rng.next_u64());
+        let input = Tensor::random(16, 16, 3, rng.next_u64());
+        let reference = run_reference(&model, &ws, &input);
+        let run =
+            flexpie::cluster::run_distributed(&model, &plan, &ws, &input, nodes);
+        let diff = reference.max_abs_diff(&run.output);
+        prop_assert!(
+            diff == 0.0,
+            "plan {} on {nodes} nodes diverged by {diff}",
+            plan.render()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dpp_dominates_random_plans() {
+    // DPP's estimate is a lower bound over every plan in its search space.
+    check("dpp_dominates_random_plans", 40, |rng| {
+        let model = zoo::tiny_chain(rng.range_incl(2, 5), 14, 8);
+        let nodes = rng.range_incl(2, 5);
+        let tb = Testbed::new(nodes, *rng.pick(&Topology::ALL), Bandwidth::gbps(1.0));
+        let cost = CostSource::analytic(&tb);
+        let dpp = Dpp::new(&model, &cost).plan();
+        let rand_plan = random_plan(rng, model.n_layers());
+        let rc = plan_cost(&model, &rand_plan, &cost).total;
+        prop_assert!(
+            dpp.est_cost <= rc + 1e-9,
+            "random plan {} ({rc}) beat DPP ({})",
+            rand_plan.render(),
+            dpp.est_cost
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_model_zoo_truncations_always_plannable() {
+    check("zoo_truncations_plannable", 30, |rng| {
+        let full = match rng.below(3) {
+            0 => zoo::mobilenet_v1(224, 1000),
+            1 => zoo::resnet18(224, 1000),
+            _ => zoo::bert_base(128),
+        };
+        let n = rng.range_incl(1, full.n_layers().min(10));
+        let model = full.truncated(n);
+        let tb = Testbed::new(
+            rng.range_incl(2, 6),
+            *rng.pick(&Topology::ALL),
+            Bandwidth::gbps(rng.range_f64(0.1, 6.0)),
+        );
+        let cost = CostSource::analytic(&tb);
+        let plan = Dpp::new(&model, &cost).plan();
+        plan.validate().map_err(|e| e.to_string())?;
+        prop_assert!(plan.est_cost.is_finite() && plan.est_cost > 0.0);
+        Ok(())
+    });
+}

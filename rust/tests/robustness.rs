@@ -1,0 +1,229 @@
+//! Robustness and failure-injection tests: heterogeneous clusters, corrupt
+//! artifacts, degenerate models, protocol failures, and fuzzed persistence.
+
+use flexpie::compute::{Tensor, WeightStore};
+use flexpie::cost::query::compute_query_tiles;
+use flexpie::cost::CostSource;
+use flexpie::model::passes::{preoptimize, raw_conv_bn_relu_chain, verify_planner_ready};
+use flexpie::model::{zoo, ConvType, LayerMeta, Model};
+use flexpie::net::{Bandwidth, Testbed, Topology};
+use flexpie::partition::geometry::out_tiles;
+use flexpie::partition::{Plan, Scheme};
+use flexpie::planner::Dpp;
+use flexpie::util::json::{parse, Json};
+use flexpie::util::prop::check;
+use flexpie::util::rng::Rng;
+use flexpie::util::tmp::TempDir;
+
+// ---------------------------------------------------------------------------
+// heterogeneous clusters
+// ---------------------------------------------------------------------------
+
+#[test]
+fn heterogeneous_speeds_raise_cost_and_shift_bottleneck() {
+    let model = zoo::mobilenet_v1(224, 1000).truncated(9);
+    let homo = Testbed::new(4, Topology::Ring, Bandwidth::gbps(1.0));
+    let hetero = Testbed::new(4, Topology::Ring, Bandwidth::gbps(1.0))
+        .with_speed(vec![1.0, 1.0, 0.5, 1.0]);
+    let plan_h = Dpp::new(&model, &CostSource::analytic(&homo)).plan();
+    let plan_x = Dpp::new(&model, &CostSource::analytic(&hetero)).plan();
+    // a half-speed node can only make things slower...
+    assert!(plan_x.est_cost > plan_h.est_cost);
+    // ...but the planner must still produce something executable with exact
+    // numerics on the heterogeneous cluster
+    let diff = flexpie::engine::verify_plan(&model, &plan_x, &hetero, 3);
+    assert_eq!(diff, 0.0);
+}
+
+#[test]
+fn heterogeneous_compute_query_respects_speed() {
+    let layer = LayerMeta::conv("c", ConvType::Standard, 16, 16, 8, 8, 3, 1, 1);
+    let tb = Testbed::new(4, Topology::Ring, Bandwidth::gbps(1.0))
+        .with_speed(vec![2.0, 1.0, 1.0, 1.0]);
+    let tiles = out_tiles(&layer, Scheme::InH, 4);
+    let q = compute_query_tiles(&layer, &tiles, Scheme::InH, &tb);
+    // node 0 is twice as fast → half the effective flops
+    assert!((q.per_node_flops[0] * 2.0 - q.per_node_flops[1]).abs() < 1e-6);
+}
+
+#[test]
+#[should_panic(expected = "edge clusters are small")]
+fn oversized_cluster_rejected() {
+    let _ = Testbed::new(64, Topology::Ring, Bandwidth::gbps(1.0));
+}
+
+// ---------------------------------------------------------------------------
+// protocol / engine failure injection
+// ---------------------------------------------------------------------------
+
+#[test]
+#[should_panic(expected = "invalid plan")]
+fn engine_rejects_invalid_plan() {
+    let model = zoo::edgenet(16);
+    let mut plan = Plan::uniform(Scheme::InH, model.n_layers());
+    plan.steps.last_mut().unwrap().mode = flexpie::partition::Mode::NT; // illegal
+    let ws = WeightStore::for_model(&model, 1);
+    let input = Tensor::random(16, 16, 3, 1);
+    let _ = flexpie::cluster::run_distributed(&model, &plan, &ws, &input, 4);
+}
+
+#[test]
+#[should_panic]
+fn engine_rejects_wrong_plan_length() {
+    let model = zoo::edgenet(16);
+    let plan = Plan::uniform(Scheme::InH, model.n_layers() - 1);
+    let ws = WeightStore::for_model(&model, 1);
+    let input = Tensor::random(16, 16, 3, 1);
+    let _ = flexpie::cluster::run_distributed(&model, &plan, &ws, &input, 4);
+}
+
+#[test]
+#[should_panic(expected = "input shape mismatch")]
+fn reference_rejects_wrong_input_shape() {
+    let model = zoo::edgenet(16);
+    let ws = WeightStore::for_model(&model, 1);
+    let bad = Tensor::random(8, 8, 3, 1);
+    let _ = flexpie::compute::run_reference(&model, &ws, &bad);
+}
+
+// ---------------------------------------------------------------------------
+// artifact / persistence corruption
+// ---------------------------------------------------------------------------
+
+#[test]
+fn corrupt_manifest_is_clean_error() {
+    let dir = TempDir::new("corrupt");
+    std::fs::write(dir.path().join("manifest.json"), "{not json").unwrap();
+    assert!(flexpie::runtime::Runtime::load(dir.path()).is_err());
+    std::fs::write(dir.path().join("manifest.json"), r#"{"wrong_key": {}}"#).unwrap();
+    match flexpie::runtime::Runtime::load(dir.path()) {
+        Ok(_) => panic!("corrupt manifest accepted"),
+        Err(err) => assert!(err.to_string().contains("artifacts"), "{err}"),
+    }
+}
+
+#[test]
+fn manifest_pointing_at_missing_file_errors_at_use() {
+    let dir = TempDir::new("missing_hlo");
+    std::fs::write(
+        dir.path().join("manifest.json"),
+        r#"{"artifacts": {"conv2d_ih4_iw4_ic1_oc1_k1_s1_p0": "nope.hlo.txt"}}"#,
+    )
+    .unwrap();
+    let rt = flexpie::runtime::Runtime::load(dir.path()).unwrap();
+    let layer = LayerMeta::conv("c", ConvType::Pointwise, 4, 4, 1, 1, 1, 1, 0);
+    let ws = flexpie::compute::LayerWeights { w: vec![1.0], b: vec![0.0] };
+    let input = Tensor::zeros(4, 4, 1);
+    assert!(rt.execute_layer(&layer, &ws, &input).is_err());
+}
+
+#[test]
+fn corrupt_gbdt_file_is_clean_error() {
+    let dir = TempDir::new("gbdt_corrupt");
+    let p = dir.path().join("m.json");
+    std::fs::write(&p, r#"{"base": 1.0}"#).unwrap();
+    assert!(flexpie::cost::gbdt::Gbdt::load(&p).is_err());
+    std::fs::write(&p, "garbage").unwrap();
+    assert!(flexpie::cost::gbdt::Gbdt::load(&p).is_err());
+}
+
+#[test]
+fn prop_json_fuzz_roundtrip() {
+    // random JSON values survive serialize → parse exactly
+    fn random_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.bool(0.5)),
+            2 => Json::Num((rng.f64() - 0.5) * 10f64.powi(rng.below(40) as i32 - 20)),
+            3 => {
+                let n = rng.below(12);
+                Json::Str((0..n).map(|_| *rng.pick(&['a', '"', '\\', 'é', '\n', '7'])).collect())
+            }
+            4 => Json::Arr((0..rng.below(4)).map(|_| random_json(rng, depth - 1)).collect()),
+            _ => Json::obj(
+                (0..rng.below(4))
+                    .map(|i| (["k0", "k1", "k2", "k3"][i], random_json(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    check("json_fuzz_roundtrip", 300, |rng| {
+        let v = random_json(rng, 3);
+        let text = v.to_string();
+        let back = parse(&text).map_err(|e| format!("{e}: {text}"))?;
+        if back != v {
+            return Err(format!("roundtrip mismatch: {text}"));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// pre-optimization passes → planner integration
+// ---------------------------------------------------------------------------
+
+#[test]
+fn raw_imported_graph_plans_and_executes() {
+    let raw = raw_conv_bn_relu_chain("imported", 4, 16, 8);
+    let (model, stats) = preoptimize(&raw);
+    assert_eq!(stats.bn_folded, 4);
+    assert_eq!(stats.activations_fused, 4);
+    verify_planner_ready(&model).unwrap();
+    let tb = Testbed::new(4, Topology::Ring, Bandwidth::gbps(1.0));
+    let plan = Dpp::new(&model, &CostSource::analytic(&tb)).plan();
+    // fused ReLUs must survive distributed execution (max(0,·) per node)
+    assert_eq!(flexpie::engine::verify_plan(&model, &plan, &tb, 5), 0.0);
+}
+
+// ---------------------------------------------------------------------------
+// degenerate models
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fc_only_model_plans_on_any_cluster() {
+    let model = Model::new(
+        "fc_only",
+        vec![LayerMeta::dense("fc1", 1, 64, 64), LayerMeta::dense("fc2", 1, 64, 10)],
+    );
+    for nodes in [2usize, 4, 6] {
+        let tb = Testbed::new(nodes, Topology::Ps, Bandwidth::gbps(1.0));
+        let plan = Dpp::new(&model, &CostSource::analytic(&tb)).plan();
+        plan.validate().unwrap();
+        // single-row FCs cannot be spatially split — execution must still be
+        // exact (idle nodes simply hold nothing)
+        assert_eq!(flexpie::engine::verify_plan(&model, &plan, &tb, 2), 0.0);
+    }
+}
+
+#[test]
+fn stride_heavy_model_executes() {
+    // consecutive stride-2 layers shrink the map below the node count
+    let model = Model::new(
+        "shrinky",
+        vec![
+            LayerMeta::conv("a", ConvType::Standard, 16, 16, 3, 8, 3, 2, 1),
+            LayerMeta::conv("b", ConvType::Standard, 8, 8, 8, 8, 3, 2, 1),
+            LayerMeta::conv("c", ConvType::Standard, 4, 4, 8, 8, 3, 2, 1),
+            LayerMeta::conv("d", ConvType::Standard, 2, 2, 8, 8, 3, 2, 1),
+        ],
+    );
+    for nodes in [3usize, 4, 6] {
+        let tb = Testbed::new(nodes, Topology::Mesh, Bandwidth::gbps(0.5));
+        let plan = Dpp::new(&model, &CostSource::analytic(&tb)).plan();
+        assert_eq!(flexpie::engine::verify_plan(&model, &plan, &tb, 8), 0.0, "n={nodes}");
+    }
+}
+
+#[test]
+fn big_kernel_model_executes() {
+    let model = Model::new(
+        "wide_rf",
+        vec![
+            LayerMeta::conv("a", ConvType::Standard, 20, 20, 3, 4, 7, 1, 3),
+            LayerMeta::conv("b", ConvType::Standard, 20, 20, 4, 4, 5, 1, 2),
+        ],
+    );
+    let tb = Testbed::new(4, Topology::Ring, Bandwidth::gbps(0.2));
+    let plan = Dpp::new(&model, &CostSource::analytic(&tb)).plan();
+    assert_eq!(flexpie::engine::verify_plan(&model, &plan, &tb, 4), 0.0);
+}
