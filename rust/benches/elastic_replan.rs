@@ -1,0 +1,68 @@
+//! Elastic adaptation latency — what a replan costs on the serving path.
+//!
+//! Three numbers matter for online adaptation: the cold replan (full DPP
+//! search for an unseen condition cell), the warm plan-cache hit, and the
+//! steady-state `on_batch` monitor check (re-pricing the active plan). The
+//! bench measures each in isolation and emits a single-line JSON summary
+//! (prefixed `RESULT `) for trajectory tracking across PRs.
+//!
+//! ```bash
+//! cargo bench --bench elastic_replan            # full
+//! FLEXPIE_BENCH_FAST=1 cargo bench --bench elastic_replan   # CI smoke
+//! ```
+
+use std::sync::Arc;
+
+use flexpie::elastic::{CacheKey, ConditionTrace, ElasticConfig, ElasticController, PlanCache};
+use flexpie::model::zoo;
+use flexpie::net::{Bandwidth, Testbed, Topology};
+use flexpie::planner::plan_for_testbed;
+use flexpie::util::bench::{black_box, BenchRunner};
+use flexpie::util::json::Json;
+
+fn main() {
+    let r = BenchRunner::new("elastic_replan");
+    let base = Testbed::new(4, Topology::Ring, Bandwidth::gbps(1.0));
+    let model = zoo::mobilenet_v1(224, 1000).truncated(12);
+
+    // --- cold replan: full DPP for an unseen condition cell ----------------
+    let cold = r.bench("cold_replan/mobilenet12_4node", || {
+        plan_for_testbed(black_box(&model), black_box(&base))
+    });
+
+    // --- warm path: plan-cache hit ------------------------------------------
+    let trace = ConditionTrace::stable(4);
+    let snap = trace.sample(0.0);
+    let key = CacheKey::new(&model.name, snap.quantize());
+    let mut cache = PlanCache::new(8);
+    cache.put(key.clone(), Arc::new(plan_for_testbed(&model, &base)));
+    let hit = r.bench("cache_hit/get", || cache.get(black_box(&key)));
+
+    // --- steady state: per-batch monitor check (no swap) --------------------
+    let mut ctl = ElasticController::new(
+        model.clone(),
+        base.clone(),
+        ConditionTrace::stable(4),
+        ElasticConfig::default(),
+    );
+    let mut t = 0.0f64;
+    let monitor = r.bench("on_batch/stable_fast_path", || {
+        t += 1e-3;
+        ctl.on_batch(t)
+    });
+
+    // --- single-line JSON summary -------------------------------------------
+    let summary = Json::obj(vec![
+        ("bench", Json::Str("elastic_replan".into())),
+        ("model", Json::Str(model.name.clone())),
+        ("nodes", Json::Num(4.0)),
+        ("cold_replan_ms", Json::Num(cold.mean_secs() * 1e3)),
+        ("cache_hit_us", Json::Num(hit.mean_secs() * 1e6)),
+        ("on_batch_us", Json::Num(monitor.mean_secs() * 1e6)),
+        (
+            "replan_speedup_vs_cache",
+            Json::Num(cold.mean_secs() / hit.mean_secs().max(1e-12)),
+        ),
+    ]);
+    println!("RESULT {}", summary.to_string());
+}

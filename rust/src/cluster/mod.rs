@@ -103,6 +103,26 @@ pub fn run_distributed(
     ClusterRun { output: output.expect("leader produced no output"), bytes_exchanged: bytes, messages }
 }
 
+/// Execute `plan` on the surviving sub-cluster described by `alive` — the
+/// failure-injection entry point used by [`crate::elastic`] when a device
+/// drops out. Node identity only selects a tile index, so a failed device's
+/// share of work redistributes by running the same deterministic protocol on
+/// the smaller logical cluster (ids compact in original order, matching
+/// [`crate::net::Testbed::subset`]). The plan itself is node-count-agnostic
+/// (`Plan::validate` is structural), so any valid plan executes — though an
+/// optimal swap-in plan should come from replanning on the degraded testbed.
+pub fn run_degraded(
+    model: &Model,
+    plan: &Plan,
+    weights: &WeightStore,
+    input: &Tensor,
+    alive: &[bool],
+) -> ClusterRun {
+    let survivors = alive.iter().filter(|&&a| a).count();
+    assert!(survivors >= 1, "no surviving nodes");
+    run_distributed(model, plan, weights, input, survivors)
+}
+
 struct NodeResult {
     output: Option<Tensor>,
     sent_bytes: u64,
@@ -367,6 +387,30 @@ mod tests {
         let run = run_distributed(&model, &plan, &ws, &input, 4);
         assert!(run.bytes_exchanged > 0);
         assert!(run.messages > 0);
+    }
+
+    #[test]
+    fn degraded_cluster_still_matches_reference() {
+        // kill one of four nodes: the remaining three produce bit-identical
+        // output (work redistributes; every element keeps one accumulation
+        // order)
+        let model = zoo::edgenet(16);
+        let ws = WeightStore::for_model(&model, 11);
+        let input = Tensor::random(16, 16, 3, 42);
+        let reference = run_reference(&model, &ws, &input);
+        let plan = Plan::uniform(Scheme::InH, model.n_layers());
+        let run = run_degraded(&model, &plan, &ws, &input, &[true, true, false, true]);
+        assert_eq!(reference.max_abs_diff(&run.output), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "no surviving nodes")]
+    fn degraded_cluster_needs_a_survivor() {
+        let model = zoo::edgenet(16);
+        let ws = WeightStore::for_model(&model, 1);
+        let input = Tensor::random(16, 16, 3, 1);
+        let plan = Plan::uniform(Scheme::InH, model.n_layers());
+        run_degraded(&model, &plan, &ws, &input, &[false, false]);
     }
 
     #[test]

@@ -1,6 +1,8 @@
 //! Experiment configuration: the testbed/benchmark grids of the paper's §4,
-//! loadable from JSON for custom sweeps.
+//! plus the dynamic-conditions experiments of [`crate::elastic`], loadable
+//! from JSON for custom sweeps.
 
+use crate::elastic::{ConditionTrace, ElasticConfig, Profile};
 use crate::net::{Bandwidth, Testbed, Topology};
 use crate::util::json::Json;
 
@@ -106,6 +108,83 @@ impl ExperimentGrid {
     }
 }
 
+/// A dynamic-conditions serving experiment: which condition profile to run,
+/// for how long, and how the elastic controller is tuned.
+#[derive(Debug, Clone)]
+pub struct ElasticExperiment {
+    /// Condition profile name (`stable`, `diurnal-drift`, `lossy-link`,
+    /// `node-churn`).
+    pub profile: String,
+    pub seed: u64,
+    /// Virtual-time horizon of the run, seconds.
+    pub horizon: f64,
+    pub degrade_threshold: f64,
+    pub cache_capacity: usize,
+}
+
+impl Default for ElasticExperiment {
+    fn default() -> Self {
+        let ecfg = ElasticConfig::default();
+        ElasticExperiment {
+            profile: "diurnal-drift".into(),
+            seed: 7,
+            horizon: 120.0,
+            degrade_threshold: ecfg.degrade_threshold,
+            cache_capacity: ecfg.cache_capacity,
+        }
+    }
+}
+
+impl ElasticExperiment {
+    /// The controller tuning described by this experiment.
+    pub fn controller_config(&self) -> ElasticConfig {
+        ElasticConfig {
+            degrade_threshold: self.degrade_threshold,
+            cache_capacity: self.cache_capacity,
+        }
+    }
+
+    /// Build the condition trace for an `nodes`-device cluster.
+    pub fn trace(&self, nodes: usize) -> Result<ConditionTrace, String> {
+        Ok(match self.profile.parse::<Profile>()? {
+            Profile::Stable => ConditionTrace::stable(nodes),
+            Profile::DiurnalDrift => ConditionTrace::diurnal_drift(nodes, self.seed),
+            Profile::LossyLink => ConditionTrace::lossy_link(nodes, self.seed),
+            Profile::NodeChurn => ConditionTrace::node_churn(nodes, self.seed),
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("profile", Json::Str(self.profile.clone())),
+            ("seed", Json::Num(self.seed as f64)),
+            ("horizon", Json::Num(self.horizon)),
+            ("degrade_threshold", Json::Num(self.degrade_threshold)),
+            ("cache_capacity", Json::Num(self.cache_capacity as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<ElasticExperiment, String> {
+        let num = |key: &str| v.req(key)?.as_f64().ok_or_else(|| key.to_string());
+        Ok(ElasticExperiment {
+            profile: v
+                .req("profile")?
+                .as_str()
+                .ok_or_else(|| "profile".to_string())?
+                .to_string(),
+            seed: num("seed")? as u64,
+            horizon: num("horizon")?,
+            degrade_threshold: num("degrade_threshold")?,
+            cache_capacity: num("cache_capacity")? as usize,
+        })
+    }
+
+    pub fn load(path: &std::path::Path) -> std::io::Result<ElasticExperiment> {
+        let v = Json::load(path)?;
+        Self::from_json(&v).map_err(std::io::Error::other)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -135,5 +214,18 @@ mod tests {
         ExperimentGrid::smoke().to_json().save(&p).unwrap();
         let g = ExperimentGrid::load(&p).unwrap();
         assert_eq!(g.models, vec!["mobilenet"]);
+    }
+
+    #[test]
+    fn elastic_experiment_roundtrip_and_trace() {
+        let e = ElasticExperiment::default();
+        let e2 = ElasticExperiment::from_json(&e.to_json()).unwrap();
+        assert_eq!(e.profile, e2.profile);
+        assert_eq!(e.seed, e2.seed);
+        assert_eq!(e.cache_capacity, e2.cache_capacity);
+        let trace = e2.trace(4).unwrap();
+        assert_eq!(trace.nodes, 4);
+        assert_eq!(trace.profile, Profile::DiurnalDrift);
+        assert!(ElasticExperiment { profile: "bogus".into(), ..e }.trace(4).is_err());
     }
 }

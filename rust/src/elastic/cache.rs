@@ -1,0 +1,190 @@
+//! Plan cache — memoized DPP results keyed by (model, quantized conditions).
+//!
+//! Replanning is the expensive step of online adaptation (a full DPP search
+//! is `O(n²k)` estimator queries), and edge conditions revisit the same
+//! regimes — a link that degrades at noon recovers at night, a device that
+//! drops rejoins. The cache makes those revisits free: plans are stored
+//! under a [`CacheKey`] whose condition half is the 12.5%-bucketed
+//! [`SnapshotKey`], so near-identical conditions share one plan, and an LRU
+//! policy bounds memory on long-running servers.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use super::conditions::SnapshotKey;
+use crate::partition::Plan;
+
+/// Cache key: which model, under which quantized cluster conditions.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct CacheKey {
+    pub model: String,
+    pub snapshot: SnapshotKey,
+}
+
+impl CacheKey {
+    pub fn new(model: &str, snapshot: SnapshotKey) -> CacheKey {
+        CacheKey { model: model.to_string(), snapshot }
+    }
+}
+
+struct Entry {
+    plan: Arc<Plan>,
+    last_used: u64,
+}
+
+/// LRU-evicting memo of planned solutions.
+pub struct PlanCache {
+    capacity: usize,
+    tick: u64,
+    map: HashMap<CacheKey, Entry>,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+impl PlanCache {
+    pub fn new(capacity: usize) -> PlanCache {
+        assert!(capacity >= 1, "cache capacity must be >= 1");
+        PlanCache { capacity, tick: 0, map: HashMap::new(), hits: 0, misses: 0, evictions: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Fraction of lookups served warm (0.0 before any lookup).
+    pub fn hit_rate(&self) -> f64 {
+        crate::metrics::hit_ratio(self.hits, self.misses)
+    }
+
+    /// Look up a warm plan, updating recency and hit/miss counters.
+    pub fn get(&mut self, key: &CacheKey) -> Option<Arc<Plan>> {
+        self.tick += 1;
+        match self.map.get_mut(key) {
+            Some(e) => {
+                e.last_used = self.tick;
+                self.hits += 1;
+                Some(e.plan.clone())
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert (or refresh) a plan, evicting the least recently used entry
+    /// when over capacity.
+    pub fn put(&mut self, key: CacheKey, plan: Arc<Plan>) {
+        self.tick += 1;
+        self.map.insert(key, Entry { plan, last_used: self.tick });
+        if self.map.len() > self.capacity {
+            // O(n) LRU scan — capacities are tens of entries, not millions.
+            let victim = self
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone())
+                .expect("non-empty map over capacity");
+            self.map.remove(&victim);
+            self.evictions += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::elastic::conditions::ConditionTrace;
+    use crate::model::zoo;
+    use crate::net::{Bandwidth, Testbed, Topology};
+    use crate::partition::{Plan, Scheme};
+    use crate::planner::plan_for_testbed;
+
+    fn key(model: &str, t: f64) -> CacheKey {
+        CacheKey::new(model, ConditionTrace::stable(4).sample(t).quantize())
+    }
+
+    fn dummy_plan(n: usize) -> Arc<Plan> {
+        Arc::new(Plan::uniform(Scheme::InH, n))
+    }
+
+    #[test]
+    fn near_identical_conditions_hit() {
+        let mut cache = PlanCache::new(4);
+        // two snapshots a few percent apart → same quantized cell
+        let a = crate::elastic::conditions::ClusterSnapshot {
+            t: 0.0,
+            alive: vec![true; 4],
+            bandwidth_factor: 1.0,
+            speed_factors: vec![1.0; 4],
+        };
+        let mut b = a.clone();
+        b.t = 0.3;
+        b.bandwidth_factor = 0.97;
+        b.speed_factors[2] = 1.02;
+        let k1 = CacheKey::new("m", a.quantize());
+        let k2 = CacheKey::new("m", b.quantize());
+        assert_eq!(k1, k2, "a 3% wiggle crossed a bucket");
+        assert!(cache.get(&k1).is_none());
+        cache.put(k1, dummy_plan(4));
+        assert!(cache.get(&k2).is_some());
+        assert_eq!((cache.hits, cache.misses), (1, 1));
+        assert!((cache.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn distinct_models_do_not_collide() {
+        let mut cache = PlanCache::new(4);
+        cache.put(key("a", 0.0), dummy_plan(4));
+        assert!(cache.get(&key("b", 0.0)).is_none());
+        assert!(cache.get(&key("a", 0.0)).is_some());
+    }
+
+    #[test]
+    fn eviction_respects_capacity_and_recency() {
+        let mut cache = PlanCache::new(2);
+        let trace = ConditionTrace::stable(4);
+        let mut keys = Vec::new();
+        for (i, bw) in [1.0, 0.75, 0.5].iter().enumerate() {
+            let mut snap = trace.sample(i as f64);
+            snap.bandwidth_factor = *bw;
+            keys.push(CacheKey::new("m", snap.quantize()));
+        }
+        cache.put(keys[0].clone(), dummy_plan(4));
+        cache.put(keys[1].clone(), dummy_plan(4));
+        assert!(cache.get(&keys[0]).is_some()); // freshen keys[0]
+        cache.put(keys[2].clone(), dummy_plan(4)); // evicts keys[1] (LRU)
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.evictions, 1);
+        assert!(cache.get(&keys[0]).is_some());
+        assert!(cache.get(&keys[1]).is_none(), "LRU victim survived");
+        assert!(cache.get(&keys[2]).is_some());
+    }
+
+    #[test]
+    fn cached_plan_equals_fresh_plan_for_same_snapshot() {
+        // the end-to-end cache contract: serving a warm plan must be
+        // indistinguishable from replanning for the same quantized snapshot
+        let model = zoo::edgenet(16);
+        let base = Testbed::new(4, Topology::Ring, Bandwidth::gbps(1.0));
+        let snap = ConditionTrace::stable(4).sample(0.0);
+        let effective = snap.apply(&base);
+        let fresh1 = plan_for_testbed(&model, &effective);
+        let mut cache = PlanCache::new(4);
+        let k = CacheKey::new(&model.name, snap.quantize());
+        cache.put(k.clone(), Arc::new(fresh1.clone()));
+        let warm = cache.get(&k).unwrap();
+        let fresh2 = plan_for_testbed(&model, &effective);
+        assert_eq!(*warm, fresh1);
+        assert_eq!(fresh1, fresh2, "DPP is deterministic");
+    }
+}

@@ -1,0 +1,398 @@
+//! Dynamic cluster conditions over virtual time.
+//!
+//! A [`ConditionTrace`] is a deterministic, seeded function from virtual
+//! time to a [`ClusterSnapshot`]: which devices are alive, how fast the
+//! interconnect currently is relative to the baseline [`Testbed`], and how
+//! fast each device currently runs relative to its profile. Built-in
+//! [`Profile`]s cover the scenario families DistrEdge/DEFER motivate —
+//! steady state, slow diurnal bandwidth drift, bursty lossy links, and node
+//! churn — and explicit outages can be scripted on top of any profile for
+//! reproducible failure tests.
+//!
+//! Everything here is a pure function of `(profile, seed, t)`, so a trace
+//! can be replayed exactly: the same trace drives the planner's condition
+//! snapshots, the serving router's per-batch checks, and the tests that
+//! assert on both.
+
+use crate::net::Testbed;
+use crate::util::rng::Rng;
+
+/// Built-in condition scenario families.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Profile {
+    /// Baseline conditions forever (the paper's static-testbed assumption).
+    Stable,
+    /// Smooth sinusoidal bandwidth drift between 100% and 40% of baseline
+    /// over one `period` (a compressed "day"), with a mild per-node compute
+    /// wobble whose phase is seeded per node.
+    DiurnalDrift,
+    /// Bursty link degradation: in each `period`-long window the link is,
+    /// with seeded probability, down to 15% of baseline bandwidth.
+    LossyLink,
+    /// Devices drop out and rejoin: seeded outages of non-leader nodes.
+    NodeChurn,
+}
+
+impl Profile {
+    pub const ALL: [Profile; 4] =
+        [Profile::Stable, Profile::DiurnalDrift, Profile::LossyLink, Profile::NodeChurn];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Profile::Stable => "stable",
+            Profile::DiurnalDrift => "diurnal-drift",
+            Profile::LossyLink => "lossy-link",
+            Profile::NodeChurn => "node-churn",
+        }
+    }
+}
+
+impl std::fmt::Display for Profile {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for Profile {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "stable" => Ok(Profile::Stable),
+            "diurnal" | "diurnal-drift" => Ok(Profile::DiurnalDrift),
+            "lossy" | "lossy-link" => Ok(Profile::LossyLink),
+            "churn" | "node-churn" => Ok(Profile::NodeChurn),
+            other => Err(format!("unknown condition profile {other:?}")),
+        }
+    }
+}
+
+/// One device outage interval `[from, until)` in virtual seconds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Outage {
+    pub node: usize,
+    pub from: f64,
+    pub until: f64,
+}
+
+/// One scripted link-degradation interval `[from, until)`: the baseline
+/// bandwidth is multiplied by `factor` while active (stacks with the
+/// profile's own factor).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BandwidthDip {
+    pub from: f64,
+    pub until: f64,
+    pub factor: f64,
+}
+
+/// A deterministic condition trace for an `nodes`-device cluster.
+#[derive(Debug, Clone)]
+pub struct ConditionTrace {
+    pub profile: Profile,
+    pub seed: u64,
+    pub nodes: usize,
+    /// Characteristic period of the profile's variation, virtual seconds.
+    pub period: f64,
+    /// Scripted + profile-generated outages. Node 0 (the leader, which owns
+    /// ingress and gather) is never taken down by the built-in profiles.
+    outages: Vec<Outage>,
+    /// Scripted bandwidth-degradation intervals.
+    dips: Vec<BandwidthDip>,
+    /// Per-node phase offsets for the compute wobble, radians.
+    phases: Vec<f64>,
+}
+
+impl ConditionTrace {
+    fn base(profile: Profile, nodes: usize, seed: u64, period: f64) -> ConditionTrace {
+        assert!(nodes >= 1, "empty cluster");
+        // SnapshotKey packs liveness into a u64 mask (and Testbed caps at 16
+        // nodes anyway).
+        assert!(nodes <= 64, "condition traces support at most 64 nodes");
+        assert!(period > 0.0, "period must be positive");
+        let mut rng = Rng::new(seed ^ 0xe1a5_71c0);
+        let phases: Vec<f64> =
+            (0..nodes).map(|_| rng.range_f64(0.0, 2.0 * std::f64::consts::PI)).collect();
+        ConditionTrace { profile, seed, nodes, period, outages: Vec::new(), dips: Vec::new(), phases }
+    }
+
+    /// Baseline conditions forever.
+    pub fn stable(nodes: usize) -> ConditionTrace {
+        Self::base(Profile::Stable, nodes, 0, 1.0)
+    }
+
+    /// Diurnal bandwidth drift (period = one compressed "day" of 60 virtual
+    /// seconds).
+    pub fn diurnal_drift(nodes: usize, seed: u64) -> ConditionTrace {
+        Self::base(Profile::DiurnalDrift, nodes, seed, 60.0)
+    }
+
+    /// Bursty lossy link (1-second windows, ~30% of them degraded).
+    pub fn lossy_link(nodes: usize, seed: u64) -> ConditionTrace {
+        Self::base(Profile::LossyLink, nodes, seed, 1.0)
+    }
+
+    /// Node churn: each non-leader node independently suffers, with 75%
+    /// probability, one seeded outage somewhere in `[period, 3·period)`,
+    /// lasting between one and two periods (period = 10 virtual seconds);
+    /// the remaining nodes stay healthy for the whole trace.
+    pub fn node_churn(nodes: usize, seed: u64) -> ConditionTrace {
+        let mut trace = Self::base(Profile::NodeChurn, nodes, seed, 10.0);
+        let mut rng = Rng::new(seed ^ 0xc4u64);
+        for node in 1..nodes {
+            if !rng.bool(0.75) {
+                continue; // this node stays healthy
+            }
+            let from = rng.range_f64(trace.period, 3.0 * trace.period);
+            let len = rng.range_f64(trace.period, 2.0 * trace.period);
+            trace.outages.push(Outage { node, from, until: from + len });
+        }
+        trace
+    }
+
+    /// Script an explicit outage on top of the profile (for reproducible
+    /// failure tests). `until = f64::INFINITY` makes it permanent.
+    pub fn with_outage(mut self, node: usize, from: f64, until: f64) -> ConditionTrace {
+        assert!(node < self.nodes, "outage node {node} out of range");
+        // sample() would silently revive it (the leader owns ingress/gather
+        // and is immortal) — reject rather than accept a no-op script.
+        assert!(node != 0, "node 0 (leader) cannot be scripted down");
+        assert!(from < until, "empty outage interval");
+        self.outages.push(Outage { node, from, until });
+        self
+    }
+
+    /// Script a bandwidth collapse on top of the profile (for reproducible
+    /// degradation tests). `until = f64::INFINITY` makes it permanent.
+    pub fn with_bandwidth_dip(mut self, from: f64, until: f64, factor: f64) -> ConditionTrace {
+        assert!(from < until, "empty dip interval");
+        assert!(factor > 0.0 && factor.is_finite(), "bad dip factor {factor}");
+        self.dips.push(BandwidthDip { from, until, factor });
+        self
+    }
+
+    pub fn outages(&self) -> &[Outage] {
+        &self.outages
+    }
+
+    /// The effective cluster conditions at virtual time `t` — deterministic:
+    /// the same `(trace, t)` always yields the same snapshot.
+    pub fn sample(&self, t: f64) -> ClusterSnapshot {
+        let mut alive = vec![true; self.nodes];
+        for o in &self.outages {
+            if t >= o.from && t < o.until {
+                alive[o.node] = false;
+            }
+        }
+        // The leader is immortal: it owns ingress/gather, and keeping it up
+        // also guarantees at least one survivor.
+        alive[0] = true;
+
+        let mut bandwidth_factor = 1.0;
+        let mut speed_factors = vec![1.0; self.nodes];
+        match self.profile {
+            Profile::Stable | Profile::NodeChurn => {}
+            Profile::DiurnalDrift => {
+                let phase = 2.0 * std::f64::consts::PI * t / self.period;
+                // 1.0 at t = 0, down to 0.4 at half period, back to 1.0.
+                bandwidth_factor = 0.4 + 0.6 * 0.5 * (1.0 + phase.cos());
+                for (i, s) in speed_factors.iter_mut().enumerate() {
+                    *s = (1.0 + 0.1 * (phase + self.phases[i]).sin()).max(0.5);
+                }
+            }
+            Profile::LossyLink => {
+                let window = (t / self.period).floor().max(0.0) as u64;
+                let mut rng =
+                    Rng::new(self.seed ^ window.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+                if rng.bool(0.3) {
+                    bandwidth_factor = 0.15;
+                }
+            }
+        }
+        for d in &self.dips {
+            if t >= d.from && t < d.until {
+                bandwidth_factor *= d.factor;
+            }
+        }
+        ClusterSnapshot { t, alive, bandwidth_factor, speed_factors }
+    }
+}
+
+/// Effective cluster conditions at one instant of virtual time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterSnapshot {
+    pub t: f64,
+    /// Per-node liveness (indexed by original node id).
+    pub alive: Vec<bool>,
+    /// Multiplier on the baseline link bandwidth (0 < factor ≤ 1 typical).
+    pub bandwidth_factor: f64,
+    /// Per-node multiplier on the baseline speed factors.
+    pub speed_factors: Vec<f64>,
+}
+
+impl ClusterSnapshot {
+    pub fn alive_count(&self) -> usize {
+        self.alive.iter().filter(|&&a| a).count()
+    }
+
+    /// The effective testbed: `base` with dead nodes removed, bandwidth
+    /// scaled, and per-node speeds scaled.
+    pub fn apply(&self, base: &Testbed) -> Testbed {
+        assert_eq!(self.alive.len(), base.nodes, "snapshot/testbed node mismatch");
+        let mut tb = base.subset(&self.alive).with_bandwidth_factor(self.bandwidth_factor);
+        let mut k = 0;
+        for i in 0..base.nodes {
+            if self.alive[i] {
+                tb.speed[k] *= self.speed_factors[i];
+                k += 1;
+            }
+        }
+        tb
+    }
+
+    /// Quantize into a cache key: conditions that round to the same buckets
+    /// share a plan. Bandwidth and speed factors bucket in 12.5% steps, so
+    /// e.g. a 3% bandwidth wiggle hits the same cached plan while a 25%
+    /// collapse lands in a different cell.
+    pub fn quantize(&self) -> SnapshotKey {
+        let mut alive_mask = 0u64;
+        let mut speed_buckets = Vec::with_capacity(self.alive_count());
+        for (i, &a) in self.alive.iter().enumerate() {
+            if a {
+                alive_mask |= 1 << i;
+                let b = (self.speed_factors[i] * 8.0).round().clamp(0.0, 255.0) as u8;
+                speed_buckets.push(b);
+            }
+        }
+        let bw_bucket = (self.bandwidth_factor * 8.0).round().clamp(0.0, 4.0e9) as u32;
+        SnapshotKey { alive_mask, bw_bucket, speed_buckets }
+    }
+}
+
+/// Quantized snapshot — the condition part of the plan-cache key.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct SnapshotKey {
+    pub alive_mask: u64,
+    pub bw_bucket: u32,
+    pub speed_buckets: Vec<u8>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::{Bandwidth, Topology};
+
+    #[test]
+    fn traces_are_deterministic() {
+        for make in [
+            ConditionTrace::stable as fn(usize) -> ConditionTrace,
+        ] {
+            let a = make(4);
+            let b = make(4);
+            assert_eq!(a.sample(3.7), b.sample(3.7));
+        }
+        for (a, b) in [
+            (ConditionTrace::diurnal_drift(4, 7), ConditionTrace::diurnal_drift(4, 7)),
+            (ConditionTrace::lossy_link(4, 7), ConditionTrace::lossy_link(4, 7)),
+            (ConditionTrace::node_churn(4, 7), ConditionTrace::node_churn(4, 7)),
+        ] {
+            for t in [0.0, 1.3, 11.9, 47.2] {
+                assert_eq!(a.sample(t), b.sample(t));
+            }
+        }
+    }
+
+    #[test]
+    fn stable_is_identity() {
+        let base = Testbed::new(4, Topology::Ring, Bandwidth::gbps(1.0));
+        let snap = ConditionTrace::stable(4).sample(123.4);
+        assert_eq!(snap.alive_count(), 4);
+        assert_eq!(snap.apply(&base), base);
+    }
+
+    #[test]
+    fn diurnal_drift_dips_and_recovers() {
+        let trace = ConditionTrace::diurnal_drift(4, 1);
+        let full = trace.sample(0.0).bandwidth_factor;
+        let dip = trace.sample(trace.period / 2.0).bandwidth_factor;
+        let back = trace.sample(trace.period).bandwidth_factor;
+        assert!((full - 1.0).abs() < 1e-9);
+        assert!((dip - 0.4).abs() < 1e-9);
+        assert!((back - 1.0).abs() < 1e-9);
+        // speeds stay in a sane band
+        for s in trace.sample(17.0).speed_factors {
+            assert!((0.5..=1.5).contains(&s));
+        }
+    }
+
+    #[test]
+    fn lossy_link_has_degraded_and_clean_windows() {
+        let trace = ConditionTrace::lossy_link(4, 3);
+        let factors: Vec<f64> =
+            (0..200).map(|w| trace.sample(w as f64 + 0.5).bandwidth_factor).collect();
+        assert!(factors.iter().any(|&f| f < 0.5), "no lossy window in 200");
+        assert!(factors.iter().any(|&f| f > 0.9), "no clean window in 200");
+        // constant within a window
+        assert_eq!(trace.sample(5.1).bandwidth_factor, trace.sample(5.9).bandwidth_factor);
+    }
+
+    #[test]
+    fn node_churn_kills_and_revives_non_leader_nodes() {
+        // across seeds: some node goes down during the churn horizon and the
+        // leader never does
+        let mut saw_outage = false;
+        for seed in 0..8u64 {
+            let trace = ConditionTrace::node_churn(4, seed);
+            for step in 0..400 {
+                let snap = trace.sample(step as f64 * 0.1);
+                assert!(snap.alive[0], "leader died (seed {seed})");
+                if snap.alive_count() < 4 {
+                    saw_outage = true;
+                }
+            }
+            if !trace.outages().is_empty() {
+                let o = trace.outages()[0];
+                assert!(o.until.is_finite(), "churn outages end");
+            }
+        }
+        assert!(saw_outage, "no churn in 8 seeds");
+    }
+
+    #[test]
+    fn scripted_outage_is_exact() {
+        let trace = ConditionTrace::stable(4).with_outage(2, 5.0, f64::INFINITY);
+        assert_eq!(trace.sample(4.9).alive_count(), 4);
+        let snap = trace.sample(5.0);
+        assert_eq!(snap.alive_count(), 3);
+        assert!(!snap.alive[2]);
+        assert_eq!(trace.sample(1e12).alive_count(), 3);
+    }
+
+    #[test]
+    fn apply_scales_bandwidth_and_speed() {
+        let base = Testbed::new(4, Topology::Ring, Bandwidth::gbps(2.0));
+        let snap = ClusterSnapshot {
+            t: 0.0,
+            alive: vec![true, true, false, true],
+            bandwidth_factor: 0.5,
+            speed_factors: vec![1.0, 0.8, 1.0, 1.0],
+        };
+        let tb = snap.apply(&base);
+        assert_eq!(tb.nodes, 3);
+        assert!((tb.bandwidth.as_gbps() - 1.0).abs() < 1e-12);
+        assert!((tb.speed[1] - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantization_buckets_nearby_conditions_together() {
+        let trace = ConditionTrace::stable(4);
+        let a = trace.sample(1.0);
+        let mut b = trace.sample(2.0);
+        b.bandwidth_factor = 0.97; // 3% wiggle — same 12.5% bucket as 1.0
+        assert_eq!(a.quantize(), b.quantize());
+        let mut c = trace.sample(3.0);
+        c.bandwidth_factor = 0.5; // a real collapse — different cell
+        assert_ne!(a.quantize(), c.quantize());
+        let mut d = trace.sample(4.0);
+        d.alive[3] = false; // node loss always changes the key
+        assert_ne!(a.quantize(), d.quantize());
+    }
+}

@@ -1,0 +1,437 @@
+//! The elastic controller: per-batch condition monitoring, degradation
+//! detection, cached/incremental replanning, and plan swapping.
+//!
+//! The controller sits between the serving router and the planner. At every
+//! batch boundary the router calls [`ElasticController::on_batch`] with the
+//! current virtual time; the controller samples the [`ConditionTrace`],
+//! derives the effective [`Testbed`], and re-prices the active plan on it
+//! (the *monitor*). Three triggers force adaptation:
+//!
+//! * **node-set change** — a device died or rejoined. The active plan still
+//!   *executes* on the new cluster (plans are node-count-agnostic), but it
+//!   was optimized for the wrong cluster, so a replan is mandatory; the
+//!   swap lands at the next batch boundary, never mid-batch.
+//! * **cost degradation** — the active plan's predicted cost exceeded
+//!   `degrade_threshold ×` its adoption-time cost (bandwidth collapse,
+//!   device slowdown).
+//! * **condition-cell shift** — conditions left the quantized cell the
+//!   active plan was planned for, in either direction. This is what swaps
+//!   *back* after a recovery: the clean regime's plan is warm in the cache,
+//!   and without this trigger a collapse-optimized plan would serve the
+//!   recovered cluster forever.
+//!
+//! Replans consult the [`PlanCache`] first: conditions quantize into cells
+//! ([`ClusterSnapshot::quantize`]), so revisited regimes get their plan back
+//! without running DPP. On a genuine miss the controller plans fresh via
+//! [`crate::planner::plan_for_testbed`] and caches the result. After any
+//! adaptation the cost baseline re-anchors to the new conditions, so a
+//! regime nothing can plan around (e.g. a uniform bandwidth collapse) is
+//! accepted as the new normal instead of triggering a replan storm.
+
+use std::sync::Arc;
+
+use super::cache::{CacheKey, PlanCache};
+use super::conditions::ConditionTrace;
+use crate::engine;
+use crate::metrics::AdaptationMetrics;
+use crate::model::Model;
+use crate::net::Testbed;
+use crate::partition::Plan;
+use crate::planner::plan_for_testbed;
+
+/// Controller tuning knobs.
+#[derive(Debug, Clone)]
+pub struct ElasticConfig {
+    /// Replan when the active plan's predicted cost exceeds this multiple of
+    /// its adoption-time cost.
+    pub degrade_threshold: f64,
+    /// Plan-cache capacity (distinct condition cells held warm).
+    pub cache_capacity: usize,
+}
+
+impl Default for ElasticConfig {
+    fn default() -> Self {
+        ElasticConfig { degrade_threshold: 1.25, cache_capacity: 32 }
+    }
+}
+
+/// Why the active plan was swapped.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SwapReason {
+    /// A device left or rejoined the cluster.
+    NodeSetChanged,
+    /// Predicted cost degraded past the threshold.
+    Degraded,
+    /// Conditions moved to a different quantized cell without degrading —
+    /// typically a *recovery* (bandwidth back up, device sped up), where the
+    /// clean regime's plan is warm in the cache and strictly better.
+    ConditionsShifted,
+}
+
+/// One adaptation event, for logs and examples.
+#[derive(Debug, Clone)]
+pub struct AdaptEvent {
+    pub t: f64,
+    pub reason: SwapReason,
+    /// Effective node count after the swap.
+    pub nodes: usize,
+    /// Predicted per-item cost of the old plan under the new conditions.
+    pub cost_before: f64,
+    /// Predicted per-item cost of the adopted plan under the new conditions.
+    pub cost_after: f64,
+}
+
+/// What the router should do for the next batch.
+#[derive(Debug, Clone)]
+pub struct BatchDecision {
+    pub plan: Arc<Plan>,
+    /// Effective testbed the batch executes on.
+    pub testbed: Testbed,
+    /// Per-node liveness (baseline node ids) — the mask
+    /// [`crate::cluster::run_degraded`] executes against.
+    pub alive: Vec<bool>,
+    /// Predicted virtual seconds per item under current conditions.
+    pub cost_per_item: f64,
+    /// True when this boundary adapted (plan and/or node set changed).
+    pub swapped: bool,
+    pub reason: Option<SwapReason>,
+}
+
+/// Most recent [`AdaptEvent`]s retained by a controller — old events are
+/// dropped so a server that adapts for days doesn't grow without bound.
+pub const MAX_EVENTS: usize = 256;
+
+/// The per-server adaptation state machine.
+pub struct ElasticController {
+    model: Model,
+    base: Testbed,
+    trace: ConditionTrace,
+    cfg: ElasticConfig,
+    cache: PlanCache,
+    active: Arc<Plan>,
+    /// Condition cell the active plan was planned for. Leaving the cell in
+    /// *any* direction re-consults the cache — degradation is caught by the
+    /// threshold below, but improvement (recovery) must also swap back,
+    /// otherwise a collapse-optimized plan would serve the clean regime
+    /// forever.
+    active_key: CacheKey,
+    /// Liveness mask the active plan was optimized for. Compared by
+    /// membership, not count: a simultaneous die+rejoin between two batch
+    /// boundaries still changes the set and must force a replan.
+    active_alive: Vec<bool>,
+    /// Cost baseline the degradation monitor compares against (tracks the
+    /// best cost seen for the active plan since adoption).
+    active_cost: f64,
+    metrics: AdaptationMetrics,
+    events: Vec<AdaptEvent>,
+}
+
+impl ElasticController {
+    /// Plan for the conditions at `t = 0` and start monitoring.
+    pub fn new(
+        model: Model,
+        base: Testbed,
+        trace: ConditionTrace,
+        cfg: ElasticConfig,
+    ) -> ElasticController {
+        assert_eq!(trace.nodes, base.nodes, "trace/testbed node mismatch");
+        let mut cache = PlanCache::new(cfg.cache_capacity);
+        let snap = trace.sample(0.0);
+        let effective = snap.apply(&base);
+        let key = CacheKey::new(&model.name, snap.quantize());
+        let plan = Arc::new(plan_for_testbed(&model, &effective));
+        cache.misses += 1; // the initial plan is an unavoidable cold miss
+        cache.put(key.clone(), plan.clone());
+        let active_cost = plan.est_cost;
+        let metrics = AdaptationMetrics { replans: 1, ..AdaptationMetrics::default() };
+        ElasticController {
+            model,
+            base,
+            trace,
+            cfg,
+            cache,
+            active: plan,
+            active_key: key,
+            active_alive: snap.alive,
+            active_cost,
+            metrics,
+            events: Vec::new(),
+        }
+    }
+
+    pub fn active_plan(&self) -> Arc<Plan> {
+        self.active.clone()
+    }
+
+    /// The most recent adaptation events (bounded by [`MAX_EVENTS`]; the
+    /// cumulative counts live in [`Self::metrics`]).
+    pub fn events(&self) -> &[AdaptEvent] {
+        &self.events
+    }
+
+    /// Adaptation counters, with the cache's view folded in.
+    pub fn metrics(&self) -> AdaptationMetrics {
+        let mut m = self.metrics;
+        m.cache_hits = self.cache.hits;
+        m.cache_misses = self.cache.misses;
+        m
+    }
+
+    pub fn cache(&self) -> &PlanCache {
+        &self.cache
+    }
+
+    fn lookup_or_replan(&mut self, key: &CacheKey, effective: &Testbed) -> Arc<Plan> {
+        if let Some(plan) = self.cache.get(key) {
+            return plan;
+        }
+        let plan = Arc::new(plan_for_testbed(&self.model, effective));
+        self.metrics.replans += 1;
+        self.cache.put(key.clone(), plan.clone());
+        plan
+    }
+
+    /// Consult the controller at a batch boundary. Samples conditions at
+    /// virtual time `t`, runs the degradation monitor, and returns the plan
+    /// plus effective testbed for the batch about to form. Swaps happen
+    /// here and only here — i.e. always between batches.
+    pub fn on_batch(&mut self, t: f64) -> BatchDecision {
+        let snap = self.trace.sample(t);
+        let effective = snap.apply(&self.base);
+        self.metrics.checks += 1;
+
+        // Monitor: re-price the active plan under current conditions.
+        let current_cost = engine::evaluate(&self.model, &self.active, &effective).total;
+        let node_change = snap.alive != self.active_alive;
+        let degraded = current_cost > self.active_cost * self.cfg.degrade_threshold;
+        if degraded {
+            self.metrics.degraded_checks += 1;
+        }
+        let key = CacheKey::new(&self.model.name, snap.quantize());
+        let cell_change = key != self.active_key;
+
+        if !(node_change || degraded || cell_change) {
+            // Fast path: conditions within the active plan's regime. Track
+            // recoveries so the baseline never lags below current reality.
+            self.active_cost = self.active_cost.min(current_cost);
+            return BatchDecision {
+                plan: self.active.clone(),
+                testbed: effective,
+                alive: snap.alive,
+                cost_per_item: current_cost,
+                swapped: false,
+                reason: None,
+            };
+        }
+
+        let plan = self.lookup_or_replan(&key, &effective);
+        let new_cost = engine::evaluate(&self.model, &plan, &effective).total;
+        // Steps-only comparison: a replan that lands on the same step
+        // sequence (with a different est_cost under the new conditions) is
+        // not a swap the router can observe.
+        let structurally_new = plan.steps != self.active.steps;
+        let swapped = node_change || structurally_new;
+        let reason = if node_change {
+            SwapReason::NodeSetChanged
+        } else if degraded {
+            SwapReason::Degraded
+        } else {
+            SwapReason::ConditionsShifted
+        };
+        if swapped {
+            if structurally_new {
+                self.metrics.plan_swaps += 1;
+            }
+            if node_change {
+                self.metrics.failovers += 1;
+            }
+            if self.events.len() == MAX_EVENTS {
+                self.events.remove(0);
+            }
+            self.events.push(AdaptEvent {
+                t,
+                reason,
+                nodes: effective.nodes,
+                cost_before: current_cost,
+                cost_after: new_cost,
+            });
+        }
+        self.active = plan;
+        self.active_key = key;
+        self.active_alive = snap.alive.clone();
+        // Re-anchor the baseline: if even the fresh plan is expensive under
+        // these conditions, that is the new normal, not degradation.
+        self.active_cost = new_cost;
+        BatchDecision {
+            plan: self.active.clone(),
+            testbed: effective,
+            alive: snap.alive,
+            cost_per_item: new_cost,
+            swapped,
+            reason: swapped.then_some(reason),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+    use crate::net::{Bandwidth, Topology};
+
+    fn base(nodes: usize) -> Testbed {
+        Testbed::new(nodes, Topology::Ring, Bandwidth::gbps(1.0))
+    }
+
+    fn controller(trace: ConditionTrace) -> ElasticController {
+        ElasticController::new(
+            zoo::edgenet(16),
+            base(trace.nodes),
+            trace,
+            ElasticConfig::default(),
+        )
+    }
+
+    #[test]
+    fn stable_trace_never_swaps() {
+        let mut ctl = controller(ConditionTrace::stable(4));
+        let initial = ctl.active_plan();
+        for i in 0..20 {
+            let d = ctl.on_batch(i as f64 * 0.01);
+            assert!(!d.swapped);
+            assert_eq!(d.testbed.nodes, 4);
+            assert_eq!(*d.plan, *initial);
+        }
+        let m = ctl.metrics();
+        assert_eq!(m.checks, 20);
+        assert_eq!(m.plan_swaps, 0);
+        assert_eq!(m.failovers, 0);
+        assert_eq!(m.replans, 1); // the initial plan only
+    }
+
+    #[test]
+    fn node_failure_forces_failover_at_batch_boundary() {
+        let trace = ConditionTrace::stable(4).with_outage(2, 1.0, f64::INFINITY);
+        let mut ctl = controller(trace);
+        let before = ctl.on_batch(0.5);
+        assert_eq!(before.testbed.nodes, 4);
+        assert!(!before.swapped);
+        let after = ctl.on_batch(1.5);
+        assert_eq!(after.testbed.nodes, 3, "failover missed");
+        assert!(after.swapped);
+        assert_eq!(after.reason, Some(SwapReason::NodeSetChanged));
+        let m = ctl.metrics();
+        assert_eq!(m.failovers, 1);
+        assert!(m.replans >= 2);
+    }
+
+    #[test]
+    fn recovery_is_served_from_cache() {
+        let trace = ConditionTrace::stable(4).with_outage(1, 1.0, 2.0);
+        let mut ctl = controller(trace);
+        let p0 = ctl.active_plan();
+        ctl.on_batch(0.5); // healthy
+        ctl.on_batch(1.5); // degraded to 3 nodes
+        let back = ctl.on_batch(2.5); // recovered — same cell as t=0
+        assert_eq!(back.testbed.nodes, 4);
+        assert_eq!(*back.plan, *p0, "recovery should restore the original plan");
+        let m = ctl.metrics();
+        assert_eq!(m.failovers, 2); // down and back up
+        assert!(m.cache_hits >= 1, "recovery did not hit the cache: {m}");
+        // only two distinct cells were ever planned: 4-node and 3-node
+        assert_eq!(m.replans, 2);
+    }
+
+    #[test]
+    fn membership_change_with_same_count_still_fails_over() {
+        // node 1 dies at t=1; at t=2 node 1 rejoins just as node 2 dies —
+        // the alive COUNT never changes across that boundary, but the set
+        // does, and the plan was optimized for the wrong membership
+        let trace = ConditionTrace::stable(4)
+            .with_outage(1, 1.0, 2.0)
+            .with_outage(2, 2.0, f64::INFINITY);
+        let mut ctl = controller(trace);
+        ctl.on_batch(0.5);
+        let a = ctl.on_batch(1.5);
+        assert_eq!(a.testbed.nodes, 3);
+        assert!(!a.alive[1]);
+        let b = ctl.on_batch(2.5);
+        assert_eq!(b.testbed.nodes, 3);
+        assert!(b.alive[1] && !b.alive[2]);
+        assert_eq!(
+            ctl.metrics().failovers,
+            2,
+            "equal-count membership change must still fail over"
+        );
+    }
+
+    #[test]
+    fn bandwidth_collapse_triggers_degradation_replan() {
+        // drop bandwidth to 10% permanently from t = 1: sync costs inflate
+        // 10×, blowing the active plan past the 1.25× threshold (sync is far
+        // more than the required 2.9% of baseline cost at 1 Gb/s)
+        let trace = ConditionTrace::stable(4).with_bandwidth_dip(1.0, f64::INFINITY, 0.1);
+        let mut ctl = controller(trace);
+        let before = ctl.on_batch(0.5);
+        assert!(!before.swapped);
+        let after = ctl.on_batch(1.5);
+        let m = ctl.metrics();
+        assert_eq!(m.degraded_checks, 1, "collapse did not trip the monitor: {m}");
+        assert!(m.replans >= 2, "degradation did not replan: {m}");
+        assert!(after.cost_per_item > before.cost_per_item);
+        // once re-anchored to the collapsed regime, no replan storm
+        let again = ctl.on_batch(2.5);
+        assert!(!again.swapped);
+        assert_eq!(ctl.metrics().degraded_checks, 1);
+    }
+
+    #[test]
+    fn recovery_after_dip_restores_clean_regime_plan() {
+        // bandwidth collapses over [1, 2) and recovers: the clean regime
+        // must get its original plan back (from cache) instead of being
+        // served the collapse-optimized plan forever
+        let trace = ConditionTrace::stable(4).with_bandwidth_dip(1.0, 2.0, 0.1);
+        let mut ctl = controller(trace);
+        let p0 = ctl.active_plan();
+        ctl.on_batch(0.5); // clean
+        ctl.on_batch(1.5); // collapsed → degradation replan
+        let back = ctl.on_batch(2.5); // recovered → cell shift → warm swap
+        assert_eq!(*back.plan, *p0, "clean regime did not get its plan back");
+        assert!(
+            (back.cost_per_item - p0.est_cost).abs() <= 1e-9 * p0.est_cost,
+            "recovered cost {} != planned cost {}",
+            back.cost_per_item,
+            p0.est_cost
+        );
+        assert!(ctl.metrics().cache_hits >= 1);
+    }
+
+    #[test]
+    fn diurnal_drift_monitoring_is_stable() {
+        // a full compressed day: the controller may adapt at the dip, must
+        // never lose a node, and every lookup is accounted for
+        let mut ctl = controller(ConditionTrace::diurnal_drift(4, 3));
+        for step in 0..120 {
+            let d = ctl.on_batch(step as f64 * 0.5);
+            assert_eq!(d.testbed.nodes, 4);
+            assert!(d.cost_per_item > 0.0);
+        }
+        let m = ctl.metrics();
+        assert_eq!(m.checks, 120);
+        assert_eq!(m.failovers, 0);
+        assert_eq!(m.replans + m.cache_hits, m.cache_misses + m.cache_hits);
+    }
+
+    #[test]
+    fn events_record_swaps() {
+        let trace = ConditionTrace::stable(4).with_outage(3, 1.0, f64::INFINITY);
+        let mut ctl = controller(trace);
+        ctl.on_batch(0.2);
+        ctl.on_batch(1.2);
+        let evs = ctl.events();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].reason, SwapReason::NodeSetChanged);
+        assert_eq!(evs[0].nodes, 3);
+        assert!(evs[0].cost_before > 0.0 && evs[0].cost_after > 0.0);
+    }
+}

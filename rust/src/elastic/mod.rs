@@ -1,0 +1,39 @@
+//! Runtime adaptation — dynamic conditions, plan cache, online replanning.
+//!
+//! The paper's DPP planner (and everything in [`crate::planner`]) assumes a
+//! *frozen* cluster: fixed bandwidth, fixed device speeds, no failures. A
+//! production serving system sees none of that — links drift diurnally,
+//! devices slow down under thermal pressure, and nodes drop out and rejoin
+//! (DistrEdge, arXiv 2202.01699; DEFER, arXiv 2201.06769). This subsystem
+//! makes the serving path condition-aware without ever stalling a request:
+//!
+//! * [`conditions`] — deterministic, seeded condition traces over virtual
+//!   time: bandwidth/compute drift plus device outages, with built-in
+//!   scenario profiles (`stable`, `diurnal-drift`, `lossy-link`,
+//!   `node-churn`) and scripted overrides for tests.
+//! * [`cache`] — the plan cache: DPP results memoized under quantized
+//!   condition snapshots with LRU eviction, so revisited regimes are served
+//!   warm instead of re-searched.
+//! * [`controller`] — the monitor + replanner: per batch boundary it
+//!   re-prices the active plan under effective conditions, detects
+//!   degradation past a threshold, a node-set change, or a shift out of
+//!   the active plan's condition cell (how recoveries swap back), replans
+//!   (cache first, DPP on a miss — the search runs on the router thread at
+//!   the batch boundary, so admission never blocks on planning but the
+//!   batch being formed waits out a cold miss; async replanning is a
+//!   ROADMAP item), and swaps the new plan in *between* batches — on node
+//!   failure it degrades gracefully to the best n−1-device plan.
+//!
+//! [`crate::serve::Server::start_elastic`] wires a controller into the
+//! router loop and reports [`crate::metrics::AdaptationMetrics`] alongside
+//! the router counters.
+
+pub mod cache;
+pub mod conditions;
+pub mod controller;
+
+pub use cache::{CacheKey, PlanCache};
+pub use conditions::{ClusterSnapshot, ConditionTrace, Outage, Profile, SnapshotKey};
+pub use controller::{
+    AdaptEvent, BatchDecision, ElasticConfig, ElasticController, SwapReason,
+};

@@ -23,6 +23,7 @@
 //! | [`baselines`] | OutC (Xenos), InH/InW (MoDNN/DeepSlicing), 2D-grid (DeepThings), layerwise (DINA), fused-layer (AOFL/EdgeCI) |
 //! | [`net`] | network simulator: Ring / PS / Mesh topologies, bandwidth + latency |
 //! | [`cluster`] | simulated edge cluster: leader/worker threads, message passing, virtual clock |
+//! | [`elastic`] | runtime adaptation: condition traces, degradation monitor, plan cache + online replanning |
 //! | [`engine`] | plan executor: analytic evaluation + real-numerics distributed execution |
 //! | [`compute`] | native Rust tensor kernels (conv/dwconv/pool/matmul) — fallback + oracle |
 //! | [`runtime`] | PJRT client wrapper: loads `artifacts/*.hlo.txt` (AOT-compiled JAX/Pallas) |
@@ -52,6 +53,7 @@ pub mod cluster;
 pub mod compute;
 pub mod config;
 pub mod cost;
+pub mod elastic;
 pub mod engine;
 pub mod metrics;
 pub mod model;
@@ -65,7 +67,7 @@ pub mod util;
 /// Commonly used types, re-exported for ergonomic downstream use.
 pub mod prelude {
     pub use crate::cost::{CostSource, Estimators};
-    // TimingReport / Dpp re-exports enabled once those modules land (below).
+    pub use crate::elastic::{ConditionTrace, ElasticController, PlanCache};
     pub use crate::engine::TimingReport;
     pub use crate::model::{ConvType, LayerMeta, Model, OpKind};
     pub use crate::net::{Bandwidth, Testbed, Topology};

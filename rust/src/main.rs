@@ -8,7 +8,7 @@
 //! flexpie trace-gen --samples 60000 --out artifacts/traces.json
 //! flexpie train-ce  --samples 60000 [--trees 300] --out artifacts/ce
 //! flexpie bench     --fig 2|7|8|9 | --search-time | --ablation [--cost analytic]
-//! flexpie serve     --model edgenet --requests 64 --batch 8
+//! flexpie serve     --model edgenet --requests 64 --batch 8 [--profile diurnal-drift --seed 7]
 //! ```
 
 use std::sync::Arc;
@@ -356,16 +356,41 @@ fn cmd_serve(args: &Args) -> i32 {
         return 2;
     };
     let tb = testbed_from(args);
-    let cost = cost_from(args, &tb);
-    let plan = Dpp::new(&model, &cost).plan();
-    println!("serving {} with plan: {}", model.name, plan.render());
     let weights = WeightStore::for_model(&model, 42);
     let cfg = ServeConfig {
         max_batch: args.usize_or("batch", 8),
         batch_window: std::time::Duration::from_millis(args.u64_or("window-ms", 2)),
         queue_depth: args.usize_or("queue", 128),
     };
-    let server = Server::start(model.clone(), plan, weights, tb, cfg);
+    // `--profile <stable|diurnal-drift|lossy-link|node-churn>` switches to
+    // the elastic (condition-aware) serving path.
+    let server = if let Some(profile) = args.get("profile") {
+        if args.has("cost") {
+            eprintln!(
+                "note: --cost is ignored with --profile (elastic replanning \
+                 uses the analytic cost model)"
+            );
+        }
+        let exp = flexpie::config::ElasticExperiment {
+            profile: profile.to_string(),
+            seed: args.u64_or("seed", 7),
+            ..Default::default()
+        };
+        let trace = match exp.trace(tb.nodes) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        };
+        println!("serving {} elastically under the {} profile", model.name, exp.profile);
+        Server::start_elastic(model.clone(), weights, tb, trace, cfg, exp.controller_config())
+    } else {
+        let cost = cost_from(args, &tb);
+        let plan = Dpp::new(&model, &cost).plan();
+        println!("serving {} with plan: {}", model.name, plan.render());
+        Server::start(model.clone(), plan, weights, tb, cfg)
+    };
     let server = Arc::new(server);
 
     let n_requests = args.usize_or("requests", 64);
@@ -400,5 +425,8 @@ fn cmd_serve(args: &Args) -> i32 {
         "router: {} requests in {} batches (max batch {})",
         stats.requests, stats.batches, stats.max_batch_seen
     );
+    if let Some(m) = stats.adaptation {
+        println!("adaptation: {m}");
+    }
     0
 }

@@ -52,6 +52,64 @@ impl std::fmt::Display for Summary {
     }
 }
 
+/// Adaptation counters for the elastic serving path ([`crate::elastic`]):
+/// how often conditions were checked, how often the active plan was found
+/// degraded, and how the replanner's plan cache performed.
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct AdaptationMetrics {
+    /// Condition checks performed (one per batch boundary).
+    pub checks: u64,
+    /// Checks where the active plan's predicted cost exceeded the
+    /// degradation threshold.
+    pub degraded_checks: u64,
+    /// Planner invocations (plan-cache misses that ran DPP).
+    pub replans: u64,
+    /// Times the active plan was replaced by a structurally different one.
+    pub plan_swaps: u64,
+    /// Swaps forced by a node joining or leaving the cluster.
+    pub failovers: u64,
+    /// Warm plans served straight from the plan cache.
+    pub cache_hits: u64,
+    /// Plan-cache misses.
+    pub cache_misses: u64,
+}
+
+/// Shared hit-rate formula (0.0 before any lookup) — used by both
+/// [`AdaptationMetrics`] and [`crate::elastic::PlanCache`] so the two views
+/// cannot drift.
+pub fn hit_ratio(hits: u64, misses: u64) -> f64 {
+    let total = hits + misses;
+    if total == 0 {
+        0.0
+    } else {
+        hits as f64 / total as f64
+    }
+}
+
+impl AdaptationMetrics {
+    /// Fraction of plan lookups answered from the cache (0.0 when none).
+    pub fn cache_hit_rate(&self) -> f64 {
+        hit_ratio(self.cache_hits, self.cache_misses)
+    }
+}
+
+impl std::fmt::Display for AdaptationMetrics {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "checks={} degraded={} replans={} swaps={} failovers={} cache={}/{} ({:.0}% hit)",
+            self.checks,
+            self.degraded_checks,
+            self.replans,
+            self.plan_swaps,
+            self.failovers,
+            self.cache_hits,
+            self.cache_hits + self.cache_misses,
+            self.cache_hit_rate() * 100.0
+        )
+    }
+}
+
 /// Simple throughput window: items per second of wall-clock.
 #[derive(Debug)]
 pub struct Throughput {
@@ -102,6 +160,17 @@ mod tests {
         let s = summarize(&[]);
         assert_eq!(s.count, 0);
         assert_eq!(s.max, Duration::ZERO);
+    }
+
+    #[test]
+    fn adaptation_hit_rate() {
+        let mut m = AdaptationMetrics::default();
+        assert_eq!(m.cache_hit_rate(), 0.0);
+        m.cache_hits = 3;
+        m.cache_misses = 1;
+        assert!((m.cache_hit_rate() - 0.75).abs() < 1e-12);
+        let s = m.to_string();
+        assert!(s.contains("cache=3/4"), "{s}");
     }
 
     #[test]

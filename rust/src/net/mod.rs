@@ -88,6 +88,13 @@ impl Bandwidth {
     pub fn transfer_time(&self, bytes: u64) -> f64 {
         (bytes as f64 * 8.0) / self.bits_per_sec
     }
+
+    /// This bandwidth scaled by `factor` — the hook the runtime-adaptation
+    /// layer ([`crate::elastic`]) uses to model drifting link quality.
+    pub fn scaled(self, factor: f64) -> Bandwidth {
+        assert!(factor > 0.0 && factor.is_finite(), "bad bandwidth factor {factor}");
+        Bandwidth { bits_per_sec: self.bits_per_sec * factor }
+    }
 }
 
 /// Per-device compute profile — the TMS320C6678 substitute. The DSP peaks at
@@ -160,6 +167,38 @@ impl Testbed {
         assert_eq!(speed.len(), self.nodes);
         self.speed = speed;
         self
+    }
+
+    /// This testbed with every link's bandwidth scaled by `factor`
+    /// (time-varying-conditions hook for [`crate::elastic`]).
+    pub fn with_bandwidth_factor(&self, factor: f64) -> Testbed {
+        let mut tb = self.clone();
+        tb.bandwidth = tb.bandwidth.scaled(factor);
+        tb
+    }
+
+    /// The surviving sub-cluster after removing the nodes marked dead in
+    /// `alive` (length must equal `nodes`; at least one node must survive).
+    /// Surviving nodes keep their per-node speed factors; node ids compact
+    /// to `0..alive_count` in original order, so the leader role falls to
+    /// the first survivor.
+    pub fn subset(&self, alive: &[bool]) -> Testbed {
+        assert_eq!(alive.len(), self.nodes, "alive mask length != nodes");
+        let speed: Vec<f64> = self
+            .speed
+            .iter()
+            .zip(alive)
+            .filter_map(|(&s, &a)| a.then_some(s))
+            .collect();
+        assert!(!speed.is_empty(), "no surviving nodes");
+        Testbed {
+            nodes: speed.len(),
+            topology: self.topology,
+            bandwidth: self.bandwidth,
+            latency: self.latency,
+            device: self.device,
+            speed,
+        }
     }
 
     /// Elapsed time for the boundary exchange described by the byte matrix
@@ -396,6 +435,35 @@ mod tests {
         assert!(d.compute_time(f, Depthwise) > d.compute_time(f, Standard));
         assert!(d.compute_time(f, Standard) > d.compute_time(f, Dense));
         assert_eq!(d.compute_time(0.0, Standard), 0.0);
+    }
+
+    #[test]
+    fn bandwidth_factor_scales_transfer_time() {
+        let tb = Testbed::new(4, Topology::Ring, Bandwidth::gbps(2.0));
+        let m = msgs(4, &[(0, 1, 10_000_000)]);
+        let full = tb.exchange_time(&m);
+        let half = tb.with_bandwidth_factor(0.5).exchange_time(&m);
+        // halving bandwidth doubles the byte time (latency term unchanged)
+        let bytes_full = full - tb.latency;
+        let bytes_half = half - tb.latency;
+        assert!((bytes_half - 2.0 * bytes_full).abs() < 1e-9);
+    }
+
+    #[test]
+    fn subset_drops_dead_nodes_and_keeps_speeds() {
+        let tb = Testbed::new(4, Topology::Ring, Bandwidth::gbps(1.0))
+            .with_speed(vec![1.0, 0.5, 2.0, 1.0]);
+        let sub = tb.subset(&[true, false, true, true]);
+        assert_eq!(sub.nodes, 3);
+        assert_eq!(sub.speed, vec![1.0, 2.0, 1.0]);
+        assert_eq!(sub.topology, tb.topology);
+    }
+
+    #[test]
+    #[should_panic(expected = "no surviving nodes")]
+    fn subset_rejects_empty_cluster() {
+        let tb = Testbed::new(2, Topology::Ring, Bandwidth::gbps(1.0));
+        tb.subset(&[false, false]);
     }
 
     #[test]

@@ -28,3 +28,17 @@ pub mod dpp;
 pub mod exhaustive;
 
 pub use dpp::{Dpp, DppConfig, SearchStats};
+
+use crate::cost::CostSource;
+use crate::model::Model;
+use crate::net::Testbed;
+use crate::partition::Plan;
+
+/// Plan for a concrete cluster snapshot: one-shot DPP over the analytic cost
+/// model of `testbed`. This is the replanning entry point the runtime
+/// adaptation layer ([`crate::elastic`]) calls off the request path whenever
+/// effective conditions drift out of the active plan's regime.
+pub fn plan_for_testbed(model: &Model, testbed: &Testbed) -> Plan {
+    let cost = CostSource::analytic(testbed);
+    Dpp::new(model, &cost).plan()
+}

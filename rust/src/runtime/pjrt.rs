@@ -1,0 +1,129 @@
+//! PJRT backend — the real artifact execution path (`--features pjrt`).
+//!
+//! Compiles the HLO text emitted by `python/compile/aot.py` on the PJRT CPU
+//! client and runs the Pallas-lowered kernels. Requires the vendored `xla`
+//! crate (this module does not compile without it — the offline default
+//! build uses the native fallback in [`super`] instead).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use super::{err, signature, Manifest, Result};
+use crate::compute::Tensor;
+use crate::model::{ConvType, LayerMeta};
+
+/// The PJRT runtime: CPU client + lazily compiled executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    dir: PathBuf,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Load the runtime from an artifacts directory (errors if the manifest
+    /// is absent — run `make artifacts`).
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| err(format!("PJRT client: {e:?}")))?;
+        Ok(Runtime { client, manifest, dir: dir.to_path_buf(), cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn has(&self, sig: &str) -> bool {
+        self.manifest.entries.contains_key(sig)
+    }
+
+    pub fn n_artifacts(&self) -> usize {
+        self.manifest.entries.len()
+    }
+
+    fn executable(&self, sig: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(sig) {
+            return Ok(e.clone());
+        }
+        let file = self
+            .manifest
+            .entries
+            .get(sig)
+            .ok_or_else(|| err(format!("no artifact for signature {sig}")))?;
+        let path = self.dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| err("non-utf8 path"))?,
+        )
+        .map_err(|e| err(format!("parse {}: {e:?}", path.display())))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| err(format!("compile {sig}: {e:?}")))?;
+        let exe = std::sync::Arc::new(exe);
+        self.cache.lock().unwrap().insert(sig.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute one layer via its AOT artifact. `input` must be the full
+    /// (padded-to-valid) input window in HWC layout matching the signature's
+    /// `in_h × in_w`; weights/bias use the same layout as
+    /// [`crate::compute::LayerWeights`].
+    pub fn execute_layer(
+        &self,
+        layer: &LayerMeta,
+        weights: &crate::compute::LayerWeights,
+        input: &Tensor,
+    ) -> Result<Tensor> {
+        let sig = signature(layer, input.h, input.w);
+        let exe = self.executable(&sig)?;
+
+        let in_lit = xla::Literal::vec1(&input.data)
+            .reshape(&[input.h, input.w, input.c])
+            .map_err(|e| err(format!("reshape input: {e:?}")))?;
+        let args: Vec<xla::Literal> = match layer.conv_t {
+            ConvType::Pool => vec![in_lit],
+            ConvType::Depthwise => {
+                let w = xla::Literal::vec1(&weights.w)
+                    .reshape(&[layer.k, layer.k, layer.out_c])
+                    .map_err(|e| err(format!("reshape w: {e:?}")))?;
+                let b = xla::Literal::vec1(&weights.b);
+                vec![in_lit, w, b]
+            }
+            ConvType::Dense | ConvType::Attention => {
+                let w = xla::Literal::vec1(&weights.w)
+                    .reshape(&[layer.in_c, layer.out_c])
+                    .map_err(|e| err(format!("reshape w: {e:?}")))?;
+                let b = xla::Literal::vec1(&weights.b);
+                vec![in_lit, w, b]
+            }
+            _ => {
+                let w = xla::Literal::vec1(&weights.w)
+                    .reshape(&[layer.k, layer.k, layer.in_c, layer.out_c])
+                    .map_err(|e| err(format!("reshape w: {e:?}")))?;
+                let b = xla::Literal::vec1(&weights.b);
+                vec![in_lit, w, b]
+            }
+        };
+
+        let result = exe
+            .execute::<xla::Literal>(&args)
+            .map_err(|e| err(format!("execute {sig}: {e:?}")))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| err(format!("fetch result: {e:?}")))?;
+        // aot.py lowers with return_tuple=True → unwrap the 1-tuple.
+        let out = result.to_tuple1().map_err(|e| err(format!("untuple: {e:?}")))?;
+        let data = out.to_vec::<f32>().map_err(|e| err(format!("to_vec: {e:?}")))?;
+
+        let (oh, ow, oc) = (layer.out_h, layer.out_w, layer.out_c);
+        if data.len() != (oh * ow * oc) as usize {
+            return Err(err(format!(
+                "artifact {sig} returned {} elements, expected {}",
+                data.len(),
+                oh * ow * oc
+            )));
+        }
+        Ok(Tensor { h: oh, w: ow, c: oc, data })
+    }
+}

@@ -7,13 +7,28 @@
 //! `batch_window` for stragglers), executes the batch on the simulated
 //! cluster, and completes each request with its output plus queueing/service
 //! timing. Python is nowhere on this path.
+//!
+//! Two plan sources drive the router:
+//!
+//! * [`Server::start`] — the static path: one frozen plan for one frozen
+//!   testbed, forever (the paper's assumption).
+//! * [`Server::start_elastic`] — the condition-aware path: an
+//!   [`ElasticController`] is consulted at every batch boundary. It samples
+//!   the condition trace on a virtual clock (advanced by the predicted
+//!   per-item cost of each executed batch), detects degradation or node
+//!   churn, replans via the plan cache / DPP, and swaps plans in *between*
+//!   batches — admission never blocks on planning, and on a node failure
+//!   the very next batch runs the best surviving-cluster plan. Adaptation
+//!   counters ride back on [`RouterStats::adaptation`] at shutdown.
 
 use std::sync::mpsc::{channel, Receiver, Sender, TrySendError};
 use std::sync::{mpsc::sync_channel, Arc};
 use std::time::{Duration, Instant};
 
 use crate::compute::{Tensor, WeightStore};
+use crate::elastic::{ConditionTrace, ElasticConfig, ElasticController};
 use crate::engine;
+use crate::metrics::AdaptationMetrics;
 use crate::model::Model;
 use crate::net::Testbed;
 use crate::partition::Plan;
@@ -47,10 +62,14 @@ pub struct Response {
     pub queued: Duration,
     /// Host wall-clock service time of the batch that carried this request.
     pub service: Duration,
-    /// Virtual-clock (simulated-testbed) inference time per item.
+    /// Virtual-clock (simulated-testbed) inference time per item, under the
+    /// conditions the batch actually ran in.
     pub virtual_time: f64,
     /// Size of the batch this request rode in.
     pub batch_size: usize,
+    /// Number of cluster nodes the batch executed on (drops below the
+    /// baseline when the elastic path fails over).
+    pub nodes: usize,
 }
 
 struct Request {
@@ -79,10 +98,26 @@ pub struct RouterStats {
     pub requests: u64,
     pub batches: u64,
     pub max_batch_seen: usize,
+    /// Present on the elastic path: replan/cache/failover counters.
+    pub adaptation: Option<AdaptationMetrics>,
+}
+
+/// Where the router gets the plan for the next batch.
+enum PlanSource {
+    Static {
+        plan: Arc<Plan>,
+        nodes: usize,
+        virtual_time: f64,
+    },
+    Elastic {
+        ctl: ElasticController,
+        /// Virtual clock: cumulative predicted inference seconds served.
+        vt: f64,
+    },
 }
 
 impl Server {
-    /// Start serving `model` with `plan` on the simulated `testbed`.
+    /// Start serving `model` with a frozen `plan` on the simulated `testbed`.
     pub fn start(
         model: Model,
         plan: Plan,
@@ -91,9 +126,34 @@ impl Server {
         cfg: ServeConfig,
     ) -> Server {
         plan.validate().expect("invalid plan");
+        let virtual_time = engine::evaluate(&model, &plan, &testbed).total;
+        let source = PlanSource::Static {
+            plan: Arc::new(plan),
+            nodes: testbed.nodes,
+            virtual_time,
+        };
+        Self::spawn(model, weights, cfg, source)
+    }
+
+    /// Start the condition-aware serving path: plan for the trace's `t = 0`
+    /// conditions, then monitor/replan/swap at every batch boundary.
+    pub fn start_elastic(
+        model: Model,
+        weights: WeightStore,
+        base: Testbed,
+        trace: ConditionTrace,
+        cfg: ServeConfig,
+        ecfg: ElasticConfig,
+    ) -> Server {
+        let ctl = ElasticController::new(model.clone(), base, trace, ecfg);
+        Self::spawn(model, weights, cfg, PlanSource::Elastic { ctl, vt: 0.0 })
+    }
+
+    fn spawn(model: Model, weights: WeightStore, cfg: ServeConfig, source: PlanSource) -> Server {
         let (tx, rx) = sync_channel::<Request>(cfg.queue_depth);
         let router = std::thread::spawn(move || {
-            router_main(rx, &model, &plan, &weights, &testbed, &cfg)
+            let weights = Arc::new(weights);
+            router_main(rx, &model, &weights, &cfg, source)
         });
         Server { tx, router: Some(router) }
     }
@@ -129,21 +189,23 @@ impl Server {
 fn router_main(
     rx: Receiver<Request>,
     model: &Model,
-    plan: &Plan,
-    weights: &WeightStore,
-    testbed: &Testbed,
+    weights: &Arc<WeightStore>,
     cfg: &ServeConfig,
+    mut source: PlanSource,
 ) -> RouterStats {
     let mut stats = RouterStats::default();
-    // per-item virtual time is plan-static; compute once
-    let virtual_time = engine::evaluate(model, plan, testbed).total;
-    let weights = Arc::new(weights.clone());
 
     loop {
         // block for the first request of the batch
         let first = match rx.recv() {
             Ok(r) => r,
-            Err(_) => return stats, // all senders gone
+            Err(_) => {
+                // all senders gone — report adaptation counters and exit
+                if let PlanSource::Elastic { ctl, .. } = &source {
+                    stats.adaptation = Some(ctl.metrics());
+                }
+                return stats;
+            }
         };
         let mut batch = vec![first];
         let deadline = Instant::now() + cfg.batch_window;
@@ -162,12 +224,36 @@ fn router_main(
         stats.requests += batch.len() as u64;
         stats.max_batch_seen = stats.max_batch_seen.max(batch.len());
 
+        // Batch boundary: consult the plan source. Elastic replans/swaps
+        // happen here, never mid-batch.
+        let (plan, alive, nodes, virtual_time) = match &mut source {
+            PlanSource::Static { plan, nodes, virtual_time } => {
+                (plan.clone(), None, *nodes, *virtual_time)
+            }
+            PlanSource::Elastic { ctl, vt } => {
+                let decision = ctl.on_batch(*vt);
+                *vt += decision.cost_per_item * batch.len() as f64;
+                (
+                    decision.plan,
+                    Some(decision.alive),
+                    decision.testbed.nodes,
+                    decision.cost_per_item,
+                )
+            }
+        };
+
         let service_start = Instant::now();
         let outputs: Vec<Tensor> = batch
             .iter()
-            .map(|req| {
-                crate::cluster::run_distributed(model, plan, &weights, &req.input, testbed.nodes)
-                    .output
+            .map(|req| match &alive {
+                // elastic path: execute on the surviving sub-cluster
+                Some(mask) => {
+                    crate::cluster::run_degraded(model, &plan, weights, &req.input, mask).output
+                }
+                None => {
+                    crate::cluster::run_distributed(model, &plan, weights, &req.input, nodes)
+                        .output
+                }
             })
             .collect();
         let service = service_start.elapsed();
@@ -180,6 +266,7 @@ fn router_main(
                 service,
                 virtual_time,
                 batch_size,
+                nodes,
             });
         }
     }
@@ -206,8 +293,10 @@ mod tests {
         let resp = server.infer(Tensor::random(16, 16, 3, 1)).unwrap();
         assert_eq!((resp.output.h, resp.output.w, resp.output.c), (1, 1, 10));
         assert!(resp.virtual_time > 0.0);
+        assert_eq!(resp.nodes, 4);
         let stats = server.shutdown();
         assert_eq!(stats.requests, 1);
+        assert!(stats.adaptation.is_none(), "static path reports no adaptation");
     }
 
     #[test]
@@ -240,6 +329,26 @@ mod tests {
     }
 
     #[test]
+    fn batch_window_is_honored() {
+        // a lone request must wait out the batching window before service
+        let cfg = ServeConfig {
+            max_batch: 8,
+            batch_window: Duration::from_millis(150),
+            queue_depth: 16,
+        };
+        let (server, _) = setup(cfg);
+        let resp = server.infer(Tensor::random(16, 16, 3, 9)).unwrap();
+        assert!(
+            resp.queued >= Duration::from_millis(100),
+            "batcher serviced a lone request before the window elapsed ({:?})",
+            resp.queued
+        );
+        assert_eq!(resp.batch_size, 1);
+        let stats = server.shutdown();
+        assert_eq!(stats.batches, 1);
+    }
+
+    #[test]
     fn backpressure_when_queue_full() {
         let cfg = ServeConfig {
             max_batch: 1,
@@ -266,5 +375,115 @@ mod tests {
         }
         assert!(full_seen, "queue never filled");
         server.shutdown();
+    }
+
+    #[test]
+    fn backpressure_retry_loses_nothing() {
+        // QueueFull is a clean retryable signal: retrying every rejected
+        // submit must eventually land all requests, with none lost
+        let cfg = ServeConfig {
+            max_batch: 1,
+            batch_window: Duration::ZERO,
+            queue_depth: 1,
+        };
+        let (server, _) = setup(cfg);
+        let mut rxs = Vec::new();
+        for i in 0..20 {
+            loop {
+                match server.submit(Tensor::random(16, 16, 3, i)) {
+                    Ok(rx) => {
+                        rxs.push(rx);
+                        break;
+                    }
+                    Err(AdmitError::QueueFull) => std::thread::yield_now(),
+                    Err(e) => panic!("unexpected {e:?}"),
+                }
+            }
+        }
+        for rx in rxs {
+            rx.recv().expect("response lost");
+        }
+        let stats = server.shutdown();
+        assert_eq!(stats.requests, 20);
+    }
+
+    #[test]
+    fn elastic_on_stable_trace_matches_static_server() {
+        // identical inputs through the static and elastic paths must yield
+        // bit-identical outputs, and a stable trace must never swap
+        let model = zoo::edgenet(16);
+        let base = Testbed::new(4, Topology::Ring, Bandwidth::gbps(5.0));
+        let cfg = ServeConfig {
+            max_batch: 1,
+            batch_window: Duration::ZERO,
+            queue_depth: 16,
+        };
+        let plan = crate::planner::plan_for_testbed(&model, &base);
+        let static_srv = Server::start(
+            model.clone(),
+            plan,
+            WeightStore::for_model(&model, 5),
+            base.clone(),
+            cfg.clone(),
+        );
+        let elastic_srv = Server::start_elastic(
+            model.clone(),
+            WeightStore::for_model(&model, 5),
+            base,
+            ConditionTrace::stable(4),
+            cfg,
+            ElasticConfig::default(),
+        );
+        for i in 0..4u64 {
+            let input = Tensor::random(16, 16, 3, 100 + i);
+            let a = static_srv.infer(input.clone()).unwrap();
+            let b = elastic_srv.infer(input).unwrap();
+            assert_eq!(a.output.max_abs_diff(&b.output), 0.0);
+            assert_eq!(b.nodes, 4);
+        }
+        static_srv.shutdown();
+        let stats = elastic_srv.shutdown();
+        let m = stats.adaptation.expect("elastic path must report adaptation");
+        assert_eq!(m.checks, 4);
+        assert_eq!(m.plan_swaps, 0);
+        assert_eq!(m.failovers, 0);
+    }
+
+    #[test]
+    fn elastic_swap_mid_stream_preserves_outputs() {
+        // a mid-stream bandwidth collapse may swap the plan; outputs must
+        // stay bit-identical to the static plan's (numerics are
+        // plan-invariant), and the monitor must have seen the degradation
+        let model = zoo::edgenet(16);
+        let base = Testbed::new(4, Topology::Ring, Bandwidth::gbps(1.0));
+        let plan0 = crate::planner::plan_for_testbed(&model, &base);
+        let c0 = engine::evaluate(&model, &plan0, &base).total;
+        // collapse shortly after the second batch's boundary check
+        let trace = ConditionTrace::stable(4).with_bandwidth_dip(1.5 * c0, f64::INFINITY, 0.1);
+        let cfg = ServeConfig {
+            max_batch: 1,
+            batch_window: Duration::ZERO,
+            queue_depth: 16,
+        };
+        let server = Server::start_elastic(
+            model.clone(),
+            WeightStore::for_model(&model, 5),
+            base,
+            trace,
+            cfg,
+            ElasticConfig::default(),
+        );
+        let ws = WeightStore::for_model(&model, 5);
+        for i in 0..6u64 {
+            let input = Tensor::random(16, 16, 3, 200 + i);
+            let reference = crate::compute::run_reference(&model, &ws, &input);
+            let resp = server.infer(input).unwrap();
+            assert_eq!(reference.max_abs_diff(&resp.output), 0.0, "request {i}");
+        }
+        let stats = server.shutdown();
+        assert_eq!(stats.requests, 6);
+        let m = stats.adaptation.unwrap();
+        assert_eq!(m.checks, 6);
+        assert!(m.degraded_checks >= 1, "collapse never detected: {m}");
     }
 }

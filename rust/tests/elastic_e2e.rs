@@ -1,0 +1,151 @@
+//! End-to-end elastic serving under dynamic conditions: the acceptance test
+//! for the runtime-adaptation subsystem.
+//!
+//! A [`Server`] on the elastic path is driven through a deterministic
+//! node-churn trace. The controller must detect the failure at a batch
+//! boundary, swap to a surviving-cluster (n−1) plan before the next batch,
+//! lose no request, keep every output bit-identical to the single-node
+//! reference, and — when the node rejoins — restore the original plan from
+//! the warm cache. Replan count and cache hit rate ride back on the router
+//! stats.
+
+use std::time::Duration;
+
+use flexpie::compute::{run_reference, Tensor, WeightStore};
+use flexpie::elastic::{ConditionTrace, ElasticConfig, ElasticController};
+use flexpie::engine;
+use flexpie::model::zoo;
+use flexpie::net::{Bandwidth, Testbed, Topology};
+use flexpie::planner::plan_for_testbed;
+use flexpie::serve::{ServeConfig, Server};
+
+/// One-request-per-batch config: batch boundaries (and therefore adaptation
+/// points) land exactly between consecutive requests, making virtual-time
+/// arithmetic in the tests deterministic.
+fn per_request_batches() -> ServeConfig {
+    ServeConfig {
+        max_batch: 1,
+        batch_window: Duration::ZERO,
+        queue_depth: 16,
+    }
+}
+
+#[test]
+fn server_survives_node_churn_without_losing_requests() {
+    let model = zoo::edgenet(16);
+    let base = Testbed::new(4, Topology::Ring, Bandwidth::gbps(1.0));
+
+    // Virtual-time bookkeeping: each batch advances the clock by the
+    // predicted per-item cost of the plan it ran. With per-request batches,
+    // batch k is checked at vt = sum of costs of batches 0..k.
+    let plan4 = plan_for_testbed(&model, &base);
+    let c4 = engine::evaluate(&model, &plan4, &base).total;
+    let tb3 = base.subset(&[true, true, false, true]);
+    let plan3 = plan_for_testbed(&model, &tb3);
+    let c3 = engine::evaluate(&model, &plan3, &tb3).total;
+
+    // Node 2 dies during the third batch's window and rejoins after roughly
+    // three degraded batches (costs after the failover are c3 per batch).
+    let down_at = 2.5 * c4;
+    let up_at = 3.0 * c4 + 2.5 * c3;
+    let trace = ConditionTrace::stable(4).with_outage(2, down_at, up_at);
+
+    let server = Server::start_elastic(
+        model.clone(),
+        WeightStore::for_model(&model, 5),
+        base,
+        trace,
+        per_request_batches(),
+        ElasticConfig::default(),
+    );
+
+    let ws = WeightStore::for_model(&model, 5);
+    let n_requests = 10u64;
+    let mut nodes_seen = Vec::new();
+    for i in 0..n_requests {
+        let input = Tensor::random(16, 16, 3, 1000 + i);
+        let reference = run_reference(&model, &ws, &input);
+        // sequential infer → exactly one batch per request, in order
+        let resp = server.infer(input).expect("request lost");
+        assert_eq!(
+            reference.max_abs_diff(&resp.output),
+            0.0,
+            "request {i} output diverged after adaptation"
+        );
+        assert!(resp.virtual_time > 0.0);
+        nodes_seen.push(resp.nodes);
+    }
+
+    // Batches 0..=2 run healthy at vt = 0, c4, 2c4 (< down_at); batch 3 at
+    // vt = 3·c4 ≥ down_at sees the outage: the swap lands within one batch
+    // boundary of the failure.
+    assert_eq!(&nodes_seen[..3], &[4, 4, 4], "pre-failure batches degraded early");
+    assert_eq!(nodes_seen[3], 3, "failover missed its batch boundary");
+    assert!(
+        nodes_seen[3..].contains(&4),
+        "node rejoin never observed: {nodes_seen:?}"
+    );
+    // no request was dropped and none reordered
+    assert_eq!(nodes_seen.len(), n_requests as usize);
+
+    let stats = server.shutdown();
+    assert_eq!(stats.requests, n_requests);
+    let m = stats.adaptation.expect("elastic path reports adaptation metrics");
+    assert_eq!(m.checks, n_requests, "one condition check per batch");
+    assert!(m.failovers >= 2, "expected down + up failovers: {m}");
+    // the 3-node cell was a cold miss; the rejoin must hit the cached
+    // 4-node plan
+    assert!(m.replans >= 2, "degraded cell never planned: {m}");
+    assert!(m.cache_hits >= 1, "rejoin did not reuse the warm plan: {m}");
+    assert!(m.cache_hit_rate() > 0.0);
+}
+
+#[test]
+fn controller_replans_match_direct_planning() {
+    // the plan the controller swaps to on failover must equal planning
+    // directly for the degraded testbed (no hidden state)
+    let model = zoo::edgenet(16);
+    let base = Testbed::new(4, Topology::Ring, Bandwidth::gbps(1.0));
+    let trace = ConditionTrace::stable(4).with_outage(1, 1.0, f64::INFINITY);
+    let mut ctl = ElasticController::new(
+        model.clone(),
+        base.clone(),
+        trace,
+        ElasticConfig::default(),
+    );
+    let healthy = ctl.on_batch(0.0);
+    assert_eq!(*healthy.plan, plan_for_testbed(&model, &base));
+    let degraded = ctl.on_batch(2.0);
+    let tb3 = base.subset(&[true, false, true, true]);
+    assert_eq!(degraded.testbed, tb3);
+    assert_eq!(*degraded.plan, plan_for_testbed(&model, &tb3));
+}
+
+#[test]
+fn lossy_link_serving_stays_correct() {
+    // bursty 15%-bandwidth windows: adaptation may replan repeatedly, but
+    // every response stays bit-exact and accounted for
+    let model = zoo::edgenet(16);
+    let base = Testbed::new(4, Topology::Ring, Bandwidth::gbps(1.0));
+    let server = Server::start_elastic(
+        model.clone(),
+        WeightStore::for_model(&model, 9),
+        base,
+        ConditionTrace::lossy_link(4, 11),
+        per_request_batches(),
+        ElasticConfig::default(),
+    );
+    let ws = WeightStore::for_model(&model, 9);
+    for i in 0..8u64 {
+        let input = Tensor::random(16, 16, 3, 2000 + i);
+        let reference = run_reference(&model, &ws, &input);
+        let resp = server.infer(input).unwrap();
+        assert_eq!(reference.max_abs_diff(&resp.output), 0.0);
+        assert_eq!(resp.nodes, 4, "lossy link must not drop nodes");
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.requests, 8);
+    let m = stats.adaptation.unwrap();
+    assert_eq!(m.checks, 8);
+    assert_eq!(m.failovers, 0);
+}
