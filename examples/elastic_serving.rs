@@ -130,4 +130,9 @@ fn main() {
     if let Some(m) = stats.adaptation {
         println!("router adaptation: {m}");
     }
+    if let Some(s) = stats.boundary_stall {
+        // replanning runs on the background planner thread, so boundaries
+        // should report microsecond-scale acquisitions even across swaps
+        println!("batch-boundary plan acquisition: {s}");
+    }
 }

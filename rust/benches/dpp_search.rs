@@ -1,14 +1,18 @@
 //! DPP search-time cost (paper §4 Metrics) and the pruning ablation: plan
 //! wall-clock + estimator-call counts per benchmark model, with and without
 //! the dynamic-threshold pruning, against the naive combinatorial space
-//! size DPP avoids.
+//! size DPP avoids. Also tracks the planner's speed knobs across PRs —
+//! serial vs wavefront-parallel search and the memoized cost source — via a
+//! single-line `RESULT` JSON summary (all knobs are cost-transparent: the
+//! plans are bit-identical, only wall-clock differs).
 
 use flexpie::bench::{search_time, search_time_table, BenchOpts, CostKind};
-use flexpie::cost::CostSource;
+use flexpie::cost::{CostSource, MemoStore};
 use flexpie::model::zoo;
 use flexpie::net::{Bandwidth, Testbed, Topology};
-use flexpie::planner::Dpp;
+use flexpie::planner::{prewarm_memo, Dpp, DppConfig};
 use flexpie::util::bench::BenchRunner;
+use flexpie::util::json::Json;
 
 fn main() {
     let opts = BenchOpts { cost: CostKind::Analytic, ..Default::default() };
@@ -29,4 +33,53 @@ fn main() {
         let dpp = Dpp::new(&model, &cost);
         r.bench(&format!("plan/{name}"), || dpp.plan().est_cost);
     }
+
+    // serial vs parallel vs memoized on one reference model
+    let fast = std::env::var("FLEXPIE_BENCH_FAST").is_ok();
+    let model = if fast {
+        zoo::mobilenet_v1(224, 1000).truncated(12)
+    } else {
+        zoo::mobilenet_v1(224, 1000)
+    };
+    let workers = 4usize;
+    let serial_cfg = DppConfig { workers: 1, ..Default::default() };
+    let par_cfg = DppConfig { workers, ..Default::default() };
+    let serial = r.bench(&format!("plan_serial/{}", model.name), || {
+        Dpp::with_config(&model, &cost, serial_cfg.clone()).plan().est_cost
+    });
+    let parallel = r.bench(&format!("plan_parallel{workers}/{}", model.name), || {
+        Dpp::with_config(&model, &cost, par_cfg.clone()).plan().est_cost
+    });
+
+    // memoized source, prewarmed with the full query universe: the warm
+    // replan path the elastic layer runs after its first search
+    let store = MemoStore::shared();
+    prewarm_memo(&model, &tb, &store);
+    let memo_cost = CostSource::analytic(&tb).memoized(&store);
+    let warm = r.bench(&format!("plan_parallel{workers}_memo_warm/{}", model.name), || {
+        Dpp::with_config(&model, &memo_cost, par_cfg.clone()).plan().est_cost
+    });
+    let (_, mstats) = Dpp::with_config(&model, &memo_cost, par_cfg.clone()).plan_with_stats();
+
+    let summary = Json::obj(vec![
+        ("bench", Json::Str("dpp_search".into())),
+        ("model", Json::Str(model.name.clone())),
+        ("nodes", Json::Num(4.0)),
+        ("workers", Json::Num(workers as f64)),
+        ("serial_ms", Json::Num(serial.mean_secs() * 1e3)),
+        ("parallel_ms", Json::Num(parallel.mean_secs() * 1e3)),
+        (
+            "parallel_speedup",
+            Json::Num(serial.mean_secs() / parallel.mean_secs().max(1e-12)),
+        ),
+        ("parallel_memo_warm_ms", Json::Num(warm.mean_secs() * 1e3)),
+        (
+            "memo_warm_speedup",
+            Json::Num(serial.mean_secs() / warm.mean_secs().max(1e-12)),
+        ),
+        ("memo_compute_hit_rate", Json::Num(mstats.memo.compute_hit_rate())),
+        ("memo_sync_warm_rate", Json::Num(mstats.memo.sync_warm_rate())),
+        ("memo_sync_misses", Json::Num(mstats.memo.sync_misses as f64)),
+    ]);
+    println!("RESULT {}", summary.to_string());
 }

@@ -1,10 +1,18 @@
 //! Elastic adaptation latency — what a replan costs on the serving path.
 //!
-//! Three numbers matter for online adaptation: the cold replan (full DPP
-//! search for an unseen condition cell), the warm plan-cache hit, and the
-//! steady-state `on_batch` monitor check (re-pricing the active plan). The
-//! bench measures each in isolation and emits a single-line JSON summary
-//! (prefixed `RESULT `) for trajectory tracking across PRs.
+//! The numbers that matter for online adaptation, all in the single-line
+//! JSON summary (prefixed `RESULT `) for trajectory tracking across PRs:
+//!
+//! * the cold replan (serial unmemoized — the PR 1 baseline — vs the
+//!   wavefront-parallel search),
+//! * replan *throughput* over a realistic workload (the speculative n−1
+//!   failover set × a bandwidth sweep) on a 4-worker pool over a prewarmed
+//!   query memo, vs planning the same cells serially and uncached,
+//! * the pure-bandwidth-drift replan's memo counters (sync misses must be
+//!   zero: drift is served by analytic re-pricing of cached geometry),
+//! * the warm plan-cache hit and the sync controller's `on_batch` check,
+//! * p50/p99 batch-boundary stall of a real server on the background
+//!   replanner path, across a scripted bandwidth dip *and* a node outage.
 //!
 //! ```bash
 //! cargo bench --bench elastic_replan            # full
@@ -12,23 +20,67 @@
 //! ```
 
 use std::sync::Arc;
+use std::time::Duration;
 
+use flexpie::compute::{Tensor, WeightStore};
+use flexpie::cost::MemoStore;
 use flexpie::elastic::{CacheKey, ConditionTrace, ElasticConfig, ElasticController, PlanCache};
 use flexpie::model::zoo;
 use flexpie::net::{Bandwidth, Testbed, Topology};
-use flexpie::planner::plan_for_testbed;
+use flexpie::planner::{
+    plan_batch, plan_for_testbed, plan_for_testbed_opts, prewarm_memo, PlannerOpts,
+};
+use flexpie::serve::{ServeConfig, Server};
 use flexpie::util::bench::{black_box, BenchRunner};
 use flexpie::util::json::Json;
 
 fn main() {
+    let fast = std::env::var("FLEXPIE_BENCH_FAST").is_ok();
     let r = BenchRunner::new("elastic_replan");
     let base = Testbed::new(4, Topology::Ring, Bandwidth::gbps(1.0));
     let model = zoo::mobilenet_v1(224, 1000).truncated(12);
+    let workers = 4usize;
 
-    // --- cold replan: full DPP for an unseen condition cell ----------------
-    let cold = r.bench("cold_replan/mobilenet12_4node", || {
-        plan_for_testbed(black_box(&model), black_box(&base))
+    // --- cold replan: serial unmemoized (PR 1 baseline) vs parallel --------
+    let serial_opts = PlannerOpts::serial();
+    let cold = r.bench("cold_replan_serial/mobilenet12_4node", || {
+        plan_for_testbed_opts(black_box(&model), black_box(&base), &serial_opts)
     });
+    let par_opts = PlannerOpts { workers, memo: None };
+    let cold_par = r.bench("cold_replan_parallel4/mobilenet12_4node", || {
+        plan_for_testbed_opts(black_box(&model), black_box(&base), &par_opts)
+    });
+
+    // --- replan throughput: the workload a regime shift hands the planner --
+    // (full-cluster plan + an n−1 failover cell, across a bandwidth sweep)
+    let mut cells: Vec<Testbed> = Vec::new();
+    for factor in [1.0, 0.85, 0.7, 0.55, 0.4, 0.25] {
+        let tb = base.with_bandwidth_factor(factor);
+        cells.push(tb.clone());
+        cells.push(tb.subset(&[true, true, false, true]));
+    }
+    let workload_serial = r.bench("replan_workload/serial_unmemoized", || {
+        for tb in &cells {
+            black_box(plan_for_testbed_opts(&model, tb, &serial_opts));
+        }
+    });
+    let store = MemoStore::shared();
+    prewarm_memo(&model, &base, &store);
+    let pool_opts = PlannerOpts { workers, memo: Some(store.clone()) };
+    let workload_pool = r.bench("replan_workload/pool4_memoized", || {
+        black_box(plan_batch(&model, &cells, &pool_opts));
+    });
+    let throughput_speedup =
+        workload_serial.mean_secs() / workload_pool.mean_secs().max(1e-12);
+
+    // --- pure-bandwidth-drift replan: zero inner sync queries ---------------
+    let drift = base.with_bandwidth_factor(0.33);
+    let (_, drift_stats) = plan_for_testbed_opts(
+        &model,
+        &drift,
+        &PlannerOpts { workers, memo: Some(store.clone()) },
+    );
+    let drift_memo = drift_stats.memo;
 
     // --- warm path: plan-cache hit ------------------------------------------
     let trace = ConditionTrace::stable(4);
@@ -38,7 +90,7 @@ fn main() {
     cache.put(key.clone(), Arc::new(plan_for_testbed(&model, &base)));
     let hit = r.bench("cache_hit/get", || cache.get(black_box(&key)));
 
-    // --- steady state: per-batch monitor check (no swap) --------------------
+    // --- steady state: per-batch monitor check (sync controller path) -------
     let mut ctl = ElasticController::new(
         model.clone(),
         base.clone(),
@@ -51,18 +103,69 @@ fn main() {
         ctl.on_batch(t)
     });
 
+    // --- batch-boundary stall on the background-replanner serving path ------
+    let serve_model = zoo::edgenet(16);
+    let sbase = Testbed::new(4, Topology::Ring, Bandwidth::gbps(1.0));
+    let item = {
+        let p = plan_for_testbed(&serve_model, &sbase);
+        flexpie::engine::evaluate(&serve_model, &p, &sbase).total
+    };
+    // mid-stream bandwidth dip and a scripted outage: boundaries must stay
+    // wait-free through both
+    let strace = ConditionTrace::stable(4)
+        .with_bandwidth_dip(6.5 * item, 14.5 * item, 0.1)
+        .with_outage(2, 22.5 * item, 30.5 * item);
+    let server = Server::start_elastic(
+        serve_model.clone(),
+        WeightStore::for_model(&serve_model, 7),
+        sbase,
+        strace,
+        ServeConfig { max_batch: 1, batch_window: Duration::ZERO, queue_depth: 32 },
+        ElasticConfig::default(),
+    );
+    let l0 = &serve_model.layers[0];
+    let n_requests: u64 = if fast { 24 } else { 48 };
+    for i in 0..n_requests {
+        server
+            .infer(Tensor::random(l0.in_h, l0.in_w, l0.in_c, i))
+            .expect("request lost");
+    }
+    let stats = server.shutdown();
+    let stall = stats.boundary_stall.expect("elastic path reports boundary stalls");
+    let adapt = stats.adaptation.expect("elastic path reports adaptation");
+    println!("serving adaptation: {adapt}");
+    println!("batch-boundary stall: {stall}");
+
     // --- single-line JSON summary -------------------------------------------
     let summary = Json::obj(vec![
         ("bench", Json::Str("elastic_replan".into())),
         ("model", Json::Str(model.name.clone())),
         ("nodes", Json::Num(4.0)),
+        ("replan_workers", Json::Num(workers as f64)),
         ("cold_replan_ms", Json::Num(cold.mean_secs() * 1e3)),
+        ("cold_replan_parallel_ms", Json::Num(cold_par.mean_secs() * 1e3)),
+        (
+            "parallel_search_speedup",
+            Json::Num(cold.mean_secs() / cold_par.mean_secs().max(1e-12)),
+        ),
+        ("replan_workload_cells", Json::Num(cells.len() as f64)),
+        ("replan_throughput_speedup", Json::Num(throughput_speedup)),
+        ("drift_sync_misses", Json::Num(drift_memo.sync_misses as f64)),
+        ("drift_sync_rescales", Json::Num(drift_memo.sync_rescales as f64)),
+        ("memo_sync_warm_rate", Json::Num(drift_memo.sync_warm_rate())),
+        ("memo_compute_hit_rate", Json::Num(drift_memo.compute_hit_rate())),
         ("cache_hit_us", Json::Num(hit.mean_secs() * 1e6)),
         ("on_batch_us", Json::Num(monitor.mean_secs() * 1e6)),
         (
             "replan_speedup_vs_cache",
             Json::Num(cold.mean_secs() / hit.mean_secs().max(1e-12)),
         ),
+        ("stall_p50_us", Json::Num(stall.p50.as_secs_f64() * 1e6)),
+        ("stall_p99_us", Json::Num(stall.p99.as_secs_f64() * 1e6)),
+        ("stall_max_us", Json::Num(stall.max.as_secs_f64() * 1e6)),
+        ("speculative_plans", Json::Num(adapt.speculative_plans as f64)),
+        ("speculative_hits", Json::Num(adapt.speculative_hits as f64)),
+        ("inline_replans", Json::Num(adapt.inline_replans as f64)),
     ]);
     println!("RESULT {}", summary.to_string());
 }

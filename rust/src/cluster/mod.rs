@@ -100,7 +100,11 @@ pub fn run_distributed(
             output = res.output;
         }
     }
-    ClusterRun { output: output.expect("leader produced no output"), bytes_exchanged: bytes, messages }
+    ClusterRun {
+        output: output.expect("leader produced no output"),
+        bytes_exchanged: bytes,
+        messages,
+    }
 }
 
 /// Execute `plan` on the surviving sub-cluster described by `alive` — the

@@ -230,7 +230,9 @@ pub fn compute_region(
         }
         ConvType::Depthwise => conv2d(layer, weights, &input, &raw, out_r, &mut out, true),
         ConvType::Pool => pool_avg(layer, &input, &raw, out_r, &mut out),
-        ConvType::Dense | ConvType::Attention => dense(layer, weights, &input, &raw, out_r, &mut out),
+        ConvType::Dense | ConvType::Attention => {
+            dense(layer, weights, &input, &raw, out_r, &mut out)
+        }
     }
 
     if layer.fused_activation {

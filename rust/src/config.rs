@@ -141,6 +141,7 @@ impl ElasticExperiment {
         ElasticConfig {
             degrade_threshold: self.degrade_threshold,
             cache_capacity: self.cache_capacity,
+            ..ElasticConfig::default()
         }
     }
 

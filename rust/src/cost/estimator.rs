@@ -5,7 +5,6 @@
 use std::path::Path;
 use std::sync::Arc;
 
-
 use super::gbdt::{evaluate, FitReport, Gbdt, GbdtParams};
 use super::tracegen::{generate, TraceConfig, Traces};
 use super::NF;

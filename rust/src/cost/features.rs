@@ -10,7 +10,6 @@
 //! (efficiency cliffs, topology serialization) rather than re-deriving
 //! arithmetic. The deviation is recorded in DESIGN.md §2.
 
-
 /// Number of feature dimensions.
 pub const NF: usize = 16;
 

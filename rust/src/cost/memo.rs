@@ -1,0 +1,529 @@
+//! Memoized cost queries — the planner-side query cache that makes online
+//! replanning cheap.
+//!
+//! ## Why memoization is sound
+//!
+//! Both estimator queries are *pure functions* of data the query itself
+//! carries, so caching them can never change a planner result:
+//!
+//! * A [`ComputeQuery`] is answered, for the analytic oracle, from
+//!   `(per_node_flops, conv_t)` and the device profile alone — the speed
+//!   factors are already folded into `per_node_flops` by the query builder —
+//!   and for the GBDT oracle from the feature vector alone. Neither depends
+//!   on any planner state.
+//! * A [`SyncQuery`] is answered, for the analytic oracle, from the byte
+//!   matrix `msgs` plus the topology's schedule, and for the GBDT oracle
+//!   from the feature vector. The byte matrix is pure partition *geometry*
+//!   (layer shapes × schemes × node count): bandwidth never changes which
+//!   bytes move where, only how long they take.
+//!
+//! Keys are therefore the exact bit patterns of those inputs (no lossy
+//! hashing — equal keys imply equal answers by construction), namespaced by
+//! a [`SourceSig`] capturing everything else the answer depends on
+//! (topology, per-message latency, device profile, and — for learned
+//! estimators — the estimator instance).
+//!
+//! ## The re-pricing fast path
+//!
+//! For the analytic oracle the *bandwidth scalar is deliberately excluded
+//! from the sync key*: an entry stores the bandwidth-independent
+//! [`ExchangeProfile`] (which link/port carries which bytes), and every
+//! lookup prices that profile under the querying testbed's current
+//! bandwidth via [`Testbed::price_exchange`]. A replan after pure bandwidth
+//! drift — the common diurnal case — therefore performs **zero** inner sync
+//! queries: every boundary cost is an analytic rescale of cached geometry,
+//! bit-identical to what a fresh query would return. The
+//! [`MemoStats::sync_rescales`] counter tracks exactly these re-pricings
+//! (lookups served at a bandwidth other than the one the entry was built
+//! under).
+//!
+//! The store is thread-safe (`RwLock` maps + atomic counters) and shared
+//! via `Arc`, so one warm store serves the parallel DPP workers, the
+//! background replanner, and its speculative n−1 planning concurrently.
+//! Both maps are bounded (`MAX_ENTRIES_PER_MAP`): because the memo is a
+//! pure cache, overflow simply flushes the map and lets the working set
+//! refill — memory stays O(1) even when continuously drifting device
+//! speeds mint fresh compute keys at every consulted batch boundary.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+use super::{ComputeQuery, CostSource, Estimators, SyncQuery};
+use crate::net::{ExchangeProfile, Testbed, Topology};
+
+/// Per-map entry cap. The memo is a pure cache, so overflowing simply
+/// flushes the map and lets it refill: compute keys embed speed-adjusted
+/// per-node flops, and under continuously drifting device speeds (the
+/// diurnal profile) every consulted boundary mints fresh bit patterns — an
+/// unbounded map would grow for the lifetime of a long-running server. A
+/// full search universe is a few thousand entries, so the cap leaves ample
+/// headroom across many models and condition cells while bounding memory.
+const MAX_ENTRIES_PER_MAP: usize = 65_536;
+
+/// Hit/miss/rescale counters of a [`MemoStore`] (monotone; diff two
+/// snapshots with [`MemoStats::delta_since`] for per-search numbers).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct MemoStats {
+    /// Compute queries answered from the cache.
+    pub compute_hits: u64,
+    /// Compute queries that consulted the inner estimator.
+    pub compute_misses: u64,
+    /// Sync queries answered from the cache at the entry's own bandwidth.
+    pub sync_hits: u64,
+    /// Sync queries answered by re-pricing cached geometry under a
+    /// *different* bandwidth (the analytic rescale fast path).
+    pub sync_rescales: u64,
+    /// Sync queries that consulted the inner estimator.
+    pub sync_misses: u64,
+}
+
+impl MemoStats {
+    /// Counter increments since an `earlier` snapshot of the same store.
+    pub fn delta_since(self, earlier: MemoStats) -> MemoStats {
+        MemoStats {
+            compute_hits: self.compute_hits.saturating_sub(earlier.compute_hits),
+            compute_misses: self.compute_misses.saturating_sub(earlier.compute_misses),
+            sync_hits: self.sync_hits.saturating_sub(earlier.sync_hits),
+            sync_rescales: self.sync_rescales.saturating_sub(earlier.sync_rescales),
+            sync_misses: self.sync_misses.saturating_sub(earlier.sync_misses),
+        }
+    }
+
+    /// Fraction of compute queries served without the inner estimator.
+    pub fn compute_hit_rate(&self) -> f64 {
+        crate::metrics::hit_ratio(self.compute_hits, self.compute_misses)
+    }
+
+    /// Fraction of sync queries served without the inner estimator (exact
+    /// hits and rescales both count as warm).
+    pub fn sync_warm_rate(&self) -> f64 {
+        crate::metrics::hit_ratio(self.sync_hits + self.sync_rescales, self.sync_misses)
+    }
+}
+
+impl std::fmt::Display for MemoStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "compute={}h/{}m sync={}h/{}r/{}m",
+            self.compute_hits,
+            self.compute_misses,
+            self.sync_hits,
+            self.sync_rescales,
+            self.sync_misses
+        )
+    }
+}
+
+/// Everything a cached answer depends on besides the per-query key and (for
+/// analytic sync entries) the bandwidth: interned once per distinct source
+/// so keys carry a compact id instead of the full signature.
+#[derive(Clone)]
+struct SourceSig {
+    /// 0 = analytic oracle, 1 = learned (GBDT) estimators.
+    kind: u8,
+    topology: Topology,
+    /// Per-message latency bits (priced live for sync, but namespaced so
+    /// latency-differing testbeds never share compute entries either).
+    latency: u64,
+    /// Device profile bits: peak, efficiency[0..6], layer overhead.
+    device: [u64; 8],
+    /// The learned estimator instance this namespace belongs to (`None`
+    /// for the analytic oracle). Holding the `Arc` keeps the allocation
+    /// alive for the store's lifetime, so pointer identity can never be
+    /// recycled onto a different estimator while its entries still exist.
+    estimators: Option<Arc<Estimators>>,
+}
+
+impl PartialEq for SourceSig {
+    fn eq(&self, other: &SourceSig) -> bool {
+        let same_est = match (&self.estimators, &other.estimators) {
+            (None, None) => true,
+            (Some(a), Some(b)) => Arc::ptr_eq(a, b),
+            _ => false,
+        };
+        self.kind == other.kind
+            && self.topology == other.topology
+            && self.latency == other.latency
+            && self.device == other.device
+            && same_est
+    }
+}
+
+impl std::fmt::Debug for SourceSig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "SourceSig {{ kind: {}, topology: {}, estimators: {:?} }}",
+            self.kind,
+            self.topology,
+            self.estimators.as_ref().map(Arc::as_ptr)
+        )
+    }
+}
+
+impl SourceSig {
+    fn of(inner: &CostSource) -> SourceSig {
+        let tb = inner.testbed();
+        let mut device = [0u64; 8];
+        device[0] = tb.device.peak_flops.to_bits();
+        for (i, e) in tb.device.efficiency.iter().enumerate() {
+            device[1 + i] = e.to_bits();
+        }
+        device[7] = tb.device.layer_overhead.to_bits();
+        let (kind, estimators) = match inner {
+            CostSource::Analytic(_) => (0u8, None),
+            CostSource::Gbdt { estimators, .. } => (1u8, Some(estimators.clone())),
+            CostSource::Memo(_) => unreachable!("memo layers are flattened on construction"),
+        };
+        SourceSig {
+            kind,
+            topology: tb.topology,
+            latency: tb.latency.to_bits(),
+            device,
+            estimators,
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+enum ComputeKey {
+    /// Analytic answer: bottleneck over speed-adjusted per-node flops.
+    Analytic { sig: u32, conv: u8, flops: Box<[u64]> },
+    /// Learned answer: a pure function of the feature vector.
+    Learned { sig: u32, features: Box<[u64]> },
+}
+
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+enum SyncKey {
+    /// Analytic answer: schedule of the byte matrix (bandwidth excluded —
+    /// entries re-price under the current bandwidth on every lookup).
+    Analytic { sig: u32, msgs: Box<[u64]> },
+    /// Learned answer: a pure function of the feature vector (which
+    /// includes the bandwidth feature, so no rescale path exists).
+    Learned { sig: u32, features: Box<[u64]> },
+}
+
+#[derive(Debug, Clone)]
+enum SyncEntry {
+    /// Cached schedule + the bandwidth it was first priced under (the
+    /// bandwidth only classifies hit vs. rescale; pricing is always live).
+    Analytic { bw_bits: u64, profile: ExchangeProfile },
+    Learned { value: f64 },
+}
+
+/// Shared, thread-safe memo of estimator answers. One store can serve any
+/// number of [`MemoCostSource`]s — across testbeds, bandwidths and even
+/// oracles — because every entry is namespaced by its [`SourceSig`].
+pub struct MemoStore {
+    sigs: RwLock<Vec<SourceSig>>,
+    compute: RwLock<HashMap<ComputeKey, f64>>,
+    sync: RwLock<HashMap<SyncKey, SyncEntry>>,
+    compute_hits: AtomicU64,
+    compute_misses: AtomicU64,
+    sync_hits: AtomicU64,
+    sync_rescales: AtomicU64,
+    sync_misses: AtomicU64,
+}
+
+impl std::fmt::Debug for MemoStore {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let (nc, ns) = self.len();
+        write!(f, "MemoStore {{ compute: {}, sync: {}, stats: {} }}", nc, ns, self.stats())
+    }
+}
+
+impl Default for MemoStore {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MemoStore {
+    pub fn new() -> MemoStore {
+        MemoStore {
+            sigs: RwLock::new(Vec::new()),
+            compute: RwLock::new(HashMap::new()),
+            sync: RwLock::new(HashMap::new()),
+            compute_hits: AtomicU64::new(0),
+            compute_misses: AtomicU64::new(0),
+            sync_hits: AtomicU64::new(0),
+            sync_rescales: AtomicU64::new(0),
+            sync_misses: AtomicU64::new(0),
+        }
+    }
+
+    /// A fresh store behind the `Arc` every consumer shares.
+    pub fn shared() -> Arc<MemoStore> {
+        Arc::new(MemoStore::new())
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> MemoStats {
+        MemoStats {
+            compute_hits: self.compute_hits.load(Ordering::Relaxed),
+            compute_misses: self.compute_misses.load(Ordering::Relaxed),
+            sync_hits: self.sync_hits.load(Ordering::Relaxed),
+            sync_rescales: self.sync_rescales.load(Ordering::Relaxed),
+            sync_misses: self.sync_misses.load(Ordering::Relaxed),
+        }
+    }
+
+    /// `(compute entries, sync entries)` currently cached.
+    pub fn len(&self) -> (usize, usize) {
+        (self.compute.read().unwrap().len(), self.sync.read().unwrap().len())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == (0, 0)
+    }
+
+    fn intern(&self, sig: SourceSig) -> u32 {
+        if let Some(i) = self.sigs.read().unwrap().iter().position(|s| *s == sig) {
+            return i as u32;
+        }
+        let mut sigs = self.sigs.write().unwrap();
+        // re-check under the write lock: another source may have raced us
+        if let Some(i) = sigs.iter().position(|s| *s == sig) {
+            return i as u32;
+        }
+        sigs.push(sig);
+        (sigs.len() - 1) as u32
+    }
+}
+
+/// A [`CostSource`] wrapper that answers repeated queries from a shared
+/// [`MemoStore`] — see the module docs for the purity argument and the
+/// bandwidth re-pricing fast path.
+#[derive(Clone)]
+pub struct MemoCostSource {
+    inner: Box<CostSource>,
+    store: Arc<MemoStore>,
+    sig: u32,
+}
+
+impl std::fmt::Debug for MemoCostSource {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "MemoCostSource {{ inner: {}, store: {:?} }}", self.inner.name(), self.store)
+    }
+}
+
+impl MemoCostSource {
+    /// Wrap `inner` over `store`. A memo-of-memo is flattened so the cache
+    /// is consulted exactly once per query.
+    pub fn new(inner: CostSource, store: Arc<MemoStore>) -> MemoCostSource {
+        let inner = match inner {
+            CostSource::Memo(m) => m.inner,
+            other => Box::new(other),
+        };
+        let sig = store.intern(SourceSig::of(&inner));
+        MemoCostSource { inner, store, sig }
+    }
+
+    pub fn inner(&self) -> &CostSource {
+        &self.inner
+    }
+
+    pub fn store(&self) -> &Arc<MemoStore> {
+        &self.store
+    }
+
+    pub fn testbed(&self) -> &Testbed {
+        self.inner.testbed()
+    }
+
+    pub fn name(&self) -> &'static str {
+        match &*self.inner {
+            CostSource::Analytic(_) => "memo+analytic",
+            CostSource::Gbdt { .. } => "memo+gbdt",
+            CostSource::Memo(_) => unreachable!("memo layers are flattened on construction"),
+        }
+    }
+
+    pub fn compute_time(&self, q: &ComputeQuery) -> f64 {
+        let key = match &*self.inner {
+            CostSource::Analytic(_) => ComputeKey::Analytic {
+                sig: self.sig,
+                conv: q.conv_t.code() as u8,
+                flops: q.per_node_flops[..q.nodes].iter().map(|f| f.to_bits()).collect(),
+            },
+            CostSource::Gbdt { .. } => ComputeKey::Learned {
+                sig: self.sig,
+                features: q.features.0.iter().map(|f| f.to_bits()).collect(),
+            },
+            CostSource::Memo(_) => unreachable!("memo layers are flattened on construction"),
+        };
+        if let Some(&v) = self.store.compute.read().unwrap().get(&key) {
+            self.store.compute_hits.fetch_add(1, Ordering::Relaxed);
+            return v;
+        }
+        let v = self.inner.compute_time(q);
+        self.store.compute_misses.fetch_add(1, Ordering::Relaxed);
+        // concurrent fills of the same key write the same pure value
+        let mut map = self.store.compute.write().unwrap();
+        if map.len() >= MAX_ENTRIES_PER_MAP {
+            map.clear();
+        }
+        map.insert(key, v);
+        v
+    }
+
+    pub fn sync_time(&self, q: &SyncQuery) -> f64 {
+        match &*self.inner {
+            CostSource::Analytic(tb) => {
+                let key = SyncKey::Analytic {
+                    sig: self.sig,
+                    msgs: q.msgs.clone().into_boxed_slice(),
+                };
+                let bw_bits = tb.bandwidth.as_gbps().to_bits();
+                if let Some(SyncEntry::Analytic { bw_bits: entry_bw, profile }) =
+                    self.store.sync.read().unwrap().get(&key)
+                {
+                    if *entry_bw == bw_bits {
+                        self.store.sync_hits.fetch_add(1, Ordering::Relaxed);
+                    } else {
+                        self.store.sync_rescales.fetch_add(1, Ordering::Relaxed);
+                    }
+                    // always price live: bit-identical to a fresh query at
+                    // the current bandwidth and latency
+                    return tb.price_exchange(profile);
+                }
+                let profile = tb.exchange_profile(&q.msgs);
+                let v = tb.price_exchange(&profile);
+                self.store.sync_misses.fetch_add(1, Ordering::Relaxed);
+                let mut map = self.store.sync.write().unwrap();
+                if map.len() >= MAX_ENTRIES_PER_MAP {
+                    map.clear();
+                }
+                map.insert(key, SyncEntry::Analytic { bw_bits, profile });
+                v
+            }
+            CostSource::Gbdt { .. } => {
+                let key = SyncKey::Learned {
+                    sig: self.sig,
+                    features: q.features.0.iter().map(|f| f.to_bits()).collect(),
+                };
+                if let Some(SyncEntry::Learned { value }) =
+                    self.store.sync.read().unwrap().get(&key)
+                {
+                    self.store.sync_hits.fetch_add(1, Ordering::Relaxed);
+                    return *value;
+                }
+                let v = self.inner.sync_time(q);
+                self.store.sync_misses.fetch_add(1, Ordering::Relaxed);
+                let mut map = self.store.sync.write().unwrap();
+                if map.len() >= MAX_ENTRIES_PER_MAP {
+                    map.clear();
+                }
+                map.insert(key, SyncEntry::Learned { value: v });
+                v
+            }
+            CostSource::Memo(_) => unreachable!("memo layers are flattened on construction"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::query::{block_entry_need, boundary_query, compute_query};
+    use crate::model::{ConvType, LayerMeta};
+    use crate::net::{Bandwidth, Topology};
+    use crate::partition::inflate::BlockGeometry;
+    use crate::partition::Scheme;
+
+    fn tb(gbps: f64) -> Testbed {
+        Testbed::new(4, Topology::Ring, Bandwidth::gbps(gbps))
+    }
+
+    fn conv(h: i64, c: i64) -> LayerMeta {
+        LayerMeta::conv("t", ConvType::Standard, h, h, c, c, 3, 1, 1)
+    }
+
+    fn queries(testbed: &Testbed) -> (ComputeQuery, SyncQuery) {
+        let a = conv(16, 8);
+        let b = conv(16, 8);
+        let layers = vec![a.clone()];
+        let geo = BlockGeometry::new(&layers, Scheme::InH, 4);
+        let cq = compute_query(&layers, &geo, 0, testbed);
+        let need = block_entry_need(std::slice::from_ref(&b), Scheme::InH, 4);
+        let sq = boundary_query(&a, Scheme::InH, &b, Scheme::InH, &need, testbed);
+        (cq, sq)
+    }
+
+    #[test]
+    fn memoized_answers_match_inner_bit_for_bit() {
+        let testbed = tb(1.0);
+        let inner = CostSource::analytic(&testbed);
+        let store = MemoStore::shared();
+        let memo = inner.clone().memoized(&store);
+        let (cq, sq) = queries(&testbed);
+        for _ in 0..3 {
+            assert_eq!(memo.compute_time(&cq).to_bits(), inner.compute_time(&cq).to_bits());
+            assert_eq!(memo.sync_time(&sq).to_bits(), inner.sync_time(&sq).to_bits());
+        }
+        let s = store.stats();
+        assert_eq!((s.compute_misses, s.sync_misses), (1, 1));
+        assert_eq!((s.compute_hits, s.sync_hits), (2, 2));
+        assert_eq!(s.sync_rescales, 0);
+    }
+
+    #[test]
+    fn bandwidth_drift_is_served_by_rescaling_not_requerying() {
+        let fast = tb(1.0);
+        let slow = fast.with_bandwidth_factor(0.25);
+        let store = MemoStore::shared();
+        let memo_fast = CostSource::analytic(&fast).memoized(&store);
+        let (cq, sq) = queries(&fast);
+        memo_fast.compute_time(&cq);
+        memo_fast.sync_time(&sq);
+        let warm = store.stats();
+
+        // same geometry under a collapsed link: zero inner queries
+        let memo_slow = CostSource::analytic(&slow).memoized(&store);
+        let (cq2, sq2) = queries(&slow);
+        let got_c = memo_slow.compute_time(&cq2);
+        let got_s = memo_slow.sync_time(&sq2);
+        let delta = store.stats().delta_since(warm);
+        assert_eq!(delta.compute_misses, 0, "compute is bandwidth-independent");
+        assert_eq!(delta.sync_misses, 0, "drift must not re-query the estimator");
+        assert_eq!(delta.sync_rescales, 1, "drift lookups are rescales");
+
+        // and the rescaled answers are bit-identical to fresh queries
+        let fresh = CostSource::analytic(&slow);
+        assert_eq!(got_c.to_bits(), fresh.compute_time(&cq2).to_bits());
+        assert_eq!(got_s.to_bits(), fresh.sync_time(&sq2).to_bits());
+    }
+
+    #[test]
+    fn distinct_topologies_never_share_entries() {
+        let ring = Testbed::new(4, Topology::Ring, Bandwidth::gbps(1.0));
+        let ps = Testbed::new(4, Topology::Ps, Bandwidth::gbps(1.0));
+        let store = MemoStore::shared();
+        let memo_ring = CostSource::analytic(&ring).memoized(&store);
+        let memo_ps = CostSource::analytic(&ps).memoized(&store);
+        let (_, sq_ring) = queries(&ring);
+        let (_, sq_ps) = queries(&ps);
+        let a = memo_ring.sync_time(&sq_ring);
+        let b = memo_ps.sync_time(&sq_ps);
+        assert_eq!(store.stats().sync_misses, 2, "each topology fills its own entry");
+        assert_eq!(a.to_bits(), CostSource::analytic(&ring).sync_time(&sq_ring).to_bits());
+        assert_eq!(b.to_bits(), CostSource::analytic(&ps).sync_time(&sq_ps).to_bits());
+    }
+
+    #[test]
+    fn memo_of_memo_flattens() {
+        let testbed = tb(1.0);
+        let store = MemoStore::shared();
+        let once = CostSource::analytic(&testbed).memoized(&store);
+        let twice = once.memoized(&store);
+        match &twice {
+            CostSource::Memo(m) => {
+                assert!(matches!(&*m.inner, CostSource::Analytic(_)), "inner must be flattened")
+            }
+            other => panic!("expected memo source, got {}", other.name()),
+        }
+        assert_eq!(twice.name(), "memo+analytic");
+    }
+}

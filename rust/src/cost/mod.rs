@@ -24,11 +24,13 @@ pub mod analytic;
 pub mod estimator;
 pub mod features;
 pub mod gbdt;
+pub mod memo;
 pub mod query;
 pub mod tracegen;
 
 pub use estimator::Estimators;
 pub use features::{Features, NF};
+pub use memo::{MemoCostSource, MemoStats, MemoStore};
 
 use crate::model::ConvType;
 use crate::net::Testbed;
@@ -73,6 +75,9 @@ pub enum CostSource {
     Analytic(Testbed),
     /// Learned i/s-Estimators (GBDT), as in the paper.
     Gbdt { estimators: std::sync::Arc<Estimators>, testbed: Testbed },
+    /// Any of the above behind a shared query cache ([`memo`]) with an
+    /// analytic bandwidth re-pricing fast path.
+    Memo(MemoCostSource),
 }
 
 impl CostSource {
@@ -84,10 +89,24 @@ impl CostSource {
         CostSource::Gbdt { estimators, testbed: testbed.clone() }
     }
 
+    /// This source behind `store`'s query cache (memo-of-memo flattens).
+    pub fn memoized(self, store: &std::sync::Arc<MemoStore>) -> CostSource {
+        CostSource::Memo(MemoCostSource::new(self, store.clone()))
+    }
+
+    /// The memo counters, when this source is memoized (zeros otherwise).
+    pub fn memo_stats(&self) -> MemoStats {
+        match self {
+            CostSource::Memo(m) => m.store().stats(),
+            _ => MemoStats::default(),
+        }
+    }
+
     pub fn testbed(&self) -> &Testbed {
         match self {
             CostSource::Analytic(tb) => tb,
             CostSource::Gbdt { testbed, .. } => testbed,
+            CostSource::Memo(m) => m.testbed(),
         }
     }
 
@@ -97,6 +116,7 @@ impl CostSource {
         match self {
             CostSource::Analytic(tb) => analytic::compute_time(tb, q),
             CostSource::Gbdt { estimators, .. } => estimators.i_est.predict(&q.features.0),
+            CostSource::Memo(m) => m.compute_time(q),
         }
     }
 
@@ -105,6 +125,7 @@ impl CostSource {
         match self {
             CostSource::Analytic(tb) => analytic::sync_time(tb, q),
             CostSource::Gbdt { estimators, .. } => estimators.s_est.predict(&q.features.0),
+            CostSource::Memo(m) => m.sync_time(q),
         }
     }
 
@@ -112,6 +133,7 @@ impl CostSource {
         match self {
             CostSource::Analytic(_) => "analytic",
             CostSource::Gbdt { .. } => "gbdt",
+            CostSource::Memo(m) => m.name(),
         }
     }
 }

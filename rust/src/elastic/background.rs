@@ -1,0 +1,449 @@
+//! Non-blocking replanning: a dedicated planner thread behind an atomic
+//! plan slot.
+//!
+//! PR 1 ran the whole monitor → replan → swap pipeline inline at every
+//! batch boundary, so a cold DPP search stood between a condition shift and
+//! the next batch. This module moves all of it off the serving path:
+//!
+//! * [`PlanSlot`] — the published plan: a seqlock-style epoch counter in
+//!   front of the current [`PlanVersion`]. The router's steady-state
+//!   acquisition is **one atomic load** (epoch compare against its locally
+//!   cached version); only when the planner actually published something new
+//!   does the router take the uncontended read lock to fetch the new `Arc`.
+//! * [`BackgroundReplanner`] — the planner thread: owns the
+//!   [`ReplanCore`](super::controller) (monitor, plan cache, memoized
+//!   parallel DPP) and serves asynchronous observation messages from the
+//!   router. While the cluster is healthy it speculatively pre-computes the
+//!   best n−1 failover plan for every likely-lost (non-leader) node into
+//!   the LRU plan cache, and refreshes that set whenever conditions shift
+//!   cells — so a node loss is served by a pure cache hit.
+//! * [`ElasticFrontend`] — the router-side handle: samples the condition
+//!   trace (cheap and deterministic), compares the liveness mask and
+//!   quantized cell against the cached version, and either proceeds with
+//!   the published plan (bandwidth drift: fire-and-forget `Observe`, keep
+//!   serving on the stale-but-valid plan) or — only when the node *set*
+//!   changed, where executing with stale cost bookkeeping would corrupt the
+//!   virtual clock — rendezvouses with the planner, which answers from the
+//!   speculative cache.
+//!
+//! The split keeps every batch boundary wait-free in the common case,
+//! bounded by a cache lookup on failover, and never blocked on a DPP
+//! search for any condition the speculative pass has covered.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
+use std::sync::{Arc, RwLock};
+use std::time::{Duration, Instant};
+
+use super::cache::CacheKey;
+use super::conditions::{ClusterSnapshot, ConditionTrace};
+use super::controller::{ElasticConfig, ReplanCore};
+use crate::metrics::{summarize, AdaptationMetrics, Summary};
+use crate::model::Model;
+use crate::net::Testbed;
+use crate::partition::Plan;
+
+/// One published planning decision: everything a batch boundary needs,
+/// immutable once published.
+#[derive(Debug, Clone)]
+pub struct PlanVersion {
+    /// Publication sequence number (strictly increasing).
+    pub epoch: u64,
+    pub plan: Arc<Plan>,
+    /// Condition cell the plan was decided for.
+    pub key: CacheKey,
+    /// Liveness mask the plan was decided for.
+    pub alive: Vec<bool>,
+    /// Effective node count of that mask.
+    pub nodes: usize,
+    /// Predicted virtual seconds per item at decision time.
+    pub cost_per_item: f64,
+}
+
+/// The atomic plan slot: single-writer (the planner thread), any-reader.
+/// Readers that cache the current `Arc<PlanVersion>` pay one atomic epoch
+/// load per check; the lock is touched only across an actual publication.
+pub struct PlanSlot {
+    epoch: AtomicU64,
+    cur: RwLock<Arc<PlanVersion>>,
+}
+
+impl PlanSlot {
+    pub fn new(initial: Arc<PlanVersion>) -> PlanSlot {
+        PlanSlot { epoch: AtomicU64::new(initial.epoch), cur: RwLock::new(initial) }
+    }
+
+    /// The epoch of the most recent publication (one atomic load).
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Acquire)
+    }
+
+    /// The current version (takes the read lock).
+    pub fn load(&self) -> Arc<PlanVersion> {
+        self.cur.read().unwrap().clone()
+    }
+
+    /// Publish a new version: store it, then advance the epoch so readers
+    /// observing the new epoch always find (at least) this version.
+    pub fn publish(&self, v: Arc<PlanVersion>) {
+        let e = v.epoch;
+        *self.cur.write().unwrap() = v;
+        self.epoch.store(e, Ordering::Release);
+    }
+
+    /// Reader fast path: refresh `cached` only if the slot moved on.
+    /// Returns whether `cached` was replaced. Steady state is a single
+    /// atomic load and no lock.
+    pub fn refresh(&self, cached: &mut Arc<PlanVersion>) -> bool {
+        if self.epoch() == cached.epoch {
+            return false;
+        }
+        *cached = self.load();
+        true
+    }
+}
+
+/// Messages from the router to the planner thread.
+enum Ask {
+    /// Conditions left the published plan's cell (same node set): decide in
+    /// the background and publish; the router keeps serving meanwhile.
+    Observe(ClusterSnapshot),
+    /// The node set changed: decide (speculative cache hit in the covered
+    /// cases), publish, then ack so the caller can pick up the new version.
+    Failover(ClusterSnapshot, SyncSender<()>),
+}
+
+/// The dedicated planner thread plus its publication slot. Usually driven
+/// through [`ElasticFrontend`]; exposed for tests and custom routers.
+pub struct BackgroundReplanner {
+    slot: Arc<PlanSlot>,
+    tx: Option<Sender<Ask>>,
+    handle: Option<std::thread::JoinHandle<AdaptationMetrics>>,
+}
+
+impl BackgroundReplanner {
+    /// Plan for `snap0` on the caller's thread (a server must not accept
+    /// traffic before any plan exists), publish epoch 1, then hand the core
+    /// to the planner thread, which immediately pre-computes the n−1
+    /// failover set before serving its first message.
+    pub fn start(
+        model: Model,
+        base: Testbed,
+        snap0: &ClusterSnapshot,
+        cfg: ElasticConfig,
+    ) -> BackgroundReplanner {
+        let core = ReplanCore::new(model, base, snap0, cfg, /* inline = */ false);
+        let v0 = Arc::new(PlanVersion {
+            epoch: 1,
+            plan: core.active_plan(),
+            key: core.active_key.clone(),
+            alive: snap0.alive.clone(),
+            nodes: snap0.alive_count(),
+            cost_per_item: core.active_cost,
+        });
+        let slot = Arc::new(PlanSlot::new(v0));
+        let (tx, rx) = channel::<Ask>();
+        let thread_slot = slot.clone();
+        let init_snap = snap0.clone();
+        let handle = std::thread::spawn(move || planner_main(core, init_snap, thread_slot, rx));
+        BackgroundReplanner { slot, tx: Some(tx), handle: Some(handle) }
+    }
+
+    pub fn slot(&self) -> &Arc<PlanSlot> {
+        &self.slot
+    }
+
+    fn observe(&self, snap: ClusterSnapshot) {
+        if let Some(tx) = &self.tx {
+            let _ = tx.send(Ask::Observe(snap));
+        }
+    }
+
+    /// Rendezvous: returns once the planner has published a decision for
+    /// `snap`'s node set.
+    fn failover(&self, snap: ClusterSnapshot) {
+        let (ack_tx, ack_rx) = sync_channel(1);
+        if let Some(tx) = &self.tx {
+            if tx.send(Ask::Failover(snap, ack_tx)).is_ok() {
+                ack_rx.recv().expect("background planner died during failover");
+            }
+        }
+    }
+
+    /// Stop the planner (it drains every queued ask first) and collect its
+    /// adaptation counters.
+    fn finish(&mut self) -> AdaptationMetrics {
+        drop(self.tx.take());
+        match self.handle.take() {
+            Some(h) => h.join().expect("background planner panicked"),
+            None => AdaptationMetrics::default(),
+        }
+    }
+}
+
+impl Drop for BackgroundReplanner {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn planner_main(
+    mut core: ReplanCore,
+    init_snap: ClusterSnapshot,
+    slot: Arc<PlanSlot>,
+    rx: Receiver<Ask>,
+) -> AdaptationMetrics {
+    let mut epoch = 1u64;
+    // Healthy-cluster speculation runs before the first ask is served, so
+    // any failover arriving later in this thread's queue is a cache hit.
+    core.speculate_failovers(&init_snap);
+    while let Ok(first) = rx.recv() {
+        // Drain the queue before re-speculating: a failover rendezvous must
+        // only ever wait behind decide() work (cache-first), never behind a
+        // batch of speculative n−1 searches for a superseded regime.
+        let mut ask = first;
+        let last_snap = loop {
+            let snap = match ask {
+                Ask::Observe(snap) => {
+                    let d = core.decide(&snap);
+                    epoch += 1;
+                    publish(&slot, epoch, &core, &d, &snap);
+                    snap
+                }
+                Ask::Failover(snap, ack) => {
+                    let d = core.decide(&snap);
+                    epoch += 1;
+                    publish(&slot, epoch, &core, &d, &snap);
+                    let _ = ack.send(());
+                    snap
+                }
+            };
+            match rx.try_recv() {
+                Ok(next) => ask = next,
+                Err(_) => break snap,
+            }
+        };
+        // queue is idle: refresh the speculative n−1 set for the regime we
+        // actually ended up in (a no-op for cells the cache already holds)
+        core.speculate_failovers(&last_snap);
+    }
+    core.metrics()
+}
+
+fn publish(
+    slot: &PlanSlot,
+    epoch: u64,
+    core: &ReplanCore,
+    d: &super::controller::BatchDecision,
+    snap: &ClusterSnapshot,
+) {
+    slot.publish(Arc::new(PlanVersion {
+        epoch,
+        plan: d.plan.clone(),
+        key: core.active_key.clone(),
+        alive: snap.alive.clone(),
+        nodes: d.testbed.nodes,
+        cost_per_item: d.cost_per_item,
+    }));
+}
+
+/// What a batch boundary gets back from [`ElasticFrontend::acquire`]: the
+/// published plan plus the *fresh* liveness mask execution must respect.
+#[derive(Debug, Clone)]
+pub struct BoundaryDecision {
+    pub plan: Arc<Plan>,
+    /// Current per-node liveness (always fresh — a batch must never be
+    /// scheduled onto a dead node, even while the optimized plan for the
+    /// new membership is still being fetched).
+    pub alive: Vec<bool>,
+    /// Alive-node count (what [`crate::serve::Response::nodes`] reports).
+    pub nodes: usize,
+    /// Predicted virtual seconds per item, from the published version.
+    pub cost_per_item: f64,
+}
+
+/// The router-side handle: trace sampling + plan acquisition + the
+/// fire-and-forget / rendezvous messaging described in the module docs.
+/// Boundary-stall samples kept for the shutdown summary (a bounded ring —
+/// a server that runs for days must not grow per-boundary state without
+/// bound, same invariant as [`super::controller::MAX_EVENTS`]).
+const MAX_STALL_SAMPLES: usize = 4096;
+
+pub struct ElasticFrontend {
+    trace: ConditionTrace,
+    model_name: String,
+    replanner: BackgroundReplanner,
+    /// Locally cached version — the epoch fast path compares against this.
+    cur: Arc<PlanVersion>,
+    /// Cell we last asked the planner about, to avoid re-sending an ask
+    /// every boundary while the planner is still working on it.
+    last_asked: Option<CacheKey>,
+    checks: u64,
+    /// Ring of the most recent boundary-stall samples.
+    stalls: Vec<Duration>,
+    stall_cursor: usize,
+}
+
+impl ElasticFrontend {
+    /// Plan for the trace's `t = 0` conditions and start the background
+    /// planner.
+    pub fn start(
+        model: Model,
+        base: Testbed,
+        trace: ConditionTrace,
+        cfg: ElasticConfig,
+    ) -> ElasticFrontend {
+        assert_eq!(trace.nodes, base.nodes, "trace/testbed node mismatch");
+        let snap0 = trace.sample(0.0);
+        let model_name = model.name.clone();
+        let replanner = BackgroundReplanner::start(model, base, &snap0, cfg);
+        let cur = replanner.slot().load();
+        ElasticFrontend {
+            trace,
+            model_name,
+            replanner,
+            cur,
+            last_asked: None,
+            checks: 0,
+            stalls: Vec::new(),
+            stall_cursor: 0,
+        }
+    }
+
+    /// Consult the frontend at a batch boundary (virtual time `vt`).
+    ///
+    /// Steady state: sample the trace, one atomic epoch load, done — no
+    /// locks, no planning. On a cell shift with an unchanged node set, the
+    /// ask is fire-and-forget and the published (stale-cell but valid) plan
+    /// keeps serving. Only a node-set change rendezvouses with the planner,
+    /// and the speculative n−1 cache makes that a lookup, not a search.
+    pub fn acquire(&mut self, vt: f64) -> BoundaryDecision {
+        let t0 = Instant::now();
+        self.checks += 1;
+        let snap = self.trace.sample(vt);
+        self.replanner.slot().refresh(&mut self.cur);
+        if snap.alive != self.cur.alive {
+            self.replanner.failover(snap.clone());
+            self.replanner.slot().refresh(&mut self.cur);
+            self.last_asked = None;
+        } else {
+            let key = CacheKey::new(&self.model_name, snap.quantize());
+            if key != self.cur.key && self.last_asked.as_ref() != Some(&key) {
+                self.replanner.observe(snap.clone());
+                self.last_asked = Some(key);
+            }
+        }
+        let nodes = snap.alive_count();
+        let decision = BoundaryDecision {
+            plan: self.cur.plan.clone(),
+            alive: snap.alive,
+            nodes,
+            cost_per_item: self.cur.cost_per_item,
+        };
+        let stall = t0.elapsed();
+        if self.stalls.len() < MAX_STALL_SAMPLES {
+            self.stalls.push(stall);
+        } else {
+            self.stalls[self.stall_cursor] = stall;
+            self.stall_cursor = (self.stall_cursor + 1) % MAX_STALL_SAMPLES;
+        }
+        decision
+    }
+
+    /// Stop the planner (draining queued asks) and return the adaptation
+    /// counters plus the distribution of batch-boundary acquisition stalls.
+    pub fn finish(mut self) -> (AdaptationMetrics, Summary) {
+        let mut metrics = self.replanner.finish();
+        // checks are a router-side notion: one per consulted boundary
+        metrics.checks = self.checks;
+        (metrics, summarize(&self.stalls))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+    use crate::net::{Bandwidth, Topology};
+    use crate::partition::Scheme;
+
+    fn base() -> Testbed {
+        Testbed::new(4, Topology::Ring, Bandwidth::gbps(1.0))
+    }
+
+    fn version(epoch: u64) -> Arc<PlanVersion> {
+        Arc::new(PlanVersion {
+            epoch,
+            plan: Arc::new(Plan::uniform(Scheme::InH, 4)),
+            key: CacheKey::new("m", ConditionTrace::stable(4).sample(0.0).quantize()),
+            alive: vec![true; 4],
+            nodes: 4,
+            cost_per_item: 1.0,
+        })
+    }
+
+    #[test]
+    fn plan_slot_fast_path_only_reloads_on_publish() {
+        let slot = PlanSlot::new(version(1));
+        let mut cached = slot.load();
+        assert!(!slot.refresh(&mut cached), "no publish → no reload");
+        assert_eq!(cached.epoch, 1);
+        slot.publish(version(2));
+        assert_eq!(slot.epoch(), 2);
+        assert!(slot.refresh(&mut cached));
+        assert_eq!(cached.epoch, 2);
+        assert!(!slot.refresh(&mut cached));
+    }
+
+    #[test]
+    fn stable_trace_never_asks_the_planner() {
+        let model = zoo::edgenet(16);
+        let trace = ConditionTrace::stable(4);
+        let mut fe = ElasticFrontend::start(model.clone(), base(), trace, ElasticConfig::default());
+        let p0 = fe.cur.plan.clone();
+        for i in 0..10 {
+            let d = fe.acquire(i as f64 * 0.01);
+            assert_eq!(d.nodes, 4);
+            assert_eq!(*d.plan, *p0, "stable conditions must keep the initial plan");
+        }
+        let (m, stalls) = fe.finish();
+        assert_eq!(m.checks, 10);
+        assert_eq!(m.plan_swaps, 0);
+        assert_eq!(m.failovers, 0);
+        assert_eq!(m.inline_replans, 0);
+        // healthy-cluster speculation ran in the background regardless
+        assert_eq!(m.speculative_plans, 3);
+        assert_eq!(m.replans, 4); // initial + 3 speculative
+        assert_eq!(stalls.count, 10);
+    }
+
+    #[test]
+    fn bandwidth_shift_is_fire_and_forget_and_lands_between_batches() {
+        // collapse the link permanently; the boundary that sees it must not
+        // wait for the replan, and the new plan must eventually be adopted
+        let model = zoo::edgenet(16);
+        let trace = ConditionTrace::stable(4).with_bandwidth_dip(1.0, f64::INFINITY, 0.1);
+        let mut fe = ElasticFrontend::start(model.clone(), base(), trace, ElasticConfig::default());
+        let d0 = fe.acquire(0.5);
+        assert_eq!(d0.nodes, 4);
+        let epoch_before = fe.cur.epoch;
+        let d1 = fe.acquire(1.5); // sees the dip, keeps serving immediately
+        assert_eq!(d1.nodes, 4);
+        // the ask is async: give the planner a bounded moment to publish
+        let deadline = Instant::now() + Duration::from_secs(30);
+        while fe.replanner.slot().epoch() == epoch_before {
+            assert!(Instant::now() < deadline, "planner never published the drift replan");
+            std::thread::yield_now();
+        }
+        let d2 = fe.acquire(2.5);
+        assert!(fe.cur.epoch > epoch_before, "published plan was not picked up");
+        assert_eq!(d2.nodes, 4);
+        let (m, _) = fe.finish();
+        assert_eq!(m.checks, 3);
+        assert!(m.degraded_checks >= 1, "collapse never reached the monitor: {m}");
+        assert_eq!(m.inline_replans, 0, "drift replans must run in the background: {m}");
+    }
+}

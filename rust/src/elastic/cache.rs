@@ -65,6 +65,13 @@ impl PlanCache {
         crate::metrics::hit_ratio(self.hits, self.misses)
     }
 
+    /// Whether a plan is cached for `key`, without touching recency or the
+    /// hit/miss counters — the background planner's speculative pass uses
+    /// this so probing for work never skews the serving-path hit rate.
+    pub fn peek(&self, key: &CacheKey) -> bool {
+        self.map.contains_key(key)
+    }
+
     /// Look up a warm plan, updating recency and hit/miss counters.
     pub fn get(&mut self, key: &CacheKey) -> Option<Arc<Plan>> {
         self.tick += 1;

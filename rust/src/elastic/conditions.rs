@@ -111,7 +111,15 @@ impl ConditionTrace {
         let mut rng = Rng::new(seed ^ 0xe1a5_71c0);
         let phases: Vec<f64> =
             (0..nodes).map(|_| rng.range_f64(0.0, 2.0 * std::f64::consts::PI)).collect();
-        ConditionTrace { profile, seed, nodes, period, outages: Vec::new(), dips: Vec::new(), phases }
+        ConditionTrace {
+            profile,
+            seed,
+            nodes,
+            period,
+            outages: Vec::new(),
+            dips: Vec::new(),
+            phases,
+        }
     }
 
     /// Baseline conditions forever.

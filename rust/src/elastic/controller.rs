@@ -1,11 +1,19 @@
 //! The elastic controller: per-batch condition monitoring, degradation
 //! detection, cached/incremental replanning, and plan swapping.
 //!
-//! The controller sits between the serving router and the planner. At every
-//! batch boundary the router calls [`ElasticController::on_batch`] with the
-//! current virtual time; the controller samples the [`ConditionTrace`],
-//! derives the effective [`Testbed`], and re-prices the active plan on it
-//! (the *monitor*). Three triggers force adaptation:
+//! The decision logic lives in [`ReplanCore`], shared by two drivers:
+//!
+//! * [`ElasticController`] — the synchronous path: the caller (router or
+//!   experiment loop) samples the [`ConditionTrace`] and runs the monitor +
+//!   replanner inline at every batch boundary. Simple and deterministic,
+//!   but a cold replan stalls the boundary that triggers it.
+//! * [`crate::elastic::background::BackgroundReplanner`] — the production
+//!   path: the same core runs on a dedicated planner thread, publishing
+//!   into an atomic plan slot, with speculative n−1 failover planning while
+//!   the cluster is healthy.
+//!
+//! At every consulted boundary the core re-prices the active plan on the
+//! effective [`Testbed`] (the *monitor*). Three triggers force adaptation:
 //!
 //! * **node-set change** — a device died or rejoined. The active plan still
 //!   *executes* on the new cluster (plans are node-count-agnostic), but it
@@ -22,22 +30,25 @@
 //!
 //! Replans consult the [`PlanCache`] first: conditions quantize into cells
 //! ([`ClusterSnapshot::quantize`]), so revisited regimes get their plan back
-//! without running DPP. On a genuine miss the controller plans fresh via
-//! [`crate::planner::plan_for_testbed`] and caches the result. After any
-//! adaptation the cost baseline re-anchors to the new conditions, so a
+//! without running DPP. On a genuine miss the core plans fresh — parallel
+//! DPP over a shared, prewarmed query memo, so a pure-bandwidth-drift replan
+//! performs zero estimator sync queries (see [`crate::cost::memo`]). After
+//! any adaptation the cost baseline re-anchors to the new conditions, so a
 //! regime nothing can plan around (e.g. a uniform bandwidth collapse) is
 //! accepted as the new normal instead of triggering a replan storm.
 
+use std::collections::HashSet;
 use std::sync::Arc;
 
 use super::cache::{CacheKey, PlanCache};
-use super::conditions::ConditionTrace;
-use crate::engine;
+use super::conditions::{ClusterSnapshot, ConditionTrace};
+use crate::cost::{CostSource, MemoStore};
 use crate::metrics::AdaptationMetrics;
 use crate::model::Model;
 use crate::net::Testbed;
 use crate::partition::Plan;
-use crate::planner::plan_for_testbed;
+use crate::planner::exhaustive::plan_cost;
+use crate::planner::{plan_batch, plan_for_testbed_opts, prewarm_memo, PlannerOpts};
 
 /// Controller tuning knobs.
 #[derive(Debug, Clone)]
@@ -47,11 +58,23 @@ pub struct ElasticConfig {
     pub degrade_threshold: f64,
     /// Plan-cache capacity (distinct condition cells held warm).
     pub cache_capacity: usize,
+    /// DPP worker threads per replan (`0` = one per available core, capped
+    /// at the scheme count; `1` = serial). Cost-transparent.
+    pub planner_workers: usize,
+    /// Seed the query memo with the full-cluster query universe at startup
+    /// (one unpruned search), so later bandwidth-drift replans are
+    /// estimator-query-free.
+    pub prewarm_memo: bool,
 }
 
 impl Default for ElasticConfig {
     fn default() -> Self {
-        ElasticConfig { degrade_threshold: 1.25, cache_capacity: 32 }
+        ElasticConfig {
+            degrade_threshold: 1.25,
+            cache_capacity: 32,
+            planner_workers: 0,
+            prewarm_memo: true,
+        }
     }
 }
 
@@ -101,107 +124,143 @@ pub struct BatchDecision {
 /// dropped so a server that adapts for days doesn't grow without bound.
 pub const MAX_EVENTS: usize = 256;
 
-/// The per-server adaptation state machine.
-pub struct ElasticController {
-    model: Model,
-    base: Testbed,
-    trace: ConditionTrace,
+/// Speculative-key attribution set cap (cleared when exceeded; only costs
+/// some `speculative_hits` attribution, never correctness).
+const MAX_SPECULATIVE_KEYS: usize = 1024;
+
+/// The adaptation state machine shared by the synchronous controller and
+/// the background replanner: monitor → cache-first replan → swap.
+pub(crate) struct ReplanCore {
+    pub(crate) model: Model,
+    pub(crate) base: Testbed,
     cfg: ElasticConfig,
-    cache: PlanCache,
+    pub(crate) cache: PlanCache,
+    opts: PlannerOpts,
     active: Arc<Plan>,
     /// Condition cell the active plan was planned for. Leaving the cell in
     /// *any* direction re-consults the cache — degradation is caught by the
     /// threshold below, but improvement (recovery) must also swap back,
     /// otherwise a collapse-optimized plan would serve the clean regime
     /// forever.
-    active_key: CacheKey,
+    pub(crate) active_key: CacheKey,
     /// Liveness mask the active plan was optimized for. Compared by
     /// membership, not count: a simultaneous die+rejoin between two batch
     /// boundaries still changes the set and must force a replan.
     active_alive: Vec<bool>,
     /// Cost baseline the degradation monitor compares against (tracks the
     /// best cost seen for the active plan since adoption).
-    active_cost: f64,
-    metrics: AdaptationMetrics,
+    pub(crate) active_cost: f64,
+    pub(crate) metrics: AdaptationMetrics,
     events: Vec<AdaptEvent>,
+    /// Cells filled by [`Self::speculate_failovers`], for hit attribution.
+    speculative_keys: HashSet<CacheKey>,
+    /// Whether searches triggered by [`Self::decide`] run on the serving
+    /// router's thread (the synchronous controller) — counted as
+    /// `inline_replans`.
+    inline: bool,
 }
 
-impl ElasticController {
-    /// Plan for the conditions at `t = 0` and start monitoring.
-    pub fn new(
+impl ReplanCore {
+    /// Plan for the conditions in `snap0` and start monitoring.
+    pub(crate) fn new(
         model: Model,
         base: Testbed,
-        trace: ConditionTrace,
+        snap0: &ClusterSnapshot,
         cfg: ElasticConfig,
-    ) -> ElasticController {
-        assert_eq!(trace.nodes, base.nodes, "trace/testbed node mismatch");
+        inline: bool,
+    ) -> ReplanCore {
+        assert_eq!(snap0.alive.len(), base.nodes, "snapshot/testbed node mismatch");
+        let memo = MemoStore::shared();
+        if cfg.prewarm_memo {
+            prewarm_memo(&model, &base, &memo);
+        }
+        let opts = PlannerOpts { workers: cfg.planner_workers, memo: Some(memo) };
         let mut cache = PlanCache::new(cfg.cache_capacity);
-        let snap = trace.sample(0.0);
-        let effective = snap.apply(&base);
-        let key = CacheKey::new(&model.name, snap.quantize());
-        let plan = Arc::new(plan_for_testbed(&model, &effective));
+        let effective = snap0.apply(&base);
+        let key = CacheKey::new(&model.name, snap0.quantize());
+        let plan = Arc::new(plan_for_testbed_opts(&model, &effective, &opts).0);
         cache.misses += 1; // the initial plan is an unavoidable cold miss
         cache.put(key.clone(), plan.clone());
         let active_cost = plan.est_cost;
         let metrics = AdaptationMetrics { replans: 1, ..AdaptationMetrics::default() };
-        ElasticController {
+        ReplanCore {
             model,
             base,
-            trace,
             cfg,
             cache,
+            opts,
             active: plan,
             active_key: key,
-            active_alive: snap.alive,
+            active_alive: snap0.alive.clone(),
             active_cost,
             metrics,
             events: Vec::new(),
+            speculative_keys: HashSet::new(),
+            inline,
         }
     }
 
-    pub fn active_plan(&self) -> Arc<Plan> {
+    pub(crate) fn active_plan(&self) -> Arc<Plan> {
         self.active.clone()
     }
 
-    /// The most recent adaptation events (bounded by [`MAX_EVENTS`]; the
-    /// cumulative counts live in [`Self::metrics`]).
-    pub fn events(&self) -> &[AdaptEvent] {
+    pub(crate) fn events(&self) -> &[AdaptEvent] {
         &self.events
     }
 
     /// Adaptation counters, with the cache's view folded in.
-    pub fn metrics(&self) -> AdaptationMetrics {
+    pub(crate) fn metrics(&self) -> AdaptationMetrics {
         let mut m = self.metrics;
         m.cache_hits = self.cache.hits;
         m.cache_misses = self.cache.misses;
         m
     }
 
-    pub fn cache(&self) -> &PlanCache {
-        &self.cache
+    /// The memoized analytic oracle for `effective` — shares the core's
+    /// query store, so monitor re-pricing rides the same warm cache as the
+    /// planner.
+    fn cost_source(&self, effective: &Testbed) -> CostSource {
+        match &self.opts.memo {
+            Some(store) => CostSource::analytic(effective).memoized(store),
+            None => CostSource::analytic(effective),
+        }
+    }
+
+    fn replan(&mut self, effective: &Testbed) -> Arc<Plan> {
+        let plan = Arc::new(plan_for_testbed_opts(&self.model, effective, &self.opts).0);
+        self.metrics.replans += 1;
+        if self.inline {
+            self.metrics.inline_replans += 1;
+        }
+        plan
     }
 
     fn lookup_or_replan(&mut self, key: &CacheKey, effective: &Testbed) -> Arc<Plan> {
         if let Some(plan) = self.cache.get(key) {
+            if self.speculative_keys.contains(key) {
+                self.metrics.speculative_hits += 1;
+            }
             return plan;
         }
-        let plan = Arc::new(plan_for_testbed(&self.model, effective));
-        self.metrics.replans += 1;
+        // A miss means any speculative fill of this cell is gone (LRU
+        // eviction): drop the attribution so future hits on the ordinary
+        // replan below don't count as speculative.
+        self.speculative_keys.remove(key);
+        let plan = self.replan(effective);
         self.cache.put(key.clone(), plan.clone());
         plan
     }
 
-    /// Consult the controller at a batch boundary. Samples conditions at
-    /// virtual time `t`, runs the degradation monitor, and returns the plan
-    /// plus effective testbed for the batch about to form. Swaps happen
-    /// here and only here — i.e. always between batches.
-    pub fn on_batch(&mut self, t: f64) -> BatchDecision {
-        let snap = self.trace.sample(t);
+    /// Run the monitor + replanner for the conditions in `snap` and return
+    /// the plan for the batch about to form. Swaps happen here and only
+    /// here — always between batches, whichever thread drives the core.
+    pub(crate) fn decide(&mut self, snap: &ClusterSnapshot) -> BatchDecision {
         let effective = snap.apply(&self.base);
-        self.metrics.checks += 1;
+        let cost = self.cost_source(&effective);
 
-        // Monitor: re-price the active plan under current conditions.
-        let current_cost = engine::evaluate(&self.model, &self.active, &effective).total;
+        // Monitor: re-price the active plan under current conditions
+        // (through the shared memo, so drift checks are mostly rescales).
+        let current_cost = plan_cost(&self.model, &self.active, &cost).total;
         let node_change = snap.alive != self.active_alive;
         let degraded = current_cost > self.active_cost * self.cfg.degrade_threshold;
         if degraded {
@@ -217,7 +276,7 @@ impl ElasticController {
             return BatchDecision {
                 plan: self.active.clone(),
                 testbed: effective,
-                alive: snap.alive,
+                alive: snap.alive.clone(),
                 cost_per_item: current_cost,
                 swapped: false,
                 reason: None,
@@ -225,7 +284,7 @@ impl ElasticController {
         }
 
         let plan = self.lookup_or_replan(&key, &effective);
-        let new_cost = engine::evaluate(&self.model, &plan, &effective).total;
+        let new_cost = plan_cost(&self.model, &plan, &cost).total;
         // Steps-only comparison: a replan that lands on the same step
         // sequence (with a different est_cost under the new conditions) is
         // not a swap the router can observe.
@@ -249,7 +308,7 @@ impl ElasticController {
                 self.events.remove(0);
             }
             self.events.push(AdaptEvent {
-                t,
+                t: snap.t,
                 reason,
                 nodes: effective.nodes,
                 cost_before: current_cost,
@@ -265,11 +324,97 @@ impl ElasticController {
         BatchDecision {
             plan: self.active.clone(),
             testbed: effective,
-            alive: snap.alive,
+            alive: snap.alive.clone(),
             cost_per_item: new_cost,
             swapped,
             reason: swapped.then_some(reason),
         }
+    }
+
+    /// Pre-compute the best n−1 failover plan for every alive non-leader
+    /// node under the conditions in `snap`, filling only cells the cache
+    /// doesn't hold yet. The background planner calls this while the
+    /// cluster is healthy, so a node-loss failover becomes a pure cache
+    /// hit; the searches run as a [`plan_batch`] over the shared memo.
+    pub(crate) fn speculate_failovers(&mut self, snap: &ClusterSnapshot) {
+        let mut work: Vec<(CacheKey, Testbed)> = Vec::new();
+        for node in 1..snap.alive.len() {
+            if !snap.alive[node] {
+                continue;
+            }
+            let mut hyp = snap.clone();
+            hyp.alive[node] = false;
+            let key = CacheKey::new(&self.model.name, hyp.quantize());
+            if self.cache.peek(&key) || work.iter().any(|(k, _)| *k == key) {
+                continue;
+            }
+            work.push((key, hyp.apply(&self.base)));
+        }
+        if work.is_empty() {
+            return;
+        }
+        let testbeds: Vec<Testbed> = work.iter().map(|(_, tb)| tb.clone()).collect();
+        let plans = plan_batch(&self.model, &testbeds, &self.opts);
+        if self.speculative_keys.len() > MAX_SPECULATIVE_KEYS {
+            self.speculative_keys.clear();
+        }
+        for ((key, _), plan) in work.into_iter().zip(plans) {
+            self.metrics.replans += 1;
+            self.metrics.speculative_plans += 1;
+            self.speculative_keys.insert(key.clone());
+            self.cache.put(key, Arc::new(plan));
+        }
+    }
+}
+
+/// The synchronous per-server adaptation state machine: samples the trace
+/// and runs [`ReplanCore::decide`] inline at every consulted boundary.
+pub struct ElasticController {
+    core: ReplanCore,
+    trace: ConditionTrace,
+}
+
+impl ElasticController {
+    /// Plan for the conditions at `t = 0` and start monitoring.
+    pub fn new(
+        model: Model,
+        base: Testbed,
+        trace: ConditionTrace,
+        cfg: ElasticConfig,
+    ) -> ElasticController {
+        assert_eq!(trace.nodes, base.nodes, "trace/testbed node mismatch");
+        let snap0 = trace.sample(0.0);
+        let core = ReplanCore::new(model, base, &snap0, cfg, /* inline = */ true);
+        ElasticController { core, trace }
+    }
+
+    pub fn active_plan(&self) -> Arc<Plan> {
+        self.core.active_plan()
+    }
+
+    /// The most recent adaptation events (bounded by [`MAX_EVENTS`]; the
+    /// cumulative counts live in [`Self::metrics`]).
+    pub fn events(&self) -> &[AdaptEvent] {
+        self.core.events()
+    }
+
+    /// Adaptation counters, with the cache's view folded in.
+    pub fn metrics(&self) -> AdaptationMetrics {
+        self.core.metrics()
+    }
+
+    pub fn cache(&self) -> &PlanCache {
+        &self.core.cache
+    }
+
+    /// Consult the controller at a batch boundary. Samples conditions at
+    /// virtual time `t`, runs the degradation monitor, and returns the plan
+    /// plus effective testbed for the batch about to form. Swaps happen
+    /// here and only here — i.e. always between batches.
+    pub fn on_batch(&mut self, t: f64) -> BatchDecision {
+        let snap = self.trace.sample(t);
+        self.core.metrics.checks += 1;
+        self.core.decide(&snap)
     }
 }
 
@@ -307,6 +452,7 @@ mod tests {
         assert_eq!(m.plan_swaps, 0);
         assert_eq!(m.failovers, 0);
         assert_eq!(m.replans, 1); // the initial plan only
+        assert_eq!(m.speculative_plans, 0, "the sync controller never speculates");
     }
 
     #[test]
@@ -323,6 +469,7 @@ mod tests {
         let m = ctl.metrics();
         assert_eq!(m.failovers, 1);
         assert!(m.replans >= 2);
+        assert!(m.inline_replans >= 1, "sync-path searches run inline: {m}");
     }
 
     #[test]
@@ -433,5 +580,37 @@ mod tests {
         assert_eq!(evs[0].reason, SwapReason::NodeSetChanged);
         assert_eq!(evs[0].nodes, 3);
         assert!(evs[0].cost_before > 0.0 && evs[0].cost_after > 0.0);
+    }
+
+    #[test]
+    fn speculation_fills_only_missing_cells_and_attributes_hits() {
+        // drive the core directly the way the background planner does
+        let trace = ConditionTrace::stable(4).with_outage(2, 1.0, f64::INFINITY);
+        let snap0 = trace.sample(0.0);
+        let mut core = ReplanCore::new(
+            zoo::edgenet(16),
+            base(4),
+            &snap0,
+            ElasticConfig::default(),
+            false,
+        );
+        core.speculate_failovers(&snap0);
+        let m = core.metrics();
+        assert_eq!(m.speculative_plans, 3, "one n−1 plan per non-leader node: {m}");
+        assert_eq!(m.inline_replans, 0, "background core never replans inline: {m}");
+        // speculating again is a no-op: every cell is already cached
+        core.speculate_failovers(&snap0);
+        assert_eq!(core.metrics().speculative_plans, 3);
+
+        // the node-2 failover is now a pure (attributed) cache hit, and the
+        // served plan equals planning directly for the degraded testbed
+        let snap_down = trace.sample(1.5);
+        let d = core.decide(&snap_down);
+        assert_eq!(d.testbed.nodes, 3);
+        let m = core.metrics();
+        assert_eq!(m.speculative_hits, 1, "failover was not served speculatively: {m}");
+        assert_eq!(m.replans, 4, "failover must not search: {m}");
+        let tb3 = base(4).subset(&[true, true, false, true]);
+        assert_eq!(*d.plan, crate::planner::plan_for_testbed(&core.model, &tb3));
     }
 }

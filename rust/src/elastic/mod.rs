@@ -14,26 +14,35 @@
 //! * [`cache`] — the plan cache: DPP results memoized under quantized
 //!   condition snapshots with LRU eviction, so revisited regimes are served
 //!   warm instead of re-searched.
-//! * [`controller`] — the monitor + replanner: per batch boundary it
-//!   re-prices the active plan under effective conditions, detects
-//!   degradation past a threshold, a node-set change, or a shift out of
-//!   the active plan's condition cell (how recoveries swap back), replans
-//!   (cache first, DPP on a miss — the search runs on the router thread at
-//!   the batch boundary, so admission never blocks on planning but the
-//!   batch being formed waits out a cold miss; async replanning is a
-//!   ROADMAP item), and swaps the new plan in *between* batches — on node
-//!   failure it degrades gracefully to the best n−1-device plan.
+//! * [`controller`] — the monitor + replanner core: it re-prices the active
+//!   plan under effective conditions (through the shared
+//!   [`crate::cost::memo`] query cache), detects degradation past a
+//!   threshold, a node-set change, or a shift out of the active plan's
+//!   condition cell (how recoveries swap back), replans (cache first,
+//!   memoized parallel DPP on a miss), and swaps the new plan in *between*
+//!   batches — on node failure it degrades gracefully to the best
+//!   n−1-device plan. [`ElasticController`] drives the core synchronously
+//!   (simple, deterministic, but a cold replan stalls its boundary).
+//! * [`background`] — the production driver: a dedicated planner thread
+//!   runs the same core and publishes into an atomic [`PlanSlot`], so a
+//!   batch boundary's plan acquisition is a single atomic epoch load;
+//!   while the cluster is healthy the thread speculatively pre-computes
+//!   the best n−1 failover plan per likely-lost node into the LRU cache,
+//!   making node-churn failover a pure cache hit instead of a search.
 //!
-//! [`crate::serve::Server::start_elastic`] wires a controller into the
-//! router loop and reports [`crate::metrics::AdaptationMetrics`] alongside
-//! the router counters.
+//! [`crate::serve::Server::start_elastic`] wires an [`ElasticFrontend`]
+//! into the router loop and reports [`crate::metrics::AdaptationMetrics`]
+//! plus the batch-boundary stall distribution alongside the router
+//! counters.
 
+pub mod background;
 pub mod cache;
 pub mod conditions;
 pub mod controller;
 
+pub use background::{
+    BackgroundReplanner, BoundaryDecision, ElasticFrontend, PlanSlot, PlanVersion,
+};
 pub use cache::{CacheKey, PlanCache};
 pub use conditions::{ClusterSnapshot, ConditionTrace, Outage, Profile, SnapshotKey};
-pub use controller::{
-    AdaptEvent, BatchDecision, ElasticConfig, ElasticController, SwapReason,
-};
+pub use controller::{AdaptEvent, BatchDecision, ElasticConfig, ElasticController, SwapReason};

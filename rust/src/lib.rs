@@ -18,12 +18,12 @@
 //! |--------|------|
 //! | [`model`] | graph IR + model zoo (MobileNet, ResNet-18/101, BERT) + pre-optimization passes |
 //! | [`partition`] | partition geometry: tiles, halos, NT inflation (the paper's §2.1/§2.3) |
-//! | [`cost`] | feature extraction, from-scratch GBDT, i/s-Estimators, analytic ground truth, trace generator |
-//! | [`planner`] | DPP — the paper's Algorithm 1 (reverse DP + pruning) + exhaustive reference for Thm 1 |
+//! | [`cost`] | feature extraction, from-scratch GBDT, i/s-Estimators, analytic ground truth, trace generator, shared query memo |
+//! | [`planner`] | DPP — the paper's Algorithm 1 (reverse DP + pruning, optionally wavefront-parallel) + exhaustive reference for Thm 1 |
 //! | [`baselines`] | OutC (Xenos), InH/InW (MoDNN/DeepSlicing), 2D-grid (DeepThings), layerwise (DINA), fused-layer (AOFL/EdgeCI) |
 //! | [`net`] | network simulator: Ring / PS / Mesh topologies, bandwidth + latency |
 //! | [`cluster`] | simulated edge cluster: leader/worker threads, message passing, virtual clock |
-//! | [`elastic`] | runtime adaptation: condition traces, degradation monitor, plan cache + online replanning |
+//! | [`elastic`] | runtime adaptation: condition traces, degradation monitor, plan cache, background replanner + speculative failover |
 //! | [`engine`] | plan executor: analytic evaluation + real-numerics distributed execution |
 //! | [`compute`] | native Rust tensor kernels (conv/dwconv/pool/matmul) — fallback + oracle |
 //! | [`runtime`] | PJRT client wrapper: loads `artifacts/*.hlo.txt` (AOT-compiled JAX/Pallas) |

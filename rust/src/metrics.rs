@@ -72,6 +72,16 @@ pub struct AdaptationMetrics {
     pub cache_hits: u64,
     /// Plan-cache misses.
     pub cache_misses: u64,
+    /// n−1 failover plans pre-computed speculatively by the background
+    /// planner while the cluster was healthy.
+    pub speculative_plans: u64,
+    /// Plan-cache hits served by a speculatively pre-computed plan (a
+    /// node-loss failover that never waited on a search).
+    pub speculative_hits: u64,
+    /// DPP searches executed inline on the router thread at a batch
+    /// boundary. Always zero on the background-replanner path; non-zero
+    /// only for the synchronous [`crate::elastic::ElasticController`].
+    pub inline_replans: u64,
 }
 
 /// Shared hit-rate formula (0.0 before any lookup) — used by both
@@ -97,7 +107,8 @@ impl std::fmt::Display for AdaptationMetrics {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "checks={} degraded={} replans={} swaps={} failovers={} cache={}/{} ({:.0}% hit)",
+            "checks={} degraded={} replans={} swaps={} failovers={} cache={}/{} ({:.0}% hit) \
+             spec={}p/{}h inline={}",
             self.checks,
             self.degraded_checks,
             self.replans,
@@ -105,7 +116,10 @@ impl std::fmt::Display for AdaptationMetrics {
             self.failovers,
             self.cache_hits,
             self.cache_hits + self.cache_misses,
-            self.cache_hit_rate() * 100.0
+            self.cache_hit_rate() * 100.0,
+            self.speculative_plans,
+            self.speculative_hits,
+            self.inline_replans
         )
     }
 }

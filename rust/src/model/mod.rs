@@ -17,7 +17,6 @@ pub mod import;
 pub mod passes;
 pub mod zoo;
 
-
 /// Convolution (op) type — the `ConvT` categorical feature of the paper's
 /// cost-estimator feature vector (Fig 4).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -247,10 +246,17 @@ impl Model {
             }
         }
         for (i, l) in self.layers.iter().enumerate() {
-            if l.in_h <= 0 || l.in_w <= 0 || l.in_c <= 0 || l.out_h <= 0 || l.out_w <= 0
+            if l.in_h <= 0
+                || l.in_w <= 0
+                || l.in_c <= 0
+                || l.out_h <= 0
+                || l.out_w <= 0
                 || l.out_c <= 0
             {
-                return Err(format!("{}: layer {} ({}) has non-positive dims", self.name, i, l.name));
+                return Err(format!(
+                    "{}: layer {} ({}) has non-positive dims",
+                    self.name, i, l.name
+                ));
             }
             if l.k <= 0 || l.s <= 0 || l.p < 0 {
                 return Err(format!("{}: layer {} ({}) has invalid k/s/p", self.name, i, l.name));

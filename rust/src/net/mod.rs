@@ -17,7 +17,6 @@
 //!
 //! Per-message latency models SRIO doorbell + DMA setup cost.
 
-
 /// Communication architecture (the paper's "Arch" categorical feature).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Topology {
@@ -209,18 +208,43 @@ impl Testbed {
         if msgs.iter().all(|&m| m == 0) {
             return 0.0;
         }
+        self.price_exchange(&self.exchange_profile(msgs))
+    }
+
+    /// The bandwidth-independent schedule of a byte matrix under this
+    /// testbed's topology: which bytes and how many distinct messages each
+    /// serialized resource (directed link or node port) carries. Routing
+    /// depends only on the topology, never on link speed, so a profile
+    /// computed once can be re-priced under any bandwidth
+    /// ([`Self::price_exchange`]) — the split [`crate::cost::memo`] exploits
+    /// to re-price cached boundary geometry analytically on bandwidth drift.
+    pub fn exchange_profile(&self, msgs: &[u64]) -> ExchangeProfile {
+        let n = self.nodes;
+        debug_assert_eq!(msgs.len(), n * n);
         match self.topology {
-            Topology::Mesh => self.mesh_time(msgs),
-            Topology::Ring => self.ring_time(msgs),
-            Topology::Ps => self.ps_time(msgs),
+            Topology::Mesh => self.mesh_profile(msgs),
+            Topology::Ring => self.ring_profile(msgs),
+            Topology::Ps => self.ps_profile(msgs),
         }
+    }
+
+    /// Elapsed seconds of a profiled exchange under this testbed's *current*
+    /// bandwidth and per-message latency: the busiest entry's
+    /// `transfer_time(bytes) + latency · msgs`.
+    pub fn price_exchange(&self, profile: &ExchangeProfile) -> f64 {
+        let mut busiest = 0.0f64;
+        for load in &profile.loads {
+            busiest = busiest
+                .max(self.bandwidth.transfer_time(load.bytes) + self.latency * load.msgs as f64);
+        }
+        busiest
     }
 
     /// Mesh: per-node TX/RX port serialization; latency per distinct message
     /// on the busiest port.
-    fn mesh_time(&self, msgs: &[u64]) -> f64 {
+    fn mesh_profile(&self, msgs: &[u64]) -> ExchangeProfile {
         let n = self.nodes;
-        let mut best: f64 = 0.0;
+        let mut loads = Vec::with_capacity(2 * n);
         for node in 0..n {
             let (mut tx, mut rx) = (0u64, 0u64);
             let (mut tx_msgs, mut rx_msgs) = (0u64, 0u64);
@@ -232,23 +256,21 @@ impl Testbed {
                 tx_msgs += (out > 0) as u64;
                 rx_msgs += (inc > 0) as u64;
             }
-            let t_tx = self.bandwidth.transfer_time(tx) + self.latency * tx_msgs as f64;
-            let t_rx = self.bandwidth.transfer_time(rx) + self.latency * rx_msgs as f64;
-            best = best.max(t_tx).max(t_rx);
+            loads.push(PortLoad { bytes: tx, msgs: tx_msgs });
+            loads.push(PortLoad { bytes: rx, msgs: rx_msgs });
         }
-        best
+        ExchangeProfile { loads }
     }
 
     /// Ring: route each message along the shorter arc; every directed link
     /// serializes the bytes routed through it.
-    fn ring_time(&self, msgs: &[u64]) -> f64 {
+    fn ring_profile(&self, msgs: &[u64]) -> ExchangeProfile {
         let n = self.nodes;
         // link_cw[i]: i -> (i+1)%n ; link_ccw[i]: i -> (i-1+n)%n
         let mut link_cw = vec![0u64; n];
         let mut link_ccw = vec![0u64; n];
         let mut msgs_cw = vec![0u64; n];
         let mut msgs_ccw = vec![0u64; n];
-        let mut max_hops = 0u64;
         for a in 0..n {
             for b in 0..n {
                 let bytes = msgs[a * n + b];
@@ -258,7 +280,6 @@ impl Testbed {
                 let fwd = ((b + n) - a) % n; // hops clockwise
                 let bwd = n - fwd; // hops counter-clockwise
                 if fwd <= bwd {
-                    max_hops = max_hops.max(fwd as u64);
                     let mut cur = a;
                     for _ in 0..fwd {
                         link_cw[cur] += bytes;
@@ -266,7 +287,6 @@ impl Testbed {
                         cur = (cur + 1) % n;
                     }
                 } else {
-                    max_hops = max_hops.max(bwd as u64);
                     let mut cur = a;
                     for _ in 0..bwd {
                         link_ccw[cur] += bytes;
@@ -276,19 +296,21 @@ impl Testbed {
                 }
             }
         }
-        let mut busiest = 0.0f64;
+        let mut loads = Vec::with_capacity(2 * n);
         for i in 0..n {
-            busiest = busiest
-                .max(self.bandwidth.transfer_time(link_cw[i]) + self.latency * msgs_cw[i] as f64)
-                .max(self.bandwidth.transfer_time(link_ccw[i]) + self.latency * msgs_ccw[i] as f64);
+            loads.push(PortLoad { bytes: link_cw[i], msgs: msgs_cw[i] });
+            loads.push(PortLoad { bytes: link_ccw[i], msgs: msgs_ccw[i] });
         }
-        busiest
+        ExchangeProfile { loads }
     }
 
     /// PS: messages not touching the server are relayed (a→0, 0→b); the
     /// server's full-duplex port serializes all inbound and all outbound
-    /// bytes independently; leaf ports can also bottleneck.
-    fn ps_time(&self, msgs: &[u64]) -> f64 {
+    /// bytes independently; leaf ports can also bottleneck. The server entry
+    /// folds the in/out directions into one load (`transfer_time` is
+    /// monotone, so `max(t(in), t(out)) = t(max(in, out))` exactly); leaf
+    /// ports pay no per-message latency, matching the original schedule.
+    fn ps_profile(&self, msgs: &[u64]) -> ExchangeProfile {
         let n = self.nodes;
         let (mut srv_in, mut srv_out) = (0u64, 0u64);
         let (mut srv_in_msgs, mut srv_out_msgs) = (0u64, 0u64);
@@ -312,20 +334,32 @@ impl Testbed {
                 }
             }
         }
-        let t_srv = self
-            .bandwidth
-            .transfer_time(srv_in)
-            .max(self.bandwidth.transfer_time(srv_out))
-            + self.latency * (srv_in_msgs.max(srv_out_msgs)) as f64;
-        let t_leaf = (0..n)
-            .map(|i| {
-                self.bandwidth
-                    .transfer_time(leaf_tx[i])
-                    .max(self.bandwidth.transfer_time(leaf_rx[i]))
-            })
-            .fold(0.0f64, f64::max);
-        t_srv.max(t_leaf)
+        let mut loads = Vec::with_capacity(n + 1);
+        loads.push(PortLoad {
+            bytes: srv_in.max(srv_out),
+            msgs: srv_in_msgs.max(srv_out_msgs),
+        });
+        for i in 0..n {
+            loads.push(PortLoad { bytes: leaf_tx[i].max(leaf_rx[i]), msgs: 0 });
+        }
+        ExchangeProfile { loads }
     }
+}
+
+/// One serialized resource (a directed link or a node's TX/RX port) in a
+/// boundary exchange: the payload bytes and distinct messages it carries.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PortLoad {
+    pub bytes: u64,
+    pub msgs: u64,
+}
+
+/// The bandwidth-independent load profile of one boundary exchange — the
+/// output of [`Testbed::exchange_profile`], priced by
+/// [`Testbed::price_exchange`].
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ExchangeProfile {
+    pub loads: Vec<PortLoad>,
 }
 
 #[cfg(test)]
@@ -379,7 +413,14 @@ mod tests {
         // neighbor halo pattern: i <-> i+1
         let m = msgs(
             4,
-            &[(0, 1, 1_000), (1, 0, 1_000), (1, 2, 1_000), (2, 1, 1_000), (2, 3, 1_000), (3, 2, 1_000)],
+            &[
+                (0, 1, 1_000),
+                (1, 0, 1_000),
+                (1, 2, 1_000),
+                (2, 1, 1_000),
+                (2, 3, 1_000),
+                (3, 2, 1_000),
+            ],
         );
         // each link carries exactly one message per direction
         let expect = bw.transfer_time(1_000) + ring.latency;
@@ -464,6 +505,24 @@ mod tests {
     fn subset_rejects_empty_cluster() {
         let tb = Testbed::new(2, Topology::Ring, Bandwidth::gbps(1.0));
         tb.subset(&[false, false]);
+    }
+
+    #[test]
+    fn exchange_profile_is_bandwidth_independent_and_reprices_exactly() {
+        for topo in Topology::ALL {
+            let tb = Testbed::new(4, topo, Bandwidth::gbps(2.0));
+            let m = msgs(4, &[(0, 1, 1_000_000), (1, 2, 500), (3, 1, 123_456), (2, 0, 77)]);
+            let profile = tb.exchange_profile(&m);
+            // routing never depends on link speed
+            let slow = tb.with_bandwidth_factor(0.25);
+            assert_eq!(profile, slow.exchange_profile(&m));
+            // pricing a cached profile equals re-running the schedule, to the bit
+            assert_eq!(tb.price_exchange(&profile).to_bits(), tb.exchange_time(&m).to_bits());
+            assert_eq!(
+                slow.price_exchange(&profile).to_bits(),
+                slow.exchange_time(&m).to_bits()
+            );
+        }
     }
 
     #[test]

@@ -11,7 +11,6 @@
 pub mod geometry;
 pub mod inflate;
 
-
 /// Partition scheme — the paper's Step-1 choice, `pᵢ ∈ {InH, InW, OutC,
 /// 2D-grid}` (Fig 1).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]

@@ -37,9 +37,32 @@
 //!    any s-Estimator call; both rules are *sound* (they never discard an
 //!    improving candidate), so pruned and unpruned searches return plans of
 //!    equal cost — asserted by the Thm-1 tests.
+//!
+//! ## Parallel search ([`DppConfig::workers`])
+//!
+//! The reverse search is a wavefront DP: once every block ending at layers
+//! `> j` has been priced, `after[j+1..]` is final, so the `k` per-scheme
+//! block extensions of wavefront `j` are mutually independent. With
+//! `workers > 1` they fan out over `std::thread::scope` workers that read a
+//! shared lower-bound table (the merged `after[]`/root incumbents as atomic
+//! f64 bit patterns) for pruning, and emit their candidate updates into
+//! per-scheme buffers that the main thread merges **in the serial search's
+//! exact order** after a wavefront barrier. Two invariants make the
+//! parallel search return *the same plan, bit for bit*:
+//!
+//! * pruning thresholds are read only from wavefront-start state, so every
+//!   pruning decision is a pure function of the (deterministic) DP state —
+//!   no cross-thread timing can change which candidates are evaluated; and
+//! * a candidate that would improve an entry at its merge position can
+//!   never be pruned (its `base` would have to both exceed the incumbent
+//!   and stay below it — the same soundness argument as serial pruning),
+//!   so the merged adoption sequence is identical to the serial one.
 
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Barrier, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::cost::memo::MemoStats;
 use crate::cost::query::{boundary_query, compute_query_tiles, gather_query, scatter_query};
 use crate::cost::CostSource;
 use crate::model::Model;
@@ -61,6 +84,10 @@ pub struct DppConfig {
     pub prune: bool,
     /// Maximum fused-block span (`0` = unlimited).
     pub max_block_span: usize,
+    /// Worker threads for the wavefront-parallel search: `1` = serial
+    /// (default), `0` = one per available core, capped at the scheme count.
+    /// Serial and parallel searches return bit-identical plans.
+    pub workers: usize,
 }
 
 impl Default for DppConfig {
@@ -70,6 +97,7 @@ impl Default for DppConfig {
             enable_fusion: true,
             prune: true,
             max_block_span: 0,
+            workers: 1,
         }
     }
 }
@@ -82,6 +110,28 @@ pub struct SearchStats {
     pub sync_queries: usize,
     pub candidates_pruned: usize,
     pub elapsed: Duration,
+    /// Worker threads the search actually ran on (1 = serial).
+    pub workers: usize,
+    /// Memo-cache counters for this search (all zero when the cost source
+    /// is not memoized).
+    pub memo: MemoStats,
+}
+
+/// A worker's output for one `(j, r)` block extension: candidate updates in
+/// the serial search's emission order, plus its share of the effort stats.
+#[derive(Default)]
+struct TaskOut {
+    compute_queries: usize,
+    sync_queries: usize,
+    pruned: usize,
+    candidates: Vec<Cand>,
+}
+
+enum Cand {
+    /// A full-chain candidate (block reaches layer 0; cost includes scatter).
+    Root { total: f64 },
+    /// A boundary candidate for `after[i][qi]`.
+    Boundary { i: usize, qi: usize, total: f64 },
 }
 
 /// The Dynamic Partition Planner.
@@ -107,6 +157,41 @@ impl<'a> Dpp<'a> {
 
     pub fn plan_with_stats(&self) -> (Plan, SearchStats) {
         let t0 = Instant::now();
+        let memo_before = self.cost.memo_stats();
+        let workers = self.effective_workers();
+        let (plan, mut stats) = if workers <= 1 {
+            self.search_serial()
+        } else {
+            self.search_parallel(workers)
+        };
+        stats.workers = workers.max(1);
+        stats.memo = self.cost.memo_stats().delta_since(memo_before);
+        stats.elapsed = t0.elapsed();
+        debug_assert!(plan.validate().is_ok(), "DPP produced invalid plan: {:?}", plan.validate());
+        (plan, stats)
+    }
+
+    fn effective_workers(&self) -> usize {
+        let w = if self.cfg.workers == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            self.cfg.workers
+        };
+        // one task per scheme exists per wavefront — more workers would idle
+        w.min(self.cfg.schemes.len())
+    }
+
+    fn max_span(&self, n: usize) -> usize {
+        if !self.cfg.enable_fusion {
+            1
+        } else if self.cfg.max_block_span == 0 {
+            n
+        } else {
+            self.cfg.max_block_span
+        }
+    }
+
+    fn search_serial(&self) -> (Plan, SearchStats) {
         let mut stats = SearchStats::default();
         let tb = self.cost.testbed();
         let nodes = tb.nodes;
@@ -118,6 +203,10 @@ impl<'a> Dpp<'a> {
 
         // after[i][qi]: boundary-into-i (producer scheme q) + layers i..n-1.
         let mut after = vec![vec![f64::INFINITY; k]; n + 1];
+        // worst[i] = max over q of after[i][q] — the pruning incumbent,
+        // maintained incrementally on adoption instead of re-folded per
+        // candidate (the inner loop runs O(n²k²) times, adoptions are rare).
+        let mut worst = vec![f64::INFINITY; n + 1];
         // choice[i][qi] = (block end j, block scheme index ri)
         let mut choice = vec![vec![(usize::MAX, usize::MAX); k]; n + 1];
         let mut root = f64::INFINITY;
@@ -130,13 +219,7 @@ impl<'a> Dpp<'a> {
             after[n][qi] = self.cost.sync_time(&gq);
         }
 
-        let max_span = if !self.cfg.enable_fusion {
-            1
-        } else if self.cfg.max_block_span == 0 {
-            n
-        } else {
-            self.cfg.max_block_span
-        };
+        let max_span = self.max_span(n);
 
         // Reverse search over block ends (Key design 1).
         for j in (0..n).rev() {
@@ -167,11 +250,7 @@ impl<'a> Dpp<'a> {
                     // longer beat any incumbent at this entry layer, skip the
                     // (k) s-Estimator evaluations. Sound because sync ≥ 0.
                     if self.cfg.prune {
-                        let worst_incumbent = if i == 0 {
-                            root
-                        } else {
-                            after[i].iter().cloned().fold(f64::NEG_INFINITY, f64::max)
-                        };
+                        let worst_incumbent = if i == 0 { root } else { worst[i] };
                         if base >= worst_incumbent {
                             stats.candidates_pruned += 1;
                             continue;
@@ -204,6 +283,10 @@ impl<'a> Dpp<'a> {
                             if total < after[i][qi] {
                                 after[i][qi] = total;
                                 choice[i][qi] = (j, ri);
+                                worst[i] = after[i]
+                                    .iter()
+                                    .cloned()
+                                    .fold(f64::NEG_INFINITY, f64::max);
                             }
                         }
                     }
@@ -211,9 +294,236 @@ impl<'a> Dpp<'a> {
             }
         }
 
-        assert!(root.is_finite(), "DPP found no feasible plan");
+        (self.reconstruct(&choice, root, root_choice, n), stats)
+    }
 
-        // Reconstruct the step sequence from the backpointers.
+    /// The wavefront-parallel search: per wavefront `j`, the `k` per-scheme
+    /// block extensions run on a persistent worker pool; the main thread
+    /// merges their candidates deterministically and republishes the shared
+    /// incumbent table. See the module docs for the bit-identity argument.
+    fn search_parallel(&self, workers: usize) -> (Plan, SearchStats) {
+        let mut stats = SearchStats::default();
+        let layers = &self.model.layers;
+        let n = layers.len();
+        assert!(n > 0, "empty model");
+        let schemes = &self.cfg.schemes;
+        let k = schemes.len();
+        let tb = self.cost.testbed();
+        let max_span = self.max_span(n);
+
+        let inf = f64::INFINITY.to_bits();
+        // Shared lower-bound table: merged after[]/root values as f64 bit
+        // patterns. Written only between wavefronts (all costs ≥ 0, so the
+        // bit patterns order like the floats).
+        let after_bits: Vec<AtomicU64> = (0..(n + 1) * k).map(|_| AtomicU64::new(inf)).collect();
+        let worst_bits: Vec<AtomicU64> = (0..n + 1).map(|_| AtomicU64::new(inf)).collect();
+        let root_bits = AtomicU64::new(inf);
+        let cur_j = AtomicUsize::new(usize::MAX);
+        let next_task = AtomicUsize::new(0);
+        let barrier = Barrier::new(workers + 1);
+        let slots: Vec<Mutex<TaskOut>> = (0..k).map(|_| Mutex::new(TaskOut::default())).collect();
+        // A panicking worker must still reach the wavefront barrier (or the
+        // whole search deadlocks); the payload is parked here and re-raised
+        // by the main thread after the workers have been released.
+        let worker_panic: Mutex<Option<Box<dyn std::any::Any + Send>>> = Mutex::new(None);
+
+        // Main-thread DP state (merge + reconstruction).
+        let mut after = vec![vec![f64::INFINITY; k]; n + 1];
+        let mut choice = vec![vec![(usize::MAX, usize::MAX); k]; n + 1];
+        let mut root = f64::INFINITY;
+        let mut root_choice = (usize::MAX, usize::MAX);
+
+        // Base case: gather of the last layer.
+        for (qi, &q) in schemes.iter().enumerate() {
+            let gq = gather_query(&layers[n - 1], q, tb);
+            stats.sync_queries += 1;
+            let v = self.cost.sync_time(&gq);
+            after[n][qi] = v;
+            after_bits[n * k + qi].store(v.to_bits(), Ordering::Relaxed);
+        }
+
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| loop {
+                    barrier.wait();
+                    let j = cur_j.load(Ordering::Relaxed);
+                    if j == usize::MAX {
+                        break;
+                    }
+                    loop {
+                        let ri = next_task.fetch_add(1, Ordering::Relaxed);
+                        if ri >= k {
+                            break;
+                        }
+                        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                            || {
+                                self.extend_block(
+                                    j,
+                                    ri,
+                                    &after_bits,
+                                    &worst_bits,
+                                    &root_bits,
+                                    max_span,
+                                )
+                            },
+                        ));
+                        match result {
+                            Ok(out) => *slots[ri].lock().unwrap() = out,
+                            Err(payload) => {
+                                worker_panic.lock().unwrap().get_or_insert(payload);
+                            }
+                        }
+                    }
+                    barrier.wait();
+                });
+            }
+
+            let mut dirty: Vec<usize> = Vec::with_capacity(n);
+            let mut is_dirty = vec![false; n + 1];
+            for j in (0..n).rev() {
+                next_task.store(0, Ordering::Relaxed);
+                cur_j.store(j, Ordering::Relaxed);
+                barrier.wait(); // release the wavefront
+                barrier.wait(); // wait for every (j, r) task
+
+                // Re-raise a worker panic (after letting the pool exit, so
+                // scope's implicit join can't deadlock on the barrier).
+                if let Some(payload) = worker_panic.lock().unwrap().take() {
+                    cur_j.store(usize::MAX, Ordering::Relaxed);
+                    barrier.wait();
+                    std::panic::resume_unwind(payload);
+                }
+
+                // Deterministic merge, in the serial search's order: scheme
+                // index ascending, and within a task in emission order.
+                for ri in 0..k {
+                    let out = std::mem::take(&mut *slots[ri].lock().unwrap());
+                    stats.compute_queries += out.compute_queries;
+                    stats.sync_queries += out.sync_queries;
+                    stats.candidates_pruned += out.pruned;
+                    for cand in out.candidates {
+                        match cand {
+                            Cand::Root { total } => {
+                                if total < root {
+                                    root = total;
+                                    root_choice = (j, ri);
+                                }
+                            }
+                            Cand::Boundary { i, qi, total } => {
+                                if total < after[i][qi] {
+                                    after[i][qi] = total;
+                                    choice[i][qi] = (j, ri);
+                                    if !is_dirty[i] {
+                                        is_dirty[i] = true;
+                                        dirty.push(i);
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+                // Republish the incumbent table for the next wavefront.
+                for &i in &dirty {
+                    for qi in 0..k {
+                        after_bits[i * k + qi].store(after[i][qi].to_bits(), Ordering::Relaxed);
+                    }
+                    let w = after[i].iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                    worst_bits[i].store(w.to_bits(), Ordering::Relaxed);
+                    is_dirty[i] = false;
+                }
+                dirty.clear();
+                root_bits.store(root.to_bits(), Ordering::Relaxed);
+            }
+            cur_j.store(usize::MAX, Ordering::Relaxed);
+            barrier.wait(); // release workers to exit
+        });
+
+        (self.reconstruct(&choice, root, root_choice, n), stats)
+    }
+
+    /// One `(j, r)` block extension against a frozen incumbent table:
+    /// emits, in the serial search's order, every candidate that improves on
+    /// the wavefront-start incumbents.
+    fn extend_block(
+        &self,
+        j: usize,
+        ri: usize,
+        after_bits: &[AtomicU64],
+        worst_bits: &[AtomicU64],
+        root_bits: &AtomicU64,
+        max_span: usize,
+    ) -> TaskOut {
+        let tb = self.cost.testbed();
+        let nodes = tb.nodes;
+        let layers = &self.model.layers;
+        let schemes = &self.cfg.schemes;
+        let k = schemes.len();
+        let r = schemes[ri];
+        let mut out = TaskOut::default();
+        let tail = f64::from_bits(after_bits[(j + 1) * k + ri].load(Ordering::Relaxed));
+        let root_start = f64::from_bits(root_bits.load(Ordering::Relaxed));
+        let mut cur_tiles: Vec<Tile> = out_tiles(&layers[j], r, nodes);
+        let mut block_cost = 0.0f64;
+
+        for i in (0..=j).rev() {
+            if j - i + 1 > max_span {
+                break;
+            }
+            if i < j {
+                cur_tiles = cur_tiles.iter().map(|t| in_regions(&layers[i + 1], t)).collect();
+            }
+            let cq = compute_query_tiles(&layers[i], &cur_tiles, r, tb);
+            out.compute_queries += 1;
+            block_cost += self.cost.compute_time(&cq);
+            let base = block_cost + tail;
+
+            if self.cfg.prune {
+                let worst = if i == 0 {
+                    root_start
+                } else {
+                    f64::from_bits(worst_bits[i].load(Ordering::Relaxed))
+                };
+                if base >= worst {
+                    out.pruned += 1;
+                    continue;
+                }
+            }
+
+            let entry_need: Vec<Tile> =
+                cur_tiles.iter().map(|t| in_regions(&layers[i], t)).collect();
+
+            if i == 0 {
+                let sq = scatter_query(&layers[0], r, &entry_need, tb);
+                out.sync_queries += 1;
+                let total = self.cost.sync_time(&sq) + base;
+                if total < root_start {
+                    out.candidates.push(Cand::Root { total });
+                }
+            } else {
+                for (qi, &q) in schemes.iter().enumerate() {
+                    let bq = boundary_query(&layers[i - 1], q, &layers[i], r, &entry_need, tb);
+                    out.sync_queries += 1;
+                    let total = self.cost.sync_time(&bq) + base;
+                    let start = f64::from_bits(after_bits[i * k + qi].load(Ordering::Relaxed));
+                    if total < start {
+                        out.candidates.push(Cand::Boundary { i, qi, total });
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Reconstruct the step sequence from the backpointers.
+    fn reconstruct(
+        &self,
+        choice: &[Vec<(usize, usize)>],
+        root: f64,
+        root_choice: (usize, usize),
+        n: usize,
+    ) -> Plan {
+        assert!(root.is_finite(), "DPP found no feasible plan");
+        let schemes = &self.cfg.schemes;
         let mut steps = Vec::with_capacity(n);
         let (mut j, mut ri) = root_choice;
         let mut i = 0usize;
@@ -233,17 +543,14 @@ impl<'a> Dpp<'a> {
             ri = nri;
         }
         debug_assert_eq!(steps.len(), n);
-
-        stats.elapsed = t0.elapsed();
-        let plan = Plan { steps, est_cost: root };
-        debug_assert!(plan.validate().is_ok(), "DPP produced invalid plan: {:?}", plan.validate());
-        (plan, stats)
+        Plan { steps, est_cost: root }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cost::MemoStore;
     use crate::model::zoo;
     use crate::net::{Bandwidth, Testbed, Topology};
     use crate::planner::exhaustive::plan_cost;
@@ -319,6 +626,99 @@ mod tests {
     }
 
     #[test]
+    fn parallel_search_matches_serial_bit_for_bit() {
+        // the tentpole invariant: wavefront-parallel search returns the
+        // serial search's plan, bit for bit, for any worker count
+        for (nodes, gbps) in [(4usize, 0.5f64), (3, 5.0)] {
+            let cost = analytic(nodes, gbps);
+            for model in [zoo::edgenet(16), zoo::mobilenet_v1(224, 1000).truncated(10)] {
+                let serial = Dpp::with_config(
+                    &model,
+                    &cost,
+                    DppConfig { workers: 1, ..Default::default() },
+                )
+                .plan();
+                for workers in [2usize, 4, 0] {
+                    let par = Dpp::with_config(
+                        &model,
+                        &cost,
+                        DppConfig { workers, ..Default::default() },
+                    )
+                    .plan();
+                    assert_eq!(
+                        par.est_cost.to_bits(),
+                        serial.est_cost.to_bits(),
+                        "{} w={workers}: {} vs {}",
+                        model.name,
+                        par.est_cost,
+                        serial.est_cost
+                    );
+                    assert_eq!(par.steps, serial.steps, "{} w={workers}", model.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_unpruned_also_matches_serial() {
+        let cost = analytic(4, 1.0);
+        let model = zoo::edgenet(16);
+        let serial = Dpp::with_config(
+            &model,
+            &cost,
+            DppConfig { prune: false, workers: 1, ..Default::default() },
+        )
+        .plan();
+        let par = Dpp::with_config(
+            &model,
+            &cost,
+            DppConfig { prune: false, workers: 4, ..Default::default() },
+        )
+        .plan();
+        assert_eq!(par.est_cost.to_bits(), serial.est_cost.to_bits());
+        assert_eq!(par.steps, serial.steps);
+    }
+
+    #[test]
+    fn memoized_search_is_bit_identical_and_warm_on_repeat() {
+        let tb = Testbed::new(4, Topology::Ring, Bandwidth::gbps(1.0));
+        let plain = CostSource::analytic(&tb);
+        let store = MemoStore::shared();
+        let memo = plain.clone().memoized(&store);
+        let model = zoo::edgenet(16);
+        let (p0, s0) = Dpp::new(&model, &plain).plan_with_stats();
+        assert_eq!(s0.memo, Default::default(), "unmemoized source reports no memo stats");
+        let (p1, s1) = Dpp::new(&model, &memo).plan_with_stats();
+        assert_eq!(p1.est_cost.to_bits(), p0.est_cost.to_bits());
+        assert_eq!(p1.steps, p0.steps);
+        assert!(s1.memo.sync_misses > 0, "first search fills the cache: {}", s1.memo);
+        // an identical search replays the exact query sequence: fully warm
+        let (p2, s2) = Dpp::new(&model, &memo).plan_with_stats();
+        assert_eq!(p2, p1);
+        assert_eq!(s2.memo.sync_misses, 0, "repeat search must be warm: {}", s2.memo);
+        assert_eq!(s2.memo.compute_misses, 0, "repeat search must be warm: {}", s2.memo);
+        assert!(s2.memo.sync_hits > 0 && s2.memo.compute_hits > 0);
+    }
+
+    #[test]
+    fn parallel_memoized_matches_serial_unmemoized() {
+        let tb = Testbed::new(4, Topology::Ps, Bandwidth::gbps(0.5));
+        let plain = CostSource::analytic(&tb);
+        let store = MemoStore::shared();
+        let memo = plain.clone().memoized(&store);
+        let model = zoo::mobilenet_v1(224, 1000).truncated(8);
+        let serial = Dpp::new(&model, &plain).plan();
+        let par = Dpp::with_config(
+            &model,
+            &memo,
+            DppConfig { workers: 4, ..Default::default() },
+        )
+        .plan();
+        assert_eq!(par.est_cost.to_bits(), serial.est_cost.to_bits());
+        assert_eq!(par.steps, serial.steps);
+    }
+
+    #[test]
     fn fusion_beats_no_fusion_at_low_bandwidth() {
         // With a slow interconnect, NT fusion should pay off on the early
         // (sync-heavy) layers, so the fused planner strictly improves on the
@@ -344,11 +744,7 @@ mod tests {
         for s in Scheme::ALL {
             let uniform = Plan::uniform(s, model.n_layers());
             let u = plan_cost(&model, &uniform, &cost).total;
-            assert!(
-                dpp.est_cost <= u + 1e-9,
-                "DPP {} worse than uniform {s} {u}",
-                dpp.est_cost
-            );
+            assert!(dpp.est_cost <= u + 1e-9, "DPP {} worse than uniform {s} {u}", dpp.est_cost);
         }
     }
 
@@ -359,6 +755,14 @@ mod tests {
         let plan = Dpp::new(&model, &cost).plan();
         assert_eq!(plan.steps.len(), 1);
         assert_eq!(plan.steps[0].mode, Mode::T);
+        // the degenerate chain is also parallel-safe
+        let par = Dpp::with_config(
+            &model,
+            &cost,
+            DppConfig { workers: 4, ..Default::default() },
+        )
+        .plan();
+        assert_eq!(par, plan);
     }
 
     #[test]

@@ -29,16 +29,187 @@ pub mod exhaustive;
 
 pub use dpp::{Dpp, DppConfig, SearchStats};
 
-use crate::cost::CostSource;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::cost::{CostSource, MemoStore};
 use crate::model::Model;
 use crate::net::Testbed;
 use crate::partition::Plan;
 
+/// How the replanning entry points run the search: worker threads for the
+/// wavefront-parallel DPP and an optional shared query memo. Every setting
+/// is cost-transparent — plans are bit-identical across worker counts and
+/// memoization, so callers can tune for speed freely.
+#[derive(Debug, Clone, Default)]
+pub struct PlannerOpts {
+    /// DPP worker threads: `0` = one per available core (capped at the
+    /// scheme count), `1` = serial.
+    pub workers: usize,
+    /// Shared estimator-query memo; `None` plans uncached.
+    pub memo: Option<Arc<MemoStore>>,
+}
+
+impl PlannerOpts {
+    pub fn serial() -> PlannerOpts {
+        PlannerOpts { workers: 1, memo: None }
+    }
+
+    fn cost_for(&self, testbed: &Testbed) -> CostSource {
+        let cost = CostSource::analytic(testbed);
+        match &self.memo {
+            Some(store) => cost.memoized(store),
+            None => cost,
+        }
+    }
+}
+
 /// Plan for a concrete cluster snapshot: one-shot DPP over the analytic cost
 /// model of `testbed`. This is the replanning entry point the runtime
 /// adaptation layer ([`crate::elastic`]) calls off the request path whenever
-/// effective conditions drift out of the active plan's regime.
+/// effective conditions drift out of the active plan's regime. Runs the
+/// parallel search with default [`PlannerOpts`]; the result is bit-identical
+/// to the serial, unmemoized search.
 pub fn plan_for_testbed(model: &Model, testbed: &Testbed) -> Plan {
-    let cost = CostSource::analytic(testbed);
-    Dpp::new(model, &cost).plan()
+    plan_for_testbed_opts(model, testbed, &PlannerOpts::default()).0
 }
+
+/// [`plan_for_testbed`] with explicit search options, returning the search
+/// statistics (estimator-call counts, memo hit/miss/rescale counters).
+pub fn plan_for_testbed_opts(
+    model: &Model,
+    testbed: &Testbed,
+    opts: &PlannerOpts,
+) -> (Plan, SearchStats) {
+    let cost = opts.cost_for(testbed);
+    let cfg = DppConfig { workers: opts.workers, ..DppConfig::default() };
+    Dpp::with_config(model, &cost, cfg).plan_with_stats()
+}
+
+/// Plan one model for many condition cells concurrently — the batch shape of
+/// the background replanner's speculative n−1 failover pre-computation. Each
+/// search runs serially on one pool thread (no nested fan-out) against the
+/// shared memo, and results come back in input order.
+pub fn plan_batch(model: &Model, testbeds: &[Testbed], opts: &PlannerOpts) -> Vec<Plan> {
+    if testbeds.is_empty() {
+        return Vec::new();
+    }
+    let requested = if opts.workers == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        opts.workers
+    };
+    let pool = requested.min(testbeds.len());
+    let inner = PlannerOpts { workers: 1, memo: opts.memo.clone() };
+    if pool <= 1 {
+        return testbeds
+            .iter()
+            .map(|tb| plan_for_testbed_opts(model, tb, &inner).0)
+            .collect();
+    }
+    let next = AtomicUsize::new(0);
+    let results: Vec<Mutex<Option<Plan>>> = testbeds.iter().map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..pool {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= testbeds.len() {
+                    break;
+                }
+                let plan = plan_for_testbed_opts(model, &testbeds[i], &inner).0;
+                *results[i].lock().unwrap() = Some(plan);
+            });
+        }
+    });
+    results
+        .into_iter()
+        .map(|slot| slot.into_inner().unwrap().expect("pool worker filled every slot"))
+        .collect()
+}
+
+/// Seed `store` with the *complete* query universe of `(model, testbed)` by
+/// running one unpruned (but parallel) search and discarding the plan.
+/// Pruned searches evaluate a condition-dependent subset of that universe,
+/// so after a prewarm every future replan of the same cluster — at any
+/// bandwidth — answers all sync queries from cached geometry (hits or
+/// analytic rescales, never inner estimator calls).
+pub fn prewarm_memo(model: &Model, testbed: &Testbed, store: &Arc<MemoStore>) -> SearchStats {
+    let cost = CostSource::analytic(testbed).memoized(store);
+    let cfg = DppConfig { prune: false, workers: 0, ..DppConfig::default() };
+    Dpp::with_config(model, &cost, cfg).plan_with_stats().1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+    use crate::net::{Bandwidth, Topology};
+
+    fn tb(gbps: f64) -> Testbed {
+        Testbed::new(4, Topology::Ring, Bandwidth::gbps(gbps))
+    }
+
+    #[test]
+    fn opts_do_not_change_plans() {
+        let model = zoo::edgenet(16);
+        let testbed = tb(1.0);
+        let reference = plan_for_testbed_opts(&model, &testbed, &PlannerOpts::serial()).0;
+        let store = MemoStore::shared();
+        for opts in [
+            PlannerOpts::default(),
+            PlannerOpts { workers: 4, memo: None },
+            PlannerOpts { workers: 4, memo: Some(store.clone()) },
+            PlannerOpts { workers: 1, memo: Some(store) },
+        ] {
+            let (plan, _) = plan_for_testbed_opts(&model, &testbed, &opts);
+            assert_eq!(plan.est_cost.to_bits(), reference.est_cost.to_bits());
+            assert_eq!(plan.steps, reference.steps);
+        }
+    }
+
+    #[test]
+    fn plan_batch_matches_individual_planning() {
+        let model = zoo::edgenet(16);
+        let cells: Vec<Testbed> = [1.0, 0.5, 0.25, 0.125]
+            .iter()
+            .map(|&f| tb(1.0).with_bandwidth_factor(f))
+            .collect();
+        let opts = PlannerOpts { workers: 4, memo: Some(MemoStore::shared()) };
+        let batch = plan_batch(&model, &cells, &opts);
+        assert_eq!(batch.len(), cells.len());
+        for (plan, cell) in batch.iter().zip(&cells) {
+            let solo = plan_for_testbed(&model, cell);
+            assert_eq!(plan.est_cost.to_bits(), solo.est_cost.to_bits());
+            assert_eq!(plan.steps, solo.steps);
+        }
+    }
+
+    #[test]
+    fn prewarmed_store_makes_bandwidth_drift_replans_query_free() {
+        // the acceptance property: after a prewarm, a pure-bandwidth-drift
+        // replan performs ZERO inner sync (and compute) queries
+        let model = zoo::edgenet(16);
+        let base = tb(1.0);
+        let store = MemoStore::shared();
+        prewarm_memo(&model, &base, &store);
+        let opts = PlannerOpts { workers: 0, memo: Some(store.clone()) };
+        for factor in [0.5, 0.4, 0.125, 1.0] {
+            let drifted = base.with_bandwidth_factor(factor);
+            let (plan, stats) = plan_for_testbed_opts(&model, &drifted, &opts);
+            assert_eq!(
+                stats.memo.sync_misses, 0,
+                "bandwidth drift ({factor}×) re-queried the estimator: {}",
+                stats.memo
+            );
+            assert_eq!(stats.memo.compute_misses, 0, "{}", stats.memo);
+            if factor != 1.0 {
+                assert!(stats.memo.sync_rescales > 0, "drift must re-price: {}", stats.memo);
+            }
+            // and the query-free plan is still exactly the fresh plan
+            let fresh = Dpp::new(&model, &CostSource::analytic(&drifted)).plan();
+            assert_eq!(plan.est_cost.to_bits(), fresh.est_cost.to_bits());
+            assert_eq!(plan.steps, fresh.steps);
+        }
+    }
+}
+

@@ -13,22 +13,25 @@
 //! * [`Server::start`] — the static path: one frozen plan for one frozen
 //!   testbed, forever (the paper's assumption).
 //! * [`Server::start_elastic`] — the condition-aware path: an
-//!   [`ElasticController`] is consulted at every batch boundary. It samples
-//!   the condition trace on a virtual clock (advanced by the predicted
-//!   per-item cost of each executed batch), detects degradation or node
-//!   churn, replans via the plan cache / DPP, and swaps plans in *between*
-//!   batches — admission never blocks on planning, and on a node failure
-//!   the very next batch runs the best surviving-cluster plan. Adaptation
-//!   counters ride back on [`RouterStats::adaptation`] at shutdown.
+//!   [`ElasticFrontend`] is consulted at every batch boundary. The frontend
+//!   samples the condition trace on a virtual clock (advanced by the
+//!   predicted per-item cost of each executed batch) and acquires the
+//!   current plan from the background replanner's atomic plan slot — a
+//!   single atomic epoch load in the steady state. All monitoring,
+//!   replanning and speculative n−1 failover planning happen on the
+//!   dedicated planner thread, so a batch boundary never executes a DPP
+//!   search inline; plan swaps still land only *between* batches.
+//!   Adaptation counters plus the boundary-stall distribution ride back on
+//!   [`RouterStats`] at shutdown.
 
 use std::sync::mpsc::{channel, Receiver, Sender, TrySendError};
 use std::sync::{mpsc::sync_channel, Arc};
 use std::time::{Duration, Instant};
 
 use crate::compute::{Tensor, WeightStore};
-use crate::elastic::{ConditionTrace, ElasticConfig, ElasticController};
+use crate::elastic::{ConditionTrace, ElasticConfig, ElasticFrontend};
 use crate::engine;
-use crate::metrics::AdaptationMetrics;
+use crate::metrics::{AdaptationMetrics, Summary};
 use crate::model::Model;
 use crate::net::Testbed;
 use crate::partition::Plan;
@@ -100,6 +103,10 @@ pub struct RouterStats {
     pub max_batch_seen: usize,
     /// Present on the elastic path: replan/cache/failover counters.
     pub adaptation: Option<AdaptationMetrics>,
+    /// Present on the elastic path: how long batch boundaries spent
+    /// acquiring their plan (the stall the background replanner is meant to
+    /// eliminate — steady state is one atomic load).
+    pub boundary_stall: Option<Summary>,
 }
 
 /// Where the router gets the plan for the next batch.
@@ -110,7 +117,7 @@ enum PlanSource {
         virtual_time: f64,
     },
     Elastic {
-        ctl: ElasticController,
+        fe: ElasticFrontend,
         /// Virtual clock: cumulative predicted inference seconds served.
         vt: f64,
     },
@@ -136,7 +143,9 @@ impl Server {
     }
 
     /// Start the condition-aware serving path: plan for the trace's `t = 0`
-    /// conditions, then monitor/replan/swap at every batch boundary.
+    /// conditions, then monitor/replan/swap on the background planner
+    /// thread, consulted (wait-free in the steady state) at every batch
+    /// boundary.
     pub fn start_elastic(
         model: Model,
         weights: WeightStore,
@@ -145,8 +154,8 @@ impl Server {
         cfg: ServeConfig,
         ecfg: ElasticConfig,
     ) -> Server {
-        let ctl = ElasticController::new(model.clone(), base, trace, ecfg);
-        Self::spawn(model, weights, cfg, PlanSource::Elastic { ctl, vt: 0.0 })
+        let fe = ElasticFrontend::start(model.clone(), base, trace, ecfg);
+        Self::spawn(model, weights, cfg, PlanSource::Elastic { fe, vt: 0.0 })
     }
 
     fn spawn(model: Model, weights: WeightStore, cfg: ServeConfig, source: PlanSource) -> Server {
@@ -199,13 +208,8 @@ fn router_main(
         // block for the first request of the batch
         let first = match rx.recv() {
             Ok(r) => r,
-            Err(_) => {
-                // all senders gone — report adaptation counters and exit
-                if let PlanSource::Elastic { ctl, .. } = &source {
-                    stats.adaptation = Some(ctl.metrics());
-                }
-                return stats;
-            }
+            // all senders gone — drain the planner and report below
+            Err(_) => break,
         };
         let mut batch = vec![first];
         let deadline = Instant::now() + cfg.batch_window;
@@ -224,21 +228,17 @@ fn router_main(
         stats.requests += batch.len() as u64;
         stats.max_batch_seen = stats.max_batch_seen.max(batch.len());
 
-        // Batch boundary: consult the plan source. Elastic replans/swaps
-        // happen here, never mid-batch.
+        // Batch boundary: consult the plan source. On the elastic path this
+        // is a wait-free acquisition from the background planner's slot;
+        // swaps land here, never mid-batch.
         let (plan, alive, nodes, virtual_time) = match &mut source {
             PlanSource::Static { plan, nodes, virtual_time } => {
                 (plan.clone(), None, *nodes, *virtual_time)
             }
-            PlanSource::Elastic { ctl, vt } => {
-                let decision = ctl.on_batch(*vt);
+            PlanSource::Elastic { fe, vt } => {
+                let decision = fe.acquire(*vt);
                 *vt += decision.cost_per_item * batch.len() as f64;
-                (
-                    decision.plan,
-                    Some(decision.alive),
-                    decision.testbed.nodes,
-                    decision.cost_per_item,
-                )
+                (decision.plan, Some(decision.alive), decision.nodes, decision.cost_per_item)
             }
         };
 
@@ -270,6 +270,15 @@ fn router_main(
             });
         }
     }
+
+    // shutdown: stop the background planner (draining its queued asks) and
+    // fold its counters into the router stats
+    if let PlanSource::Elastic { fe, .. } = source {
+        let (adaptation, stall) = fe.finish();
+        stats.adaptation = Some(adaptation);
+        stats.boundary_stall = Some(stall);
+    }
+    stats
 }
 
 #[cfg(test)]

@@ -12,7 +12,7 @@
 use std::time::Duration;
 
 use flexpie::compute::{run_reference, Tensor, WeightStore};
-use flexpie::elastic::{ConditionTrace, ElasticConfig, ElasticController};
+use flexpie::elastic::{ConditionTrace, ElasticConfig, ElasticController, ElasticFrontend};
 use flexpie::engine;
 use flexpie::model::zoo;
 use flexpie::net::{Bandwidth, Testbed, Topology};
@@ -119,6 +119,90 @@ fn controller_replans_match_direct_planning() {
     let tb3 = base.subset(&[true, false, true, true]);
     assert_eq!(degraded.testbed, tb3);
     assert_eq!(*degraded.plan, plan_for_testbed(&model, &tb3));
+}
+
+#[test]
+fn batch_boundaries_never_block_on_replanning() {
+    // A mid-stream bandwidth collapse forces a replan; with the background
+    // replanner, that search must run off the router thread — no batch
+    // boundary executes DPP inline, and acquisition stays at pointer-load
+    // latency even across the swap.
+    let model = zoo::edgenet(16);
+    let base = Testbed::new(4, Topology::Ring, Bandwidth::gbps(1.0));
+    let plan0 = plan_for_testbed(&model, &base);
+    let c0 = engine::evaluate(&model, &plan0, &base).total;
+    let trace = ConditionTrace::stable(4).with_bandwidth_dip(2.5 * c0, f64::INFINITY, 0.1);
+    let server = Server::start_elastic(
+        model.clone(),
+        WeightStore::for_model(&model, 5),
+        base,
+        trace,
+        per_request_batches(),
+        ElasticConfig::default(),
+    );
+    let ws = WeightStore::for_model(&model, 5);
+    for i in 0..8u64 {
+        let input = Tensor::random(16, 16, 3, 3000 + i);
+        let reference = run_reference(&model, &ws, &input);
+        let resp = server.infer(input).unwrap();
+        assert_eq!(reference.max_abs_diff(&resp.output), 0.0, "request {i}");
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.requests, 8);
+    let m = stats.adaptation.expect("elastic path reports adaptation");
+    assert_eq!(m.checks, 8);
+    assert_eq!(m.inline_replans, 0, "a batch boundary ran a DPP search inline: {m}");
+    assert!(m.degraded_checks >= 1, "collapse never reached the background monitor: {m}");
+    assert!(m.replans >= 2, "background planner never replanned: {m}");
+    let stall = stats.boundary_stall.expect("elastic path reports boundary stalls");
+    assert_eq!(stall.count, 8, "one stall sample per boundary");
+    // Steady-state acquisition is a trace sample plus one atomic epoch
+    // load; even a noisy CI box keeps the median far below search time.
+    assert!(
+        stall.p50 < Duration::from_millis(20),
+        "batch boundaries are stalling on planning: {stall}"
+    );
+}
+
+#[test]
+fn node_loss_failover_is_served_from_speculative_cache() {
+    // While the cluster is healthy the background planner pre-computes the
+    // best n−1 plan per likely-lost node, so a real node loss is answered
+    // from the cache — the failover rendezvous never waits on a search, and
+    // the served plan equals planning directly for the degraded cluster.
+    let model = zoo::edgenet(16);
+    let base = Testbed::new(4, Topology::Ring, Bandwidth::gbps(1.0));
+    let trace = ConditionTrace::stable(4).with_outage(2, 1.0, f64::INFINITY);
+    let mut fe = ElasticFrontend::start(
+        model.clone(),
+        base.clone(),
+        trace,
+        ElasticConfig::default(),
+    );
+    let healthy = fe.acquire(0.5);
+    assert_eq!(healthy.nodes, 4);
+    let degraded = fe.acquire(1.5);
+    assert_eq!(degraded.nodes, 3);
+    assert_eq!(degraded.alive, vec![true, true, false, true]);
+    let tb3 = base.subset(&[true, true, false, true]);
+    assert_eq!(
+        *degraded.plan,
+        plan_for_testbed(&model, &tb3),
+        "failover plan must equal direct planning for the surviving cluster"
+    );
+    let (m, stalls) = fe.finish();
+    assert_eq!(m.checks, 2);
+    assert_eq!(m.failovers, 1);
+    assert!(
+        m.speculative_plans >= 3,
+        "healthy-cluster speculation did not cover the n−1 cells: {m}"
+    );
+    assert_eq!(
+        m.speculative_hits, 1,
+        "node loss was not served from the speculative cache: {m}"
+    );
+    assert_eq!(m.inline_replans, 0, "{m}");
+    assert_eq!(stalls.count, 2);
 }
 
 #[test]

@@ -126,6 +126,54 @@ fn thm1_pruning_is_lossless() {
 }
 
 #[test]
+fn parallel_memoized_dpp_is_bit_identical_across_zoo_and_conditions() {
+    // The planner's speed knobs (wavefront-parallel search, shared query
+    // memo with analytic bandwidth re-pricing) must be cost-transparent:
+    // across the model zoo × {ring, star} testbeds × a bandwidth sweep, the
+    // parallel+memoized search returns the serial unmemoized search's plan
+    // cost, bit for bit. One store is shared across every combination, so
+    // cross-testbed namespacing and the rescale path are both exercised.
+    let store = flexpie::cost::MemoStore::shared();
+    let models = [
+        zoo::edgenet(16),
+        zoo::mobilenet_v1(224, 1000).truncated(10),
+        zoo::resnet18(224, 1000).truncated(8),
+        zoo::tiny_chain(6, 16, 8),
+    ];
+    for model in &models {
+        for topo in [Topology::Ring, Topology::Ps] {
+            for gbps in [5.0, 1.0, 0.25] {
+                let tb = Testbed::new(4, topo, Bandwidth::gbps(gbps));
+                let serial = Dpp::with_config(
+                    model,
+                    &CostSource::analytic(&tb),
+                    DppConfig { workers: 1, ..Default::default() },
+                )
+                .plan();
+                let memo = CostSource::analytic(&tb).memoized(&store);
+                let par = Dpp::with_config(
+                    model,
+                    &memo,
+                    DppConfig { workers: 4, ..Default::default() },
+                )
+                .plan();
+                assert_eq!(
+                    par.est_cost.to_bits(),
+                    serial.est_cost.to_bits(),
+                    "{} {topo} {gbps} Gb/s: parallel+memo {} vs serial {}",
+                    model.name,
+                    par.est_cost,
+                    serial.est_cost
+                );
+                assert_eq!(par.steps, serial.steps, "{} {topo} {gbps} Gb/s", model.name);
+            }
+        }
+    }
+    let stats = store.stats();
+    assert!(stats.sync_rescales > 0, "bandwidth sweep never hit the rescale path: {stats}");
+}
+
+#[test]
 fn dpp_beats_or_ties_restricted_planners_everywhere() {
     // Sanity corollary: restricting the search space can never help.
     let model = zoo::edgenet(16);
