@@ -97,6 +97,7 @@ fn main() {
             max_batch: 8,
             batch_window: Duration::from_millis(1),
             queue_depth: 256,
+            ..ServeConfig::default()
         },
     );
 

@@ -108,6 +108,7 @@ fn main() {
             max_batch: 1,
             batch_window: Duration::ZERO,
             queue_depth: 32,
+            ..ServeConfig::default()
         },
         exp.controller_config(),
     );

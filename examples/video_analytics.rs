@@ -65,6 +65,7 @@ fn main() {
             max_batch: 4,
             batch_window: Duration::from_millis(1),
             queue_depth: 64,
+            ..ServeConfig::default()
         },
     );
 

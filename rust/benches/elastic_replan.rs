@@ -120,7 +120,12 @@ fn main() {
         WeightStore::for_model(&serve_model, 7),
         sbase,
         strace,
-        ServeConfig { max_batch: 1, batch_window: Duration::ZERO, queue_depth: 32 },
+        ServeConfig {
+            max_batch: 1,
+            batch_window: Duration::ZERO,
+            queue_depth: 32,
+            ..ServeConfig::default()
+        },
         ElasticConfig::default(),
     );
     let l0 = &serve_model.layers[0];

@@ -1,0 +1,123 @@
+//! Pipelined vs lockstep serving throughput — the acceptance bench for the
+//! block-pipelined executor.
+//!
+//! Workload: a balanced 6-conv chain served all-T on a 2-node cluster, so
+//! the plan has 6 equal pipeline stages. The lockstep executor runs one
+//! inference at a time (and underuses the host's cores at `nodes = 2`);
+//! the pipeline keeps every block busy on a different in-flight inference,
+//! so measured requests/sec should exceed lockstep by well over the 1.5×
+//! acceptance bar on any multi-core host.
+//!
+//! The single-line `RESULT` JSON carries: measured lockstep vs pipelined
+//! requests/sec and their ratio, per-stage occupancy and the measured
+//! bottleneck stage, the virtual-clock stage decomposition of the served
+//! plan, and both planner objectives' metrics on this testbed
+//! (latency-objective total + its bottleneck, throughput-objective
+//! bottleneck).
+//!
+//! ```bash
+//! cargo bench --bench pipeline_throughput
+//! FLEXPIE_BENCH_FAST=1 cargo bench --bench pipeline_throughput   # CI smoke
+//! ```
+
+use std::time::Instant;
+
+use flexpie::cluster::pipeline::run_pipelined;
+use flexpie::cluster::run_distributed;
+use flexpie::compute::{Tensor, WeightStore};
+use flexpie::config::PipelineExperiment;
+use flexpie::cost::{CostSource, Objective};
+use flexpie::model::zoo;
+use flexpie::partition::{Plan, Scheme};
+use flexpie::planner::exhaustive::{bottleneck_cost, stage_costs};
+use flexpie::planner::{Dpp, DppConfig};
+use flexpie::util::bench::black_box;
+use flexpie::util::json::Json;
+
+fn main() {
+    let fast = std::env::var("FLEXPIE_BENCH_FAST").is_ok();
+    let exp = PipelineExperiment {
+        model: "tiny_chain6".into(),
+        nodes: 2,
+        pipeline_depth: 8,
+        requests: if fast { 16 } else { 48 },
+        ..Default::default()
+    };
+    let model = zoo::tiny_chain(6, 32, 24);
+    let tb = exp.testbed();
+    // the balanced ≥3-block plan the acceptance criterion names: uniform
+    // scheme, every layer T → one stage per layer
+    let plan = Plan::uniform(Scheme::InH, model.n_layers());
+    let ws = WeightStore::for_model(&model, 17);
+    let l0 = &model.layers[0];
+    let inputs: Vec<Tensor> = (0..exp.requests)
+        .map(|i| Tensor::random(l0.in_h, l0.in_w, l0.in_c, i as u64))
+        .collect();
+
+    // warm both paths once (page in weights, fault in code)
+    black_box(run_distributed(&model, &plan, &ws, &inputs[0], exp.nodes));
+    black_box(run_pipelined(&model, &plan, &ws, &inputs[..1], exp.nodes, 1));
+
+    let t0 = Instant::now();
+    for input in &inputs {
+        black_box(run_distributed(&model, &plan, &ws, input, exp.nodes).output);
+    }
+    let lockstep_secs = t0.elapsed().as_secs_f64();
+
+    let t0 = Instant::now();
+    let (outs, pstats) =
+        run_pipelined(&model, &plan, &ws, &inputs, exp.nodes, exp.pipeline_depth);
+    let pipelined_secs = t0.elapsed().as_secs_f64();
+    assert_eq!(outs.len(), inputs.len(), "pipeline lost inferences");
+
+    let lockstep_rps = exp.requests as f64 / lockstep_secs.max(1e-12);
+    let pipelined_rps = exp.requests as f64 / pipelined_secs.max(1e-12);
+    let speedup = pipelined_rps / lockstep_rps.max(1e-12);
+    let occupancy = pstats.occupancy();
+    println!(
+        "lockstep {lockstep_rps:.1} req/s | pipelined {pipelined_rps:.1} req/s \
+         ({speedup:.2}x) over {} stages, bottleneck s{}",
+        pstats.stages.len(),
+        pstats.bottleneck_stage()
+    );
+
+    // virtual-clock decomposition + both planner objectives on this testbed
+    let cost = CostSource::analytic(&tb);
+    let stage_ms: Vec<f64> = stage_costs(&model, &plan, &cost)
+        .into_iter()
+        .map(|s| s * 1e3)
+        .collect();
+    let lat_plan = Dpp::new(&model, &cost).plan();
+    let thr_plan = Dpp::with_config(
+        &model,
+        &cost,
+        DppConfig { objective: Objective::Throughput, ..Default::default() },
+    )
+    .plan();
+    let lat_bottleneck = bottleneck_cost(&model, &lat_plan, &cost);
+    println!(
+        "objectives: latency plan {:.3} ms total (bottleneck {:.3} ms) | \
+         throughput plan bottleneck {:.3} ms",
+        lat_plan.est_cost * 1e3,
+        lat_bottleneck * 1e3,
+        thr_plan.est_cost * 1e3
+    );
+
+    let summary = Json::obj(vec![
+        ("bench", Json::Str("pipeline_throughput".into())),
+        ("experiment", exp.to_json()),
+        ("model", Json::Str(model.name.clone())),
+        ("blocks", Json::Num(plan.blocks().len() as f64)),
+        ("requests", Json::Num(exp.requests as f64)),
+        ("lockstep_rps", Json::Num(lockstep_rps)),
+        ("pipelined_rps", Json::Num(pipelined_rps)),
+        ("pipelined_speedup", Json::Num(speedup)),
+        ("stage_occupancy", Json::num_arr(&occupancy)),
+        ("bottleneck_stage", Json::Num(pstats.bottleneck_stage() as f64)),
+        ("stage_times_ms", Json::num_arr(&stage_ms)),
+        ("latency_objective_total_ms", Json::Num(lat_plan.est_cost * 1e3)),
+        ("latency_objective_bottleneck_ms", Json::Num(lat_bottleneck * 1e3)),
+        ("throughput_objective_bottleneck_ms", Json::Num(thr_plan.est_cost * 1e3)),
+    ]);
+    println!("RESULT {}", summary.to_string());
+}

@@ -13,6 +13,12 @@
 //! the host is one shared CPU, not four DSPs. Reported times come from the
 //! virtual clock (the analytic cost model) via [`crate::engine::evaluate`];
 //! this module is what makes the *numerics* of a plan real and checkable.
+//!
+//! [`run_distributed`] executes one inference in lockstep. For throughput
+//! serving, [`pipeline`] reorganizes the same computation into per-block
+//! stage threads so consecutive inferences overlap across plan blocks.
+
+pub mod pipeline;
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;

@@ -1,0 +1,627 @@
+//! Block-pipelined streaming executor — throughput serving for the
+//! simulated cluster.
+//!
+//! [`super::run_distributed`] executes one inference at a time: every node
+//! thread walks all plan blocks, and any device not hosting the active
+//! block's current layer sits idle until the batch completes. That is the
+//! right shape for the paper's metric (end-to-end latency of *one*
+//! inference) but wastes the cluster under load: DEFER-style pipelining
+//! (Parthasarathy & Krishnamachari, 2022) keeps every block busy by letting
+//! consecutive inferences occupy different blocks concurrently, so
+//! steady-state throughput is set by the *bottleneck* stage, not the sum of
+//! stages.
+//!
+//! [`BlockPipeline`] reorganizes the exact same computation into one
+//! persistent thread per fused block, connected by bounded channels:
+//!
+//! * **Stage 0** receives raw inputs, performs the scatter (leader slices
+//!   the input into each node's entry requirement) and computes block 0.
+//! * **Stage `b`** receives the per-node patch stores at block `b`'s entry
+//!   boundary, computes the block's layers tile by tile, then performs the
+//!   realignment exchange into block `b+1`'s entry requirement — byte for
+//!   byte the messages the node threads' exchange protocol would send.
+//! * **The final stage** gathers the last layer's tiles to the leader and
+//!   emits a [`Completion`].
+//!
+//! Bounded channels give backpressure: up to `depth` submissions queue at
+//! the entry and each stage holds one resident item, so `#blocks + depth`
+//! inferences are in flight at most, each occupying a different block.
+//! Completions leave in submission order (channels are FIFO and every stage
+//! is serial), which [`BlockPipeline::wait_complete`] asserts.
+//!
+//! ## Why the numerics are bit-identical to lockstep
+//!
+//! A stage computes each node's tiles with the same [`compute_region`]
+//! calls, from patch stores holding the same patch *set*, as the node
+//! threads do. Every output element has exactly one accumulation order
+//! (fixed by its region and the kernel loop structure), so redundantly
+//! computed overlaps carry equal values and patch order cannot change an
+//! extract. The streaming entry point ([`crate::engine::execute_stream`])
+//! asserts equality against the lockstep executor across the model zoo.
+//!
+//! Per-stage wall-clock busy time rides back on [`PipelineStats`]; the
+//! *virtual-clock* stage times (what the planner's
+//! [`crate::cost::Objective::Throughput`] minimizes) come from
+//! [`crate::planner::exhaustive::stage_costs`], which attributes each
+//! boundary transfer to the consuming stage (asynchronous sends) — the
+//! host-side busy counters here attribute patch *assembly* to the
+//! producing thread, so measured and predicted bottleneck stages can
+//! differ by one; see `stage_costs` for the trade-off.
+//!
+//! The scatter/exchange/gather helpers below deliberately mirror the
+//! lockstep node threads' protocol in `super` (same intersection rule, one
+//! message per non-empty rect, same byte pricing); the executor tests
+//! assert the outputs and the bytes/messages accounting of the two paths
+//! stay exactly equal, so a protocol change that misses one side fails
+//! fast.
+
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TryRecvError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::compute::{compute_region, PatchStore, RegionTensor, Tensor, WeightStore};
+use crate::model::Model;
+use crate::partition::geometry::out_tiles;
+use crate::partition::inflate::BlockGeometry;
+use crate::partition::{Plan, Region, Scheme};
+use crate::DTYPE_BYTES;
+
+/// One finished inference leaving the pipeline.
+#[derive(Debug)]
+pub struct Completion {
+    /// Submission sequence number (0-based; completions arrive in order).
+    pub seq: u64,
+    pub output: Tensor,
+    /// Payload bytes this inference moved across all boundaries (scatter,
+    /// realignments, gather) — identical to the lockstep executor's
+    /// accounting for the same plan.
+    pub bytes_exchanged: u64,
+    /// Inter-node messages this inference required.
+    pub messages: usize,
+}
+
+/// Per-stage counters, returned when the pipeline drains.
+#[derive(Debug, Clone)]
+pub struct StageStats {
+    /// Plan block index this stage executed.
+    pub block: usize,
+    /// Inclusive layer range of the block.
+    pub layers: (usize, usize),
+    /// Items processed.
+    pub items: u64,
+    /// Wall-clock time spent actively processing (scatter + compute +
+    /// boundary assembly), excluding waits on either channel.
+    pub busy: Duration,
+    /// Payload bytes this stage sent downstream (stage 0 also counts the
+    /// scatter; the final stage counts the gather).
+    pub bytes_sent: u64,
+    pub msgs_sent: usize,
+}
+
+/// Whole-pipeline statistics from [`BlockPipeline::finish`].
+#[derive(Debug, Clone)]
+pub struct PipelineStats {
+    pub stages: Vec<StageStats>,
+    /// Completed inferences.
+    pub items: u64,
+    /// Wall time from pipeline start to drain.
+    pub elapsed: Duration,
+    pub depth: usize,
+    pub nodes: usize,
+}
+
+impl PipelineStats {
+    /// Busy fraction per stage over the pipeline's lifetime (0..=1).
+    pub fn occupancy(&self) -> Vec<f64> {
+        let total = self.elapsed.as_secs_f64().max(1e-12);
+        self.stages.iter().map(|s| s.busy.as_secs_f64() / total).collect()
+    }
+
+    /// Index of the busiest stage — the pipeline's measured bottleneck.
+    pub fn bottleneck_stage(&self) -> usize {
+        self.stages
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.busy.cmp(&b.1.busy))
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+}
+
+/// What flows between stages.
+enum Payload {
+    /// The raw model input — enters stage 0, which performs the scatter.
+    Input(Tensor),
+    /// Per-node patch stores at a block's entry boundary.
+    Stores(Vec<PatchStore>),
+}
+
+struct Item {
+    seq: u64,
+    payload: Payload,
+    /// Bytes/messages accumulated by the boundaries this item has crossed.
+    bytes: u64,
+    msgs: usize,
+}
+
+/// Immutable per-pipeline state shared by every stage thread.
+struct StageCtx {
+    model: Model,
+    weights: WeightStore,
+    blocks: Vec<(usize, usize, Scheme)>,
+    geos: Vec<BlockGeometry>,
+    nodes: usize,
+}
+
+enum StageOut {
+    Stage(SyncSender<Item>),
+    Done(Sender<Completion>),
+}
+
+/// The streaming executor: one thread per plan block, bounded channels in
+/// between, completions in submission order.
+pub struct BlockPipeline {
+    input: Option<SyncSender<Item>>,
+    done_rx: Receiver<Completion>,
+    handles: Vec<std::thread::JoinHandle<StageStats>>,
+    started: Instant,
+    submitted: u64,
+    completed: u64,
+    nodes: usize,
+    depth: usize,
+}
+
+impl BlockPipeline {
+    /// Start the stage threads for `plan` on an `nodes`-device cluster.
+    /// `depth` bounds how many submissions may queue at the entry before
+    /// [`Self::submit`] blocks (each stage additionally holds one resident
+    /// item).
+    pub fn start(
+        model: &Model,
+        plan: &Plan,
+        weights: &WeightStore,
+        nodes: usize,
+        depth: usize,
+    ) -> BlockPipeline {
+        plan.validate().expect("invalid plan");
+        assert_eq!(plan.steps.len(), model.n_layers());
+        assert!(depth >= 1, "pipeline depth must be >= 1");
+        let blocks = plan.blocks();
+        let layers = &model.layers;
+        let geos: Vec<BlockGeometry> = blocks
+            .iter()
+            .map(|&(s, e, scheme)| BlockGeometry::new(&layers[s..=e], scheme, nodes))
+            .collect();
+        let ctx = Arc::new(StageCtx {
+            model: model.clone(),
+            weights: weights.clone(),
+            blocks,
+            geos,
+            nodes,
+        });
+        let n_stages = ctx.blocks.len();
+        let (done_tx, done_rx) = channel::<Completion>();
+
+        // Build stages back to front so each thread owns its successor's
+        // sender; the last `downstream` left over is the pipeline entry.
+        let mut handles = Vec::with_capacity(n_stages);
+        let mut downstream = StageOut::Done(done_tx);
+        for bi in (0..n_stages).rev() {
+            let cap = if bi == 0 { depth } else { 1 };
+            let (tx, rx) = sync_channel::<Item>(cap);
+            let ctx2 = Arc::clone(&ctx);
+            let out = std::mem::replace(&mut downstream, StageOut::Stage(tx));
+            handles.push(std::thread::spawn(move || stage_main(&ctx2, bi, rx, out)));
+        }
+        handles.reverse();
+        let input = match downstream {
+            StageOut::Stage(tx) => tx,
+            StageOut::Done(_) => unreachable!("plans have at least one block"),
+        };
+        BlockPipeline {
+            input: Some(input),
+            done_rx,
+            handles,
+            started: Instant::now(),
+            submitted: 0,
+            completed: 0,
+            nodes,
+            depth,
+        }
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.nodes
+    }
+
+    pub fn submitted(&self) -> u64 {
+        self.submitted
+    }
+
+    /// Submissions not yet collected as completions.
+    pub fn in_flight(&self) -> u64 {
+        self.submitted - self.completed
+    }
+
+    /// Submit one inference; blocks when `depth` submissions are already
+    /// queued at the entry (backpressure).
+    pub fn submit(&mut self, input: Tensor) {
+        let seq = self.submitted;
+        self.submitted += 1;
+        self.input
+            .as_ref()
+            .expect("pipeline already drained")
+            .send(Item { seq, payload: Payload::Input(input), bytes: 0, msgs: 0 })
+            .expect("pipeline stage died");
+    }
+
+    /// The next completion if one is ready (non-blocking). Completions
+    /// arrive strictly in submission order.
+    pub fn try_complete(&mut self) -> Option<Completion> {
+        match self.done_rx.try_recv() {
+            Ok(c) => {
+                self.check_order(&c);
+                Some(c)
+            }
+            Err(TryRecvError::Empty) => None,
+            Err(TryRecvError::Disconnected) => {
+                assert_eq!(
+                    self.completed, self.submitted,
+                    "pipeline stage died with work in flight"
+                );
+                None
+            }
+        }
+    }
+
+    /// Block for the next completion; `None` once every submission has
+    /// completed.
+    pub fn wait_complete(&mut self) -> Option<Completion> {
+        if self.completed == self.submitted {
+            return None;
+        }
+        let c = self
+            .done_rx
+            .recv()
+            .expect("pipeline stage died with work in flight");
+        self.check_order(&c);
+        Some(c)
+    }
+
+    fn check_order(&mut self, c: &Completion) {
+        assert_eq!(c.seq, self.completed, "pipeline completed out of order");
+        self.completed += 1;
+    }
+
+    /// Drain the pipeline: close the entry, collect any outstanding
+    /// completions, join the stage threads and return their statistics.
+    pub fn finish(mut self) -> (Vec<Completion>, PipelineStats) {
+        drop(self.input.take());
+        let mut rest = Vec::new();
+        while let Some(c) = self.wait_complete() {
+            rest.push(c);
+        }
+        let mut stages = Vec::with_capacity(self.handles.len());
+        for h in self.handles.drain(..) {
+            stages.push(h.join().expect("pipeline stage panicked"));
+        }
+        let stats = PipelineStats {
+            stages,
+            items: self.completed,
+            elapsed: self.started.elapsed(),
+            depth: self.depth,
+            nodes: self.nodes,
+        };
+        (rest, stats)
+    }
+}
+
+/// Run `inputs` through a freshly started pipeline and collect all outputs
+/// in submission order — the streaming counterpart of calling
+/// [`super::run_distributed`] once per input.
+pub fn run_pipelined(
+    model: &Model,
+    plan: &Plan,
+    weights: &WeightStore,
+    inputs: &[Tensor],
+    nodes: usize,
+    depth: usize,
+) -> (Vec<Completion>, PipelineStats) {
+    let mut pipe = BlockPipeline::start(model, plan, weights, nodes, depth);
+    let mut out = Vec::with_capacity(inputs.len());
+    for input in inputs {
+        pipe.submit(input.clone());
+        // reap opportunistically so the done queue never grows unboundedly
+        while let Some(c) = pipe.try_complete() {
+            out.push(c);
+        }
+    }
+    let (rest, stats) = pipe.finish();
+    out.extend(rest);
+    (out, stats)
+}
+
+fn stage_main(ctx: &StageCtx, bi: usize, rx: Receiver<Item>, out: StageOut) -> StageStats {
+    let (s, e, _) = ctx.blocks[bi];
+    let mut stats = StageStats {
+        block: bi,
+        layers: (s, e),
+        items: 0,
+        busy: Duration::ZERO,
+        bytes_sent: 0,
+        msgs_sent: 0,
+    };
+    while let Ok(mut item) = rx.recv() {
+        let t0 = Instant::now();
+        let mut stores = match item.payload {
+            Payload::Input(input) => {
+                let (stores, b, m) = scatter(ctx, &input);
+                item.bytes += b;
+                item.msgs += m;
+                stats.bytes_sent += b;
+                stats.msgs_sent += m;
+                stores
+            }
+            Payload::Stores(stores) => stores,
+        };
+
+        // Block compute: each node's (possibly NT-inflated) tiles, layer by
+        // layer — the same calls the lockstep node threads make, in node
+        // order.
+        let geo = &ctx.geos[bi];
+        for (node, store) in stores.iter_mut().enumerate() {
+            for l in s..=e {
+                let layer = &ctx.model.layers[l];
+                let mut next = PatchStore::new();
+                for r in &geo.tiles[l - s][node] {
+                    next.add(compute_region(layer, &ctx.weights.layers[l], store, r));
+                }
+                *store = next;
+            }
+        }
+
+        match &out {
+            StageOut::Stage(tx) => {
+                let (next_stores, b, m) = exchange(ctx, bi, stores);
+                item.bytes += b;
+                item.msgs += m;
+                stats.bytes_sent += b;
+                stats.msgs_sent += m;
+                stats.items += 1;
+                stats.busy += t0.elapsed();
+                let fwd = Item {
+                    seq: item.seq,
+                    payload: Payload::Stores(next_stores),
+                    bytes: item.bytes,
+                    msgs: item.msgs,
+                };
+                if tx.send(fwd).is_err() {
+                    break; // downstream stage died; stop cleanly
+                }
+            }
+            StageOut::Done(tx) => {
+                let (output, b, m) = gather(ctx, stores);
+                stats.bytes_sent += b;
+                stats.msgs_sent += m;
+                stats.items += 1;
+                stats.busy += t0.elapsed();
+                let done = Completion {
+                    seq: item.seq,
+                    output,
+                    bytes_exchanged: item.bytes + b,
+                    messages: item.msgs + m,
+                };
+                if tx.send(done).is_err() {
+                    break; // pipeline handle dropped; nothing left to report to
+                }
+            }
+        }
+    }
+    stats
+}
+
+/// The leader slices the model input into every node's entry requirement for
+/// block 0 — same patches and byte accounting as the lockstep scatter.
+fn scatter(ctx: &StageCtx, input: &Tensor) -> (Vec<PatchStore>, u64, usize) {
+    let l0 = &ctx.model.layers[0];
+    let full_in = Region::full(l0.in_h, l0.in_w, l0.in_c);
+    let whole = RegionTensor::new(full_in, input.clone());
+    let entry_need = &ctx.geos[0].entry_need;
+    let mut stores: Vec<PatchStore> = (0..ctx.nodes).map(|_| PatchStore::new()).collect();
+    let mut bytes = 0u64;
+    let mut msgs = 0usize;
+    // the leader keeps the whole input locally (free); peers receive slices
+    stores[0].add(whole.clone());
+    for (to, need) in entry_need.iter().enumerate().skip(1) {
+        for r in need {
+            let patch = whole.slice(&r.intersect(&full_in));
+            if patch.region.is_empty() {
+                continue;
+            }
+            bytes += patch.t.numel() as u64 * DTYPE_BYTES;
+            msgs += 1;
+            stores[to].add(patch);
+        }
+    }
+    (stores, bytes, msgs)
+}
+
+/// The realignment exchange out of block `bi`: every producer's canonical
+/// tiles intersected with every consumer's entry requirement, priced one
+/// message per non-empty rect — exactly the matrix the cost model charges.
+fn exchange(ctx: &StageCtx, bi: usize, mut stores: Vec<PatchStore>) -> (Vec<PatchStore>, u64, usize) {
+    let (_, e, scheme) = ctx.blocks[bi];
+    let producer = &ctx.model.layers[e];
+    let have = out_tiles(producer, scheme, ctx.nodes);
+    let need = &ctx.geos[bi + 1].entry_need;
+    let mut bytes = 0u64;
+    let mut msgs = 0usize;
+    let mut incoming: Vec<Vec<RegionTensor>> = (0..ctx.nodes).map(|_| Vec::new()).collect();
+    for (from, store) in stores.iter().enumerate() {
+        for (to, nb) in need.iter().enumerate() {
+            if to == from {
+                continue;
+            }
+            for ra in &have[from] {
+                for rb in nb {
+                    let ov = ra.intersect(rb);
+                    if ov.is_empty() {
+                        continue;
+                    }
+                    let dense = store.extract(&ov, &ov, true);
+                    bytes += dense.numel() as u64 * DTYPE_BYTES;
+                    msgs += 1;
+                    incoming[to].push(RegionTensor::new(ov, dense));
+                }
+            }
+        }
+    }
+    let mut next: Vec<PatchStore> = (0..ctx.nodes).map(|_| PatchStore::new()).collect();
+    for (node, store) in stores.iter_mut().enumerate() {
+        for p in store.patches.drain(..) {
+            next[node].add(p);
+        }
+    }
+    for (node, inc) in incoming.into_iter().enumerate() {
+        for p in inc {
+            next[node].add(p);
+        }
+    }
+    (next, bytes, msgs)
+}
+
+/// Gather the last layer's tiles to the leader and materialize the output.
+fn gather(ctx: &StageCtx, mut stores: Vec<PatchStore>) -> (Tensor, u64, usize) {
+    let last = ctx.model.layers.last().expect("non-empty model");
+    let mut bytes = 0u64;
+    let mut msgs = 0usize;
+    let mut gathered = std::mem::take(&mut stores[0]);
+    for store in stores.iter().skip(1) {
+        for rt in &store.patches {
+            bytes += rt.t.numel() as u64 * DTYPE_BYTES;
+            msgs += 1;
+            gathered.add(rt.clone());
+        }
+    }
+    let full = Region::full(last.out_h, last.out_w, last.out_c);
+    (gathered.extract(&full, &full, true), bytes, msgs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::run_distributed;
+    use crate::compute::run_reference;
+    use crate::model::zoo;
+    use crate::partition::{Mode, Scheme};
+
+    fn inputs(model: &Model, n: usize, seed: u64) -> Vec<Tensor> {
+        let l0 = &model.layers[0];
+        (0..n)
+            .map(|i| Tensor::random(l0.in_h, l0.in_w, l0.in_c, seed + i as u64))
+            .collect()
+    }
+
+    #[test]
+    fn pipelined_outputs_match_lockstep_bit_for_bit() {
+        let model = zoo::edgenet(16);
+        let ws = WeightStore::for_model(&model, 11);
+        let ins = inputs(&model, 5, 300);
+        for scheme in [Scheme::InH, Scheme::OutC] {
+            let plan = Plan::uniform(scheme, model.n_layers());
+            for nodes in [1usize, 3, 4] {
+                let (outs, stats) = run_pipelined(&model, &plan, &ws, &ins, nodes, 2);
+                assert_eq!(outs.len(), ins.len());
+                assert_eq!(stats.items, ins.len() as u64);
+                assert_eq!(stats.stages.len(), plan.blocks().len());
+                for (i, (c, input)) in outs.iter().zip(&ins).enumerate() {
+                    assert_eq!(c.seq, i as u64, "completions out of order");
+                    let lockstep = run_distributed(&model, &plan, &ws, input, nodes);
+                    assert_eq!(
+                        lockstep.output.max_abs_diff(&c.output),
+                        0.0,
+                        "{scheme} {nodes} nodes item {i}"
+                    );
+                    assert_eq!(c.bytes_exchanged, lockstep.bytes_exchanged);
+                    assert_eq!(c.messages, lockstep.messages);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_and_mixed_plans_pipeline_correctly() {
+        let model = zoo::edgenet(16);
+        let ws = WeightStore::for_model(&model, 7);
+        let n = model.n_layers();
+        let mut plan = Plan::uniform(Scheme::InH, n);
+        plan.steps[0].mode = Mode::NT;
+        plan.steps[1].mode = Mode::NT;
+        plan.steps[2].mode = Mode::NT;
+        plan.steps[4].scheme = Scheme::OutC;
+        plan.steps[5].scheme = Scheme::Grid2d;
+        plan.validate().unwrap();
+        let ins = inputs(&model, 4, 500);
+        let (outs, stats) = run_pipelined(&model, &plan, &ws, &ins, 4, 3);
+        assert_eq!(stats.stages.len(), plan.blocks().len());
+        for (c, input) in outs.iter().zip(&ins) {
+            let reference = run_reference(&model, &ws, input);
+            assert_eq!(reference.max_abs_diff(&c.output), 0.0);
+        }
+    }
+
+    #[test]
+    fn stage_stats_account_for_all_items_and_bytes() {
+        let model = zoo::edgenet(16);
+        let ws = WeightStore::for_model(&model, 3);
+        let plan = Plan::uniform(Scheme::InH, model.n_layers());
+        let ins = inputs(&model, 6, 900);
+        let (outs, stats) = run_pipelined(&model, &plan, &ws, &ins, 4, 4);
+        for st in &stats.stages {
+            assert_eq!(st.items, 6, "stage {} missed items", st.block);
+            assert!(st.busy > Duration::ZERO);
+        }
+        let per_item = outs[0].bytes_exchanged;
+        assert!(per_item > 0);
+        assert!(outs.iter().all(|c| c.bytes_exchanged == per_item));
+        let stage_bytes: u64 = stats.stages.iter().map(|s| s.bytes_sent).sum();
+        assert_eq!(stage_bytes, per_item * 6, "stage byte accounting must cover every item");
+        let occ = stats.occupancy();
+        assert_eq!(occ.len(), stats.stages.len());
+        assert!(occ.iter().all(|&o| (0.0..=1.0).contains(&o)));
+        assert!(stats.bottleneck_stage() < stats.stages.len());
+    }
+
+    #[test]
+    fn incremental_submit_and_reap() {
+        let model = zoo::edgenet(16);
+        let ws = WeightStore::for_model(&model, 5);
+        let plan = Plan::uniform(Scheme::InH, model.n_layers());
+        let mut pipe = BlockPipeline::start(&model, &plan, &ws, 4, 2);
+        let ins = inputs(&model, 3, 40);
+        for t in &ins {
+            pipe.submit(t.clone());
+        }
+        assert_eq!(pipe.submitted(), 3);
+        let first = pipe.wait_complete().expect("one completion due");
+        assert_eq!(first.seq, 0);
+        assert_eq!(pipe.in_flight(), 2);
+        let (rest, stats) = pipe.finish();
+        assert_eq!(rest.len(), 2);
+        assert_eq!(stats.items, 3);
+        let reference = run_reference(&model, &ws, &ins[2]);
+        assert_eq!(reference.max_abs_diff(&rest[1].output), 0.0);
+    }
+
+    #[test]
+    fn empty_pipeline_drains_cleanly() {
+        let model = zoo::edgenet(16);
+        let ws = WeightStore::for_model(&model, 1);
+        let plan = Plan::uniform(Scheme::InH, model.n_layers());
+        let pipe = BlockPipeline::start(&model, &plan, &ws, 4, 1);
+        let (rest, stats) = pipe.finish();
+        assert!(rest.is_empty());
+        assert_eq!(stats.items, 0);
+        assert_eq!(stats.stages.len(), plan.blocks().len());
+    }
+}

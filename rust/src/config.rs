@@ -2,6 +2,7 @@
 //! plus the dynamic-conditions experiments of [`crate::elastic`], loadable
 //! from JSON for custom sweeps.
 
+use crate::cost::Objective;
 use crate::elastic::{ConditionTrace, ElasticConfig, Profile};
 use crate::net::{Bandwidth, Testbed, Topology};
 use crate::util::json::Json;
@@ -79,7 +80,7 @@ impl ExperimentGrid {
         let strings = |key: &str| -> Result<Vec<String>, String> {
             Ok(v.req(key)?
                 .as_arr()
-                .ok_or(key.to_string())?
+                .ok_or_else(|| key.to_string())?
                 .iter()
                 .filter_map(|x| x.as_str().map(String::from))
                 .collect())
@@ -186,6 +187,90 @@ impl ElasticExperiment {
     }
 }
 
+/// A pipelined-serving experiment: the cluster, the planning
+/// [`Objective`], the pipeline depth and the request volume driving
+/// `benches/pipeline_throughput.rs` and `examples/pipelined_serving.rs`.
+#[derive(Debug, Clone)]
+pub struct PipelineExperiment {
+    /// Zoo model name.
+    pub model: String,
+    pub nodes: usize,
+    pub topology: Topology,
+    pub bandwidth_gbps: f64,
+    /// Entry-queue budget of the block pipeline
+    /// ([`crate::serve::ServeConfig::pipeline_depth`]).
+    pub pipeline_depth: usize,
+    /// What the planner minimizes for the served plan.
+    pub objective: Objective,
+    /// Requests to push through per measured run.
+    pub requests: usize,
+}
+
+impl Default for PipelineExperiment {
+    fn default() -> Self {
+        PipelineExperiment {
+            model: "edgenet".into(),
+            nodes: 4,
+            topology: Topology::Ring,
+            bandwidth_gbps: 1.0,
+            pipeline_depth: 4,
+            objective: Objective::Throughput,
+            requests: 32,
+        }
+    }
+}
+
+impl PipelineExperiment {
+    pub fn testbed(&self) -> Testbed {
+        Testbed::new(self.nodes, self.topology, Bandwidth::gbps(self.bandwidth_gbps))
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::Str(self.model.clone())),
+            ("nodes", Json::Num(self.nodes as f64)),
+            ("topology", Json::Str(self.topology.name().to_string())),
+            ("bandwidth_gbps", Json::Num(self.bandwidth_gbps)),
+            ("pipeline_depth", Json::Num(self.pipeline_depth as f64)),
+            ("objective", Json::Str(self.objective.name().to_string())),
+            ("requests", Json::Num(self.requests as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<PipelineExperiment, String> {
+        let num = |key: &str| v.req(key)?.as_f64().ok_or_else(|| key.to_string());
+        let model = v
+            .req("model")?
+            .as_str()
+            .ok_or_else(|| "model".to_string())?
+            .to_string();
+        let topology = v
+            .req("topology")?
+            .as_str()
+            .ok_or_else(|| "topology".to_string())?
+            .parse::<Topology>()?;
+        let objective = v
+            .req("objective")?
+            .as_str()
+            .ok_or_else(|| "objective".to_string())?
+            .parse::<Objective>()?;
+        Ok(PipelineExperiment {
+            model,
+            nodes: num("nodes")? as usize,
+            topology,
+            bandwidth_gbps: num("bandwidth_gbps")?,
+            pipeline_depth: num("pipeline_depth")? as usize,
+            objective,
+            requests: num("requests")? as usize,
+        })
+    }
+
+    pub fn load(path: &std::path::Path) -> std::io::Result<PipelineExperiment> {
+        let v = Json::load(path)?;
+        Self::from_json(&v).map_err(std::io::Error::other)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -215,6 +300,26 @@ mod tests {
         ExperimentGrid::smoke().to_json().save(&p).unwrap();
         let g = ExperimentGrid::load(&p).unwrap();
         assert_eq!(g.models, vec!["mobilenet"]);
+    }
+
+    #[test]
+    fn pipeline_experiment_roundtrip() {
+        let e = PipelineExperiment {
+            objective: Objective::Latency,
+            pipeline_depth: 7,
+            ..Default::default()
+        };
+        let e2 = PipelineExperiment::from_json(&e.to_json()).unwrap();
+        assert_eq!(e2.model, e.model);
+        assert_eq!(e2.objective, Objective::Latency);
+        assert_eq!(e2.pipeline_depth, 7);
+        assert_eq!(e2.testbed().nodes, 4);
+        // bad objective strings are rejected
+        let mut j = e.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("objective".into(), Json::Str("speed".into()));
+        }
+        assert!(PipelineExperiment::from_json(&j).is_err());
     }
 
     #[test]

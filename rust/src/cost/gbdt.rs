@@ -312,7 +312,7 @@ impl Gbdt {
             .as_arr()
             .ok_or("bin_edges")?
             .iter()
-            .map(|e| e.as_f64_vec().ok_or("bin_edges row".to_string()))
+            .map(|e| e.as_f64_vec().ok_or_else(|| "bin_edges row".to_string()))
             .collect::<Result<Vec<_>, _>>()?;
         Ok(Gbdt {
             base: v.req("base")?.as_f64().ok_or("base")?,

@@ -46,11 +46,13 @@
 //! speeds mint fresh compute keys at every consulted batch boundary.
 
 use std::collections::HashMap;
+use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 
 use super::{ComputeQuery, CostSource, Estimators, SyncQuery};
-use crate::net::{ExchangeProfile, Testbed, Topology};
+use crate::net::{ExchangeProfile, PortLoad, Testbed, Topology};
+use crate::util::json::Json;
 
 /// Per-map entry cap. The memo is a pure cache, so overflowing simply
 /// flushes the map and lets it refill: compute keys embed speed-adjusted
@@ -277,6 +279,197 @@ impl MemoStore {
 
     pub fn is_empty(&self) -> bool {
         self.len() == (0, 0)
+    }
+
+    /// Serialize every *analytic* entry to `path` as JSON (via
+    /// [`crate::util::json`]). Learned (GBDT) entries are namespaced by a
+    /// live estimator instance (pointer identity) and cannot survive a
+    /// process boundary, so they are skipped. The JSON float encoding is
+    /// shortest-round-trip, so a save → load cycle reproduces every key and
+    /// cached value bit for bit — a reloaded store answers exactly the
+    /// queries the original would have answered warm.
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        let sigs = self.sigs.read().unwrap();
+        // analytic namespaces only, with a dense remap store-id → file index
+        let mut remap: HashMap<u32, usize> = HashMap::new();
+        let mut saved_sigs = Vec::new();
+        for (i, sig) in sigs.iter().enumerate() {
+            if sig.kind != 0 {
+                continue;
+            }
+            remap.insert(i as u32, saved_sigs.len());
+            let device: Vec<f64> = sig.device.iter().map(|&b| f64::from_bits(b)).collect();
+            saved_sigs.push(Json::obj(vec![
+                ("topology", Json::Str(sig.topology.name().to_string())),
+                ("latency", Json::Num(f64::from_bits(sig.latency))),
+                ("device", Json::num_arr(&device)),
+            ]));
+        }
+        drop(sigs);
+
+        let mut compute_entries = Vec::new();
+        for (key, &value) in self.compute.read().unwrap().iter() {
+            if let ComputeKey::Analytic { sig, conv, flops } = key {
+                let Some(&si) = remap.get(sig) else { continue };
+                let fl: Vec<f64> = flops.iter().map(|&b| f64::from_bits(b)).collect();
+                compute_entries.push(Json::obj(vec![
+                    ("sig", Json::Num(si as f64)),
+                    ("conv", Json::Num(*conv as f64)),
+                    ("flops", Json::num_arr(&fl)),
+                    ("value", Json::Num(value)),
+                ]));
+            }
+        }
+
+        let mut sync_entries = Vec::new();
+        for (key, entry) in self.sync.read().unwrap().iter() {
+            if let (
+                SyncKey::Analytic { sig, msgs },
+                SyncEntry::Analytic { bw_bits, profile },
+            ) = (key, entry)
+            {
+                let Some(&si) = remap.get(sig) else { continue };
+                let loads: Vec<Json> = profile
+                    .loads
+                    .iter()
+                    .map(|l| Json::Arr(vec![Json::Num(l.bytes as f64), Json::Num(l.msgs as f64)]))
+                    .collect();
+                sync_entries.push(Json::obj(vec![
+                    ("sig", Json::Num(si as f64)),
+                    ("msgs", Json::Arr(msgs.iter().map(|&m| Json::Num(m as f64)).collect())),
+                    ("bw", Json::Num(f64::from_bits(*bw_bits))),
+                    ("loads", Json::Arr(loads)),
+                ]));
+            }
+        }
+
+        Json::obj(vec![
+            ("version", Json::Num(1.0)),
+            ("sigs", Json::Arr(saved_sigs)),
+            ("compute", Json::Arr(compute_entries)),
+            ("sync", Json::Arr(sync_entries)),
+        ])
+        .save(path)
+    }
+
+    /// Absorb a previously [`Self::save`]d store: every saved analytic
+    /// entry becomes a warm entry of this store (keys re-interned into this
+    /// store's signature table, so the file composes with whatever is
+    /// already cached). Hit/miss counters are untouched — loading is
+    /// neither. Returns the `(compute, sync)` entry counts absorbed.
+    pub fn load_into(&self, path: &Path) -> std::io::Result<(usize, usize)> {
+        let v = Json::load(path)?;
+        let bad = |what: &str| {
+            std::io::Error::other(format!("memo store {}: bad {what}", path.display()))
+        };
+        // cached values are trusted bit-for-bit, so refuse formats this
+        // code does not understand rather than misinterpret their fields
+        if v.get("version").and_then(Json::as_f64) != Some(1.0) {
+            return Err(bad("version (expected 1)"));
+        }
+        let sigs = v.get("sigs").and_then(Json::as_arr).ok_or_else(|| bad("sigs"))?;
+        let mut ids = Vec::with_capacity(sigs.len());
+        for s in sigs {
+            let topology = s
+                .get("topology")
+                .and_then(Json::as_str)
+                .ok_or_else(|| bad("topology"))?
+                .parse::<Topology>()
+                .map_err(std::io::Error::other)?;
+            let latency =
+                s.get("latency").and_then(Json::as_f64).ok_or_else(|| bad("latency"))?;
+            let device_vals =
+                s.get("device").and_then(Json::as_f64_vec).ok_or_else(|| bad("device"))?;
+            if device_vals.len() != 8 {
+                return Err(bad("device length"));
+            }
+            let mut device = [0u64; 8];
+            for (d, val) in device.iter_mut().zip(&device_vals) {
+                *d = val.to_bits();
+            }
+            ids.push(self.intern(SourceSig {
+                kind: 0,
+                topology,
+                latency: latency.to_bits(),
+                device,
+                estimators: None,
+            }));
+        }
+        let sig_of = |e: &Json| -> std::io::Result<u32> {
+            let i = e.get("sig").and_then(Json::as_usize).ok_or_else(|| bad("sig"))?;
+            ids.get(i).copied().ok_or_else(|| bad("sig index"))
+        };
+
+        let centries =
+            v.get("compute").and_then(Json::as_arr).ok_or_else(|| bad("compute"))?;
+        {
+            let mut map = self.compute.write().unwrap();
+            for e in centries {
+                let sig = sig_of(e)?;
+                let conv =
+                    e.get("conv").and_then(Json::as_usize).ok_or_else(|| bad("conv"))? as u8;
+                let flops =
+                    e.get("flops").and_then(Json::as_f64_vec).ok_or_else(|| bad("flops"))?;
+                let value =
+                    e.get("value").and_then(Json::as_f64).ok_or_else(|| bad("value"))?;
+                let key = ComputeKey::Analytic {
+                    sig,
+                    conv,
+                    flops: flops.iter().map(|f| f.to_bits()).collect(),
+                };
+                if map.len() >= MAX_ENTRIES_PER_MAP {
+                    map.clear();
+                }
+                map.insert(key, value);
+            }
+        }
+
+        let sentries = v.get("sync").and_then(Json::as_arr).ok_or_else(|| bad("sync"))?;
+        {
+            let mut map = self.sync.write().unwrap();
+            for e in sentries {
+                let sig = sig_of(e)?;
+                let msgs_json =
+                    e.get("msgs").and_then(Json::as_arr).ok_or_else(|| bad("msgs"))?;
+                let mut msgs = Vec::with_capacity(msgs_json.len());
+                for m in msgs_json {
+                    msgs.push(m.as_f64().ok_or_else(|| bad("msgs element"))? as u64);
+                }
+                let bw = e.get("bw").and_then(Json::as_f64).ok_or_else(|| bad("bw"))?;
+                let loads_json =
+                    e.get("loads").and_then(Json::as_arr).ok_or_else(|| bad("loads"))?;
+                let mut loads = Vec::with_capacity(loads_json.len());
+                for l in loads_json {
+                    let pair = l.as_arr().ok_or_else(|| bad("load"))?;
+                    if pair.len() != 2 {
+                        return Err(bad("load pair"));
+                    }
+                    loads.push(PortLoad {
+                        bytes: pair[0].as_f64().ok_or_else(|| bad("load bytes"))? as u64,
+                        msgs: pair[1].as_f64().ok_or_else(|| bad("load msgs"))? as u64,
+                    });
+                }
+                let key = SyncKey::Analytic { sig, msgs: msgs.into_boxed_slice() };
+                if map.len() >= MAX_ENTRIES_PER_MAP {
+                    map.clear();
+                }
+                map.insert(
+                    key,
+                    SyncEntry::Analytic {
+                        bw_bits: bw.to_bits(),
+                        profile: ExchangeProfile { loads },
+                    },
+                );
+            }
+        }
+        Ok((centries.len(), sentries.len()))
+    }
+
+    /// A fresh shared store absorbed from `path`.
+    pub fn load(path: &Path) -> std::io::Result<Arc<MemoStore>> {
+        let store = MemoStore::shared();
+        store.load_into(path)?;
+        Ok(store)
     }
 
     fn intern(&self, sig: SourceSig) -> u32 {
@@ -510,6 +703,87 @@ mod tests {
         assert_eq!(store.stats().sync_misses, 2, "each topology fills its own entry");
         assert_eq!(a.to_bits(), CostSource::analytic(&ring).sync_time(&sq_ring).to_bits());
         assert_eq!(b.to_bits(), CostSource::analytic(&ps).sync_time(&sq_ps).to_bits());
+    }
+
+    #[test]
+    fn save_load_roundtrip_preserves_entries_bit_for_bit() {
+        let testbed = tb(1.0);
+        let store = MemoStore::shared();
+        let memo = CostSource::analytic(&testbed).memoized(&store);
+        let (cq, sq) = queries(&testbed);
+        let vc = memo.compute_time(&cq);
+        let vs = memo.sync_time(&sq);
+
+        let dir = crate::util::tmp::TempDir::new("memo_store");
+        let p = dir.path().join("memo.json");
+        store.save(&p).unwrap();
+        let loaded = MemoStore::load(&p).unwrap();
+        assert_eq!(loaded.len(), store.len());
+
+        // identical queries against the reloaded store are pure hits with
+        // bit-identical answers
+        let memo2 = CostSource::analytic(&testbed).memoized(&loaded);
+        let before = loaded.stats();
+        assert_eq!(memo2.compute_time(&cq).to_bits(), vc.to_bits());
+        assert_eq!(memo2.sync_time(&sq).to_bits(), vs.to_bits());
+        let delta = loaded.stats().delta_since(before);
+        assert_eq!(delta.compute_misses, 0, "reloaded store missed: {delta}");
+        assert_eq!(delta.sync_misses, 0, "reloaded store missed: {delta}");
+        assert_eq!((delta.compute_hits, delta.sync_hits), (1, 1));
+
+        // the bandwidth re-pricing fast path survives the round trip too
+        let slow = testbed.with_bandwidth_factor(0.25);
+        let memo_slow = CostSource::analytic(&slow).memoized(&loaded);
+        let (_, sq_slow) = queries(&slow);
+        let got = memo_slow.sync_time(&sq_slow);
+        let delta = loaded.stats().delta_since(before);
+        assert_eq!(delta.sync_misses, 0, "drift after reload re-queried: {delta}");
+        assert_eq!(delta.sync_rescales, 1);
+        assert_eq!(
+            got.to_bits(),
+            CostSource::analytic(&slow).sync_time(&sq_slow).to_bits()
+        );
+    }
+
+    #[test]
+    fn load_into_composes_with_existing_entries() {
+        // a saved ring-testbed store absorbed into a store already holding
+        // star-testbed entries leaves both namespaces answerable warm
+        let ring = Testbed::new(4, Topology::Ring, Bandwidth::gbps(1.0));
+        let ps = Testbed::new(4, Topology::Ps, Bandwidth::gbps(1.0));
+        let ring_store = MemoStore::shared();
+        let memo_ring = CostSource::analytic(&ring).memoized(&ring_store);
+        let (cq_ring, sq_ring) = queries(&ring);
+        memo_ring.compute_time(&cq_ring);
+        memo_ring.sync_time(&sq_ring);
+        let dir = crate::util::tmp::TempDir::new("memo_compose");
+        let p = dir.path().join("ring.json");
+        ring_store.save(&p).unwrap();
+
+        let combined = MemoStore::shared();
+        let memo_ps = CostSource::analytic(&ps).memoized(&combined);
+        let (cq_ps, sq_ps) = queries(&ps);
+        memo_ps.compute_time(&cq_ps);
+        memo_ps.sync_time(&sq_ps);
+        let (nc, ns) = combined.load_into(&p).unwrap();
+        assert_eq!((nc, ns), (1, 1));
+        let before = combined.stats();
+        let memo_ring2 = CostSource::analytic(&ring).memoized(&combined);
+        memo_ring2.compute_time(&cq_ring);
+        memo_ring2.sync_time(&sq_ring);
+        memo_ps.compute_time(&cq_ps);
+        memo_ps.sync_time(&sq_ps);
+        let delta = combined.stats().delta_since(before);
+        assert_eq!(delta.compute_misses + delta.sync_misses, 0, "{delta}");
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let dir = crate::util::tmp::TempDir::new("memo_bad");
+        let p = dir.path().join("bad.json");
+        std::fs::write(&p, "{\"sigs\": 7}").unwrap();
+        assert!(MemoStore::load(&p).is_err());
+        assert!(MemoStore::load(&dir.path().join("absent.json")).is_err());
     }
 
     #[test]

@@ -39,6 +39,54 @@ use crate::net::Testbed;
 /// planner hot path (edge clusters are 3–6 nodes; 16 is generous headroom).
 pub const MAX_NODES: usize = 16;
 
+/// What the planner minimizes over the same search space and cost queries.
+///
+/// Both objectives decompose a plan into *pipeline stages*: the fused block
+/// `b` paired with its entry synchronization (scatter for the first block, a
+/// realignment boundary otherwise), plus the final gather as its own stage.
+/// [`Objective::Latency`] sums the stages (one inference end to end — the
+/// paper's metric); [`Objective::Throughput`] takes their maximum, the
+/// steady-state per-item cost of the block-pipelined executor
+/// ([`crate::cluster::pipeline`]), where every stage works on a different
+/// in-flight inference and the slowest stage sets the service rate.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq, Hash)]
+pub enum Objective {
+    /// End-to-end latency of one inference (sum of all stages).
+    #[default]
+    Latency,
+    /// Bottleneck (max) pipeline-stage time — the reciprocal of the
+    /// pipelined executor's steady-state throughput.
+    Throughput,
+}
+
+impl Objective {
+    pub const ALL: [Objective; 2] = [Objective::Latency, Objective::Throughput];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Objective::Latency => "latency",
+            Objective::Throughput => "throughput",
+        }
+    }
+}
+
+impl std::fmt::Display for Objective {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for Objective {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "latency" => Ok(Objective::Latency),
+            "throughput" | "bottleneck" => Ok(Objective::Throughput),
+            other => Err(format!("unknown objective {other:?}")),
+        }
+    }
+}
+
 /// A compute-cost question: one layer, one scheme, possibly NT-inflated.
 #[derive(Debug, Clone)]
 pub struct ComputeQuery {
@@ -165,5 +213,15 @@ mod tests {
     fn sync_query_total_bytes() {
         let q = SyncQuery { features: Features::zeros(), msgs: vec![0, 5, 7, 0] };
         assert_eq!(q.total_bytes(), 12);
+    }
+
+    #[test]
+    fn objective_names_round_trip() {
+        for o in Objective::ALL {
+            assert_eq!(o.name().parse::<Objective>().unwrap(), o);
+            assert_eq!(o.to_string(), o.name());
+        }
+        assert!("speed".parse::<Objective>().is_err());
+        assert_eq!(Objective::default(), Objective::Latency);
     }
 }

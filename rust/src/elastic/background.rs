@@ -353,6 +353,29 @@ impl ElasticFrontend {
         decision
     }
 
+    /// Cheap per-batch probe for the *pipelined* serving path: does the
+    /// running generation have to drain? True when the liveness mask at `vt`
+    /// differs from the current generation's, or when the background planner
+    /// has published a new plan epoch. A condition-cell shift with an
+    /// unchanged node set fires the same fire-and-forget `Observe` ask as
+    /// [`Self::acquire`] — the replanner's eventual publication is what
+    /// flips this probe to true — but the probe itself never rendezvouses,
+    /// never counts as a consultation, and never changes the served plan:
+    /// the full `acquire` runs once per drained generation instead of once
+    /// per batch.
+    pub fn needs_flush(&mut self, vt: f64) -> bool {
+        let snap = self.trace.sample(vt);
+        if snap.alive != self.cur.alive {
+            return true;
+        }
+        let key = CacheKey::new(&self.model_name, snap.quantize());
+        if key != self.cur.key && self.last_asked.as_ref() != Some(&key) {
+            self.replanner.observe(snap);
+            self.last_asked = Some(key);
+        }
+        self.replanner.slot().epoch() != self.cur.epoch
+    }
+
     /// Stop the planner (draining queued asks) and return the adaptation
     /// counters plus the distribution of batch-boundary acquisition stalls.
     pub fn finish(mut self) -> (AdaptationMetrics, Summary) {
@@ -418,6 +441,44 @@ mod tests {
         assert_eq!(m.speculative_plans, 3);
         assert_eq!(m.replans, 4); // initial + 3 speculative
         assert_eq!(stalls.count, 10);
+    }
+
+    #[test]
+    fn needs_flush_tracks_node_set_and_epoch_but_never_swaps() {
+        let model = zoo::edgenet(16);
+        // node 2 dies at t = 1; a dip starts at t = 10
+        let trace = ConditionTrace::stable(4)
+            .with_outage(2, 1.0, 5.0)
+            .with_bandwidth_dip(10.0, f64::INFINITY, 0.1);
+        let mut fe = ElasticFrontend::start(model, base(), trace, ElasticConfig::default());
+        let epoch0 = fe.cur.epoch;
+        assert!(!fe.needs_flush(0.5), "healthy steady state must not flush");
+        assert_eq!(fe.cur.epoch, epoch0, "probe must not adopt a plan");
+        assert!(fe.needs_flush(1.5), "node loss must force a drain");
+        // the probe did not rendezvous: the cached version is unchanged
+        assert_eq!(fe.cur.alive, vec![true; 4]);
+        // acquire (the per-generation consultation) performs the failover
+        let d = fe.acquire(1.5);
+        assert_eq!(d.nodes, 3);
+        // recovery: mask differs from the 3-node generation → drain again
+        assert!(fe.needs_flush(6.0));
+        let d = fe.acquire(6.0);
+        assert_eq!(d.nodes, 4);
+        // bandwidth collapse: the probe fires the observe ask and reports a
+        // flush only once the background planner publishes
+        let deadline = Instant::now() + Duration::from_secs(30);
+        while !fe.needs_flush(10.5) {
+            assert!(
+                Instant::now() < deadline,
+                "drift publication never flipped the flush probe"
+            );
+            std::thread::yield_now();
+        }
+        let d = fe.acquire(10.5);
+        assert_eq!(d.nodes, 4);
+        let (m, _) = fe.finish();
+        assert_eq!(m.checks, 3, "probes must not count as consultations: {m}");
+        assert_eq!(m.inline_replans, 0, "{m}");
     }
 
     #[test]

@@ -178,6 +178,107 @@ mod tests {
     }
 
     #[test]
+    fn eviction_follows_exact_lru_order_under_sustained_pressure() {
+        // fill far past capacity and check the *sequence* of victims: with
+        // no intervening gets, puts evict in insertion order; a get reorders
+        let mut cache = PlanCache::new(3);
+        let trace = ConditionTrace::stable(4);
+        let keys: Vec<CacheKey> = (0..6)
+            .map(|i| {
+                let mut snap = trace.sample(i as f64);
+                snap.bandwidth_factor = 1.0 - 0.125 * i as f64; // distinct buckets
+                CacheKey::new("m", snap.quantize())
+            })
+            .collect();
+        for k in &keys[..3] {
+            cache.put(k.clone(), dummy_plan(4));
+        }
+        assert_eq!(cache.len(), 3);
+        assert_eq!(cache.evictions, 0);
+        // freshen keys[0]: the LRU victim chain becomes 1, 2, 0
+        assert!(cache.get(&keys[0]).is_some());
+        cache.put(keys[3].clone(), dummy_plan(4));
+        assert!(!cache.peek(&keys[1]), "victim 1 survived");
+        cache.put(keys[4].clone(), dummy_plan(4));
+        assert!(!cache.peek(&keys[2]), "victim 2 survived");
+        cache.put(keys[5].clone(), dummy_plan(4));
+        assert!(!cache.peek(&keys[0]), "victim 0 survived");
+        assert_eq!(cache.evictions, 3);
+        for k in &keys[3..] {
+            assert!(cache.peek(k), "recent entry evicted");
+        }
+        assert_eq!(cache.len(), 3);
+    }
+
+    #[test]
+    fn peek_does_not_refresh_recency_or_count() {
+        let mut cache = PlanCache::new(2);
+        let a = key("a", 0.0);
+        let b = key("b", 0.0);
+        cache.put(a.clone(), dummy_plan(4));
+        cache.put(b.clone(), dummy_plan(4));
+        // peeks at `a` must NOT save it from eviction (get would)
+        for _ in 0..5 {
+            assert!(cache.peek(&a));
+        }
+        let (h0, m0) = (cache.hits, cache.misses);
+        cache.put(key("c", 0.0), dummy_plan(4));
+        assert!(!cache.peek(&a), "peek refreshed recency");
+        assert!(cache.peek(&b));
+        assert_eq!((cache.hits, cache.misses), (h0, m0), "peek touched counters");
+    }
+
+    #[test]
+    fn quantized_keys_collide_within_a_bucket_and_split_across() {
+        // collisions by construction: distinct snapshots inside one 12.5%
+        // bucket share the cell (later put overwrites — one entry), while a
+        // bucket step, a speed-bucket step, or any liveness change splits
+        let trace = ConditionTrace::stable(4);
+        let base = trace.sample(0.0);
+
+        // same-cell collision: 1.00 and 0.97 both round to bucket 8
+        let mut near = base.clone();
+        near.bandwidth_factor = 0.97;
+        let k_base = CacheKey::new("m", base.quantize());
+        let k_near = CacheKey::new("m", near.quantize());
+        assert_eq!(k_base, k_near);
+        let mut cache = PlanCache::new(8);
+        cache.put(k_base.clone(), dummy_plan(4));
+        cache.put(k_near.clone(), dummy_plan(8));
+        assert_eq!(cache.len(), 1, "colliding keys must share one entry");
+        assert_eq!(cache.get(&k_base).unwrap().steps.len(), 8, "last write wins");
+
+        // bucket boundary: 0.9375 rounds to 8, 0.93 rounds to 7
+        let mut edge_hi = base.clone();
+        edge_hi.bandwidth_factor = 0.9375;
+        let mut edge_lo = base.clone();
+        edge_lo.bandwidth_factor = 0.93;
+        assert_eq!(CacheKey::new("m", edge_hi.quantize()), k_base);
+        assert_ne!(CacheKey::new("m", edge_lo.quantize()), k_base);
+
+        // per-node speed buckets split the cell per node, not just per value
+        let mut slow2 = base.clone();
+        slow2.speed_factors[2] = 0.8;
+        let mut slow3 = base.clone();
+        slow3.speed_factors[3] = 0.8;
+        let k2 = CacheKey::new("m", slow2.quantize());
+        let k3 = CacheKey::new("m", slow3.quantize());
+        assert_ne!(k2, k_base);
+        assert_ne!(k2, k3, "same value on a different node must not collide");
+
+        // liveness: losing node 1 vs node 2 are different cells, and the
+        // speed-bucket vector compaction must not alias them
+        let mut down1 = base.clone();
+        down1.alive[1] = false;
+        let mut down2 = base.clone();
+        down2.alive[2] = false;
+        assert_ne!(
+            CacheKey::new("m", down1.quantize()),
+            CacheKey::new("m", down2.quantize())
+        );
+    }
+
+    #[test]
     fn cached_plan_equals_fresh_plan_for_same_snapshot() {
         // the end-to-end cache contract: serving a warm plan must be
         // indistinguishable from replanning for the same quantized snapshot

@@ -8,13 +8,20 @@
 //!   ([`crate::cluster`]) with real tensors, returning the output plus the
 //!   virtual-clock timing; [`verify_plan`] compares the distributed output
 //!   against the single-node reference bit-for-bit.
+//! * [`execute_stream`] — the streaming entry point: runs a whole input
+//!   sequence through the block-pipelined executor
+//!   ([`crate::cluster::pipeline`]), yielding completions in submission
+//!   order, bit-identical to running [`execute`] per input. Its timing
+//!   report carries both objectives' virtual costs: per-item latency and
+//!   the bottleneck stage time that bounds steady-state throughput.
 
+use crate::cluster::pipeline::{run_pipelined, PipelineStats};
 use crate::compute::{run_reference, Tensor, WeightStore};
 use crate::cost::CostSource;
 use crate::model::Model;
 use crate::net::Testbed;
 use crate::partition::Plan;
-use crate::planner::exhaustive::plan_cost;
+use crate::planner::exhaustive::{plan_cost, stage_costs_from};
 
 pub use crate::planner::exhaustive::PlanCost as TimingReport;
 
@@ -54,6 +61,69 @@ pub fn execute(
         timing: evaluate(model, plan, testbed),
         bytes_exchanged: run.bytes_exchanged,
         messages: run.messages,
+    }
+}
+
+/// Result of a streaming (pipelined) execution over an input sequence.
+#[derive(Debug)]
+pub struct StreamResult {
+    /// Outputs in submission order.
+    pub outputs: Vec<Tensor>,
+    /// Virtual-clock latency of one inference under `plan` (unchanged by
+    /// pipelining — each item still traverses every stage).
+    pub timing: TimingReport,
+    /// Virtual-clock seconds of each pipeline stage (blocks + gather); the
+    /// max is the steady-state per-item service time under pipelining.
+    pub stage_times: Vec<f64>,
+    /// Payload bytes each item moved (identical across items, equal to the
+    /// lockstep executor's accounting).
+    pub bytes_per_item: u64,
+    pub messages_per_item: usize,
+    /// Host-side per-stage occupancy/byte counters from the executor.
+    pub pipeline: PipelineStats,
+}
+
+impl StreamResult {
+    /// The virtual-clock bottleneck stage time (what
+    /// [`crate::cost::Objective::Throughput`] minimizes).
+    pub fn bottleneck(&self) -> f64 {
+        self.stage_times.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+    }
+}
+
+/// Execute `plan` over a sequence of `inputs` on the block-pipelined
+/// executor, with up to `depth` submissions queued at the entry. Outputs
+/// come back in submission order and are bit-identical to executing each
+/// input through [`execute`] (asserted by the tests below across the zoo).
+pub fn execute_stream(
+    model: &Model,
+    plan: &Plan,
+    weights: &WeightStore,
+    inputs: &[Tensor],
+    testbed: &Testbed,
+    depth: usize,
+) -> StreamResult {
+    let cost = CostSource::analytic(testbed);
+    let (completions, pipeline) =
+        run_pipelined(model, plan, weights, inputs, testbed.nodes, depth);
+    let (mut bytes, mut msgs) = (0u64, 0usize);
+    let outputs = completions
+        .into_iter()
+        .map(|c| {
+            bytes = c.bytes_exchanged;
+            msgs = c.messages;
+            c.output
+        })
+        .collect();
+    let timing = plan_cost(model, plan, &cost);
+    let stage_times = stage_costs_from(plan, &timing);
+    StreamResult {
+        outputs,
+        timing,
+        stage_times,
+        bytes_per_item: bytes,
+        messages_per_item: msgs,
+        pipeline,
     }
 }
 
@@ -114,6 +184,58 @@ mod tests {
         let input = Tensor::random(16, 16, 3, 5);
         let res = execute(&model, &plan, &ws, &input, &testbed);
         assert_eq!(res.bytes_exchanged, res.timing.bytes_moved);
+    }
+
+    #[test]
+    fn streaming_execution_is_bit_identical_to_lockstep_across_zoo() {
+        // the tentpole invariant: the pipelined executor's outputs equal
+        // per-input lockstep execution, for planner-produced plans, across
+        // the (small-numerics) model zoo
+        let testbed = tb(4, 1.0);
+        let models = [
+            zoo::edgenet(16),
+            zoo::tiny_chain(5, 16, 8),
+            zoo::mobilenet_v1(32, 10).truncated(5),
+        ];
+        for model in &models {
+            let cost = CostSource::analytic(&testbed);
+            let plan = Dpp::new(model, &cost).plan();
+            let ws = WeightStore::for_model(model, 9);
+            let l0 = &model.layers[0];
+            let inputs: Vec<Tensor> = (0..4u64)
+                .map(|i| Tensor::random(l0.in_h, l0.in_w, l0.in_c, 70 + i))
+                .collect();
+            let stream = execute_stream(model, &plan, &ws, &inputs, &testbed, 3);
+            assert_eq!(stream.outputs.len(), inputs.len(), "{}", model.name);
+            for (i, (input, out)) in inputs.iter().zip(&stream.outputs).enumerate() {
+                let lockstep = execute(model, &plan, &ws, input, &testbed);
+                assert_eq!(
+                    lockstep.output.max_abs_diff(out),
+                    0.0,
+                    "{} item {i} diverged from lockstep",
+                    model.name
+                );
+                assert_eq!(stream.bytes_per_item, lockstep.bytes_exchanged);
+                assert_eq!(stream.messages_per_item, lockstep.messages);
+            }
+        }
+    }
+
+    #[test]
+    fn stream_stage_times_decompose_the_latency() {
+        let testbed = tb(4, 1.0);
+        let model = zoo::edgenet(16);
+        let plan = Plan::uniform(Scheme::InH, model.n_layers());
+        let ws = WeightStore::for_model(&model, 2);
+        let inputs = vec![Tensor::random(16, 16, 3, 8)];
+        let stream = execute_stream(&model, &plan, &ws, &inputs, &testbed, 1);
+        let sum: f64 = stream.stage_times.iter().sum();
+        assert!((sum - stream.timing.total).abs() < 1e-9 * stream.timing.total);
+        assert!(stream.bottleneck() < stream.timing.total);
+        assert_eq!(stream.bytes_per_item, stream.timing.bytes_moved);
+        // one stage per block plus the gather
+        assert_eq!(stream.stage_times.len(), plan.blocks().len() + 1);
+        assert_eq!(stream.pipeline.stages.len(), plan.blocks().len());
     }
 
     #[test]

@@ -22,12 +22,12 @@
 //! | [`planner`] | DPP — the paper's Algorithm 1 (reverse DP + pruning, optionally wavefront-parallel) + exhaustive reference for Thm 1 |
 //! | [`baselines`] | OutC (Xenos), InH/InW (MoDNN/DeepSlicing), 2D-grid (DeepThings), layerwise (DINA), fused-layer (AOFL/EdgeCI) |
 //! | [`net`] | network simulator: Ring / PS / Mesh topologies, bandwidth + latency |
-//! | [`cluster`] | simulated edge cluster: leader/worker threads, message passing, virtual clock |
+//! | [`cluster`] | simulated edge cluster: leader/worker threads, message passing, virtual clock; block-pipelined streaming executor |
 //! | [`elastic`] | runtime adaptation: condition traces, degradation monitor, plan cache, background replanner + speculative failover |
 //! | [`engine`] | plan executor: analytic evaluation + real-numerics distributed execution |
 //! | [`compute`] | native Rust tensor kernels (conv/dwconv/pool/matmul) — fallback + oracle |
 //! | [`runtime`] | PJRT client wrapper: loads `artifacts/*.hlo.txt` (AOT-compiled JAX/Pallas) |
-//! | [`serve`] | serving front-end: request router + dynamic batcher |
+//! | [`serve`] | serving front-end: request router + dynamic batcher + pipelined throughput mode |
 //! | [`bench`] | generators for every paper table/figure (Fig 2, 7, 8, 9, search time, ablations) |
 //!
 //! Layers 1/2 (Pallas kernels + JAX model) live under `python/compile/` and

@@ -361,6 +361,7 @@ fn cmd_serve(args: &Args) -> i32 {
         max_batch: args.usize_or("batch", 8),
         batch_window: std::time::Duration::from_millis(args.u64_or("window-ms", 2)),
         queue_depth: args.usize_or("queue", 128),
+        pipeline_depth: args.usize_or("pipeline-depth", 1),
     };
     // `--profile <stable|diurnal-drift|lossy-link|node-churn>` switches to
     // the elastic (condition-aware) serving path.
@@ -425,6 +426,9 @@ fn cmd_serve(args: &Args) -> i32 {
         "router: {} requests in {} batches (max batch {})",
         stats.requests, stats.batches, stats.max_batch_seen
     );
+    if let Some(p) = stats.pipeline {
+        println!("pipeline: {p}");
+    }
     if let Some(m) = stats.adaptation {
         println!("adaptation: {m}");
     }

@@ -124,6 +124,59 @@ impl std::fmt::Display for AdaptationMetrics {
     }
 }
 
+/// Pipelined-serving counters for [`crate::serve::RouterStats`]: per-stage
+/// occupancy of the block pipeline plus drain-and-flush accounting. When a
+/// plan swap rebuilds the pipeline mid-run, the occupancy snapshot comes
+/// from the *dominant* generation (the one that served the most items) —
+/// per-stage shapes differ across plans, so fractions cannot be merged.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PipelineSummary {
+    /// Stages (fused blocks) of the dominant generation's pipeline.
+    pub stages: usize,
+    /// Total items served across all generations.
+    pub items: u64,
+    /// Busy fraction per stage of the dominant generation (0..=1).
+    pub occupancy: Vec<f64>,
+    /// Busiest stage index of the dominant generation.
+    pub bottleneck_stage: usize,
+    /// Pipeline generations served (1 + drain-and-flush plan swaps).
+    pub generations: u64,
+    /// Items served by the dominant generation (the one the occupancy
+    /// snapshot describes).
+    pub items_dominant: u64,
+}
+
+impl PipelineSummary {
+    /// Fold one drained generation into the summary.
+    pub fn absorb(&mut self, stages: usize, items: u64, occupancy: Vec<f64>, bottleneck: usize) {
+        self.generations += 1;
+        let dominant = self.generations == 1 || items >= self.items_dominant;
+        self.items += items;
+        if dominant {
+            self.items_dominant = items;
+            self.stages = stages;
+            self.occupancy = occupancy;
+            self.bottleneck_stage = bottleneck;
+        }
+    }
+}
+
+impl std::fmt::Display for PipelineSummary {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let occ: Vec<String> =
+            self.occupancy.iter().map(|o| format!("{:.0}%", o * 100.0)).collect();
+        write!(
+            f,
+            "stages={} items={} generations={} bottleneck=s{} occupancy=[{}]",
+            self.stages,
+            self.items,
+            self.generations,
+            self.bottleneck_stage,
+            occ.join(" ")
+        )
+    }
+}
+
 /// Simple throughput window: items per second of wall-clock.
 #[derive(Debug)]
 pub struct Throughput {
@@ -185,6 +238,24 @@ mod tests {
         assert!((m.cache_hit_rate() - 0.75).abs() < 1e-12);
         let s = m.to_string();
         assert!(s.contains("cache=3/4"), "{s}");
+    }
+
+    #[test]
+    fn pipeline_summary_tracks_dominant_generation() {
+        let mut p = PipelineSummary::default();
+        p.absorb(3, 10, vec![0.5, 0.9, 0.2], 1);
+        assert_eq!((p.generations, p.items, p.stages), (1, 10, 3));
+        assert_eq!(p.bottleneck_stage, 1);
+        // a smaller generation must not displace the occupancy snapshot
+        p.absorb(2, 4, vec![0.1, 0.1], 0);
+        assert_eq!((p.generations, p.items, p.stages), (2, 14, 3));
+        assert_eq!(p.occupancy.len(), 3);
+        // a larger one does
+        p.absorb(4, 20, vec![0.3; 4], 2);
+        assert_eq!((p.generations, p.items, p.stages), (3, 34, 4));
+        assert_eq!(p.bottleneck_stage, 2);
+        let s = p.to_string();
+        assert!(s.contains("generations=3"), "{s}");
     }
 
     #[test]

@@ -54,12 +54,12 @@ pub fn import_json(v: &Json) -> Result<(Model, PassStats), String> {
 
     for (i, nj) in nodes_json.iter().enumerate() {
         let kind = nj.req("kind").map_err(|e| format!("node {i}: {e}"))?;
-        let kind = kind.as_str().ok_or(format!("node {i}: kind must be a string"))?;
+        let kind = kind.as_str().ok_or_else(|| format!("node {i}: kind must be a string"))?;
         let get_i64 = |key: &str| nj.get(key).and_then(Json::as_i64);
         let dim = |key: &str, inherited: Option<i64>| -> Result<i64, String> {
             get_i64(key)
                 .or(inherited)
-                .ok_or(format!("node {i} ({kind}): missing {key} and nothing to inherit"))
+                .ok_or_else(|| format!("node {i} ({kind}): missing {key} and nothing to inherit"))
         };
 
         match kind {
@@ -121,7 +121,7 @@ pub fn import_json(v: &Json) -> Result<(Model, PassStats), String> {
             }
             "batch_norm" | "activation" | "residual_add" => {
                 let (h, w, c) =
-                    cur.ok_or(format!("node {i}: {kind} before any layer"))?;
+                    cur.ok_or_else(|| format!("node {i}: {kind} before any layer"))?;
                 nodes.push(match kind {
                     "batch_norm" => RawNode::BatchNorm { h, w, c },
                     "activation" => RawNode::Activation { h, w, c },

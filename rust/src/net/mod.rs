@@ -383,7 +383,7 @@ mod tests {
     #[test]
     fn empty_exchange_is_free() {
         let tb = Testbed::new(4, Topology::Ring, Bandwidth::gbps(5.0));
-        assert_eq!(tb.exchange_time(&vec![0; 16]), 0.0);
+        assert_eq!(tb.exchange_time(&[0; 16]), 0.0);
     }
 
     #[test]

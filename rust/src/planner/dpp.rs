@@ -54,9 +54,22 @@
 //!   pruning decision is a pure function of the (deterministic) DP state —
 //!   no cross-thread timing can change which candidates are evaluated; and
 //! * a candidate that would improve an entry at its merge position can
-//!   never be pruned (its `base` would have to both exceed the incumbent
-//!   and stay below it — the same soundness argument as serial pruning),
-//!   so the merged adoption sequence is identical to the serial one.
+//!   never be pruned (its sync-free bound would have to both exceed the
+//!   incumbent and stay below it — the same soundness argument as serial
+//!   pruning), so the merged adoption sequence is identical to the serial
+//!   one.
+//!
+//! ## Objectives ([`DppConfig::objective`])
+//!
+//! The same DP serves two objectives. [`Objective::Latency`] folds a
+//! stage's cost into the tail with `+` (the paper's summed critical path);
+//! [`Objective::Throughput`] folds with `max`, minimizing the bottleneck
+//! pipeline-stage time (entry sync + block compute per block, gather as its
+//! own stage) that sets the block-pipelined executor's steady-state service
+//! rate. Both folds are monotone nondecreasing in the tail, so the optimal
+//! substructure argument — and therefore Theorem 1, the pruning soundness
+//! (each objective prunes on its own sync-free lower bound), and the
+//! parallel bit-identity argument — carries over unchanged.
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Barrier, Mutex};
@@ -64,7 +77,7 @@ use std::time::{Duration, Instant};
 
 use crate::cost::memo::MemoStats;
 use crate::cost::query::{boundary_query, compute_query_tiles, gather_query, scatter_query};
-use crate::cost::CostSource;
+use crate::cost::{CostSource, Objective};
 use crate::model::Model;
 use crate::partition::geometry::{in_regions, out_tiles};
 use crate::partition::{Mode, Plan, PlanStep, Scheme, Tile};
@@ -88,6 +101,13 @@ pub struct DppConfig {
     /// (default), `0` = one per available core, capped at the scheme count.
     /// Serial and parallel searches return bit-identical plans.
     pub workers: usize,
+    /// What the search minimizes: summed stages (latency, the paper's
+    /// objective) or the bottleneck stage (throughput of the pipelined
+    /// executor). The same DP, queries, memo and workers serve both — only
+    /// the fold of stage cost into tail cost changes (`+` vs `max`), which
+    /// preserves optimal substructure because both folds are monotone in the
+    /// tail.
+    pub objective: Objective,
 }
 
 impl Default for DppConfig {
@@ -98,6 +118,7 @@ impl Default for DppConfig {
             prune: true,
             max_block_span: 0,
             workers: 1,
+            objective: Objective::Latency,
         }
     }
 }
@@ -132,6 +153,27 @@ enum Cand {
     Root { total: f64 },
     /// A boundary candidate for `after[i][qi]`.
     Boundary { i: usize, qi: usize, total: f64 },
+}
+
+/// The objective's sync-free lower bound on any candidate of the current
+/// block extension (sync ≥ 0 under both folds) — the dynamic-threshold
+/// pruning test. Shared by the serial and parallel searches so their
+/// arithmetic (and the bit-identity invariant) cannot drift.
+fn fold_bound(objective: Objective, block_cost: f64, tail: f64) -> f64 {
+    match objective {
+        Objective::Latency => block_cost + tail,
+        Objective::Throughput => block_cost.max(tail),
+    }
+}
+
+/// Fold a candidate's sync cost into its DP total under the objective. The
+/// latency arm keeps the `sync + (block + tail)` association order the
+/// original search used, for bit-stability of `est_cost` across PRs.
+fn fold_total(objective: Objective, sync: f64, block_cost: f64, tail: f64) -> f64 {
+    match objective {
+        Objective::Latency => sync + (block_cost + tail),
+        Objective::Throughput => (sync + block_cost).max(tail),
+    }
 }
 
 /// The Dynamic Partition Planner.
@@ -244,14 +286,15 @@ impl<'a> Dpp<'a> {
                     let cq = compute_query_tiles(&layers[i], &cur_tiles, r, tb);
                     stats.compute_queries += 1;
                     block_cost += self.cost.compute_time(&cq);
-                    let base = block_cost + tail;
+                    let objective = self.cfg.objective;
 
-                    // Dynamic-threshold pruning: if compute+tail alone can no
-                    // longer beat any incumbent at this entry layer, skip the
-                    // (k) s-Estimator evaluations. Sound because sync ≥ 0.
+                    // Dynamic-threshold pruning: if the sync-free bound can
+                    // no longer beat any incumbent at this entry layer, skip
+                    // the (k) s-Estimator evaluations. Sound because sync ≥ 0
+                    // under both folds.
                     if self.cfg.prune {
                         let worst_incumbent = if i == 0 { root } else { worst[i] };
-                        if base >= worst_incumbent {
+                        if fold_bound(objective, block_cost, tail) >= worst_incumbent {
                             stats.candidates_pruned += 1;
                             continue;
                         }
@@ -263,7 +306,8 @@ impl<'a> Dpp<'a> {
                     if i == 0 {
                         let sq = scatter_query(&layers[0], r, &entry_need, tb);
                         stats.sync_queries += 1;
-                        let total = self.cost.sync_time(&sq) + base;
+                        let total =
+                            fold_total(objective, self.cost.sync_time(&sq), block_cost, tail);
                         if total < root {
                             root = total;
                             root_choice = (j, ri);
@@ -279,7 +323,8 @@ impl<'a> Dpp<'a> {
                                 tb,
                             );
                             stats.sync_queries += 1;
-                            let total = self.cost.sync_time(&bq) + base;
+                            let total =
+                                fold_total(objective, self.cost.sync_time(&bq), block_cost, tail);
                             if total < after[i][qi] {
                                 after[i][qi] = total;
                                 choice[i][qi] = (j, ri);
@@ -475,7 +520,7 @@ impl<'a> Dpp<'a> {
             let cq = compute_query_tiles(&layers[i], &cur_tiles, r, tb);
             out.compute_queries += 1;
             block_cost += self.cost.compute_time(&cq);
-            let base = block_cost + tail;
+            let objective = self.cfg.objective;
 
             if self.cfg.prune {
                 let worst = if i == 0 {
@@ -483,7 +528,7 @@ impl<'a> Dpp<'a> {
                 } else {
                     f64::from_bits(worst_bits[i].load(Ordering::Relaxed))
                 };
-                if base >= worst {
+                if fold_bound(objective, block_cost, tail) >= worst {
                     out.pruned += 1;
                     continue;
                 }
@@ -495,7 +540,7 @@ impl<'a> Dpp<'a> {
             if i == 0 {
                 let sq = scatter_query(&layers[0], r, &entry_need, tb);
                 out.sync_queries += 1;
-                let total = self.cost.sync_time(&sq) + base;
+                let total = fold_total(objective, self.cost.sync_time(&sq), block_cost, tail);
                 if total < root_start {
                     out.candidates.push(Cand::Root { total });
                 }
@@ -503,7 +548,7 @@ impl<'a> Dpp<'a> {
                 for (qi, &q) in schemes.iter().enumerate() {
                     let bq = boundary_query(&layers[i - 1], q, &layers[i], r, &entry_need, tb);
                     out.sync_queries += 1;
-                    let total = self.cost.sync_time(&bq) + base;
+                    let total = fold_total(objective, self.cost.sync_time(&bq), block_cost, tail);
                     let start = f64::from_bits(after_bits[i * k + qi].load(Ordering::Relaxed));
                     if total < start {
                         out.candidates.push(Cand::Boundary { i, qi, total });
@@ -716,6 +761,100 @@ mod tests {
         .plan();
         assert_eq!(par.est_cost.to_bits(), serial.est_cost.to_bits());
         assert_eq!(par.steps, serial.steps);
+    }
+
+    #[test]
+    fn throughput_objective_matches_exhaustive_bottleneck() {
+        // Theorem 1 under the bottleneck fold: the DP's throughput plan must
+        // tie the brute-force minimum over every legal plan.
+        use crate::cost::Objective;
+        use crate::planner::exhaustive::{bottleneck_cost, exhaustive_plan_with};
+        for (nodes, gbps) in [(4usize, 5.0f64), (3, 0.5)] {
+            let cost = analytic(nodes, gbps);
+            for model in [zoo::tiny_chain(4, 12, 8), zoo::edgenet(16).truncated(5)] {
+                let dpp = Dpp::with_config(
+                    &model,
+                    &cost,
+                    DppConfig { objective: Objective::Throughput, ..Default::default() },
+                )
+                .plan();
+                let brute = exhaustive_plan_with(
+                    &model,
+                    &cost,
+                    &Scheme::ALL,
+                    Objective::Throughput,
+                );
+                let dpp_bn = bottleneck_cost(&model, &dpp, &cost);
+                let tol = 1e-9 * brute.est_cost.max(1e-12);
+                assert!(
+                    (dpp_bn - brute.est_cost).abs() <= tol,
+                    "{} n={nodes} bw={gbps}: DPP {} ({}) vs exhaustive {} ({})",
+                    model.name,
+                    dpp_bn,
+                    dpp.render(),
+                    brute.est_cost,
+                    brute.render()
+                );
+                // the DP's own estimate equals the independent re-costing
+                assert!((dpp.est_cost - dpp_bn).abs() <= tol);
+            }
+        }
+    }
+
+    #[test]
+    fn throughput_objective_is_parallel_and_prune_transparent() {
+        use crate::cost::Objective;
+        let cost = analytic(4, 0.5);
+        let model = zoo::edgenet(16);
+        let serial = Dpp::with_config(
+            &model,
+            &cost,
+            DppConfig { objective: Objective::Throughput, workers: 1, ..Default::default() },
+        )
+        .plan();
+        for (workers, prune) in [(4usize, true), (4, false), (1, false)] {
+            let other = Dpp::with_config(
+                &model,
+                &cost,
+                DppConfig {
+                    objective: Objective::Throughput,
+                    workers,
+                    prune,
+                    ..Default::default()
+                },
+            )
+            .plan();
+            assert_eq!(
+                other.est_cost.to_bits(),
+                serial.est_cost.to_bits(),
+                "w={workers} prune={prune}"
+            );
+            assert_eq!(other.steps, serial.steps, "w={workers} prune={prune}");
+        }
+    }
+
+    #[test]
+    fn throughput_plan_bottleneck_never_worse_than_latency_plan() {
+        use crate::cost::Objective;
+        use crate::planner::exhaustive::bottleneck_cost;
+        let cost = analytic(4, 1.0);
+        let model = zoo::edgenet(16);
+        let lat = Dpp::new(&model, &cost).plan();
+        let thr = Dpp::with_config(
+            &model,
+            &cost,
+            DppConfig { objective: Objective::Throughput, ..Default::default() },
+        )
+        .plan();
+        let lat_bn = bottleneck_cost(&model, &lat, &cost);
+        assert!(
+            thr.est_cost <= lat_bn + 1e-12 * lat_bn,
+            "throughput plan bottleneck {} worse than latency plan's {}",
+            thr.est_cost,
+            lat_bn
+        );
+        // and the latency plan stays (weakly) ahead on end-to-end latency
+        assert!(lat.est_cost <= plan_cost(&model, &thr, &cost).total + 1e-9 * lat.est_cost);
     }
 
     #[test]

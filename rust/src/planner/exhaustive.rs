@@ -12,7 +12,7 @@
 //! exact same query builders the DP uses.
 
 use crate::cost::query::{boundary_query, compute_query, gather_query, scatter_query};
-use crate::cost::CostSource;
+use crate::cost::{CostSource, Objective};
 use crate::model::Model;
 use crate::partition::inflate::BlockGeometry;
 use crate::partition::{Mode, Plan, PlanStep, Scheme};
@@ -92,9 +92,79 @@ pub fn plan_cost(model: &Model, plan: &Plan, cost: &CostSource) -> PlanCost {
     out
 }
 
+/// Per-pipeline-stage seconds of `plan`: one entry per fused block (the
+/// block's entry synchronization — scatter for block 0, a realignment
+/// boundary otherwise — plus its layer compute), then the final gather as
+/// its own stage. The sum is [`plan_cost`]'s `total` up to float
+/// associativity; the max is the bottleneck the pipelined executor's
+/// steady-state throughput is set by.
+///
+/// Boundary transfers are attributed to the *consuming* stage: a producer
+/// hands its patches to the interconnect and proceeds to its next item
+/// (asynchronous sends), so a stage's virtual time is "wait for the entry
+/// boundary, then compute". This is also the attribution the DP's state
+/// space supports — an entry boundary depends only on the previous block's
+/// scheme (the `after[i][q]` state), whereas an exit boundary would depend
+/// on the *next* block choice. The host executor's wall-clock occupancy
+/// ([`crate::cluster::pipeline::PipelineStats`]) attributes patch
+/// *assembly* to the producing stage thread instead, so the measured
+/// bottleneck stage can sit one stage ahead of the virtual prediction when
+/// exchange assembly rivals compute.
+pub fn stage_costs(model: &Model, plan: &Plan, cost: &CostSource) -> Vec<f64> {
+    stage_costs_from(plan, &plan_cost(model, plan, cost))
+}
+
+/// [`stage_costs`] from an already-computed [`PlanCost`] of the same plan —
+/// callers that need both the total and the stage decomposition cost the
+/// plan once.
+pub fn stage_costs_from(plan: &Plan, pc: &PlanCost) -> Vec<f64> {
+    let blocks = plan.blocks();
+    let mut out = Vec::with_capacity(blocks.len() + 1);
+    for (bi, &(s, e, _)) in blocks.iter().enumerate() {
+        let mut t = pc.per_boundary_sync[bi];
+        for l in s..=e {
+            t += pc.per_layer_compute[l];
+        }
+        out.push(t);
+    }
+    out.push(*pc.per_boundary_sync.last().expect("plan has a gather boundary"));
+    out
+}
+
+/// The bottleneck (max) pipeline-stage time of `plan` — what
+/// [`Objective::Throughput`] minimizes.
+pub fn bottleneck_cost(model: &Model, plan: &Plan, cost: &CostSource) -> f64 {
+    stage_costs(model, plan, cost).into_iter().fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// Cost a plan under either objective: summed stages for latency (exactly
+/// [`plan_cost`]'s `total`), bottleneck stage for throughput.
+pub fn objective_cost(
+    model: &Model,
+    plan: &Plan,
+    cost: &CostSource,
+    objective: Objective,
+) -> f64 {
+    match objective {
+        Objective::Latency => plan_cost(model, plan, cost).total,
+        Objective::Throughput => bottleneck_cost(model, plan, cost),
+    }
+}
+
 /// Enumerate every legal plan and return the cheapest. `schemes` restricts
 /// the per-block scheme choices (defaults to all four).
 pub fn exhaustive_plan(model: &Model, cost: &CostSource, schemes: &[Scheme]) -> Plan {
+    exhaustive_plan_with(model, cost, schemes, Objective::Latency)
+}
+
+/// [`exhaustive_plan`] under an explicit [`Objective`] — the brute-force
+/// reference for the throughput (bottleneck) optimality tests.
+pub fn exhaustive_plan_with(
+    model: &Model,
+    cost: &CostSource,
+    schemes: &[Scheme],
+    objective: Objective,
+) -> Plan {
     let n = model.n_layers();
     assert!(n >= 1);
     assert!(
@@ -103,7 +173,7 @@ pub fn exhaustive_plan(model: &Model, cost: &CostSource, schemes: &[Scheme]) -> 
     );
     let mut best: Option<Plan> = None;
     let mut steps: Vec<PlanStep> = Vec::with_capacity(n);
-    enumerate(model, cost, schemes, 0, &mut steps, &mut best);
+    enumerate(model, cost, schemes, objective, 0, &mut steps, &mut best);
     best.expect("no plan found")
 }
 
@@ -111,6 +181,7 @@ fn enumerate(
     model: &Model,
     cost: &CostSource,
     schemes: &[Scheme],
+    objective: Objective,
     start: usize,
     steps: &mut Vec<PlanStep>,
     best: &mut Option<Plan>,
@@ -118,7 +189,7 @@ fn enumerate(
     let n = model.n_layers();
     if start == n {
         let mut plan = Plan { steps: steps.clone(), est_cost: f64::NAN };
-        let c = plan_cost(model, &plan, cost).total;
+        let c = objective_cost(model, &plan, cost, objective);
         plan.est_cost = c;
         if best.as_ref().map(|b| c < b.est_cost).unwrap_or(true) {
             *best = Some(plan);
@@ -131,7 +202,7 @@ fn enumerate(
                 steps.push(PlanStep { scheme, mode: Mode::NT });
             }
             steps.push(PlanStep { scheme, mode: Mode::T });
-            enumerate(model, cost, schemes, end + 1, steps, best);
+            enumerate(model, cost, schemes, objective, end + 1, steps, best);
             steps.truncate(start);
         }
     }
@@ -175,6 +246,36 @@ mod tests {
             let u = plan_cost(&model, &Plan::uniform(s, 4), &cost).total;
             assert!(ex.est_cost <= u + 1e-12);
         }
+    }
+
+    #[test]
+    fn stage_costs_sum_to_total_and_bound_bottleneck() {
+        let cost = analytic(4, 1.0);
+        let model = zoo::tiny_chain(4, 12, 8);
+        let plan = Plan::uniform(Scheme::InH, 4);
+        let pc = plan_cost(&model, &plan, &cost);
+        let stages = stage_costs(&model, &plan, &cost);
+        // 4 all-T blocks + the gather stage
+        assert_eq!(stages.len(), 5);
+        let sum: f64 = stages.iter().sum();
+        assert!((sum - pc.total).abs() < 1e-12 * pc.total);
+        let bn = bottleneck_cost(&model, &plan, &cost);
+        assert!(stages.iter().all(|&s| s <= bn));
+        assert!(bn < pc.total, "a multi-stage plan's bottleneck is below its sum");
+        assert_eq!(objective_cost(&model, &plan, &cost, Objective::Throughput), bn);
+        assert_eq!(objective_cost(&model, &plan, &cost, Objective::Latency), pc.total);
+    }
+
+    #[test]
+    fn exhaustive_throughput_never_worse_on_bottleneck() {
+        // the throughput-objective brute force must (weakly) beat the
+        // latency-objective winner on the bottleneck metric
+        let cost = analytic(3, 0.5);
+        let model = zoo::tiny_chain(4, 12, 8);
+        let lat = exhaustive_plan(&model, &cost, &Scheme::ALL);
+        let thr = exhaustive_plan_with(&model, &cost, &Scheme::ALL, Objective::Throughput);
+        let lat_bn = bottleneck_cost(&model, &lat, &cost);
+        assert!(thr.est_cost <= lat_bn + 1e-12 * lat_bn);
     }
 
     #[test]

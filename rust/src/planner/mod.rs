@@ -32,7 +32,7 @@ pub use dpp::{Dpp, DppConfig, SearchStats};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
-use crate::cost::{CostSource, MemoStore};
+use crate::cost::{CostSource, MemoStore, Objective};
 use crate::model::Model;
 use crate::net::Testbed;
 use crate::partition::Plan;
@@ -81,8 +81,22 @@ pub fn plan_for_testbed_opts(
     testbed: &Testbed,
     opts: &PlannerOpts,
 ) -> (Plan, SearchStats) {
+    plan_with_objective(model, testbed, Objective::Latency, opts)
+}
+
+/// Plan under an explicit [`Objective`]: `Latency` reproduces
+/// [`plan_for_testbed_opts`]; `Throughput` minimizes the bottleneck
+/// pipeline-stage time for the block-pipelined executor
+/// ([`crate::cluster::pipeline`]). `est_cost` on the returned plan is the
+/// objective's own metric (summed stages vs bottleneck stage seconds).
+pub fn plan_with_objective(
+    model: &Model,
+    testbed: &Testbed,
+    objective: Objective,
+    opts: &PlannerOpts,
+) -> (Plan, SearchStats) {
     let cost = opts.cost_for(testbed);
-    let cfg = DppConfig { workers: opts.workers, ..DppConfig::default() };
+    let cfg = DppConfig { workers: opts.workers, objective, ..DppConfig::default() };
     Dpp::with_config(model, &cost, cfg).plan_with_stats()
 }
 
@@ -139,6 +153,44 @@ pub fn prewarm_memo(model: &Model, testbed: &Testbed, store: &Arc<MemoStore>) ->
     Dpp::with_config(model, &cost, cfg).plan_with_stats().1
 }
 
+/// [`prewarm_memo`] with cross-process persistence (the ROADMAP's
+/// cross-model memo persistence item): entries saved by a previous process
+/// are absorbed into `store` first, then the prewarm sweep runs over the
+/// warm store — when the file already covers this `(model, testbed)` the
+/// sweep performs **zero cold estimator queries** (every answer is a cache
+/// hit or an analytic rescale), and the file is rewritten only when the
+/// sweep actually added entries. Returns `true` when the disk store fully
+/// covered the model (nothing cold, nothing re-saved).
+///
+/// The file composes: prewarming several models (or testbeds) against the
+/// same path merges their query universes — entries are namespaced by
+/// testbed signature and keyed by exact query geometry, so each first-time
+/// model extends the file and every later process starts warm for all of
+/// them.
+///
+/// The file is rewritten when the sweep performed any cold query or the
+/// file was absent; entries that reached `store` by other means (e.g. a
+/// plain [`prewarm_memo`] of another model before this call) are persisted
+/// only on those rewrites — use one persistent path per store for exact
+/// mirroring.
+pub fn prewarm_memo_persistent(
+    model: &Model,
+    testbed: &Testbed,
+    store: &Arc<MemoStore>,
+    path: &std::path::Path,
+) -> std::io::Result<bool> {
+    let existed = path.exists();
+    if existed {
+        store.load_into(path)?;
+    }
+    let stats = prewarm_memo(model, testbed, store);
+    let covered = stats.memo.compute_misses == 0 && stats.memo.sync_misses == 0;
+    if !existed || !covered {
+        store.save(path)?;
+    }
+    Ok(existed && covered)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -168,6 +220,29 @@ mod tests {
     }
 
     #[test]
+    fn objective_threads_through_to_the_search() {
+        let model = zoo::edgenet(16);
+        let testbed = tb(0.5);
+        let (thr, _) = plan_with_objective(
+            &model,
+            &testbed,
+            Objective::Throughput,
+            &PlannerOpts::default(),
+        );
+        let direct = Dpp::with_config(
+            &model,
+            &CostSource::analytic(&testbed),
+            DppConfig { objective: Objective::Throughput, ..Default::default() },
+        )
+        .plan();
+        assert_eq!(thr.est_cost.to_bits(), direct.est_cost.to_bits());
+        assert_eq!(thr.steps, direct.steps);
+        // latency is the default objective
+        let (lat, _) = plan_for_testbed_opts(&model, &testbed, &PlannerOpts::default());
+        assert_eq!(lat.steps, plan_for_testbed(&model, &testbed).steps);
+    }
+
+    #[test]
     fn plan_batch_matches_individual_planning() {
         let model = zoo::edgenet(16);
         let cells: Vec<Testbed> = [1.0, 0.5, 0.25, 0.125]
@@ -182,6 +257,72 @@ mod tests {
             assert_eq!(plan.est_cost.to_bits(), solo.est_cost.to_bits());
             assert_eq!(plan.steps, solo.steps);
         }
+    }
+
+    #[test]
+    fn persisted_memo_store_replans_with_zero_cold_queries() {
+        // the ROADMAP acceptance: a reloaded store replans with zero cold
+        // estimator queries, across a bandwidth sweep, with plans
+        // bit-identical to fresh searches
+        let model = zoo::edgenet(16);
+        let base = tb(1.0);
+        let dir = crate::util::tmp::TempDir::new("memo_persist");
+        let p = dir.path().join("edgenet.memo.json");
+        let store = MemoStore::shared();
+        assert!(
+            !prewarm_memo_persistent(&model, &base, &store, &p).unwrap(),
+            "first prewarm is a fresh search"
+        );
+        assert!(p.exists(), "prewarm must persist the store");
+
+        // a fresh process: a new store warmed purely from disk
+        let reloaded = MemoStore::shared();
+        assert!(
+            prewarm_memo_persistent(&model, &base, &reloaded, &p).unwrap(),
+            "second prewarm must come from disk"
+        );
+        assert_eq!(reloaded.len(), store.len());
+        let opts = PlannerOpts { workers: 0, memo: Some(reloaded) };
+        for factor in [1.0, 0.5, 0.25] {
+            let drifted = base.with_bandwidth_factor(factor);
+            let (plan, stats) = plan_for_testbed_opts(&model, &drifted, &opts);
+            assert_eq!(
+                stats.memo.compute_misses, 0,
+                "cold compute query after reload ({factor}×): {}",
+                stats.memo
+            );
+            assert_eq!(
+                stats.memo.sync_misses, 0,
+                "cold sync query after reload ({factor}×): {}",
+                stats.memo
+            );
+            let fresh = Dpp::new(&model, &CostSource::analytic(&drifted)).plan();
+            assert_eq!(plan.est_cost.to_bits(), fresh.est_cost.to_bits());
+            assert_eq!(plan.steps, fresh.steps);
+        }
+    }
+
+    #[test]
+    fn persisted_memo_store_composes_across_models() {
+        // the cross-model claim: one file accumulates several models'
+        // query universes; later processes start warm for all of them
+        let base = tb(1.0);
+        let dir = crate::util::tmp::TempDir::new("memo_multi");
+        let p = dir.path().join("shared.memo.json");
+        let a = zoo::tiny_chain(3, 12, 8);
+        let b = zoo::tiny_chain(5, 16, 8);
+        assert!(
+            !prewarm_memo_persistent(&a, &base, &MemoStore::shared(), &p).unwrap(),
+            "first model is cold"
+        );
+        assert!(
+            !prewarm_memo_persistent(&b, &base, &MemoStore::shared(), &p).unwrap(),
+            "a new model must extend the file, not be reported warm"
+        );
+        // a third process starts warm for BOTH models from one load
+        let store = MemoStore::shared();
+        assert!(prewarm_memo_persistent(&a, &base, &store, &p).unwrap());
+        assert!(prewarm_memo_persistent(&b, &base, &store, &p).unwrap());
     }
 
     #[test]

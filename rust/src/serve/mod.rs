@@ -1,37 +1,57 @@
-//! Serving front-end: request router + dynamic batcher (vLLM-router style).
+//! Serving front-end: request router + dynamic batcher + block pipeline.
 //!
 //! The paper's engine serves one inference at a time; a deployable system
-//! needs admission, queueing and batching in front of the cluster. The
-//! [`Server`] owns a router thread: requests are admitted into a bounded
-//! queue, the batcher drains up to `max_batch` requests (or waits out
-//! `batch_window` for stragglers), executes the batch on the simulated
-//! cluster, and completes each request with its output plus queueing/service
-//! timing. Python is nowhere on this path.
+//! needs admission, queueing, batching and — under load — pipelining in
+//! front of the cluster. The [`Server`] owns a router thread: requests are
+//! admitted into a bounded queue, the batcher drains up to `max_batch`
+//! requests (or waits out `batch_window` for stragglers), and the batch is
+//! executed on the simulated cluster. Python is nowhere on this path.
 //!
-//! Two plan sources drive the router:
+//! Two execution modes ([`ServeConfig::pipeline_depth`]):
+//!
+//! * **Lockstep** (`pipeline_depth <= 1`): the router runs each batch to
+//!   completion before forming the next — the latency-serving shape, and
+//!   the paper's assumption.
+//! * **Pipelined** (`pipeline_depth > 1`): the router *feeds* a
+//!   [`BlockPipeline`] — one persistent stage thread per plan block — and
+//!   completes requests as they stream out, so consecutive batches overlap
+//!   across plan blocks and steady-state throughput is set by the
+//!   bottleneck stage. Per-stage occupancy and drain accounting ride back
+//!   on [`RouterStats::pipeline`].
+//!
+//! Two plan sources drive either mode:
 //!
 //! * [`Server::start`] — the static path: one frozen plan for one frozen
-//!   testbed, forever (the paper's assumption).
-//! * [`Server::start_elastic`] — the condition-aware path: an
-//!   [`ElasticFrontend`] is consulted at every batch boundary. The frontend
-//!   samples the condition trace on a virtual clock (advanced by the
-//!   predicted per-item cost of each executed batch) and acquires the
-//!   current plan from the background replanner's atomic plan slot — a
-//!   single atomic epoch load in the steady state. All monitoring,
-//!   replanning and speculative n−1 failover planning happen on the
-//!   dedicated planner thread, so a batch boundary never executes a DPP
-//!   search inline; plan swaps still land only *between* batches.
-//!   Adaptation counters plus the boundary-stall distribution ride back on
-//!   [`RouterStats`] at shutdown.
+//!   testbed, forever.
+//! * [`Server::start_elastic`] — the condition-aware path. In lockstep the
+//!   [`ElasticFrontend`] is consulted at every batch boundary (a single
+//!   atomic epoch load in the steady state; swaps land between batches).
+//!   In pipelined mode a plan swap becomes a **drain-and-flush**: a cheap
+//!   per-batch probe ([`ElasticFrontend::needs_flush`]) watches the
+//!   liveness mask and the background planner's publication epoch, and
+//!   only when one moves does the router drain the in-flight generation,
+//!   consult the frontend once for the new generation, and rebuild the
+//!   pipeline on the new plan/node set — so the frontend is consulted per
+//!   drained generation rather than per batch, and no request is ever lost
+//!   across a swap.
+//!
+//! [`Server::shutdown`] stops the router after the batch in flight:
+//! requests still sitting in the admission queue are drained and failed
+//! explicitly (their response channels drop, so `submit()` callers observe
+//! a clean disconnect instead of hanging), counted in
+//! [`RouterStats::failed_on_shutdown`].
 
-use std::sync::mpsc::{channel, Receiver, Sender, TrySendError};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TrySendError};
 use std::sync::{mpsc::sync_channel, Arc};
 use std::time::{Duration, Instant};
 
+use crate::cluster::pipeline::{BlockPipeline, Completion};
 use crate::compute::{Tensor, WeightStore};
 use crate::elastic::{ConditionTrace, ElasticConfig, ElasticFrontend};
 use crate::engine;
-use crate::metrics::{AdaptationMetrics, Summary};
+use crate::metrics::{AdaptationMetrics, PipelineSummary, Summary};
 use crate::model::Model;
 use crate::net::Testbed;
 use crate::partition::Plan;
@@ -45,6 +65,11 @@ pub struct ServeConfig {
     pub batch_window: Duration,
     /// Bounded admission queue depth (backpressure beyond this).
     pub queue_depth: usize,
+    /// In-flight batch budget of the block pipeline: `<= 1` serves in
+    /// lockstep (batch at a time); `> 1` feeds the per-block pipeline with
+    /// up to this many submissions queued at its entry (each stage holds
+    /// one more in flight).
+    pub pipeline_depth: usize,
 }
 
 impl Default for ServeConfig {
@@ -53,6 +78,7 @@ impl Default for ServeConfig {
             max_batch: 8,
             batch_window: Duration::from_millis(2),
             queue_depth: 128,
+            pipeline_depth: 1,
         }
     }
 }
@@ -61,9 +87,11 @@ impl Default for ServeConfig {
 #[derive(Debug)]
 pub struct Response {
     pub output: Tensor,
-    /// Time spent queued before the batch formed.
+    /// Time spent queued before the batch formed (lockstep) or before the
+    /// request entered the pipeline (pipelined).
     pub queued: Duration,
-    /// Host wall-clock service time of the batch that carried this request.
+    /// Host wall-clock service time: the whole batch's execution in
+    /// lockstep, submission-to-completion through the pipeline otherwise.
     pub service: Duration,
     /// Virtual-clock (simulated-testbed) inference time per item, under the
     /// conditions the batch actually ran in.
@@ -88,25 +116,34 @@ pub enum AdmitError {
     Stopped,
 }
 
-/// The serving handle. Cloneable handles submit requests; dropping the last
-/// handle and calling [`Server::shutdown`] stops the router.
+/// The serving handle. Dropping the server (or calling
+/// [`Server::shutdown`]) stops the router.
 pub struct Server {
     tx: std::sync::mpsc::SyncSender<Request>,
+    stop: Arc<AtomicBool>,
     router: Option<std::thread::JoinHandle<RouterStats>>,
 }
 
 /// Router counters.
-#[derive(Debug, Default, Clone, Copy)]
+#[derive(Debug, Default, Clone)]
 pub struct RouterStats {
     pub requests: u64,
     pub batches: u64,
     pub max_batch_seen: usize,
-    /// Present on the elastic path: replan/cache/failover counters.
+    /// Admitted requests failed (response channel dropped) because
+    /// [`Server::shutdown`] stopped the router before they were served.
+    pub failed_on_shutdown: u64,
+    /// Present on the elastic path: replan/cache/failover counters. On the
+    /// pipelined path `checks` counts frontend consultations, which happen
+    /// once per drained generation rather than per batch.
     pub adaptation: Option<AdaptationMetrics>,
     /// Present on the elastic path: how long batch boundaries spent
     /// acquiring their plan (the stall the background replanner is meant to
     /// eliminate — steady state is one atomic load).
     pub boundary_stall: Option<Summary>,
+    /// Present on the pipelined path: per-stage occupancy, bottleneck stage
+    /// and drain-and-flush generation counts.
+    pub pipeline: Option<PipelineSummary>,
 }
 
 /// Where the router gets the plan for the next batch.
@@ -145,7 +182,7 @@ impl Server {
     /// Start the condition-aware serving path: plan for the trace's `t = 0`
     /// conditions, then monitor/replan/swap on the background planner
     /// thread, consulted (wait-free in the steady state) at every batch
-    /// boundary.
+    /// boundary — or once per drained generation in pipelined mode.
     pub fn start_elastic(
         model: Model,
         weights: WeightStore,
@@ -160,11 +197,13 @@ impl Server {
 
     fn spawn(model: Model, weights: WeightStore, cfg: ServeConfig, source: PlanSource) -> Server {
         let (tx, rx) = sync_channel::<Request>(cfg.queue_depth);
+        let stop = Arc::new(AtomicBool::new(false));
+        let router_stop = stop.clone();
         let router = std::thread::spawn(move || {
             let weights = Arc::new(weights);
-            router_main(rx, &model, &weights, &cfg, source)
+            router_main(rx, &model, &weights, &cfg, source, &router_stop)
         });
-        Server { tx, router: Some(router) }
+        Server { tx, stop, router: Some(router) }
     }
 
     /// Submit one inference and wait for its completion.
@@ -184,10 +223,15 @@ impl Server {
         }
     }
 
-    /// Stop the router and return its counters.
+    /// Stop the router and return its counters. The batch (and pipeline
+    /// generation) in flight completes; requests still waiting in the
+    /// admission queue are drained and failed explicitly — their response
+    /// channels disconnect, so no `submit()` caller ever hangs on a dead
+    /// receiver.
     pub fn shutdown(mut self) -> RouterStats {
         let handle = self.router.take().unwrap();
-        drop(self); // drops the queue sender → router drains and exits
+        self.stop.store(true, Ordering::Release);
+        drop(self); // drops the queue sender → the router's drain terminates
         handle.join().expect("router panicked")
     }
 }
@@ -200,30 +244,97 @@ fn router_main(
     model: &Model,
     weights: &Arc<WeightStore>,
     cfg: &ServeConfig,
+    source: PlanSource,
+    stop: &AtomicBool,
+) -> RouterStats {
+    if cfg.pipeline_depth > 1 {
+        router_pipelined(rx, model, weights, cfg, source, stop)
+    } else {
+        router_lockstep(rx, model, weights, cfg, source, stop)
+    }
+}
+
+/// Collect one batch: block for the first request, then wait out the window.
+fn collect_batch(rx: &Receiver<Request>, cfg: &ServeConfig) -> Option<Vec<Request>> {
+    let first = rx.recv().ok()?;
+    let mut batch = vec![first];
+    fill_batch(rx, cfg, &mut batch);
+    Some(batch)
+}
+
+/// Top a started batch up to `max_batch`, waiting out the batch window.
+fn fill_batch(rx: &Receiver<Request>, cfg: &ServeConfig, batch: &mut Vec<Request>) {
+    let deadline = Instant::now() + cfg.batch_window;
+    while batch.len() < cfg.max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(r) => batch.push(r),
+            Err(_) => break,
+        }
+    }
+}
+
+/// How often the pipelined router wakes from the admission queue to reap
+/// completions while inferences are in flight. Responses are therefore
+/// delivered at most this long after their completion even when no new
+/// request arrives to drive the loop.
+const REAP_TICK: Duration = Duration::from_micros(500);
+
+/// Wait for the next request while the pipeline works: completions are
+/// reaped continuously, so a response is never withheld behind an idle
+/// admission queue (a client doing submit-then-recv must not deadlock the
+/// router). Blocks outright only when nothing is in flight. Returns `None`
+/// once the queue has disconnected.
+fn next_request_reaping(
+    rx: &Receiver<Request>,
+    pipe: &mut Option<BlockPipeline>,
+    pending: &mut VecDeque<Pending>,
+) -> Option<Request> {
+    loop {
+        if let Some(p) = pipe.as_mut() {
+            while let Some(c) = p.try_complete() {
+                complete_front(pending, c);
+            }
+        }
+        if pending.is_empty() {
+            // pipeline idle — nothing to reap, block cheaply on the queue
+            return rx.recv().ok();
+        }
+        match rx.recv_timeout(REAP_TICK) {
+            Ok(r) => return Some(r),
+            Err(RecvTimeoutError::Timeout) => continue,
+            // disconnected: the final drain below the loop completes the
+            // in-flight work
+            Err(RecvTimeoutError::Disconnected) => return None,
+        }
+    }
+}
+
+/// Fail every request still sitting in the admission queue: dropping a
+/// request drops its response sender, so the submitter's receiver
+/// disconnects instead of hanging. Blocks until the queue sender is gone
+/// ([`Server::shutdown`] drops it right after setting the stop flag), so
+/// the accounting also covers a submit racing the shutdown.
+fn fail_queued(rx: Receiver<Request>, stats: &mut RouterStats) {
+    for _req in rx.iter() {
+        stats.failed_on_shutdown += 1;
+    }
+}
+
+fn router_lockstep(
+    rx: Receiver<Request>,
+    model: &Model,
+    weights: &Arc<WeightStore>,
+    cfg: &ServeConfig,
     mut source: PlanSource,
+    stop: &AtomicBool,
 ) -> RouterStats {
     let mut stats = RouterStats::default();
 
-    loop {
-        // block for the first request of the batch
-        let first = match rx.recv() {
-            Ok(r) => r,
-            // all senders gone — drain the planner and report below
-            Err(_) => break,
-        };
-        let mut batch = vec![first];
-        let deadline = Instant::now() + cfg.batch_window;
-        while batch.len() < cfg.max_batch {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(r) => batch.push(r),
-                Err(_) => break,
-            }
-        }
-
+    while let Some(batch) = collect_batch(&rx, cfg) {
         stats.batches += 1;
         stats.requests += batch.len() as u64;
         stats.max_batch_seen = stats.max_batch_seen.max(batch.len());
@@ -269,10 +380,163 @@ fn router_main(
                 nodes,
             });
         }
+        if stop.load(Ordering::Acquire) {
+            break;
+        }
     }
 
-    // shutdown: stop the background planner (draining its queued asks) and
-    // fold its counters into the router stats
+    // shutdown: fail whatever the stop flag stranded in the queue, then
+    // stop the background planner (draining its queued asks) and fold its
+    // counters into the router stats
+    fail_queued(rx, &mut stats);
+    if let PlanSource::Elastic { fe, .. } = source {
+        let (adaptation, stall) = fe.finish();
+        stats.adaptation = Some(adaptation);
+        stats.boundary_stall = Some(stall);
+    }
+    stats
+}
+
+/// Bookkeeping for one request inside the pipeline, completed in FIFO
+/// order as completions stream out.
+struct Pending {
+    resp: Sender<Response>,
+    enqueued: Instant,
+    submitted: Instant,
+    batch_size: usize,
+    nodes: usize,
+    virtual_time: f64,
+}
+
+fn complete_front(pending: &mut VecDeque<Pending>, c: Completion) {
+    let p = pending.pop_front().expect("completion without a pending request");
+    let _ = p.resp.send(Response {
+        output: c.output,
+        queued: p.submitted.duration_since(p.enqueued),
+        service: p.submitted.elapsed(),
+        virtual_time: p.virtual_time,
+        batch_size: p.batch_size,
+        nodes: p.nodes,
+    });
+}
+
+/// Drain one pipeline generation: complete everything in flight, then fold
+/// the stage statistics into the summary.
+fn drain_generation(
+    pipe: BlockPipeline,
+    pending: &mut VecDeque<Pending>,
+    summary: &mut PipelineSummary,
+) {
+    let (rest, pstats) = pipe.finish();
+    for c in rest {
+        complete_front(pending, c);
+    }
+    debug_assert!(pending.is_empty(), "drained generation left requests pending");
+    summary.absorb(
+        pstats.stages.len(),
+        pstats.items,
+        pstats.occupancy(),
+        pstats.bottleneck_stage(),
+    );
+}
+
+fn router_pipelined(
+    rx: Receiver<Request>,
+    model: &Model,
+    weights: &Arc<WeightStore>,
+    cfg: &ServeConfig,
+    mut source: PlanSource,
+    stop: &AtomicBool,
+) -> RouterStats {
+    let mut stats = RouterStats::default();
+    let mut summary = PipelineSummary::default();
+    let mut pending: VecDeque<Pending> = VecDeque::new();
+    let mut pipe: Option<BlockPipeline> = None;
+    // current generation's execution parameters
+    let mut gen_nodes = 0usize;
+    let mut gen_cost = 0.0f64;
+
+    while let Some(first) = next_request_reaping(&rx, &mut pipe, &mut pending) {
+        let mut batch = vec![first];
+        fill_batch(&rx, cfg, &mut batch);
+        stats.batches += 1;
+        stats.max_batch_seen = stats.max_batch_seen.max(batch.len());
+
+        // Generation boundary: start (or drain-and-flush) the pipeline.
+        match &mut source {
+            PlanSource::Static { plan, nodes, virtual_time } => {
+                if pipe.is_none() {
+                    gen_nodes = *nodes;
+                    gen_cost = *virtual_time;
+                    pipe = Some(BlockPipeline::start(
+                        model,
+                        plan,
+                        weights,
+                        *nodes,
+                        cfg.pipeline_depth,
+                    ));
+                }
+            }
+            PlanSource::Elastic { fe, vt } => {
+                if let Some(running) = pipe.take() {
+                    if fe.needs_flush(*vt) {
+                        // Drain-and-flush: finish every in-flight inference
+                        // under the old plan, then consult the frontend for
+                        // the new generation below.
+                        drain_generation(running, &mut pending, &mut summary);
+                    } else {
+                        pipe = Some(running);
+                    }
+                }
+                if pipe.is_none() {
+                    let decision = fe.acquire(*vt);
+                    gen_nodes = decision.nodes;
+                    gen_cost = decision.cost_per_item;
+                    pipe = Some(BlockPipeline::start(
+                        model,
+                        &decision.plan,
+                        weights,
+                        decision.nodes,
+                        cfg.pipeline_depth,
+                    ));
+                }
+                *vt += gen_cost * batch.len() as f64;
+            }
+        }
+
+        let p = pipe.as_mut().expect("generation pipeline running");
+        let batch_size = batch.len();
+        let submitted = Instant::now();
+        for req in batch {
+            p.submit(req.input); // blocks on backpressure past pipeline_depth
+            pending.push_back(Pending {
+                resp: req.resp,
+                enqueued: req.enqueued,
+                submitted,
+                batch_size,
+                nodes: gen_nodes,
+                virtual_time: gen_cost,
+            });
+            stats.requests += 1;
+        }
+        // Reap whatever has streamed out while feeding.
+        while let Some(c) = p.try_complete() {
+            complete_front(&mut pending, c);
+        }
+        if stop.load(Ordering::Acquire) {
+            break;
+        }
+    }
+
+    // Final drain: everything admitted into the pipeline completes; only
+    // requests still in the admission queue are failed.
+    if let Some(running) = pipe.take() {
+        drain_generation(running, &mut pending, &mut summary);
+    }
+    fail_queued(rx, &mut stats);
+    if summary.generations > 0 {
+        stats.pipeline = Some(summary);
+    }
     if let PlanSource::Elastic { fe, .. } = source {
         let (adaptation, stall) = fe.finish();
         stats.adaptation = Some(adaptation);
@@ -306,6 +570,7 @@ mod tests {
         let stats = server.shutdown();
         assert_eq!(stats.requests, 1);
         assert!(stats.adaptation.is_none(), "static path reports no adaptation");
+        assert!(stats.pipeline.is_none(), "lockstep path reports no pipeline");
     }
 
     #[test]
@@ -324,6 +589,7 @@ mod tests {
             max_batch: 4,
             batch_window: Duration::from_millis(200),
             queue_depth: 16,
+            ..ServeConfig::default()
         };
         let (server, _) = setup(cfg);
         let rxs: Vec<_> = (0..4)
@@ -344,6 +610,7 @@ mod tests {
             max_batch: 8,
             batch_window: Duration::from_millis(150),
             queue_depth: 16,
+            ..ServeConfig::default()
         };
         let (server, _) = setup(cfg);
         let resp = server.infer(Tensor::random(16, 16, 3, 9)).unwrap();
@@ -363,6 +630,7 @@ mod tests {
             max_batch: 1,
             batch_window: Duration::ZERO,
             queue_depth: 1,
+            ..ServeConfig::default()
         };
         let (server, _) = setup(cfg);
         // flood: at least one should hit QueueFull (router can't drain fast
@@ -394,6 +662,7 @@ mod tests {
             max_batch: 1,
             batch_window: Duration::ZERO,
             queue_depth: 1,
+            ..ServeConfig::default()
         };
         let (server, _) = setup(cfg);
         let mut rxs = Vec::new();
@@ -417,6 +686,111 @@ mod tests {
     }
 
     #[test]
+    fn shutdown_fails_queued_requests_without_hanging() {
+        // Fill the admission queue, shut down immediately, and account for
+        // every request: served ones respond, stranded ones disconnect —
+        // nobody hangs on a dead receiver.
+        let cfg = ServeConfig {
+            max_batch: 1,
+            batch_window: Duration::ZERO,
+            queue_depth: 32,
+            ..ServeConfig::default()
+        };
+        let (server, _) = setup(cfg);
+        let total = 24u64;
+        let mut rxs = Vec::new();
+        for i in 0..total {
+            match server.submit(Tensor::random(16, 16, 3, i)) {
+                Ok(rx) => rxs.push(rx),
+                Err(e) => panic!("queue_depth covers the burst: {e:?}"),
+            }
+        }
+        let stats = server.shutdown();
+        let served = rxs.iter().filter(|rx| rx.recv().is_ok()).count() as u64;
+        assert_eq!(stats.requests, served);
+        assert_eq!(
+            stats.requests + stats.failed_on_shutdown,
+            total,
+            "every admitted request must be served or explicitly failed: {stats:?}"
+        );
+    }
+
+    #[test]
+    fn pipelined_static_serving_matches_reference() {
+        let cfg = ServeConfig {
+            max_batch: 2,
+            batch_window: Duration::ZERO,
+            queue_depth: 32,
+            pipeline_depth: 4,
+        };
+        let (server, model) = setup(cfg);
+        let ws = WeightStore::for_model(&model, 5);
+        let inputs: Vec<Tensor> =
+            (0..8u64).map(|i| Tensor::random(16, 16, 3, 40 + i)).collect();
+        // submit asynchronously so batches genuinely overlap in the pipeline
+        let rxs: Vec<_> =
+            inputs.iter().map(|t| server.submit(t.clone()).unwrap()).collect();
+        for (input, rx) in inputs.iter().zip(rxs) {
+            let resp = rx.recv().expect("request lost in the pipeline");
+            let reference = crate::compute::run_reference(&model, &ws, input);
+            assert_eq!(reference.max_abs_diff(&resp.output), 0.0);
+            assert_eq!(resp.nodes, 4);
+            assert!(resp.virtual_time > 0.0);
+        }
+        let stats = server.shutdown();
+        assert_eq!(stats.requests, 8);
+        let p = stats.pipeline.expect("pipelined path reports stage stats");
+        assert_eq!(p.generations, 1, "static path never flushes");
+        assert_eq!(p.items, 8);
+        // uniform InH over edgenet: one stage per all-T block
+        assert_eq!(p.stages, zoo::edgenet(16).n_layers());
+        assert!(p.bottleneck_stage < p.stages);
+        assert_eq!(p.occupancy.len(), p.stages);
+    }
+
+    #[test]
+    fn pipelined_elastic_stable_trace_is_one_generation() {
+        let model = zoo::edgenet(16);
+        let base = Testbed::new(4, Topology::Ring, Bandwidth::gbps(5.0));
+        let cfg = ServeConfig {
+            max_batch: 1,
+            batch_window: Duration::ZERO,
+            queue_depth: 32,
+            pipeline_depth: 3,
+        };
+        let server = Server::start_elastic(
+            model.clone(),
+            WeightStore::for_model(&model, 5),
+            base,
+            ConditionTrace::stable(4),
+            cfg,
+            ElasticConfig::default(),
+        );
+        let ws = WeightStore::for_model(&model, 5);
+        let inputs: Vec<Tensor> =
+            (0..6u64).map(|i| Tensor::random(16, 16, 3, 90 + i)).collect();
+        let rxs: Vec<_> =
+            inputs.iter().map(|t| server.submit(t.clone()).unwrap()).collect();
+        for (input, rx) in inputs.iter().zip(rxs) {
+            let resp = rx.recv().expect("request lost");
+            let reference = crate::compute::run_reference(&model, &ws, input);
+            assert_eq!(reference.max_abs_diff(&resp.output), 0.0);
+            assert_eq!(resp.nodes, 4);
+        }
+        let stats = server.shutdown();
+        assert_eq!(stats.requests, 6);
+        let p = stats.pipeline.expect("pipeline stats present");
+        assert_eq!(p.generations, 1, "stable conditions must never flush");
+        let m = stats.adaptation.expect("elastic path reports adaptation");
+        assert_eq!(
+            m.checks, 1,
+            "pipelined mode consults the frontend once per generation: {m}"
+        );
+        assert_eq!(m.plan_swaps, 0);
+        assert_eq!(m.failovers, 0);
+    }
+
+    #[test]
     fn elastic_on_stable_trace_matches_static_server() {
         // identical inputs through the static and elastic paths must yield
         // bit-identical outputs, and a stable trace must never swap
@@ -426,6 +800,7 @@ mod tests {
             max_batch: 1,
             batch_window: Duration::ZERO,
             queue_depth: 16,
+            ..ServeConfig::default()
         };
         let plan = crate::planner::plan_for_testbed(&model, &base);
         let static_srv = Server::start(
@@ -473,6 +848,7 @@ mod tests {
             max_batch: 1,
             batch_window: Duration::ZERO,
             queue_depth: 16,
+            ..ServeConfig::default()
         };
         let server = Server::start_elastic(
             model.clone(),

@@ -27,6 +27,7 @@ fn per_request_batches() -> ServeConfig {
         max_batch: 1,
         batch_window: Duration::ZERO,
         queue_depth: 16,
+        ..ServeConfig::default()
     }
 }
 
@@ -203,6 +204,92 @@ fn node_loss_failover_is_served_from_speculative_cache() {
     );
     assert_eq!(m.inline_replans, 0, "{m}");
     assert_eq!(stalls.count, 2);
+}
+
+#[test]
+fn pipelined_serving_survives_failover_with_drain_and_flush() {
+    // The pipelined acceptance property: under pipeline_depth > 1 a plan
+    // swap becomes a drain-and-flush (in-flight inferences complete under
+    // the old plan, the pipeline rebuilds on the new plan/node set), the
+    // frontend is consulted once per drained generation rather than per
+    // batch, and no request is lost or corrupted across the swap.
+    let model = zoo::edgenet(16);
+    let base = Testbed::new(4, Topology::Ring, Bandwidth::gbps(1.0));
+    let plan4 = plan_for_testbed(&model, &base);
+    let c4 = engine::evaluate(&model, &plan4, &base).total;
+    let tb3 = base.subset(&[true, true, false, true]);
+    let plan3 = plan_for_testbed(&model, &tb3);
+    let c3 = engine::evaluate(&model, &plan3, &tb3).total;
+
+    // node 2 dies during the fourth batch's window, rejoins ~3 batches later
+    let down_at = 2.5 * c4;
+    let up_at = 3.0 * c4 + 2.5 * c3;
+    let trace = ConditionTrace::stable(4).with_outage(2, down_at, up_at);
+
+    let cfg = ServeConfig {
+        max_batch: 1,
+        batch_window: Duration::ZERO,
+        queue_depth: 32,
+        pipeline_depth: 4,
+    };
+    let server = Server::start_elastic(
+        model.clone(),
+        WeightStore::for_model(&model, 5),
+        base,
+        trace,
+        cfg,
+        ElasticConfig::default(),
+    );
+
+    // submit the whole stream up front so batches genuinely overlap inside
+    // the pipeline; responses come back in submission order per channel
+    let ws = WeightStore::for_model(&model, 5);
+    let n_requests = 10u64;
+    let inputs: Vec<Tensor> = (0..n_requests)
+        .map(|i| Tensor::random(16, 16, 3, 5000 + i))
+        .collect();
+    let rxs: Vec<_> = inputs
+        .iter()
+        .map(|t| server.submit(t.clone()).expect("admission failed"))
+        .collect();
+    let mut nodes_seen = Vec::new();
+    for (i, (input, rx)) in inputs.iter().zip(rxs).enumerate() {
+        let resp = rx.recv().expect("request lost across drain-and-flush");
+        let reference = run_reference(&model, &ws, input);
+        assert_eq!(
+            reference.max_abs_diff(&resp.output),
+            0.0,
+            "request {i} output diverged"
+        );
+        nodes_seen.push(resp.nodes);
+    }
+    assert_eq!(nodes_seen.len(), n_requests as usize, "lost requests");
+    // batches 0..=2 run healthy (vt = 0, c4, 2c4 < down_at); batch 3 sees
+    // the outage at its generation probe and serves on 3 nodes
+    assert_eq!(&nodes_seen[..3], &[4, 4, 4], "pre-failure generations degraded early");
+    assert_eq!(nodes_seen[3], 3, "failover missed its drain boundary");
+    assert!(
+        nodes_seen[3..].contains(&4),
+        "node rejoin never observed: {nodes_seen:?}"
+    );
+
+    let stats = server.shutdown();
+    assert_eq!(stats.requests, n_requests);
+    assert_eq!(stats.failed_on_shutdown, 0);
+    let p = stats.pipeline.expect("pipelined path reports stage stats");
+    assert!(
+        p.generations >= 3,
+        "down + up swaps must each flush a generation: {p}"
+    );
+    assert_eq!(p.items, n_requests);
+    let m = stats.adaptation.expect("elastic path reports adaptation metrics");
+    assert_eq!(
+        m.checks, p.generations,
+        "pipelined mode consults the frontend once per generation: {m}"
+    );
+    assert!(m.checks < n_requests, "frontend consulted per batch, not per generation");
+    assert!(m.failovers >= 2, "expected down + up failovers: {m}");
+    assert_eq!(m.inline_replans, 0, "{m}");
 }
 
 #[test]

@@ -190,7 +190,12 @@ fn serving_end_to_end_with_dpp_plan() {
         plan,
         weights,
         testbed,
-        ServeConfig { max_batch: 4, batch_window: Duration::from_millis(5), queue_depth: 64 },
+        ServeConfig {
+            max_batch: 4,
+            batch_window: Duration::from_millis(5),
+            queue_depth: 64,
+            ..ServeConfig::default()
+        },
     );
     let mut rxs = Vec::new();
     for i in 0..12u64 {
