@@ -1,0 +1,129 @@
+//! Failover machinery cost — what losing a node (the leader included)
+//! costs the serving path, plus a full audited chaos drill.
+//!
+//! Single-line `RESULT` JSON carries:
+//!
+//! * steady-state failover decide time at a batch boundary, leader-loss vs
+//!   worker-loss, both served from the warm plan cache,
+//! * wall-clock of aborting vs draining a pipeline generation with work in
+//!   flight (the leader-death vs worker-death boundary),
+//! * a full seeded chaos drill through the pipelined elastic server:
+//!   request throughput and the audited counters (lost must be 0).
+//!
+//! ```bash
+//! cargo bench --bench chaos_failover
+//! FLEXPIE_BENCH_FAST=1 cargo bench --bench chaos_failover   # CI smoke
+//! ```
+
+use std::time::{Duration, Instant};
+
+use flexpie::cluster::pipeline::BlockPipeline;
+use flexpie::compute::{Tensor, WeightStore};
+use flexpie::config::ChaosExperiment;
+use flexpie::elastic::{run_chaos, ConditionTrace, ElasticConfig, ElasticController};
+use flexpie::engine;
+use flexpie::model::zoo;
+use flexpie::net::{Bandwidth, Testbed, Topology};
+use flexpie::planner::plan_for_testbed;
+use flexpie::serve::ServeConfig;
+use flexpie::util::bench::{black_box, BenchRunner};
+use flexpie::util::json::Json;
+
+fn main() {
+    let fast = std::env::var("FLEXPIE_BENCH_FAST").is_ok();
+    let r = BenchRunner::new("chaos_failover");
+    let model = zoo::edgenet(16);
+    let base = Testbed::new(4, Topology::Ring, Bandwidth::gbps(1.0));
+    let plan = plan_for_testbed(&model, &base);
+    let c4 = engine::evaluate(&model, &plan, &base).total;
+
+    // --- steady-state failover decide: leader vs worker loss --------------
+    // Alternate healthy/dead snapshots so every on_batch is a node-set
+    // failover served from the warm plan cache — the boundary cost a real
+    // outage pays once both cells have been planned.
+    let ltrace = ConditionTrace::stable(4).with_outage(0, 1.0, 2.0);
+    let mut lctl =
+        ElasticController::new(model.clone(), base.clone(), ltrace, ElasticConfig::default());
+    lctl.on_batch(0.5);
+    lctl.on_batch(1.5); // cold 3-node plan
+    lctl.on_batch(0.5); // warm swap back
+    let mut flip = false;
+    let leader_failover = r.bench("failover_decide/leader_warm", || {
+        flip = !flip;
+        lctl.on_batch(if flip { 1.5 } else { 0.5 })
+    });
+
+    let wtrace = ConditionTrace::stable(4).with_outage(2, 1.0, 2.0);
+    let mut wctl =
+        ElasticController::new(model.clone(), base.clone(), wtrace, ElasticConfig::default());
+    wctl.on_batch(0.5);
+    wctl.on_batch(1.5);
+    wctl.on_batch(0.5);
+    let mut wflip = false;
+    let worker_failover = r.bench("failover_decide/worker_warm", || {
+        wflip = !wflip;
+        wctl.on_batch(if wflip { 1.5 } else { 0.5 })
+    });
+
+    // --- generation boundary: abort (leader died) vs drain (worker died) --
+    let ws = WeightStore::for_model(&model, 5);
+    let in_flight = 3usize;
+    let ins: Vec<Tensor> =
+        (0..in_flight as u64).map(|i| Tensor::random(16, 16, 3, 70 + i)).collect();
+    let abort = r.bench("generation/abort_3_in_flight", || {
+        let mut p = BlockPipeline::start(&model, &plan, &ws, 4, 4);
+        for t in &ins {
+            p.submit(t.clone());
+        }
+        black_box(p.abort())
+    });
+    let drain = r.bench("generation/drain_3_in_flight", || {
+        let mut p = BlockPipeline::start(&model, &plan, &ws, 4, 4);
+        for t in &ins {
+            p.submit(t.clone());
+        }
+        black_box(p.finish())
+    });
+
+    // --- full audited chaos drill through the pipelined server ------------
+    let exp = ChaosExperiment {
+        requests: if fast { 12 } else { 32 },
+        ..Default::default()
+    };
+    let schedule = exp.schedule(c4);
+    let cfg = ServeConfig {
+        max_batch: 1,
+        batch_window: Duration::ZERO,
+        queue_depth: 64,
+        pipeline_depth: exp.pipeline_depth,
+    };
+    let t0 = Instant::now();
+    let out = run_chaos(
+        &model,
+        &base,
+        &schedule,
+        cfg,
+        ElasticConfig::default(),
+        exp.requests as u64,
+        4_242,
+    );
+    let wall = t0.elapsed().as_secs_f64().max(1e-9);
+    out.verify().expect("chaos invariants violated in bench");
+    println!("chaos drill: {out}");
+
+    let summary = Json::obj(vec![
+        ("leader_failover_decide_us", Json::Num(leader_failover.mean_secs() * 1e6)),
+        ("worker_failover_decide_us", Json::Num(worker_failover.mean_secs() * 1e6)),
+        ("abort_3_in_flight_ms", Json::Num(abort.mean_secs() * 1e3)),
+        ("drain_3_in_flight_ms", Json::Num(drain.mean_secs() * 1e3)),
+        ("chaos_requests", Json::Num(out.requests as f64)),
+        ("chaos_req_per_s", Json::Num(out.ok as f64 / wall)),
+        ("chaos_events", Json::Num(out.events as f64)),
+        ("chaos_failovers", Json::Num(out.failovers as f64)),
+        ("chaos_leader_handoffs", Json::Num(out.leader_handoffs as f64)),
+        ("chaos_speculative_hits", Json::Num(out.speculative_hits as f64)),
+        ("chaos_failed_reported", Json::Num(out.failed_reported as f64)),
+        ("chaos_lost", Json::Num(out.lost as f64)),
+    ]);
+    println!("RESULT {}", summary.to_string());
+}

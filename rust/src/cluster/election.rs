@@ -1,0 +1,128 @@
+//! Deterministic leader election — no node is immortal.
+//!
+//! The leader owns scatter/ingress and gather, so losing it used to take
+//! the whole cluster down. Election here is rank-based over the surviving
+//! node set: every node derives the same leader from the same liveness
+//! mask with zero communication (exactly how every node already derives
+//! the plan geometry independently), so there is no coordination protocol
+//! to fail during a failure.
+//!
+//! * [`elect_leader`] — the pure rule: the lowest-ranked surviving node.
+//!   Under [`crate::net::Testbed::subset`] compaction that node becomes
+//!   logical node 0, which is precisely the slot the executors' scatter
+//!   and gather already address — election and execution cannot disagree.
+//! * [`Leadership`] — the observer state machine: feed it liveness masks,
+//!   it reports handoffs and numbers them with a monotonically increasing
+//!   term. A rejoining lower rank (including original node 0) reclaims
+//!   leadership — deterministic, at the cost of one extra handoff, which
+//!   the serving layer treats as an ordinary drain boundary.
+
+/// The rank-based election rule: the lowest-ranked surviving node leads.
+/// Returns `None` only for an empty surviving set (which the condition
+/// layer's survivor-of-last-resort rule prevents in practice).
+pub fn elect_leader(alive: &[bool]) -> Option<usize> {
+    alive.iter().position(|&a| a)
+}
+
+/// One leadership handoff observed by [`Leadership::observe`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LeaderChange {
+    /// Original rank of the outgoing leader.
+    pub from: usize,
+    /// Original rank of the newly elected leader.
+    pub to: usize,
+    /// Term the new leader serves under (strictly increasing).
+    pub term: u64,
+}
+
+/// Leadership state derived from a stream of liveness masks.
+#[derive(Debug, Clone)]
+pub struct Leadership {
+    leader: usize,
+    term: u64,
+}
+
+impl Leadership {
+    /// Elect the initial leader (term 1) from `alive`.
+    pub fn new(alive: &[bool]) -> Leadership {
+        let leader = elect_leader(alive).expect("no surviving node to lead");
+        Leadership { leader, term: 1 }
+    }
+
+    /// Original rank of the current leader.
+    pub fn leader(&self) -> usize {
+        self.leader
+    }
+
+    /// Current term (bumps on every handoff).
+    pub fn term(&self) -> u64 {
+        self.term
+    }
+
+    /// Re-run the election for `alive`; returns the handoff if leadership
+    /// moved. An empty surviving set keeps the current leader (the caller's
+    /// condition layer guarantees at least one survivor).
+    pub fn observe(&mut self, alive: &[bool]) -> Option<LeaderChange> {
+        let new = elect_leader(alive)?;
+        if new == self.leader {
+            return None;
+        }
+        let from = self.leader;
+        self.leader = new;
+        self.term += 1;
+        Some(LeaderChange { from, to: new, term: self.term })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lowest_surviving_rank_leads() {
+        assert_eq!(elect_leader(&[true, true, true]), Some(0));
+        assert_eq!(elect_leader(&[false, true, true]), Some(1));
+        assert_eq!(elect_leader(&[false, false, true]), Some(2));
+        assert_eq!(elect_leader(&[false, false]), None);
+    }
+
+    #[test]
+    fn handoff_on_leader_death_and_reclaim_on_rejoin() {
+        let mut l = Leadership::new(&[true, true, true, true]);
+        assert_eq!((l.leader(), l.term()), (0, 1));
+        // a worker death is not a handoff
+        assert_eq!(l.observe(&[true, false, true, true]), None);
+        // the leader dies: next-lowest surviving rank takes over
+        let c = l.observe(&[false, false, true, true]).expect("handoff missed");
+        assert_eq!((c.from, c.to, c.term), (0, 2, 2));
+        assert_eq!(l.leader(), 2);
+        // original node 0 rejoins and reclaims leadership deterministically
+        let c = l.observe(&[true, false, true, true]).expect("reclaim missed");
+        assert_eq!((c.from, c.to, c.term), (2, 0, 3));
+        assert_eq!(l.term(), 3);
+    }
+
+    #[test]
+    fn empty_survivor_set_keeps_current_leader() {
+        let mut l = Leadership::new(&[false, true]);
+        assert_eq!(l.leader(), 1);
+        assert_eq!(l.observe(&[false, false]), None);
+        assert_eq!((l.leader(), l.term()), (1, 1));
+    }
+
+    #[test]
+    fn election_matches_subset_compaction() {
+        // the elected leader is exactly the node that compacts to logical 0
+        // under Testbed::subset — the slot scatter/gather address
+        let cases = [
+            [true, true, true, true],
+            [false, true, true, true],
+            [false, false, true, true],
+        ];
+        for alive in cases {
+            let leader = elect_leader(&alive).unwrap();
+            let compacted_rank_of_leader = alive[..leader].iter().filter(|&&a| a).count();
+            assert_eq!(compacted_rank_of_leader, 0);
+        }
+    }
+}

@@ -1,13 +1,14 @@
 //! Simulated edge cluster — the TMS320C6678-testbed substitute.
 //!
-//! `N` worker threads stand in for the `N` edge devices. The leader (node 0)
-//! holds the model input, scatters each node's entry requirement, and
-//! gathers the final output; between blocks, nodes exchange *real tensor
-//! halos* over channels according to the exact message matrices the cost
-//! model prices. Every node derives the plan geometry independently (as the
-//! paper's devices do from the deployed partition scheme), so the exchange
-//! protocol is deterministic: each node knows precisely how many patches to
-//! expect at every boundary.
+//! `N` worker threads stand in for the `N` edge devices. The leader
+//! (logical node 0 — under failure, the lowest-ranked survivor elected by
+//! [`election::elect_leader`]) holds the model input, scatters each node's
+//! entry requirement, and gathers the final output; between blocks, nodes
+//! exchange *real tensor halos* over channels according to the exact
+//! message matrices the cost model prices. Every node derives the plan
+//! geometry independently (as the paper's devices do from the deployed
+//! partition scheme), so the exchange protocol is deterministic: each node
+//! knows precisely how many patches to expect at every boundary.
 //!
 //! Wall-clock timing of these threads is *not* the reported inference time —
 //! the host is one shared CPU, not four DSPs. Reported times come from the
@@ -18,6 +19,7 @@
 //! serving, [`pipeline`] reorganizes the same computation into per-block
 //! stage threads so consecutive inferences overlap across plan blocks.
 
+pub mod election;
 pub mod pipeline;
 
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -118,9 +120,14 @@ pub fn run_distributed(
 /// drops out. Node identity only selects a tile index, so a failed device's
 /// share of work redistributes by running the same deterministic protocol on
 /// the smaller logical cluster (ids compact in original order, matching
-/// [`crate::net::Testbed::subset`]). The plan itself is node-count-agnostic
-/// (`Plan::validate` is structural), so any valid plan executes — though an
-/// optimal swap-in plan should come from replanning on the degraded testbed.
+/// [`crate::net::Testbed::subset`]). The compaction also implements leader
+/// failover: the lowest-ranked survivor — exactly the node
+/// [`election::elect_leader`] picks — lands at logical 0 and owns
+/// scatter/gather, so a mask with `alive[0] == false` runs with the new
+/// leader in place and no special casing. The plan itself is
+/// node-count-agnostic (`Plan::validate` is structural), so any valid plan
+/// executes — though an optimal swap-in plan should come from replanning on
+/// the degraded testbed.
 pub fn run_degraded(
     model: &Model,
     plan: &Plan,
@@ -410,6 +417,22 @@ mod tests {
         let reference = run_reference(&model, &ws, &input);
         let plan = Plan::uniform(Scheme::InH, model.n_layers());
         let run = run_degraded(&model, &plan, &ws, &input, &[true, true, false, true]);
+        assert_eq!(reference.max_abs_diff(&run.output), 0.0);
+    }
+
+    #[test]
+    fn dead_leader_cluster_still_matches_reference() {
+        // kill node 0: the lowest-ranked survivor (original rank 1) compacts
+        // to logical 0 and takes over scatter/gather — the numerics don't
+        // change, because node identity only selects a tile index
+        let model = zoo::edgenet(16);
+        let ws = WeightStore::for_model(&model, 11);
+        let input = Tensor::random(16, 16, 3, 42);
+        let reference = run_reference(&model, &ws, &input);
+        let plan = Plan::uniform(Scheme::InH, model.n_layers());
+        let alive = [false, true, true, true];
+        assert_eq!(super::election::elect_leader(&alive), Some(1));
+        let run = run_degraded(&model, &plan, &ws, &input, &alive);
         assert_eq!(reference.max_abs_diff(&run.output), 0.0);
     }
 

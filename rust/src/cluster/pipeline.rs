@@ -29,6 +29,16 @@
 //! Completions leave in submission order (channels are FIFO and every stage
 //! is serial), which [`BlockPipeline::wait_complete`] asserts.
 //!
+//! A pipeline generation is bound to one leader — the scatter/gather owner,
+//! logical node 0, whose original rank
+//! ([`crate::cluster::election::elect_leader`] over the liveness mask)
+//! rides on [`BlockPipeline::start_with_leader`]. Losing a *worker* is a
+//! normal drain ([`BlockPipeline::finish`]: in-flight inferences complete
+//! under the old plan); losing the *leader* is an [`BlockPipeline::abort`]
+//! (in-flight completions are discarded — the gather owner holding them is
+//! gone — and the serving layer fails those requests explicitly before
+//! rebuilding on the surviving node set).
+//!
 //! ## Why the numerics are bit-identical to lockstep
 //!
 //! A stage computes each node's tiles with the same [`compute_region`]
@@ -98,16 +108,23 @@ pub struct StageStats {
     pub msgs_sent: usize,
 }
 
-/// Whole-pipeline statistics from [`BlockPipeline::finish`].
+/// Whole-pipeline statistics from [`BlockPipeline::finish`] or
+/// [`BlockPipeline::abort`].
 #[derive(Debug, Clone)]
 pub struct PipelineStats {
     pub stages: Vec<StageStats>,
-    /// Completed inferences.
+    /// Inferences whose completions were *delivered* to the pipeline's
+    /// consumer — on an abort, in-flight completions are discarded and do
+    /// not count.
     pub items: u64,
     /// Wall time from pipeline start to drain.
     pub elapsed: Duration,
     pub depth: usize,
     pub nodes: usize,
+    /// Original rank of the node acting as leader (scatter/gather owner)
+    /// for this pipeline generation — logical node 0 after
+    /// [`crate::net::Testbed::subset`] compaction.
+    pub leader: usize,
 }
 
 impl PipelineStats {
@@ -169,19 +186,36 @@ pub struct BlockPipeline {
     completed: u64,
     nodes: usize,
     depth: usize,
+    leader: usize,
 }
 
 impl BlockPipeline {
-    /// Start the stage threads for `plan` on an `nodes`-device cluster.
-    /// `depth` bounds how many submissions may queue at the entry before
-    /// [`Self::submit`] blocks (each stage additionally holds one resident
-    /// item).
+    /// Start the stage threads for `plan` on an `nodes`-device cluster with
+    /// the baseline leader (original rank 0). `depth` bounds how many
+    /// submissions may queue at the entry before [`Self::submit`] blocks
+    /// (each stage additionally holds one resident item).
     pub fn start(
         model: &Model,
         plan: &Plan,
         weights: &WeightStore,
         nodes: usize,
         depth: usize,
+    ) -> BlockPipeline {
+        Self::start_with_leader(model, plan, weights, nodes, depth, 0)
+    }
+
+    /// [`Self::start`] with an explicit leader identity: `leader` is the
+    /// *original* rank of the node acting as scatter/gather owner for this
+    /// generation (after a failover, the lowest-ranked survivor). Execution
+    /// addresses the leader as logical node 0 — the identity is carried for
+    /// observability and for the serving layer's leader-loss accounting.
+    pub fn start_with_leader(
+        model: &Model,
+        plan: &Plan,
+        weights: &WeightStore,
+        nodes: usize,
+        depth: usize,
+        leader: usize,
     ) -> BlockPipeline {
         plan.validate().expect("invalid plan");
         assert_eq!(plan.steps.len(), model.n_layers());
@@ -227,11 +261,17 @@ impl BlockPipeline {
             completed: 0,
             nodes,
             depth,
+            leader,
         }
     }
 
     pub fn nodes(&self) -> usize {
         self.nodes
+    }
+
+    /// Original rank of this generation's leader (scatter/gather owner).
+    pub fn leader(&self) -> usize {
+        self.leader
     }
 
     pub fn submitted(&self) -> u64 {
@@ -301,18 +341,36 @@ impl BlockPipeline {
         while let Some(c) = self.wait_complete() {
             rest.push(c);
         }
+        let stats = self.collect_stats(self.completed);
+        (rest, stats)
+    }
+
+    /// Abort the generation after its leader died: close the entry, drain
+    /// and *discard* the in-flight completions (their outputs lived on the
+    /// dead gather owner and must not be delivered), join the stage threads
+    /// and return `(aborted_in_flight, stats)`. `stats.items` counts only
+    /// the completions delivered before the abort.
+    pub fn abort(mut self) -> (u64, PipelineStats) {
+        let delivered = self.completed;
+        drop(self.input.take());
+        while self.wait_complete().is_some() {}
+        let stats = self.collect_stats(delivered);
+        (self.submitted - delivered, stats)
+    }
+
+    fn collect_stats(&mut self, delivered: u64) -> PipelineStats {
         let mut stages = Vec::with_capacity(self.handles.len());
         for h in self.handles.drain(..) {
             stages.push(h.join().expect("pipeline stage panicked"));
         }
-        let stats = PipelineStats {
+        PipelineStats {
             stages,
-            items: self.completed,
+            items: delivered,
             elapsed: self.started.elapsed(),
             depth: self.depth,
             nodes: self.nodes,
-        };
-        (rest, stats)
+            leader: self.leader,
+        }
     }
 }
 
@@ -623,5 +681,97 @@ mod tests {
         assert!(rest.is_empty());
         assert_eq!(stats.items, 0);
         assert_eq!(stats.stages.len(), plan.blocks().len());
+    }
+
+    #[test]
+    fn depth_one_pipeline_streams_correctly() {
+        // the drain-and-flush edge case the serving router hits with
+        // pipeline_depth just past lockstep: depth = 1 still overlaps
+        // stages, still completes in order, still matches lockstep exactly
+        let model = zoo::edgenet(16);
+        let ws = WeightStore::for_model(&model, 13);
+        let plan = Plan::uniform(Scheme::InH, model.n_layers());
+        let ins = inputs(&model, 4, 700);
+        let (outs, stats) = run_pipelined(&model, &plan, &ws, &ins, 4, 1);
+        assert_eq!(outs.len(), 4);
+        assert_eq!(stats.depth, 1);
+        for (i, (c, input)) in outs.iter().zip(&ins).enumerate() {
+            assert_eq!(c.seq, i as u64);
+            let lockstep = run_distributed(&model, &plan, &ws, input, 4);
+            assert_eq!(lockstep.output.max_abs_diff(&c.output), 0.0, "item {i}");
+            assert_eq!(c.bytes_exchanged, lockstep.bytes_exchanged);
+        }
+    }
+
+    #[test]
+    fn flush_with_zero_in_flight_and_rebuild_with_different_block_count() {
+        // a generation boundary that finds nothing in flight (the router's
+        // needs_flush can fire before any submission) must drain cleanly and
+        // rebuild onto a plan with a different stage count
+        let model = zoo::edgenet(16);
+        let ws = WeightStore::for_model(&model, 7);
+        let n = model.n_layers();
+        let plan_a = Plan::uniform(Scheme::InH, n);
+        let stages_a = plan_a.blocks().len();
+        // plan B fuses the first four layers: strictly fewer blocks
+        let mut plan_b = Plan::uniform(Scheme::InH, n);
+        plan_b.steps[0].mode = Mode::NT;
+        plan_b.steps[1].mode = Mode::NT;
+        plan_b.steps[2].mode = Mode::NT;
+        plan_b.validate().unwrap();
+        let stages_b = plan_b.blocks().len();
+        assert_ne!(stages_a, stages_b, "plans must differ in block count");
+
+        // generation 1: empty flush
+        let gen1 = BlockPipeline::start(&model, &plan_a, &ws, 4, 2);
+        let (rest, s1) = gen1.finish();
+        assert!(rest.is_empty());
+        assert_eq!((s1.items, s1.stages.len()), (0, stages_a));
+
+        // generation 2: rebuild on plan B, serve, drain with work in flight
+        let ins = inputs(&model, 3, 810);
+        let mut gen2 = BlockPipeline::start(&model, &plan_b, &ws, 4, 2);
+        for t in &ins {
+            gen2.submit(t.clone());
+        }
+        let (rest, s2) = gen2.finish();
+        assert_eq!(rest.len(), 3);
+        assert_eq!(s2.stages.len(), stages_b);
+        for (c, input) in rest.iter().zip(&ins) {
+            let reference = run_reference(&model, &ws, input);
+            assert_eq!(reference.max_abs_diff(&c.output), 0.0);
+        }
+    }
+
+    #[test]
+    fn abort_discards_in_flight_and_accounts_for_them() {
+        let model = zoo::edgenet(16);
+        let ws = WeightStore::for_model(&model, 5);
+        let plan = Plan::uniform(Scheme::InH, model.n_layers());
+        let mut pipe = BlockPipeline::start_with_leader(&model, &plan, &ws, 4, 4, 0);
+        assert_eq!(pipe.leader(), 0);
+        let ins = inputs(&model, 3, 60);
+        for t in &ins {
+            pipe.submit(t.clone());
+        }
+        // deliver exactly one completion, then abort with two in flight
+        let first = pipe.wait_complete().expect("one completion due");
+        assert_eq!(first.seq, 0);
+        let (aborted, stats) = pipe.abort();
+        assert_eq!(aborted, 2, "in-flight completions must be counted, not delivered");
+        assert_eq!(stats.items, 1, "only the delivered completion counts");
+        assert_eq!(stats.leader, 0);
+    }
+
+    #[test]
+    fn abort_with_nothing_in_flight_is_a_clean_drain() {
+        let model = zoo::edgenet(16);
+        let ws = WeightStore::for_model(&model, 5);
+        let plan = Plan::uniform(Scheme::InH, model.n_layers());
+        let pipe = BlockPipeline::start_with_leader(&model, &plan, &ws, 3, 1, 2);
+        let (aborted, stats) = pipe.abort();
+        assert_eq!(aborted, 0);
+        assert_eq!(stats.items, 0);
+        assert_eq!(stats.leader, 2, "leader identity must ride on the stats");
     }
 }

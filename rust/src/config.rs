@@ -271,6 +271,89 @@ impl PipelineExperiment {
     }
 }
 
+/// A chaos-drill experiment: the fault-schedule shape and serving knobs
+/// behind `benches/chaos_failover.rs`, `examples/chaos_drill.rs` and the
+/// `chaos_e2e` CI job. Slot lengths are expressed as a multiple of the
+/// healthy plan's per-item cost, so the same experiment file drives any
+/// model/testbed at the same faults-per-batch density.
+#[derive(Debug, Clone)]
+pub struct ChaosExperiment {
+    pub nodes: usize,
+    pub seed: u64,
+    /// Fault-schedule slots ([`crate::elastic::ChaosSchedule::generate`]).
+    pub slots: usize,
+    /// Slot length as a multiple of the healthy per-item virtual cost.
+    pub slot_cost_factor: f64,
+    /// Requests pushed through per run.
+    pub requests: usize,
+    /// Pipeline depth of the serving path (`<= 1` = lockstep).
+    pub pipeline_depth: usize,
+}
+
+impl Default for ChaosExperiment {
+    fn default() -> Self {
+        ChaosExperiment {
+            nodes: 4,
+            seed: 11,
+            slots: 8,
+            slot_cost_factor: 2.0,
+            requests: 24,
+            pipeline_depth: 3,
+        }
+    }
+}
+
+impl ChaosExperiment {
+    /// Generate the deterministic schedule, given the healthy plan's
+    /// per-item virtual cost on the target testbed.
+    pub fn schedule(&self, healthy_cost: f64) -> crate::elastic::ChaosSchedule {
+        crate::elastic::ChaosSchedule::generate(
+            self.nodes,
+            self.seed,
+            self.slots,
+            self.slot_cost_factor * healthy_cost,
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("nodes", Json::Num(self.nodes as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("slots", Json::Num(self.slots as f64)),
+            ("slot_cost_factor", Json::Num(self.slot_cost_factor)),
+            ("requests", Json::Num(self.requests as f64)),
+            ("pipeline_depth", Json::Num(self.pipeline_depth as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<ChaosExperiment, String> {
+        let num = |key: &str| v.req(key)?.as_f64().ok_or_else(|| key.to_string());
+        let exp = ChaosExperiment {
+            nodes: num("nodes")? as usize,
+            seed: num("seed")? as u64,
+            slots: num("slots")? as usize,
+            slot_cost_factor: num("slot_cost_factor")?,
+            requests: num("requests")? as usize,
+            pipeline_depth: num("pipeline_depth")? as usize,
+        };
+        if exp.nodes < 2 {
+            return Err("chaos needs at least two nodes".into());
+        }
+        if exp.slots < 6 {
+            return Err("too few slots to guarantee a leader strike".into());
+        }
+        if !(exp.slot_cost_factor > 0.0 && exp.slot_cost_factor.is_finite()) {
+            return Err("slot_cost_factor must be a positive finite number".into());
+        }
+        Ok(exp)
+    }
+
+    pub fn load(path: &std::path::Path) -> std::io::Result<ChaosExperiment> {
+        let v = Json::load(path)?;
+        Self::from_json(&v).map_err(std::io::Error::other)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -333,5 +416,28 @@ mod tests {
         assert_eq!(trace.nodes, 4);
         assert_eq!(trace.profile, Profile::DiurnalDrift);
         assert!(ElasticExperiment { profile: "bogus".into(), ..e }.trace(4).is_err());
+    }
+
+    #[test]
+    fn chaos_experiment_roundtrip_and_schedule() {
+        let e = ChaosExperiment { seed: 23, slots: 9, ..Default::default() };
+        let e2 = ChaosExperiment::from_json(&e.to_json()).unwrap();
+        assert_eq!((e2.nodes, e2.seed, e2.slots), (4, 23, 9));
+        assert_eq!(e2.pipeline_depth, e.pipeline_depth);
+        let s = e2.schedule(0.01);
+        assert_eq!(s.nodes, 4);
+        assert!((s.slot - 0.02).abs() < 1e-15);
+        assert!(s.kills_leader(), "experiment schedules must strike the leader");
+        // degenerate shapes are rejected
+        let mut j = e.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("slots".into(), Json::Num(2.0));
+        }
+        assert!(ChaosExperiment::from_json(&j).is_err());
+        let mut j = e.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("slot_cost_factor".into(), Json::Num(0.0));
+        }
+        assert!(ChaosExperiment::from_json(&j).is_err(), "zero slot length must be rejected");
     }
 }

@@ -362,6 +362,18 @@ impl MemoStore {
         let bad = |what: &str| {
             std::io::Error::other(format!("memo store {}: bad {what}", path.display()))
         };
+        // Strict numeric-array parsing: `Json::as_f64_vec` silently *drops*
+        // non-numeric elements, so a NaN-bearing entry (NaN serializes as
+        // `null`) would shrink its array and be absorbed under a wrong key.
+        // Keys are trusted bit-for-bit — reject instead.
+        let strict_nums = |j: Option<&Json>, what: &str| -> std::io::Result<Vec<f64>> {
+            let arr = j.and_then(Json::as_arr).ok_or_else(|| bad(what))?;
+            let mut out = Vec::with_capacity(arr.len());
+            for x in arr {
+                out.push(x.as_f64().ok_or_else(|| bad(what))?);
+            }
+            Ok(out)
+        };
         // cached values are trusted bit-for-bit, so refuse formats this
         // code does not understand rather than misinterpret their fields
         if v.get("version").and_then(Json::as_f64) != Some(1.0) {
@@ -378,8 +390,7 @@ impl MemoStore {
                 .map_err(std::io::Error::other)?;
             let latency =
                 s.get("latency").and_then(Json::as_f64).ok_or_else(|| bad("latency"))?;
-            let device_vals =
-                s.get("device").and_then(Json::as_f64_vec).ok_or_else(|| bad("device"))?;
+            let device_vals = strict_nums(s.get("device"), "device")?;
             if device_vals.len() != 8 {
                 return Err(bad("device length"));
             }
@@ -408,10 +419,13 @@ impl MemoStore {
                 let sig = sig_of(e)?;
                 let conv =
                     e.get("conv").and_then(Json::as_usize).ok_or_else(|| bad("conv"))? as u8;
-                let flops =
-                    e.get("flops").and_then(Json::as_f64_vec).ok_or_else(|| bad("flops"))?;
+                let flops = strict_nums(e.get("flops"), "flops")?;
                 let value =
                     e.get("value").and_then(Json::as_f64).ok_or_else(|| bad("value"))?;
+                if !value.is_finite() {
+                    // a NaN/Inf cost would poison every plan comparison
+                    return Err(bad("value (non-finite)"));
+                }
                 let key = ComputeKey::Analytic {
                     sig,
                     conv,
@@ -436,6 +450,11 @@ impl MemoStore {
                     msgs.push(m.as_f64().ok_or_else(|| bad("msgs element"))? as u64);
                 }
                 let bw = e.get("bw").and_then(Json::as_f64).ok_or_else(|| bad("bw"))?;
+                if !bw.is_finite() {
+                    // only classifies hit vs rescale, but keep the format
+                    // uniformly finite rather than absorb a junk entry
+                    return Err(bad("bw (non-finite)"));
+                }
                 let loads_json =
                     e.get("loads").and_then(Json::as_arr).ok_or_else(|| bad("loads"))?;
                 let mut loads = Vec::with_capacity(loads_json.len());
@@ -784,6 +803,92 @@ mod tests {
         std::fs::write(&p, "{\"sigs\": 7}").unwrap();
         assert!(MemoStore::load(&p).is_err());
         assert!(MemoStore::load(&dir.path().join("absent.json")).is_err());
+    }
+
+    /// A real saved store's text, for the corruption tests below.
+    fn saved_store_text(dir: &crate::util::tmp::TempDir) -> String {
+        let testbed = tb(1.0);
+        let store = MemoStore::shared();
+        let memo = CostSource::analytic(&testbed).memoized(&store);
+        let (cq, sq) = queries(&testbed);
+        memo.compute_time(&cq);
+        memo.sync_time(&sq);
+        let p = dir.path().join("good.json");
+        store.save(&p).unwrap();
+        std::fs::read_to_string(&p).unwrap()
+    }
+
+    fn expect_load_err(dir: &crate::util::tmp::TempDir, name: &str, text: &str, hint: &str) {
+        let p = dir.path().join(name);
+        std::fs::write(&p, text).unwrap();
+        let err = MemoStore::load(&p).expect_err(name);
+        assert!(
+            err.to_string().contains(hint),
+            "{name}: error {err} does not mention {hint:?}"
+        );
+    }
+
+    #[test]
+    fn load_rejects_truncated_file() {
+        let dir = crate::util::tmp::TempDir::new("memo_trunc");
+        let text = saved_store_text(&dir);
+        let p = dir.path().join("trunc.json");
+        std::fs::write(&p, &text[..text.len() - 10]).unwrap();
+        assert!(MemoStore::load(&p).is_err(), "truncated store must not load");
+    }
+
+    #[test]
+    fn load_rejects_version_mismatch() {
+        let dir = crate::util::tmp::TempDir::new("memo_ver");
+        let text = saved_store_text(&dir);
+        assert!(text.contains("\"version\":1"), "fixture drifted: {text}");
+        let newer = text.replace("\"version\":1", "\"version\":2");
+        expect_load_err(&dir, "v2.json", &newer, "version");
+    }
+
+    #[test]
+    fn load_rejects_nan_bearing_entries() {
+        // NaN serializes as `null`; the lenient vec accessor would silently
+        // drop it and shrink the key — load_into must reject instead
+        let dir = crate::util::tmp::TempDir::new("memo_nan");
+        let text = saved_store_text(&dir);
+
+        // a NaN compute value
+        let i = text.find("\"value\":").expect("fixture has a compute value");
+        let j = text[i..].find('}').unwrap() + i;
+        let nan_value = format!("{}\"value\":null{}", &text[..i], &text[j..]);
+        expect_load_err(&dir, "nan_value.json", &nan_value, "value");
+
+        // an infinite compute value (parses, but is not a usable cost)
+        let inf_value = format!("{}\"value\":1e999{}", &text[..i], &text[j..]);
+        expect_load_err(&dir, "inf_value.json", &inf_value, "value");
+
+        // a NaN inside the flops key vector
+        let k = text.find("\"flops\":[").expect("fixture has flops") + "\"flops\":[".len();
+        let e = text[k..].find(|c| c == ',' || c == ']').unwrap() + k;
+        let nan_flops = format!("{}null{}", &text[..k], &text[e..]);
+        expect_load_err(&dir, "nan_flops.json", &nan_flops, "flops");
+    }
+
+    #[test]
+    fn failed_load_leaves_store_usable() {
+        // a rejected file must not poison the store: queries after the
+        // failed absorb still answer and memoize normally
+        let dir = crate::util::tmp::TempDir::new("memo_usable");
+        let text = saved_store_text(&dir);
+        let p = dir.path().join("bad_version.json");
+        std::fs::write(&p, text.replace("\"version\":1", "\"version\":3")).unwrap();
+        let store = MemoStore::shared();
+        assert!(store.load_into(&p).is_err());
+        let testbed = tb(1.0);
+        let memo = CostSource::analytic(&testbed).memoized(&store);
+        let (cq, sq) = queries(&testbed);
+        let inner = CostSource::analytic(&testbed);
+        assert_eq!(memo.compute_time(&cq).to_bits(), inner.compute_time(&cq).to_bits());
+        assert_eq!(memo.sync_time(&sq).to_bits(), inner.sync_time(&sq).to_bits());
+        assert_eq!(store.stats().compute_misses, 1);
+        assert_eq!(memo.compute_time(&cq).to_bits(), inner.compute_time(&cq).to_bits());
+        assert_eq!(store.stats().compute_hits, 1);
     }
 
     #[test]

@@ -14,9 +14,10 @@
 //!   [`ReplanCore`](super::controller) (monitor, plan cache, memoized
 //!   parallel DPP) and serves asynchronous observation messages from the
 //!   router. While the cluster is healthy it speculatively pre-computes the
-//!   best n−1 failover plan for every likely-lost (non-leader) node into
-//!   the LRU plan cache, and refreshes that set whenever conditions shift
-//!   cells — so a node loss is served by a pure cache hit.
+//!   best n−1 failover plan for every alive node — the leader included —
+//!   into the LRU plan cache, and refreshes that set whenever conditions
+//!   shift cells — so any node loss, leader or worker, is served by a pure
+//!   cache hit.
 //! * [`ElasticFrontend`] — the router-side handle: samples the condition
 //!   trace (cheap and deterministic), compares the liveness mask and
 //!   quantized cell against the cached version, and either proceeds with
@@ -38,6 +39,7 @@ use std::time::{Duration, Instant};
 use super::cache::CacheKey;
 use super::conditions::{ClusterSnapshot, ConditionTrace};
 use super::controller::{ElasticConfig, ReplanCore};
+use crate::cluster::election::elect_leader;
 use crate::metrics::{summarize, AdaptationMetrics, Summary};
 use crate::model::Model;
 use crate::net::Testbed;
@@ -52,7 +54,10 @@ pub struct PlanVersion {
     pub plan: Arc<Plan>,
     /// Condition cell the plan was decided for.
     pub key: CacheKey,
-    /// Liveness mask the plan was decided for.
+    /// Liveness mask the plan was decided for. The leader is *derived*,
+    /// never cached: consumers elect from the freshest mask they hold
+    /// ([`crate::cluster::election::elect_leader`]), so a published
+    /// version can never serve a stale leader identity.
     pub alive: Vec<bool>,
     /// Effective node count of that mask.
     pub nodes: usize,
@@ -261,6 +266,9 @@ pub struct BoundaryDecision {
     pub alive: Vec<bool>,
     /// Alive-node count (what [`crate::serve::Response::nodes`] reports).
     pub nodes: usize,
+    /// Elected leader of the *fresh* mask (lowest surviving rank): the
+    /// original rank owning scatter/ingress and gather for the next batch.
+    pub leader: usize,
     /// Predicted virtual seconds per item, from the published version.
     pub cost_per_item: f64,
 }
@@ -337,10 +345,12 @@ impl ElasticFrontend {
             }
         }
         let nodes = snap.alive_count();
+        let leader = elect_leader(&snap.alive).expect("no surviving node");
         let decision = BoundaryDecision {
             plan: self.cur.plan.clone(),
             alive: snap.alive,
             nodes,
+            leader,
             cost_per_item: self.cur.cost_per_item,
         };
         let stall = t0.elapsed();
@@ -374,6 +384,16 @@ impl ElasticFrontend {
             self.last_asked = Some(key);
         }
         self.replanner.slot().epoch() != self.cur.epoch
+    }
+
+    /// Whether original-rank `leader` is down at virtual time `vt` — the
+    /// pipelined router's second probe, distinguishing a *leader* loss
+    /// (the gather owner holding every in-flight output is gone → the
+    /// generation must abort and its requests fail explicitly) from any
+    /// other flush (drain normally; outputs stay reachable). Pure trace
+    /// sampling: no planner interaction, no counters.
+    pub fn leader_lost(&self, vt: f64, leader: usize) -> bool {
+        !self.trace.sample(vt).alive[leader]
     }
 
     /// Stop the planner (draining queued asks) and return the adaptation
@@ -437,9 +457,10 @@ mod tests {
         assert_eq!(m.plan_swaps, 0);
         assert_eq!(m.failovers, 0);
         assert_eq!(m.inline_replans, 0);
-        // healthy-cluster speculation ran in the background regardless
-        assert_eq!(m.speculative_plans, 3);
-        assert_eq!(m.replans, 4); // initial + 3 speculative
+        // healthy-cluster speculation ran in the background regardless —
+        // one n−1 cell per alive node, the leader's included
+        assert_eq!(m.speculative_plans, 4);
+        assert_eq!(m.replans, 5); // initial + 4 speculative
         assert_eq!(stalls.count, 10);
     }
 
@@ -478,6 +499,36 @@ mod tests {
         assert_eq!(d.nodes, 4);
         let (m, _) = fe.finish();
         assert_eq!(m.checks, 3, "probes must not count as consultations: {m}");
+        assert_eq!(m.inline_replans, 0, "{m}");
+    }
+
+    #[test]
+    fn leader_loss_probe_and_failover_hand_off() {
+        // node 0 dies over [1, 5): the probe sees it, the flush fires, the
+        // failover elects rank 1, and the rejoin hands leadership back
+        let model = zoo::edgenet(16);
+        let trace = ConditionTrace::stable(4).with_outage(0, 1.0, 5.0);
+        let mut fe = ElasticFrontend::start(model, base(), trace, ElasticConfig::default());
+        assert!(!fe.leader_lost(0.5, 0));
+        assert!(fe.leader_lost(1.5, 0), "leader outage missed by the probe");
+        assert!(fe.needs_flush(1.5), "leader loss must force a flush");
+        let d = fe.acquire(1.5);
+        assert_eq!(d.nodes, 3);
+        assert_eq!(d.alive, vec![false, true, true, true]);
+        assert_eq!(d.leader, 1, "lowest surviving rank must lead");
+        assert!(!fe.leader_lost(1.5, d.leader));
+        // rejoin: original rank 0 reclaims leadership deterministically
+        let d = fe.acquire(5.5);
+        assert_eq!(d.nodes, 4);
+        assert_eq!(d.leader, 0);
+        let (m, _) = fe.finish();
+        assert_eq!(m.checks, 2, "probes must not count as consultations: {m}");
+        assert_eq!(m.failovers, 2);
+        assert_eq!(m.leader_handoffs, 2, "down + reclaim handoffs: {m}");
+        assert!(
+            m.speculative_hits >= 1,
+            "leader failover was not served from the speculative cache: {m}"
+        );
         assert_eq!(m.inline_replans, 0, "{m}");
     }
 

@@ -1,0 +1,524 @@
+//! Deterministic chaos-test harness — seeded fault schedules and the
+//! invariants that must survive them.
+//!
+//! The elastic subsystem claims that *any* node — the leader included —
+//! can die mid-stream without the cluster losing work or corrupting an
+//! output. This module makes that claim executable:
+//!
+//! * [`ChaosSchedule`] — a seeded, fully deterministic fault schedule:
+//!   kills and restores of arbitrary nodes (every schedule is guaranteed
+//!   to strike the *current leader* at least once — no immortal nodes),
+//!   back-to-back double failures, and bandwidth collapses. The schedule
+//!   compiles into a [`ConditionTrace`], so faults are injected exactly
+//!   where the serving stack samples conditions: at batch boundaries.
+//! * [`run_chaos`] — the driver: serves a request stream through
+//!   [`crate::serve::Server::start_elastic`] under the schedule's trace
+//!   and audits every single request.
+//! * [`ChaosOutcome`] — the audit: after every event, surviving outputs
+//!   must stay **bit-identical** to the fresh single-node reference
+//!   ([`run_reference`]), no accepted request may be *silently* dropped
+//!   (every one either completes or is explicitly failed and counted by
+//!   the router), and completion order must be preserved (the router's
+//!   delivery sequence numbers stay increasing in submission order).
+//!   [`ChaosOutcome::verify`] enforces all three.
+//!
+//! A schedule is a pure function of `(nodes, seed, slots, slot_len)`:
+//! re-running the same chaos test reproduces the same kills at the same
+//! virtual times against the same deterministic inputs, so a failure in CI
+//! replays locally bit for bit.
+//!
+//! ## Schedule generation
+//!
+//! Virtual time is divided into `slots` windows of `slot_len` seconds.
+//! Each slot rolls one of: a single-node kill (any alive node, lasting
+//! 1–2.5 slots), a back-to-back double kill (two nodes, 5% of a slot
+//! apart), a bandwidth collapse (to 10–40% for 0.5–1.5 slots), or a quiet
+//! slot. Kills are only scheduled while at least two nodes are up at the
+//! kill instant, which structurally guarantees a survivor at *every*
+//! instant: the latest-starting kill always left some node untouched, and
+//! that node cannot have gone down since. The first eligible slot after
+//! the opening one always targets the current leader, so every schedule
+//! exercises election, abort, and re-admission.
+
+use crate::cluster::election::elect_leader;
+use crate::compute::{run_reference, Tensor, WeightStore};
+use crate::model::Model;
+use crate::net::Testbed;
+use crate::serve::{AdmitError, ServeConfig, Server};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+use super::conditions::ConditionTrace;
+use super::controller::ElasticConfig;
+
+/// One scheduled fault.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ChaosEvent {
+    /// `node` is down over `[from, until)` virtual seconds; the restore is
+    /// the interval end.
+    Kill { node: usize, from: f64, until: f64 },
+    /// Link bandwidth is multiplied by `factor` over `[from, until)`.
+    Collapse { factor: f64, from: f64, until: f64 },
+}
+
+/// A deterministic fault schedule for an `nodes`-device cluster.
+#[derive(Debug, Clone)]
+pub struct ChaosSchedule {
+    pub nodes: usize,
+    pub seed: u64,
+    /// Slot length, virtual seconds.
+    pub slot: f64,
+    pub events: Vec<ChaosEvent>,
+}
+
+impl ChaosSchedule {
+    /// Generate a schedule over `slots × slot_len` virtual seconds. Pure in
+    /// `(nodes, seed, slots, slot_len)`. Every schedule kills the
+    /// then-current leader at least once (asserted in tests via
+    /// [`Self::kills_leader`]).
+    pub fn generate(nodes: usize, seed: u64, slots: usize, slot_len: f64) -> ChaosSchedule {
+        assert!(nodes >= 2, "chaos needs at least two nodes to kill one");
+        assert!(slots >= 6, "too few slots to guarantee a leader strike");
+        assert!(slot_len > 0.0 && slot_len.is_finite(), "bad slot length");
+        let mut rng = Rng::new(seed ^ 0x00c4_a05c_4ed0_1e5a);
+        let mut down_until = vec![f64::NEG_INFINITY; nodes];
+        let mut events: Vec<ChaosEvent> = Vec::new();
+        let mut leader_struck = false;
+        for k in 0..slots {
+            let t = (k as f64 + 0.5) * slot_len;
+            let alive: Vec<usize> = (0..nodes).filter(|&i| down_until[i] <= t).collect();
+            // No immortal nodes: the first eligible slot at k >= 1 strikes
+            // the current leader (lowest alive rank), so every schedule
+            // exercises election and the abort path. (Slot 0 rolls the
+            // ordinary dice and may still hit the leader by chance — the
+            // k >= 1 guard only keeps the *scripted* strike from landing
+            // before the server's first healthy boundary.)
+            if !leader_struck && k >= 1 && alive.len() >= 2 {
+                let leader = alive[0];
+                let until = t + slot_len * rng.range_f64(1.0, 2.0);
+                down_until[leader] = down_until[leader].max(until);
+                events.push(ChaosEvent::Kill { node: leader, from: t, until });
+                leader_struck = true;
+                continue;
+            }
+            let roll = rng.f64();
+            if roll < 0.40 {
+                if alive.len() >= 2 {
+                    let node = *rng.pick(&alive);
+                    let until = t + slot_len * rng.range_f64(1.0, 2.5);
+                    down_until[node] = down_until[node].max(until);
+                    events.push(ChaosEvent::Kill { node, from: t, until });
+                }
+            } else if roll < 0.60 {
+                if alive.len() >= 3 {
+                    // back-to-back double failure, 5% of a slot apart
+                    let i = rng.below(alive.len());
+                    let j = (i + 1 + rng.below(alive.len() - 1)) % alive.len();
+                    let (a, b) = (alive[i], alive[j]);
+                    let until_a = t + slot_len * rng.range_f64(1.0, 2.0);
+                    let t2 = t + 0.05 * slot_len;
+                    let until_b = t2 + slot_len * rng.range_f64(1.0, 2.0);
+                    down_until[a] = down_until[a].max(until_a);
+                    down_until[b] = down_until[b].max(until_b);
+                    events.push(ChaosEvent::Kill { node: a, from: t, until: until_a });
+                    events.push(ChaosEvent::Kill { node: b, from: t2, until: until_b });
+                }
+            } else if roll < 0.80 {
+                let factor = rng.range_f64(0.1, 0.4);
+                let until = t + slot_len * rng.range_f64(0.5, 1.5);
+                events.push(ChaosEvent::Collapse { factor, from: t, until });
+            }
+            // else: a quiet slot
+        }
+        ChaosSchedule { nodes, seed, slot: slot_len, events }
+    }
+
+    /// Number of scheduled fault events.
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Total virtual-time horizon the events span.
+    pub fn horizon(&self) -> f64 {
+        self.events
+            .iter()
+            .map(|e| match *e {
+                ChaosEvent::Kill { until, .. } | ChaosEvent::Collapse { until, .. } => until,
+            })
+            .fold(0.0, f64::max)
+    }
+
+    /// Liveness mask at virtual time `t` (kills starting exactly at `t`
+    /// included), with the same survivor-of-last-resort backstop as
+    /// [`ConditionTrace::sample`].
+    pub fn alive_at(&self, t: f64) -> Vec<bool> {
+        let mut alive = self.alive_raw(t, /* include_start = */ true);
+        if !alive.contains(&true) {
+            alive[0] = true;
+        }
+        alive
+    }
+
+    fn alive_raw(&self, t: f64, include_start: bool) -> Vec<bool> {
+        let mut alive = vec![true; self.nodes];
+        for e in &self.events {
+            if let ChaosEvent::Kill { node, from, until } = *e {
+                let started = if include_start { t >= from } else { t > from };
+                if started && t < until {
+                    alive[node] = false;
+                }
+            }
+        }
+        alive
+    }
+
+    /// Whether some kill strikes the node that was leader the instant
+    /// before the kill — i.e. the schedule exercises leader failover.
+    pub fn kills_leader(&self) -> bool {
+        self.events.iter().any(|e| match e {
+            ChaosEvent::Kill { node, from, .. } => {
+                elect_leader(&self.alive_raw(*from, false)) == Some(*node)
+            }
+            ChaosEvent::Collapse { .. } => false,
+        })
+    }
+
+    /// Compile the schedule into the deterministic [`ConditionTrace`] the
+    /// elastic serving path samples at batch boundaries.
+    pub fn trace(&self) -> ConditionTrace {
+        let mut tr = ConditionTrace::stable(self.nodes);
+        for e in &self.events {
+            match *e {
+                ChaosEvent::Kill { node, from, until } => {
+                    tr = tr.with_outage(node, from, until);
+                }
+                ChaosEvent::Collapse { factor, from, until } => {
+                    tr = tr.with_bandwidth_dip(from, until, factor);
+                }
+            }
+        }
+        tr
+    }
+
+    pub fn to_json(&self) -> Json {
+        let events: Vec<Json> = self
+            .events
+            .iter()
+            .map(|e| match *e {
+                ChaosEvent::Kill { node, from, until } => Json::obj(vec![
+                    ("kind", Json::Str("kill".into())),
+                    ("node", Json::Num(node as f64)),
+                    ("from", Json::Num(from)),
+                    ("until", Json::Num(until)),
+                ]),
+                ChaosEvent::Collapse { factor, from, until } => Json::obj(vec![
+                    ("kind", Json::Str("collapse".into())),
+                    ("factor", Json::Num(factor)),
+                    ("from", Json::Num(from)),
+                    ("until", Json::Num(until)),
+                ]),
+            })
+            .collect();
+        Json::obj(vec![
+            ("nodes", Json::Num(self.nodes as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("slot", Json::Num(self.slot)),
+            ("events", Json::Arr(events)),
+        ])
+    }
+}
+
+/// The audit of one chaos run — what [`run_chaos`] measured and what
+/// [`ChaosOutcome::verify`] enforces.
+#[derive(Debug, Clone)]
+pub struct ChaosOutcome {
+    pub seed: u64,
+    /// Fault events the schedule injected.
+    pub events: usize,
+    /// Requests accepted by the server (all of them — admission retries on
+    /// backpressure until accepted).
+    pub requests: u64,
+    /// Requests that completed with a response.
+    pub ok: u64,
+    /// Requests explicitly failed *and accounted for* by the router
+    /// (leader-loss aborts + shutdown drains).
+    pub failed_reported: u64,
+    /// Client-observed disconnects the router never accounted for — silent
+    /// drops. The headline invariant: must be 0.
+    pub lost: u64,
+    /// Completed responses whose output differed from the single-node
+    /// reference. Must be 0.
+    pub mismatches: u64,
+    /// Responses whose delivery sequence went backwards relative to
+    /// submission order. Must be 0.
+    pub reordered: u64,
+    /// Node-set failovers the elastic controller performed.
+    pub failovers: u64,
+    /// Failovers that moved leadership.
+    pub leader_handoffs: u64,
+    /// Failovers served from the speculative n−1 plan cache.
+    pub speculative_hits: u64,
+    /// Smallest / largest cluster any completed response rode on.
+    pub min_nodes: usize,
+    pub max_nodes: usize,
+    /// Pipeline generations served (0 on the lockstep path).
+    pub generations: u64,
+}
+
+impl ChaosOutcome {
+    /// Enforce the harness invariants; `Err` lists every violation.
+    pub fn verify(&self) -> Result<(), String> {
+        let mut errs = Vec::new();
+        if self.ok + self.failed_reported != self.requests {
+            errs.push(format!(
+                "accounting hole: {} ok + {} failed != {} accepted",
+                self.ok, self.failed_reported, self.requests
+            ));
+        }
+        if self.lost != 0 {
+            errs.push(format!("{} requests silently dropped", self.lost));
+        }
+        if self.mismatches != 0 {
+            errs.push(format!("{} outputs diverged from the reference", self.mismatches));
+        }
+        if self.reordered != 0 {
+            errs.push(format!("{} responses delivered out of order", self.reordered));
+        }
+        if errs.is_empty() {
+            Ok(())
+        } else {
+            Err(errs.join("; "))
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("seed", Json::Num(self.seed as f64)),
+            ("events", Json::Num(self.events as f64)),
+            ("requests", Json::Num(self.requests as f64)),
+            ("ok", Json::Num(self.ok as f64)),
+            ("failed_reported", Json::Num(self.failed_reported as f64)),
+            ("lost", Json::Num(self.lost as f64)),
+            ("mismatches", Json::Num(self.mismatches as f64)),
+            ("reordered", Json::Num(self.reordered as f64)),
+            ("failovers", Json::Num(self.failovers as f64)),
+            ("leader_handoffs", Json::Num(self.leader_handoffs as f64)),
+            ("speculative_hits", Json::Num(self.speculative_hits as f64)),
+            ("min_nodes", Json::Num(self.min_nodes as f64)),
+            ("max_nodes", Json::Num(self.max_nodes as f64)),
+            ("generations", Json::Num(self.generations as f64)),
+        ])
+    }
+}
+
+impl std::fmt::Display for ChaosOutcome {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "seed={} events={} requests={} ok={} failed={} lost={} mismatches={} \
+             reordered={} failovers={} handoffs={} spec_hits={} nodes={}..{}",
+            self.seed,
+            self.events,
+            self.requests,
+            self.ok,
+            self.failed_reported,
+            self.lost,
+            self.mismatches,
+            self.reordered,
+            self.failovers,
+            self.leader_handoffs,
+            self.speculative_hits,
+            self.min_nodes,
+            self.max_nodes
+        )
+    }
+}
+
+/// Serve `requests` deterministic inputs through an elastic [`Server`]
+/// under `schedule`'s fault trace and audit every request. Submissions are
+/// made up front (retrying on backpressure — admission never abandons a
+/// request) so that in pipelined mode batches genuinely overlap the
+/// injected faults; responses are collected in submission order.
+pub fn run_chaos(
+    model: &Model,
+    base: &Testbed,
+    schedule: &ChaosSchedule,
+    cfg: ServeConfig,
+    ecfg: ElasticConfig,
+    requests: u64,
+    input_seed: u64,
+) -> ChaosOutcome {
+    assert_eq!(base.nodes, schedule.nodes, "schedule/testbed node mismatch");
+    let weights = WeightStore::for_model(model, 5);
+    let server = Server::start_elastic(
+        model.clone(),
+        weights.clone(),
+        base.clone(),
+        schedule.trace(),
+        cfg,
+        ecfg,
+    );
+
+    let l0 = &model.layers[0];
+    let inputs: Vec<Tensor> = (0..requests)
+        .map(|i| Tensor::random(l0.in_h, l0.in_w, l0.in_c, input_seed + i))
+        .collect();
+    let mut rxs = Vec::with_capacity(inputs.len());
+    for t in &inputs {
+        loop {
+            match server.submit(t.clone()) {
+                Ok(rx) => {
+                    rxs.push(rx);
+                    break;
+                }
+                Err(AdmitError::QueueFull) => std::thread::yield_now(),
+                Err(AdmitError::Stopped) => panic!("server stopped during chaos run"),
+            }
+        }
+    }
+
+    let mut ok = 0u64;
+    let mut client_failed = 0u64;
+    let mut mismatches = 0u64;
+    let mut reordered = 0u64;
+    let mut last_seq: Option<u64> = None;
+    let mut min_nodes = usize::MAX;
+    let mut max_nodes = 0usize;
+    for (input, rx) in inputs.iter().zip(rxs) {
+        match rx.recv() {
+            Ok(resp) => {
+                ok += 1;
+                let reference = run_reference(model, &weights, input);
+                if reference.max_abs_diff(&resp.output) != 0.0 {
+                    mismatches += 1;
+                }
+                if last_seq.is_some_and(|prev| resp.seq <= prev) {
+                    reordered += 1;
+                }
+                last_seq = Some(resp.seq);
+                min_nodes = min_nodes.min(resp.nodes);
+                max_nodes = max_nodes.max(resp.nodes);
+            }
+            Err(_) => client_failed += 1,
+        }
+    }
+
+    let stats = server.shutdown();
+    let m = stats.adaptation.expect("elastic path reports adaptation");
+    let failed_reported = stats.failed_on_leader_loss + stats.failed_on_shutdown;
+    ChaosOutcome {
+        seed: schedule.seed,
+        events: schedule.len(),
+        requests,
+        ok,
+        failed_reported,
+        // a disconnect the router never accounted for is a silent drop
+        lost: client_failed.saturating_sub(failed_reported),
+        mismatches,
+        reordered,
+        failovers: m.failovers,
+        leader_handoffs: m.leader_handoffs,
+        speculative_hits: m.speculative_hits,
+        min_nodes: if ok == 0 { 0 } else { min_nodes },
+        max_nodes,
+        generations: stats.pipeline.map_or(0, |p| p.generations),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+    use crate::net::{Bandwidth, Topology};
+    use crate::planner::plan_for_testbed;
+    use std::time::Duration;
+
+    #[test]
+    fn schedules_are_deterministic_and_seed_sensitive() {
+        let a = ChaosSchedule::generate(4, 7, 10, 1.0);
+        let b = ChaosSchedule::generate(4, 7, 10, 1.0);
+        assert_eq!(a.events, b.events);
+        let c = ChaosSchedule::generate(4, 8, 10, 1.0);
+        assert_ne!(a.events, c.events, "different seeds must differ");
+        assert!(!a.is_empty());
+    }
+
+    #[test]
+    fn every_schedule_kills_the_leader_and_keeps_a_survivor() {
+        for seed in 0..12u64 {
+            for nodes in [2usize, 3, 4] {
+                let s = ChaosSchedule::generate(nodes, seed, 10, 1.0);
+                assert!(s.kills_leader(), "seed {seed} nodes {nodes}: leader immortal");
+                // structural survivor invariant, checked *without* the
+                // backstop on a fine grid across the whole horizon
+                let horizon = s.horizon();
+                let mut t = 0.0;
+                while t < horizon + 1.0 {
+                    let alive = s.alive_raw(t, true);
+                    assert!(
+                        alive.contains(&true),
+                        "seed {seed} nodes {nodes}: no survivor at t={t}"
+                    );
+                    t += 0.05;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn trace_matches_schedule_liveness() {
+        let s = ChaosSchedule::generate(4, 3, 10, 1.0);
+        let trace = s.trace();
+        let mut t = 0.0;
+        while t < s.horizon() + 1.0 {
+            assert_eq!(trace.sample(t).alive, s.alive_at(t), "t={t}");
+            t += 0.21;
+        }
+    }
+
+    #[test]
+    fn schedule_json_round_trips_fields() {
+        let s = ChaosSchedule::generate(4, 5, 8, 2.0);
+        let j = s.to_json();
+        assert_eq!(j.get("nodes").and_then(Json::as_usize), Some(4));
+        assert_eq!(j.get("seed").and_then(Json::as_usize), Some(5));
+        let events = j.get("events").and_then(Json::as_arr).unwrap();
+        assert_eq!(events.len(), s.len());
+    }
+
+    #[test]
+    fn chaos_run_smoke_loses_nothing() {
+        // a short generated schedule through the lockstep elastic server:
+        // every invariant must hold and at least one failover must land
+        let model = zoo::edgenet(16);
+        let base = Testbed::new(3, Topology::Ring, Bandwidth::gbps(1.0));
+        let c0 = {
+            let p = plan_for_testbed(&model, &base);
+            crate::engine::evaluate(&model, &p, &base).total
+        };
+        let schedule = ChaosSchedule::generate(3, 1, 6, 2.0 * c0);
+        let cfg = ServeConfig {
+            max_batch: 1,
+            batch_window: Duration::ZERO,
+            queue_depth: 32,
+            pipeline_depth: 1,
+        };
+        let out = run_chaos(
+            &model,
+            &base,
+            &schedule,
+            cfg,
+            ElasticConfig::default(),
+            16,
+            900,
+        );
+        out.verify().expect("chaos invariants violated");
+        assert_eq!(out.requests, 16);
+        assert_eq!(out.ok, 16, "lockstep mode never leaves work in flight: {out}");
+        assert!(out.failovers >= 1, "schedule injected no observed failover: {out}");
+    }
+}

@@ -92,8 +92,11 @@ pub struct ConditionTrace {
     pub nodes: usize,
     /// Characteristic period of the profile's variation, virtual seconds.
     pub period: f64,
-    /// Scripted + profile-generated outages. Node 0 (the leader, which owns
-    /// ingress and gather) is never taken down by the built-in profiles.
+    /// Scripted + profile-generated outages. The built-in profiles only
+    /// churn ranks `1..` (they model worker churn), but scripted outages —
+    /// and the chaos harness built on them — may take any node down,
+    /// including rank 0: leadership re-elects onto the lowest surviving
+    /// rank ([`crate::cluster::election::elect_leader`]).
     outages: Vec<Outage>,
     /// Scripted bandwidth-degradation intervals.
     dips: Vec<BandwidthDip>,
@@ -157,12 +160,13 @@ impl ConditionTrace {
     }
 
     /// Script an explicit outage on top of the profile (for reproducible
-    /// failure tests). `until = f64::INFINITY` makes it permanent.
+    /// failure tests). `until = f64::INFINITY` makes it permanent. Any node
+    /// may be scripted down — rank 0 included: no node is immortal, and a
+    /// leader outage exercises the election/handoff path. The only backstop
+    /// is in [`Self::sample`]: a schedule that takes *every* node down at
+    /// once keeps the lowest rank up as the survivor of last resort.
     pub fn with_outage(mut self, node: usize, from: f64, until: f64) -> ConditionTrace {
         assert!(node < self.nodes, "outage node {node} out of range");
-        // sample() would silently revive it (the leader owns ingress/gather
-        // and is immortal) — reject rather than accept a no-op script.
-        assert!(node != 0, "node 0 (leader) cannot be scripted down");
         assert!(from < until, "empty outage interval");
         self.outages.push(Outage { node, from, until });
         self
@@ -190,9 +194,13 @@ impl ConditionTrace {
                 alive[o.node] = false;
             }
         }
-        // The leader is immortal: it owns ingress/gather, and keeping it up
-        // also guarantees at least one survivor.
-        alive[0] = true;
+        // Survivor of last resort: a cluster with zero devices cannot serve
+        // anything, so if a schedule takes every node down at once the
+        // lowest rank stays up — the same rank-based rule the leader
+        // election uses, so the revived node is also the leader.
+        if !alive.contains(&true) {
+            alive[0] = true;
+        }
 
         let mut bandwidth_factor = 1.0;
         let mut speed_factors = vec![1.0; self.nodes];
@@ -372,6 +380,30 @@ mod tests {
         assert_eq!(snap.alive_count(), 3);
         assert!(!snap.alive[2]);
         assert_eq!(trace.sample(1e12).alive_count(), 3);
+    }
+
+    #[test]
+    fn leader_outage_is_scriptable() {
+        // no immortal nodes: rank 0 goes down like any other, and comes back
+        let trace = ConditionTrace::stable(4).with_outage(0, 2.0, 5.0);
+        assert!(trace.sample(1.9).alive[0]);
+        let snap = trace.sample(3.0);
+        assert!(!snap.alive[0], "leader outage was silently revived");
+        assert_eq!(snap.alive_count(), 3);
+        assert!(trace.sample(5.0).alive[0], "leader never rejoined");
+    }
+
+    #[test]
+    fn all_nodes_down_keeps_a_survivor_of_last_resort() {
+        let trace = ConditionTrace::stable(2)
+            .with_outage(0, 1.0, 3.0)
+            .with_outage(1, 2.0, 4.0);
+        // overlap [2, 3): every node scripted down → rank 0 revives
+        let snap = trace.sample(2.5);
+        assert_eq!(snap.alive, vec![true, false]);
+        // outside the overlap the script is honored exactly
+        assert_eq!(trace.sample(1.5).alive, vec![false, true]);
+        assert_eq!(trace.sample(3.5).alive, vec![true, false]);
     }
 
     #[test]

@@ -42,6 +42,7 @@ use std::sync::Arc;
 
 use super::cache::{CacheKey, PlanCache};
 use super::conditions::{ClusterSnapshot, ConditionTrace};
+use crate::cluster::election::{elect_leader, Leadership};
 use crate::cost::{CostSource, MemoStore};
 use crate::metrics::AdaptationMetrics;
 use crate::model::Model;
@@ -113,6 +114,9 @@ pub struct BatchDecision {
     /// Per-node liveness (baseline node ids) — the mask
     /// [`crate::cluster::run_degraded`] executes against.
     pub alive: Vec<bool>,
+    /// Original rank of the elected leader (lowest surviving rank) — the
+    /// node that owns scatter/ingress and gather for this batch.
+    pub leader: usize,
     /// Predicted virtual seconds per item under current conditions.
     pub cost_per_item: f64,
     /// True when this boundary adapted (plan and/or node set changed).
@@ -147,6 +151,10 @@ pub(crate) struct ReplanCore {
     /// membership, not count: a simultaneous die+rejoin between two batch
     /// boundaries still changes the set and must force a replan.
     active_alive: Vec<bool>,
+    /// Rank-based leadership observer — the single source of truth for
+    /// handoff detection (fed the fresh mask on every node-set change;
+    /// its term bumps exactly when the lowest surviving rank moves).
+    leadership: Leadership,
     /// Cost baseline the degradation monitor compares against (tracks the
     /// best cost seen for the active plan since adoption).
     pub(crate) active_cost: f64,
@@ -192,6 +200,7 @@ impl ReplanCore {
             active: plan,
             active_key: key,
             active_alive: snap0.alive.clone(),
+            leadership: Leadership::new(&snap0.alive),
             active_cost,
             metrics,
             events: Vec::new(),
@@ -257,6 +266,7 @@ impl ReplanCore {
     pub(crate) fn decide(&mut self, snap: &ClusterSnapshot) -> BatchDecision {
         let effective = snap.apply(&self.base);
         let cost = self.cost_source(&effective);
+        let leader = elect_leader(&snap.alive).expect("no surviving node");
 
         // Monitor: re-price the active plan under current conditions
         // (through the shared memo, so drift checks are mostly rescales).
@@ -277,6 +287,7 @@ impl ReplanCore {
                 plan: self.active.clone(),
                 testbed: effective,
                 alive: snap.alive.clone(),
+                leader,
                 cost_per_item: current_cost,
                 swapped: false,
                 reason: None,
@@ -303,6 +314,11 @@ impl ReplanCore {
             }
             if node_change {
                 self.metrics.failovers += 1;
+                // the observer bumps its term (and we count a handoff)
+                // exactly when the lowest surviving rank moved
+                if self.leadership.observe(&snap.alive).is_some() {
+                    self.metrics.leader_handoffs += 1;
+                }
             }
             if self.events.len() == MAX_EVENTS {
                 self.events.remove(0);
@@ -325,20 +341,26 @@ impl ReplanCore {
             plan: self.active.clone(),
             testbed: effective,
             alive: snap.alive.clone(),
+            leader,
             cost_per_item: new_cost,
             swapped,
             reason: swapped.then_some(reason),
         }
     }
 
-    /// Pre-compute the best n−1 failover plan for every alive non-leader
-    /// node under the conditions in `snap`, filling only cells the cache
-    /// doesn't hold yet. The background planner calls this while the
-    /// cluster is healthy, so a node-loss failover becomes a pure cache
+    /// Pre-compute the best n−1 failover plan for every alive node — the
+    /// leader included: no node is immortal, and a leader loss re-elects
+    /// the next-lowest rank as gather owner, so its n−1 cell must be just
+    /// as warm — under the conditions in `snap`, filling only cells the
+    /// cache doesn't hold yet. The background planner calls this while the
+    /// cluster is healthy, so any node-loss failover becomes a pure cache
     /// hit; the searches run as a [`plan_batch`] over the shared memo.
     pub(crate) fn speculate_failovers(&mut self, snap: &ClusterSnapshot) {
+        if snap.alive_count() <= 1 {
+            return; // killing the only survivor leaves nothing to plan for
+        }
         let mut work: Vec<(CacheKey, Testbed)> = Vec::new();
-        for node in 1..snap.alive.len() {
+        for node in 0..snap.alive.len() {
             if !snap.alive[node] {
                 continue;
             }
@@ -596,21 +618,75 @@ mod tests {
         );
         core.speculate_failovers(&snap0);
         let m = core.metrics();
-        assert_eq!(m.speculative_plans, 3, "one n−1 plan per non-leader node: {m}");
+        assert_eq!(m.speculative_plans, 4, "one n−1 plan per alive node, leader included: {m}");
         assert_eq!(m.inline_replans, 0, "background core never replans inline: {m}");
         // speculating again is a no-op: every cell is already cached
         core.speculate_failovers(&snap0);
-        assert_eq!(core.metrics().speculative_plans, 3);
+        assert_eq!(core.metrics().speculative_plans, 4);
 
         // the node-2 failover is now a pure (attributed) cache hit, and the
         // served plan equals planning directly for the degraded testbed
         let snap_down = trace.sample(1.5);
         let d = core.decide(&snap_down);
         assert_eq!(d.testbed.nodes, 3);
+        assert_eq!(d.leader, 0, "a worker loss must not move leadership");
         let m = core.metrics();
         assert_eq!(m.speculative_hits, 1, "failover was not served speculatively: {m}");
-        assert_eq!(m.replans, 4, "failover must not search: {m}");
+        assert_eq!(m.replans, 5, "failover must not search: {m}");
+        assert_eq!(m.leader_handoffs, 0, "{m}");
         let tb3 = base(4).subset(&[true, true, false, true]);
         assert_eq!(*d.plan, crate::planner::plan_for_testbed(&core.model, &tb3));
+    }
+
+    #[test]
+    fn leader_loss_is_speculated_elected_and_served_from_cache() {
+        // kill node 0: the speculative pass must already hold the
+        // leader-loss cell, the election must hand off to rank 1, and the
+        // served plan must equal planning directly for the survivors
+        let trace = ConditionTrace::stable(4).with_outage(0, 1.0, 2.0);
+        let snap0 = trace.sample(0.0);
+        let mut core = ReplanCore::new(
+            zoo::edgenet(16),
+            base(4),
+            &snap0,
+            ElasticConfig::default(),
+            false,
+        );
+        core.speculate_failovers(&snap0);
+        assert_eq!(core.metrics().speculative_plans, 4);
+
+        let snap_down = trace.sample(1.5);
+        assert!(!snap_down.alive[0]);
+        let d = core.decide(&snap_down);
+        assert_eq!(d.testbed.nodes, 3);
+        assert_eq!(d.leader, 1, "leadership must hand off to the lowest survivor");
+        let m = core.metrics();
+        assert_eq!(m.failovers, 1);
+        assert_eq!(m.leader_handoffs, 1, "leader loss must count a handoff: {m}");
+        assert_eq!(m.speculative_hits, 1, "leader failover must be a cache hit: {m}");
+        assert_eq!(m.replans, 5, "leader failover must not search: {m}");
+        let tb3 = base(4).subset(&[false, true, true, true]);
+        assert_eq!(*d.plan, crate::planner::plan_for_testbed(&core.model, &tb3));
+
+        // rejoin: original rank 0 reclaims leadership — a second handoff
+        let back = core.decide(&trace.sample(2.5));
+        assert_eq!(back.leader, 0);
+        assert_eq!(core.metrics().leader_handoffs, 2);
+    }
+
+    #[test]
+    fn speculation_skips_a_single_survivor() {
+        // a 1-node "cluster" has no n−1 cell to warm
+        let trace = ConditionTrace::stable(1);
+        let snap0 = trace.sample(0.0);
+        let mut core = ReplanCore::new(
+            zoo::edgenet(16),
+            base(1),
+            &snap0,
+            ElasticConfig::default(),
+            false,
+        );
+        core.speculate_failovers(&snap0);
+        assert_eq!(core.metrics().speculative_plans, 0);
     }
 }

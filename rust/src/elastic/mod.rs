@@ -23,6 +23,12 @@
 //!   batches — on node failure it degrades gracefully to the best
 //!   n−1-device plan. [`ElasticController`] drives the core synchronously
 //!   (simple, deterministic, but a cold replan stalls its boundary).
+//! * [`chaos`] — the deterministic chaos-test harness: seeded fault
+//!   schedules (kills and restores of *any* node — the leader included —
+//!   back-to-back failures, bandwidth collapses) compiled into condition
+//!   traces, plus a driver that audits a served request stream for the
+//!   three invariants: bit-identical outputs, zero silent drops, and
+//!   preserved completion order.
 //! * [`background`] — the production driver: a dedicated planner thread
 //!   runs the same core and publishes into an atomic [`PlanSlot`], so a
 //!   batch boundary's plan acquisition is a single atomic epoch load;
@@ -37,6 +43,7 @@
 
 pub mod background;
 pub mod cache;
+pub mod chaos;
 pub mod conditions;
 pub mod controller;
 
@@ -44,5 +51,6 @@ pub use background::{
     BackgroundReplanner, BoundaryDecision, ElasticFrontend, PlanSlot, PlanVersion,
 };
 pub use cache::{CacheKey, PlanCache};
+pub use chaos::{run_chaos, ChaosEvent, ChaosOutcome, ChaosSchedule};
 pub use conditions::{ClusterSnapshot, ConditionTrace, Outage, Profile, SnapshotKey};
 pub use controller::{AdaptEvent, BatchDecision, ElasticConfig, ElasticController, SwapReason};

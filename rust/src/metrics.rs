@@ -68,6 +68,10 @@ pub struct AdaptationMetrics {
     pub plan_swaps: u64,
     /// Swaps forced by a node joining or leaving the cluster.
     pub failovers: u64,
+    /// Failovers that moved leadership: the lowest surviving rank changed,
+    /// so scatter/ingress and gather re-homed onto a different device
+    /// (includes original rank 0 reclaiming leadership on rejoin).
+    pub leader_handoffs: u64,
     /// Warm plans served straight from the plan cache.
     pub cache_hits: u64,
     /// Plan-cache misses.
@@ -107,13 +111,14 @@ impl std::fmt::Display for AdaptationMetrics {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "checks={} degraded={} replans={} swaps={} failovers={} cache={}/{} ({:.0}% hit) \
-             spec={}p/{}h inline={}",
+            "checks={} degraded={} replans={} swaps={} failovers={} handoffs={} \
+             cache={}/{} ({:.0}% hit) spec={}p/{}h inline={}",
             self.checks,
             self.degraded_checks,
             self.replans,
             self.plan_swaps,
             self.failovers,
+            self.leader_handoffs,
             self.cache_hits,
             self.cache_hits + self.cache_misses,
             self.cache_hit_rate() * 100.0,

@@ -35,6 +35,18 @@
 //!   drained generation rather than per batch, and no request is ever lost
 //!   across a swap.
 //!
+//! No node is immortal — the leader included. Each generation is bound to
+//! an elected leader (lowest surviving rank,
+//! [`crate::cluster::election::elect_leader`]); when the *leader* dies the
+//! flush becomes an abort instead of a drain: in-flight inferences — whose
+//! outputs lived on the dead gather owner — are failed explicitly and
+//! counted in [`RouterStats::failed_on_leader_loss`] (their response
+//! channels disconnect; nothing hangs and nothing is silently dropped),
+//! while queued requests re-admit under the new leader. In lockstep mode a
+//! leader loss costs nothing: batch boundaries never leave work in flight,
+//! so the next batch simply executes with the new leader at logical
+//! node 0.
+//!
 //! [`Server::shutdown`] stops the router after the batch in flight:
 //! requests still sitting in the admission queue are drained and failed
 //! explicitly (their response channels drop, so `submit()` callers observe
@@ -101,6 +113,15 @@ pub struct Response {
     /// Number of cluster nodes the batch executed on (drops below the
     /// baseline when the elastic path fails over).
     pub nodes: usize,
+    /// Original rank of the leader (scatter/ingress + gather owner) that
+    /// served this request — moves off rank 0 after a leader failover.
+    pub leader: usize,
+    /// Router-assigned completion sequence number, strictly increasing in
+    /// delivery order. Because the router serves FIFO (lockstep batches in
+    /// admission order; the pipeline completes in submission order), a
+    /// client that submits in order must observe increasing `seq` across
+    /// its responses — the chaos harness asserts exactly that.
+    pub seq: u64,
 }
 
 struct Request {
@@ -133,6 +154,13 @@ pub struct RouterStats {
     /// Admitted requests failed (response channel dropped) because
     /// [`Server::shutdown`] stopped the router before they were served.
     pub failed_on_shutdown: u64,
+    /// Requests failed because the leader died with their inference in
+    /// flight: the gather owner holding their outputs is gone, so the
+    /// pipeline generation aborts and their response channels disconnect.
+    /// Requests still in the admission queue (or the batch being formed)
+    /// are *not* failed — they re-admit under the new leader. Zero on the
+    /// lockstep path, where batch boundaries never leave work in flight.
+    pub failed_on_leader_loss: u64,
     /// Present on the elastic path: replan/cache/failover counters. On the
     /// pipelined path `checks` counts frontend consultations, which happen
     /// once per drained generation rather than per batch.
@@ -292,11 +320,12 @@ fn next_request_reaping(
     rx: &Receiver<Request>,
     pipe: &mut Option<BlockPipeline>,
     pending: &mut VecDeque<Pending>,
+    next_seq: &mut u64,
 ) -> Option<Request> {
     loop {
         if let Some(p) = pipe.as_mut() {
             while let Some(c) = p.try_complete() {
-                complete_front(pending, c);
+                complete_front(pending, c, next_seq);
             }
         }
         if pending.is_empty() {
@@ -333,6 +362,7 @@ fn router_lockstep(
     stop: &AtomicBool,
 ) -> RouterStats {
     let mut stats = RouterStats::default();
+    let mut next_seq = 0u64;
 
     while let Some(batch) = collect_batch(&rx, cfg) {
         stats.batches += 1;
@@ -341,15 +371,23 @@ fn router_lockstep(
 
         // Batch boundary: consult the plan source. On the elastic path this
         // is a wait-free acquisition from the background planner's slot;
-        // swaps land here, never mid-batch.
-        let (plan, alive, nodes, virtual_time) = match &mut source {
+        // swaps land here, never mid-batch. A leader loss costs nothing in
+        // lockstep — nothing is in flight at a boundary, so the batch just
+        // executes with the newly elected leader at logical node 0.
+        let (plan, alive, nodes, leader, virtual_time) = match &mut source {
             PlanSource::Static { plan, nodes, virtual_time } => {
-                (plan.clone(), None, *nodes, *virtual_time)
+                (plan.clone(), None, *nodes, 0, *virtual_time)
             }
             PlanSource::Elastic { fe, vt } => {
                 let decision = fe.acquire(*vt);
                 *vt += decision.cost_per_item * batch.len() as f64;
-                (decision.plan, Some(decision.alive), decision.nodes, decision.cost_per_item)
+                (
+                    decision.plan,
+                    Some(decision.alive),
+                    decision.nodes,
+                    decision.leader,
+                    decision.cost_per_item,
+                )
             }
         };
 
@@ -371,6 +409,8 @@ fn router_lockstep(
 
         let batch_size = batch.len();
         for (req, output) in batch.into_iter().zip(outputs) {
+            let seq = next_seq;
+            next_seq += 1;
             let _ = req.resp.send(Response {
                 output,
                 queued: service_start.duration_since(req.enqueued),
@@ -378,6 +418,8 @@ fn router_lockstep(
                 virtual_time,
                 batch_size,
                 nodes,
+                leader,
+                seq,
             });
         }
         if stop.load(Ordering::Acquire) {
@@ -405,11 +447,14 @@ struct Pending {
     submitted: Instant,
     batch_size: usize,
     nodes: usize,
+    leader: usize,
     virtual_time: f64,
 }
 
-fn complete_front(pending: &mut VecDeque<Pending>, c: Completion) {
+fn complete_front(pending: &mut VecDeque<Pending>, c: Completion, next_seq: &mut u64) {
     let p = pending.pop_front().expect("completion without a pending request");
+    let seq = *next_seq;
+    *next_seq += 1;
     let _ = p.resp.send(Response {
         output: c.output,
         queued: p.submitted.duration_since(p.enqueued),
@@ -417,6 +462,8 @@ fn complete_front(pending: &mut VecDeque<Pending>, c: Completion) {
         virtual_time: p.virtual_time,
         batch_size: p.batch_size,
         nodes: p.nodes,
+        leader: p.leader,
+        seq,
     });
 }
 
@@ -426,12 +473,42 @@ fn drain_generation(
     pipe: BlockPipeline,
     pending: &mut VecDeque<Pending>,
     summary: &mut PipelineSummary,
+    next_seq: &mut u64,
 ) {
     let (rest, pstats) = pipe.finish();
     for c in rest {
-        complete_front(pending, c);
+        complete_front(pending, c, next_seq);
     }
     debug_assert!(pending.is_empty(), "drained generation left requests pending");
+    summary.absorb(
+        pstats.stages.len(),
+        pstats.items,
+        pstats.occupancy(),
+        pstats.bottleneck_stage(),
+    );
+}
+
+/// Abort one pipeline generation whose leader died: in-flight completions
+/// are discarded (their outputs lived on the dead gather owner) and the
+/// requests behind them failed explicitly — dropping each [`Pending`]
+/// drops its response sender, so every submitter observes a disconnect,
+/// never a hang, and the count rides on
+/// [`RouterStats::failed_on_leader_loss`]. `stats.items` in the summary
+/// counts only the completions this generation actually delivered.
+fn abort_generation(
+    pipe: BlockPipeline,
+    pending: &mut VecDeque<Pending>,
+    stats: &mut RouterStats,
+    summary: &mut PipelineSummary,
+) {
+    let (aborted, pstats) = pipe.abort();
+    debug_assert_eq!(
+        aborted as usize,
+        pending.len(),
+        "abort accounting diverged from the pending queue"
+    );
+    stats.failed_on_leader_loss += pending.len() as u64;
+    pending.clear();
     summary.absorb(
         pstats.stages.len(),
         pstats.items,
@@ -452,11 +529,13 @@ fn router_pipelined(
     let mut summary = PipelineSummary::default();
     let mut pending: VecDeque<Pending> = VecDeque::new();
     let mut pipe: Option<BlockPipeline> = None;
+    let mut next_seq = 0u64;
     // current generation's execution parameters
     let mut gen_nodes = 0usize;
     let mut gen_cost = 0.0f64;
+    let mut gen_leader = 0usize;
 
-    while let Some(first) = next_request_reaping(&rx, &mut pipe, &mut pending) {
+    while let Some(first) = next_request_reaping(&rx, &mut pipe, &mut pending, &mut next_seq) {
         let mut batch = vec![first];
         fill_batch(&rx, cfg, &mut batch);
         stats.batches += 1;
@@ -468,6 +547,7 @@ fn router_pipelined(
                 if pipe.is_none() {
                     gen_nodes = *nodes;
                     gen_cost = *virtual_time;
+                    gen_leader = 0;
                     pipe = Some(BlockPipeline::start(
                         model,
                         plan,
@@ -480,10 +560,22 @@ fn router_pipelined(
             PlanSource::Elastic { fe, vt } => {
                 if let Some(running) = pipe.take() {
                     if fe.needs_flush(*vt) {
-                        // Drain-and-flush: finish every in-flight inference
-                        // under the old plan, then consult the frontend for
-                        // the new generation below.
-                        drain_generation(running, &mut pending, &mut summary);
+                        if fe.leader_lost(*vt, gen_leader) {
+                            // The generation's leader died: the gather owner
+                            // holding every in-flight output is gone, so
+                            // those inferences cannot complete. Fail them
+                            // explicitly (their response channels
+                            // disconnect) and rebuild under the new leader
+                            // below; the batch just collected — and
+                            // everything still in the admission queue —
+                            // re-admits into the new generation untouched.
+                            abort_generation(running, &mut pending, &mut stats, &mut summary);
+                        } else {
+                            // Ordinary drain-and-flush: finish every
+                            // in-flight inference under the old plan, then
+                            // consult the frontend for the new generation.
+                            drain_generation(running, &mut pending, &mut summary, &mut next_seq);
+                        }
                     } else {
                         pipe = Some(running);
                     }
@@ -492,12 +584,14 @@ fn router_pipelined(
                     let decision = fe.acquire(*vt);
                     gen_nodes = decision.nodes;
                     gen_cost = decision.cost_per_item;
-                    pipe = Some(BlockPipeline::start(
+                    gen_leader = decision.leader;
+                    pipe = Some(BlockPipeline::start_with_leader(
                         model,
                         &decision.plan,
                         weights,
                         decision.nodes,
                         cfg.pipeline_depth,
+                        decision.leader,
                     ));
                 }
                 *vt += gen_cost * batch.len() as f64;
@@ -515,13 +609,14 @@ fn router_pipelined(
                 submitted,
                 batch_size,
                 nodes: gen_nodes,
+                leader: gen_leader,
                 virtual_time: gen_cost,
             });
             stats.requests += 1;
         }
         // Reap whatever has streamed out while feeding.
         while let Some(c) = p.try_complete() {
-            complete_front(&mut pending, c);
+            complete_front(&mut pending, c, &mut next_seq);
         }
         if stop.load(Ordering::Acquire) {
             break;
@@ -531,7 +626,7 @@ fn router_pipelined(
     // Final drain: everything admitted into the pipeline completes; only
     // requests still in the admission queue are failed.
     if let Some(running) = pipe.take() {
-        drain_generation(running, &mut pending, &mut summary);
+        drain_generation(running, &mut pending, &mut summary, &mut next_seq);
     }
     fail_queued(rx, &mut stats);
     if summary.generations > 0 {
@@ -567,8 +662,11 @@ mod tests {
         assert_eq!((resp.output.h, resp.output.w, resp.output.c), (1, 1, 10));
         assert!(resp.virtual_time > 0.0);
         assert_eq!(resp.nodes, 4);
+        assert_eq!(resp.leader, 0, "static path serves under the baseline leader");
+        assert_eq!(resp.seq, 0, "first delivered response takes sequence 0");
         let stats = server.shutdown();
         assert_eq!(stats.requests, 1);
+        assert_eq!(stats.failed_on_leader_loss, 0);
         assert!(stats.adaptation.is_none(), "static path reports no adaptation");
         assert!(stats.pipeline.is_none(), "lockstep path reports no pipeline");
     }
@@ -730,11 +828,13 @@ mod tests {
         // submit asynchronously so batches genuinely overlap in the pipeline
         let rxs: Vec<_> =
             inputs.iter().map(|t| server.submit(t.clone()).unwrap()).collect();
-        for (input, rx) in inputs.iter().zip(rxs) {
+        for (i, (input, rx)) in inputs.iter().zip(rxs).enumerate() {
             let resp = rx.recv().expect("request lost in the pipeline");
             let reference = crate::compute::run_reference(&model, &ws, input);
             assert_eq!(reference.max_abs_diff(&resp.output), 0.0);
             assert_eq!(resp.nodes, 4);
+            assert_eq!(resp.leader, 0);
+            assert_eq!(resp.seq, i as u64, "completion order must match submission order");
             assert!(resp.virtual_time > 0.0);
         }
         let stats = server.shutdown();

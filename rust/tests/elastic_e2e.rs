@@ -74,6 +74,7 @@ fn server_survives_node_churn_without_losing_requests() {
             "request {i} output diverged after adaptation"
         );
         assert!(resp.virtual_time > 0.0);
+        assert_eq!(resp.leader, 0, "worker churn must not move leadership");
         nodes_seen.push(resp.nodes);
     }
 
@@ -99,6 +100,160 @@ fn server_survives_node_churn_without_losing_requests() {
     assert!(m.replans >= 2, "degraded cell never planned: {m}");
     assert!(m.cache_hits >= 1, "rejoin did not reuse the warm plan: {m}");
     assert!(m.cache_hit_rate() > 0.0);
+    assert!(
+        m.speculative_hits >= 1,
+        "worker loss was not served from the speculative cache: {m}"
+    );
+    assert_eq!(m.leader_handoffs, 0, "worker churn must not hand off leadership: {m}");
+}
+
+#[test]
+fn server_survives_leader_loss_in_lockstep() {
+    // The leader (node 0) dies permanently mid-stream. Lockstep leaves
+    // nothing in flight at a boundary, so no request fails: the next batch
+    // simply executes with rank 1 elected leader, outputs stay bit-exact,
+    // and the failover is served from the speculative plan cache.
+    let model = zoo::edgenet(16);
+    let base = Testbed::new(4, Topology::Ring, Bandwidth::gbps(1.0));
+    let plan4 = plan_for_testbed(&model, &base);
+    let c4 = engine::evaluate(&model, &plan4, &base).total;
+    let trace = ConditionTrace::stable(4).with_outage(0, 2.5 * c4, f64::INFINITY);
+
+    let server = Server::start_elastic(
+        model.clone(),
+        WeightStore::for_model(&model, 5),
+        base.clone(),
+        trace,
+        per_request_batches(),
+        ElasticConfig::default(),
+    );
+    let ws = WeightStore::for_model(&model, 5);
+    let n_requests = 8u64;
+    let mut seen = Vec::new();
+    for i in 0..n_requests {
+        let input = Tensor::random(16, 16, 3, 7000 + i);
+        let reference = run_reference(&model, &ws, &input);
+        let resp = server.infer(input).expect("request lost");
+        assert_eq!(
+            reference.max_abs_diff(&resp.output),
+            0.0,
+            "request {i} output diverged after leader failover"
+        );
+        assert_eq!(resp.seq, i, "completion order broken");
+        seen.push((resp.nodes, resp.leader));
+    }
+    // batches 0..=2 run healthy (vt = 0, c4, 2c4 < 2.5·c4) under leader 0;
+    // batch 3 at vt = 3c4 sees the dead leader and elects rank 1
+    assert_eq!(&seen[..3], &[(4, 0), (4, 0), (4, 0)], "degraded early");
+    for (i, &(nodes, leader)) in seen.iter().enumerate().skip(3) {
+        assert_eq!((nodes, leader), (3, 1), "request {i} not under the new leader");
+    }
+
+    let stats = server.shutdown();
+    assert_eq!(stats.requests, n_requests);
+    assert_eq!(stats.failed_on_leader_loss, 0, "lockstep has nothing in flight to fail");
+    let m = stats.adaptation.expect("elastic path reports adaptation");
+    assert_eq!(m.failovers, 1, "{m}");
+    assert_eq!(m.leader_handoffs, 1, "leader loss must count a handoff: {m}");
+    assert!(
+        m.speculative_hits >= 1,
+        "leader failover was not served from the speculative cache: {m}"
+    );
+    assert_eq!(m.inline_replans, 0, "{m}");
+}
+
+#[test]
+fn pipelined_leader_loss_aborts_in_flight_and_readmits_the_rest() {
+    // The pipelined acceptance property for leader death: the generation
+    // aborts (in-flight requests fail explicitly — reported, never silent),
+    // queued requests re-admit under the elected leader, later responses
+    // ride the surviving 3-node cluster bit-exactly, and the failover plan
+    // comes from the speculative cache.
+    let model = zoo::edgenet(16);
+    let base = Testbed::new(4, Topology::Ring, Bandwidth::gbps(1.0));
+    let plan4 = plan_for_testbed(&model, &base);
+    let c4 = engine::evaluate(&model, &plan4, &base).total;
+    let trace = ConditionTrace::stable(4).with_outage(0, 2.5 * c4, f64::INFINITY);
+
+    let cfg = ServeConfig {
+        max_batch: 1,
+        batch_window: Duration::ZERO,
+        queue_depth: 32,
+        pipeline_depth: 4,
+    };
+    let server = Server::start_elastic(
+        model.clone(),
+        WeightStore::for_model(&model, 5),
+        base.clone(),
+        trace,
+        cfg,
+        ElasticConfig::default(),
+    );
+    let ws = WeightStore::for_model(&model, 5);
+    let n_requests = 10u64;
+    let inputs: Vec<Tensor> = (0..n_requests)
+        .map(|i| Tensor::random(16, 16, 3, 8000 + i))
+        .collect();
+    let rxs: Vec<_> = inputs
+        .iter()
+        .map(|t| server.submit(t.clone()).expect("admission failed"))
+        .collect();
+
+    let mut ok = 0u64;
+    let mut failed = 0u64;
+    let mut last_seq: Option<u64> = None;
+    for (i, (input, rx)) in inputs.iter().zip(rxs).enumerate() {
+        match rx.recv() {
+            Ok(resp) => {
+                ok += 1;
+                let reference = run_reference(&model, &ws, input);
+                assert_eq!(
+                    reference.max_abs_diff(&resp.output),
+                    0.0,
+                    "request {i} output diverged"
+                );
+                if let Some(prev) = last_seq {
+                    assert!(resp.seq > prev, "request {i} delivered out of order");
+                }
+                last_seq = Some(resp.seq);
+                if resp.nodes == 3 {
+                    assert_eq!(resp.leader, 1, "3-node generation must run under rank 1");
+                } else {
+                    assert_eq!((resp.nodes, resp.leader), (4, 0));
+                }
+                // the boundary at vt = 3c4 aborts the old generation, so
+                // every request from index 3 on re-admits under the new
+                // leader deterministically
+                if i >= 3 {
+                    assert_eq!((resp.nodes, resp.leader), (3, 1), "request {i}");
+                }
+            }
+            Err(_) => {
+                failed += 1;
+                assert!(i < 3, "only pre-failover in-flight requests may fail (req {i})");
+            }
+        }
+    }
+    assert_eq!(ok + failed, n_requests, "a request vanished without a verdict");
+
+    let stats = server.shutdown();
+    assert_eq!(stats.requests, n_requests);
+    assert_eq!(stats.failed_on_shutdown, 0);
+    assert_eq!(
+        stats.failed_on_leader_loss, failed,
+        "every client-observed failure must be accounted to the leader loss"
+    );
+    let p = stats.pipeline.expect("pipelined path reports stage stats");
+    assert!(p.generations >= 2, "leader loss must rebuild the pipeline: {p}");
+    assert_eq!(p.items, ok, "delivered items must match client-side oks");
+    let m = stats.adaptation.expect("elastic path reports adaptation");
+    assert_eq!(m.failovers, 1, "{m}");
+    assert_eq!(m.leader_handoffs, 1, "{m}");
+    assert!(
+        m.speculative_hits >= 1,
+        "leader failover was not served from the speculative cache: {m}"
+    );
+    assert_eq!(m.inline_replans, 0, "{m}");
 }
 
 #[test]
