@@ -68,10 +68,14 @@ fn main() {
     println!("\nadaptation over {:.0}s: {m}", exp.horizon);
     println!("peak per-item cost across the day: {:.3} ms", peak_cost * 1e3);
     println!(
-        "plan cache: {} entries, {:.0}% hit rate\n",
+        "plan cache: {} entries, {:.0}% hit rate",
         ctl.cache().len(),
         m.cache_hit_rate() * 100.0
     );
+    // which condition cells a day of drift leaves warm (by bandwidth bucket)
+    let mut warm: Vec<u32> = ctl.cache().keys().iter().map(|k| k.snapshot.bw_bucket).collect();
+    warm.sort_unstable();
+    println!("warm cells (bandwidth buckets, 1/8 steps): {warm:?}\n");
     if !ctl.events().is_empty() {
         let mut t = Table::new(["t (s)", "reason", "nodes", "before (ms)", "after (ms)"]);
         for e in ctl.events() {

@@ -26,7 +26,7 @@ use flexpie::model::zoo;
 use flexpie::net::{Bandwidth, Testbed, Topology};
 use flexpie::planner::plan_for_testbed;
 use flexpie::serve::ServeConfig;
-use flexpie::util::bench::{black_box, BenchRunner};
+use flexpie::util::bench::{black_box, emit_result, BenchRunner};
 use flexpie::util::json::Json;
 
 fn main() {
@@ -111,7 +111,7 @@ fn main() {
     out.verify().expect("chaos invariants violated in bench");
     println!("chaos drill: {out}");
 
-    let summary = Json::obj(vec![
+    emit_result(vec![
         ("leader_failover_decide_us", Json::Num(leader_failover.mean_secs() * 1e6)),
         ("worker_failover_decide_us", Json::Num(worker_failover.mean_secs() * 1e6)),
         ("abort_3_in_flight_ms", Json::Num(abort.mean_secs() * 1e3)),
@@ -125,5 +125,4 @@ fn main() {
         ("chaos_failed_reported", Json::Num(out.failed_reported as f64)),
         ("chaos_lost", Json::Num(out.lost as f64)),
     ]);
-    println!("RESULT {}", summary.to_string());
 }

@@ -11,7 +11,7 @@ use flexpie::cost::{CostSource, MemoStore};
 use flexpie::model::zoo;
 use flexpie::net::{Bandwidth, Testbed, Topology};
 use flexpie::planner::{prewarm_memo, Dpp, DppConfig};
-use flexpie::util::bench::BenchRunner;
+use flexpie::util::bench::{emit_result, BenchRunner};
 use flexpie::util::json::Json;
 
 fn main() {
@@ -61,7 +61,7 @@ fn main() {
     });
     let (_, mstats) = Dpp::with_config(&model, &memo_cost, par_cfg.clone()).plan_with_stats();
 
-    let summary = Json::obj(vec![
+    emit_result(vec![
         ("bench", Json::Str("dpp_search".into())),
         ("model", Json::Str(model.name.clone())),
         ("nodes", Json::Num(4.0)),
@@ -81,5 +81,4 @@ fn main() {
         ("memo_sync_warm_rate", Json::Num(mstats.memo.sync_warm_rate())),
         ("memo_sync_misses", Json::Num(mstats.memo.sync_misses as f64)),
     ]);
-    println!("RESULT {}", summary.to_string());
 }

@@ -31,7 +31,7 @@ use flexpie::planner::{
     plan_batch, plan_for_testbed, plan_for_testbed_opts, prewarm_memo, PlannerOpts,
 };
 use flexpie::serve::{ServeConfig, Server};
-use flexpie::util::bench::{black_box, BenchRunner};
+use flexpie::util::bench::{black_box, emit_result, BenchRunner};
 use flexpie::util::json::Json;
 
 fn main() {
@@ -142,7 +142,7 @@ fn main() {
     println!("batch-boundary stall: {stall}");
 
     // --- single-line JSON summary -------------------------------------------
-    let summary = Json::obj(vec![
+    emit_result(vec![
         ("bench", Json::Str("elastic_replan".into())),
         ("model", Json::Str(model.name.clone())),
         ("nodes", Json::Num(4.0)),
@@ -172,5 +172,4 @@ fn main() {
         ("speculative_hits", Json::Num(adapt.speculative_hits as f64)),
         ("inline_replans", Json::Num(adapt.inline_replans as f64)),
     ]);
-    println!("RESULT {}", summary.to_string());
 }

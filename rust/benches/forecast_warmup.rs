@@ -1,0 +1,132 @@
+//! Forecast-warmed vs reactive adaptation — what pre-warming the coming
+//! regime buys the serving path.
+//!
+//! Two frontends ride the same deterministic world: a staircase bandwidth
+//! descent with a node death scripted to land **at the same boundary as a
+//! condition-cell shift** — the compound case PR 2's reactive speculation
+//! cannot cover (its n−1 cells are warm for the *old* bandwidth only, so
+//! the failover rendezvous runs a cold search).
+//!
+//! * **reactive** — trace-driven, forecasting off: the PR 1–4 behavior.
+//! * **forecast** — the same conditions observed through the telemetry
+//!   path (probes → store → forecaster), with the background planner
+//!   pre-warming the projected cell and its n−1 set at the *forecast*
+//!   bandwidth.
+//!
+//! Single-line `RESULT` JSON carries the failover-boundary stall of both
+//! paths (max boundary stall — the rendezvous is the only stall either
+//! path has), the warm-up ratio, and the forecast hit/miss/horizon-error
+//! counters.
+//!
+//! ```bash
+//! cargo bench --bench forecast_warmup
+//! FLEXPIE_BENCH_FAST=1 cargo bench --bench forecast_warmup   # CI smoke
+//! ```
+
+use flexpie::elastic::{ConditionTrace, ElasticConfig, ElasticFrontend};
+use flexpie::metrics::{AdaptationMetrics, Summary};
+use flexpie::model::zoo;
+use flexpie::net::{Bandwidth, Testbed, Topology};
+use flexpie::telemetry::{ForecastConfig, TelemetryConfig, TelemetrySource};
+use flexpie::util::bench::emit_result;
+use flexpie::util::json::Json;
+
+/// Staircase descent: 5% of baseline bandwidth per virtual second, from
+/// t = 10 down to 75% at t = 15 — quantized-cell shifts at known times.
+fn staircase(nodes: usize) -> ConditionTrace {
+    ConditionTrace::stable(nodes)
+        .with_bandwidth_dip(11.0, 12.0, 0.95)
+        .with_bandwidth_dip(12.0, 13.0, 0.90)
+        .with_bandwidth_dip(13.0, 14.0, 0.85)
+        .with_bandwidth_dip(14.0, 15.0, 0.80)
+        .with_bandwidth_dip(15.0, f64::INFINITY, 0.75)
+}
+
+const BOUNDARY_DT: f64 = 0.5;
+const BOUNDARIES: usize = 41; // t = 0 .. 20
+
+/// Drive one frontend across the schedule, quiescing the planner each
+/// boundary so cache warmth — not thread scheduling — is the only variable
+/// between the two paths.
+fn drive(mut fe: ElasticFrontend) -> (AdaptationMetrics, Summary, usize) {
+    let mut min_nodes = usize::MAX;
+    for k in 0..BOUNDARIES {
+        let d = fe.acquire(k as f64 * BOUNDARY_DT);
+        min_nodes = min_nodes.min(d.nodes);
+        fe.quiesce();
+    }
+    let (m, stalls) = fe.finish();
+    (m, stalls, min_nodes)
+}
+
+fn main() {
+    // FLEXPIE_BENCH_FAST=1 shrinks the planned model (the drive schedule is
+    // model-independent — the scenario depends only on condition buckets),
+    // keeping the CI smoke cheap while preserving the warm-vs-cold contrast.
+    let fast = std::env::var("FLEXPIE_BENCH_FAST").is_ok();
+    let model = zoo::mobilenet_v1(224, 1000).truncated(if fast { 6 } else { 12 });
+    let base = Testbed::new(4, Topology::Ring, Bandwidth::gbps(1.0));
+    // The node dies inside (13.5, 14.0]: the t = 14.0 boundary sees the
+    // death AND the 0.80 window — a bandwidth bucket no reactive n−1
+    // speculation has covered (its cells are warm for the old bucket), so
+    // the reactive rendezvous must run a cold search. The measured path's
+    // estimate lags half a boundary, so its failover lands in the covered
+    // bucket and its own shift to the new bucket was forecast-prewarmed.
+    let world = staircase(4).with_outage(2, 13.75, f64::INFINITY);
+
+    // --- reactive: trace-driven, no forecasting ----------------------------
+    let reactive_fe = ElasticFrontend::start(
+        model.clone(),
+        base.clone(),
+        world.clone(),
+        ElasticConfig { cache_capacity: 64, ..ElasticConfig::default() },
+    );
+    let (reactive_m, reactive_stalls, reactive_min) = drive(reactive_fe);
+    println!("reactive:  {reactive_m}");
+    println!("reactive boundary stalls: {reactive_stalls}");
+
+    // --- forecast: measured telemetry + pre-warming ------------------------
+    let source = TelemetrySource::new(world, &base, TelemetryConfig::default());
+    let forecast_fe = ElasticFrontend::start_with_source(
+        model.clone(),
+        base,
+        Box::new(source),
+        ElasticConfig {
+            cache_capacity: 64,
+            forecast: Some(ForecastConfig::default()),
+            ..ElasticConfig::default()
+        },
+    );
+    let (forecast_m, forecast_stalls, forecast_min) = drive(forecast_fe);
+    println!("forecast:  {forecast_m}");
+    println!("forecast boundary stalls: {forecast_stalls}");
+
+    assert_eq!(reactive_min, 3, "reactive path never saw the failover");
+    assert_eq!(forecast_min, 3, "measured path never saw the failover");
+    assert_eq!(reactive_m.inline_replans, 0);
+    assert_eq!(forecast_m.inline_replans, 0);
+
+    // the only stall either path has is the failover rendezvous: reactive
+    // pays a cold search there, forecast-warmed pays a cache lookup
+    let reactive_us = reactive_stalls.max.as_secs_f64() * 1e6;
+    let forecast_us = forecast_stalls.max.as_secs_f64() * 1e6;
+    emit_result(vec![
+        ("bench", Json::Str("forecast_warmup".into())),
+        ("model", Json::Str(model.name.clone())),
+        ("boundaries", Json::Num(BOUNDARIES as f64)),
+        ("reactive_failover_stall_us", Json::Num(reactive_us)),
+        ("forecast_failover_stall_us", Json::Num(forecast_us)),
+        ("warmup_speedup", Json::Num(reactive_us / forecast_us.max(1e-3))),
+        ("reactive_replans", Json::Num(reactive_m.replans as f64)),
+        ("forecast_replans", Json::Num(forecast_m.replans as f64)),
+        ("reactive_speculative_hits", Json::Num(reactive_m.speculative_hits as f64)),
+        ("forecast_speculative_hits", Json::Num(forecast_m.speculative_hits as f64)),
+        ("forecasts", Json::Num(forecast_m.forecasts as f64)),
+        ("forecast_plans", Json::Num(forecast_m.forecast_plans as f64)),
+        ("forecast_hits", Json::Num(forecast_m.forecast_hits as f64)),
+        ("forecast_misses", Json::Num(forecast_m.forecast_misses as f64)),
+        ("forecast_mean_bucket_err", Json::Num(forecast_m.forecast_mean_bucket_err())),
+        ("stall_p99_reactive_us", Json::Num(reactive_stalls.p99.as_secs_f64() * 1e6)),
+        ("stall_p99_forecast_us", Json::Num(forecast_stalls.p99.as_secs_f64() * 1e6)),
+    ]);
+}

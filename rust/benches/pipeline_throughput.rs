@@ -31,7 +31,7 @@ use flexpie::model::zoo;
 use flexpie::partition::{Plan, Scheme};
 use flexpie::planner::exhaustive::{bottleneck_cost, stage_costs};
 use flexpie::planner::{Dpp, DppConfig};
-use flexpie::util::bench::black_box;
+use flexpie::util::bench::{black_box, emit_result};
 use flexpie::util::json::Json;
 
 fn main() {
@@ -103,7 +103,7 @@ fn main() {
         thr_plan.est_cost * 1e3
     );
 
-    let summary = Json::obj(vec![
+    emit_result(vec![
         ("bench", Json::Str("pipeline_throughput".into())),
         ("experiment", exp.to_json()),
         ("model", Json::Str(model.name.clone())),
@@ -119,5 +119,4 @@ fn main() {
         ("latency_objective_bottleneck_ms", Json::Num(lat_bottleneck * 1e3)),
         ("throughput_objective_bottleneck_ms", Json::Num(thr_plan.est_cost * 1e3)),
     ]);
-    println!("RESULT {}", summary.to_string());
 }

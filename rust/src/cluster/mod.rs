@@ -37,6 +37,20 @@ struct Msg {
     patch: RegionTensor,
 }
 
+/// Per-boundary traffic accounting: the payload and message count one
+/// exchange boundary moved, summed over all nodes. Indexed like the
+/// protocol's boundary counter (0 = scatter, `b + 1` = the exchange after
+/// block `b`, the last entry = gather). This is the observable the
+/// telemetry probes measure ([`crate::telemetry::probe`]): bytes over
+/// elapsed wire time is an effective-bandwidth sample, and the serving
+/// router feeds each batch's totals back through
+/// [`crate::elastic::ConditionSource::observe_traffic`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct BoundaryTraffic {
+    pub bytes: u64,
+    pub msgs: u64,
+}
+
 /// Result of a distributed run.
 #[derive(Debug)]
 pub struct ClusterRun {
@@ -45,6 +59,9 @@ pub struct ClusterRun {
     pub bytes_exchanged: u64,
     /// Number of inter-node messages.
     pub messages: usize,
+    /// The same traffic broken down per exchange boundary — the
+    /// measurement hook for per-link telemetry.
+    pub boundary_traffic: Vec<BoundaryTraffic>,
 }
 
 /// Execute `plan` for `model` on `nodes` simulated devices with real
@@ -100,10 +117,15 @@ pub fn run_distributed(
     let mut output = None;
     let mut bytes = 0u64;
     let mut messages = 0usize;
+    let mut boundary_traffic = vec![BoundaryTraffic::default(); geos.len() + 1];
     for (node, h) in handles.into_iter().enumerate() {
         let res = h.join().expect("node thread panicked");
         bytes += res.sent_bytes;
         messages += res.sent_msgs;
+        for (sum, t) in boundary_traffic.iter_mut().zip(&res.traffic) {
+            sum.bytes += t.bytes;
+            sum.msgs += t.msgs;
+        }
         if node == 0 {
             output = res.output;
         }
@@ -112,6 +134,7 @@ pub fn run_distributed(
         output: output.expect("leader produced no output"),
         bytes_exchanged: bytes,
         messages,
+        boundary_traffic,
     }
 }
 
@@ -144,6 +167,8 @@ struct NodeResult {
     output: Option<Tensor>,
     sent_bytes: u64,
     sent_msgs: usize,
+    /// This node's sent traffic per exchange boundary.
+    traffic: Vec<BoundaryTraffic>,
 }
 
 /// How many patches `to` receives from all peers at `boundary`, given the
@@ -181,6 +206,7 @@ fn node_main(
     let n = layers.len();
     let mut sent_bytes = 0u64;
     let mut sent_msgs = 0usize;
+    let mut traffic = vec![BoundaryTraffic::default(); blocks.len() + 1];
     let mut boundary = 0usize; // scatter = 0, after block b = b+1
 
     // --- scatter -----------------------------------------------------------
@@ -202,6 +228,8 @@ fn node_main(
                     }
                     sent_bytes += patch.t.numel() as u64 * 4;
                     sent_msgs += 1;
+                    traffic[boundary].bytes += patch.t.numel() as u64 * 4;
+                    traffic[boundary].msgs += 1;
                     txs[to].send(Msg { boundary, patch }).unwrap();
                 }
             }
@@ -237,6 +265,8 @@ fn node_main(
                 for rt in &store.patches {
                     sent_bytes += rt.t.numel() as u64 * 4;
                     sent_msgs += 1;
+                    traffic[boundary].bytes += rt.t.numel() as u64 * 4;
+                    traffic[boundary].msgs += 1;
                     txs[0].send(Msg { boundary, patch: rt.clone() }).unwrap();
                 }
             } else {
@@ -248,7 +278,7 @@ fn node_main(
                 let last = &layers[n - 1];
                 let full = Region::full(last.out_h, last.out_w, last.out_c);
                 let out = gathered.extract(&full, &full, true);
-                return NodeResult { output: Some(out), sent_bytes, sent_msgs };
+                return NodeResult { output: Some(out), sent_bytes, sent_msgs, traffic };
             }
         } else {
             let need: Vec<Tile> = geos[bi + 1].entry_need.clone();
@@ -271,6 +301,8 @@ fn node_main(
                         let patch = tmp.patches.pop().unwrap();
                         sent_bytes += patch.t.numel() as u64 * 4;
                         sent_msgs += 1;
+                        traffic[boundary].bytes += patch.t.numel() as u64 * 4;
+                        traffic[boundary].msgs += 1;
                         txs[to].send(Msg { boundary, patch }).unwrap();
                     }
                 }
@@ -286,7 +318,7 @@ fn node_main(
         }
         boundary += 1;
     }
-    NodeResult { output: None, sent_bytes, sent_msgs }
+    NodeResult { output: None, sent_bytes, sent_msgs, traffic }
 }
 
 /// Receiver with reordering: a fast peer may already be sending patches for
@@ -404,6 +436,30 @@ mod tests {
         let run = run_distributed(&model, &plan, &ws, &input, 4);
         assert!(run.bytes_exchanged > 0);
         assert!(run.messages > 0);
+    }
+
+    #[test]
+    fn boundary_traffic_decomposes_the_totals() {
+        // the per-boundary measurement hook must tile the aggregate
+        // accounting exactly: one entry per exchange boundary, summing to
+        // the run totals, with scatter and gather both visibly non-empty
+        let model = zoo::edgenet(16);
+        let ws = WeightStore::for_model(&model, 1);
+        let input = Tensor::random(16, 16, 3, 2);
+        let plan = Plan::uniform(Scheme::InH, model.n_layers());
+        let run = run_distributed(&model, &plan, &ws, &input, 4);
+        assert_eq!(run.boundary_traffic.len(), plan.blocks().len() + 1);
+        let bytes: u64 = run.boundary_traffic.iter().map(|t| t.bytes).sum();
+        let msgs: u64 = run.boundary_traffic.iter().map(|t| t.msgs).sum();
+        assert_eq!(bytes, run.bytes_exchanged, "boundary bytes don't tile the total");
+        assert_eq!(msgs, run.messages as u64, "boundary messages don't tile the total");
+        let scatter = run.boundary_traffic.first().unwrap();
+        let gather = run.boundary_traffic.last().unwrap();
+        assert!(scatter.bytes > 0, "scatter moved nothing");
+        assert!(gather.bytes > 0, "gather moved nothing");
+        // single-node runs move nothing at any boundary
+        let solo = run_distributed(&model, &plan, &ws, &input, 1);
+        assert!(solo.boundary_traffic.iter().all(|t| t.bytes == 0 && t.msgs == 0));
     }
 
     #[test]

@@ -354,6 +354,141 @@ impl ChaosExperiment {
     }
 }
 
+/// A telemetry-driven forecasting experiment: the condition world, probe
+/// cadence, forecast horizon and drive shape behind
+/// `benches/forecast_warmup.rs`, `examples/forecast_serving.rs` and the
+/// `forecast_e2e` CI job.
+#[derive(Debug, Clone)]
+pub struct ForecastExperiment {
+    /// Condition-world profile name (`stable`, `diurnal-drift`,
+    /// `lossy-link`, `node-churn`).
+    pub profile: String,
+    pub seed: u64,
+    /// Virtual-time horizon the experiment drives, seconds.
+    pub horizon: f64,
+    /// Virtual seconds between consulted batch boundaries.
+    pub boundary_dt: f64,
+    /// Forecast horizon, in batch boundaries
+    /// ([`crate::telemetry::ForecastConfig::horizon_boundaries`]).
+    pub horizon_boundaries: usize,
+    /// Active-probe spacing, virtual seconds
+    /// ([`crate::telemetry::TelemetryConfig::probe_interval`]).
+    pub probe_interval: f64,
+    /// Active-probe payload bytes.
+    pub probe_bytes: u64,
+    /// Plan-cache capacity (forecast pre-warming holds more cells warm
+    /// than the reactive default needs).
+    pub cache_capacity: usize,
+}
+
+impl Default for ForecastExperiment {
+    fn default() -> Self {
+        let tcfg = crate::telemetry::TelemetryConfig::default();
+        ForecastExperiment {
+            profile: "diurnal-drift".into(),
+            seed: 7,
+            horizon: 60.0,
+            boundary_dt: 0.5,
+            horizon_boundaries: crate::telemetry::ForecastConfig::default().horizon_boundaries,
+            probe_interval: tcfg.probe_interval,
+            probe_bytes: tcfg.probe_bytes,
+            cache_capacity: 64,
+        }
+    }
+}
+
+impl ForecastExperiment {
+    /// Build the hidden condition world for an `nodes`-device cluster.
+    pub fn world(&self, nodes: usize) -> Result<ConditionTrace, String> {
+        Ok(match self.profile.parse::<Profile>()? {
+            Profile::Stable => ConditionTrace::stable(nodes),
+            Profile::DiurnalDrift => ConditionTrace::diurnal_drift(nodes, self.seed),
+            Profile::LossyLink => ConditionTrace::lossy_link(nodes, self.seed),
+            Profile::NodeChurn => ConditionTrace::node_churn(nodes, self.seed),
+        })
+    }
+
+    /// The ingestion knobs this experiment describes.
+    pub fn telemetry_config(&self) -> crate::telemetry::TelemetryConfig {
+        crate::telemetry::TelemetryConfig {
+            probe_interval: self.probe_interval,
+            probe_bytes: self.probe_bytes,
+            ..crate::telemetry::TelemetryConfig::default()
+        }
+    }
+
+    /// The forecasting knobs this experiment describes.
+    pub fn forecast_config(&self) -> crate::telemetry::ForecastConfig {
+        crate::telemetry::ForecastConfig {
+            horizon_boundaries: self.horizon_boundaries,
+            ..crate::telemetry::ForecastConfig::default()
+        }
+    }
+
+    /// The elastic-controller tuning with forecasting enabled.
+    pub fn elastic_config(&self) -> ElasticConfig {
+        ElasticConfig {
+            cache_capacity: self.cache_capacity,
+            forecast: Some(self.forecast_config()),
+            ..ElasticConfig::default()
+        }
+    }
+
+    /// Number of consulted boundaries the experiment drives.
+    pub fn boundaries(&self) -> usize {
+        (self.horizon / self.boundary_dt).floor() as usize + 1
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("profile", Json::Str(self.profile.clone())),
+            ("seed", Json::Num(self.seed as f64)),
+            ("horizon", Json::Num(self.horizon)),
+            ("boundary_dt", Json::Num(self.boundary_dt)),
+            ("horizon_boundaries", Json::Num(self.horizon_boundaries as f64)),
+            ("probe_interval", Json::Num(self.probe_interval)),
+            ("probe_bytes", Json::Num(self.probe_bytes as f64)),
+            ("cache_capacity", Json::Num(self.cache_capacity as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<ForecastExperiment, String> {
+        let num = |key: &str| v.req(key)?.as_f64().ok_or_else(|| key.to_string());
+        let exp = ForecastExperiment {
+            profile: v
+                .req("profile")?
+                .as_str()
+                .ok_or_else(|| "profile".to_string())?
+                .to_string(),
+            seed: num("seed")? as u64,
+            horizon: num("horizon")?,
+            boundary_dt: num("boundary_dt")?,
+            horizon_boundaries: num("horizon_boundaries")? as usize,
+            probe_interval: num("probe_interval")?,
+            probe_bytes: num("probe_bytes")? as u64,
+            cache_capacity: num("cache_capacity")? as usize,
+        };
+        if !(exp.boundary_dt > 0.0 && exp.boundary_dt.is_finite()) {
+            return Err("boundary_dt must be a positive finite number".into());
+        }
+        if exp.horizon_boundaries == 0 {
+            return Err("horizon_boundaries must be at least 1".into());
+        }
+        if !(exp.probe_interval > 0.0 && exp.probe_interval.is_finite()) {
+            return Err("probe_interval must be a positive finite number".into());
+        }
+        if exp.probe_bytes == 0 {
+            return Err("probe_bytes must be >= 1: a zero-byte probe measures nothing".into());
+        }
+        Ok(exp)
+    }
+
+    pub fn load(path: &std::path::Path) -> std::io::Result<ForecastExperiment> {
+        let v = Json::load(path)?;
+        Self::from_json(&v).map_err(std::io::Error::other)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -416,6 +551,46 @@ mod tests {
         assert_eq!(trace.nodes, 4);
         assert_eq!(trace.profile, Profile::DiurnalDrift);
         assert!(ElasticExperiment { profile: "bogus".into(), ..e }.trace(4).is_err());
+    }
+
+    #[test]
+    fn forecast_experiment_roundtrip_and_configs() {
+        let e = ForecastExperiment { seed: 13, horizon_boundaries: 6, ..Default::default() };
+        let e2 = ForecastExperiment::from_json(&e.to_json()).unwrap();
+        assert_eq!(e2.profile, "diurnal-drift");
+        assert_eq!((e2.seed, e2.horizon_boundaries), (13, 6));
+        assert_eq!(e2.boundary_dt, e.boundary_dt);
+        assert_eq!(e2.probe_bytes, e.probe_bytes);
+        let world = e2.world(4).unwrap();
+        assert_eq!((world.nodes, world.profile), (4, Profile::DiurnalDrift));
+        let ecfg = e2.elastic_config();
+        assert_eq!(ecfg.cache_capacity, e2.cache_capacity);
+        assert_eq!(
+            ecfg.forecast.expect("forecasting must be on").horizon_boundaries,
+            6
+        );
+        assert_eq!(e2.telemetry_config().probe_interval, e2.probe_interval);
+        assert_eq!(e2.boundaries(), 121);
+        // degenerate shapes are rejected
+        let mut j = e.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("boundary_dt".into(), Json::Num(0.0));
+        }
+        assert!(ForecastExperiment::from_json(&j).is_err());
+        let mut j = e.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("horizon_boundaries".into(), Json::Num(0.0));
+        }
+        assert!(ForecastExperiment::from_json(&j).is_err());
+        let mut j = e.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("probe_bytes".into(), Json::Num(0.0));
+        }
+        assert!(
+            ForecastExperiment::from_json(&j).is_err(),
+            "a zero-byte probe config must be rejected at load time"
+        );
+        assert!(ForecastExperiment { profile: "bogus".into(), ..e }.world(4).is_err());
     }
 
     #[test]

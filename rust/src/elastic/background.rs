@@ -30,20 +30,39 @@
 //! The split keeps every batch boundary wait-free in the common case,
 //! bounded by a cache lookup on failover, and never blocked on a DPP
 //! search for any condition the speculative pass has covered.
+//!
+//! Two additions close the loop the purely reactive stack was missing:
+//!
+//! * **Forecast pre-warming** ([`ElasticConfig::forecast`]): the frontend
+//!   fits a [`ForecastEngine`] over the snapshots it already samples —
+//!   scripted or probe-measured, provenance doesn't matter — and when the
+//!   projection leaves the published plan's quantized cell it sends a
+//!   fire-and-forget `Prewarm` ask. The planner fills that cell (and
+//!   pre-speculates its n−1/leader-loss cells at the *forecast* bandwidth)
+//!   once its queue idles, so the shift — and a failover landing with it —
+//!   arrives to a warm cache. Pre-warms never publish: a wrong forecast
+//!   costs a cache entry, never a swap.
+//! * **Staleness accounting** ([`ElasticConfig::stale_after_checks`]):
+//!   drift asks are fire-and-forget, so a wedged planner thread used to be
+//!   invisible — the router would serve an outdated plan forever. Each
+//!   boundary served while an ask has been outstanding past the bound now
+//!   counts into `AdaptationMetrics::stale_plan_boundaries`.
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
 use std::sync::{Arc, RwLock};
 use std::time::{Duration, Instant};
 
 use super::cache::CacheKey;
-use super::conditions::{ClusterSnapshot, ConditionTrace};
+use super::conditions::{ClusterSnapshot, ConditionSource, ConditionTrace};
 use super::controller::{ElasticConfig, ReplanCore};
 use crate::cluster::election::elect_leader;
 use crate::metrics::{summarize, AdaptationMetrics, Summary};
 use crate::model::Model;
 use crate::net::Testbed;
 use crate::partition::Plan;
+use crate::telemetry::ForecastEngine;
 
 /// One published planning decision: everything a batch boundary needs,
 /// immutable once published.
@@ -116,6 +135,13 @@ enum Ask {
     /// The node set changed: decide (speculative cache hit in the covered
     /// cases), publish, then ack so the caller can pick up the new version.
     Failover(ClusterSnapshot, SyncSender<()>),
+    /// Forecasted conditions: warm the cache for the projected cell (and
+    /// its n−1/leader-loss cells at the forecast bandwidth) once the queue
+    /// is idle. Never publishes — the forecast hasn't arrived yet.
+    Prewarm(ClusterSnapshot),
+    /// Test/bench rendezvous: ack once every ask queued before this one —
+    /// deferred pre-warms and idle speculation included — has completed.
+    Sync(SyncSender<()>),
 }
 
 /// The dedicated planner thread plus its publication slot. Usually driven
@@ -164,6 +190,27 @@ impl BackgroundReplanner {
         }
     }
 
+    /// Fire-and-forget forecast pre-warm: the planner fills the projected
+    /// cell (and its failover cells) when its queue next idles.
+    fn prewarm(&self, snap: ClusterSnapshot) {
+        if let Some(tx) = &self.tx {
+            let _ = tx.send(Ask::Prewarm(snap));
+        }
+    }
+
+    /// Block until every ask sent before this call — queued pre-warms and
+    /// the idle speculation pass included — has been fully processed.
+    /// Deterministic rendezvous for tests and benches; the serving path
+    /// never calls it.
+    pub fn quiesce(&self) {
+        let (ack_tx, ack_rx) = sync_channel(1);
+        if let Some(tx) = &self.tx {
+            if tx.send(Ask::Sync(ack_tx)).is_ok() {
+                let _ = ack_rx.recv();
+            }
+        }
+    }
+
     /// Rendezvous: returns once the planner has published a decision for
     /// `snap`'s node set.
     fn failover(&self, snap: ClusterSnapshot) {
@@ -195,6 +242,15 @@ impl Drop for BackgroundReplanner {
     }
 }
 
+/// One deferred single-search work item: the forecast cell itself, or one
+/// of its n−1/leader-loss neighbours at the forecast bandwidth. Expanding
+/// an [`Ask::Prewarm`] into these units is what keeps the interleave bound
+/// honest — the planner re-polls its queue between every search.
+enum PrewarmUnit {
+    Forecast(ClusterSnapshot),
+    Speculative(ClusterSnapshot),
+}
+
 fn planner_main(
     mut core: ReplanCore,
     init_snap: ClusterSnapshot,
@@ -204,36 +260,77 @@ fn planner_main(
     let mut epoch = 1u64;
     // Healthy-cluster speculation runs before the first ask is served, so
     // any failover arriving later in this thread's queue is a cache hit.
-    core.speculate_failovers(&init_snap);
+    let mut cur_snap = init_snap;
+    core.speculate_failovers(&cur_snap);
     while let Ok(first) = rx.recv() {
-        // Drain the queue before re-speculating: a failover rendezvous must
-        // only ever wait behind decide() work (cache-first), never behind a
-        // batch of speculative n−1 searches for a superseded regime.
-        let mut ask = first;
-        let last_snap = loop {
-            let snap = match ask {
-                Ask::Observe(snap) => {
-                    let d = core.decide(&snap);
-                    epoch += 1;
-                    publish(&slot, epoch, &core, &d, &snap);
-                    snap
+        // Drain the queue before any pre-warming or re-speculation: a
+        // failover rendezvous must only ever wait behind decide() work
+        // (cache-first) plus at most the single pre-warm search already in
+        // progress — never behind a whole batch of forecast fills or
+        // speculative n−1 searches for a superseded regime.
+        let mut prewarms: VecDeque<PrewarmUnit> = VecDeque::new();
+        let mut syncs: Vec<SyncSender<()>> = Vec::new();
+        let mut next = Some(first);
+        loop {
+            // serve every decide-class ask currently queued — rendezvous
+            // and drift decisions always jump ahead of deferred pre-warms
+            while let Some(ask) = next.take() {
+                match ask {
+                    Ask::Observe(snap) => {
+                        let d = core.decide(&snap);
+                        epoch += 1;
+                        publish(&slot, epoch, &core, &d, &snap);
+                        cur_snap = snap;
+                    }
+                    Ask::Failover(snap, ack) => {
+                        let d = core.decide(&snap);
+                        epoch += 1;
+                        publish(&slot, epoch, &core, &d, &snap);
+                        let _ = ack.send(());
+                        cur_snap = snap;
+                    }
+                    Ask::Prewarm(snap) => {
+                        // expand into single-search units: the projected
+                        // cell first, then its n−1 cells at the forecast
+                        // bandwidth (none for a lone survivor)
+                        if snap.alive_count() > 1 {
+                            for node in 0..snap.alive.len() {
+                                if snap.alive[node] {
+                                    let mut hyp = snap.clone();
+                                    hyp.alive[node] = false;
+                                    prewarms.push_back(PrewarmUnit::Speculative(hyp));
+                                }
+                            }
+                        }
+                        prewarms.push_front(PrewarmUnit::Forecast(snap));
+                    }
+                    Ask::Sync(ack) => syncs.push(ack),
                 }
-                Ask::Failover(snap, ack) => {
-                    let d = core.decide(&snap);
-                    epoch += 1;
-                    publish(&slot, epoch, &core, &d, &snap);
-                    let _ = ack.send(());
-                    snap
-                }
-            };
-            match rx.try_recv() {
-                Ok(next) => ask = next,
-                Err(_) => break snap,
+                next = rx.try_recv().ok();
             }
-        };
-        // queue is idle: refresh the speculative n−1 set for the regime we
-        // actually ended up in (a no-op for cells the cache already holds)
-        core.speculate_failovers(&last_snap);
+            // queue idle this instant: run ONE deferred single-search
+            // unit, then re-check the queue, so an ask landing mid-batch
+            // waits behind at most the search already started
+            match prewarms.pop_front() {
+                Some(PrewarmUnit::Forecast(snap)) => {
+                    core.prewarm_forecast_cell(&snap);
+                    next = rx.try_recv().ok();
+                }
+                Some(PrewarmUnit::Speculative(snap)) => {
+                    core.speculate_one(&snap);
+                    next = rx.try_recv().ok();
+                }
+                None => break,
+            }
+        }
+        // Pre-warms done and queue idle: refresh the speculative n−1 set
+        // for the regime we actually ended up in (a no-op for cells the
+        // cache already holds). Syncs ack last, so a quiesced caller
+        // observes all of it completed.
+        core.speculate_failovers(&cur_snap);
+        for ack in syncs {
+            let _ = ack.send(());
+        }
     }
     core.metrics()
 }
@@ -280,8 +377,18 @@ pub struct BoundaryDecision {
 /// bound, same invariant as [`super::controller::MAX_EVENTS`]).
 const MAX_STALL_SAMPLES: usize = 4096;
 
+/// Pending forecasts awaiting maturity, bounded so a long-horizon
+/// misconfiguration cannot grow router-side state.
+const MAX_PENDING_FORECASTS: usize = 64;
+
+/// One projection waiting to be scored against reality.
+struct PendingForecast {
+    matures_at: f64,
+    bw_bucket: u32,
+}
+
 pub struct ElasticFrontend {
-    trace: ConditionTrace,
+    source: Box<dyn ConditionSource>,
     model_name: String,
     replanner: BackgroundReplanner,
     /// Locally cached version — the epoch fast path compares against this.
@@ -289,6 +396,30 @@ pub struct ElasticFrontend {
     /// Cell we last asked the planner about, to avoid re-sending an ask
     /// every boundary while the planner is still working on it.
     last_asked: Option<CacheKey>,
+    /// Monotone count of boundary events — full consultations *and*
+    /// pipelined-path probes — so the staleness clock below runs on both
+    /// serving shapes (the pipelined router only probes while the epoch
+    /// hasn't moved, which is exactly the wedged-planner case).
+    boundary_events: u64,
+    /// Boundary-event count when `last_asked` was sent — the staleness
+    /// clock.
+    asked_at_event: u64,
+    /// Boundary events an unanswered ask may span before the stale counter
+    /// runs ([`ElasticConfig::stale_after_checks`]).
+    stale_after: u64,
+    stale_boundaries: u64,
+    /// Forecast-driven pre-warming (None = reactive only).
+    forecast: Option<ForecastEngine>,
+    /// Last projected cell we asked the planner to pre-warm.
+    last_forecast_key: Option<CacheKey>,
+    /// Timestamp of the last snapshot the forecaster scored/observed — a
+    /// probe and the acquire that follows it share a `vt`, and the engine
+    /// must see each boundary exactly once.
+    last_forecast_t: f64,
+    /// Projections waiting to mature for horizon-error accounting.
+    pending_forecasts: VecDeque<PendingForecast>,
+    forecast_evals: u64,
+    forecast_bucket_err: u64,
     checks: u64,
     /// Ring of the most recent boundary-stall samples.
     stalls: Vec<Duration>,
@@ -297,24 +428,48 @@ pub struct ElasticFrontend {
 
 impl ElasticFrontend {
     /// Plan for the trace's `t = 0` conditions and start the background
-    /// planner.
+    /// planner — the scripted-simulation entry point.
     pub fn start(
         model: Model,
         base: Testbed,
         trace: ConditionTrace,
         cfg: ElasticConfig,
     ) -> ElasticFrontend {
-        assert_eq!(trace.nodes, base.nodes, "trace/testbed node mismatch");
-        let snap0 = trace.sample(0.0);
+        Self::start_with_source(model, base, Box::new(trace), cfg)
+    }
+
+    /// Start against any [`ConditionSource`] — scripted traces and the
+    /// probe-measured [`crate::telemetry::TelemetrySource`] drive the
+    /// identical adaptation stack through this one entry point.
+    pub fn start_with_source(
+        model: Model,
+        base: Testbed,
+        mut source: Box<dyn ConditionSource>,
+        cfg: ElasticConfig,
+    ) -> ElasticFrontend {
+        assert_eq!(source.node_count(), base.nodes, "source/testbed node mismatch");
+        let snap0 = source.sample(0.0);
         let model_name = model.name.clone();
+        let stale_after = cfg.stale_after_checks;
+        let forecast = cfg.forecast.clone().map(|fcfg| ForecastEngine::new(base.nodes, fcfg));
         let replanner = BackgroundReplanner::start(model, base, &snap0, cfg);
         let cur = replanner.slot().load();
         ElasticFrontend {
-            trace,
+            source,
             model_name,
             replanner,
             cur,
             last_asked: None,
+            boundary_events: 0,
+            asked_at_event: 0,
+            stale_after,
+            stale_boundaries: 0,
+            forecast,
+            last_forecast_key: None,
+            last_forecast_t: f64::NEG_INFINITY,
+            pending_forecasts: VecDeque::new(),
+            forecast_evals: 0,
+            forecast_bucket_err: 0,
             checks: 0,
             stalls: Vec::new(),
             stall_cursor: 0,
@@ -331,7 +486,8 @@ impl ElasticFrontend {
     pub fn acquire(&mut self, vt: f64) -> BoundaryDecision {
         let t0 = Instant::now();
         self.checks += 1;
-        let snap = self.trace.sample(vt);
+        self.boundary_events += 1;
+        let snap = self.source.sample(vt);
         self.replanner.slot().refresh(&mut self.cur);
         if snap.alive != self.cur.alive {
             self.replanner.failover(snap.clone());
@@ -339,11 +495,9 @@ impl ElasticFrontend {
             self.last_asked = None;
         } else {
             let key = CacheKey::new(&self.model_name, snap.quantize());
-            if key != self.cur.key && self.last_asked.as_ref() != Some(&key) {
-                self.replanner.observe(snap.clone());
-                self.last_asked = Some(key);
-            }
+            self.track_drift_ask(&snap, key);
         }
+        self.run_forecast(&snap);
         let nodes = snap.alive_count();
         let leader = elect_leader(&snap.alive).expect("no surviving node");
         let decision = BoundaryDecision {
@@ -374,34 +528,126 @@ impl ElasticFrontend {
     /// the full `acquire` runs once per drained generation instead of once
     /// per batch.
     pub fn needs_flush(&mut self, vt: f64) -> bool {
-        let snap = self.trace.sample(vt);
+        self.boundary_events += 1;
+        let snap = self.source.sample(vt);
         if snap.alive != self.cur.alive {
             return true;
         }
         let key = CacheKey::new(&self.model_name, snap.quantize());
-        if key != self.cur.key && self.last_asked.as_ref() != Some(&key) {
-            self.replanner.observe(snap);
+        self.track_drift_ask(&snap, key);
+        self.run_forecast(&snap);
+        self.replanner.slot().epoch() != self.cur.epoch
+    }
+
+    /// Shared drift-ask bookkeeping for consultations and probes: send the
+    /// fire-and-forget ask once per cell, stop the clock once the published
+    /// plan covers the cell, and count every boundary event served past the
+    /// staleness bound — on *both* serving shapes, so a wedged planner
+    /// thread surfaces as [`crate::metrics::AdaptationMetrics`]'s
+    /// `stale_plan_boundaries` no matter how the router drives us.
+    fn track_drift_ask(&mut self, snap: &ClusterSnapshot, key: CacheKey) {
+        if key == self.cur.key {
+            // published plan covers this cell: any outstanding ask is
+            // satisfied (or superseded) — stop the staleness clock
+            self.last_asked = None;
+            return;
+        }
+        // The clock anchors at the OLDEST unanswered ask and only resets
+        // once a publication covers the conditions being served: under
+        // continuing drift each new cell re-asks, but a wedged planner
+        // must still trip the bound — resetting per ask would hide it for
+        // as long as the conditions keep moving.
+        if self.last_asked.is_none() {
+            self.asked_at_event = self.boundary_events;
+        } else if self.boundary_events.saturating_sub(self.asked_at_event) > self.stale_after {
+            // an ask has been outstanding past the staleness bound and
+            // this boundary is being served on the outdated plan: a wedged
+            // planner thread surfaces here instead of staying silent
+            self.stale_boundaries += 1;
+        }
+        if self.last_asked.as_ref() != Some(&key) {
+            self.replanner.observe(snap.clone());
             self.last_asked = Some(key);
         }
-        self.replanner.slot().epoch() != self.cur.epoch
     }
 
     /// Whether original-rank `leader` is down at virtual time `vt` — the
     /// pipelined router's second probe, distinguishing a *leader* loss
     /// (the gather owner holding every in-flight output is gone → the
     /// generation must abort and its requests fail explicitly) from any
-    /// other flush (drain normally; outputs stay reachable). Pure trace
+    /// other flush (drain normally; outputs stay reachable). Pure source
     /// sampling: no planner interaction, no counters.
-    pub fn leader_lost(&self, vt: f64, leader: usize) -> bool {
-        !self.trace.sample(vt).alive[leader]
+    pub fn leader_lost(&mut self, vt: f64, leader: usize) -> bool {
+        !self.source.sample(vt).alive[leader]
+    }
+
+    /// Forward a passive traffic observation (boundary payload `bytes` in
+    /// `msgs` messages, finished at `vt`) to the condition source. The
+    /// router calls this after each executed batch: for a measured source
+    /// the cluster's own traffic becomes the bandwidth probe; scripted
+    /// traces ignore it.
+    pub fn observe_traffic(&mut self, vt: f64, bytes: u64, msgs: u64) {
+        self.source.observe_traffic(vt, bytes, msgs);
+    }
+
+    /// Deterministic rendezvous with the planner thread (see
+    /// [`BackgroundReplanner::quiesce`]); tests and benches only.
+    pub fn quiesce(&self) {
+        self.replanner.quiesce();
+    }
+
+    /// Feed the forecaster and, when the projection leaves the published
+    /// plan's cell, ask the planner to pre-warm it. Also scores matured
+    /// projections against the conditions that actually arrived.
+    fn run_forecast(&mut self, snap: &ClusterSnapshot) {
+        if self.forecast.is_none() || snap.t <= self.last_forecast_t {
+            // reactive-only, or this boundary was already observed (a
+            // pipelined probe and the acquire that follows share a vt —
+            // scoring it twice would inflate the horizon-error counters)
+            return;
+        }
+        self.last_forecast_t = snap.t;
+        let Some(engine) = &mut self.forecast else {
+            return;
+        };
+        // score matured projections against reality first
+        let actual_bucket = snap.quantize().bw_bucket;
+        while let Some(front) = self.pending_forecasts.front() {
+            if front.matures_at > snap.t {
+                break;
+            }
+            let predicted = self.pending_forecasts.pop_front().unwrap().bw_bucket;
+            self.forecast_evals += 1;
+            self.forecast_bucket_err += u64::from(predicted.abs_diff(actual_bucket));
+        }
+        engine.observe(snap);
+        let Some(projected) = engine.projected() else {
+            return;
+        };
+        if self.pending_forecasts.len() == MAX_PENDING_FORECASTS {
+            self.pending_forecasts.pop_front();
+        }
+        self.pending_forecasts.push_back(PendingForecast {
+            matures_at: projected.t,
+            bw_bucket: projected.quantize().bw_bucket,
+        });
+        let key = CacheKey::new(&self.model_name, projected.quantize());
+        if key != self.cur.key && self.last_forecast_key.as_ref() != Some(&key) {
+            self.last_forecast_key = Some(key);
+            self.replanner.prewarm(projected);
+        }
     }
 
     /// Stop the planner (draining queued asks) and return the adaptation
     /// counters plus the distribution of batch-boundary acquisition stalls.
     pub fn finish(mut self) -> (AdaptationMetrics, Summary) {
         let mut metrics = self.replanner.finish();
-        // checks are a router-side notion: one per consulted boundary
+        // checks and the router-side forecast/staleness accounting are a
+        // frontend notion: fold them in here
         metrics.checks = self.checks;
+        metrics.stale_plan_boundaries = self.stale_boundaries;
+        metrics.forecast_evals = self.forecast_evals;
+        metrics.forecast_bucket_err = self.forecast_bucket_err;
         (metrics, summarize(&self.stalls))
     }
 }
@@ -530,6 +776,156 @@ mod tests {
             "leader failover was not served from the speculative cache: {m}"
         );
         assert_eq!(m.inline_replans, 0, "{m}");
+    }
+
+    /// A frontend whose planner is *wedged*: the ask channel exists and
+    /// accepts sends, but nothing ever drains it or publishes. Exactly the
+    /// failure mode the staleness bound is for, constructed deterministically.
+    fn wedged_frontend(
+        trace: ConditionTrace,
+        stale_after: u64,
+    ) -> (ElasticFrontend, Receiver<Ask>) {
+        let v0 = version(1);
+        let slot = Arc::new(PlanSlot::new(v0));
+        let (tx, rx) = channel::<Ask>();
+        let replanner = BackgroundReplanner { slot: slot.clone(), tx: Some(tx), handle: None };
+        let cur = slot.load();
+        let fe = ElasticFrontend {
+            source: Box::new(trace),
+            model_name: "m".into(),
+            replanner,
+            cur,
+            last_asked: None,
+            boundary_events: 0,
+            asked_at_event: 0,
+            stale_after,
+            stale_boundaries: 0,
+            forecast: None,
+            last_forecast_key: None,
+            last_forecast_t: f64::NEG_INFINITY,
+            pending_forecasts: VecDeque::new(),
+            forecast_evals: 0,
+            forecast_bucket_err: 0,
+            checks: 0,
+            stalls: Vec::new(),
+            stall_cursor: 0,
+        };
+        (fe, rx)
+    }
+
+    #[test]
+    fn wedged_planner_surfaces_as_stale_plan_boundaries() {
+        // permanent collapse at t = 0: every boundary sits outside the
+        // published plan's cell, the drift ask goes out once, and nothing
+        // ever answers it — after `stale_after` more boundaries, each
+        // further boundary on the old plan must count as stale
+        let trace = ConditionTrace::stable(4).with_bandwidth_dip(0.0, f64::INFINITY, 0.1);
+        let (mut fe, rx) = wedged_frontend(trace, 2);
+        for k in 0..6 {
+            let d = fe.acquire(k as f64 + 0.5);
+            assert_eq!(d.nodes, 4, "wedged planner must not affect serving");
+        }
+        // exactly one ask went out (no re-send storm against a dead thread)
+        assert_eq!(rx.try_iter().count(), 1, "ask was re-sent every boundary");
+        let (m, stalls) = fe.finish();
+        assert_eq!(m.checks, 6);
+        // asked at check 1; checks 4, 5, 6 exceed the bound of 2
+        assert_eq!(m.stale_plan_boundaries, 3, "{m}");
+        assert_eq!(stalls.count, 6);
+    }
+
+    #[test]
+    fn wedged_planner_stays_visible_under_continuing_drift() {
+        // conditions keep crossing cells while the planner is wedged: each
+        // new cell re-asks, but the staleness clock must anchor at the
+        // oldest unanswered ask — drift must not keep resetting it, or the
+        // wedge would stay invisible exactly when it hurts most
+        let trace = ConditionTrace::stable(4)
+            .with_bandwidth_dip(0.0, 2.0, 0.8)
+            .with_bandwidth_dip(2.0, 4.0, 0.6)
+            .with_bandwidth_dip(4.0, f64::INFINITY, 0.4);
+        let (mut fe, rx) = wedged_frontend(trace, 2);
+        for k in 0..6 {
+            fe.acquire(k as f64 + 0.5); // cells: 0.8, 0.8, 0.6, 0.6, 0.4, 0.4
+        }
+        assert_eq!(rx.try_iter().count(), 3, "one ask per newly entered cell");
+        let (m, _) = fe.finish();
+        // oldest unanswered ask at event 1; events 4, 5, 6 exceed bound 2
+        assert_eq!(m.stale_plan_boundaries, 3, "drift reset the staleness clock: {m}");
+    }
+
+    #[test]
+    fn wedged_planner_surfaces_through_pipelined_probes_too() {
+        // the pipelined router only probes (needs_flush) while the epoch
+        // hasn't moved — exactly the wedged case — so the canary must fire
+        // from probes alone, without a single full consultation
+        let trace = ConditionTrace::stable(4).with_bandwidth_dip(0.0, f64::INFINITY, 0.1);
+        let (mut fe, rx) = wedged_frontend(trace, 2);
+        for k in 0..6 {
+            assert!(!fe.needs_flush(k as f64 + 0.5), "a wedged planner cannot publish");
+        }
+        assert_eq!(rx.try_iter().count(), 1, "ask was re-sent every probe");
+        let (m, _) = fe.finish();
+        assert_eq!(m.checks, 0, "probes must not count as consultations");
+        // asked at probe event 1; events 4, 5, 6 exceed the bound of 2
+        assert_eq!(m.stale_plan_boundaries, 3, "{m}");
+    }
+
+    #[test]
+    fn healthy_planner_never_reports_staleness() {
+        // the same collapse against a live planner: the ask is answered,
+        // the new cell is adopted, and the stale counter stays at zero
+        let model = zoo::edgenet(16);
+        let trace = ConditionTrace::stable(4).with_bandwidth_dip(1.0, f64::INFINITY, 0.1);
+        let cfg = ElasticConfig { stale_after_checks: 1, ..ElasticConfig::default() };
+        let mut fe = ElasticFrontend::start(model, base(), trace, cfg);
+        for k in 0..8 {
+            fe.acquire(k as f64 + 0.5);
+            // rendezvous so the drift publication always lands within the
+            // (deliberately tight) one-boundary staleness bound
+            fe.quiesce();
+        }
+        let (m, _) = fe.finish();
+        assert_eq!(m.stale_plan_boundaries, 0, "{m}");
+        assert!(m.replans >= 2, "collapse never replanned: {m}");
+    }
+
+    #[test]
+    fn forecast_prewarms_the_coming_cell_and_serves_it_warm() {
+        // A scripted staircase descent (no RNG, no trig): the forecaster
+        // must project the next quantized cell from the trend, the planner
+        // must pre-warm it, and the shift itself must be a forecast-
+        // attributed cache hit that runs no new search at the boundary.
+        let model = zoo::edgenet(16);
+        let trace = ConditionTrace::stable(4)
+            .with_bandwidth_dip(1.0, 2.0, 0.95)
+            .with_bandwidth_dip(2.0, 3.0, 0.90)
+            .with_bandwidth_dip(3.0, 4.0, 0.85)
+            .with_bandwidth_dip(4.0, 5.0, 0.80)
+            .with_bandwidth_dip(5.0, f64::INFINITY, 0.75);
+        let cfg = ElasticConfig {
+            forecast: Some(crate::telemetry::ForecastConfig::default()),
+            ..ElasticConfig::default()
+        };
+        let mut fe = ElasticFrontend::start(model, base(), trace, cfg);
+        for k in 0..20 {
+            let d = fe.acquire(k as f64 * 0.5);
+            assert_eq!(d.nodes, 4);
+            // rendezvous: pre-warms complete before the next boundary, so
+            // the assertion below is deterministic
+            fe.quiesce();
+        }
+        let (m, _) = fe.finish();
+        assert!(m.forecasts >= 1, "no pre-warm was ever requested: {m}");
+        assert!(m.forecast_plans >= 1, "no forecast cell was ever planned: {m}");
+        assert!(
+            m.forecast_hits >= 1,
+            "a predicted shift was not served from the forecast-warmed cache: {m}"
+        );
+        assert!(m.forecast_evals >= 1, "no projection ever matured: {m}");
+        assert_eq!(m.inline_replans, 0, "{m}");
+        assert_eq!(m.failovers, 0, "{m}");
+        assert_eq!(m.stale_plan_boundaries, 0, "{m}");
     }
 
     #[test]

@@ -72,6 +72,14 @@ impl PlanCache {
         self.map.contains_key(key)
     }
 
+    /// The currently cached condition cells (arbitrary order), without
+    /// touching recency or counters — warm-set introspection for logs and
+    /// examples (`examples/elastic_serving.rs` prints the cells a day of
+    /// drift leaves warm). Cheap: capacities are tens of entries.
+    pub fn keys(&self) -> Vec<CacheKey> {
+        self.map.keys().cloned().collect()
+    }
+
     /// Look up a warm plan, updating recency and hit/miss counters.
     pub fn get(&mut self, key: &CacheKey) -> Option<Arc<Plan>> {
         self.tick += 1;
@@ -208,6 +216,21 @@ mod tests {
             assert!(cache.peek(k), "recent entry evicted");
         }
         assert_eq!(cache.len(), 3);
+    }
+
+    #[test]
+    fn keys_report_the_warm_set_without_counting() {
+        let mut cache = PlanCache::new(4);
+        assert!(cache.keys().is_empty());
+        cache.put(key("a", 0.0), dummy_plan(4));
+        cache.put(key("b", 0.0), dummy_plan(4));
+        let (h0, m0) = (cache.hits, cache.misses);
+        let mut keys = cache.keys();
+        keys.sort_by(|a, b| a.model.cmp(&b.model));
+        assert_eq!(keys.len(), 2);
+        assert_eq!(keys[0].model, "a");
+        assert_eq!(keys[1].model, "b");
+        assert_eq!((cache.hits, cache.misses), (h0, m0), "keys() touched counters");
     }
 
     #[test]

@@ -17,6 +17,46 @@
 use crate::net::Testbed;
 use crate::util::rng::Rng;
 
+/// Where the elastic stack's condition snapshots come from.
+///
+/// The monitor, plan cache, background replanner and serving router only
+/// ever consume [`ClusterSnapshot`]s, so the *provenance* of those
+/// snapshots is swappable: a scripted simulation ([`ConditionTrace`] — the
+/// deterministic world model every test and chaos schedule is built on) or
+/// measured telemetry ([`crate::telemetry::TelemetrySource`] — passive
+/// probes on the traffic the cluster already moves, an active low-rate
+/// prober for idle links, and per-node compute/liveness measurements,
+/// aggregated through a ring-buffer store). The whole adaptation stack runs
+/// unchanged on either.
+///
+/// Sampling takes `&mut self` because measured sources do real work per
+/// sample (heartbeat sweep, rate-limited active probes, store reads);
+/// scripted traces are pure functions and ignore the mutability.
+pub trait ConditionSource: Send {
+    /// Number of devices in the cluster this source describes.
+    fn node_count(&self) -> usize;
+
+    /// Effective cluster conditions at virtual time `t`.
+    fn sample(&mut self, t: f64) -> ClusterSnapshot;
+
+    /// Passive traffic observation: `bytes` of boundary payload moved in
+    /// `msgs` messages by an inference finishing at virtual time `t`.
+    /// Measured sources turn this into effective-bandwidth samples — the
+    /// cluster's own scatter/realignment/gather traffic is the probe;
+    /// scripted traces (which already *are* the ground truth) ignore it.
+    fn observe_traffic(&mut self, _t: f64, _bytes: u64, _msgs: u64) {}
+}
+
+impl ConditionSource for ConditionTrace {
+    fn node_count(&self) -> usize {
+        self.nodes
+    }
+
+    fn sample(&mut self, t: f64) -> ClusterSnapshot {
+        ConditionTrace::sample(self, t)
+    }
+}
+
 /// Built-in condition scenario families.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Profile {
@@ -404,6 +444,94 @@ mod tests {
         // outside the overlap the script is honored exactly
         assert_eq!(trace.sample(1.5).alive, vec![false, true]);
         assert_eq!(trace.sample(3.5).alive, vec![true, false]);
+    }
+
+    #[test]
+    fn overlapping_outages_union_and_end_independently() {
+        // two scripted outages overlap on the same node and a third overlaps
+        // on a different node: liveness is the union of active intervals,
+        // and each interval ends on its own schedule
+        let trace = ConditionTrace::stable(4)
+            .with_outage(1, 1.0, 4.0)
+            .with_outage(1, 3.0, 6.0) // same node, overlapping tail
+            .with_outage(2, 3.5, 5.0); // different node, inside the overlap
+        assert_eq!(trace.sample(0.5).alive, vec![true; 4]);
+        assert_eq!(trace.sample(3.2).alive, vec![true, false, true, true]);
+        // both node-1 intervals and the node-2 interval active at once
+        assert_eq!(trace.sample(3.7).alive, vec![true, false, false, true]);
+        // first node-1 interval over, second still holds it down
+        assert_eq!(trace.sample(4.5).alive, vec![true, false, false, true]);
+        // node 2 back first, node 1 still down until 6.0
+        assert_eq!(trace.sample(5.5).alive, vec![true, false, true, true]);
+        assert_eq!(trace.sample(6.0).alive, vec![true; 4]);
+    }
+
+    #[test]
+    fn dip_spanning_an_outage_window_applies_throughout() {
+        // a bandwidth dip starts before and ends after an outage: the dip
+        // factor must hold across the outage's start, duration and end, and
+        // stacked dips multiply while both are active
+        let trace = ConditionTrace::stable(4)
+            .with_bandwidth_dip(1.0, 10.0, 0.5)
+            .with_outage(2, 3.0, 6.0)
+            .with_bandwidth_dip(4.0, 5.0, 0.5); // nested second dip
+        let at = |t: f64| trace.sample(t);
+        assert_eq!(at(0.5).bandwidth_factor, 1.0);
+        // dip active, node still up
+        assert_eq!(at(2.0).bandwidth_factor, 0.5);
+        assert_eq!(at(2.0).alive_count(), 4);
+        // outage starts inside the dip: both effects visible at once
+        let mid = at(3.5);
+        assert_eq!(mid.bandwidth_factor, 0.5);
+        assert!(!mid.alive[2]);
+        // nested dip stacks multiplicatively while the outage holds
+        assert!((at(4.5).bandwidth_factor - 0.25).abs() < 1e-12);
+        // outage ends inside the dip: bandwidth still degraded
+        let after_outage = at(7.0);
+        assert_eq!(after_outage.bandwidth_factor, 0.5);
+        assert_eq!(after_outage.alive_count(), 4);
+        assert_eq!(at(10.0).bandwidth_factor, 1.0);
+    }
+
+    #[test]
+    fn sampling_outside_the_trace_horizon_clamps() {
+        // A trace is a total function of t: asking for a time before the
+        // trace starts, or far past its last scripted event, must clamp
+        // deterministically instead of panicking or going out of range.
+        // Negative t: the lossy-link window index clamps to window 0.
+        let lossy = ConditionTrace::lossy_link(4, 3);
+        let neg = lossy.sample(-7.3);
+        assert_eq!(neg.bandwidth_factor, lossy.sample(0.5).bandwidth_factor);
+        assert_eq!(neg.alive_count(), 4);
+        // Past the churn horizon (all outages end by 5·period): baseline.
+        let churn = ConditionTrace::node_churn(4, 1);
+        let late = churn.sample(1e9);
+        assert_eq!(late.alive, vec![true; 4]);
+        assert_eq!(late.bandwidth_factor, 1.0);
+        // A scripted trace shorter than the requested slot: sampling past
+        // the last dip/outage returns to the profile baseline exactly.
+        let short = ConditionTrace::stable(4)
+            .with_outage(1, 0.5, 1.0)
+            .with_bandwidth_dip(0.0, 2.0, 0.3);
+        let past = short.sample(2.0);
+        assert_eq!(past.alive, vec![true; 4]);
+        assert_eq!(past.bandwidth_factor, 1.0);
+        assert_eq!(short.sample(-1.0).alive, vec![true; 4]);
+    }
+
+    #[test]
+    fn condition_source_trait_matches_inherent_sampling() {
+        // the trait object path must be indistinguishable from calling the
+        // trace directly — the elastic stack's source-agnosticism contract
+        let trace = ConditionTrace::diurnal_drift(4, 9).with_outage(2, 1.0, 2.0);
+        let mut boxed: Box<dyn ConditionSource> = Box::new(trace.clone());
+        assert_eq!(boxed.node_count(), 4);
+        for t in [0.0, 0.7, 1.5, 2.5, 31.0] {
+            assert_eq!(boxed.sample(t), trace.sample(t));
+        }
+        // traffic observations are a no-op for scripted traces
+        boxed.observe_traffic(1.0, 1 << 20, 12);
+        assert_eq!(boxed.sample(0.7), trace.sample(0.7));
     }
 
     #[test]

@@ -66,6 +66,20 @@ pub struct ElasticConfig {
     /// (one unpruned search), so later bandwidth-drift replans are
     /// estimator-query-free.
     pub prewarm_memo: bool,
+    /// Staleness bound on fire-and-forget drift asks: once an ask has gone
+    /// unanswered for more than this many consulted boundaries, every
+    /// further boundary served on the outdated plan counts into
+    /// [`crate::metrics::AdaptationMetrics::stale_plan_boundaries`] — a
+    /// wedged planner thread surfaces as a counter instead of silently
+    /// serving an old plan forever.
+    pub stale_after_checks: u64,
+    /// Enable forecast-driven cache pre-warming: the frontend fits a
+    /// [`crate::telemetry::ForecastEngine`] over the snapshots it already
+    /// samples and asks the background planner to pre-plan the projected
+    /// condition cell (and pre-speculate its n−1/leader-loss cells at the
+    /// *forecast* bandwidth) before the shift lands. `None` = reactive
+    /// monitoring only, the PR 1–4 behavior.
+    pub forecast: Option<crate::telemetry::ForecastConfig>,
 }
 
 impl Default for ElasticConfig {
@@ -75,6 +89,8 @@ impl Default for ElasticConfig {
             cache_capacity: 32,
             planner_workers: 0,
             prewarm_memo: true,
+            stale_after_checks: 32,
+            forecast: None,
         }
     }
 }
@@ -162,6 +178,9 @@ pub(crate) struct ReplanCore {
     events: Vec<AdaptEvent>,
     /// Cells filled by [`Self::speculate_failovers`], for hit attribution.
     speculative_keys: HashSet<CacheKey>,
+    /// Cells filled by [`Self::prewarm_forecast_cell`] (forecast-driven),
+    /// for hit attribution on the serving path.
+    forecast_keys: HashSet<CacheKey>,
     /// Whether searches triggered by [`Self::decide`] run on the serving
     /// router's thread (the synchronous controller) — counted as
     /// `inline_replans`.
@@ -205,6 +224,7 @@ impl ReplanCore {
             metrics,
             events: Vec::new(),
             speculative_keys: HashSet::new(),
+            forecast_keys: HashSet::new(),
             inline,
         }
     }
@@ -244,17 +264,34 @@ impl ReplanCore {
         plan
     }
 
-    fn lookup_or_replan(&mut self, key: &CacheKey, effective: &Testbed) -> Arc<Plan> {
+    fn lookup_or_replan(
+        &mut self,
+        key: &CacheKey,
+        effective: &Testbed,
+        node_change: bool,
+    ) -> Arc<Plan> {
         if let Some(plan) = self.cache.get(key) {
             if self.speculative_keys.contains(key) {
                 self.metrics.speculative_hits += 1;
             }
+            if self.forecast_keys.contains(key) {
+                self.metrics.forecast_hits += 1;
+            }
             return plan;
         }
-        // A miss means any speculative fill of this cell is gone (LRU
-        // eviction): drop the attribution so future hits on the ordinary
-        // replan below don't count as speculative.
+        // A miss means any speculative/forecast fill of this cell is gone
+        // (LRU eviction): drop the attribution so future hits on the
+        // ordinary replan below don't count as pre-warmed.
         self.speculative_keys.remove(key);
+        self.forecast_keys.remove(key);
+        if self.metrics.forecasts > 0 && !node_change {
+            // Forecasting was active and a same-node-set shift — the kind
+            // of event the forecaster exists to predict — still missed the
+            // warm set. Node-set misses are excluded: liveness is carried,
+            // never extrapolated, so e.g. a double node death is not a
+            // forecastable event and must not deflate the hit rate.
+            self.metrics.forecast_misses += 1;
+        }
         let plan = self.replan(effective);
         self.cache.put(key.clone(), plan.clone());
         plan
@@ -294,7 +331,7 @@ impl ReplanCore {
             };
         }
 
-        let plan = self.lookup_or_replan(&key, &effective);
+        let plan = self.lookup_or_replan(&key, &effective, node_change);
         let new_cost = plan_cost(&self.model, &plan, &cost).total;
         // Steps-only comparison: a replan that lands on the same step
         // sequence (with a different est_cost under the new conditions) is
@@ -386,6 +423,50 @@ impl ReplanCore {
             self.speculative_keys.insert(key.clone());
             self.cache.put(key, Arc::new(plan));
         }
+    }
+
+    /// Warm the cache for a *forecast* condition cell without touching the
+    /// active plan: plan the projected cell if it isn't cached yet. Never
+    /// publishes, never swaps: if the forecast is wrong, the only cost is
+    /// a cache entry. One cache-fill search at most — the background
+    /// planner interleaves these single-search units with its ask queue,
+    /// and covers the projected cell's n−1/leader-loss neighbours through
+    /// equally fine-grained [`Self::speculate_one`] units (so a regime
+    /// shift and a node loss arriving *together* are both cache hits — the
+    /// cold-failover rendezvous gap PR 2 left open).
+    pub(crate) fn prewarm_forecast_cell(&mut self, snap: &ClusterSnapshot) {
+        self.metrics.forecasts += 1;
+        let key = CacheKey::new(&self.model.name, snap.quantize());
+        if self.cache.peek(&key) {
+            return;
+        }
+        let effective = snap.apply(&self.base);
+        let plan = self.replan(&effective);
+        self.metrics.forecast_plans += 1;
+        if self.forecast_keys.len() > MAX_SPECULATIVE_KEYS {
+            self.forecast_keys.clear();
+        }
+        self.forecast_keys.insert(key.clone());
+        self.cache.put(key, plan);
+    }
+
+    /// Pre-compute one condition cell speculatively (attributed exactly
+    /// like [`Self::speculate_failovers`]'s fills) if the cache lacks it —
+    /// the single-search work unit the background planner interleaves with
+    /// its queue so a failover rendezvous never waits behind more than the
+    /// search already in progress.
+    pub(crate) fn speculate_one(&mut self, snap: &ClusterSnapshot) {
+        let key = CacheKey::new(&self.model.name, snap.quantize());
+        if self.cache.peek(&key) {
+            return;
+        }
+        let plan = self.replan(&snap.apply(&self.base));
+        self.metrics.speculative_plans += 1;
+        if self.speculative_keys.len() > MAX_SPECULATIVE_KEYS {
+            self.speculative_keys.clear();
+        }
+        self.speculative_keys.insert(key.clone());
+        self.cache.put(key, plan);
     }
 }
 
@@ -672,6 +753,87 @@ mod tests {
         let back = core.decide(&trace.sample(2.5));
         assert_eq!(back.leader, 0);
         assert_eq!(core.metrics().leader_handoffs, 2);
+    }
+
+    #[test]
+    fn prewarmed_forecast_cell_serves_the_shift_without_a_search() {
+        // pre-warm the dip cell the way the background planner does from a
+        // forecast; when the dip actually lands, the replan must be a
+        // forecast-attributed cache hit that runs zero searches
+        let trace = ConditionTrace::stable(4).with_bandwidth_dip(5.0, f64::INFINITY, 0.4);
+        let snap0 = trace.sample(0.0);
+        let mut core = ReplanCore::new(
+            zoo::edgenet(16),
+            base(4),
+            &snap0,
+            ElasticConfig::default(),
+            false,
+        );
+        // "forecast": the projected snapshot equals the dip conditions —
+        // warmed one single-search unit at a time, exactly the way the
+        // background planner expands an `Ask::Prewarm`
+        let projected = trace.sample(6.0);
+        core.prewarm_forecast_cell(&projected);
+        for node in 0..4 {
+            let mut hyp = projected.clone();
+            hyp.alive[node] = false;
+            core.speculate_one(&hyp);
+        }
+        let m = core.metrics();
+        assert_eq!(m.forecasts, 1);
+        assert_eq!(m.forecast_plans, 1, "dip cell was not pre-planned: {m}");
+        // its n−1 cells were speculated at the *forecast* bandwidth
+        assert_eq!(m.speculative_plans, 4, "{m}");
+        let replans_before = m.replans;
+
+        // the dip lands: cache hit, no new search, plan equals planning
+        // directly for the degraded testbed
+        let d = core.decide(&trace.sample(6.0));
+        let m = core.metrics();
+        assert_eq!(m.forecast_hits, 1, "shift not served from the forecast cell: {m}");
+        assert_eq!(m.forecast_misses, 0, "{m}");
+        assert_eq!(m.replans, replans_before, "the pre-warmed shift ran a search: {m}");
+        let dipped = base(4).with_bandwidth_factor(0.4);
+        assert_eq!(*d.plan, crate::planner::plan_for_testbed(&core.model, &dipped));
+
+        // a node dying right at the dip: the n−1-at-forecast-bandwidth cell
+        // is already warm — the gap this subsystem exists to close
+        let mut down = trace.sample(6.5);
+        down.alive[2] = false;
+        let d2 = core.decide(&down);
+        let m = core.metrics();
+        assert_eq!(d2.testbed.nodes, 3);
+        assert_eq!(m.speculative_hits, 1, "dip-time failover was not pre-speculated: {m}");
+        assert_eq!(m.replans, replans_before, "dip-time failover ran a search: {m}");
+    }
+
+    #[test]
+    fn prewarming_a_cached_cell_is_attribution_free() {
+        // pre-warming the cell the active plan already covers must not
+        // re-plan it or claim forecast credit for later ordinary hits
+        let trace = ConditionTrace::stable(4);
+        let snap0 = trace.sample(0.0);
+        let mut core = ReplanCore::new(
+            zoo::edgenet(16),
+            base(4),
+            &snap0,
+            ElasticConfig::default(),
+            false,
+        );
+        core.prewarm_forecast_cell(&snap0);
+        let m = core.metrics();
+        assert_eq!(m.forecasts, 1);
+        assert_eq!(m.forecast_plans, 0, "active cell re-planned: {m}");
+        // a speculative unit for an already-cached cell is also a no-op
+        core.speculate_failovers(&snap0);
+        let plans_before = core.metrics().speculative_plans;
+        let mut hyp = snap0.clone();
+        hyp.alive[3] = false;
+        core.speculate_one(&hyp);
+        assert_eq!(core.metrics().speculative_plans, plans_before, "cached cell re-planned");
+        let d = core.decide(&trace.sample(1.0));
+        assert!(!d.swapped);
+        assert_eq!(core.metrics().forecast_hits, 0);
     }
 
     #[test]

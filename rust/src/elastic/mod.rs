@@ -10,7 +10,10 @@
 //! * [`conditions`] — deterministic, seeded condition traces over virtual
 //!   time: bandwidth/compute drift plus device outages, with built-in
 //!   scenario profiles (`stable`, `diurnal-drift`, `lossy-link`,
-//!   `node-churn`) and scripted overrides for tests.
+//!   `node-churn`) and scripted overrides for tests. The [`ConditionSource`]
+//!   trait abstracts *where* snapshots come from: scripted traces and the
+//!   probe-measured [`crate::telemetry::TelemetrySource`] drive the same
+//!   stack interchangeably.
 //! * [`cache`] — the plan cache: DPP results memoized under quantized
 //!   condition snapshots with LRU eviction, so revisited regimes are served
 //!   warm instead of re-searched.
@@ -52,5 +55,7 @@ pub use background::{
 };
 pub use cache::{CacheKey, PlanCache};
 pub use chaos::{run_chaos, ChaosEvent, ChaosOutcome, ChaosSchedule};
-pub use conditions::{ClusterSnapshot, ConditionTrace, Outage, Profile, SnapshotKey};
+pub use conditions::{
+    ClusterSnapshot, ConditionSource, ConditionTrace, Outage, Profile, SnapshotKey,
+};
 pub use controller::{AdaptEvent, BatchDecision, ElasticConfig, ElasticController, SwapReason};

@@ -24,6 +24,7 @@
 //! | [`net`] | network simulator: Ring / PS / Mesh topologies, bandwidth + latency |
 //! | [`cluster`] | simulated edge cluster: leader/worker threads, message passing, virtual clock; block-pipelined streaming executor |
 //! | [`elastic`] | runtime adaptation: condition traces, degradation monitor, plan cache, background replanner + speculative failover |
+//! | [`telemetry`] | measured conditions: passive/active probes, ring-buffer sample store, EWMA+trend+seasonal forecasting, plan pre-warming |
 //! | [`engine`] | plan executor: analytic evaluation + real-numerics distributed execution |
 //! | [`compute`] | native Rust tensor kernels (conv/dwconv/pool/matmul) — fallback + oracle |
 //! | [`runtime`] | PJRT client wrapper: loads `artifacts/*.hlo.txt` (AOT-compiled JAX/Pallas) |
@@ -62,6 +63,7 @@ pub mod partition;
 pub mod planner;
 pub mod runtime;
 pub mod serve;
+pub mod telemetry;
 pub mod util;
 
 /// Commonly used types, re-exported for ergonomic downstream use.

@@ -86,6 +86,33 @@ pub struct AdaptationMetrics {
     /// boundary. Always zero on the background-replanner path; non-zero
     /// only for the synchronous [`crate::elastic::ElasticController`].
     pub inline_replans: u64,
+    /// Forecast pre-warm requests handed to the background planner (one per
+    /// projected condition cell the forecaster flagged as upcoming).
+    pub forecasts: u64,
+    /// Condition cells planned *ahead of time* from a forecast (cache fills
+    /// that never blocked anything).
+    pub forecast_plans: u64,
+    /// Serving-path replans answered by a forecast-warmed cache cell — the
+    /// regime shift arrived and its plan was already there.
+    pub forecast_hits: u64,
+    /// Serving-path cache misses on *same-node-set* shifts while
+    /// forecasting was active: drift the forecaster could have predicted
+    /// but didn't pre-warm. Node-set misses are excluded — liveness is
+    /// carried, never extrapolated, so node deaths are not forecastable
+    /// events and must not deflate the hit rate.
+    pub forecast_misses: u64,
+    /// Matured forecasts compared against the conditions that actually
+    /// arrived at their target time.
+    pub forecast_evals: u64,
+    /// Cumulative horizon error over those comparisons, in quantized
+    /// bandwidth buckets: `Σ |predicted_bucket − actual_bucket|`. Divide by
+    /// `forecast_evals` for the mean bucket error.
+    pub forecast_bucket_err: u64,
+    /// Boundaries served on a plan whose replacement was requested more
+    /// than [`crate::elastic::ElasticConfig::stale_after_checks`] boundaries
+    /// ago and still hasn't been published — the canary for a wedged
+    /// planner thread. Zero in healthy operation.
+    pub stale_plan_boundaries: u64,
 }
 
 /// Shared hit-rate formula (0.0 before any lookup) — used by both
@@ -105,6 +132,22 @@ impl AdaptationMetrics {
     pub fn cache_hit_rate(&self) -> f64 {
         hit_ratio(self.cache_hits, self.cache_misses)
     }
+
+    /// Of the serving-path replans that happened while forecasting was
+    /// active, the fraction the forecaster had pre-warmed (0.0 when none).
+    pub fn forecast_hit_rate(&self) -> f64 {
+        hit_ratio(self.forecast_hits, self.forecast_misses)
+    }
+
+    /// Mean horizon error of matured forecasts, in quantized bandwidth
+    /// buckets (0.0 before any forecast matured).
+    pub fn forecast_mean_bucket_err(&self) -> f64 {
+        if self.forecast_evals == 0 {
+            0.0
+        } else {
+            self.forecast_bucket_err as f64 / self.forecast_evals as f64
+        }
+    }
 }
 
 impl std::fmt::Display for AdaptationMetrics {
@@ -112,7 +155,7 @@ impl std::fmt::Display for AdaptationMetrics {
         write!(
             f,
             "checks={} degraded={} replans={} swaps={} failovers={} handoffs={} \
-             cache={}/{} ({:.0}% hit) spec={}p/{}h inline={}",
+             cache={}/{} ({:.0}% hit) spec={}p/{}h fc={}a/{}p/{}h/{}m stale={} inline={}",
             self.checks,
             self.degraded_checks,
             self.replans,
@@ -124,6 +167,11 @@ impl std::fmt::Display for AdaptationMetrics {
             self.cache_hit_rate() * 100.0,
             self.speculative_plans,
             self.speculative_hits,
+            self.forecasts,
+            self.forecast_plans,
+            self.forecast_hits,
+            self.forecast_misses,
+            self.stale_plan_boundaries,
             self.inline_replans
         )
     }
@@ -243,6 +291,22 @@ mod tests {
         assert!((m.cache_hit_rate() - 0.75).abs() < 1e-12);
         let s = m.to_string();
         assert!(s.contains("cache=3/4"), "{s}");
+    }
+
+    #[test]
+    fn forecast_rates() {
+        let mut m = AdaptationMetrics::default();
+        assert_eq!(m.forecast_hit_rate(), 0.0);
+        assert_eq!(m.forecast_mean_bucket_err(), 0.0);
+        m.forecast_hits = 3;
+        m.forecast_misses = 1;
+        m.forecast_evals = 4;
+        m.forecast_bucket_err = 2;
+        assert!((m.forecast_hit_rate() - 0.75).abs() < 1e-12);
+        assert!((m.forecast_mean_bucket_err() - 0.5).abs() < 1e-12);
+        let s = m.to_string();
+        assert!(s.contains("fc=0a/0p/3h/1m"), "{s}");
+        assert!(s.contains("stale=0"), "{s}");
     }
 
     #[test]

@@ -34,6 +34,12 @@
 //!   pipeline on the new plan/node set — so the frontend is consulted per
 //!   drained generation rather than per batch, and no request is ever lost
 //!   across a swap.
+//! * [`Server::start_telemetry`] — the *measured* condition-aware path:
+//!   the same elastic frontend, but its snapshots come from
+//!   [`crate::telemetry`] probes instead of trace reads — each executed
+//!   batch's boundary traffic feeds back as a passive bandwidth sample,
+//!   and (with [`ElasticConfig::forecast`]) the background planner
+//!   pre-warms the plan cache for the conditions the forecaster projects.
 //!
 //! No node is immortal — the leader included. Each generation is bound to
 //! an elected leader (lowest surviving rank,
@@ -67,6 +73,7 @@ use crate::metrics::{AdaptationMetrics, PipelineSummary, Summary};
 use crate::model::Model;
 use crate::net::Testbed;
 use crate::partition::Plan;
+use crate::telemetry::{TelemetryConfig, TelemetrySource};
 
 /// Server configuration.
 #[derive(Debug, Clone)]
@@ -220,6 +227,29 @@ impl Server {
         ecfg: ElasticConfig,
     ) -> Server {
         let fe = ElasticFrontend::start(model.clone(), base, trace, ecfg);
+        Self::spawn(model, weights, cfg, PlanSource::Elastic { fe, vt: 0.0 })
+    }
+
+    /// Start the *measured*-conditions serving path: identical to
+    /// [`Server::start_elastic`] except the controller never reads `world`
+    /// directly — a [`TelemetrySource`] measures it through passive probes
+    /// on the traffic this server moves (in lockstep mode each executed
+    /// batch's boundary bytes feed back as bandwidth samples; the pipelined
+    /// router's per-batch probes tick the rate-limited active prober
+    /// instead), plus heartbeat and compute sweeps. Enable
+    /// [`ElasticConfig::forecast`] to also pre-warm the plan cache for the
+    /// conditions the forecaster projects.
+    pub fn start_telemetry(
+        model: Model,
+        weights: WeightStore,
+        base: Testbed,
+        world: ConditionTrace,
+        tcfg: TelemetryConfig,
+        cfg: ServeConfig,
+        ecfg: ElasticConfig,
+    ) -> Server {
+        let source = TelemetrySource::new(world, &base, tcfg);
+        let fe = ElasticFrontend::start_with_source(model.clone(), base, Box::new(source), ecfg);
         Self::spawn(model, weights, cfg, PlanSource::Elastic { fe, vt: 0.0 })
     }
 
@@ -392,20 +422,31 @@ fn router_lockstep(
         };
 
         let service_start = Instant::now();
+        let mut moved_bytes = 0u64;
+        let mut moved_msgs = 0u64;
         let outputs: Vec<Tensor> = batch
             .iter()
-            .map(|req| match &alive {
-                // elastic path: execute on the surviving sub-cluster
-                Some(mask) => {
-                    crate::cluster::run_degraded(model, &plan, weights, &req.input, mask).output
-                }
-                None => {
-                    crate::cluster::run_distributed(model, &plan, weights, &req.input, nodes)
-                        .output
-                }
+            .map(|req| {
+                let run = match &alive {
+                    // elastic path: execute on the surviving sub-cluster
+                    Some(mask) => {
+                        crate::cluster::run_degraded(model, &plan, weights, &req.input, mask)
+                    }
+                    None => {
+                        crate::cluster::run_distributed(model, &plan, weights, &req.input, nodes)
+                    }
+                };
+                moved_bytes += run.bytes_exchanged;
+                moved_msgs += run.messages as u64;
+                run.output
             })
             .collect();
         let service = service_start.elapsed();
+        if let PlanSource::Elastic { fe, vt } = &mut source {
+            // the batch's own boundary exchanges are the passive bandwidth
+            // probe of the measured-conditions path (no-op on traces)
+            fe.observe_traffic(*vt, moved_bytes, moved_msgs);
+        }
 
         let batch_size = batch.len();
         for (req, output) in batch.into_iter().zip(outputs) {

@@ -1,0 +1,457 @@
+//! Short-window condition forecasting: EWMA level + trend + optional
+//! seasonal component, fitted online, deterministic — no RNG anywhere.
+//!
+//! The monitor built in PRs 1–4 is reactive: it replans *after* a dip
+//! lands. The [`ForecastEngine`] closes the loop the other way: it observes
+//! the condition snapshots the frontend already samples (scripted or
+//! probe-measured — provenance doesn't matter), fits a per-series
+//! [`Holt`] model (level + per-second trend, time-aware updates so
+//! irregular boundary spacing is handled exactly), optionally a
+//! [`Seasonal`] bin table for periodic worlds (the diurnal day), and
+//! projects the whole cluster snapshot `H` batch-boundaries ahead. The
+//! projected snapshot quantizes into the **existing** cache-key space
+//! ([`crate::elastic::ClusterSnapshot::quantize`]), so "pre-warm the
+//! forecast cell" is an ordinary cache fill the serving path already knows
+//! how to hit.
+//!
+//! Confidence: each series tracks an EWMA of its absolute one-step error;
+//! [`Forecast::lo`]/[`Forecast::hi`] bracket the projection by twice that
+//! error — wide while the series is noisy or turning, collapsing toward
+//! the point estimate when the model tracks well.
+
+use crate::elastic::ClusterSnapshot;
+
+/// Forecasting knobs (see [`crate::elastic::ElasticConfig::forecast`] for
+/// how the serving path enables them).
+#[derive(Debug, Clone)]
+pub struct ForecastConfig {
+    /// How many batch boundaries ahead to project (the horizon `H`); the
+    /// engine converts to seconds via the observed boundary spacing.
+    pub horizon_boundaries: usize,
+    /// Level smoothing (0 < alpha <= 1): larger follows the series faster.
+    pub alpha: f64,
+    /// Trend smoothing.
+    pub beta: f64,
+    /// Seasonal smoothing (only used with `seasonal_period`).
+    pub gamma: f64,
+    /// Optional seasonal period, virtual seconds (e.g. the 60 s compressed
+    /// diurnal day). `None` = pure level + trend.
+    pub seasonal_period: Option<f64>,
+    /// Seasonal bins across one period.
+    pub season_bins: usize,
+    /// Observations required before the first projection is offered.
+    pub min_observations: u64,
+}
+
+impl Default for ForecastConfig {
+    fn default() -> Self {
+        ForecastConfig {
+            horizon_boundaries: 4,
+            alpha: 0.5,
+            beta: 0.4,
+            gamma: 0.3,
+            seasonal_period: None,
+            season_bins: 24,
+            min_observations: 3,
+        }
+    }
+}
+
+/// A projected value with its confidence bracket.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Forecast {
+    pub value: f64,
+    pub lo: f64,
+    pub hi: f64,
+}
+
+/// Holt's linear model over irregularly-spaced observations: an EWMA level
+/// plus a per-second trend, updated against the time-extrapolated
+/// prediction so uneven sampling cannot bias the slope.
+#[derive(Debug, Clone)]
+pub struct Holt {
+    alpha: f64,
+    beta: f64,
+    level: f64,
+    trend: f64,
+    /// EWMA of the absolute one-step-ahead error.
+    err: f64,
+    last_t: f64,
+    n: u64,
+}
+
+/// Smoothing applied to the one-step error EWMA.
+const ERR_BLEND: f64 = 0.3;
+
+impl Holt {
+    pub fn new(alpha: f64, beta: f64) -> Holt {
+        assert!(alpha > 0.0 && alpha <= 1.0, "alpha out of range");
+        assert!((0.0..=1.0).contains(&beta), "beta out of range");
+        Holt { alpha, beta, level: 0.0, trend: 0.0, err: 0.0, last_t: 0.0, n: 0 }
+    }
+
+    pub fn observe(&mut self, t: f64, v: f64) {
+        assert!(v.is_finite(), "non-finite observation");
+        if self.n == 0 {
+            self.level = v;
+            self.last_t = t;
+            self.n = 1;
+            return;
+        }
+        let dt = t - self.last_t;
+        if dt <= 0.0 {
+            // repeated timestamp: refresh the level only — no slope evidence
+            self.level = self.alpha * v + (1.0 - self.alpha) * self.level;
+            return;
+        }
+        let predicted = self.level + self.trend * dt;
+        self.err = ERR_BLEND * (v - predicted).abs() + (1.0 - ERR_BLEND) * self.err;
+        let prev_level = self.level;
+        self.level = self.alpha * v + (1.0 - self.alpha) * predicted;
+        self.trend = self.beta * ((self.level - prev_level) / dt) + (1.0 - self.beta) * self.trend;
+        self.last_t = t;
+        self.n += 1;
+    }
+
+    /// Projection `horizon` seconds past the last observation.
+    pub fn forecast(&self, horizon: f64) -> f64 {
+        self.level + self.trend * horizon
+    }
+
+    pub fn error(&self) -> f64 {
+        self.err
+    }
+
+    pub fn is_warm(&self) -> bool {
+        self.n > 0
+    }
+
+    pub fn last_t(&self) -> f64 {
+        self.last_t
+    }
+}
+
+/// Online seasonal residual table: one EWMA bin per phase slice of the
+/// period. Bins that were never visited contribute nothing.
+#[derive(Debug, Clone)]
+pub struct Seasonal {
+    period: f64,
+    gamma: f64,
+    bins: Vec<f64>,
+    seen: Vec<u32>,
+}
+
+impl Seasonal {
+    pub fn new(period: f64, bins: usize, gamma: f64) -> Seasonal {
+        assert!(period > 0.0, "seasonal period must be positive");
+        assert!(bins >= 2, "need at least two seasonal bins");
+        Seasonal { period, gamma, bins: vec![0.0; bins], seen: vec![0; bins] }
+    }
+
+    fn bin(&self, t: f64) -> usize {
+        let frac = (t / self.period).rem_euclid(1.0);
+        ((frac * self.bins.len() as f64) as usize).min(self.bins.len() - 1)
+    }
+
+    /// Fold the residual (observation minus level) at `t` into its bin.
+    pub fn observe(&mut self, t: f64, residual: f64) {
+        let b = self.bin(t);
+        self.bins[b] = if self.seen[b] == 0 {
+            residual
+        } else {
+            self.gamma * residual + (1.0 - self.gamma) * self.bins[b]
+        };
+        self.seen[b] = self.seen[b].saturating_add(1);
+    }
+
+    /// The seasonal component at `t` (0.0 for unvisited bins).
+    pub fn component(&self, t: f64) -> f64 {
+        let b = self.bin(t);
+        if self.seen[b] == 0 {
+            0.0
+        } else {
+            self.bins[b]
+        }
+    }
+}
+
+/// One forecast series: Holt on the deseasonalized signal plus the optional
+/// seasonal table.
+#[derive(Debug, Clone)]
+pub struct Forecaster {
+    holt: Holt,
+    seasonal: Option<Seasonal>,
+}
+
+impl Forecaster {
+    pub fn new(cfg: &ForecastConfig) -> Forecaster {
+        Forecaster {
+            holt: Holt::new(cfg.alpha, cfg.beta),
+            seasonal: cfg.seasonal_period.map(|p| Seasonal::new(p, cfg.season_bins, cfg.gamma)),
+        }
+    }
+
+    pub fn observe(&mut self, t: f64, v: f64) {
+        let s = self.seasonal.as_ref().map_or(0.0, |m| m.component(t));
+        self.holt.observe(t, v - s);
+        if let Some(m) = &mut self.seasonal {
+            m.observe(t, v - self.holt.forecast(0.0));
+        }
+    }
+
+    /// Projection `horizon` seconds past the last observation, seasonal
+    /// component included, with the confidence bracket.
+    pub fn forecast(&self, horizon: f64) -> Forecast {
+        let t_target = self.holt.last_t() + horizon;
+        let s = self.seasonal.as_ref().map_or(0.0, |m| m.component(t_target));
+        let value = self.holt.forecast(horizon) + s;
+        let spread = 2.0 * self.holt.error();
+        Forecast { value, lo: value - spread, hi: value + spread }
+    }
+
+    pub fn is_warm(&self) -> bool {
+        self.holt.is_warm()
+    }
+}
+
+/// Clamp bounds for projected factors: forecasts may extrapolate, but a
+/// projected snapshot must stay a physically meaningful condition cell.
+const MIN_FACTOR: f64 = 0.05;
+const MAX_FACTOR: f64 = 2.0;
+
+/// The whole-cluster forecaster: one [`Forecaster`] for the shared-fabric
+/// bandwidth factor and one per node for the compute-speed factor, plus the
+/// observed boundary spacing that converts the horizon from boundaries to
+/// seconds. Liveness is **carried, never extrapolated** — predicting a
+/// death the heartbeat hasn't seen would fail requests on a hunch; the
+/// n−1 speculation at the forecast bandwidth covers that risk instead.
+pub struct ForecastEngine {
+    cfg: ForecastConfig,
+    bw: Forecaster,
+    speed: Vec<Forecaster>,
+    /// EWMA of the boundary spacing, virtual seconds.
+    dt: f64,
+    last_t: f64,
+    observations: u64,
+    alive: Vec<bool>,
+}
+
+impl ForecastEngine {
+    pub fn new(nodes: usize, cfg: ForecastConfig) -> ForecastEngine {
+        assert!(nodes >= 1, "empty cluster");
+        assert!(cfg.horizon_boundaries >= 1, "horizon must be at least one boundary");
+        ForecastEngine {
+            bw: Forecaster::new(&cfg),
+            speed: (0..nodes).map(|_| Forecaster::new(&cfg)).collect(),
+            dt: 0.0,
+            last_t: 0.0,
+            observations: 0,
+            alive: vec![true; nodes],
+            cfg,
+        }
+    }
+
+    /// Feed one boundary's snapshot (scripted or measured — the engine
+    /// doesn't care which).
+    pub fn observe(&mut self, snap: &ClusterSnapshot) {
+        assert_eq!(snap.alive.len(), self.speed.len(), "snapshot/engine node mismatch");
+        if self.observations > 0 {
+            let dt = snap.t - self.last_t;
+            if dt > 0.0 {
+                self.dt = if self.dt == 0.0 {
+                    dt
+                } else {
+                    0.3 * dt + 0.7 * self.dt
+                };
+            }
+        }
+        self.last_t = snap.t;
+        self.observations += 1;
+        self.alive.copy_from_slice(&snap.alive);
+        self.bw.observe(snap.t, snap.bandwidth_factor);
+        for (node, f) in self.speed.iter_mut().enumerate() {
+            if snap.alive[node] {
+                f.observe(snap.t, snap.speed_factors[node]);
+            }
+        }
+    }
+
+    /// The horizon in virtual seconds: `H` boundaries at the observed
+    /// spacing (0.0 until two boundaries have been seen).
+    pub fn horizon_seconds(&self) -> f64 {
+        self.cfg.horizon_boundaries as f64 * self.dt
+    }
+
+    /// The projected bandwidth factor at the horizon, with its bracket.
+    pub fn bandwidth_forecast(&self) -> Forecast {
+        self.bw.forecast(self.horizon_seconds())
+    }
+
+    /// The projected cluster snapshot `H` boundaries ahead — `None` until
+    /// enough history exists to say anything. Quantizing the result yields
+    /// the cache cell the background replanner pre-warms.
+    pub fn projected(&self) -> Option<ClusterSnapshot> {
+        if self.observations < self.cfg.min_observations || self.dt <= 0.0 {
+            return None;
+        }
+        let h = self.horizon_seconds();
+        let bandwidth_factor = self.bw.forecast(h).value.clamp(MIN_FACTOR, MAX_FACTOR);
+        let speed_factors: Vec<f64> = self
+            .speed
+            .iter()
+            .map(|f| {
+                if f.is_warm() {
+                    f.forecast(h).value.clamp(MIN_FACTOR, MAX_FACTOR)
+                } else {
+                    1.0
+                }
+            })
+            .collect();
+        Some(ClusterSnapshot {
+            t: self.last_t + h,
+            alive: self.alive.clone(),
+            bandwidth_factor,
+            speed_factors,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn holt_tracks_a_constant_exactly() {
+        let mut h = Holt::new(0.5, 0.4);
+        for k in 0..20 {
+            h.observe(k as f64, 0.8);
+        }
+        assert!((h.forecast(5.0) - 0.8).abs() < 1e-9);
+        assert!(h.error() < 1e-9, "constant series must converge to zero error");
+    }
+
+    #[test]
+    fn holt_extrapolates_a_linear_ramp() {
+        // v(t) = 1 − 0.05·t: the projection 4 s ahead must land close to
+        // the true future value once the trend has converged
+        let mut h = Holt::new(0.5, 0.4);
+        for k in 0..40 {
+            let t = k as f64 * 0.5;
+            h.observe(t, 1.0 - 0.05 * t);
+        }
+        let t_last = 39.0 * 0.5;
+        let truth = 1.0 - 0.05 * (t_last + 4.0);
+        assert!(
+            (h.forecast(4.0) - truth).abs() < 0.02,
+            "ramp projection {} vs truth {truth}",
+            h.forecast(4.0)
+        );
+    }
+
+    #[test]
+    fn holt_handles_irregular_spacing_and_repeats() {
+        let mut h = Holt::new(0.5, 0.4);
+        h.observe(0.0, 1.0);
+        h.observe(0.0, 1.0); // repeated timestamp must not divide by zero
+        h.observe(0.1, 0.99);
+        h.observe(2.0, 0.80);
+        h.observe(2.25, 0.775);
+        // slope is ~−0.1/s regardless of spacing
+        let slope = (h.forecast(1.0) - h.forecast(0.0)).abs();
+        assert!((0.02..0.3).contains(&slope), "slope estimate {slope}");
+    }
+
+    #[test]
+    fn seasonal_learns_a_periodic_dip() {
+        // square-ish wave, period 10: low in [5, 10). After three periods
+        // the seasonal forecaster must predict the dip bin ahead of time,
+        // while the trend-only model (which sees a flat mean) cannot.
+        let cfg = ForecastConfig {
+            seasonal_period: Some(10.0),
+            season_bins: 10,
+            ..ForecastConfig::default()
+        };
+        let mut with_season = Forecaster::new(&cfg);
+        let mut level_only = Forecaster::new(&ForecastConfig::default());
+        let wave = |t: f64| if t.rem_euclid(10.0) < 5.0 { 1.0 } else { 0.4 };
+        let mut t = 0.0;
+        while t < 30.0 {
+            with_season.observe(t, wave(t));
+            level_only.observe(t, wave(t));
+            t += 0.5;
+        }
+        // last observation at t = 29.5 (high phase); the dip starts at 35
+        let horizon = 6.0;
+        let truth = wave(29.5 + horizon);
+        let seasonal_err = (with_season.forecast(horizon).value - truth).abs();
+        let level_err = (level_only.forecast(horizon).value - truth).abs();
+        assert!(
+            seasonal_err < level_err,
+            "seasonal {seasonal_err} must beat level-only {level_err}"
+        );
+        assert!(seasonal_err < 0.25, "seasonal projection off by {seasonal_err}");
+    }
+
+    #[test]
+    fn confidence_brackets_widen_with_error() {
+        let mut f = Forecaster::new(&ForecastConfig::default());
+        // alternating series: the one-step error cannot converge to zero
+        for k in 0..30 {
+            f.observe(k as f64, if k % 2 == 0 { 1.0 } else { 0.5 });
+        }
+        let fc = f.forecast(2.0);
+        assert!(fc.hi > fc.value && fc.lo < fc.value, "bracket collapsed: {fc:?}");
+        assert!(fc.hi - fc.lo > 0.1, "noisy series must report a wide bracket");
+    }
+
+    #[test]
+    fn engine_projects_the_next_condition_cell_on_a_ramp() {
+        // descending bandwidth staircase: the projected snapshot must reach
+        // the next quantized cell before the actual conditions do
+        let cfg = ForecastConfig { horizon_boundaries: 4, ..ForecastConfig::default() };
+        let mut eng = ForecastEngine::new(4, cfg);
+        assert!(eng.projected().is_none(), "no projection before min history");
+        let mut cur_bucket = 0;
+        let mut projected_led = false;
+        for k in 0..40 {
+            let t = k as f64 * 0.5;
+            let factor = (1.0 - 0.02 * t).max(0.4);
+            let snap = ClusterSnapshot {
+                t,
+                alive: vec![true; 4],
+                bandwidth_factor: factor,
+                speed_factors: vec![1.0; 4],
+            };
+            eng.observe(&snap);
+            cur_bucket = snap.quantize().bw_bucket;
+            if let Some(proj) = eng.projected() {
+                assert_eq!(proj.alive, vec![true; 4]);
+                assert!((proj.t - (t + eng.horizon_seconds())).abs() < 1e-9);
+                if proj.quantize().bw_bucket < cur_bucket {
+                    projected_led = true;
+                }
+            }
+        }
+        assert!(cur_bucket < 8, "the ramp never left the baseline cell");
+        assert!(projected_led, "projection never led the actual cell transition");
+    }
+
+    #[test]
+    fn engine_carries_liveness_and_defaults_unmeasured_speeds() {
+        let mut eng = ForecastEngine::new(3, ForecastConfig::default());
+        for k in 0..5 {
+            let snap = ClusterSnapshot {
+                t: k as f64,
+                alive: vec![true, false, true],
+                bandwidth_factor: 0.9,
+                speed_factors: vec![1.0, 1.0, 0.8],
+            };
+            eng.observe(&snap);
+        }
+        let proj = eng.projected().expect("history is sufficient");
+        assert_eq!(proj.alive, vec![true, false, true], "liveness must be carried");
+        assert_eq!(proj.speed_factors[1], 1.0, "dead node keeps the baseline placeholder");
+        assert!((proj.speed_factors[2] - 0.8).abs() < 1e-6);
+        assert!((proj.bandwidth_factor - 0.9).abs() < 1e-6);
+    }
+}

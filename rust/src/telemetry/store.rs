@@ -1,0 +1,294 @@
+//! Ring-buffered telemetry sample store.
+//!
+//! The ingestion layer's single point of truth: per-link bandwidth samples,
+//! per-node compute-speed samples and the latest liveness sweep, each in a
+//! bounded ring so a server that measures for days holds constant memory.
+//! The store is written by probes on whatever thread observed the traffic
+//! and read by the condition source at batch boundaries, so every method is
+//! `&self` behind one uncontended mutex (writes are a few words; reads copy
+//! out a handful of recent samples).
+//!
+//! Estimation policy: the per-series estimate is the **median of the last
+//! three in-window samples** — responsive to a regime shift within two
+//! samples while a single corrupted measurement can never move the
+//! quantized condition cell on its own. A series with no sample inside the
+//! window falls back to its most recent sample ever (stale beats invented),
+//! and a series that was never measured reports the baseline factor `1.0`.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+use crate::elastic::ClusterSnapshot;
+
+/// One measured value at a point of virtual time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Sample {
+    pub t: f64,
+    pub value: f64,
+}
+
+/// Fixed-capacity chronological sample ring.
+#[derive(Debug, Clone)]
+pub struct Ring {
+    cap: usize,
+    buf: VecDeque<Sample>,
+}
+
+impl Ring {
+    pub fn new(cap: usize) -> Ring {
+        assert!(cap >= 1, "ring capacity must be >= 1");
+        Ring { cap, buf: VecDeque::with_capacity(cap) }
+    }
+
+    pub fn push(&mut self, s: Sample) {
+        if self.buf.len() == self.cap {
+            self.buf.pop_front();
+        }
+        self.buf.push_back(s);
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn latest(&self) -> Option<Sample> {
+        self.buf.back().copied()
+    }
+
+    /// Median of the last (up to) `k` samples with `t >= since`; falls back
+    /// to the latest sample when nothing is that recent.
+    pub fn recent_median(&self, since: f64, k: usize) -> Option<f64> {
+        let mut vals: Vec<f64> = self
+            .buf
+            .iter()
+            .rev()
+            .filter(|s| s.t >= since)
+            .take(k.max(1))
+            .map(|s| s.value)
+            .collect();
+        if vals.is_empty() {
+            return self.latest().map(|s| s.value);
+        }
+        vals.sort_by(|a, b| a.partial_cmp(b).expect("non-finite telemetry sample"));
+        Some(vals[vals.len() / 2])
+    }
+}
+
+/// Ingestion counters, for stats lines and tests.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct TelemetryStats {
+    /// Passive bandwidth samples recorded (traffic the cluster moved anyway).
+    pub bandwidth_samples: u64,
+    /// Of those, samples produced by the active low-rate prober.
+    pub active_probes: u64,
+    /// Per-node compute-speed samples recorded.
+    pub compute_samples: u64,
+    /// Liveness sweeps recorded.
+    pub liveness_sweeps: u64,
+}
+
+impl std::fmt::Display for TelemetryStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "bw={} (active {}) compute={} liveness={}",
+            self.bandwidth_samples, self.active_probes, self.compute_samples, self.liveness_sweeps
+        )
+    }
+}
+
+struct StoreInner {
+    /// Per-link effective-bandwidth factor rings (factor 1.0 = baseline).
+    links: Vec<Ring>,
+    /// Per-node speed-factor rings.
+    speed: Vec<Ring>,
+    /// Latest liveness sweep (all-alive until the first heartbeat).
+    alive: Vec<bool>,
+    stats: TelemetryStats,
+}
+
+/// The per-link / per-node telemetry store behind the measured
+/// [`crate::elastic::ConditionSource`].
+pub struct TelemetryStore {
+    nodes: usize,
+    /// Samples older than this (virtual seconds) are out of the estimation
+    /// window.
+    window: f64,
+    inner: Mutex<StoreInner>,
+}
+
+/// Samples folded into each estimate (see the module docs).
+const MEDIAN_K: usize = 3;
+
+impl TelemetryStore {
+    pub fn new(nodes: usize, links: usize, capacity: usize, window: f64) -> TelemetryStore {
+        assert!(nodes >= 1, "empty cluster");
+        assert!(links >= 1, "at least one link series");
+        assert!(window > 0.0, "estimation window must be positive");
+        TelemetryStore {
+            nodes,
+            window,
+            inner: Mutex::new(StoreInner {
+                links: vec![Ring::new(capacity); links],
+                speed: vec![Ring::new(capacity); nodes],
+                alive: vec![true; nodes],
+                stats: TelemetryStats::default(),
+            }),
+        }
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.nodes
+    }
+
+    pub fn stats(&self) -> TelemetryStats {
+        self.inner.lock().unwrap().stats
+    }
+
+    /// Record a measured effective-bandwidth factor for `link` at `t`.
+    pub fn record_bandwidth(&self, link: usize, t: f64, factor: f64, active: bool) {
+        assert!(factor.is_finite() && factor > 0.0, "bad bandwidth factor {factor}");
+        let mut inner = self.inner.lock().unwrap();
+        assert!(link < inner.links.len(), "link {link} out of range");
+        inner.links[link].push(Sample { t, value: factor });
+        inner.stats.bandwidth_samples += 1;
+        if active {
+            inner.stats.active_probes += 1;
+        }
+    }
+
+    /// Record a measured compute-speed factor for `node` at `t`.
+    pub fn record_speed(&self, node: usize, t: f64, factor: f64) {
+        assert!(factor.is_finite() && factor > 0.0, "bad speed factor {factor}");
+        let mut inner = self.inner.lock().unwrap();
+        assert!(node < self.nodes, "node {node} out of range");
+        inner.speed[node].push(Sample { t, value: factor });
+        inner.stats.compute_samples += 1;
+    }
+
+    /// Record a liveness sweep (heartbeat result) at `t`.
+    pub fn record_liveness(&self, _t: f64, alive: &[bool]) {
+        assert_eq!(alive.len(), self.nodes, "liveness mask length != nodes");
+        let mut inner = self.inner.lock().unwrap();
+        inner.alive.copy_from_slice(alive);
+        inner.stats.liveness_sweeps += 1;
+    }
+
+    /// Virtual seconds since the newest bandwidth sample on any link
+    /// (`f64::INFINITY` before the first) — the active prober's idle check.
+    pub fn bandwidth_age(&self, now: f64) -> f64 {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .links
+            .iter()
+            .filter_map(|r| r.latest())
+            .map(|s| now - s.t)
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// The store's current best view of cluster conditions at `t` — what the
+    /// elastic stack consumes in place of a scripted trace sample. The
+    /// bandwidth factor aggregates links by taking the **minimum** estimate
+    /// (the bottleneck link governs an exchange); unmeasured series report
+    /// the baseline `1.0`.
+    pub fn snapshot(&self, t: f64) -> ClusterSnapshot {
+        let inner = self.inner.lock().unwrap();
+        let since = t - self.window;
+        let mut bandwidth_factor = inner
+            .links
+            .iter()
+            .filter_map(|r| r.recent_median(since, MEDIAN_K))
+            .fold(f64::INFINITY, f64::min);
+        if !bandwidth_factor.is_finite() {
+            bandwidth_factor = 1.0; // no link ever measured: baseline
+        }
+        let speed_factors: Vec<f64> = inner
+            .speed
+            .iter()
+            .map(|r| r.recent_median(since, MEDIAN_K).unwrap_or(1.0))
+            .collect();
+        ClusterSnapshot { t, alive: inner.alive.clone(), bandwidth_factor, speed_factors }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_evicts_oldest_and_keeps_order() {
+        let mut r = Ring::new(3);
+        assert!(r.is_empty());
+        for i in 0..5 {
+            r.push(Sample { t: i as f64, value: i as f64 * 10.0 });
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.latest().unwrap().value, 40.0);
+        // only t in {2, 3, 4} survive
+        assert_eq!(r.recent_median(0.0, 10), Some(30.0));
+    }
+
+    #[test]
+    fn recent_median_resists_one_outlier_and_falls_back_when_stale() {
+        let mut r = Ring::new(8);
+        r.push(Sample { t: 1.0, value: 1.0 });
+        r.push(Sample { t: 2.0, value: 1.0 });
+        r.push(Sample { t: 3.0, value: 0.1 }); // one corrupted measurement
+        assert_eq!(r.recent_median(0.0, 3), Some(1.0), "single outlier moved the estimate");
+        // two consecutive low samples do shift it (a real regime change)
+        r.push(Sample { t: 4.0, value: 0.1 });
+        assert_eq!(r.recent_median(0.0, 3), Some(0.1));
+        // nothing in-window: fall back to the latest sample ever
+        assert_eq!(r.recent_median(100.0, 3), Some(0.1));
+        assert_eq!(Ring::new(2).recent_median(0.0, 3), None);
+    }
+
+    #[test]
+    fn empty_store_reports_baseline_conditions() {
+        let store = TelemetryStore::new(4, 1, 16, 2.0);
+        let snap = store.snapshot(5.0);
+        assert_eq!(snap.t, 5.0);
+        assert_eq!(snap.alive, vec![true; 4]);
+        assert_eq!(snap.bandwidth_factor, 1.0);
+        assert_eq!(snap.speed_factors, vec![1.0; 4]);
+        assert_eq!(store.bandwidth_age(5.0), f64::INFINITY);
+    }
+
+    #[test]
+    fn snapshot_reflects_recorded_samples_and_bottleneck_link() {
+        let store = TelemetryStore::new(3, 2, 16, 2.0);
+        for t in [1.0, 1.5, 2.0] {
+            store.record_bandwidth(0, t, 0.9, false);
+            store.record_bandwidth(1, t, 0.5, true);
+        }
+        store.record_speed(1, 2.0, 0.75);
+        store.record_liveness(2.0, &[true, true, false]);
+        let snap = store.snapshot(2.0);
+        assert_eq!(snap.bandwidth_factor, 0.5, "bottleneck link must govern");
+        assert_eq!(snap.speed_factors, vec![1.0, 0.75, 1.0]);
+        assert_eq!(snap.alive, vec![true, true, false]);
+        let stats = store.stats();
+        assert_eq!(stats.bandwidth_samples, 6);
+        assert_eq!(stats.active_probes, 3);
+        assert_eq!(stats.compute_samples, 1);
+        assert_eq!(stats.liveness_sweeps, 1);
+        assert!((store.bandwidth_age(2.5) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stale_samples_fall_out_of_the_window_but_not_out_of_memory() {
+        let store = TelemetryStore::new(2, 1, 16, 1.0);
+        store.record_bandwidth(0, 0.0, 0.4, false);
+        // inside the window the dip sample is the estimate
+        assert_eq!(store.snapshot(0.5).bandwidth_factor, 0.4);
+        // far outside the window: stale fallback still beats inventing 1.0
+        assert_eq!(store.snapshot(100.0).bandwidth_factor, 0.4);
+        // a fresh sample takes over immediately (median of in-window set)
+        store.record_bandwidth(0, 100.0, 0.8, false);
+        assert_eq!(store.snapshot(100.0).bandwidth_factor, 0.8);
+    }
+}

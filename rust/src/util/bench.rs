@@ -105,6 +105,16 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Emit the single-line `RESULT {...}` JSON trajectory record.
+///
+/// Every bench and e2e summary prints exactly this shape, and CI greps it
+/// out of the logs (`grep '^RESULT '`) to upload as an artifact — one
+/// emitter keeps the prefix and formatting identical everywhere so the
+/// extraction can never drift per target.
+pub fn emit_result(fields: Vec<(&str, crate::util::json::Json)>) {
+    println!("RESULT {}", crate::util::json::Json::obj(fields).to_string());
+}
+
 /// Fixed-width table printer for the paper-figure benches.
 pub struct Table {
     headers: Vec<String>,

@@ -24,6 +24,7 @@ use flexpie::model::zoo;
 use flexpie::net::{Bandwidth, Testbed, Topology};
 use flexpie::planner::plan_for_testbed;
 use flexpie::serve::ServeConfig;
+use flexpie::util::bench::emit_result;
 use flexpie::util::json::Json;
 
 /// The fixed seeds CI runs as a required job.
@@ -72,7 +73,7 @@ fn generated_chaos_three_seeds_pipelined() {
         results.push(out);
     }
     let sum = |f: fn(&ChaosOutcome) -> u64| results.iter().map(f).sum::<u64>();
-    let result = Json::obj(vec![
+    emit_result(vec![
         ("seeds", Json::arr(CI_SEEDS.iter().map(|&s| Json::Num(s as f64)))),
         ("requests", Json::Num(sum(|o| o.requests) as f64)),
         ("events_injected", Json::Num(sum(|o| o.events as u64) as f64)),
@@ -85,7 +86,6 @@ fn generated_chaos_three_seeds_pipelined() {
         ("mismatches", Json::Num(sum(|o| o.mismatches) as f64)),
         ("reordered", Json::Num(sum(|o| o.reordered) as f64)),
     ]);
-    println!("RESULT {}", result.to_string());
 }
 
 #[test]

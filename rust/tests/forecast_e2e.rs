@@ -1,0 +1,213 @@
+//! Forecast end-to-end: the acceptance test for the telemetry & forecasting
+//! subsystem.
+//!
+//! The controller here is *never* shown the condition trace. The world is
+//! hidden inside a [`TelemetrySource`]: passive probes on the traffic the
+//! cluster moves, an active low-rate prober, and heartbeat/compute sweeps
+//! produce samples; a ring-buffer store aggregates them; the forecaster
+//! (EWMA level + trend) projects each series a few batch boundaries ahead;
+//! and the background planner pre-warms the projected condition cell — so
+//! when the diurnal dip actually lands, its replan is a **forecast-warmed
+//! cache hit** with zero inline replans and no boundary rendezvous.
+//!
+//! `diurnal_dip_replan_is_forecast_warmed_through_measured_telemetry`
+//! prints a single-line `RESULT {...}` JSON summary that CI uploads as an
+//! artifact (forecast hit/miss counters, mean horizon error in quantized
+//! buckets, boundary-stall percentiles).
+
+use std::time::Duration;
+
+use flexpie::compute::{run_reference, Tensor, WeightStore};
+use flexpie::config::ForecastExperiment;
+use flexpie::elastic::{ConditionTrace, ElasticConfig, ElasticFrontend};
+use flexpie::engine;
+use flexpie::model::zoo;
+use flexpie::net::{Bandwidth, Testbed, Topology};
+use flexpie::planner::plan_for_testbed;
+use flexpie::serve::{ServeConfig, Server};
+use flexpie::telemetry::{TelemetryConfig, TelemetrySource};
+use flexpie::util::bench::emit_result;
+use flexpie::util::json::Json;
+
+fn base(nodes: usize) -> Testbed {
+    Testbed::new(nodes, Topology::Ring, Bandwidth::gbps(1.0))
+}
+
+#[test]
+fn diurnal_dip_replan_is_forecast_warmed_through_measured_telemetry() {
+    // One compressed day of diurnal bandwidth drift (100% → 40% → 100%),
+    // fed through the full telemetry path: world → probes → store →
+    // forecaster → pre-warm. No direct trace read anywhere downstream.
+    let exp = ForecastExperiment::default();
+    let model = zoo::edgenet(16);
+    let base = base(4);
+    let world = exp.world(4).expect("valid profile");
+    let source = TelemetrySource::new(world, &base, exp.telemetry_config());
+    let store = source.store();
+    let mut fe = ElasticFrontend::start_with_source(
+        model,
+        base,
+        Box::new(source),
+        exp.elastic_config(),
+    );
+
+    for k in 0..exp.boundaries() {
+        let vt = k as f64 * exp.boundary_dt;
+        let d = fe.acquire(vt);
+        assert_eq!(d.nodes, 4, "drift must never drop a node (vt={vt})");
+        assert_eq!(d.leader, 0);
+        assert!(d.cost_per_item > 0.0);
+        // deterministic rendezvous: pre-warms requested at this boundary
+        // complete before the next one, so hit attribution cannot race
+        fe.quiesce();
+    }
+    let ingest = store.stats();
+    let (m, stalls) = fe.finish();
+
+    // the ingestion layer actually measured the world (probes, sweeps)
+    assert!(ingest.bandwidth_samples as usize >= exp.boundaries(), "{ingest}");
+    assert!(ingest.liveness_sweeps as usize >= exp.boundaries(), "{ingest}");
+    assert!(ingest.compute_samples > 0, "{ingest}");
+
+    // the acceptance property: the dip's regime shifts were pre-planned
+    // from forecasts and served warm — never inline, never a rendezvous
+    assert!(m.forecasts >= 1, "no pre-warm was ever requested: {m}");
+    assert!(m.forecast_plans >= 1, "no forecast cell was ever planned: {m}");
+    assert!(
+        m.forecast_hits >= 1,
+        "the dip's replan was not a forecast-warmed cache hit: {m}"
+    );
+    assert_eq!(m.inline_replans, 0, "a boundary ran a DPP search inline: {m}");
+    assert_eq!(m.failovers, 0, "drift must never rendezvous as a failover: {m}");
+    assert_eq!(m.stale_plan_boundaries, 0, "{m}");
+    assert_eq!(m.checks, exp.boundaries() as u64);
+    // matured projections were scored against reality
+    assert!(m.forecast_evals >= 1, "{m}");
+
+    // zero boundary stall at the dip: every acquisition is a sample plus
+    // one atomic epoch load — even a noisy CI box stays far below search
+    // time at the median
+    assert_eq!(stalls.count, exp.boundaries());
+    assert!(
+        stalls.p50 < Duration::from_millis(20),
+        "boundaries are stalling on planning: {stalls}"
+    );
+
+    emit_result(vec![
+        ("suite", Json::Str("forecast_e2e".into())),
+        ("boundaries", Json::Num(m.checks as f64)),
+        ("bandwidth_samples", Json::Num(ingest.bandwidth_samples as f64)),
+        ("active_probes", Json::Num(ingest.active_probes as f64)),
+        ("forecasts", Json::Num(m.forecasts as f64)),
+        ("forecast_plans", Json::Num(m.forecast_plans as f64)),
+        ("forecast_hits", Json::Num(m.forecast_hits as f64)),
+        ("forecast_misses", Json::Num(m.forecast_misses as f64)),
+        ("forecast_hit_rate", Json::Num(m.forecast_hit_rate())),
+        ("forecast_mean_bucket_err", Json::Num(m.forecast_mean_bucket_err())),
+        ("inline_replans", Json::Num(m.inline_replans as f64)),
+        ("stale_plan_boundaries", Json::Num(m.stale_plan_boundaries as f64)),
+        ("stall_p50_us", Json::Num(stalls.p50.as_secs_f64() * 1e6)),
+        ("stall_p99_us", Json::Num(stalls.p99.as_secs_f64() * 1e6)),
+    ]);
+}
+
+/// A deterministic staircase descent (no trig, no RNG): non-overlapping
+/// absolute-factor windows stepping the bandwidth down 5% per virtual
+/// second — the controlled drift the failover test rides.
+fn staircase(nodes: usize) -> ConditionTrace {
+    ConditionTrace::stable(nodes)
+        .with_bandwidth_dip(1.0, 2.0, 0.95)
+        .with_bandwidth_dip(2.0, 3.0, 0.90)
+        .with_bandwidth_dip(3.0, 4.0, 0.85)
+        .with_bandwidth_dip(4.0, 5.0, 0.80)
+        .with_bandwidth_dip(5.0, f64::INFINITY, 0.75)
+}
+
+#[test]
+fn measured_failover_during_a_forecast_drift_stays_warm() {
+    // A node dies mid-descent, observed only through heartbeats. The
+    // forecaster has been pre-speculating n−1 cells at the *forecast*
+    // bandwidth, so both the failover and the post-failover cell shift are
+    // served from the warm cache — the cold-failover gap this subsystem
+    // closes.
+    let model = zoo::edgenet(16);
+    let base = base(4);
+    let world = staircase(4).with_outage(2, 3.75, f64::INFINITY);
+    let source = TelemetrySource::new(world, &base, TelemetryConfig::default());
+    let ecfg = ElasticConfig {
+        forecast: Some(flexpie::telemetry::ForecastConfig::default()),
+        cache_capacity: 64,
+        ..ElasticConfig::default()
+    };
+    let mut fe = ElasticFrontend::start_with_source(model, base, Box::new(source), ecfg);
+    let mut nodes_seen = Vec::new();
+    for k in 0..20 {
+        let d = fe.acquire(k as f64 * 0.5);
+        nodes_seen.push(d.nodes);
+        if d.nodes == 3 {
+            assert_eq!(d.alive, vec![true, true, false, true]);
+            assert_eq!(d.leader, 0, "a worker loss must not move leadership");
+        }
+        fe.quiesce();
+    }
+    assert!(nodes_seen.contains(&3), "the outage never reached the measured path");
+    assert_eq!(nodes_seen[..7], vec![4; 7], "heartbeat killed the node early");
+    let (m, _) = fe.finish();
+    assert!(m.failovers >= 1, "{m}");
+    assert!(
+        m.speculative_hits >= 1,
+        "measured failover was not served from the speculative cache: {m}"
+    );
+    assert!(m.forecasts >= 1, "{m}");
+    assert_eq!(m.inline_replans, 0, "{m}");
+    assert_eq!(m.stale_plan_boundaries, 0, "{m}");
+}
+
+#[test]
+fn telemetry_server_serves_bit_exact_and_detects_a_measured_collapse() {
+    // The full serving path on measured conditions: outputs stay
+    // bit-identical to the single-node reference, every request is
+    // accounted, and a mid-stream bandwidth collapse reaches the monitor
+    // purely through the passive traffic probe.
+    let model = zoo::edgenet(16);
+    let base = base(4);
+    let plan0 = plan_for_testbed(&model, &base);
+    let c0 = engine::evaluate(&model, &plan0, &base).total;
+    let world = ConditionTrace::stable(4).with_bandwidth_dip(2.5 * c0, f64::INFINITY, 0.1);
+    let server = Server::start_telemetry(
+        model.clone(),
+        WeightStore::for_model(&model, 5),
+        base,
+        world,
+        TelemetryConfig::default(),
+        ServeConfig {
+            max_batch: 1,
+            batch_window: Duration::ZERO,
+            queue_depth: 16,
+            ..ServeConfig::default()
+        },
+        ElasticConfig::default(),
+    );
+    let ws = WeightStore::for_model(&model, 5);
+    let n_requests = 10u64;
+    for i in 0..n_requests {
+        let input = Tensor::random(16, 16, 3, 4000 + i);
+        let reference = run_reference(&model, &ws, &input);
+        let resp = server.infer(input).expect("request lost");
+        assert_eq!(
+            reference.max_abs_diff(&resp.output),
+            0.0,
+            "request {i} output diverged on the measured path"
+        );
+        assert_eq!(resp.nodes, 4);
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.requests, n_requests);
+    let m = stats.adaptation.expect("measured path reports adaptation");
+    assert_eq!(m.checks, n_requests);
+    assert!(
+        m.degraded_checks >= 1,
+        "the collapse never reached the monitor through the probes: {m}"
+    );
+    assert_eq!(m.inline_replans, 0, "{m}");
+}
