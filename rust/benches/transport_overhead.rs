@@ -1,0 +1,128 @@
+//! Wire-transport overhead: what do real sockets cost over in-process
+//! channels?
+//!
+//! Both fabrics run the *identical* lockstep exchange on the identical
+//! plan, so the delta is pure transport: frame encode/decode, kernel
+//! socket hops and the coordinator round trip. The in-process path is
+//! `run_distributed` (threads + channels, the deterministic CI default);
+//! the wire path is a registry plus in-thread daemons meshed over
+//! TCP-localhost, driven by a [`ProcessCluster`]. Outputs are asserted
+//! bit-identical between the two before anything is timed — a transport
+//! that changes the numbers has no overhead worth measuring.
+//!
+//! The single-line `RESULT` JSON carries both throughputs, the overhead
+//! ratio, wire latency percentiles, and the leader's per-request wire
+//! bytes/messages.
+//!
+//! ```bash
+//! cargo bench --bench transport_overhead
+//! FLEXPIE_BENCH_FAST=1 cargo bench --bench transport_overhead   # CI smoke
+//! ```
+
+use std::time::{Duration, Instant};
+
+use flexpie::cluster::run_distributed;
+use flexpie::compute::{Tensor, WeightStore};
+use flexpie::config::TransportExperiment;
+use flexpie::model::zoo;
+use flexpie::partition::{Plan, Scheme};
+use flexpie::transport::coord::{InferOutcome, ProcessCluster};
+use flexpie::transport::daemon::{self, DaemonOpts};
+use flexpie::transport::registry::RegistryServer;
+use flexpie::util::bench::{black_box, emit_result};
+use flexpie::util::json::Json;
+
+fn main() {
+    let fast = std::env::var("FLEXPIE_BENCH_FAST").is_ok();
+    let exp = TransportExperiment {
+        requests: if fast { 8 } else { 48 },
+        ..Default::default()
+    };
+    let model = zoo::by_name(&exp.model).expect("zoo model");
+    let plan = Plan::uniform(Scheme::InH, model.n_layers());
+    let ws = WeightStore::for_model(&model, exp.seed);
+    let l0 = &model.layers[0];
+    let inputs: Vec<Tensor> = (0..exp.requests)
+        .map(|i| Tensor::random(l0.in_h, l0.in_w, l0.in_c, 0xBEC + i as u64))
+        .collect();
+
+    // --- wire cluster: registry + in-thread daemons over TCP-localhost ---
+    let reg = RegistryServer::spawn(&exp.registry, Duration::from_millis(exp.ttl_ms))
+        .expect("registry bind");
+    for id in 0..exp.nodes as u32 {
+        let mut opts = DaemonOpts::new(id, reg.addr());
+        opts.tcp = exp.tcp_opts();
+        std::thread::spawn(move || {
+            let _ = daemon::run(opts);
+        });
+    }
+    let mut pc = ProcessCluster::connect(reg.addr(), exp.nodes, Duration::from_secs(30))
+        .expect("cluster bring-up");
+    pc.infer_deadline = Duration::from_millis(exp.infer_deadline_ms);
+    pc.install(&model, &plan, exp.seed).expect("plan install");
+
+    // correctness gate: both fabrics must agree bit-for-bit before timing
+    let wire_probe = match pc.infer(&inputs[0]).expect("probe inference") {
+        InferOutcome::Done(run) => run,
+        InferOutcome::Failed { dead, .. } => panic!("healthy cluster failed (dead={dead:?})"),
+    };
+    let local_probe = run_distributed(&model, &plan, &ws, &inputs[0], exp.nodes);
+    assert_eq!(
+        local_probe.output.max_abs_diff(&wire_probe.output),
+        0.0,
+        "fabrics disagree — overhead is meaningless"
+    );
+
+    // --- in-process baseline ---
+    let t0 = Instant::now();
+    for input in &inputs {
+        black_box(run_distributed(&model, &plan, &ws, input, exp.nodes).output);
+    }
+    let local_secs = t0.elapsed().as_secs_f64();
+
+    // --- wire run, per-request latencies ---
+    let mut lat: Vec<Duration> = Vec::with_capacity(exp.requests);
+    let (mut wire_bytes, mut wire_msgs) = (0u64, 0u64);
+    let t0 = Instant::now();
+    for input in &inputs {
+        let t = Instant::now();
+        match pc.infer(input).expect("coordinator alive") {
+            InferOutcome::Done(run) => {
+                lat.push(t.elapsed());
+                wire_bytes += run.bytes;
+                wire_msgs += run.msgs;
+                black_box(run.output);
+            }
+            InferOutcome::Failed { dead, .. } => panic!("wire run failed (dead={dead:?})"),
+        }
+    }
+    let wire_secs = t0.elapsed().as_secs_f64();
+    pc.shutdown();
+
+    let local_rps = exp.requests as f64 / local_secs.max(1e-12);
+    let wire_rps = exp.requests as f64 / wire_secs.max(1e-12);
+    let overhead = local_secs / wire_secs.max(1e-12); // <1 when wire is slower
+    let s = flexpie::metrics::summarize(&lat);
+    println!(
+        "in-process {local_rps:.1} req/s | wire {wire_rps:.1} req/s \
+         (wire/local {:.2}x) | wire latency {s}",
+        wire_rps / local_rps.max(1e-12)
+    );
+
+    emit_result(vec![
+        ("bench", Json::Str("transport_overhead".into())),
+        ("experiment", exp.to_json()),
+        ("model", Json::Str(model.name.clone())),
+        ("requests", Json::Num(exp.requests as f64)),
+        ("local_rps", Json::Num(local_rps)),
+        ("wire_rps", Json::Num(wire_rps)),
+        ("wire_over_local", Json::Num(wire_rps / local_rps.max(1e-12))),
+        ("local_over_wire_time", Json::Num(overhead)),
+        ("wire_p50_us", Json::Num(s.p50.as_secs_f64() * 1e6)),
+        ("wire_p99_us", Json::Num(s.p99.as_secs_f64() * 1e6)),
+        ("wire_mean_us", Json::Num(s.mean.as_secs_f64() * 1e6)),
+        ("leader_bytes_per_req", Json::Num(wire_bytes as f64 / exp.requests as f64)),
+        ("leader_msgs_per_req", Json::Num(wire_msgs as f64 / exp.requests as f64)),
+        ("bit_identical", Json::Bool(true)),
+    ]);
+}

@@ -1,0 +1,181 @@
+//! `flexpie-ctl` — coordinator-side tooling for the wire transport.
+//!
+//! ```text
+//! flexpie-ctl registry [--bind tcp:127.0.0.1:0] [--ttl-ms 1000]
+//! flexpie-ctl resolve  --registry <addr>
+//! flexpie-ctl serve    --registry <addr> --nodes 3 [--model edgenet] \
+//!                      [--scheme inh|inw|outc|grid] [--seed 5] [--requests 8]
+//! flexpie-ctl shutdown --registry <addr>
+//! ```
+//!
+//! `registry` hosts the TTL-leased discovery service in this process and
+//! prints `REGISTRY <addr>` (supervisors wait for that line). `serve`
+//! discovers the live daemons, installs a plan, drives inferences through
+//! the cluster and — because the weights derive deterministically from the
+//! seed — verifies every output against the in-process single-node
+//! reference, bit for bit.
+
+use std::sync::atomic::AtomicBool;
+use std::time::Duration;
+
+use flexpie::compute::{run_reference, Tensor, WeightStore};
+use flexpie::model::zoo;
+use flexpie::partition::{Plan, Scheme};
+use flexpie::transport::coord::{InferOutcome, ProcessCluster};
+use flexpie::transport::{registry, tcp};
+use flexpie::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let code = match args.command.as_deref() {
+        Some("registry") => cmd_registry(&args),
+        Some("resolve") => cmd_resolve(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("shutdown") => cmd_shutdown(&args),
+        _ => {
+            eprintln!(
+                "flexpie-ctl — FlexPie wire-transport coordinator\n\
+                 commands: registry | resolve | serve | shutdown\n\
+                 see README.md (\"Wire transport\") for usage"
+            );
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+/// Host the registry in this process until a `Shutdown` frame arrives.
+fn cmd_registry(args: &Args) -> i32 {
+    let bind = args.get_or("bind", "tcp:127.0.0.1:0");
+    let ttl = Duration::from_millis(args.u64_or("ttl-ms", 1000));
+    let (listener, addr) = match tcp::listen(bind) {
+        Ok(la) => la,
+        Err(e) => {
+            eprintln!("flexpie-ctl registry: bind {bind}: {e}");
+            return 1;
+        }
+    };
+    if let Err(e) = listener.set_nonblocking(true) {
+        eprintln!("flexpie-ctl registry: {e}");
+        return 1;
+    }
+    use std::io::Write as _;
+    println!("REGISTRY {addr}");
+    let _ = std::io::stdout().flush();
+    let stop = AtomicBool::new(false);
+    registry::serve(listener, ttl, &stop);
+    0
+}
+
+fn cmd_resolve(args: &Args) -> i32 {
+    let Some(reg) = args.get("registry") else {
+        eprintln!("flexpie-ctl resolve: --registry required");
+        return 2;
+    };
+    match registry::resolve(reg) {
+        Ok(entries) => {
+            for e in &entries {
+                println!(
+                    "node {} ctl={} data={} speed={}",
+                    e.node, e.ctl_addr, e.data_addr, e.speed
+                );
+            }
+            println!("{} live daemon(s)", entries.len());
+            0
+        }
+        Err(e) => {
+            eprintln!("flexpie-ctl resolve: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    let Some(reg) = args.get("registry") else {
+        eprintln!("flexpie-ctl serve: --registry required");
+        return 2;
+    };
+    let min_nodes = args.usize_or("nodes", 3);
+    let Some(model) = zoo::by_name(args.get_or("model", "edgenet")) else {
+        eprintln!("flexpie-ctl serve: unknown model");
+        return 2;
+    };
+    let scheme = match args.get_or("scheme", "inh") {
+        "inw" => Scheme::InW,
+        "outc" => Scheme::OutC,
+        "grid" => Scheme::Grid2d,
+        _ => Scheme::InH,
+    };
+    let seed = args.u64_or("seed", 5);
+    let requests = args.u64_or("requests", 8);
+
+    let plan = Plan::uniform(scheme, model.n_layers());
+    let mut pc = match ProcessCluster::connect(reg, min_nodes, Duration::from_secs(30)) {
+        Ok(pc) => pc,
+        Err(e) => {
+            eprintln!("flexpie-ctl serve: cluster bring-up: {e}");
+            return 1;
+        }
+    };
+    if let Err(e) = pc.install(&model, &plan, seed) {
+        eprintln!("flexpie-ctl serve: plan install: {e}");
+        return 1;
+    }
+    println!(
+        "installed {} ({scheme:?}) on {} daemon(s), leader {}",
+        model.name,
+        pc.nodes(),
+        pc.leader()
+    );
+
+    let ws = WeightStore::for_model(&model, seed);
+    let l0 = &model.layers[0];
+    let (mut ok, mut failed) = (0u64, 0u64);
+    for i in 0..requests {
+        let input = Tensor::random(l0.in_h, l0.in_w, l0.in_c, 0xC0DE + i);
+        match pc.infer(&input) {
+            Ok(InferOutcome::Done(run)) => {
+                let reference = run_reference(&model, &ws, &input);
+                let diff = reference.max_abs_diff(&run.output);
+                if diff != 0.0 {
+                    eprintln!("request {i}: output diverged from reference ({diff})");
+                    return 1;
+                }
+                ok += 1;
+                println!(
+                    "request {i}: ok (seq {}, leader sent {} B in {} msgs)",
+                    run.seq, run.bytes, run.msgs
+                );
+            }
+            Ok(InferOutcome::Failed { dead, .. }) => {
+                failed += 1;
+                println!("request {i}: failed explicitly (dead={dead:?}); reinstalling");
+                if let Err(e) = pc.reinstall(dead) {
+                    eprintln!("flexpie-ctl serve: reinstall: {e}");
+                    return 1;
+                }
+            }
+            Err(e) => {
+                eprintln!("flexpie-ctl serve: {e}");
+                return 1;
+            }
+        }
+    }
+    println!("served {ok} ok, {failed} failed-and-reinstalled, 0 silently dropped");
+    pc.shutdown();
+    0
+}
+
+fn cmd_shutdown(args: &Args) -> i32 {
+    let Some(reg) = args.get("registry") else {
+        eprintln!("flexpie-ctl shutdown: --registry required");
+        return 2;
+    };
+    match registry::shutdown(reg) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("flexpie-ctl shutdown: {e}");
+            1
+        }
+    }
+}

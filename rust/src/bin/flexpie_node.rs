@@ -1,0 +1,44 @@
+//! `flexpie-node` — one node daemon, one OS process.
+//!
+//! ```text
+//! flexpie-node --node 0 --registry tcp:127.0.0.1:4500 \
+//!              [--ctl-bind tcp:127.0.0.1:0] [--data-bind tcp:127.0.0.1:0] \
+//!              [--speed 1.0] [--heartbeat-ms 100] [--heartbeat-timeout-ms 1200]
+//! ```
+//!
+//! Boots, registers with the registry, prints `READY node=… ctl=… data=…`
+//! (supervisors wait for that line), then serves plan installs and
+//! inferences until a coordinator sends `Shutdown` — or until someone
+//! `kill -9`s it, which is a supported and tested way to go: the lease
+//! expires, the coordinator reinstalls on the survivors, and retried
+//! inferences come out bit-identical.
+
+use std::time::Duration;
+
+use flexpie::transport::daemon::{run, DaemonOpts};
+use flexpie::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let Some(registry) = args.get("registry") else {
+        eprintln!(
+            "flexpie-node — FlexPie wire-transport node daemon\n\
+             usage: flexpie-node --node <id> --registry <addr> \
+             [--ctl-bind <addr>] [--data-bind <addr>] [--speed <f>]\n\
+             addresses: tcp:HOST:PORT (port 0 = ephemeral) or unix:/path/sock"
+        );
+        std::process::exit(2);
+    };
+    let mut opts = DaemonOpts::new(args.u64_or("node", 0) as u32, registry);
+    opts.ctl_bind = args.get_or("ctl-bind", "tcp:127.0.0.1:0").to_string();
+    opts.data_bind = args.get_or("data-bind", "tcp:127.0.0.1:0").to_string();
+    opts.speed = args.f64_or("speed", 1.0);
+    opts.tcp.heartbeat_interval = Duration::from_millis(args.u64_or("heartbeat-ms", 100));
+    opts.tcp.heartbeat_timeout =
+        Duration::from_millis(args.u64_or("heartbeat-timeout-ms", 1200));
+    opts.announce = true;
+    if let Err(e) = run(opts) {
+        eprintln!("flexpie-node: {e}");
+        std::process::exit(1);
+    }
+}

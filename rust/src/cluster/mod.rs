@@ -4,11 +4,20 @@
 //! (logical node 0 — under failure, the lowest-ranked survivor elected by
 //! [`election::elect_leader`]) holds the model input, scatters each node's
 //! entry requirement, and gathers the final output; between blocks, nodes
-//! exchange *real tensor halos* over channels according to the exact
-//! message matrices the cost model prices. Every node derives the plan
-//! geometry independently (as the paper's devices do from the deployed
-//! partition scheme), so the exchange protocol is deterministic: each node
-//! knows precisely how many patches to expect at every boundary.
+//! exchange *real tensor halos* according to the exact message matrices the
+//! cost model prices. Every node derives the plan geometry independently
+//! (as the paper's devices do from the deployed partition scheme), so the
+//! exchange protocol is deterministic: each node knows precisely how many
+//! patches to expect at every boundary.
+//!
+//! The protocol itself ([`node_main`]) is generic over the
+//! [`crate::transport::Exchange`] fabric: [`SimExchange`] runs it over
+//! in-process mpsc channels (the deterministic test/CI mode used here),
+//! and [`crate::transport::tcp::TcpExchange`] runs the byte-identical
+//! protocol between real OS processes over TCP/UDS — the
+//! [`crate::transport::daemon`] path. Either way, peer death surfaces
+//! *mid-batch* as a typed [`crate::transport::TransportError`], not only
+//! at batch boundaries.
 //!
 //! Wall-clock timing of these threads is *not* the reported inference time —
 //! the host is one shared CPU, not four DSPs. Reported times come from the
@@ -22,14 +31,18 @@
 pub mod election;
 pub mod pipeline;
 
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use crate::compute::{compute_region, PatchStore, RegionTensor, Tensor, WeightStore};
 use crate::model::Model;
 use crate::partition::geometry::out_tiles;
 use crate::partition::inflate::BlockGeometry;
-use crate::partition::{Plan, Region, Tile};
+use crate::partition::{Plan, Region, Scheme, Tile};
+use crate::transport::{Exchange, TransportError};
+use crate::DTYPE_BYTES;
 
 /// A halo/boundary message: a tensor patch for a given boundary index.
 struct Msg {
@@ -64,6 +77,25 @@ pub struct ClusterRun {
     pub boundary_traffic: Vec<BoundaryTraffic>,
 }
 
+/// Validate `plan` against `model` and derive the per-block geometry every
+/// node computes independently. Shared by the in-process runner and the
+/// process-mode daemon, so both fabrics execute identical tile math.
+pub(crate) fn plan_geometry(
+    model: &Model,
+    plan: &Plan,
+    nodes: usize,
+) -> (Vec<(usize, usize, Scheme)>, Vec<BlockGeometry>) {
+    plan.validate().expect("invalid plan");
+    assert_eq!(plan.steps.len(), model.n_layers());
+    let layers = &model.layers;
+    let blocks = plan.blocks();
+    let geos: Vec<BlockGeometry> = blocks
+        .iter()
+        .map(|&(s, e, scheme)| BlockGeometry::new(&layers[s..=e], scheme, nodes))
+        .collect();
+    (blocks, geos)
+}
+
 /// Execute `plan` for `model` on `nodes` simulated devices with real
 /// numerics. Returns the gathered output (identical to the single-node
 /// reference up to f32 associativity — exactly equal here, since each output
@@ -75,16 +107,8 @@ pub fn run_distributed(
     input: &Tensor,
     nodes: usize,
 ) -> ClusterRun {
-    plan.validate().expect("invalid plan");
-    assert_eq!(plan.steps.len(), model.n_layers());
-    let layers = &model.layers;
-    let blocks = plan.blocks();
-    let geos: Arc<Vec<BlockGeometry>> = Arc::new(
-        blocks
-            .iter()
-            .map(|&(s, e, scheme)| BlockGeometry::new(&layers[s..=e], scheme, nodes))
-            .collect(),
-    );
+    let (blocks, geos) = plan_geometry(model, plan, nodes);
+    let geos = Arc::new(geos);
     let blocks = Arc::new(blocks);
     let weights = Arc::new(weights.clone());
     let model = Arc::new(model.clone());
@@ -101,15 +125,16 @@ pub fn run_distributed(
 
     let mut handles = Vec::new();
     for node in 0..nodes {
-        let rx = Mailbox::new(receivers[node].take().unwrap());
+        let rx = receivers[node].take().unwrap();
         let txs: Vec<Sender<Msg>> = senders.clone();
         let model = Arc::clone(&model);
         let weights = Arc::clone(&weights);
-        let input = Arc::clone(&input);
+        let input = if node == 0 { Some(Arc::clone(&input)) } else { None };
         let geos = Arc::clone(&geos);
         let blocks = Arc::clone(&blocks);
         handles.push(std::thread::spawn(move || {
-            node_main(node, nodes, &model, &blocks, &geos, &weights, &input, rx, &txs)
+            let mut ex = SimExchange::new(node, txs, rx);
+            node_main(node, nodes, &model, &blocks, &geos, &weights, input.as_deref(), &mut ex)
         }));
     }
     drop(senders);
@@ -119,7 +144,10 @@ pub fn run_distributed(
     let mut messages = 0usize;
     let mut boundary_traffic = vec![BoundaryTraffic::default(); geos.len() + 1];
     for (node, h) in handles.into_iter().enumerate() {
-        let res = h.join().expect("node thread panicked");
+        let res = h
+            .join()
+            .expect("node thread panicked")
+            .unwrap_or_else(|e| panic!("node {node} transport failure: {e}"));
         bytes += res.sent_bytes;
         messages += res.sent_msgs;
         for (sum, t) in boundary_traffic.iter_mut().zip(&res.traffic) {
@@ -163,45 +191,66 @@ pub fn run_degraded(
     run_distributed(model, plan, weights, input, survivors)
 }
 
-struct NodeResult {
-    output: Option<Tensor>,
-    sent_bytes: u64,
-    sent_msgs: usize,
+pub(crate) struct NodeResult {
+    pub(crate) output: Option<Tensor>,
+    pub(crate) sent_bytes: u64,
+    pub(crate) sent_msgs: usize,
     /// This node's sent traffic per exchange boundary.
-    traffic: Vec<BoundaryTraffic>,
+    pub(crate) traffic: Vec<BoundaryTraffic>,
 }
 
-/// How many patches `to` receives from all peers at `boundary`, given the
-/// deterministic send rule (one patch per non-empty rect intersection).
-fn expected_patches(have: &[Tile], need: &[Tile], to: usize) -> usize {
-    let mut count = 0;
-    for (from, h) in have.iter().enumerate() {
-        if from == to {
+/// The deterministic send rule at a block boundary: everything `from`'s
+/// canonical tiles (`have[from]`) contribute to every peer's entry needs —
+/// one patch per non-empty rect intersection, enumerated in `(to, have
+/// rect, need rect)` order. Both execution paths (lockstep [`node_main`]
+/// and the pipelined stage helpers) and both fabrics derive their message
+/// lists from this one function, so byte/message accounting agrees
+/// everywhere by construction.
+pub(crate) fn boundary_sends(have: &[Tile], need: &[Tile], from: usize) -> Vec<(usize, Region)> {
+    let mut out = Vec::new();
+    for (to, nb) in need.iter().enumerate() {
+        if to == from {
             continue;
         }
-        for ra in h {
-            for rb in &need[to] {
-                if !ra.intersect(rb).is_empty() {
-                    count += 1;
+        for ra in &have[from] {
+            for rb in nb {
+                let ov = ra.intersect(rb);
+                if !ov.is_empty() {
+                    out.push((to, ov));
                 }
             }
         }
     }
-    count
+    out
 }
 
+/// How many patches `to` receives from all peers at `boundary`, given the
+/// deterministic send rule (one patch per non-empty rect intersection).
+pub(crate) fn expected_patches(have: &[Tile], need: &[Tile], to: usize) -> usize {
+    (0..have.len())
+        .filter(|&from| from != to)
+        .map(|from| boundary_sends(have, need, from).iter().filter(|(t, _)| *t == to).count())
+        .sum()
+}
+
+/// One node's lockstep protocol run, generic over the message fabric.
+/// `input` is `Some` only on the leader (logical node 0), which owns
+/// scatter and gather; in process mode the coordinator hands the input to
+/// the leader daemon alone. Any transport failure — a dead peer, a missed
+/// deadline — aborts the run with a typed error; the caller decides whether
+/// that is a panic (deterministic in-process mode, where it can only be a
+/// bug) or an explicit per-request failure (process mode under chaos).
 #[allow(clippy::too_many_arguments)]
-fn node_main(
+pub(crate) fn node_main<E: Exchange>(
     node: usize,
     nodes: usize,
     model: &Model,
-    blocks: &[(usize, usize, crate::partition::Scheme)],
+    blocks: &[(usize, usize, Scheme)],
     geos: &[BlockGeometry],
     weights: &WeightStore,
-    input: &Tensor,
-    rx: Mailbox,
-    txs: &[Sender<Msg>],
-) -> NodeResult {
+    input: Option<&Tensor>,
+    ex: &mut E,
+) -> Result<NodeResult, TransportError> {
     let layers = &model.layers;
     let n = layers.len();
     let mut sent_bytes = 0u64;
@@ -212,11 +261,11 @@ fn node_main(
     // --- scatter -----------------------------------------------------------
     let l0 = &layers[0];
     let full_in = Region::full(l0.in_h, l0.in_w, l0.in_c);
-    let mut rx = rx;
     let mut store = PatchStore::new();
     {
         let entry_need = &geos[0].entry_need;
         if node == 0 {
+            let input = input.expect("leader requires the input tensor");
             let whole = RegionTensor::new(full_in, input.clone());
             // keep own requirement locally
             store.add(whole.clone());
@@ -226,11 +275,11 @@ fn node_main(
                     if patch.region.is_empty() {
                         continue;
                     }
-                    sent_bytes += patch.t.numel() as u64 * 4;
+                    sent_bytes += patch.t.numel() as u64 * DTYPE_BYTES;
                     sent_msgs += 1;
-                    traffic[boundary].bytes += patch.t.numel() as u64 * 4;
+                    traffic[boundary].bytes += patch.t.numel() as u64 * DTYPE_BYTES;
                     traffic[boundary].msgs += 1;
-                    txs[to].send(Msg { boundary, patch }).unwrap();
+                    ex.send(to, boundary, patch)?;
                 }
             }
         } else {
@@ -238,7 +287,7 @@ fn node_main(
                 .iter()
                 .filter(|r| !r.intersect(&full_in).is_empty())
                 .count();
-            rx.recv_for(boundary, expect, &mut store);
+            ex.recv_for(boundary, expect, &mut store)?;
         }
     }
     boundary += 1;
@@ -263,49 +312,38 @@ fn node_main(
             // gather to leader
             if node != 0 {
                 for rt in &store.patches {
-                    sent_bytes += rt.t.numel() as u64 * 4;
+                    sent_bytes += rt.t.numel() as u64 * DTYPE_BYTES;
                     sent_msgs += 1;
-                    traffic[boundary].bytes += rt.t.numel() as u64 * 4;
+                    traffic[boundary].bytes += rt.t.numel() as u64 * DTYPE_BYTES;
                     traffic[boundary].msgs += 1;
-                    txs[0].send(Msg { boundary, patch: rt.clone() }).unwrap();
+                    ex.send(0, boundary, rt.clone())?;
                 }
             } else {
                 let expect: usize = (1..nodes)
                     .map(|other| have[other].iter().filter(|r| !r.is_empty()).count())
                     .sum();
                 let mut gathered = store;
-                rx.recv_for(boundary, expect, &mut gathered);
+                ex.recv_for(boundary, expect, &mut gathered)?;
                 let last = &layers[n - 1];
                 let full = Region::full(last.out_h, last.out_w, last.out_c);
                 let out = gathered.extract(&full, &full, true);
-                return NodeResult { output: Some(out), sent_bytes, sent_msgs, traffic };
+                return Ok(NodeResult { output: Some(out), sent_bytes, sent_msgs, traffic });
             }
         } else {
             let need: Vec<Tile> = geos[bi + 1].entry_need.clone();
             // send: my canonical tiles ∩ everyone's needs
-            for (to, nb) in need.iter().enumerate() {
-                if to == node {
-                    continue;
-                }
-                for ra in &have[node] {
-                    for rb in nb {
-                        let ov = ra.intersect(rb);
-                        if ov.is_empty() {
-                            continue;
-                        }
-                        // find the patch data (store holds this block's
-                        // outputs, which cover the canonical tile)
-                        let mut tmp = PatchStore::new();
-                        let dense = store.extract(&ov, &ov, true);
-                        tmp.add(RegionTensor::new(ov, dense));
-                        let patch = tmp.patches.pop().unwrap();
-                        sent_bytes += patch.t.numel() as u64 * 4;
-                        sent_msgs += 1;
-                        traffic[boundary].bytes += patch.t.numel() as u64 * 4;
-                        traffic[boundary].msgs += 1;
-                        txs[to].send(Msg { boundary, patch }).unwrap();
-                    }
-                }
+            for (to, ov) in boundary_sends(&have, &need, node) {
+                // find the patch data (store holds this block's outputs,
+                // which cover the canonical tile)
+                let dense = store.extract(&ov, &ov, true);
+                let mut tmp = PatchStore::new();
+                tmp.add(RegionTensor::new(ov, dense));
+                let patch = tmp.patches.pop().unwrap();
+                sent_bytes += patch.t.numel() as u64 * DTYPE_BYTES;
+                sent_msgs += 1;
+                traffic[boundary].bytes += patch.t.numel() as u64 * DTYPE_BYTES;
+                traffic[boundary].msgs += 1;
+                ex.send(to, boundary, patch)?;
             }
             // receive + keep own data
             let expect = expected_patches(&have, &need, node);
@@ -313,30 +351,90 @@ fn node_main(
             for p in store.patches.drain(..) {
                 next.add(p);
             }
-            rx.recv_for(boundary, expect, &mut next);
+            ex.recv_for(boundary, expect, &mut next)?;
             store = next;
         }
         boundary += 1;
     }
-    NodeResult { output: None, sent_bytes, sent_msgs, traffic }
+    Ok(NodeResult { output: None, sent_bytes, sent_msgs, traffic })
 }
 
-/// Receiver with reordering: a fast peer may already be sending patches for
-/// a *later* boundary while this node still waits on the current one, so
+/// How often a blocked `recv_for` wakes to check peer liveness.
+const SIM_TICK: Duration = Duration::from_millis(1);
+
+/// The in-process fabric: mpsc channels between node threads, with the
+/// Mailbox reordering rule (a fast peer may already send patches for a
+/// *later* boundary while this node still waits on the current one, so
 /// messages tagged ahead are buffered; messages tagged behind are protocol
-/// violations.
-struct Mailbox {
+/// violations). This is the deterministic default used by tests, CI, and
+/// every pre-PR-6 entry point.
+///
+/// Chaos tooling can hand the exchange a shared `dead` mask: while blocked
+/// in `recv_for`, the wait wakes every [`SIM_TICK`] and surfaces any peer
+/// flagged dead as [`TransportError::PeerDead`] — *mid-batch*, mirroring
+/// how the TCP fabric detects missed heartbeats without waiting for the
+/// batch boundary.
+pub struct SimExchange {
+    node: usize,
+    txs: Vec<Sender<Msg>>,
     rx: Receiver<Msg>,
     pending: Vec<Msg>,
+    dead: Option<Arc<Vec<AtomicBool>>>,
+    deadline: Duration,
 }
 
-impl Mailbox {
-    fn new(rx: Receiver<Msg>) -> Mailbox {
-        Mailbox { rx, pending: Vec::new() }
+impl SimExchange {
+    fn new(node: usize, txs: Vec<Sender<Msg>>, rx: Receiver<Msg>) -> SimExchange {
+        SimExchange {
+            node,
+            txs,
+            rx,
+            pending: Vec::new(),
+            dead: None,
+            // effectively unbounded: in deterministic mode a stall is a bug,
+            // and the protocol has no lost-message mode
+            deadline: Duration::from_secs(3600),
+        }
+    }
+
+    /// Same fabric with failure injection: `dead[i]` flips when peer `i`
+    /// "dies", and `deadline` bounds any single wait.
+    fn with_liveness(
+        node: usize,
+        txs: Vec<Sender<Msg>>,
+        rx: Receiver<Msg>,
+        dead: Arc<Vec<AtomicBool>>,
+        deadline: Duration,
+    ) -> SimExchange {
+        SimExchange { node, txs, rx, pending: Vec::new(), dead: Some(dead), deadline }
+    }
+
+    fn dead_peer(&self) -> Option<usize> {
+        let dead = self.dead.as_ref()?;
+        dead.iter()
+            .enumerate()
+            .find(|&(i, d)| i != self.node && d.load(Ordering::SeqCst))
+            .map(|(i, _)| i)
+    }
+}
+
+impl Exchange for SimExchange {
+    fn send(
+        &mut self,
+        to: usize,
+        boundary: usize,
+        patch: RegionTensor,
+    ) -> Result<(), TransportError> {
+        self.txs[to].send(Msg { boundary, patch }).map_err(|_| TransportError::PeerDead(to))
     }
 
     /// Receive exactly `expect` patches tagged `boundary` into `store`.
-    fn recv_for(&mut self, boundary: usize, expect: usize, store: &mut PatchStore) {
+    fn recv_for(
+        &mut self,
+        boundary: usize,
+        expect: usize,
+        store: &mut PatchStore,
+    ) -> Result<(), TransportError> {
         let mut got = 0usize;
         // drain previously buffered patches for this boundary
         let mut i = 0;
@@ -349,20 +447,38 @@ impl Mailbox {
                 i += 1;
             }
         }
+        let start = Instant::now();
         while got < expect {
-            let msg = self.rx.recv().expect("peer disconnected");
-            if msg.boundary == boundary {
-                store.add(msg.patch);
-                got += 1;
-            } else {
-                assert!(
-                    msg.boundary > boundary,
-                    "stale message for boundary {} while at {boundary}",
-                    msg.boundary
-                );
-                self.pending.push(msg);
+            if let Some(p) = self.dead_peer() {
+                return Err(TransportError::PeerDead(p));
+            }
+            match self.rx.recv_timeout(SIM_TICK) {
+                Ok(msg) => {
+                    if msg.boundary == boundary {
+                        store.add(msg.patch);
+                        got += 1;
+                    } else if msg.boundary > boundary {
+                        self.pending.push(msg);
+                    } else {
+                        return Err(TransportError::Protocol(format!(
+                            "stale message for boundary {} while at {boundary}",
+                            msg.boundary
+                        )));
+                    }
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    if start.elapsed() > self.deadline {
+                        return Err(TransportError::Deadline { boundary, got, expect });
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    return Err(TransportError::Protocol(
+                        "all peers disconnected mid-protocol".into(),
+                    ));
+                }
             }
         }
+        Ok(())
     }
 }
 
@@ -371,7 +487,7 @@ mod tests {
     use super::*;
     use crate::compute::run_reference;
     use crate::model::zoo;
-    use crate::partition::{Mode, Scheme};
+    use crate::partition::Mode;
 
     fn check_plan(model: &Model, plan: &Plan, nodes: usize) {
         let ws = WeightStore::for_model(model, 11);
@@ -512,5 +628,70 @@ mod tests {
         let run = run_distributed(&model, &plan, &ws, &input, 1);
         assert_eq!(reference.max_abs_diff(&run.output), 0.0);
         assert_eq!(run.bytes_exchanged, 0);
+    }
+
+    // --- mid-batch failure detection on the simulated fabric ------------
+
+    #[test]
+    fn sim_exchange_surfaces_peer_death_mid_wait() {
+        // node 0 blocks waiting for a patch that will never come; a watcher
+        // thread flips the dead mask 20ms in. recv_for must return
+        // PeerDead(1) from *inside* the wait — mid-batch, not at a batch
+        // boundary — and well before the overall deadline.
+        let (_tx0, rx0) = channel::<Msg>();
+        let (tx1, _rx1) = channel::<Msg>();
+        let (tx0b, _) = channel::<Msg>();
+        let dead: Arc<Vec<AtomicBool>> = Arc::new((0..2).map(|_| AtomicBool::new(false)).collect());
+        let mut ex = SimExchange::with_liveness(
+            0,
+            vec![tx0b, tx1],
+            rx0,
+            Arc::clone(&dead),
+            Duration::from_secs(10),
+        );
+        let killer = {
+            let dead = Arc::clone(&dead);
+            std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(20));
+                dead[1].store(true, Ordering::SeqCst);
+            })
+        };
+        let start = Instant::now();
+        let mut store = PatchStore::new();
+        let err = ex.recv_for(1, 1, &mut store).unwrap_err();
+        assert_eq!(err, TransportError::PeerDead(1));
+        assert!(
+            start.elapsed() < Duration::from_secs(5),
+            "death detected only after the deadline, not mid-wait"
+        );
+        killer.join().unwrap();
+    }
+
+    #[test]
+    fn sim_exchange_deadline_is_typed_not_a_hang() {
+        // nobody dies and nobody sends: the bounded wait must end in a
+        // typed Deadline error carrying the progress made
+        let (_tx0, rx0) = channel::<Msg>();
+        let (tx1, _rx1) = channel::<Msg>();
+        let (tx0b, _) = channel::<Msg>();
+        let dead: Arc<Vec<AtomicBool>> = Arc::new((0..2).map(|_| AtomicBool::new(false)).collect());
+        let mut ex =
+            SimExchange::with_liveness(0, vec![tx0b, tx1], rx0, dead, Duration::from_millis(30));
+        let mut store = PatchStore::new();
+        let err = ex.recv_for(2, 3, &mut store).unwrap_err();
+        assert_eq!(err, TransportError::Deadline { boundary: 2, got: 0, expect: 3 });
+    }
+
+    #[test]
+    fn sim_exchange_send_to_dead_peer_is_typed() {
+        let (_tx0, rx0) = channel::<Msg>();
+        let (tx1, rx1) = channel::<Msg>();
+        let (tx0b, _) = channel::<Msg>();
+        drop(rx1); // peer 1's receiver is gone — as after a thread death
+        let mut ex = SimExchange::new(0, vec![tx0b, tx1], rx0);
+        let r = Region::new(0, 1, 0, 1, 0, 1);
+        let patch = RegionTensor::new(r, Tensor::zeros(1, 1, 1));
+        let err = ex.send(1, 0, patch).unwrap_err();
+        assert_eq!(err, TransportError::PeerDead(1));
     }
 }

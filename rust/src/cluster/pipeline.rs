@@ -58,12 +58,13 @@
 //! producing thread, so measured and predicted bottleneck stages can
 //! differ by one; see `stage_costs` for the trade-off.
 //!
-//! The scatter/exchange/gather helpers below deliberately mirror the
-//! lockstep node threads' protocol in `super` (same intersection rule, one
-//! message per non-empty rect, same byte pricing); the executor tests
-//! assert the outputs and the bytes/messages accounting of the two paths
-//! stay exactly equal, so a protocol change that misses one side fails
-//! fast.
+//! The scatter/exchange/gather helpers below run the lockstep node
+//! threads' protocol: the realignment message list comes from the shared
+//! [`super::boundary_sends`] rule (one message per non-empty rect, same
+//! byte pricing), so the two paths agree *by construction* — and the
+//! executor tests still assert the outputs and the bytes/messages
+//! accounting stay exactly equal, so a protocol change that misses one
+//! side fails fast.
 
 use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TryRecvError};
 use std::sync::Arc;
@@ -217,15 +218,8 @@ impl BlockPipeline {
         depth: usize,
         leader: usize,
     ) -> BlockPipeline {
-        plan.validate().expect("invalid plan");
-        assert_eq!(plan.steps.len(), model.n_layers());
         assert!(depth >= 1, "pipeline depth must be >= 1");
-        let blocks = plan.blocks();
-        let layers = &model.layers;
-        let geos: Vec<BlockGeometry> = blocks
-            .iter()
-            .map(|&(s, e, scheme)| BlockGeometry::new(&layers[s..=e], scheme, nodes))
-            .collect();
+        let (blocks, geos) = super::plan_geometry(model, plan, nodes);
         let ctx = Arc::new(StageCtx {
             model: model.clone(),
             weights: weights.clone(),
@@ -516,22 +510,13 @@ fn exchange(ctx: &StageCtx, bi: usize, mut stores: Vec<PatchStore>) -> (Vec<Patc
     let mut msgs = 0usize;
     let mut incoming: Vec<Vec<RegionTensor>> = (0..ctx.nodes).map(|_| Vec::new()).collect();
     for (from, store) in stores.iter().enumerate() {
-        for (to, nb) in need.iter().enumerate() {
-            if to == from {
-                continue;
-            }
-            for ra in &have[from] {
-                for rb in nb {
-                    let ov = ra.intersect(rb);
-                    if ov.is_empty() {
-                        continue;
-                    }
-                    let dense = store.extract(&ov, &ov, true);
-                    bytes += dense.numel() as u64 * DTYPE_BYTES;
-                    msgs += 1;
-                    incoming[to].push(RegionTensor::new(ov, dense));
-                }
-            }
+        // the one shared send rule — identical message list, order, and
+        // pricing to what a lockstep node thread would put on the wire
+        for (to, ov) in super::boundary_sends(&have, need, from) {
+            let dense = store.extract(&ov, &ov, true);
+            bytes += dense.numel() as u64 * DTYPE_BYTES;
+            msgs += 1;
+            incoming[to].push(RegionTensor::new(ov, dense));
         }
     }
     let mut next: Vec<PatchStore> = (0..ctx.nodes).map(|_| PatchStore::new()).collect();

@@ -489,6 +489,130 @@ impl ForecastExperiment {
     }
 }
 
+/// A wire-transport experiment: which fabric carries the inter-node
+/// traffic (`sim` — in-process channels, the deterministic CI default, or
+/// `tcp` — one daemon process per node over real sockets), where the
+/// registry lives, and the lease/heartbeat/deadline timing that governs
+/// failure detection. Drives `benches/transport_overhead.rs` and
+/// `examples/distributed_serving.rs`.
+#[derive(Debug, Clone)]
+pub struct TransportExperiment {
+    /// `"sim"` or `"tcp"`.
+    pub mode: String,
+    /// Registry address (`tcp:HOST:PORT` or `unix:/path`); port 0 binds
+    /// ephemerally when the experiment hosts its own registry.
+    pub registry: String,
+    pub nodes: usize,
+    /// Registry lease TTL, ms — expiry is the liveness signal.
+    pub ttl_ms: u64,
+    /// Data-plane heartbeat interval, ms.
+    pub heartbeat_ms: u64,
+    /// Silence after which a peer is declared dead, ms.
+    pub heartbeat_timeout_ms: u64,
+    /// Mesh dial deadline at plan install, ms.
+    pub connect_timeout_ms: u64,
+    /// Coordinator bound on one inference round trip, ms.
+    pub infer_deadline_ms: u64,
+    /// Zoo model name.
+    pub model: String,
+    pub seed: u64,
+    /// Requests pushed through per measured run.
+    pub requests: usize,
+}
+
+impl Default for TransportExperiment {
+    fn default() -> Self {
+        TransportExperiment {
+            mode: "tcp".into(),
+            registry: "tcp:127.0.0.1:0".into(),
+            nodes: 3,
+            ttl_ms: 1000,
+            heartbeat_ms: 100,
+            heartbeat_timeout_ms: 1200,
+            connect_timeout_ms: 10_000,
+            infer_deadline_ms: 60_000,
+            model: "edgenet".into(),
+            seed: 5,
+            requests: 16,
+        }
+    }
+}
+
+impl TransportExperiment {
+    pub fn is_tcp(&self) -> bool {
+        self.mode == "tcp"
+    }
+
+    /// The socket-fabric timing this experiment describes.
+    pub fn tcp_opts(&self) -> crate::transport::tcp::TcpOpts {
+        crate::transport::tcp::TcpOpts {
+            connect_deadline: std::time::Duration::from_millis(self.connect_timeout_ms),
+            heartbeat_interval: std::time::Duration::from_millis(self.heartbeat_ms),
+            heartbeat_timeout: std::time::Duration::from_millis(self.heartbeat_timeout_ms),
+            ..crate::transport::tcp::TcpOpts::default()
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("mode", Json::Str(self.mode.clone())),
+            ("registry", Json::Str(self.registry.clone())),
+            ("nodes", Json::Num(self.nodes as f64)),
+            ("ttl_ms", Json::Num(self.ttl_ms as f64)),
+            ("heartbeat_ms", Json::Num(self.heartbeat_ms as f64)),
+            ("heartbeat_timeout_ms", Json::Num(self.heartbeat_timeout_ms as f64)),
+            ("connect_timeout_ms", Json::Num(self.connect_timeout_ms as f64)),
+            ("infer_deadline_ms", Json::Num(self.infer_deadline_ms as f64)),
+            ("model", Json::Str(self.model.clone())),
+            ("seed", Json::Num(self.seed as f64)),
+            ("requests", Json::Num(self.requests as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<TransportExperiment, String> {
+        let num = |key: &str| v.req(key)?.as_f64().ok_or_else(|| key.to_string());
+        let s = |key: &str| -> Result<String, String> {
+            Ok(v.req(key)?.as_str().ok_or_else(|| key.to_string())?.to_string())
+        };
+        let exp = TransportExperiment {
+            mode: s("mode")?,
+            registry: s("registry")?,
+            nodes: num("nodes")? as usize,
+            ttl_ms: num("ttl_ms")? as u64,
+            heartbeat_ms: num("heartbeat_ms")? as u64,
+            heartbeat_timeout_ms: num("heartbeat_timeout_ms")? as u64,
+            connect_timeout_ms: num("connect_timeout_ms")? as u64,
+            infer_deadline_ms: num("infer_deadline_ms")? as u64,
+            model: s("model")?,
+            seed: num("seed")? as u64,
+            requests: num("requests")? as usize,
+        };
+        if exp.mode != "sim" && exp.mode != "tcp" {
+            return Err(format!("mode must be \"sim\" or \"tcp\", got {:?}", exp.mode));
+        }
+        if exp.nodes == 0 {
+            return Err("nodes must be at least 1".into());
+        }
+        if exp.ttl_ms == 0 {
+            return Err("ttl_ms must be positive: a zero-length lease is never live".into());
+        }
+        if exp.heartbeat_timeout_ms <= exp.heartbeat_ms {
+            return Err(
+                "heartbeat_timeout_ms must exceed heartbeat_ms, or every peer looks dead".into(),
+            );
+        }
+        if exp.requests == 0 {
+            return Err("requests must be at least 1".into());
+        }
+        Ok(exp)
+    }
+
+    pub fn load(path: &std::path::Path) -> std::io::Result<TransportExperiment> {
+        let v = Json::load(path)?;
+        Self::from_json(&v).map_err(std::io::Error::other)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -591,6 +715,44 @@ mod tests {
             "a zero-byte probe config must be rejected at load time"
         );
         assert!(ForecastExperiment { profile: "bogus".into(), ..e }.world(4).is_err());
+    }
+
+    #[test]
+    fn transport_experiment_roundtrip_and_validation() {
+        let e = TransportExperiment { nodes: 4, seed: 9, ..Default::default() };
+        let e2 = TransportExperiment::from_json(&e.to_json()).unwrap();
+        assert_eq!((e2.nodes, e2.seed), (4, 9));
+        assert_eq!(e2.mode, "tcp");
+        assert!(e2.is_tcp());
+        assert_eq!(e2.registry, e.registry);
+        assert_eq!(e2.model, "edgenet");
+        assert_eq!(e2.requests, e.requests);
+        let opts = e2.tcp_opts();
+        assert_eq!(opts.heartbeat_interval.as_millis() as u64, e.heartbeat_ms);
+        assert_eq!(opts.heartbeat_timeout.as_millis() as u64, e.heartbeat_timeout_ms);
+        assert_eq!(opts.connect_deadline.as_millis() as u64, e.connect_timeout_ms);
+        // file round trip
+        let dir = crate::util::tmp::TempDir::new("transport");
+        let p = dir.path().join("transport.json");
+        e.to_json().save(&p).unwrap();
+        assert_eq!(TransportExperiment::load(&p).unwrap().nodes, 4);
+        // degenerate shapes are rejected
+        let mutate = |key: &str, val: Json| {
+            let mut j = e.to_json();
+            if let Json::Obj(m) = &mut j {
+                m.insert(key.into(), val);
+            }
+            TransportExperiment::from_json(&j)
+        };
+        assert!(mutate("mode", Json::Str("udp".into())).is_err());
+        assert!(mutate("nodes", Json::Num(0.0)).is_err());
+        assert!(mutate("ttl_ms", Json::Num(0.0)).is_err());
+        assert!(
+            mutate("heartbeat_timeout_ms", Json::Num(50.0)).is_err(),
+            "timeout <= interval must be rejected: every peer would look dead"
+        );
+        assert!(mutate("requests", Json::Num(0.0)).is_err());
+        assert!(mutate("mode", Json::Str("sim".into())).is_ok(), "sim mode is valid");
     }
 
     #[test]

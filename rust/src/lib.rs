@@ -29,6 +29,7 @@
 //! | [`compute`] | native Rust tensor kernels (conv/dwconv/pool/matmul) — fallback + oracle |
 //! | [`runtime`] | PJRT client wrapper: loads `artifacts/*.hlo.txt` (AOT-compiled JAX/Pallas) |
 //! | [`serve`] | serving front-end: request router + dynamic batcher + pipelined throughput mode |
+//! | [`transport`] | real wire transport: versioned frame codec, TCP/UDS socket fabric, TTL-leased registry, node daemon + process coordinator |
 //! | [`bench`] | generators for every paper table/figure (Fig 2, 7, 8, 9, search time, ablations) |
 //!
 //! Layers 1/2 (Pallas kernels + JAX model) live under `python/compile/` and
@@ -64,6 +65,7 @@ pub mod planner;
 pub mod runtime;
 pub mod serve;
 pub mod telemetry;
+pub mod transport;
 pub mod util;
 
 /// Commonly used types, re-exported for ergonomic downstream use.

@@ -58,6 +58,18 @@
 //! explicitly (their response channels drop, so `submit()` callers observe
 //! a clean disconnect instead of hanging), counted in
 //! [`RouterStats::failed_on_shutdown`].
+//!
+//! A fourth plan source, [`Server::start_process`], swaps the execution
+//! substrate instead of the plan source: batches route to a
+//! [`crate::transport::coord::ProcessCluster`] — real node daemons over
+//! TCP/UDS — rather than in-process threads. Because the wire protocol
+//! runs the identical lockstep exchange, the outputs are bit-identical to
+//! the in-process paths; a daemon death mid-batch surfaces as an explicit
+//! failed inference, the router reinstalls on the survivors
+//! ([`RouterStats::process_failovers`]) and retries, and only an
+//! unrecoverable cluster fails requests
+//! ([`RouterStats::failed_on_dead_cluster`]) — the same
+//! zero-silent-drop contract as every other path.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -179,6 +191,13 @@ pub struct RouterStats {
     /// Present on the pipelined path: per-stage occupancy, bottleneck stage
     /// and drain-and-flush generation counts.
     pub pipeline: Option<PipelineSummary>,
+    /// Process mode only: how many times a member death forced a
+    /// reinstall-and-retry (the wire counterpart of elastic failover).
+    pub process_failovers: u64,
+    /// Process mode only: requests failed explicitly because the cluster
+    /// could not be rebuilt (no survivors / reinstall kept failing). Their
+    /// response channels disconnect — never a hang, never a silent drop.
+    pub failed_on_dead_cluster: u64,
 }
 
 /// Where the router gets the plan for the next batch.
@@ -251,6 +270,21 @@ impl Server {
         let source = TelemetrySource::new(world, &base, tcfg);
         let fe = ElasticFrontend::start_with_source(model.clone(), base, Box::new(source), ecfg);
         Self::spawn(model, weights, cfg, PlanSource::Elastic { fe, vt: 0.0 })
+    }
+
+    /// Start serving on a **process cluster**: real node daemons over
+    /// TCP/UDS, discovered through the registry and already holding an
+    /// installed plan (see [`crate::transport::coord::ProcessCluster`]).
+    /// Serves in lockstep (the wire protocol is batch-at-a-time;
+    /// `pipeline_depth` is ignored). Outputs are bit-identical to the
+    /// in-process paths; member deaths trigger reinstall-and-retry on the
+    /// survivors, and [`Server::shutdown`] also shuts the daemons down.
+    pub fn start_process(cluster: crate::transport::coord::ProcessCluster, cfg: ServeConfig) -> Server {
+        let (tx, rx) = sync_channel::<Request>(cfg.queue_depth);
+        let stop = Arc::new(AtomicBool::new(false));
+        let router_stop = stop.clone();
+        let router = std::thread::spawn(move || router_process(rx, &cfg, cluster, &router_stop));
+        Server { tx, stop, router: Some(router) }
     }
 
     fn spawn(model: Model, weights: WeightStore, cfg: ServeConfig, source: PlanSource) -> Server {
@@ -477,6 +511,82 @@ fn router_lockstep(
         stats.adaptation = Some(adaptation);
         stats.boundary_stall = Some(stall);
     }
+    stats
+}
+
+/// Lockstep router over a wire-attached daemon cluster. Per request: run
+/// it on the cluster; an explicit failure (daemon death, deadline) bans
+/// the culprit, reinstalls the plan on the survivors and retries — the
+/// retry is bit-identical, because the numerics are node-count-invariant.
+/// Requests fail (channels disconnect) only when the cluster itself is
+/// unrecoverable.
+fn router_process(
+    rx: Receiver<Request>,
+    cfg: &ServeConfig,
+    mut cluster: crate::transport::coord::ProcessCluster,
+    stop: &AtomicBool,
+) -> RouterStats {
+    use crate::transport::coord::InferOutcome;
+    let mut stats = RouterStats::default();
+    let mut next_seq = 0u64;
+    let mut cluster_dead = false;
+
+    while let Some(batch) = collect_batch(&rx, cfg) {
+        stats.batches += 1;
+        stats.requests += batch.len() as u64;
+        stats.max_batch_seen = stats.max_batch_seen.max(batch.len());
+        let batch_size = batch.len();
+        let service_start = Instant::now();
+
+        for req in batch {
+            let mut outcome: Option<Tensor> = None;
+            // bounded: each named death shrinks the member set, and
+            // unattributed failures (deadlines) get a few chances before
+            // the request fails explicitly
+            let mut retries = cluster.nodes() + 3;
+            while !cluster_dead && retries > 0 {
+                retries -= 1;
+                match cluster.infer(&req.input) {
+                    Ok(InferOutcome::Done(run)) => {
+                        outcome = Some(run.output);
+                        break;
+                    }
+                    Ok(InferOutcome::Failed { dead, .. }) => {
+                        stats.process_failovers += 1;
+                        if cluster.reinstall(dead).is_err() {
+                            cluster_dead = true; // no survivors — fail the rest
+                        }
+                    }
+                    Err(_) => cluster_dead = true,
+                }
+            }
+            match outcome {
+                Some(output) => {
+                    let seq = next_seq;
+                    next_seq += 1;
+                    let _ = req.resp.send(Response {
+                        output,
+                        queued: service_start.duration_since(req.enqueued),
+                        service: service_start.elapsed(),
+                        // no simulated testbed under this path
+                        virtual_time: 0.0,
+                        batch_size,
+                        nodes: cluster.nodes(),
+                        leader: cluster.leader() as usize,
+                        seq,
+                    });
+                }
+                // dropping `req` drops its response sender: an explicit,
+                // observable failure
+                None => stats.failed_on_dead_cluster += 1,
+            }
+        }
+        if stop.load(Ordering::Acquire) {
+            break;
+        }
+    }
+    fail_queued(rx, &mut stats);
+    cluster.shutdown();
     stats
 }
 
@@ -972,6 +1082,41 @@ mod tests {
         assert_eq!(m.checks, 4);
         assert_eq!(m.plan_swaps, 0);
         assert_eq!(m.failovers, 0);
+    }
+
+    #[test]
+    fn process_mode_serving_matches_reference() {
+        // the same server front-end over real sockets: registry + three
+        // in-thread daemons; responses must be bit-identical to reference
+        use crate::transport::coord::ProcessCluster;
+        use crate::transport::daemon::{self, DaemonOpts};
+        use crate::transport::registry::RegistryServer;
+
+        let reg = RegistryServer::spawn("tcp:127.0.0.1:0", Duration::from_secs(3)).unwrap();
+        for id in [0u32, 1, 2] {
+            let opts = DaemonOpts::new(id, reg.addr());
+            std::thread::spawn(move || {
+                let _ = daemon::run(opts);
+            });
+        }
+        let model = zoo::edgenet(16);
+        let plan = Plan::uniform(Scheme::InH, model.n_layers());
+        let mut pc = ProcessCluster::connect(reg.addr(), 3, Duration::from_secs(10)).unwrap();
+        pc.install(&model, &plan, 5).unwrap();
+        let server = Server::start_process(pc, ServeConfig::default());
+        let ws = WeightStore::for_model(&model, 5);
+        for i in 0..3u64 {
+            let input = Tensor::random(16, 16, 3, 300 + i);
+            let reference = crate::compute::run_reference(&model, &ws, &input);
+            let resp = server.infer(input).unwrap();
+            assert_eq!(reference.max_abs_diff(&resp.output), 0.0, "request {i}");
+            assert_eq!(resp.nodes, 3);
+            assert_eq!(resp.seq, i);
+        }
+        let stats = server.shutdown();
+        assert_eq!(stats.requests, 3);
+        assert_eq!(stats.process_failovers, 0);
+        assert_eq!(stats.failed_on_dead_cluster, 0);
     }
 
     #[test]

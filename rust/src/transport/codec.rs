@@ -1,0 +1,961 @@
+//! Wire codec: versioned length-prefixed binary frames.
+//!
+//! Every inter-node message — boundary tensor patches, scatter/gather,
+//! control traffic (plan install, election, heartbeats, abort/drain), and
+//! registry RPCs — serializes to one frame:
+//!
+//! ```text
+//! offset  size  field        encoding
+//! 0       4     magic        0x4658_5049 ("FXPI"), u32 LE
+//! 4       2     version      u16 LE, currently 1
+//! 6       2     msg type     u16 LE, one discriminant per WireMsg variant
+//! 8       4     sender node  u32 LE (CTL_NODE for the coordinator)
+//! 12      8     term         u64 LE — plan generation; stale terms drop
+//! 20      4     payload len  u32 LE, capped at MAX_PAYLOAD
+//! 24      4     checksum     u32 LE, FNV-1a over the payload bytes
+//! 28      —     payload      message-specific little-endian body
+//! ```
+//!
+//! All integers are explicit little-endian (`to_le_bytes`); floats travel as
+//! their IEEE-754 bit patterns, so tensors survive the wire bit-exactly —
+//! the property the process-mode e2e audit leans on. Malformed input of any
+//! kind (bad magic, unknown version or type, truncated frame, oversized
+//! length, checksum mismatch, inconsistent payload) surfaces as a typed
+//! [`CodecError`], never a panic: a daemon must shrug off a corrupt or
+//! hostile peer, not die with it.
+
+use crate::compute::{RegionTensor, Tensor};
+use crate::model::{ConvType, LayerMeta, Model, OpKind};
+use crate::partition::{Mode, Plan, PlanStep, Region, Scheme};
+
+/// `"FXPI"` interpreted as a little-endian u32.
+pub const MAGIC: u32 = 0x4658_5049;
+/// Current wire protocol version.
+pub const VERSION: u16 = 1;
+/// Frame header size in bytes.
+pub const HEADER_LEN: usize = 28;
+/// Hard cap on payload size (64 MiB) — anything larger is rejected before
+/// allocation, so a corrupt length field can't balloon memory.
+pub const MAX_PAYLOAD: u32 = 64 * 1024 * 1024;
+/// Sender id the coordinator/registry uses in frame headers (daemons use
+/// their registered node id).
+pub const CTL_NODE: u32 = u32::MAX;
+
+/// Typed decode failure. Every malformed-input path lands here.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CodecError {
+    BadMagic(u32),
+    BadVersion(u16),
+    BadType(u16),
+    /// Fewer bytes available than the frame declares.
+    Truncated { need: usize, have: usize },
+    Oversized { len: u32, max: u32 },
+    BadChecksum { want: u32, got: u32 },
+    /// Structurally valid frame whose payload doesn't parse.
+    BadPayload(String),
+}
+
+impl std::fmt::Display for CodecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CodecError::BadMagic(m) => write!(f, "bad magic {m:#010x}"),
+            CodecError::BadVersion(v) => write!(f, "unsupported wire version {v}"),
+            CodecError::BadType(t) => write!(f, "unknown message type {t}"),
+            CodecError::Truncated { need, have } => {
+                write!(f, "truncated frame: need {need} bytes, have {have}")
+            }
+            CodecError::Oversized { len, max } => {
+                write!(f, "payload length {len} exceeds cap {max}")
+            }
+            CodecError::BadChecksum { want, got } => {
+                write!(f, "checksum mismatch: header says {want:#010x}, payload hashes to {got:#010x}")
+            }
+            CodecError::BadPayload(msg) => write!(f, "bad payload: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for CodecError {}
+
+/// FNV-1a 32-bit over `data` — cheap, dependency-free integrity check.
+pub fn fnv1a(data: &[u8]) -> u32 {
+    let mut h: u32 = 0x811c_9dc5;
+    for &b in data {
+        h ^= b as u32;
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+/// One decoded frame: envelope (sender, term) plus the typed message.
+#[derive(Debug, Clone)]
+pub struct Frame {
+    pub node: u32,
+    pub term: u64,
+    pub msg: WireMsg,
+}
+
+/// A registry row: where to reach one daemon.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RegistryEntry {
+    pub node: u32,
+    /// Control-plane address (coordinator dials this).
+    pub ctl_addr: String,
+    /// Data-plane address (peers dial this for boundary exchange).
+    pub data_addr: String,
+    /// Advertised capability (relative compute speed).
+    pub speed: f64,
+}
+
+/// Every message the cluster moves, data plane and control plane alike.
+#[derive(Debug, Clone)]
+pub enum WireMsg {
+    // --- data plane (peer <-> peer) ------------------------------------
+    /// Connection handshake: sender identifies itself (id/term ride the
+    /// header).
+    Hello,
+    /// Liveness beacon; also what mid-batch failure detection watches.
+    Heartbeat,
+    /// One boundary tensor patch of inference `seq` at exchange `boundary`.
+    Patch { seq: u64, boundary: u32, patch: RegionTensor },
+
+    // --- control plane (coordinator <-> daemon) ------------------------
+    /// Install a plan generation: full model + plan + peer table, so a
+    /// daemon needs no shared filesystem — weights re-derive from `seed`.
+    PlanInstall {
+        leader: u32,
+        seed: u64,
+        model: Model,
+        plan: Plan,
+        /// `(node id, data addr)` ordered by logical rank; a daemon finds
+        /// its own rank by position.
+        peers: Vec<(u32, String)>,
+    },
+    /// Leader announcement for the header's term.
+    Elect { leader: u32 },
+    /// Daemon ack: plan installed, data-plane mesh up for the header term.
+    Ready,
+    /// Drop in-flight work for the header's term.
+    Abort,
+    /// Finish in-flight work, accept no more.
+    Drain,
+    /// Coordinator -> leader: run inference `seq` on `input`.
+    Infer { seq: u64, input: Tensor },
+    /// Coordinator -> worker: participate in inference `seq`.
+    Begin { seq: u64 },
+    /// Leader -> coordinator: gathered output plus traffic accounting.
+    Output {
+        seq: u64,
+        output: Tensor,
+        bytes: u64,
+        msgs: u64,
+        /// Per-boundary `(bytes, msgs)`.
+        traffic: Vec<(u64, u64)>,
+    },
+    /// Leader -> coordinator: inference `seq` failed because `node` died.
+    Failed { seq: u64, node: u32 },
+    /// Daemon exits cleanly.
+    Shutdown,
+
+    // --- registry RPCs --------------------------------------------------
+    /// Daemon -> registry: announce addresses and capabilities.
+    Register { ctl_addr: String, data_addr: String, speed: f64 },
+    RegisterOk { ttl_ms: u64 },
+    /// Daemon -> registry: TTL renewal for the header's node id.
+    Renew,
+    RenewOk,
+    /// Anyone -> registry: fetch the live (unexpired) peer set.
+    Resolve,
+    ResolveOk { entries: Vec<RegistryEntry> },
+}
+
+impl WireMsg {
+    /// Wire discriminant for the header's msg-type field.
+    pub fn kind(&self) -> u16 {
+        match self {
+            WireMsg::Hello => 1,
+            WireMsg::Heartbeat => 2,
+            WireMsg::Patch { .. } => 3,
+            WireMsg::PlanInstall { .. } => 4,
+            WireMsg::Elect { .. } => 5,
+            WireMsg::Ready => 6,
+            WireMsg::Abort => 7,
+            WireMsg::Drain => 8,
+            WireMsg::Infer { .. } => 9,
+            WireMsg::Begin { .. } => 10,
+            WireMsg::Output { .. } => 11,
+            WireMsg::Failed { .. } => 12,
+            WireMsg::Shutdown => 13,
+            WireMsg::Register { .. } => 14,
+            WireMsg::RegisterOk { .. } => 15,
+            WireMsg::Renew => 16,
+            WireMsg::RenewOk => 17,
+            WireMsg::Resolve => 18,
+            WireMsg::ResolveOk { .. } => 19,
+        }
+    }
+}
+
+// --- little-endian payload writer/reader --------------------------------
+
+struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    fn new() -> Writer {
+        Writer { buf: Vec::new() }
+    }
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    fn u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn i64(&mut self, v: i64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f32(&mut self, v: f32) {
+        self.u32(v.to_bits());
+    }
+    fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+    fn str(&mut self, s: &str) {
+        let bytes = s.as_bytes();
+        assert!(bytes.len() <= u16::MAX as usize, "string too long for wire");
+        self.u16(bytes.len() as u16);
+        self.buf.extend_from_slice(bytes);
+    }
+    fn region(&mut self, r: &Region) {
+        self.i64(r.h0);
+        self.i64(r.h1);
+        self.i64(r.w0);
+        self.i64(r.w1);
+        self.i64(r.c0);
+        self.i64(r.c1);
+    }
+    fn tensor(&mut self, t: &Tensor) {
+        self.i64(t.h);
+        self.i64(t.w);
+        self.i64(t.c);
+        for &v in &t.data {
+            self.f32(v);
+        }
+    }
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+    fn take(&mut self, n: usize) -> Result<&'a [u8], CodecError> {
+        if self.pos + n > self.buf.len() {
+            return Err(CodecError::BadPayload(format!(
+                "payload underrun: need {} bytes at offset {}, have {}",
+                n,
+                self.pos,
+                self.buf.len()
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8, CodecError> {
+        Ok(self.take(1)?[0])
+    }
+    fn u16(&mut self) -> Result<u16, CodecError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+    fn u32(&mut self) -> Result<u32, CodecError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64, CodecError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn i64(&mut self) -> Result<i64, CodecError> {
+        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f32(&mut self) -> Result<f32, CodecError> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+    fn f64(&mut self) -> Result<f64, CodecError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+    fn str(&mut self) -> Result<String, CodecError> {
+        let n = self.u16()? as usize;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| CodecError::BadPayload("string is not valid utf-8".into()))
+    }
+    fn region(&mut self) -> Result<Region, CodecError> {
+        Ok(Region::new(
+            self.i64()?,
+            self.i64()?,
+            self.i64()?,
+            self.i64()?,
+            self.i64()?,
+            self.i64()?,
+        ))
+    }
+    fn tensor(&mut self) -> Result<Tensor, CodecError> {
+        let h = self.i64()?;
+        let w = self.i64()?;
+        let c = self.i64()?;
+        if h < 0 || w < 0 || c < 0 {
+            return Err(CodecError::BadPayload(format!("negative tensor dims {h}x{w}x{c}")));
+        }
+        let numel = h
+            .checked_mul(w)
+            .and_then(|v| v.checked_mul(c))
+            .filter(|&v| v <= MAX_PAYLOAD as i64 / 4)
+            .ok_or_else(|| {
+                CodecError::BadPayload(format!("tensor dims {h}x{w}x{c} overflow the wire cap"))
+            })? as usize;
+        if numel * 4 > self.buf.len() - self.pos {
+            return Err(CodecError::BadPayload(format!(
+                "tensor claims {numel} elements, payload has {} bytes left",
+                self.buf.len() - self.pos
+            )));
+        }
+        let mut t = Tensor::zeros(h, w, c);
+        for v in t.data.iter_mut() {
+            *v = self.f32()?;
+        }
+        Ok(t)
+    }
+    fn done(&self) -> Result<(), CodecError> {
+        if self.pos != self.buf.len() {
+            return Err(CodecError::BadPayload(format!(
+                "{} trailing payload bytes",
+                self.buf.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+// --- enum <-> u8 codes ---------------------------------------------------
+
+fn scheme_code(s: Scheme) -> u8 {
+    match s {
+        Scheme::InH => 0,
+        Scheme::InW => 1,
+        Scheme::OutC => 2,
+        Scheme::Grid2d => 3,
+    }
+}
+
+fn scheme_from(code: u8) -> Result<Scheme, CodecError> {
+    Ok(match code {
+        0 => Scheme::InH,
+        1 => Scheme::InW,
+        2 => Scheme::OutC,
+        3 => Scheme::Grid2d,
+        _ => return Err(CodecError::BadPayload(format!("unknown scheme code {code}"))),
+    })
+}
+
+fn mode_code(m: Mode) -> u8 {
+    match m {
+        Mode::T => 0,
+        Mode::NT => 1,
+    }
+}
+
+fn mode_from(code: u8) -> Result<Mode, CodecError> {
+    Ok(match code {
+        0 => Mode::T,
+        1 => Mode::NT,
+        _ => return Err(CodecError::BadPayload(format!("unknown mode code {code}"))),
+    })
+}
+
+fn conv_code(c: ConvType) -> u8 {
+    match c {
+        ConvType::Standard => 0,
+        ConvType::Depthwise => 1,
+        ConvType::Pointwise => 2,
+        ConvType::Dense => 3,
+        ConvType::Attention => 4,
+        ConvType::Pool => 5,
+    }
+}
+
+fn conv_from(code: u8) -> Result<ConvType, CodecError> {
+    Ok(match code {
+        0 => ConvType::Standard,
+        1 => ConvType::Depthwise,
+        2 => ConvType::Pointwise,
+        3 => ConvType::Dense,
+        4 => ConvType::Attention,
+        5 => ConvType::Pool,
+        _ => return Err(CodecError::BadPayload(format!("unknown conv type code {code}"))),
+    })
+}
+
+fn op_code(o: OpKind) -> u8 {
+    match o {
+        OpKind::Conv => 0,
+        OpKind::Pool => 1,
+        OpKind::MatMul => 2,
+    }
+}
+
+fn op_from(code: u8) -> Result<OpKind, CodecError> {
+    Ok(match code {
+        0 => OpKind::Conv,
+        1 => OpKind::Pool,
+        2 => OpKind::MatMul,
+        _ => return Err(CodecError::BadPayload(format!("unknown op code {code}"))),
+    })
+}
+
+fn write_layer(w: &mut Writer, l: &LayerMeta) {
+    w.str(&l.name);
+    w.u8(op_code(l.op));
+    w.u8(conv_code(l.conv_t));
+    for v in [l.in_h, l.in_w, l.in_c, l.out_h, l.out_w, l.out_c, l.k, l.s, l.p] {
+        w.i64(v);
+    }
+    w.u8(l.fused_residual as u8);
+    w.u8(l.fused_activation as u8);
+}
+
+fn read_layer(r: &mut Reader) -> Result<LayerMeta, CodecError> {
+    let name = r.str()?;
+    let op = op_from(r.u8()?)?;
+    let conv_t = conv_from(r.u8()?)?;
+    let mut dims = [0i64; 9];
+    for d in dims.iter_mut() {
+        *d = r.i64()?;
+    }
+    let fused_residual = r.u8()? != 0;
+    let fused_activation = r.u8()? != 0;
+    Ok(LayerMeta {
+        name,
+        op,
+        conv_t,
+        in_h: dims[0],
+        in_w: dims[1],
+        in_c: dims[2],
+        out_h: dims[3],
+        out_w: dims[4],
+        out_c: dims[5],
+        k: dims[6],
+        s: dims[7],
+        p: dims[8],
+        fused_residual,
+        fused_activation,
+    })
+}
+
+fn write_model(w: &mut Writer, m: &Model) {
+    w.str(&m.name);
+    w.u32(m.layers.len() as u32);
+    for l in &m.layers {
+        write_layer(w, l);
+    }
+}
+
+fn read_model(r: &mut Reader) -> Result<Model, CodecError> {
+    let name = r.str()?;
+    let n = r.u32()? as usize;
+    let mut layers = Vec::with_capacity(n.min(4096));
+    for _ in 0..n {
+        layers.push(read_layer(r)?);
+    }
+    let m = Model { name, layers };
+    m.validate().map_err(CodecError::BadPayload)?;
+    Ok(m)
+}
+
+fn write_plan(w: &mut Writer, p: &Plan) {
+    w.u32(p.steps.len() as u32);
+    for st in &p.steps {
+        w.u8(scheme_code(st.scheme));
+        w.u8(mode_code(st.mode));
+    }
+    w.f64(p.est_cost);
+}
+
+fn read_plan(r: &mut Reader) -> Result<Plan, CodecError> {
+    let n = r.u32()? as usize;
+    let mut steps = Vec::with_capacity(n.min(65536));
+    for _ in 0..n {
+        let scheme = scheme_from(r.u8()?)?;
+        let mode = mode_from(r.u8()?)?;
+        steps.push(PlanStep { scheme, mode });
+    }
+    let est_cost = r.f64()?;
+    let p = Plan { steps, est_cost };
+    p.validate().map_err(CodecError::BadPayload)?;
+    Ok(p)
+}
+
+// --- frame encode/decode -------------------------------------------------
+
+fn encode_payload(msg: &WireMsg) -> Vec<u8> {
+    let mut w = Writer::new();
+    match msg {
+        WireMsg::Hello
+        | WireMsg::Heartbeat
+        | WireMsg::Ready
+        | WireMsg::Abort
+        | WireMsg::Drain
+        | WireMsg::Shutdown
+        | WireMsg::Renew
+        | WireMsg::RenewOk
+        | WireMsg::Resolve => {}
+        WireMsg::Patch { seq, boundary, patch } => {
+            w.u64(*seq);
+            w.u32(*boundary);
+            w.region(&patch.region);
+            w.tensor(&patch.t);
+        }
+        WireMsg::PlanInstall { leader, seed, model, plan, peers } => {
+            w.u32(*leader);
+            w.u64(*seed);
+            write_model(&mut w, model);
+            write_plan(&mut w, plan);
+            w.u32(peers.len() as u32);
+            for (id, addr) in peers {
+                w.u32(*id);
+                w.str(addr);
+            }
+        }
+        WireMsg::Elect { leader } => w.u32(*leader),
+        WireMsg::Infer { seq, input } => {
+            w.u64(*seq);
+            w.tensor(input);
+        }
+        WireMsg::Begin { seq } => w.u64(*seq),
+        WireMsg::Output { seq, output, bytes, msgs, traffic } => {
+            w.u64(*seq);
+            w.tensor(output);
+            w.u64(*bytes);
+            w.u64(*msgs);
+            w.u32(traffic.len() as u32);
+            for (b, m) in traffic {
+                w.u64(*b);
+                w.u64(*m);
+            }
+        }
+        WireMsg::Failed { seq, node } => {
+            w.u64(*seq);
+            w.u32(*node);
+        }
+        WireMsg::Register { ctl_addr, data_addr, speed } => {
+            w.str(ctl_addr);
+            w.str(data_addr);
+            w.f64(*speed);
+        }
+        WireMsg::RegisterOk { ttl_ms } => w.u64(*ttl_ms),
+        WireMsg::ResolveOk { entries } => {
+            w.u32(entries.len() as u32);
+            for e in entries {
+                w.u32(e.node);
+                w.str(&e.ctl_addr);
+                w.str(&e.data_addr);
+                w.f64(e.speed);
+            }
+        }
+    }
+    w.buf
+}
+
+fn decode_payload(kind: u16, payload: &[u8]) -> Result<WireMsg, CodecError> {
+    let mut r = Reader::new(payload);
+    let msg = match kind {
+        1 => WireMsg::Hello,
+        2 => WireMsg::Heartbeat,
+        3 => {
+            let seq = r.u64()?;
+            let boundary = r.u32()?;
+            let region = r.region()?;
+            let t = r.tensor()?;
+            let (eh, ew, ec) =
+                (region.h1 - region.h0, region.w1 - region.w0, region.c1 - region.c0);
+            if (t.h, t.w, t.c) != (eh, ew, ec) {
+                return Err(CodecError::BadPayload(format!(
+                    "patch tensor {}x{}x{} does not match region extent {eh}x{ew}x{ec}",
+                    t.h, t.w, t.c
+                )));
+            }
+            WireMsg::Patch { seq, boundary, patch: RegionTensor::new(region, t) }
+        }
+        4 => {
+            let leader = r.u32()?;
+            let seed = r.u64()?;
+            let model = read_model(&mut r)?;
+            let plan = read_plan(&mut r)?;
+            if plan.steps.len() != model.layers.len() {
+                return Err(CodecError::BadPayload(format!(
+                    "plan has {} steps for a {}-layer model",
+                    plan.steps.len(),
+                    model.layers.len()
+                )));
+            }
+            let n = r.u32()? as usize;
+            let mut peers = Vec::with_capacity(n.min(4096));
+            for _ in 0..n {
+                let id = r.u32()?;
+                let addr = r.str()?;
+                peers.push((id, addr));
+            }
+            WireMsg::PlanInstall { leader, seed, model, plan, peers }
+        }
+        5 => WireMsg::Elect { leader: r.u32()? },
+        6 => WireMsg::Ready,
+        7 => WireMsg::Abort,
+        8 => WireMsg::Drain,
+        9 => {
+            let seq = r.u64()?;
+            let input = r.tensor()?;
+            WireMsg::Infer { seq, input }
+        }
+        10 => WireMsg::Begin { seq: r.u64()? },
+        11 => {
+            let seq = r.u64()?;
+            let output = r.tensor()?;
+            let bytes = r.u64()?;
+            let msgs = r.u64()?;
+            let n = r.u32()? as usize;
+            let mut traffic = Vec::with_capacity(n.min(65536));
+            for _ in 0..n {
+                let b = r.u64()?;
+                let m = r.u64()?;
+                traffic.push((b, m));
+            }
+            WireMsg::Output { seq, output, bytes, msgs, traffic }
+        }
+        12 => {
+            let seq = r.u64()?;
+            let node = r.u32()?;
+            WireMsg::Failed { seq, node }
+        }
+        13 => WireMsg::Shutdown,
+        14 => {
+            let ctl_addr = r.str()?;
+            let data_addr = r.str()?;
+            let speed = r.f64()?;
+            WireMsg::Register { ctl_addr, data_addr, speed }
+        }
+        15 => WireMsg::RegisterOk { ttl_ms: r.u64()? },
+        16 => WireMsg::Renew,
+        17 => WireMsg::RenewOk,
+        18 => WireMsg::Resolve,
+        19 => {
+            let n = r.u32()? as usize;
+            let mut entries = Vec::with_capacity(n.min(4096));
+            for _ in 0..n {
+                let node = r.u32()?;
+                let ctl_addr = r.str()?;
+                let data_addr = r.str()?;
+                let speed = r.f64()?;
+                entries.push(RegistryEntry { node, ctl_addr, data_addr, speed });
+            }
+            WireMsg::ResolveOk { entries }
+        }
+        other => return Err(CodecError::BadType(other)),
+    };
+    r.done()?;
+    Ok(msg)
+}
+
+/// Encode one frame to bytes (header + payload).
+pub fn encode(frame: &Frame) -> Vec<u8> {
+    let payload = encode_payload(&frame.msg);
+    assert!(payload.len() as u32 <= MAX_PAYLOAD, "payload exceeds wire cap");
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+    out.extend_from_slice(&MAGIC.to_le_bytes());
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&frame.msg.kind().to_le_bytes());
+    out.extend_from_slice(&frame.node.to_le_bytes());
+    out.extend_from_slice(&frame.term.to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&fnv1a(&payload).to_le_bytes());
+    out.extend_from_slice(&payload);
+    out
+}
+
+/// Validated frame header, parsed but with the payload still unread —
+/// the streaming path (`tcp`) reads `payload_len` more bytes, then calls
+/// [`decode_body`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Header {
+    pub msg_type: u16,
+    pub node: u32,
+    pub term: u64,
+    pub payload_len: u32,
+    pub checksum: u32,
+}
+
+/// Parse and validate the fixed 28-byte header.
+pub fn decode_header(buf: &[u8]) -> Result<Header, CodecError> {
+    if buf.len() < HEADER_LEN {
+        return Err(CodecError::Truncated { need: HEADER_LEN, have: buf.len() });
+    }
+    let magic = u32::from_le_bytes(buf[0..4].try_into().unwrap());
+    if magic != MAGIC {
+        return Err(CodecError::BadMagic(magic));
+    }
+    let version = u16::from_le_bytes(buf[4..6].try_into().unwrap());
+    if version != VERSION {
+        return Err(CodecError::BadVersion(version));
+    }
+    let msg_type = u16::from_le_bytes(buf[6..8].try_into().unwrap());
+    let node = u32::from_le_bytes(buf[8..12].try_into().unwrap());
+    let term = u64::from_le_bytes(buf[12..20].try_into().unwrap());
+    let payload_len = u32::from_le_bytes(buf[20..24].try_into().unwrap());
+    if payload_len > MAX_PAYLOAD {
+        return Err(CodecError::Oversized { len: payload_len, max: MAX_PAYLOAD });
+    }
+    let checksum = u32::from_le_bytes(buf[24..28].try_into().unwrap());
+    Ok(Header { msg_type, node, term, payload_len, checksum })
+}
+
+/// Verify the checksum and decode the payload against a parsed header.
+pub fn decode_body(h: &Header, payload: &[u8]) -> Result<Frame, CodecError> {
+    if payload.len() != h.payload_len as usize {
+        return Err(CodecError::Truncated {
+            need: h.payload_len as usize,
+            have: payload.len(),
+        });
+    }
+    let got = fnv1a(payload);
+    if got != h.checksum {
+        return Err(CodecError::BadChecksum { want: h.checksum, got });
+    }
+    let msg = decode_payload(h.msg_type, payload)?;
+    Ok(Frame { node: h.node, term: h.term, msg })
+}
+
+/// Decode one frame from a buffer; returns the frame and bytes consumed.
+pub fn decode(buf: &[u8]) -> Result<(Frame, usize), CodecError> {
+    let h = decode_header(buf)?;
+    let total = HEADER_LEN + h.payload_len as usize;
+    if buf.len() < total {
+        return Err(CodecError::Truncated { need: total, have: buf.len() });
+    }
+    let frame = decode_body(&h, &buf[HEADER_LEN..total])?;
+    Ok((frame, total))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    fn sample_frames() -> Vec<Frame> {
+        let model = zoo::edgenet(16);
+        let plan = Plan::uniform(Scheme::InH, model.n_layers());
+        let region = Region::new(0, 2, 0, 3, 0, 1);
+        let t = Tensor::random(2, 3, 1, 7);
+        let patch = RegionTensor::new(region, t.clone());
+        vec![
+            Frame { node: 0, term: 1, msg: WireMsg::Hello },
+            Frame { node: 3, term: 9, msg: WireMsg::Heartbeat },
+            Frame { node: 1, term: 2, msg: WireMsg::Patch { seq: 5, boundary: 3, patch } },
+            Frame {
+                node: CTL_NODE,
+                term: 4,
+                msg: WireMsg::PlanInstall {
+                    leader: 0,
+                    seed: 11,
+                    model,
+                    plan,
+                    peers: vec![
+                        (0, "tcp:127.0.0.1:4000".into()),
+                        (1, "tcp:127.0.0.1:4001".into()),
+                        (2, "unix:/tmp/flexpie-2.sock".into()),
+                    ],
+                },
+            },
+            Frame { node: CTL_NODE, term: 4, msg: WireMsg::Elect { leader: 2 } },
+            Frame { node: 2, term: 4, msg: WireMsg::Ready },
+            Frame { node: CTL_NODE, term: 4, msg: WireMsg::Abort },
+            Frame { node: CTL_NODE, term: 4, msg: WireMsg::Drain },
+            Frame { node: CTL_NODE, term: 4, msg: WireMsg::Infer { seq: 42, input: t.clone() } },
+            Frame { node: CTL_NODE, term: 4, msg: WireMsg::Begin { seq: 42 } },
+            Frame {
+                node: 0,
+                term: 4,
+                msg: WireMsg::Output {
+                    seq: 42,
+                    output: t,
+                    bytes: 1024,
+                    msgs: 7,
+                    traffic: vec![(512, 3), (512, 4)],
+                },
+            },
+            Frame { node: 0, term: 4, msg: WireMsg::Failed { seq: 43, node: 2 } },
+            Frame { node: 1, term: 0, msg: WireMsg::Shutdown },
+            Frame {
+                node: 1,
+                term: 0,
+                msg: WireMsg::Register {
+                    ctl_addr: "tcp:127.0.0.1:5001".into(),
+                    data_addr: "tcp:127.0.0.1:6001".into(),
+                    speed: 1.5,
+                },
+            },
+            Frame { node: CTL_NODE, term: 0, msg: WireMsg::RegisterOk { ttl_ms: 1500 } },
+            Frame { node: 1, term: 0, msg: WireMsg::Renew },
+            Frame { node: CTL_NODE, term: 0, msg: WireMsg::RenewOk },
+            Frame { node: CTL_NODE, term: 0, msg: WireMsg::Resolve },
+            Frame {
+                node: CTL_NODE,
+                term: 0,
+                msg: WireMsg::ResolveOk {
+                    entries: vec![RegistryEntry {
+                        node: 1,
+                        ctl_addr: "tcp:127.0.0.1:5001".into(),
+                        data_addr: "tcp:127.0.0.1:6001".into(),
+                        speed: 1.5,
+                    }],
+                },
+            },
+        ]
+    }
+
+    #[test]
+    fn every_message_type_round_trips() {
+        let frames = sample_frames();
+        // one frame per wire discriminant — a new variant without a sample
+        // here fails this census
+        let mut kinds: Vec<u16> = frames.iter().map(|f| f.msg.kind()).collect();
+        kinds.sort_unstable();
+        kinds.dedup();
+        assert_eq!(kinds, (1u16..=19).collect::<Vec<_>>(), "sample set misses a msg type");
+        for f in frames {
+            let bytes = encode(&f);
+            let (back, used) = decode(&bytes).expect("decode");
+            assert_eq!(used, bytes.len());
+            // decode → re-encode is byte-identical: field-exact round trip
+            // (works even through NaN est_cost, where == would lie)
+            assert_eq!(encode(&back), bytes, "re-encode differs for {:?}", f.msg.kind());
+            assert_eq!(back.node, f.node);
+            assert_eq!(back.term, f.term);
+            assert_eq!(back.msg.kind(), f.msg.kind());
+        }
+    }
+
+    #[test]
+    fn tensors_survive_the_wire_bit_exactly() {
+        let t = Tensor::random(8, 8, 3, 1234);
+        let f = Frame { node: CTL_NODE, term: 1, msg: WireMsg::Infer { seq: 1, input: t.clone() } };
+        let (back, _) = decode(&encode(&f)).unwrap();
+        match back.msg {
+            WireMsg::Infer { input, .. } => assert_eq!(input.max_abs_diff(&t), 0.0),
+            other => panic!("wrong variant {other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncated_frames_reject_typed() {
+        let f = Frame { node: 1, term: 2, msg: WireMsg::Begin { seq: 9 } };
+        let bytes = encode(&f);
+        // header cut short
+        assert!(matches!(
+            decode(&bytes[..HEADER_LEN - 1]),
+            Err(CodecError::Truncated { need, have }) if need == HEADER_LEN && have == HEADER_LEN - 1
+        ));
+        // payload cut short
+        assert!(matches!(
+            decode(&bytes[..bytes.len() - 2]),
+            Err(CodecError::Truncated { .. })
+        ));
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut bytes = encode(&Frame { node: 0, term: 0, msg: WireMsg::Hello });
+        bytes[0] ^= 0xFF;
+        assert!(matches!(decode(&bytes), Err(CodecError::BadMagic(_))));
+    }
+
+    #[test]
+    fn wrong_version_rejected() {
+        let mut bytes = encode(&Frame { node: 0, term: 0, msg: WireMsg::Hello });
+        bytes[4] = 0xEE;
+        assert!(matches!(decode(&bytes), Err(CodecError::BadVersion(_))));
+    }
+
+    #[test]
+    fn unknown_type_rejected() {
+        let mut bytes = encode(&Frame { node: 0, term: 0, msg: WireMsg::Hello });
+        bytes[6] = 0xFF;
+        bytes[7] = 0x7F;
+        assert!(matches!(decode(&bytes), Err(CodecError::BadType(0x7FFF))));
+    }
+
+    #[test]
+    fn oversized_length_rejected_before_allocation() {
+        let mut bytes = encode(&Frame { node: 0, term: 0, msg: WireMsg::Hello });
+        bytes[20..24].copy_from_slice(&(MAX_PAYLOAD + 1).to_le_bytes());
+        assert!(matches!(decode(&bytes), Err(CodecError::Oversized { .. })));
+    }
+
+    #[test]
+    fn checksum_mismatch_rejected() {
+        let f = Frame { node: 1, term: 2, msg: WireMsg::Begin { seq: 9 } };
+        let mut bytes = encode(&f);
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x01; // flip one payload bit
+        assert!(matches!(decode(&bytes), Err(CodecError::BadChecksum { .. })));
+    }
+
+    #[test]
+    fn garbage_payload_rejected_not_panicking() {
+        // structurally valid frame whose payload contradicts itself: a Patch
+        // whose region extent disagrees with the tensor dims
+        let region = Region::new(0, 2, 0, 2, 0, 1);
+        let t = Tensor::zeros(2, 2, 1);
+        let good = encode(&Frame {
+            node: 0,
+            term: 0,
+            msg: WireMsg::Patch { seq: 0, boundary: 0, patch: RegionTensor::new(region, t) },
+        });
+        // corrupt the region's h1 (first region field after seq+boundary)
+        let mut bad = good.clone();
+        let h1_off = HEADER_LEN + 8 + 4 + 8; // seq + boundary + h0
+        bad[h1_off..h1_off + 8].copy_from_slice(&3i64.to_le_bytes());
+        // re-stamp the checksum so only the payload semantics are wrong
+        let payload = bad[HEADER_LEN..].to_vec();
+        let sum = fnv1a(&payload);
+        bad[24..28].copy_from_slice(&sum.to_le_bytes());
+        assert!(matches!(decode(&bad), Err(CodecError::BadPayload(_))));
+    }
+
+    #[test]
+    fn trailing_bytes_in_payload_rejected() {
+        let mut bytes = encode(&Frame { node: 0, term: 0, msg: WireMsg::Renew });
+        // declare one extra payload byte and supply it
+        bytes[20..24].copy_from_slice(&1u32.to_le_bytes());
+        bytes.push(0xAB);
+        let sum = fnv1a(&[0xAB]);
+        bytes[24..28].copy_from_slice(&sum.to_le_bytes());
+        assert!(matches!(decode(&bytes), Err(CodecError::BadPayload(_))));
+    }
+
+    #[test]
+    fn fnv1a_known_vectors() {
+        // standard FNV-1a 32-bit test vectors
+        assert_eq!(fnv1a(b""), 0x811c_9dc5);
+        assert_eq!(fnv1a(b"a"), 0xe40c_292c);
+        assert_eq!(fnv1a(b"foobar"), 0xbf9c_f968);
+    }
+}

@@ -1,0 +1,439 @@
+//! Coordinator: plan distribution, dispatch, and failover for a cluster
+//! of node daemons.
+//!
+//! [`ProcessCluster`] is the process-mode counterpart of calling
+//! [`crate::cluster::run_distributed`] in-process: resolve the live
+//! daemon set from the [`super::registry`], install the plan (term-,
+//! model-, and peer-stamped) on every member, then serve inferences one
+//! lockstep batch at a time — `Begin` to workers, `Infer` to the leader,
+//! `Output` back.
+//!
+//! **Failure contract** (the PR 4 chaos invariants, now over real
+//! processes): every submitted inference ends in exactly one of
+//! [`InferOutcome::Done`] or [`InferOutcome::Failed`] — zero silent
+//! drops. A failure names the dead node when the evidence identifies it
+//! (leader's `Failed` frame, a control-connection EOF); the caller then
+//! [`ProcessCluster::reinstall`]s, which re-resolves the registry (the
+//! real liveness signal — a killed daemon's lease ages out), bans the
+//! known-dead id, re-elects the leader as the **lowest surviving node
+//! id** (the same rank rule as [`crate::cluster::election`]), bumps the
+//! term, and re-installs. Retried inferences are bit-identical to what
+//! the full cluster would have produced, because the numerics are
+//! node-count-invariant.
+
+use std::collections::BTreeSet;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::time::{Duration, Instant};
+
+use crate::compute::Tensor;
+use crate::model::Model;
+use crate::partition::Plan;
+use crate::transport::codec::{Frame, RegistryEntry, WireMsg, CTL_NODE};
+use crate::transport::tcp::{self, Stream};
+use crate::transport::{registry, TransportError};
+
+enum CtlEvent {
+    Ready {
+        node: u32,
+        term: u64,
+    },
+    Output {
+        seq: u64,
+        output: Tensor,
+        bytes: u64,
+        msgs: u64,
+        traffic: Vec<(u64, u64)>,
+    },
+    Failed {
+        seq: u64,
+        culprit: u32,
+    },
+    Eof {
+        node: u32,
+    },
+}
+
+/// One completed process-mode inference.
+#[derive(Debug)]
+pub struct ProcessRun {
+    pub seq: u64,
+    pub output: Tensor,
+    /// Leader-side payload bytes sent (scatter + its boundary shares).
+    pub bytes: u64,
+    pub msgs: u64,
+    pub traffic: Vec<(u64, u64)>,
+}
+
+/// Every inference ends in exactly one of these — the zero-silent-drop
+/// contract.
+#[derive(Debug)]
+pub enum InferOutcome {
+    Done(ProcessRun),
+    /// Explicit failure; `dead` names the culprit when known (else the
+    /// registry's lease expiry identifies it on the next reinstall).
+    Failed { seq: u64, dead: Option<u32> },
+}
+
+struct Member {
+    entry: RegistryEntry,
+    writer: Stream,
+}
+
+/// Coordinator handle over a set of live daemons.
+pub struct ProcessCluster {
+    registry: String,
+    term: u64,
+    members: Vec<Member>,
+    events: Receiver<CtlEvent>,
+    events_tx: Sender<CtlEvent>,
+    next_seq: u64,
+    model: Option<Model>,
+    plan: Option<Plan>,
+    seed: u64,
+    banned: BTreeSet<u32>,
+    /// Bound on one inference round trip.
+    pub infer_deadline: Duration,
+    /// Bound on plan installation (mesh bring-up included).
+    pub ready_deadline: Duration,
+}
+
+impl ProcessCluster {
+    /// Wait until at least `min_nodes` daemons hold live leases, then
+    /// return a coordinator (no plan installed yet).
+    pub fn connect(
+        registry_addr: &str,
+        min_nodes: usize,
+        deadline: Duration,
+    ) -> Result<ProcessCluster, TransportError> {
+        registry::await_nodes(registry_addr, min_nodes, deadline)?;
+        let (events_tx, events) = channel();
+        Ok(ProcessCluster {
+            registry: registry_addr.to_string(),
+            term: 0,
+            members: Vec::new(),
+            events,
+            events_tx,
+            next_seq: 0,
+            model: None,
+            plan: None,
+            seed: 0,
+            banned: BTreeSet::new(),
+            infer_deadline: Duration::from_secs(60),
+            ready_deadline: Duration::from_secs(30),
+        })
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.members.len()
+    }
+
+    /// The current leader: lowest surviving node id, rank 0.
+    pub fn leader(&self) -> u32 {
+        self.members.first().map(|m| m.entry.node).expect("no members installed")
+    }
+
+    pub fn member_ids(&self) -> Vec<u32> {
+        self.members.iter().map(|m| m.entry.node).collect()
+    }
+
+    /// Install `plan` for `model` on the live daemon set (weights derive
+    /// from `seed` on each daemon).
+    pub fn install(
+        &mut self,
+        model: &Model,
+        plan: &Plan,
+        seed: u64,
+    ) -> Result<(), TransportError> {
+        self.model = Some(model.clone());
+        self.plan = Some(plan.clone());
+        self.seed = seed;
+        self.reinstall(None)
+    }
+
+    /// Rebuild the generation on the surviving daemons: ban `exclude` (if
+    /// any), re-resolve the registry, re-elect, bump the term, reinstall,
+    /// and wait for every member's `Ready`.
+    pub fn reinstall(&mut self, exclude: Option<u32>) -> Result<(), TransportError> {
+        if let Some(dead) = exclude {
+            self.banned.insert(dead);
+        }
+        let model = self.model.clone().ok_or_else(|| {
+            TransportError::Protocol("reinstall before install: no plan to distribute".into())
+        })?;
+        let plan = self.plan.clone().unwrap();
+
+        'attempt: for attempt in 0..5 {
+            let mut entries = registry::resolve(&self.registry)?;
+            entries.retain(|e| !self.banned.contains(&e.node));
+            if entries.is_empty() {
+                return Err(TransportError::Protocol("no surviving daemons".into()));
+            }
+            // entries arrive sorted by node id: rank 0 = lowest id = the
+            // same leader election::elect_leader would pick
+            self.term += 1;
+            let term = self.term;
+            let leader = entries[0].node;
+            let peers: Vec<(u32, String)> =
+                entries.iter().map(|e| (e.node, e.data_addr.clone())).collect();
+
+            // reuse live control connections; dial new members; drop gone
+            let mut old: Vec<Member> = std::mem::take(&mut self.members);
+            let mut next: Vec<Member> = Vec::with_capacity(entries.len());
+            for e in &entries {
+                if let Some(pos) = old.iter().position(|m| m.entry.node == e.node) {
+                    next.push(old.swap_remove(pos));
+                } else {
+                    match self.dial(e) {
+                        Ok(m) => next.push(m),
+                        Err(_) => {
+                            self.banned.insert(e.node);
+                            continue 'attempt;
+                        }
+                    }
+                }
+            }
+            for m in old {
+                m.writer.shutdown_both(); // explicit goodbye to ex-members
+            }
+            self.members = next;
+
+            // broadcast the new generation
+            let mut send_failed: Option<u32> = None;
+            for m in self.members.iter_mut() {
+                let elect = Frame { node: CTL_NODE, term, msg: WireMsg::Elect { leader } };
+                let install = Frame {
+                    node: CTL_NODE,
+                    term,
+                    msg: WireMsg::PlanInstall {
+                        leader,
+                        seed: self.seed,
+                        model: model.clone(),
+                        plan: plan.clone(),
+                        peers: peers.clone(),
+                    },
+                };
+                if tcp::send_frame(&mut m.writer, &elect).is_err()
+                    || tcp::send_frame(&mut m.writer, &install).is_err()
+                {
+                    send_failed = Some(m.entry.node);
+                    break;
+                }
+            }
+            if let Some(dead) = send_failed {
+                self.banned.insert(dead);
+                continue 'attempt;
+            }
+
+            // barrier: every member acks Ready for this term
+            let mut ready: BTreeSet<u32> = BTreeSet::new();
+            let start = Instant::now();
+            while ready.len() < self.members.len() {
+                if start.elapsed() > self.ready_deadline {
+                    let _ = attempt; // retried below with a fresh resolve
+                    continue 'attempt;
+                }
+                match self.events.recv_timeout(Duration::from_millis(20)) {
+                    Ok(CtlEvent::Ready { node, term: t }) if t == term => {
+                        ready.insert(node);
+                    }
+                    Ok(CtlEvent::Eof { node }) => {
+                        if self.member_ids().contains(&node) {
+                            self.banned.insert(node);
+                            continue 'attempt;
+                        }
+                    }
+                    Ok(_) | Err(RecvTimeoutError::Timeout) => {}
+                    Err(RecvTimeoutError::Disconnected) => {
+                        return Err(TransportError::Protocol("event channel closed".into()));
+                    }
+                }
+            }
+            return Ok(());
+        }
+        Err(TransportError::Protocol("plan install kept failing after 5 attempts".into()))
+    }
+
+    fn dial(&self, e: &RegistryEntry) -> Result<Member, TransportError> {
+        let writer = tcp::connect_retry(&e.ctl_addr, Duration::from_secs(5))?;
+        let reader = writer.try_clone()?;
+        spawn_ctl_reader(reader, e.node, self.events_tx.clone());
+        Ok(Member { entry: e.clone(), writer })
+    }
+
+    /// Serve one inference. Always returns an outcome — `Done` with the
+    /// gathered output, or an explicit `Failed` naming the evidence.
+    pub fn infer(&mut self, input: &Tensor) -> Result<InferOutcome, TransportError> {
+        assert!(!self.members.is_empty(), "install a plan before inferring");
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        let term = self.term;
+
+        // workers first so their exchanges are already listening by the
+        // time the leader's scatter lands (buffered either way)
+        for i in (1..self.members.len()).rev() {
+            let frame = Frame { node: CTL_NODE, term, msg: WireMsg::Begin { seq } };
+            if tcp::send_frame(&mut self.members[i].writer, &frame).is_err() {
+                let dead = self.members[i].entry.node;
+                return Ok(InferOutcome::Failed { seq, dead: Some(dead) });
+            }
+        }
+        let infer = Frame {
+            node: CTL_NODE,
+            term,
+            msg: WireMsg::Infer { seq, input: input.clone() },
+        };
+        if tcp::send_frame(&mut self.members[0].writer, &infer).is_err() {
+            let dead = self.members[0].entry.node;
+            return Ok(InferOutcome::Failed { seq, dead: Some(dead) });
+        }
+
+        let start = Instant::now();
+        loop {
+            if start.elapsed() > self.infer_deadline {
+                return Ok(InferOutcome::Failed { seq, dead: None });
+            }
+            match self.events.recv_timeout(Duration::from_millis(20)) {
+                Ok(CtlEvent::Output { seq: s, output, bytes, msgs, traffic }) if s == seq => {
+                    return Ok(InferOutcome::Done(ProcessRun {
+                        seq,
+                        output,
+                        bytes,
+                        msgs,
+                        traffic,
+                    }));
+                }
+                Ok(CtlEvent::Failed { seq: s, culprit }) if s == seq => {
+                    let dead = (culprit != CTL_NODE).then_some(culprit);
+                    return Ok(InferOutcome::Failed { seq, dead });
+                }
+                Ok(CtlEvent::Eof { node }) => {
+                    if self.member_ids().contains(&node) {
+                        return Ok(InferOutcome::Failed { seq, dead: Some(node) });
+                    }
+                }
+                Ok(_) | Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => {
+                    return Err(TransportError::Protocol("event channel closed".into()));
+                }
+            }
+        }
+    }
+
+    /// Ask every member daemon to exit, then drop the connections.
+    pub fn shutdown(mut self) {
+        for m in self.members.iter_mut() {
+            let frame = Frame { node: CTL_NODE, term: self.term, msg: WireMsg::Shutdown };
+            let _ = tcp::send_frame(&mut m.writer, &frame);
+            m.writer.shutdown_both();
+        }
+    }
+}
+
+fn spawn_ctl_reader(mut s: Stream, node: u32, tx: Sender<CtlEvent>) {
+    std::thread::spawn(move || loop {
+        match tcp::read_frame(&mut s) {
+            Ok(f) => {
+                let ev = match f.msg {
+                    WireMsg::Ready => CtlEvent::Ready { node, term: f.term },
+                    WireMsg::Output { seq, output, bytes, msgs, traffic } => {
+                        CtlEvent::Output { seq, output, bytes, msgs, traffic }
+                    }
+                    WireMsg::Failed { seq, node: culprit } => CtlEvent::Failed { seq, culprit },
+                    _ => continue,
+                };
+                if tx.send(ev).is_err() {
+                    break;
+                }
+            }
+            Err(_) => {
+                let _ = tx.send(CtlEvent::Eof { node });
+                break;
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compute::run_reference;
+    use crate::compute::WeightStore;
+    use crate::model::zoo;
+    use crate::partition::{Plan, Scheme};
+    use crate::transport::daemon::{self, DaemonOpts};
+    use crate::transport::registry::RegistryServer;
+
+    fn spawn_daemons(registry: &str, ids: &[u32]) {
+        for &id in ids {
+            let opts = DaemonOpts::new(id, registry);
+            std::thread::spawn(move || {
+                let _ = daemon::run(opts);
+            });
+        }
+    }
+
+    #[test]
+    fn three_daemon_cluster_matches_reference_bit_for_bit() {
+        // the in-thread version of the process e2e: a real registry, three
+        // daemons with real TCP meshes, a coordinator — outputs must equal
+        // the single-process reference exactly
+        let srv = RegistryServer::spawn("tcp:127.0.0.1:0", Duration::from_secs(3)).unwrap();
+        spawn_daemons(srv.addr(), &[0, 1, 2]);
+        let mut pc = ProcessCluster::connect(srv.addr(), 3, Duration::from_secs(10)).unwrap();
+
+        let model = zoo::edgenet(16);
+        let plan = Plan::uniform(Scheme::InH, model.n_layers());
+        pc.install(&model, &plan, 11).unwrap();
+        assert_eq!(pc.nodes(), 3);
+        assert_eq!(pc.leader(), 0);
+
+        let ws = WeightStore::for_model(&model, 11);
+        for seed in 0..3u64 {
+            let input = Tensor::random(16, 16, 3, 1000 + seed);
+            let reference = run_reference(&model, &ws, &input);
+            match pc.infer(&input).unwrap() {
+                InferOutcome::Done(run) => {
+                    assert_eq!(
+                        reference.max_abs_diff(&run.output),
+                        0.0,
+                        "wire output differs from reference"
+                    );
+                    assert!(run.bytes > 0, "leader reported no traffic");
+                }
+                InferOutcome::Failed { dead, .. } => {
+                    panic!("healthy cluster failed an inference (dead={dead:?})")
+                }
+            }
+        }
+        pc.shutdown();
+    }
+
+    #[test]
+    fn reinstall_after_exclusion_shrinks_and_reelects() {
+        // daemons 5 and 9: banning 5 must re-elect 9 as leader and still
+        // produce bit-identical outputs on the shrunken cluster
+        let srv = RegistryServer::spawn("tcp:127.0.0.1:0", Duration::from_secs(3)).unwrap();
+        spawn_daemons(srv.addr(), &[5, 9]);
+        let mut pc = ProcessCluster::connect(srv.addr(), 2, Duration::from_secs(10)).unwrap();
+
+        let model = zoo::edgenet(16);
+        let plan = Plan::uniform(Scheme::OutC, model.n_layers());
+        pc.install(&model, &plan, 7).unwrap();
+        assert_eq!(pc.leader(), 5);
+
+        pc.reinstall(Some(5)).unwrap();
+        assert_eq!(pc.nodes(), 1);
+        assert_eq!(pc.leader(), 9, "lowest surviving id must lead");
+
+        let ws = WeightStore::for_model(&model, 7);
+        let input = Tensor::random(16, 16, 3, 77);
+        let reference = run_reference(&model, &ws, &input);
+        match pc.infer(&input).unwrap() {
+            InferOutcome::Done(run) => {
+                assert_eq!(reference.max_abs_diff(&run.output), 0.0);
+            }
+            InferOutcome::Failed { dead, .. } => panic!("solo survivor failed (dead={dead:?})"),
+        }
+        pc.shutdown();
+    }
+}

@@ -1,0 +1,269 @@
+//! Node daemon: one process (or thread, for benches/examples) per device.
+//!
+//! Boot sequence: bind a control listener (coordinator dials it) and a
+//! data listener (peers dial it), register both with the TTL
+//! [`super::registry`], start a lease-renewal thread, then serve control
+//! frames forever:
+//!
+//! * `PlanInstall` — tear down the previous generation, derive weights
+//!   from the wire seed ([`crate::compute::WeightStore::for_model`] is
+//!   deterministic, so no weight bytes ever travel), compute the plan
+//!   geometry exactly as the in-process nodes do, bring up the
+//!   [`super::tcp::TcpExchange`] mesh for the install's term, ack `Ready`.
+//! * `Begin`/`Infer` — run the **same** lockstep protocol
+//!   ([`crate::cluster`]'s `node_main`) over the socket mesh; the leader
+//!   (logical rank 0) gets the input via `Infer` and returns `Output`,
+//!   workers join via `Begin`. A transport failure mid-inference surfaces
+//!   as an explicit `Failed` frame from the leader (never a silent drop)
+//!   and poisons the generation until the next install.
+//! * `Shutdown` — exit cleanly.
+//!
+//! The daemon never loads a model from disk and never trusts wall-clock
+//! agreement with its peers: everything it needs arrives in the install
+//! frame, which is what makes `kill -9` + reinstall a complete recovery
+//! story.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::compute::{Tensor, WeightStore};
+use crate::model::Model;
+use crate::partition::inflate::BlockGeometry;
+use crate::partition::Scheme;
+use crate::transport::codec::{Frame, WireMsg, CTL_NODE};
+use crate::transport::tcp::{self, TcpExchange, TcpOpts};
+use crate::transport::{registry, TransportError};
+
+/// Daemon configuration.
+#[derive(Debug, Clone)]
+pub struct DaemonOpts {
+    /// Stable node identity (survives re-registration).
+    pub node: u32,
+    /// Registry address to register with and renew against.
+    pub registry: String,
+    /// Bind address for the control plane (default: ephemeral TCP).
+    pub ctl_bind: String,
+    /// Bind address for the data plane (TCP or `unix:`).
+    pub data_bind: String,
+    /// Advertised relative compute speed.
+    pub speed: f64,
+    /// Socket-fabric timing knobs.
+    pub tcp: TcpOpts,
+    /// Print a `READY node=… ctl=… data=…` line on boot — process
+    /// supervisors (tests, `flexpie-ctl`) wait for it.
+    pub announce: bool,
+}
+
+impl DaemonOpts {
+    pub fn new(node: u32, registry: &str) -> DaemonOpts {
+        DaemonOpts {
+            node,
+            registry: registry.to_string(),
+            ctl_bind: "tcp:127.0.0.1:0".into(),
+            data_bind: "tcp:127.0.0.1:0".into(),
+            speed: 1.0,
+            tcp: TcpOpts::default(),
+            announce: false,
+        }
+    }
+}
+
+/// One installed plan generation: everything needed to run inferences
+/// until the coordinator replaces it.
+struct Generation {
+    term: u64,
+    rank: usize,
+    nodes: usize,
+    peers: Vec<(u32, String)>,
+    model: Model,
+    weights: WeightStore,
+    blocks: Vec<(usize, usize, Scheme)>,
+    geos: Vec<BlockGeometry>,
+    ex: TcpExchange,
+}
+
+/// Run the daemon until a `Shutdown` frame (or an unrecoverable listener
+/// error). Blocks the calling thread; spawn it for in-thread clusters.
+pub fn run(opts: DaemonOpts) -> Result<(), TransportError> {
+    let (ctl_l, ctl_addr) = tcp::listen(&opts.ctl_bind)?;
+    let (data_l, data_addr) = tcp::listen(&opts.data_bind)?;
+    let ttl_ms = registry::register(&opts.registry, opts.node, &ctl_addr, &data_addr, opts.speed)?;
+
+    // renew the lease at ttl/3 — stopping (or dying) lets it expire, which
+    // is exactly how the rest of the system learns we're gone
+    let stop = Arc::new(AtomicBool::new(false));
+    {
+        let stop = Arc::clone(&stop);
+        let reg = opts.registry.clone();
+        let node = opts.node;
+        let period = Duration::from_millis((ttl_ms / 3).max(10));
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::SeqCst) {
+                std::thread::sleep(period);
+                if registry::renew(&reg, node).is_err() {
+                    break; // registry gone; nothing left to renew against
+                }
+            }
+        });
+    }
+
+    if opts.announce {
+        use std::io::Write as _;
+        println!("READY node={} ctl={ctl_addr} data={data_addr}", opts.node);
+        let _ = std::io::stdout().flush();
+    }
+
+    let result = control_loop(&opts, &ctl_l, &data_l);
+    stop.store(true, Ordering::SeqCst);
+    result
+}
+
+fn control_loop(
+    opts: &DaemonOpts,
+    ctl_l: &tcp::Listener,
+    data_l: &tcp::Listener,
+) -> Result<(), TransportError> {
+    let mut gen: Option<Generation> = None;
+    loop {
+        // one coordinator at a time; when it disconnects, await the next
+        let mut ctl = ctl_l.accept_blocking()?;
+        loop {
+            let frame = match tcp::read_frame(&mut ctl) {
+                Ok(f) => f,
+                Err(_) => break,
+            };
+            match frame.msg {
+                WireMsg::PlanInstall { leader: _, seed, model, plan, peers } => {
+                    gen = None; // tear the old mesh down before rebuilding
+                    let Some(rank) = peers.iter().position(|(id, _)| *id == opts.node) else {
+                        continue; // not a member of this generation
+                    };
+                    let nodes = peers.len();
+                    let weights = WeightStore::for_model(&model, seed);
+                    let (blocks, geos) = crate::cluster::plan_geometry(&model, &plan, nodes);
+                    match TcpExchange::connect(rank, &peers, data_l, frame.term, opts.tcp) {
+                        Ok(ex) => {
+                            gen = Some(Generation {
+                                term: frame.term,
+                                rank,
+                                nodes,
+                                peers,
+                                model,
+                                weights,
+                                blocks,
+                                geos,
+                                ex,
+                            });
+                            let _ = tcp::send_frame(
+                                &mut ctl,
+                                &Frame { node: opts.node, term: frame.term, msg: WireMsg::Ready },
+                            );
+                        }
+                        Err(_) => {
+                            // a peer died during bring-up; stay idle — the
+                            // coordinator's Ready deadline triggers reinstall
+                        }
+                    }
+                }
+                WireMsg::Begin { seq } => {
+                    let ok = match gen.as_mut() {
+                        Some(g) if frame.term == g.term => {
+                            run_inference(g, seq, None, &mut ctl, opts.node)
+                        }
+                        _ => true,
+                    };
+                    if !ok {
+                        gen = None;
+                    }
+                }
+                WireMsg::Infer { seq, input } => {
+                    let ok = match gen.as_mut() {
+                        Some(g) if frame.term == g.term => {
+                            run_inference(g, seq, Some(input), &mut ctl, opts.node)
+                        }
+                        _ => true,
+                    };
+                    if !ok {
+                        gen = None;
+                    }
+                }
+                WireMsg::Abort | WireMsg::Drain | WireMsg::Elect { .. } => {
+                    // lockstep daemons hold nothing between frames; election
+                    // is implied by rank order in the next install
+                }
+                WireMsg::Shutdown => return Ok(()),
+                _ => {} // not a control message; ignore
+            }
+        }
+    }
+}
+
+/// Execute one inference over the generation's mesh. Returns false when
+/// the generation is poisoned (a transport failure) and must be replaced.
+fn run_inference(
+    g: &mut Generation,
+    seq: u64,
+    input: Option<Tensor>,
+    ctl: &mut tcp::Stream,
+    my_id: u32,
+) -> bool {
+    g.ex.set_seq(seq);
+    let res = crate::cluster::node_main(
+        g.rank,
+        g.nodes,
+        &g.model,
+        &g.blocks,
+        &g.geos,
+        &g.weights,
+        input.as_ref(),
+        &mut g.ex,
+    );
+    match res {
+        Ok(nr) => {
+            if g.rank == 0 {
+                let output = nr.output.expect("leader produced no output");
+                let traffic: Vec<(u64, u64)> =
+                    nr.traffic.iter().map(|t| (t.bytes, t.msgs)).collect();
+                // bytes/msgs are the leader's own sends — enough for the
+                // overhead bench; the audit compares outputs, not wire totals
+                let _ = tcp::send_frame(
+                    ctl,
+                    &Frame {
+                        node: my_id,
+                        term: g.term,
+                        msg: WireMsg::Output {
+                            seq,
+                            output,
+                            bytes: nr.sent_bytes,
+                            msgs: nr.sent_msgs as u64,
+                            traffic,
+                        },
+                    },
+                );
+            }
+            true
+        }
+        Err(e) => {
+            if g.rank == 0 {
+                // name the culprit when we know it; CTL_NODE = "unknown,
+                // consult the registry"
+                let dead = match e {
+                    TransportError::PeerDead(r) => {
+                        g.peers.get(r).map(|(id, _)| *id).unwrap_or(CTL_NODE)
+                    }
+                    _ => CTL_NODE,
+                };
+                let _ = tcp::send_frame(
+                    ctl,
+                    &Frame {
+                        node: my_id,
+                        term: g.term,
+                        msg: WireMsg::Failed { seq, node: dead },
+                    },
+                );
+            }
+            false
+        }
+    }
+}

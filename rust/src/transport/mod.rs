@@ -1,0 +1,106 @@
+//! Wire transport: the cluster's two interchangeable message fabrics.
+//!
+//! PRs 1–5 ran every "distributed" inference as threads in one process,
+//! exchanging boundary tensors over in-memory channels. That simulated
+//! fabric stays — it is the deterministic test/CI mode — but this module
+//! adds the real one: **one OS process per node**, talking length-prefixed
+//! binary frames ([`codec`]) over TCP (or Unix domain sockets where
+//! available), discovering each other through a TTL [`registry`], and
+//! dying for real under `kill -9`.
+//!
+//! The seam between the two worlds is the [`Exchange`] trait: the lockstep
+//! protocol in [`crate::cluster`] is generic over it, so the exact same
+//! `node_main` byte-for-byte protocol runs on either fabric. The simulated
+//! backend ([`crate::cluster::SimExchange`]) implements it over mpsc
+//! channels; [`tcp::TcpExchange`] implements it over sockets with
+//! connect/accept retry + backoff, per-peer deadlines, and heartbeat-based
+//! mid-batch failure detection.
+//!
+//! Process-mode topology (mirrors the paper's testbed of discrete devices):
+//!
+//! ```text
+//!   flexpie-ctl (coordinator)          flexpie-ctl registry
+//!      │  PlanInstall/Infer/Begin          ▲ Register/Renew/Resolve (TTL)
+//!      ▼                                   │
+//!   flexpie-node 0 ◄──boundary──► flexpie-node 1 ◄──► flexpie-node 2
+//!      (leader: scatter/gather)     (worker)            (worker)
+//! ```
+
+pub mod codec;
+pub mod coord;
+pub mod daemon;
+pub mod registry;
+pub mod tcp;
+
+use crate::compute::{PatchStore, RegionTensor};
+
+/// Why an exchange operation failed. The lockstep protocol treats any of
+/// these as "this inference cannot complete on the current cluster" — the
+/// caller reports an explicit failure (never a silent drop) and the
+/// election/failover path takes over.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TransportError {
+    /// A peer is gone: its connection broke or its heartbeats stopped.
+    PeerDead(usize),
+    /// Waited past the recv deadline with no verdict on any one peer.
+    Deadline { boundary: usize, got: usize, expect: usize },
+    /// A peer sent bytes that don't decode.
+    Codec(codec::CodecError),
+    /// Socket-level failure.
+    Io(String),
+    /// A well-formed message that violates the lockstep protocol.
+    Protocol(String),
+}
+
+impl std::fmt::Display for TransportError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TransportError::PeerDead(n) => write!(f, "peer {n} is dead"),
+            TransportError::Deadline { boundary, got, expect } => write!(
+                f,
+                "recv deadline at boundary {boundary}: got {got}/{expect} patches"
+            ),
+            TransportError::Codec(e) => write!(f, "codec: {e}"),
+            TransportError::Io(e) => write!(f, "io: {e}"),
+            TransportError::Protocol(e) => write!(f, "protocol: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for TransportError {}
+
+impl From<codec::CodecError> for TransportError {
+    fn from(e: codec::CodecError) -> Self {
+        TransportError::Codec(e)
+    }
+}
+
+impl From<std::io::Error> for TransportError {
+    fn from(e: std::io::Error) -> Self {
+        TransportError::Io(e.to_string())
+    }
+}
+
+/// One node's view of the boundary-exchange fabric. Implementations carry
+/// the node's identity; `to` is a logical rank on the current (compacted)
+/// cluster. `recv_for` must deliver **exactly** `expect` patches tagged
+/// `boundary` into `store`, buffering any patches that arrive early for
+/// later boundaries (a fast peer may run ahead) — or return a typed error
+/// when a peer's death or a deadline makes that impossible. Death must
+/// surface *mid-wait*, not only at batch boundaries: both backends watch
+/// liveness while blocked.
+pub trait Exchange {
+    fn send(
+        &mut self,
+        to: usize,
+        boundary: usize,
+        patch: RegionTensor,
+    ) -> Result<(), TransportError>;
+
+    fn recv_for(
+        &mut self,
+        boundary: usize,
+        expect: usize,
+        store: &mut PatchStore,
+    ) -> Result<(), TransportError>;
+}

@@ -1,0 +1,271 @@
+//! Registry: TTL-leased service discovery for node daemons.
+//!
+//! Daemons [`register`] `(node id, ctl addr, data addr, speed)` on boot and
+//! [`renew`] the lease every `ttl/3`; anyone (the coordinator, mostly)
+//! [`resolve`]s the **live** peer set — rows whose lease is unexpired. A
+//! `kill -9`'d daemon stops renewing, its row ages out, and the next
+//! resolve simply doesn't contain it: expiry is the real-world liveness
+//! signal that feeds the election/failover path, replacing the simulated
+//! world's scripted alive-masks.
+//!
+//! The wire shape is one request frame, one reply frame, one short-lived
+//! connection per RPC (the codec's registry messages) — deliberately
+//! boring, so a registry can also be a separate process
+//! (`flexpie-ctl registry`) with nothing shared but the address.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::transport::codec::{Frame, RegistryEntry, WireMsg, CTL_NODE};
+use crate::transport::{tcp, TransportError};
+
+/// Deadline for one registry RPC round trip.
+const RPC_DEADLINE: Duration = Duration::from_secs(5);
+
+struct Row {
+    ctl_addr: String,
+    data_addr: String,
+    speed: f64,
+    renewed: Instant,
+}
+
+/// An in-process registry service listening on TCP (or UDS). Spawn one in
+/// a test or example, or let `flexpie-ctl registry` host one in its own
+/// process — clients cannot tell the difference.
+pub struct RegistryServer {
+    addr: String,
+    stop: Arc<AtomicBool>,
+}
+
+impl RegistryServer {
+    /// Bind `bind` (e.g. `"tcp:127.0.0.1:0"`) and serve until dropped.
+    /// Leases last `ttl`.
+    pub fn spawn(bind: &str, ttl: Duration) -> std::io::Result<RegistryServer> {
+        let (listener, addr) = tcp::listen(bind)?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        std::thread::spawn(move || serve(listener, ttl, &stop2));
+        Ok(RegistryServer { addr, stop })
+    }
+
+    /// The canonical bound address clients should dial.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+}
+
+impl Drop for RegistryServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+    }
+}
+
+/// The accept/dispatch loop — also the body of `flexpie-ctl registry`.
+pub fn serve(listener: tcp::Listener, ttl: Duration, stop: &AtomicBool) {
+    let mut table: HashMap<u32, Row> = HashMap::new();
+    let ttl_ms = ttl.as_millis() as u64;
+    while !stop.load(Ordering::SeqCst) {
+        let mut stream = match listener_poll(&listener) {
+            Some(s) => s,
+            None => continue,
+        };
+        // one request, one reply; a slow or hostile client can't wedge us
+        if stream.set_read_timeout(Some(Duration::from_secs(1))).is_err() {
+            continue;
+        }
+        let req = match tcp::read_frame(&mut stream) {
+            Ok(f) => f,
+            Err(_) => continue,
+        };
+        let reply = match req.msg {
+            WireMsg::Register { ctl_addr, data_addr, speed } => {
+                table.insert(
+                    req.node,
+                    Row { ctl_addr, data_addr, speed, renewed: Instant::now() },
+                );
+                WireMsg::RegisterOk { ttl_ms }
+            }
+            WireMsg::Renew => {
+                if let Some(row) = table.get_mut(&req.node) {
+                    row.renewed = Instant::now();
+                }
+                WireMsg::RenewOk
+            }
+            WireMsg::Resolve => {
+                let mut entries: Vec<RegistryEntry> = table
+                    .iter()
+                    .filter(|(_, row)| row.renewed.elapsed() < ttl)
+                    .map(|(&node, row)| RegistryEntry {
+                        node,
+                        ctl_addr: row.ctl_addr.clone(),
+                        data_addr: row.data_addr.clone(),
+                        speed: row.speed,
+                    })
+                    .collect();
+                entries.sort_by_key(|e| e.node);
+                WireMsg::ResolveOk { entries }
+            }
+            WireMsg::Shutdown => break,
+            _ => continue, // not a registry RPC; drop the connection
+        };
+        let frame = Frame { node: CTL_NODE, term: 0, msg: reply };
+        let _ = tcp::send_frame(&mut stream, &frame);
+    }
+}
+
+fn listener_poll(listener: &tcp::Listener) -> Option<tcp::Stream> {
+    match listener.accept_nonblocking() {
+        Ok(s) => Some(s),
+        Err(_) => {
+            std::thread::sleep(Duration::from_millis(5));
+            None
+        }
+    }
+}
+
+/// Announce a daemon; returns the lease TTL in ms the server granted.
+pub fn register(
+    registry: &str,
+    node: u32,
+    ctl_addr: &str,
+    data_addr: &str,
+    speed: f64,
+) -> Result<u64, TransportError> {
+    let req = Frame {
+        node,
+        term: 0,
+        msg: WireMsg::Register {
+            ctl_addr: ctl_addr.to_string(),
+            data_addr: data_addr.to_string(),
+            speed,
+        },
+    };
+    match tcp::roundtrip(registry, &req, RPC_DEADLINE)?.msg {
+        WireMsg::RegisterOk { ttl_ms } => Ok(ttl_ms),
+        other => Err(TransportError::Protocol(format!(
+            "registry answered Register with type {}",
+            other.kind()
+        ))),
+    }
+}
+
+/// Renew a daemon's lease.
+pub fn renew(registry: &str, node: u32) -> Result<(), TransportError> {
+    let req = Frame { node, term: 0, msg: WireMsg::Renew };
+    match tcp::roundtrip(registry, &req, RPC_DEADLINE)?.msg {
+        WireMsg::RenewOk => Ok(()),
+        other => Err(TransportError::Protocol(format!(
+            "registry answered Renew with type {}",
+            other.kind()
+        ))),
+    }
+}
+
+/// The live (lease-unexpired) peer set, sorted by node id.
+pub fn resolve(registry: &str) -> Result<Vec<RegistryEntry>, TransportError> {
+    let req = Frame { node: CTL_NODE, term: 0, msg: WireMsg::Resolve };
+    match tcp::roundtrip(registry, &req, RPC_DEADLINE)?.msg {
+        WireMsg::ResolveOk { entries } => Ok(entries),
+        other => Err(TransportError::Protocol(format!(
+            "registry answered Resolve with type {}",
+            other.kind()
+        ))),
+    }
+}
+
+/// Poll [`resolve`] until at least `min` daemons are live or `deadline`
+/// passes — cluster bring-up barrier.
+pub fn await_nodes(
+    registry: &str,
+    min: usize,
+    deadline: Duration,
+) -> Result<Vec<RegistryEntry>, TransportError> {
+    let start = Instant::now();
+    loop {
+        let entries = resolve(registry)?;
+        if entries.len() >= min {
+            return Ok(entries);
+        }
+        if start.elapsed() >= deadline {
+            return Err(TransportError::Io(format!(
+                "only {}/{min} daemons registered within {deadline:?}",
+                entries.len()
+            )));
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+/// Ask a registry process to exit (used by process supervisors in tests).
+pub fn shutdown(registry: &str) -> Result<(), TransportError> {
+    let req = Frame { node: CTL_NODE, term: 0, msg: WireMsg::Shutdown };
+    let mut s = tcp::connect_retry(registry, RPC_DEADLINE)?;
+    tcp::send_frame(&mut s, &req)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn register_resolve_round_trip() {
+        let srv = RegistryServer::spawn("tcp:127.0.0.1:0", Duration::from_secs(5)).unwrap();
+        let ttl = register(srv.addr(), 2, "tcp:1.2.3.4:10", "tcp:1.2.3.4:11", 1.0).unwrap();
+        assert_eq!(ttl, 5000);
+        register(srv.addr(), 0, "tcp:1.2.3.4:20", "tcp:1.2.3.4:21", 2.0).unwrap();
+        let entries = resolve(srv.addr()).unwrap();
+        assert_eq!(entries.len(), 2);
+        // sorted by node id
+        assert_eq!(entries[0].node, 0);
+        assert_eq!(entries[1].node, 2);
+        assert_eq!(entries[1].data_addr, "tcp:1.2.3.4:11");
+        assert_eq!(entries[0].speed, 2.0);
+    }
+
+    #[test]
+    fn leases_expire_without_renewal() {
+        let srv = RegistryServer::spawn("tcp:127.0.0.1:0", Duration::from_millis(80)).unwrap();
+        register(srv.addr(), 7, "tcp:a:1", "tcp:a:2", 1.0).unwrap();
+        assert_eq!(resolve(srv.addr()).unwrap().len(), 1);
+        std::thread::sleep(Duration::from_millis(160));
+        assert!(
+            resolve(srv.addr()).unwrap().is_empty(),
+            "a dead daemon's lease must age out — this is the liveness signal"
+        );
+    }
+
+    #[test]
+    fn renewal_keeps_the_lease_alive() {
+        let srv = RegistryServer::spawn("tcp:127.0.0.1:0", Duration::from_millis(120)).unwrap();
+        register(srv.addr(), 3, "tcp:a:1", "tcp:a:2", 1.0).unwrap();
+        for _ in 0..5 {
+            std::thread::sleep(Duration::from_millis(60));
+            renew(srv.addr(), 3).unwrap();
+        }
+        // 300ms elapsed — far past the ttl, alive only because of renewals
+        let entries = resolve(srv.addr()).unwrap();
+        assert_eq!(entries.len(), 1);
+        assert_eq!(entries[0].node, 3);
+    }
+
+    #[test]
+    fn await_nodes_barrier_fills_or_times_out() {
+        let srv = RegistryServer::spawn("tcp:127.0.0.1:0", Duration::from_secs(5)).unwrap();
+        let addr = srv.addr().to_string();
+        let joiner = {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(60));
+                register(&addr, 1, "tcp:a:1", "tcp:a:2", 1.0).unwrap();
+            })
+        };
+        let entries = await_nodes(&addr, 1, Duration::from_secs(5)).unwrap();
+        assert_eq!(entries.len(), 1);
+        joiner.join().unwrap();
+        assert!(await_nodes(&addr, 5, Duration::from_millis(100)).is_err());
+    }
+}

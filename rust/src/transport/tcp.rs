@@ -1,0 +1,695 @@
+//! Real-socket fabric: TCP (and Unix domain sockets where available)
+//! carrying [`super::codec`] frames between node processes.
+//!
+//! Address strings are `"tcp:host:port"` (or bare `host:port`) and
+//! `"unix:/path/to.sock"`. Binding port 0 auto-allocates; [`listen`]
+//! returns the canonical bound address for registration.
+//!
+//! [`TcpExchange`] implements [`super::Exchange`] — the same lockstep
+//! protocol [`crate::cluster`] runs over channels — on a full peer mesh:
+//!
+//! * **Connect**: lower logical rank dials higher rank's data address
+//!   (with retry + exponential backoff up to a deadline); higher rank
+//!   accepts and identifies the peer from its `Hello` frame. Connections
+//!   carrying a stale term are dropped at the door.
+//! * **Receive**: one blocking reader thread per peer decodes frames into
+//!   a shared event queue; `recv_for` drains it with the same
+//!   ahead-boundary buffering the simulated Mailbox uses (plus a seq tag,
+//!   since a process serves many inferences over one mesh).
+//! * **Liveness**: a beacon thread sends `Heartbeat` every
+//!   `heartbeat_interval`; readers stamp `last_seen` per peer. While
+//!   blocked, `recv_for` wakes every [`TCP_TICK`] and surfaces a broken
+//!   connection (SIGKILL → EOF/reset) or silent peer (missed heartbeats)
+//!   as [`TransportError::PeerDead`] — *mid-batch*, which is what lets
+//!   the serving layer fail a request explicitly instead of hanging.
+
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::compute::{PatchStore, RegionTensor};
+use crate::transport::codec::{self, Frame, WireMsg};
+use crate::transport::{Exchange, TransportError};
+
+/// How often a blocked `recv_for` wakes to check liveness and deadlines.
+const TCP_TICK: Duration = Duration::from_millis(10);
+
+/// A bound listening socket on either fabric.
+pub enum Listener {
+    Tcp(TcpListener),
+    #[cfg(unix)]
+    Unix(UnixListener),
+}
+
+/// A connected stream on either fabric.
+pub enum Stream {
+    Tcp(TcpStream),
+    #[cfg(unix)]
+    Unix(UnixStream),
+}
+
+impl Read for Stream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.read(buf),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Stream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.write(buf),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.write(buf),
+        }
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.flush(),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.flush(),
+        }
+    }
+}
+
+impl Stream {
+    pub fn try_clone(&self) -> std::io::Result<Stream> {
+        Ok(match self {
+            Stream::Tcp(s) => Stream::Tcp(s.try_clone()?),
+            #[cfg(unix)]
+            Stream::Unix(s) => Stream::Unix(s.try_clone()?),
+        })
+    }
+
+    pub fn set_read_timeout(&self, d: Option<Duration>) -> std::io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.set_read_timeout(d),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.set_read_timeout(d),
+        }
+    }
+
+    pub fn shutdown_both(&self) {
+        match self {
+            Stream::Tcp(s) => {
+                let _ = s.shutdown(Shutdown::Both);
+            }
+            #[cfg(unix)]
+            Stream::Unix(s) => {
+                let _ = s.shutdown(Shutdown::Both);
+            }
+        }
+    }
+}
+
+impl Listener {
+    pub fn set_nonblocking(&self, v: bool) -> std::io::Result<()> {
+        match self {
+            Listener::Tcp(l) => l.set_nonblocking(v),
+            #[cfg(unix)]
+            Listener::Unix(l) => l.set_nonblocking(v),
+        }
+    }
+
+    fn accept_stream(&self) -> std::io::Result<Stream> {
+        Ok(match self {
+            Listener::Tcp(l) => {
+                let (s, _) = l.accept()?;
+                Stream::Tcp(s)
+            }
+            #[cfg(unix)]
+            Listener::Unix(l) => {
+                let (s, _) = l.accept()?;
+                Stream::Unix(s)
+            }
+        })
+    }
+
+    /// Blocking accept (restores blocking mode first).
+    pub fn accept_blocking(&self) -> std::io::Result<Stream> {
+        self.set_nonblocking(false)?;
+        let s = self.accept_stream()?;
+        prepare_stream(&s)?;
+        Ok(s)
+    }
+
+    /// Accept on a listener already in non-blocking mode; `WouldBlock`
+    /// surfaces as the error it is.
+    pub fn accept_nonblocking(&self) -> std::io::Result<Stream> {
+        let s = self.accept_stream()?;
+        prepare_stream(&s)?;
+        Ok(s)
+    }
+}
+
+fn prepare_stream(s: &Stream) -> std::io::Result<()> {
+    // accepted sockets can inherit the listener's non-blocking flag on some
+    // platforms; force a known state and disable Nagle on TCP (frames are
+    // latency-sensitive and already batched)
+    match s {
+        Stream::Tcp(t) => {
+            t.set_nonblocking(false)?;
+            t.set_nodelay(true)?;
+        }
+        #[cfg(unix)]
+        Stream::Unix(u) => u.set_nonblocking(false)?,
+    }
+    Ok(())
+}
+
+/// Bind `addr` (`tcp:host:port`, bare `host:port`, or `unix:/path`) and
+/// return the listener plus its canonical address (resolving port 0).
+pub fn listen(addr: &str) -> std::io::Result<(Listener, String)> {
+    if let Some(path) = addr.strip_prefix("unix:") {
+        #[cfg(unix)]
+        {
+            let l = UnixListener::bind(path)?;
+            return Ok((Listener::Unix(l), format!("unix:{path}")));
+        }
+        #[cfg(not(unix))]
+        {
+            let _ = path;
+            return Err(std::io::Error::other("unix sockets unsupported on this platform"));
+        }
+    }
+    let hostport = addr.strip_prefix("tcp:").unwrap_or(addr);
+    let l = TcpListener::bind(hostport)?;
+    let canonical = format!("tcp:{}", l.local_addr()?);
+    Ok((Listener::Tcp(l), canonical))
+}
+
+/// Dial `addr` once.
+pub fn connect(addr: &str) -> std::io::Result<Stream> {
+    if let Some(path) = addr.strip_prefix("unix:") {
+        #[cfg(unix)]
+        {
+            let s = UnixStream::connect(path)?;
+            let s = Stream::Unix(s);
+            prepare_stream(&s)?;
+            return Ok(s);
+        }
+        #[cfg(not(unix))]
+        {
+            let _ = path;
+            return Err(std::io::Error::other("unix sockets unsupported on this platform"));
+        }
+    }
+    let hostport = addr.strip_prefix("tcp:").unwrap_or(addr);
+    let s = Stream::Tcp(TcpStream::connect(hostport)?);
+    prepare_stream(&s)?;
+    Ok(s)
+}
+
+/// Dial `addr` with exponential backoff (10ms doubling, 200ms cap) until
+/// it answers or `deadline` elapses — peers come up in arbitrary order.
+pub fn connect_retry(addr: &str, deadline: Duration) -> Result<Stream, TransportError> {
+    let start = Instant::now();
+    let mut backoff = Duration::from_millis(10);
+    loop {
+        match connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                if start.elapsed() >= deadline {
+                    return Err(TransportError::Io(format!(
+                        "connect to {addr} timed out after {:?}: {e}",
+                        start.elapsed()
+                    )));
+                }
+                std::thread::sleep(backoff.min(deadline.saturating_sub(start.elapsed())));
+                backoff = (backoff * 2).min(Duration::from_millis(200));
+            }
+        }
+    }
+}
+
+/// Write one frame (length-prefixed by its header) and flush.
+pub fn send_frame(stream: &mut Stream, frame: &Frame) -> std::io::Result<()> {
+    let bytes = codec::encode(frame);
+    stream.write_all(&bytes)?;
+    stream.flush()
+}
+
+/// Read one frame, blocking (or honoring the stream's read timeout, which
+/// surfaces as an `Io` error). EOF and decode failures are typed.
+pub fn read_frame(stream: &mut Stream) -> Result<Frame, TransportError> {
+    let mut head = [0u8; codec::HEADER_LEN];
+    stream.read_exact(&mut head)?;
+    let h = codec::decode_header(&head)?;
+    let mut payload = vec![0u8; h.payload_len as usize];
+    stream.read_exact(&mut payload)?;
+    Ok(codec::decode_body(&h, &payload)?)
+}
+
+/// One request/one reply over a fresh connection — the registry RPC shape.
+pub fn roundtrip(addr: &str, frame: &Frame, deadline: Duration) -> Result<Frame, TransportError> {
+    let mut s = connect_retry(addr, deadline)?;
+    send_frame(&mut s, frame)?;
+    s.set_read_timeout(Some(deadline))?;
+    read_frame(&mut s)
+}
+
+/// Timing knobs for the socket fabric.
+#[derive(Debug, Clone, Copy)]
+pub struct TcpOpts {
+    /// How long mesh bring-up may take (dials + accepts).
+    pub connect_deadline: Duration,
+    /// Bound on any single `recv_for` wait.
+    pub recv_deadline: Duration,
+    /// Beacon period.
+    pub heartbeat_interval: Duration,
+    /// Silence longer than this marks a peer dead.
+    pub heartbeat_timeout: Duration,
+}
+
+impl Default for TcpOpts {
+    fn default() -> TcpOpts {
+        TcpOpts {
+            connect_deadline: Duration::from_secs(10),
+            recv_deadline: Duration::from_secs(30),
+            heartbeat_interval: Duration::from_millis(100),
+            heartbeat_timeout: Duration::from_millis(1200),
+        }
+    }
+}
+
+enum Event {
+    Patch { seq: u64, boundary: usize, patch: RegionTensor },
+    Dead { from: usize },
+}
+
+/// The real-socket [`Exchange`]: a mesh of framed connections between this
+/// node process and every peer in the current plan generation.
+pub struct TcpExchange {
+    rank: usize,
+    my_id: u32,
+    term: u64,
+    /// Seq of the inference currently executing — stamps outgoing patches,
+    /// filters stale incoming ones.
+    cur_seq: u64,
+    writers: Vec<Option<Arc<Mutex<Stream>>>>,
+    events: Receiver<Event>,
+    pending: Vec<(u64, usize, RegionTensor)>,
+    last_seen: Arc<Vec<AtomicU64>>,
+    epoch: Instant,
+    opts: TcpOpts,
+    stop: Arc<AtomicBool>,
+}
+
+impl TcpExchange {
+    /// Bring up the data-plane mesh for one plan generation. `peers` lists
+    /// `(node id, data addr)` by logical rank (`peers[rank]` is this node);
+    /// `listener` is this node's bound data listener, reused across
+    /// generations. Lower ranks dial higher ranks; term-mismatched or
+    /// unidentifiable connections are rejected.
+    pub fn connect(
+        rank: usize,
+        peers: &[(u32, String)],
+        listener: &Listener,
+        term: u64,
+        opts: TcpOpts,
+    ) -> Result<TcpExchange, TransportError> {
+        let nodes = peers.len();
+        let my_id = peers[rank].0;
+        let start = Instant::now();
+        let mut streams: Vec<Option<Stream>> = (0..nodes).map(|_| None).collect();
+
+        // dial every higher rank
+        for (j, (_, addr)) in peers.iter().enumerate().skip(rank + 1) {
+            let remaining = opts.connect_deadline.saturating_sub(start.elapsed());
+            let mut s = connect_retry(addr, remaining)?;
+            send_frame(&mut s, &Frame { node: my_id, term, msg: WireMsg::Hello })?;
+            streams[j] = Some(s);
+        }
+
+        // accept every lower rank, identifying each from its Hello
+        if rank > 0 {
+            listener.set_nonblocking(true)?;
+            let mut need = rank;
+            while need > 0 {
+                if start.elapsed() >= opts.connect_deadline {
+                    return Err(TransportError::Io(format!(
+                        "mesh accept timed out with {need} peers missing"
+                    )));
+                }
+                match listener.accept_stream() {
+                    Ok(s) => {
+                        prepare_stream(&s)?;
+                        s.set_read_timeout(Some(
+                            opts.connect_deadline.saturating_sub(start.elapsed()),
+                        ))?;
+                        let mut s = s;
+                        let hello = match read_frame(&mut s) {
+                            Ok(f) => f,
+                            Err(_) => continue, // broken dialer; keep waiting
+                        };
+                        if hello.term != term || !matches!(hello.msg, WireMsg::Hello) {
+                            s.shutdown_both(); // stale generation or confusion
+                            continue;
+                        }
+                        let Some(j) = peers.iter().position(|(id, _)| *id == hello.node) else {
+                            s.shutdown_both();
+                            continue;
+                        };
+                        if j >= rank || streams[j].is_some() {
+                            s.shutdown_both();
+                            continue;
+                        }
+                        s.set_read_timeout(None)?;
+                        streams[j] = Some(s);
+                        need -= 1;
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(2));
+                    }
+                    Err(e) => return Err(e.into()),
+                }
+            }
+            listener.set_nonblocking(false)?;
+        }
+
+        // spawn one reader per peer + the heartbeat beacon
+        let (tx, rx) = channel::<Event>();
+        let epoch = Instant::now();
+        let last_seen: Arc<Vec<AtomicU64>> =
+            Arc::new((0..nodes).map(|_| AtomicU64::new(0)).collect());
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut writers: Vec<Option<Arc<Mutex<Stream>>>> = Vec::with_capacity(nodes);
+        for (j, slot) in streams.into_iter().enumerate() {
+            let Some(s) = slot else {
+                writers.push(None);
+                continue;
+            };
+            let reader = s.try_clone()?;
+            writers.push(Some(Arc::new(Mutex::new(s))));
+            spawn_reader(reader, j, term, tx.clone(), Arc::clone(&last_seen), epoch);
+        }
+        spawn_beacon(my_id, term, &writers, Arc::clone(&stop), opts.heartbeat_interval);
+
+        Ok(TcpExchange {
+            rank,
+            my_id,
+            term,
+            cur_seq: 0,
+            writers,
+            events: rx,
+            pending: Vec::new(),
+            last_seen,
+            epoch,
+            opts,
+            stop,
+        })
+    }
+
+    /// Stamp subsequent sends/receives with inference `seq`; drops any
+    /// buffered patches from earlier inferences.
+    pub fn set_seq(&mut self, seq: u64) {
+        self.cur_seq = seq;
+        self.pending.retain(|(s, _, _)| *s >= seq);
+    }
+
+    pub fn term(&self) -> u64 {
+        self.term
+    }
+
+    fn now_ms(&self) -> u64 {
+        self.epoch.elapsed().as_millis() as u64
+    }
+
+    /// A peer whose heartbeats have gone silent, if any.
+    fn stale_peer(&self) -> Option<usize> {
+        let now = self.now_ms();
+        let cutoff = self.opts.heartbeat_timeout.as_millis() as u64;
+        (0..self.writers.len()).find(|&j| {
+            j != self.rank
+                && self.writers[j].is_some()
+                && now.saturating_sub(self.last_seen[j].load(Ordering::SeqCst)) > cutoff
+        })
+    }
+}
+
+fn spawn_reader(
+    mut stream: Stream,
+    from: usize,
+    term: u64,
+    tx: Sender<Event>,
+    last_seen: Arc<Vec<AtomicU64>>,
+    epoch: Instant,
+) {
+    std::thread::spawn(move || loop {
+        match read_frame(&mut stream) {
+            Ok(f) => {
+                if f.term != term {
+                    continue; // stale generation talking; ignore
+                }
+                last_seen[from].store(epoch.elapsed().as_millis() as u64, Ordering::SeqCst);
+                if let WireMsg::Patch { seq, boundary, patch } = f.msg {
+                    if tx
+                        .send(Event::Patch { seq, boundary: boundary as usize, patch })
+                        .is_err()
+                    {
+                        break; // exchange dropped
+                    }
+                }
+                // Heartbeat/Hello only refresh last_seen
+            }
+            Err(_) => {
+                // EOF, reset, or garbage: either way this peer is unusable
+                let _ = tx.send(Event::Dead { from });
+                break;
+            }
+        }
+    });
+}
+
+fn spawn_beacon(
+    my_id: u32,
+    term: u64,
+    writers: &[Option<Arc<Mutex<Stream>>>],
+    stop: Arc<AtomicBool>,
+    interval: Duration,
+) {
+    let targets: Vec<Arc<Mutex<Stream>>> = writers.iter().flatten().map(Arc::clone).collect();
+    if targets.is_empty() {
+        return;
+    }
+    std::thread::spawn(move || {
+        let beat = Frame { node: my_id, term, msg: WireMsg::Heartbeat };
+        while !stop.load(Ordering::SeqCst) {
+            for w in &targets {
+                let mut s = w.lock().unwrap();
+                let _ = send_frame(&mut s, &beat); // reader side notices death
+            }
+            std::thread::sleep(interval);
+        }
+    });
+}
+
+impl Drop for TcpExchange {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        for w in self.writers.iter().flatten() {
+            w.lock().unwrap().shutdown_both(); // unblocks our readers and peers'
+        }
+    }
+}
+
+impl Exchange for TcpExchange {
+    fn send(
+        &mut self,
+        to: usize,
+        boundary: usize,
+        patch: RegionTensor,
+    ) -> Result<(), TransportError> {
+        let w = self.writers[to].as_ref().ok_or(TransportError::PeerDead(to))?;
+        let frame = Frame {
+            node: self.my_id,
+            term: self.term,
+            msg: WireMsg::Patch { seq: self.cur_seq, boundary: boundary as u32, patch },
+        };
+        let mut s = w.lock().unwrap();
+        send_frame(&mut s, &frame).map_err(|_| TransportError::PeerDead(to))
+    }
+
+    fn recv_for(
+        &mut self,
+        boundary: usize,
+        expect: usize,
+        store: &mut PatchStore,
+    ) -> Result<(), TransportError> {
+        let mut got = 0usize;
+        let mut i = 0;
+        while i < self.pending.len() {
+            let (s, b, _) = &self.pending[i];
+            if *s == self.cur_seq && *b == boundary {
+                let (_, _, patch) = self.pending.swap_remove(i);
+                store.add(patch);
+                got += 1;
+            } else {
+                i += 1;
+            }
+        }
+        let start = Instant::now();
+        while got < expect {
+            match self.events.recv_timeout(TCP_TICK) {
+                Ok(Event::Patch { seq, boundary: b, patch }) => {
+                    if seq < self.cur_seq {
+                        continue; // remnant of an inference that already failed
+                    }
+                    if seq == self.cur_seq && b == boundary {
+                        store.add(patch);
+                        got += 1;
+                    } else if (seq, b) > (self.cur_seq, boundary) {
+                        self.pending.push((seq, b, patch));
+                    } else {
+                        return Err(TransportError::Protocol(format!(
+                            "stale patch for boundary {b} while at {boundary}"
+                        )));
+                    }
+                }
+                Ok(Event::Dead { from }) => return Err(TransportError::PeerDead(from)),
+                Err(RecvTimeoutError::Timeout) => {
+                    if let Some(p) = self.stale_peer() {
+                        return Err(TransportError::PeerDead(p));
+                    }
+                    if start.elapsed() > self.opts.recv_deadline {
+                        return Err(TransportError::Deadline { boundary, got, expect });
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    return Err(TransportError::Protocol("event channel closed".into()));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compute::Tensor;
+    use crate::partition::Region;
+
+    fn mesh2(opts: TcpOpts) -> (TcpExchange, TcpExchange) {
+        // two nodes on localhost: rank 0 dials rank 1
+        let (l0, _a0) = listen("tcp:127.0.0.1:0").unwrap();
+        let (l1, a1) = listen("tcp:127.0.0.1:0").unwrap();
+        let peers = vec![(10u32, "tcp:unused".to_string()), (11u32, a1)];
+        let peers2 = peers.clone();
+        let h = std::thread::spawn(move || TcpExchange::connect(1, &peers2, &l1, 7, opts).unwrap());
+        let ex0 = TcpExchange::connect(0, &peers, &l0, 7, opts).unwrap();
+        let ex1 = h.join().unwrap();
+        (ex0, ex1)
+    }
+
+    fn patch(v: f32) -> RegionTensor {
+        let r = Region::new(0, 1, 0, 2, 0, 1);
+        let mut t = Tensor::zeros(1, 2, 1);
+        t.data[0] = v;
+        t.data[1] = -v;
+        RegionTensor::new(r, t)
+    }
+
+    #[test]
+    fn patches_cross_the_wire_bit_exactly() {
+        let (mut ex0, mut ex1) = mesh2(TcpOpts::default());
+        ex0.set_seq(0);
+        ex1.set_seq(0);
+        ex0.send(1, 3, patch(1.25)).unwrap();
+        let mut store = PatchStore::new();
+        ex1.recv_for(3, 1, &mut store).unwrap();
+        assert_eq!(store.patches.len(), 1);
+        assert_eq!(store.patches[0].t.data, vec![1.25, -1.25]);
+    }
+
+    #[test]
+    fn ahead_boundary_patches_buffer_until_their_turn() {
+        let (mut ex0, mut ex1) = mesh2(TcpOpts::default());
+        ex0.set_seq(0);
+        ex1.set_seq(0);
+        // a fast peer already sends boundary 2 while we still wait on 1
+        ex0.send(1, 2, patch(2.0)).unwrap();
+        ex0.send(1, 1, patch(1.0)).unwrap();
+        let mut s1 = PatchStore::new();
+        ex1.recv_for(1, 1, &mut s1).unwrap();
+        assert_eq!(s1.patches[0].t.data[0], 1.0);
+        let mut s2 = PatchStore::new();
+        ex1.recv_for(2, 1, &mut s2).unwrap();
+        assert_eq!(s2.patches[0].t.data[0], 2.0);
+    }
+
+    #[test]
+    fn tcp_exchange_surfaces_connection_death_mid_wait() {
+        // peer's sockets close (what SIGKILL does to them) while we block
+        // in recv_for: the reader's EOF must surface as PeerDead mid-wait,
+        // long before the 30s recv deadline
+        let (ex0, mut ex1) = mesh2(TcpOpts::default());
+        let killer = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(50));
+            drop(ex0); // shuts the connection down hard
+        });
+        let start = Instant::now();
+        let mut store = PatchStore::new();
+        let err = ex1.recv_for(0, 1, &mut store).unwrap_err();
+        assert_eq!(err, TransportError::PeerDead(0));
+        assert!(start.elapsed() < Duration::from_secs(5));
+        killer.join().unwrap();
+    }
+
+    #[test]
+    fn tcp_exchange_surfaces_silent_peer_via_missed_heartbeats() {
+        // the peer's connection stays open but it stops beating (a wedged
+        // process, a pulled cable): staleness must surface as PeerDead
+        let mut opts = TcpOpts::default();
+        opts.heartbeat_interval = Duration::from_secs(3600); // never beats
+        opts.heartbeat_timeout = Duration::from_millis(150);
+        let (_ex0, mut ex1) = mesh2(opts);
+        let start = Instant::now();
+        let mut store = PatchStore::new();
+        let err = ex1.recv_for(0, 1, &mut store).unwrap_err();
+        assert_eq!(err, TransportError::PeerDead(0));
+        assert!(start.elapsed() < Duration::from_secs(5), "not detected mid-wait");
+    }
+
+    #[test]
+    fn stale_seq_patches_are_dropped_not_delivered() {
+        let (mut ex0, mut ex1) = mesh2(TcpOpts::default());
+        ex0.set_seq(3);
+        ex0.send(1, 0, patch(3.0)).unwrap();
+        ex0.set_seq(4);
+        ex0.send(1, 0, patch(4.0)).unwrap();
+        // receiver is already on seq 4: the seq-3 patch must not count
+        ex1.set_seq(4);
+        let mut store = PatchStore::new();
+        ex1.recv_for(0, 1, &mut store).unwrap();
+        assert_eq!(store.patches.len(), 1);
+        assert_eq!(store.patches[0].t.data[0], 4.0);
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn unix_domain_socket_round_trip() {
+        let dir = crate::util::tmp::TempDir::new("uds");
+        let path = dir.path().join("node.sock");
+        let addr = format!("unix:{}", path.display());
+        let (l, canon) = listen(&addr).unwrap();
+        assert_eq!(canon, addr);
+        let h = std::thread::spawn(move || {
+            let mut s = l.accept_blocking().unwrap();
+            read_frame(&mut s).unwrap()
+        });
+        let mut s = connect(&addr).unwrap();
+        send_frame(&mut s, &Frame { node: 5, term: 2, msg: WireMsg::Begin { seq: 77 } }).unwrap();
+        let f = h.join().unwrap();
+        assert_eq!((f.node, f.term), (5, 2));
+        assert!(matches!(f.msg, WireMsg::Begin { seq: 77 }));
+    }
+}
