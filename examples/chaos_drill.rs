@@ -60,6 +60,7 @@ fn main() {
         batch_window: Duration::ZERO,
         queue_depth: 64,
         pipeline_depth: depth,
+        replay_budget: args.u64_or("replay-budget", 3) as u32,
     };
     println!("\nserving {requests} requests through the pipelined elastic server...");
     let out = run_chaos(

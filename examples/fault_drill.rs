@@ -1,0 +1,82 @@
+//! Wire-fault drill — corrupt, drop, delay, duplicate, partition and
+//! throttle frames on the wire, and watch replay recovery leave no
+//! request behind.
+//!
+//! Generates a seeded, fully deterministic [`FaultSchedule`] (window 0
+//! always corrupts a frame, so every drill proves the checksum path),
+//! prints it, then replays the request stream through the lockstep
+//! cluster with every node's fabric wrapped in a fault injector. The
+//! audit: every request completes bit-identical to the fault-free
+//! reference — re-executed under a bounded replay budget when a fault
+//! aborts it — or is explicitly failed. The same seed always replays the
+//! same drill.
+//!
+//! ```bash
+//! cargo run --release --example fault_drill
+//! cargo run --release --example fault_drill -- --seed 23 --requests 16 --budget 4
+//! ```
+
+use std::time::Duration;
+
+use flexpie::compute::WeightStore;
+use flexpie::config::FaultExperiment;
+use flexpie::model::zoo;
+use flexpie::partition::{Plan, Scheme};
+use flexpie::transport::fault::run_faulted;
+use flexpie::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let defaults = FaultExperiment::default();
+    let exp = FaultExperiment {
+        seed: args.u64_or("seed", defaults.seed),
+        nodes: args.usize_or("nodes", defaults.nodes),
+        windows: args.usize_or("windows", defaults.windows),
+        window_ops: args.u64_or("window-ops", defaults.window_ops),
+        requests: args.u64_or("requests", defaults.requests),
+        replay_budget: args.u64_or("budget", defaults.replay_budget as u64) as u32,
+        ..defaults
+    };
+
+    let model = zoo::by_name(&exp.model).expect("zoo model");
+    let plan = Plan::uniform(Scheme::InH, model.n_layers());
+    let weights = WeightStore::for_model(&model, 5);
+
+    let schedule = exp.schedule();
+    println!(
+        "fault drill: seed {}, {} nodes, {} events over {} send ops \
+         (window = {} ops), replay budget {}\n",
+        exp.seed,
+        exp.nodes,
+        schedule.len(),
+        exp.windows as u64 * exp.window_ops,
+        exp.window_ops,
+        exp.replay_budget
+    );
+    for e in &schedule.events {
+        println!("  op {:>5}  src {}  span {:>3}  {:?}", e.at, e.src, e.span, e.fault);
+    }
+
+    println!("\nserving {} requests through the fault-wrapped cluster...", exp.requests);
+    let out = run_faulted(
+        &model,
+        &plan,
+        &weights,
+        &schedule,
+        exp.requests,
+        1_000 * (exp.seed + 1),
+        exp.replay_budget,
+        Duration::from_millis(400),
+    );
+    println!("\noutcome: {out}");
+    println!("RESULT {}", out.to_json().to_string());
+    match out.verify() {
+        Ok(()) => {
+            println!("\nall invariants held: no silent drops, no corrupted numerics");
+        }
+        Err(e) => {
+            println!("\nINVARIANT VIOLATION: {e}");
+            std::process::exit(1);
+        }
+    }
+}

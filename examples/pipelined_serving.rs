@@ -89,6 +89,7 @@ fn main() {
                 batch_window: Duration::ZERO,
                 queue_depth: 64,
                 pipeline_depth: depth,
+                ..ServeConfig::default()
             },
         );
         let t0 = Instant::now();
@@ -132,6 +133,7 @@ fn main() {
             batch_window: Duration::ZERO,
             queue_depth: 64,
             pipeline_depth: exp.pipeline_depth,
+            ..ServeConfig::default()
         },
         ElasticConfig::default(),
     );

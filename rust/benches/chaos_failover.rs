@@ -96,6 +96,7 @@ fn main() {
         batch_window: Duration::ZERO,
         queue_depth: 64,
         pipeline_depth: exp.pipeline_depth,
+        ..ServeConfig::default()
     };
     let t0 = Instant::now();
     let out = run_chaos(

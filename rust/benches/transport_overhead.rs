@@ -10,15 +10,22 @@
 //! bit-identical between the two before anything is timed — a transport
 //! that changes the numbers has no overhead worth measuring.
 //!
+//! A second section prices the **replay path**: real daemon OS processes,
+//! the leader SIGKILLed mid-run, every request completing through
+//! [`ProcessCluster::infer_with_recovery`] — its latency distribution
+//! includes the request that rides reinstall-and-replay.
+//!
 //! The single-line `RESULT` JSON carries both throughputs, the overhead
-//! ratio, wire latency percentiles, and the leader's per-request wire
-//! bytes/messages.
+//! ratio, wire latency percentiles, the leader's per-request wire
+//! bytes/messages, and the replay-path percentiles.
 //!
 //! ```bash
 //! cargo bench --bench transport_overhead
 //! FLEXPIE_BENCH_FAST=1 cargo bench --bench transport_overhead   # CI smoke
 //! ```
 
+use std::io::{BufRead, BufReader};
+use std::process::{Child, ChildStdout, Command, Stdio};
 use std::time::{Duration, Instant};
 
 use flexpie::cluster::run_distributed;
@@ -26,11 +33,42 @@ use flexpie::compute::{Tensor, WeightStore};
 use flexpie::config::TransportExperiment;
 use flexpie::model::zoo;
 use flexpie::partition::{Plan, Scheme};
-use flexpie::transport::coord::{InferOutcome, ProcessCluster};
+use flexpie::transport::coord::{InferOutcome, ProcessCluster, RecoveryOutcome};
 use flexpie::transport::daemon::{self, DaemonOpts};
 use flexpie::transport::registry::RegistryServer;
 use flexpie::util::bench::{black_box, emit_result};
 use flexpie::util::json::Json;
+
+/// A daemon child process, SIGKILLed (and reaped) on drop.
+struct Proc {
+    child: Child,
+    _out: Option<BufReader<ChildStdout>>,
+}
+
+impl Proc {
+    fn sigkill(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+impl Drop for Proc {
+    fn drop(&mut self) {
+        self.sigkill();
+    }
+}
+
+/// Spawn a real `flexpie-node` process and wait for its `READY` banner.
+fn spawn_node(node: u32, registry: &str) -> Proc {
+    let mut cmd = Command::new(env!("CARGO_BIN_EXE_flexpie-node"));
+    cmd.args(["--node", &node.to_string(), "--registry", registry]);
+    let mut child = cmd.stdout(Stdio::piped()).spawn().expect("spawn flexpie-node");
+    let mut out = BufReader::new(child.stdout.take().expect("stdout piped"));
+    let mut line = String::new();
+    out.read_line(&mut line).expect("read boot banner");
+    assert!(line.starts_with("READY "), "unexpected banner: {line:?}");
+    Proc { child, _out: Some(out) }
+}
 
 fn main() {
     let fast = std::env::var("FLEXPIE_BENCH_FAST").is_ok();
@@ -99,6 +137,58 @@ fn main() {
     let wire_secs = t0.elapsed().as_secs_f64();
     pc.shutdown();
 
+    // --- replay path: real daemon processes, leader SIGKILLed mid-run ---
+    // Every request goes through `infer_with_recovery`, so the one in
+    // flight when the leader dies is replayed on the reinstalled survivors
+    // instead of failing — its latency prices the whole recovery arc
+    // (detection, registry re-resolve, re-election, plan reinstall, replay).
+    let replay_requests = if fast { 6 } else { 16 };
+    let reg = RegistryServer::spawn("tcp:127.0.0.1:0", Duration::from_millis(600))
+        .expect("registry bind");
+    let mut children: Vec<Proc> =
+        (0..exp.nodes as u32).map(|id| spawn_node(id, reg.addr())).collect();
+    let mut pc = ProcessCluster::connect(reg.addr(), exp.nodes, Duration::from_secs(30))
+        .expect("cluster bring-up");
+    pc.infer_deadline = Duration::from_secs(10);
+    pc.install(&model, &plan, exp.seed).expect("plan install");
+
+    let mut replay_lat: Vec<Duration> = Vec::with_capacity(replay_requests);
+    let (mut replays, mut replay_failovers) = (0u64, 0u64);
+    let mut killed = false;
+    for i in 0..replay_requests {
+        let input = &inputs[i % inputs.len()];
+        let reference = run_distributed(&model, &plan, &ws, input, exp.nodes).output;
+        let t = Instant::now();
+        let report = pc.infer_with_recovery(input, 4);
+        replays += report.replays as u64;
+        replay_failovers += report.failovers as u64;
+        match report.outcome {
+            RecoveryOutcome::Done(run) => {
+                replay_lat.push(t.elapsed());
+                assert_eq!(
+                    reference.max_abs_diff(&run.output),
+                    0.0,
+                    "replayed request {i} diverged from the reference"
+                );
+            }
+            RecoveryOutcome::Exhausted => panic!("request {i}: replay budget exhausted"),
+            RecoveryOutcome::Dead => panic!("request {i}: cluster declared dead"),
+        }
+        if !killed {
+            children[0].sigkill(); // node 0 — the current leader
+            killed = true;
+        }
+    }
+    assert!(replay_failovers >= 1, "leader SIGKILL never forced a reinstall");
+    assert!(replays >= 1, "no request rode the replay path");
+    pc.shutdown();
+    drop(children);
+    let rs = flexpie::metrics::summarize(&replay_lat);
+    println!(
+        "replay path ({replay_requests} reqs, leader SIGKILL mid-run): \
+         {replays} replays, {replay_failovers} failovers | latency {rs}"
+    );
+
     let local_rps = exp.requests as f64 / local_secs.max(1e-12);
     let wire_rps = exp.requests as f64 / wire_secs.max(1e-12);
     let overhead = local_secs / wire_secs.max(1e-12); // <1 when wire is slower
@@ -123,6 +213,11 @@ fn main() {
         ("wire_mean_us", Json::Num(s.mean.as_secs_f64() * 1e6)),
         ("leader_bytes_per_req", Json::Num(wire_bytes as f64 / exp.requests as f64)),
         ("leader_msgs_per_req", Json::Num(wire_msgs as f64 / exp.requests as f64)),
+        ("replay_requests", Json::Num(replay_requests as f64)),
+        ("replays", Json::Num(replays as f64)),
+        ("replay_failovers", Json::Num(replay_failovers as f64)),
+        ("replay_p50_us", Json::Num(rs.p50.as_secs_f64() * 1e6)),
+        ("replay_p99_us", Json::Num(rs.p99.as_secs_f64() * 1e6)),
         ("bit_identical", Json::Bool(true)),
     ]);
 }

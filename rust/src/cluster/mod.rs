@@ -383,6 +383,27 @@ pub struct SimExchange {
     deadline: Duration,
 }
 
+/// Build a fully-connected in-process mesh of `nodes` [`SimExchange`]
+/// endpoints with a bounded per-wait `deadline` — the fabric handle the
+/// wire-fault injector ([`crate::transport::fault`]) wraps to replay a
+/// `FaultSchedule` against the simulated transport.
+pub(crate) fn sim_mesh(nodes: usize, deadline: Duration) -> Vec<SimExchange> {
+    let mut senders: Vec<Sender<Msg>> = Vec::with_capacity(nodes);
+    let mut receivers: Vec<Option<Receiver<Msg>>> = Vec::with_capacity(nodes);
+    for _ in 0..nodes {
+        let (tx, rx) = channel::<Msg>();
+        senders.push(tx);
+        receivers.push(Some(rx));
+    }
+    (0..nodes)
+        .map(|node| {
+            let mut ex = SimExchange::new(node, senders.clone(), receivers[node].take().unwrap());
+            ex.deadline = deadline;
+            ex
+        })
+        .collect()
+}
+
 impl SimExchange {
     fn new(node: usize, txs: Vec<Sender<Msg>>, rx: Receiver<Msg>) -> SimExchange {
         SimExchange {

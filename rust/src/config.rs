@@ -613,6 +613,114 @@ impl TransportExperiment {
     }
 }
 
+/// A wire-fault experiment: which fabric to disrupt (`sim` — in-process
+/// channels, or `tcp` — one daemon per node over real sockets), the
+/// seeded [`crate::transport::fault::FaultSchedule`] shape, and the
+/// replay budget that bounds end-to-end recovery. Drives
+/// `examples/fault_drill.rs` and the `fault_e2e` CI job.
+#[derive(Debug, Clone)]
+pub struct FaultExperiment {
+    /// `"sim"` or `"tcp"`.
+    pub fabric: String,
+    pub nodes: usize,
+    pub seed: u64,
+    /// Fault-schedule windows
+    /// ([`crate::transport::fault::FaultSchedule::generate`]).
+    pub windows: usize,
+    /// Send operations per window.
+    pub window_ops: u64,
+    /// Requests pushed through per run.
+    pub requests: u64,
+    /// Zoo model name.
+    pub model: String,
+    /// Re-execution budget per request
+    /// ([`crate::serve::ServeConfig::replay_budget`]).
+    pub replay_budget: u32,
+}
+
+impl Default for FaultExperiment {
+    fn default() -> Self {
+        FaultExperiment {
+            fabric: "sim".into(),
+            nodes: 3,
+            seed: 11,
+            windows: 6,
+            window_ops: 64,
+            requests: 12,
+            model: "edgenet".into(),
+            replay_budget: 6,
+        }
+    }
+}
+
+impl FaultExperiment {
+    pub fn is_tcp(&self) -> bool {
+        self.fabric == "tcp"
+    }
+
+    /// Generate the deterministic wire-fault schedule this experiment
+    /// describes.
+    pub fn schedule(&self) -> crate::transport::fault::FaultSchedule {
+        crate::transport::fault::FaultSchedule::generate(
+            self.nodes,
+            self.seed,
+            self.windows,
+            self.window_ops,
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("fabric", Json::Str(self.fabric.clone())),
+            ("nodes", Json::Num(self.nodes as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("windows", Json::Num(self.windows as f64)),
+            ("window_ops", Json::Num(self.window_ops as f64)),
+            ("requests", Json::Num(self.requests as f64)),
+            ("model", Json::Str(self.model.clone())),
+            ("replay_budget", Json::Num(self.replay_budget as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<FaultExperiment, String> {
+        let num = |key: &str| v.req(key)?.as_f64().ok_or_else(|| key.to_string());
+        let s = |key: &str| -> Result<String, String> {
+            Ok(v.req(key)?.as_str().ok_or_else(|| key.to_string())?.to_string())
+        };
+        let exp = FaultExperiment {
+            fabric: s("fabric")?,
+            nodes: num("nodes")? as usize,
+            seed: num("seed")? as u64,
+            windows: num("windows")? as usize,
+            window_ops: num("window_ops")? as u64,
+            requests: num("requests")? as u64,
+            model: s("model")?,
+            replay_budget: num("replay_budget")? as u32,
+        };
+        if exp.fabric != "sim" && exp.fabric != "tcp" {
+            return Err(format!("fabric must be \"sim\" or \"tcp\", got {:?}", exp.fabric));
+        }
+        if exp.nodes < 2 {
+            return Err("wire faults need at least two nodes".into());
+        }
+        if exp.windows == 0 {
+            return Err("windows must be at least 1".into());
+        }
+        if exp.window_ops < 8 {
+            return Err("window_ops must be at least 8: shorter windows degenerate".into());
+        }
+        if exp.requests == 0 {
+            return Err("requests must be at least 1".into());
+        }
+        Ok(exp)
+    }
+
+    pub fn load(path: &std::path::Path) -> std::io::Result<FaultExperiment> {
+        let v = Json::load(path)?;
+        Self::from_json(&v).map_err(std::io::Error::other)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -753,6 +861,40 @@ mod tests {
         );
         assert!(mutate("requests", Json::Num(0.0)).is_err());
         assert!(mutate("mode", Json::Str("sim".into())).is_ok(), "sim mode is valid");
+    }
+
+    #[test]
+    fn fault_experiment_roundtrip_and_schedule() {
+        let e = FaultExperiment { seed: 23, windows: 4, ..Default::default() };
+        let e2 = FaultExperiment::from_json(&e.to_json()).unwrap();
+        assert_eq!((e2.nodes, e2.seed, e2.windows), (3, 23, 4));
+        assert_eq!(e2.fabric, "sim");
+        assert!(!e2.is_tcp());
+        assert_eq!(e2.window_ops, e.window_ops);
+        assert_eq!(e2.replay_budget, e.replay_budget);
+        assert_eq!(e2.model, "edgenet");
+        let s = e2.schedule();
+        assert_eq!((s.nodes, s.seed, s.window_ops), (3, 23, 64));
+        assert!(!s.is_empty() && s.len() <= 4, "at most one fault per window");
+        // file round trip
+        let dir = crate::util::tmp::TempDir::new("fault");
+        let p = dir.path().join("fault.json");
+        e.to_json().save(&p).unwrap();
+        assert_eq!(FaultExperiment::load(&p).unwrap().seed, 23);
+        // degenerate shapes are rejected
+        let mutate = |key: &str, val: Json| {
+            let mut j = e.to_json();
+            if let Json::Obj(m) = &mut j {
+                m.insert(key.into(), val);
+            }
+            FaultExperiment::from_json(&j)
+        };
+        assert!(mutate("fabric", Json::Str("udp".into())).is_err());
+        assert!(mutate("nodes", Json::Num(1.0)).is_err());
+        assert!(mutate("windows", Json::Num(0.0)).is_err());
+        assert!(mutate("window_ops", Json::Num(4.0)).is_err());
+        assert!(mutate("requests", Json::Num(0.0)).is_err());
+        assert!(mutate("fabric", Json::Str("tcp".into())).is_ok(), "tcp fabric is valid");
     }
 
     #[test]

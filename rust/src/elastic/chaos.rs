@@ -267,6 +267,11 @@ pub struct ChaosOutcome {
     pub max_nodes: usize,
     /// Pipeline generations served (0 on the lockstep path).
     pub generations: u64,
+    /// Requests that lost their generation mid-flight and were re-executed
+    /// to completion instead of being failed back to the client.
+    pub replays: u64,
+    /// Total re-executions, counting each replay of each request.
+    pub replay_attempts: u64,
 }
 
 impl ChaosOutcome {
@@ -311,6 +316,8 @@ impl ChaosOutcome {
             ("min_nodes", Json::Num(self.min_nodes as f64)),
             ("max_nodes", Json::Num(self.max_nodes as f64)),
             ("generations", Json::Num(self.generations as f64)),
+            ("replays", Json::Num(self.replays as f64)),
+            ("replay_attempts", Json::Num(self.replay_attempts as f64)),
         ])
     }
 }
@@ -320,7 +327,8 @@ impl std::fmt::Display for ChaosOutcome {
         write!(
             f,
             "seed={} events={} requests={} ok={} failed={} lost={} mismatches={} \
-             reordered={} failovers={} handoffs={} spec_hits={} nodes={}..{}",
+             reordered={} failovers={} handoffs={} spec_hits={} replays={} attempts={} \
+             nodes={}..{}",
             self.seed,
             self.events,
             self.requests,
@@ -332,6 +340,8 @@ impl std::fmt::Display for ChaosOutcome {
             self.failovers,
             self.leader_handoffs,
             self.speculative_hits,
+            self.replays,
+            self.replay_attempts,
             self.min_nodes,
             self.max_nodes
         )
@@ -426,6 +436,8 @@ pub fn run_chaos(
         min_nodes: if ok == 0 { 0 } else { min_nodes },
         max_nodes,
         generations: stats.pipeline.map_or(0, |p| p.generations),
+        replays: stats.replayed_on_leader_loss + stats.replayed_on_dead_cluster,
+        replay_attempts: stats.replay_attempts,
     }
 }
 
@@ -506,6 +518,7 @@ mod tests {
             batch_window: Duration::ZERO,
             queue_depth: 32,
             pipeline_depth: 1,
+            ..ServeConfig::default()
         };
         let out = run_chaos(
             &model,

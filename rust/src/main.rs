@@ -362,6 +362,7 @@ fn cmd_serve(args: &Args) -> i32 {
         batch_window: std::time::Duration::from_millis(args.u64_or("window-ms", 2)),
         queue_depth: args.usize_or("queue", 128),
         pipeline_depth: args.usize_or("pipeline-depth", 1),
+        replay_budget: args.u64_or("replay-budget", 3) as u32,
     };
     // `--profile <stable|diurnal-drift|lossy-link|node-churn>` switches to
     // the elastic (condition-aware) serving path.

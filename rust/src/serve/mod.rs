@@ -45,10 +45,18 @@
 //! an elected leader (lowest surviving rank,
 //! [`crate::cluster::election::elect_leader`]); when the *leader* dies the
 //! flush becomes an abort instead of a drain: in-flight inferences — whose
-//! outputs lived on the dead gather owner — are failed explicitly and
-//! counted in [`RouterStats::failed_on_leader_loss`] (their response
-//! channels disconnect; nothing hangs and nothing is silently dropped),
-//! while queued requests re-admit under the new leader. In lockstep mode a
+//! outputs lived on the dead gather owner — are **captured with their
+//! admission order and re-executed on the rebuilt generation** (replay
+//! recovery, [`RouterStats::replayed_on_leader_loss`]). Replayed responses
+//! are bit-identical to what the dead generation would have produced
+//! (numerics are node-count- and leader-invariant) and stay in submission
+//! order, because orphans re-enter the new pipeline ahead of newly
+//! collected requests. Each request carries a bounded replay budget
+//! ([`ServeConfig::replay_budget`]); an orphan past its budget degrades to
+//! the pre-replay contract — failed explicitly and counted in
+//! [`RouterStats::failed_on_leader_loss`] (its response channel
+//! disconnects; nothing hangs and nothing is silently dropped). Queued
+//! requests re-admit under the new leader either way. In lockstep mode a
 //! leader loss costs nothing: batch boundaries never leave work in flight,
 //! so the next batch simply executes with the new leader at logical
 //! node 0.
@@ -66,8 +74,10 @@
 //! runs the identical lockstep exchange, the outputs are bit-identical to
 //! the in-process paths; a daemon death mid-batch surfaces as an explicit
 //! failed inference, the router reinstalls on the survivors
-//! ([`RouterStats::process_failovers`]) and retries, and only an
-//! unrecoverable cluster fails requests
+//! ([`RouterStats::process_failovers`]) and **replays the same input** on
+//! the rebuilt cluster ([`RouterStats::replayed_on_dead_cluster`], bounded
+//! by the same [`ServeConfig::replay_budget`]); only an exhausted budget
+//! or an unrecoverable cluster fails requests
 //! ([`RouterStats::failed_on_dead_cluster`]) — the same
 //! zero-silent-drop contract as every other path.
 
@@ -101,6 +111,11 @@ pub struct ServeConfig {
     /// up to this many submissions queued at its entry (each stage holds
     /// one more in flight).
     pub pipeline_depth: usize,
+    /// How many times one request may be re-executed after its inference
+    /// was aborted by a leader loss (pipelined path) or a member death
+    /// (process path). `0` restores the pre-replay behavior: every abort
+    /// is an explicit client-visible failure.
+    pub replay_budget: u32,
 }
 
 impl Default for ServeConfig {
@@ -110,6 +125,7 @@ impl Default for ServeConfig {
             batch_window: Duration::from_millis(2),
             queue_depth: 128,
             pipeline_depth: 1,
+            replay_budget: 3,
         }
     }
 }
@@ -174,12 +190,25 @@ pub struct RouterStats {
     /// [`Server::shutdown`] stopped the router before they were served.
     pub failed_on_shutdown: u64,
     /// Requests failed because the leader died with their inference in
-    /// flight: the gather owner holding their outputs is gone, so the
-    /// pipeline generation aborts and their response channels disconnect.
-    /// Requests still in the admission queue (or the batch being formed)
-    /// are *not* failed — they re-admit under the new leader. Zero on the
-    /// lockstep path, where batch boundaries never leave work in flight.
+    /// flight **and** their replay budget was already spent: the pipeline
+    /// generation aborts and their response channels disconnect. Requests
+    /// within budget are replayed instead (see
+    /// [`RouterStats::replayed_on_leader_loss`]); requests still in the
+    /// admission queue (or the batch being formed) are never failed — they
+    /// re-admit under the new leader. Zero on the lockstep path, where
+    /// batch boundaries never leave work in flight.
     pub failed_on_leader_loss: u64,
+    /// Requests whose in-flight inference was aborted by a leader loss and
+    /// re-executed on the rebuilt pipeline generation (counted once per
+    /// request) — the client sees nothing but added latency.
+    pub replayed_on_leader_loss: u64,
+    /// Process mode: requests that completed only after at least one
+    /// replay on a reinstalled cluster (a member died mid-inference).
+    pub replayed_on_dead_cluster: u64,
+    /// Total re-executions performed across all requests (a request
+    /// replayed twice counts twice) — the replay path's work, off the
+    /// client's books.
+    pub replay_attempts: u64,
     /// Present on the elastic path: replan/cache/failover counters. On the
     /// pipelined path `checks` counts frontend consultations, which happen
     /// once per drained generation rather than per batch.
@@ -356,13 +385,25 @@ fn collect_batch(rx: &Receiver<Request>, cfg: &ServeConfig) -> Option<Vec<Reques
 
 /// Top a started batch up to `max_batch`, waiting out the batch window.
 fn fill_batch(rx: &Receiver<Request>, cfg: &ServeConfig, batch: &mut Vec<Request>) {
-    let deadline = Instant::now() + cfg.batch_window;
-    while batch.len() < cfg.max_batch {
-        let now = Instant::now();
-        if now >= deadline {
+    fill_batch_until(rx, cfg.max_batch, Instant::now() + cfg.batch_window, batch)
+}
+
+/// Top a started batch up to `max_batch` until `deadline` — which may
+/// already lie in the past (saturating duration math: `deadline - now`
+/// panics when `now` has passed it, and a router must never die to a
+/// scheduling hiccup between the clock reads).
+fn fill_batch_until(
+    rx: &Receiver<Request>,
+    max_batch: usize,
+    deadline: Instant,
+    batch: &mut Vec<Request>,
+) {
+    while batch.len() < max_batch {
+        let remaining = deadline.saturating_duration_since(Instant::now());
+        if remaining.is_zero() {
             break;
         }
-        match rx.recv_timeout(deadline - now) {
+        match rx.recv_timeout(remaining) {
             Ok(r) => batch.push(r),
             Err(_) => break,
         }
@@ -515,10 +556,13 @@ fn router_lockstep(
 }
 
 /// Lockstep router over a wire-attached daemon cluster. Per request: run
-/// it on the cluster; an explicit failure (daemon death, deadline) bans
-/// the culprit, reinstalls the plan on the survivors and retries — the
-/// retry is bit-identical, because the numerics are node-count-invariant.
-/// Requests fail (channels disconnect) only when the cluster itself is
+/// it with replay recovery
+/// ([`crate::transport::coord::ProcessCluster::infer_with_recovery`]) — an
+/// explicit failure (daemon death, deadline) bans the culprit, reinstalls
+/// the plan on the survivors and re-executes the same input, up to
+/// [`ServeConfig::replay_budget`] replays. The replay is bit-identical,
+/// because the numerics are node-count-invariant. Requests fail (channels
+/// disconnect) only when the budget is exhausted or the cluster itself is
 /// unrecoverable.
 fn router_process(
     rx: Receiver<Request>,
@@ -526,7 +570,7 @@ fn router_process(
     mut cluster: crate::transport::coord::ProcessCluster,
     stop: &AtomicBool,
 ) -> RouterStats {
-    use crate::transport::coord::InferOutcome;
+    use crate::transport::coord::RecoveryOutcome;
     let mut stats = RouterStats::default();
     let mut next_seq = 0u64;
     let mut cluster_dead = false;
@@ -539,33 +583,24 @@ fn router_process(
         let service_start = Instant::now();
 
         for req in batch {
-            let mut outcome: Option<Tensor> = None;
-            // bounded: each named death shrinks the member set, and
-            // unattributed failures (deadlines) get a few chances before
-            // the request fails explicitly
-            let mut retries = cluster.nodes() + 3;
-            while !cluster_dead && retries > 0 {
-                retries -= 1;
-                match cluster.infer(&req.input) {
-                    Ok(InferOutcome::Done(run)) => {
-                        outcome = Some(run.output);
-                        break;
-                    }
-                    Ok(InferOutcome::Failed { dead, .. }) => {
-                        stats.process_failovers += 1;
-                        if cluster.reinstall(dead).is_err() {
-                            cluster_dead = true; // no survivors — fail the rest
-                        }
-                    }
-                    Err(_) => cluster_dead = true,
-                }
+            if cluster_dead {
+                // dropping `req` drops its response sender: an explicit,
+                // observable failure
+                stats.failed_on_dead_cluster += 1;
+                continue;
             }
-            match outcome {
-                Some(output) => {
+            let report = cluster.infer_with_recovery(&req.input, cfg.replay_budget);
+            stats.process_failovers += report.failovers as u64;
+            stats.replay_attempts += report.replays as u64;
+            match report.outcome {
+                RecoveryOutcome::Done(run) => {
+                    if report.replays > 0 {
+                        stats.replayed_on_dead_cluster += 1;
+                    }
                     let seq = next_seq;
                     next_seq += 1;
                     let _ = req.resp.send(Response {
-                        output,
+                        output: run.output,
                         queued: service_start.duration_since(req.enqueued),
                         service: service_start.elapsed(),
                         // no simulated testbed under this path
@@ -576,9 +611,13 @@ fn router_process(
                         seq,
                     });
                 }
-                // dropping `req` drops its response sender: an explicit,
-                // observable failure
-                None => stats.failed_on_dead_cluster += 1,
+                // budget spent: the cluster is rebuilt and healthy, but
+                // this request degrades to the explicit-failure contract
+                RecoveryOutcome::Exhausted => stats.failed_on_dead_cluster += 1,
+                RecoveryOutcome::Dead => {
+                    cluster_dead = true; // no survivors — fail the rest
+                    stats.failed_on_dead_cluster += 1;
+                }
             }
         }
         if stop.load(Ordering::Acquire) {
@@ -591,8 +630,10 @@ fn router_process(
 }
 
 /// Bookkeeping for one request inside the pipeline, completed in FIFO
-/// order as completions stream out.
+/// order as completions stream out. Carries its input so an inference
+/// aborted by a leader loss can be re-executed on the rebuilt generation.
 struct Pending {
+    input: Tensor,
     resp: Sender<Response>,
     enqueued: Instant,
     submitted: Instant,
@@ -600,6 +641,8 @@ struct Pending {
     nodes: usize,
     leader: usize,
     virtual_time: f64,
+    /// Re-executions already spent on this request.
+    replays: u32,
 }
 
 fn complete_front(pending: &mut VecDeque<Pending>, c: Completion, next_seq: &mut u64) {
@@ -641,31 +684,30 @@ fn drain_generation(
 
 /// Abort one pipeline generation whose leader died: in-flight completions
 /// are discarded (their outputs lived on the dead gather owner) and the
-/// requests behind them failed explicitly — dropping each [`Pending`]
-/// drops its response sender, so every submitter observes a disconnect,
-/// never a hang, and the count rides on
-/// [`RouterStats::failed_on_leader_loss`]. `stats.items` in the summary
-/// counts only the completions this generation actually delivered.
+/// requests behind them **captured in admission order** for replay on the
+/// rebuilt generation — the router re-submits them ahead of new work, so
+/// their responses stay in submission order. Nothing is failed here;
+/// budget enforcement happens at re-submission. `stats.items` in the
+/// summary counts only the completions this generation actually delivered.
 fn abort_generation(
     pipe: BlockPipeline,
     pending: &mut VecDeque<Pending>,
-    stats: &mut RouterStats,
     summary: &mut PipelineSummary,
-) {
+) -> VecDeque<Pending> {
     let (aborted, pstats) = pipe.abort();
     debug_assert_eq!(
         aborted as usize,
         pending.len(),
         "abort accounting diverged from the pending queue"
     );
-    stats.failed_on_leader_loss += pending.len() as u64;
-    pending.clear();
+    let orphans = std::mem::take(pending);
     summary.absorb(
         pstats.stages.len(),
         pstats.items,
         pstats.occupancy(),
         pstats.bottleneck_stage(),
     );
+    orphans
 }
 
 fn router_pipelined(
@@ -692,6 +734,10 @@ fn router_pipelined(
         stats.batches += 1;
         stats.max_batch_seen = stats.max_batch_seen.max(batch.len());
 
+        // In-flight requests orphaned by a leader-loss abort this
+        // boundary, waiting to be replayed on the rebuilt generation.
+        let mut orphans: VecDeque<Pending> = VecDeque::new();
+
         // Generation boundary: start (or drain-and-flush) the pipeline.
         match &mut source {
             PlanSource::Static { plan, nodes, virtual_time } => {
@@ -714,13 +760,12 @@ fn router_pipelined(
                         if fe.leader_lost(*vt, gen_leader) {
                             // The generation's leader died: the gather owner
                             // holding every in-flight output is gone, so
-                            // those inferences cannot complete. Fail them
-                            // explicitly (their response channels
-                            // disconnect) and rebuild under the new leader
-                            // below; the batch just collected — and
-                            // everything still in the admission queue —
-                            // re-admits into the new generation untouched.
-                            abort_generation(running, &mut pending, &mut stats, &mut summary);
+                            // those inferences cannot complete *here*.
+                            // Capture them for replay on the generation
+                            // rebuilt under the new leader below; the batch
+                            // just collected — and everything still in the
+                            // admission queue — re-admits untouched.
+                            orphans = abort_generation(running, &mut pending, &mut summary);
                         } else {
                             // Ordinary drain-and-flush: finish every
                             // in-flight inference under the old plan, then
@@ -750,11 +795,41 @@ fn router_pipelined(
         }
 
         let p = pipe.as_mut().expect("generation pipeline running");
+
+        // Replay recovery: re-execute the aborted generation's in-flight
+        // requests on the rebuilt one — oldest first, ahead of the batch
+        // just collected, so responses keep submission order and stay
+        // bit-identical (numerics are node-count- and leader-invariant).
+        // An orphan past its budget degrades to the pre-replay contract:
+        // dropping it disconnects its response channel, an explicit
+        // client-visible failure.
+        for orphan in orphans {
+            if orphan.replays >= cfg.replay_budget {
+                stats.failed_on_leader_loss += 1;
+                continue;
+            }
+            p.submit(orphan.input.clone());
+            stats.replay_attempts += 1;
+            if orphan.replays == 0 {
+                stats.replayed_on_leader_loss += 1; // count requests once
+            }
+            pending.push_back(Pending {
+                submitted: Instant::now(),
+                nodes: gen_nodes,
+                leader: gen_leader,
+                virtual_time: gen_cost,
+                replays: orphan.replays + 1,
+                ..orphan
+            });
+        }
+
         let batch_size = batch.len();
         let submitted = Instant::now();
         for req in batch {
-            p.submit(req.input); // blocks on backpressure past pipeline_depth
+            // blocks on backpressure past pipeline_depth
+            p.submit(req.input.clone());
             pending.push_back(Pending {
+                input: req.input,
                 resp: req.resp,
                 enqueued: req.enqueued,
                 submitted,
@@ -762,6 +837,7 @@ fn router_pipelined(
                 nodes: gen_nodes,
                 leader: gen_leader,
                 virtual_time: gen_cost,
+                replays: 0,
             });
             stats.requests += 1;
         }
@@ -874,6 +950,24 @@ mod tests {
     }
 
     #[test]
+    fn expired_batch_deadline_stops_the_fill_without_panicking() {
+        // regression: the fill used `deadline - now`, which panics when the
+        // router thread is scheduled past the deadline between the two
+        // clock reads; saturating math must just stop the fill instead —
+        // leaving the waiting request for the next batch, not crashing
+        let (tx, rx) = channel::<Request>();
+        let (resp, _keep) = channel();
+        let stale = Instant::now();
+        std::thread::sleep(Duration::from_millis(5));
+        tx.send(Request { input: Tensor::random(2, 2, 1, 1), enqueued: Instant::now(), resp })
+            .unwrap();
+        let mut batch = Vec::new();
+        fill_batch_until(&rx, 8, stale, &mut batch);
+        assert!(batch.is_empty(), "an expired window must admit nothing");
+        assert!(rx.try_recv().is_ok(), "the queued request stays admitted for the next batch");
+    }
+
+    #[test]
     fn backpressure_when_queue_full() {
         let cfg = ServeConfig {
             max_batch: 1,
@@ -971,6 +1065,7 @@ mod tests {
             batch_window: Duration::ZERO,
             queue_depth: 32,
             pipeline_depth: 4,
+            ..ServeConfig::default()
         };
         let (server, model) = setup(cfg);
         let ws = WeightStore::for_model(&model, 5);
@@ -1008,6 +1103,7 @@ mod tests {
             batch_window: Duration::ZERO,
             queue_depth: 32,
             pipeline_depth: 3,
+            ..ServeConfig::default()
         };
         let server = Server::start_elastic(
             model.clone(),

@@ -30,7 +30,7 @@ use crate::model::Model;
 use crate::partition::Plan;
 use crate::transport::codec::{Frame, RegistryEntry, WireMsg, CTL_NODE};
 use crate::transport::tcp::{self, Stream};
-use crate::transport::{registry, TransportError};
+use crate::transport::{registry, RetryPolicy, TransportError};
 
 enum CtlEvent {
     Ready {
@@ -74,6 +74,30 @@ pub enum InferOutcome {
     Failed { seq: u64, dead: Option<u32> },
 }
 
+/// How one [`ProcessCluster::infer_with_recovery`] request ended.
+#[derive(Debug)]
+pub enum RecoveryOutcome {
+    /// Completed — possibly only after replays on a rebuilt cluster.
+    Done(ProcessRun),
+    /// The replay budget ran out; the cluster is rebuilt and healthy, but
+    /// this request is explicitly failed (today's pre-replay behavior).
+    Exhausted,
+    /// The cluster could not be rebuilt at all — no surviving daemons, or
+    /// the coordinator's own channel tore.
+    Dead,
+}
+
+/// [`ProcessCluster::infer_with_recovery`]'s audit trail: what it took to
+/// reach the outcome.
+#[derive(Debug)]
+pub struct RecoveryReport {
+    pub outcome: RecoveryOutcome,
+    /// Re-executions beyond the request's first attempt.
+    pub replays: u32,
+    /// Reinstalls (registry re-resolve + re-election) performed.
+    pub failovers: u32,
+}
+
 struct Member {
     entry: RegistryEntry,
     writer: Stream,
@@ -95,6 +119,8 @@ pub struct ProcessCluster {
     pub infer_deadline: Duration,
     /// Bound on plan installation (mesh bring-up included).
     pub ready_deadline: Duration,
+    /// Control-plane retry policy: registry resolves and member dials.
+    pub retry: RetryPolicy,
 }
 
 impl ProcessCluster {
@@ -120,6 +146,7 @@ impl ProcessCluster {
             banned: BTreeSet::new(),
             infer_deadline: Duration::from_secs(60),
             ready_deadline: Duration::from_secs(30),
+            retry: RetryPolicy { deadline: Duration::from_secs(5), ..RetryPolicy::default() },
         })
     }
 
@@ -163,7 +190,7 @@ impl ProcessCluster {
         let plan = self.plan.clone().unwrap();
 
         'attempt: for attempt in 0..5 {
-            let mut entries = registry::resolve(&self.registry)?;
+            let mut entries = registry::resolve_with(&self.retry, &self.registry)?;
             entries.retain(|e| !self.banned.contains(&e.node));
             if entries.is_empty() {
                 return Err(TransportError::Protocol("no surviving daemons".into()));
@@ -254,7 +281,9 @@ impl ProcessCluster {
     }
 
     fn dial(&self, e: &RegistryEntry) -> Result<Member, TransportError> {
-        let writer = tcp::connect_retry(&e.ctl_addr, Duration::from_secs(5))?;
+        let writer = self
+            .retry
+            .run("coord.dial", |_| tcp::connect_retry(&e.ctl_addr, self.retry.deadline))?;
         let reader = writer.try_clone()?;
         spawn_ctl_reader(reader, e.node, self.events_tx.clone());
         Ok(Member { entry: e.clone(), writer })
@@ -314,6 +343,52 @@ impl ProcessCluster {
                 Ok(_) | Err(RecvTimeoutError::Timeout) => {}
                 Err(RecvTimeoutError::Disconnected) => {
                     return Err(TransportError::Protocol("event channel closed".into()));
+                }
+            }
+        }
+    }
+
+    /// Serve one inference with replay recovery: an explicit failure
+    /// triggers a reinstall (banning the culprit when named — the PR 6
+    /// failover path) followed by a **re-execution of the same input** on
+    /// the rebuilt cluster, up to `budget` replays. Numerics are
+    /// node-count-invariant, so a replayed output is bit-identical to what
+    /// the original cluster would have produced. When the budget runs out
+    /// the request degrades to today's explicit-failure contract — the
+    /// cluster is still rebuilt for the next request, and nothing is ever
+    /// silently dropped.
+    pub fn infer_with_recovery(&mut self, input: &Tensor, budget: u32) -> RecoveryReport {
+        let mut replays = 0u32;
+        let mut failovers = 0u32;
+        loop {
+            match self.infer(input) {
+                Ok(InferOutcome::Done(run)) => {
+                    return RecoveryReport {
+                        outcome: RecoveryOutcome::Done(run),
+                        replays,
+                        failovers,
+                    };
+                }
+                Ok(InferOutcome::Failed { dead, .. }) => {
+                    failovers += 1;
+                    if self.reinstall(dead).is_err() {
+                        return RecoveryReport {
+                            outcome: RecoveryOutcome::Dead,
+                            replays,
+                            failovers,
+                        };
+                    }
+                    if replays >= budget {
+                        return RecoveryReport {
+                            outcome: RecoveryOutcome::Exhausted,
+                            replays,
+                            failovers,
+                        };
+                    }
+                    replays += 1;
+                }
+                Err(_) => {
+                    return RecoveryReport { outcome: RecoveryOutcome::Dead, replays, failovers };
                 }
             }
         }

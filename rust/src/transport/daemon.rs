@@ -32,8 +32,9 @@ use crate::model::Model;
 use crate::partition::inflate::BlockGeometry;
 use crate::partition::Scheme;
 use crate::transport::codec::{Frame, WireMsg, CTL_NODE};
+use crate::transport::fault::{FaultExchange, FaultSchedule};
 use crate::transport::tcp::{self, TcpExchange, TcpOpts};
-use crate::transport::{registry, TransportError};
+use crate::transport::{registry, RetryPolicy, TransportError};
 
 /// Daemon configuration.
 #[derive(Debug, Clone)]
@@ -50,6 +51,12 @@ pub struct DaemonOpts {
     pub speed: f64,
     /// Socket-fabric timing knobs.
     pub tcp: TcpOpts,
+    /// Retry policy for registry RPCs (boot registration, lease renewal).
+    pub retry: RetryPolicy,
+    /// Wire-fault schedule to replay against this daemon's data plane
+    /// (`None` = transparent). The send-op clock persists across plan
+    /// generations, so a schedule keeps advancing through failovers.
+    pub fault: Option<FaultSchedule>,
     /// Print a `READY node=… ctl=… data=…` line on boot — process
     /// supervisors (tests, `flexpie-ctl`) wait for it.
     pub announce: bool,
@@ -64,6 +71,8 @@ impl DaemonOpts {
             data_bind: "tcp:127.0.0.1:0".into(),
             speed: 1.0,
             tcp: TcpOpts::default(),
+            retry: registry::rpc_policy(),
+            fault: None,
             announce: false,
         }
     }
@@ -80,7 +89,9 @@ struct Generation {
     weights: WeightStore,
     blocks: Vec<(usize, usize, Scheme)>,
     geos: Vec<BlockGeometry>,
-    ex: TcpExchange,
+    /// The socket mesh, behind the wire-fault injector (transparent when
+    /// no schedule is configured).
+    ex: FaultExchange<TcpExchange>,
 }
 
 /// Run the daemon until a `Shutdown` frame (or an unrecoverable listener
@@ -88,7 +99,14 @@ struct Generation {
 pub fn run(opts: DaemonOpts) -> Result<(), TransportError> {
     let (ctl_l, ctl_addr) = tcp::listen(&opts.ctl_bind)?;
     let (data_l, data_addr) = tcp::listen(&opts.data_bind)?;
-    let ttl_ms = registry::register(&opts.registry, opts.node, &ctl_addr, &data_addr, opts.speed)?;
+    let ttl_ms = registry::register_with(
+        &opts.retry,
+        &opts.registry,
+        opts.node,
+        &ctl_addr,
+        &data_addr,
+        opts.speed,
+    )?;
 
     // renew the lease at ttl/3 — stopping (or dying) lets it expire, which
     // is exactly how the rest of the system learns we're gone
@@ -97,12 +115,13 @@ pub fn run(opts: DaemonOpts) -> Result<(), TransportError> {
         let stop = Arc::clone(&stop);
         let reg = opts.registry.clone();
         let node = opts.node;
+        let retry = opts.retry;
         let period = Duration::from_millis((ttl_ms / 3).max(10));
         std::thread::spawn(move || {
             while !stop.load(Ordering::SeqCst) {
                 std::thread::sleep(period);
-                if registry::renew(&reg, node).is_err() {
-                    break; // registry gone; nothing left to renew against
+                if registry::renew_with(&retry, &reg, node).is_err() {
+                    break; // registry stayed gone; nothing to renew against
                 }
             }
         });
@@ -125,6 +144,11 @@ fn control_loop(
     data_l: &tcp::Listener,
 ) -> Result<(), TransportError> {
     let mut gen: Option<Generation> = None;
+    // the wire-fault send-op clock: carried across plan generations so a
+    // replayed inference resumes where the aborted one stopped injecting
+    // (a one-shot fault fires once, a windowed fault expires) instead of
+    // rewinding to the same fault forever
+    let mut fault_base: u64 = 0;
     loop {
         // one coordinator at a time; when it disconnects, await the next
         let mut ctl = ctl_l.accept_blocking()?;
@@ -135,7 +159,11 @@ fn control_loop(
             };
             match frame.msg {
                 WireMsg::PlanInstall { leader: _, seed, model, plan, peers } => {
-                    gen = None; // tear the old mesh down before rebuilding
+                    // tear the old mesh down before rebuilding; bank its
+                    // fault clock first
+                    if let Some(g) = gen.take() {
+                        fault_base = g.ex.ops();
+                    }
                     let Some(rank) = peers.iter().position(|(id, _)| *id == opts.node) else {
                         continue; // not a member of this generation
                     };
@@ -144,6 +172,10 @@ fn control_loop(
                     let (blocks, geos) = crate::cluster::plan_geometry(&model, &plan, nodes);
                     match TcpExchange::connect(rank, &peers, data_l, frame.term, opts.tcp) {
                         Ok(ex) => {
+                            let schedule = Arc::new(
+                                opts.fault.clone().unwrap_or_else(|| FaultSchedule::none(nodes)),
+                            );
+                            let ex = FaultExchange::with_offset(ex, rank, schedule, fault_base);
                             gen = Some(Generation {
                                 term: frame.term,
                                 rank,
@@ -173,6 +205,9 @@ fn control_loop(
                         }
                         _ => true,
                     };
+                    if let Some(g) = gen.as_ref() {
+                        fault_base = g.ex.ops();
+                    }
                     if !ok {
                         gen = None;
                     }
@@ -184,6 +219,9 @@ fn control_loop(
                         }
                         _ => true,
                     };
+                    if let Some(g) = gen.as_ref() {
+                        fault_base = g.ex.ops();
+                    }
                     if !ok {
                         gen = None;
                     }
@@ -208,7 +246,7 @@ fn run_inference(
     ctl: &mut tcp::Stream,
     my_id: u32,
 ) -> bool {
-    g.ex.set_seq(seq);
+    g.ex.inner_mut().set_seq(seq);
     let res = crate::cluster::node_main(
         g.rank,
         g.nodes,

@@ -1,0 +1,802 @@
+//! Deterministic wire-fault injection — the transport-level sibling of
+//! [`crate::elastic::chaos`].
+//!
+//! PR 4's `ChaosSchedule` kills *nodes* at virtual-time boundaries; this
+//! module faults *frames*. A [`FaultSchedule`] is a pure function of
+//! `(nodes, seed, windows, window_ops)` that scripts wire faults — frame
+//! drop, delivery delay, duplication, payload corruption, one-way
+//! partition, slow-link throttle — against a per-sender **operation
+//! index**: the `k`-th `send` a node performs, counted across its whole
+//! lifetime. Indexing by operation rather than wall time is what makes the
+//! schedule replay identically on both fabrics: the lockstep protocol
+//! performs the same sends in the same order whether the fabric is
+//! [`crate::cluster::SimExchange`] channels or a
+//! [`crate::transport::tcp::TcpExchange`] socket mesh.
+//!
+//! [`FaultExchange`] wraps either fabric behind the same
+//! [`Exchange`] trait and applies the schedule on the send path:
+//!
+//! * **Drop** — the frame never reaches the peer; the receiver's bounded
+//!   wait surfaces a typed [`TransportError::Deadline`] (sim) or heartbeat
+//!   staleness (tcp), and the inference is retried by the replay layer.
+//! * **Corrupt** — the frame is encoded, one payload byte is flipped, and
+//!   the decode is attempted exactly as a receiver would: the FNV-1a
+//!   checksum catches it and the typed
+//!   [`CodecError::BadChecksum`] surfaces as a
+//!   [`TransportError::Codec`]. Corruption can *never* become wrong
+//!   numerics — the flipped frame is rejected before any tensor math.
+//! * **Duplicate** — a stray second copy of the frame is delivered tagged
+//!   for a phantom future boundary; the receiver's reordering buffer
+//!   absorbs it without displacing a real patch (extra frames are
+//!   tolerated, not trusted).
+//! * **Delay / SlowLink** — the send is stalled (one-shot / for a window
+//!   of ops); numerics are unaffected, only latency.
+//! * **PartitionTo** — every frame to one destination is dropped for a
+//!   window of ops: a one-way partition, detected exactly like drops.
+//!
+//! The injected op index keeps counting **across replays**: a retried
+//! inference starts where the aborted one left off, so a one-shot fault is
+//! not re-injected forever and a windowed fault expires after a bounded
+//! number of attempts. (The daemon persists the offset across plan
+//! generations for the same reason.)
+//!
+//! [`run_faulted`] is the in-process drill: it replays a schedule against
+//! a simulated mesh with bounded recv deadlines, re-executing faulted
+//! inferences under a replay budget and auditing the replay-layer
+//! invariant end to end — every request completes bit-identical to the
+//! single-node reference, or is explicitly failed once the budget is
+//! exhausted. Never a silent drop, never a diverged output.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::codec::{self, Frame, WireMsg};
+use super::{Exchange, TransportError};
+use crate::compute::{run_reference, PatchStore, RegionTensor, Tensor, WeightStore};
+use crate::model::Model;
+use crate::partition::Plan;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Boundary tag for duplicated frames: far beyond any real boundary, so
+/// receivers buffer the stray copy as "ahead" instead of letting it
+/// displace a real patch or trip the stale-message check.
+const DUP_BOUNDARY: usize = u32::MAX as usize;
+
+/// One injectable wire fault.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum WireFault {
+    /// The frame is silently lost.
+    Drop,
+    /// The frame is delivered after `micros` microseconds.
+    Delay { micros: u64 },
+    /// A second copy of the frame is delivered.
+    Duplicate,
+    /// One payload byte is flipped on the wire.
+    Corrupt,
+    /// Frames to `dst` are lost (one-way partition) for the event's span.
+    PartitionTo { dst: usize },
+    /// Every send is throttled by `micros` microseconds for the span.
+    SlowLink { micros: u64 },
+}
+
+impl WireFault {
+    fn kind(&self) -> &'static str {
+        match self {
+            WireFault::Drop => "drop",
+            WireFault::Delay { .. } => "delay",
+            WireFault::Duplicate => "duplicate",
+            WireFault::Corrupt => "corrupt",
+            WireFault::PartitionTo { .. } => "partition",
+            WireFault::SlowLink { .. } => "slow_link",
+        }
+    }
+}
+
+/// One scheduled fault: applies to sender `src`'s send operations with
+/// index in `[at, at + span)`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    pub src: usize,
+    /// First affected send-op index (absolute, lifetime-cumulative).
+    pub at: u64,
+    /// Number of consecutive ops affected (1 for one-shot faults).
+    pub span: u64,
+    pub fault: WireFault,
+}
+
+/// A deterministic wire-fault schedule for an `nodes`-sender cluster,
+/// indexed by per-sender send-operation count. Pure in
+/// `(nodes, seed, windows, window_ops)`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultSchedule {
+    pub nodes: usize,
+    pub seed: u64,
+    /// Ops per scheduling window.
+    pub window_ops: u64,
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultSchedule {
+    /// Generate a single-fault-per-window schedule over
+    /// `windows × window_ops` send operations. Window 0 always corrupts a
+    /// frame — every generated schedule proves the checksum path, the way
+    /// every `ChaosSchedule` strikes the leader. Later windows roll one of
+    /// the six faults or stay quiet; windowed faults (partition,
+    /// slow-link) never cross their window, so any op index is under at
+    /// most one fault.
+    pub fn generate(nodes: usize, seed: u64, windows: usize, window_ops: u64) -> FaultSchedule {
+        assert!(nodes >= 2, "wire faults need at least two endpoints");
+        assert!(windows >= 1 && window_ops >= 8, "degenerate fault window");
+        let mut rng = Rng::new(seed ^ 0x00fa_17a5_c4ed_0137);
+        let mut events = Vec::new();
+        for w in 0..windows as u64 {
+            let src = rng.below(nodes);
+            // keep the strike in the first half so windowed spans fit
+            let at = w * window_ops + rng.below((window_ops / 2) as usize) as u64;
+            let window_end = (w + 1) * window_ops;
+            let long_span = (window_ops / 4).max(1).min(window_end - at);
+            let roll = if w == 0 { 0.55 } else { rng.f64() };
+            let (fault, span) = if roll < 0.18 {
+                (WireFault::Drop, 1)
+            } else if roll < 0.36 {
+                (WireFault::Delay { micros: rng.range(200, 2000) as u64 }, 1)
+            } else if roll < 0.50 {
+                (WireFault::Duplicate, 1)
+            } else if roll < 0.68 {
+                (WireFault::Corrupt, 1)
+            } else if roll < 0.82 {
+                let dst = (src + 1 + rng.below(nodes - 1)) % nodes;
+                (WireFault::PartitionTo { dst }, long_span)
+            } else if roll < 0.92 {
+                (WireFault::SlowLink { micros: rng.range(50, 300) as u64 }, long_span)
+            } else {
+                continue; // quiet window
+            };
+            events.push(FaultEvent { src, at, span, fault });
+        }
+        FaultSchedule { nodes, seed, window_ops, events }
+    }
+
+    /// The empty schedule: a transparent [`FaultExchange`].
+    pub fn none(nodes: usize) -> FaultSchedule {
+        FaultSchedule { nodes, seed: 0, window_ops: u64::MAX, events: Vec::new() }
+    }
+
+    /// Number of scheduled fault events.
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Last op index any event covers (exclusive).
+    pub fn horizon_ops(&self) -> u64 {
+        self.events.iter().map(|e| e.at.saturating_add(e.span)).max().unwrap_or(0)
+    }
+
+    /// The fault (if any) governing sender `src`'s `op`-th send to `to`.
+    pub fn fault_for(&self, src: usize, to: usize, op: u64) -> Option<WireFault> {
+        self.events
+            .iter()
+            .find(|e| {
+                e.src == src
+                    && op >= e.at
+                    && op - e.at < e.span
+                    && match e.fault {
+                        WireFault::PartitionTo { dst } => dst == to,
+                        _ => true,
+                    }
+            })
+            .map(|e| e.fault)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let events: Vec<Json> = self
+            .events
+            .iter()
+            .map(|e| {
+                let mut fields = vec![
+                    ("kind", Json::Str(e.fault.kind().into())),
+                    ("src", Json::Num(e.src as f64)),
+                    ("at", Json::Num(e.at as f64)),
+                    ("span", Json::Num(e.span as f64)),
+                ];
+                match e.fault {
+                    WireFault::Delay { micros } | WireFault::SlowLink { micros } => {
+                        fields.push(("micros", Json::Num(micros as f64)));
+                    }
+                    WireFault::PartitionTo { dst } => {
+                        fields.push(("dst", Json::Num(dst as f64)));
+                    }
+                    _ => {}
+                }
+                Json::obj(fields)
+            })
+            .collect();
+        Json::obj(vec![
+            ("nodes", Json::Num(self.nodes as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("window_ops", Json::Num(self.window_ops as f64)),
+            ("events", Json::Arr(events)),
+        ])
+    }
+}
+
+/// What a [`FaultExchange`] actually injected — per-kind counters, summed
+/// across nodes and replays by the drill/daemon plumbing.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultLog {
+    pub drops: u64,
+    pub delays: u64,
+    pub dups: u64,
+    pub corrupts: u64,
+    pub partition_drops: u64,
+    pub throttled: u64,
+}
+
+impl FaultLog {
+    pub fn total(&self) -> u64 {
+        self.drops + self.delays + self.dups + self.corrupts + self.partition_drops + self.throttled
+    }
+
+    pub fn absorb(&mut self, other: &FaultLog) {
+        self.drops += other.drops;
+        self.delays += other.delays;
+        self.dups += other.dups;
+        self.corrupts += other.corrupts;
+        self.partition_drops += other.partition_drops;
+        self.throttled += other.throttled;
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("drops", Json::Num(self.drops as f64)),
+            ("delays", Json::Num(self.delays as f64)),
+            ("dups", Json::Num(self.dups as f64)),
+            ("corrupts", Json::Num(self.corrupts as f64)),
+            ("partition_drops", Json::Num(self.partition_drops as f64)),
+            ("throttled", Json::Num(self.throttled as f64)),
+        ])
+    }
+}
+
+/// A fault-injecting wrapper around either fabric. Send operations are
+/// counted (cumulatively, across replays — see the module docs) and the
+/// schedule consulted per op; the receive path is forwarded untouched,
+/// because every injected fault manifests at the receiver through the
+/// wire itself (a missing patch, a stray duplicate, a torn connection).
+pub struct FaultExchange<E: Exchange> {
+    inner: E,
+    node: usize,
+    schedule: Arc<FaultSchedule>,
+    ops: u64,
+    log: FaultLog,
+}
+
+impl<E: Exchange> FaultExchange<E> {
+    pub fn new(inner: E, node: usize, schedule: Arc<FaultSchedule>) -> FaultExchange<E> {
+        FaultExchange::with_offset(inner, node, schedule, 0)
+    }
+
+    /// Resume the op counter at `offset` — how replays and new plan
+    /// generations keep the fault clock moving instead of re-injecting
+    /// the same fault forever.
+    pub fn with_offset(
+        inner: E,
+        node: usize,
+        schedule: Arc<FaultSchedule>,
+        offset: u64,
+    ) -> FaultExchange<E> {
+        FaultExchange { inner, node, schedule, ops: offset, log: FaultLog::default() }
+    }
+
+    /// Cumulative send-op count (offset included).
+    pub fn ops(&self) -> u64 {
+        self.ops
+    }
+
+    /// What this wrapper injected since construction.
+    pub fn log(&self) -> FaultLog {
+        self.log
+    }
+
+    /// The wrapped fabric (e.g. to reach `TcpExchange::set_seq`).
+    pub fn inner_mut(&mut self) -> &mut E {
+        &mut self.inner
+    }
+
+    /// Model the on-wire corruption of `patch`'s frame: encode it exactly
+    /// as the tcp fabric would, flip one payload byte, and decode as the
+    /// receiver would. The FNV-1a checksum must reject it — the typed
+    /// error is returned in place of a delivery, so a corrupted frame can
+    /// never become wrong numerics.
+    fn corrupt(&self, boundary: usize, patch: RegionTensor, op: u64) -> TransportError {
+        let frame = Frame {
+            node: self.node as u32,
+            term: 0,
+            msg: WireMsg::Patch { seq: 0, boundary: boundary as u32, patch },
+        };
+        let mut bytes = codec::encode(&frame);
+        let payload_len = bytes.len() - codec::HEADER_LEN;
+        let pos = codec::HEADER_LEN + (op as usize % payload_len);
+        bytes[pos] ^= 0x01;
+        match codec::decode(&bytes) {
+            Err(e) => TransportError::Codec(e),
+            Ok(_) => TransportError::Protocol("corrupted frame decoded cleanly".into()),
+        }
+    }
+}
+
+impl<E: Exchange> Exchange for FaultExchange<E> {
+    fn send(
+        &mut self,
+        to: usize,
+        boundary: usize,
+        patch: RegionTensor,
+    ) -> Result<(), TransportError> {
+        let op = self.ops;
+        self.ops += 1;
+        match self.schedule.fault_for(self.node, to, op) {
+            None => self.inner.send(to, boundary, patch),
+            Some(WireFault::Drop) => {
+                self.log.drops += 1;
+                Ok(())
+            }
+            Some(WireFault::PartitionTo { .. }) => {
+                self.log.partition_drops += 1;
+                Ok(())
+            }
+            Some(WireFault::Delay { micros }) => {
+                self.log.delays += 1;
+                std::thread::sleep(Duration::from_micros(micros));
+                self.inner.send(to, boundary, patch)
+            }
+            Some(WireFault::SlowLink { micros }) => {
+                self.log.throttled += 1;
+                std::thread::sleep(Duration::from_micros(micros));
+                self.inner.send(to, boundary, patch)
+            }
+            Some(WireFault::Duplicate) => {
+                self.log.dups += 1;
+                self.inner.send(to, DUP_BOUNDARY, patch.clone())?;
+                self.inner.send(to, boundary, patch)
+            }
+            Some(WireFault::Corrupt) => {
+                self.log.corrupts += 1;
+                Err(self.corrupt(boundary, patch, op))
+            }
+        }
+    }
+
+    fn recv_for(
+        &mut self,
+        boundary: usize,
+        expect: usize,
+        store: &mut PatchStore,
+    ) -> Result<(), TransportError> {
+        self.inner.recv_for(boundary, expect, store)
+    }
+}
+
+/// Audit of one [`run_faulted`] drill.
+#[derive(Debug, Clone)]
+pub struct FaultDrillOutcome {
+    pub seed: u64,
+    /// Fault events the schedule scripted.
+    pub events: usize,
+    pub requests: u64,
+    /// Requests that completed (possibly after replays).
+    pub ok: u64,
+    /// Requests explicitly failed after the replay budget was exhausted.
+    pub failed: u64,
+    /// Re-executions performed (attempts beyond each request's first).
+    pub replay_attempts: u64,
+    /// Completed outputs that diverged from the reference. Must be 0.
+    pub mismatches: u64,
+    /// What the wrappers actually injected, all nodes and attempts summed.
+    pub injected: FaultLog,
+}
+
+impl FaultDrillOutcome {
+    /// The replay-layer invariant: every request is accounted for —
+    /// completed or explicitly failed — and no completed output ever
+    /// diverged. (Single-fault schedules with a sane budget additionally
+    /// expect `failed == 0`; callers assert that on top.)
+    pub fn verify(&self) -> Result<(), String> {
+        let mut errs = Vec::new();
+        if self.ok + self.failed != self.requests {
+            errs.push(format!(
+                "accounting hole: {} ok + {} failed != {} requests",
+                self.ok, self.failed, self.requests
+            ));
+        }
+        if self.mismatches != 0 {
+            errs.push(format!("{} outputs diverged from the reference", self.mismatches));
+        }
+        if errs.is_empty() {
+            Ok(())
+        } else {
+            Err(errs.join("; "))
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("seed", Json::Num(self.seed as f64)),
+            ("events", Json::Num(self.events as f64)),
+            ("requests", Json::Num(self.requests as f64)),
+            ("ok", Json::Num(self.ok as f64)),
+            ("failed", Json::Num(self.failed as f64)),
+            ("replay_attempts", Json::Num(self.replay_attempts as f64)),
+            ("mismatches", Json::Num(self.mismatches as f64)),
+            ("injected", self.injected.to_json()),
+        ])
+    }
+}
+
+impl std::fmt::Display for FaultDrillOutcome {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "seed={} events={} requests={} ok={} failed={} replays={} mismatches={} injected={}",
+            self.seed,
+            self.events,
+            self.requests,
+            self.ok,
+            self.failed,
+            self.replay_attempts,
+            self.mismatches,
+            self.injected.total()
+        )
+    }
+}
+
+/// Replay `schedule` against a simulated mesh: serve `requests`
+/// deterministic inputs through the lockstep protocol with every node's
+/// fabric wrapped in a [`FaultExchange`], re-executing any inference a
+/// fault aborts (up to `replay_budget` re-runs per request) and checking
+/// each completed output bit-for-bit against the single-node reference.
+/// `recv_deadline` bounds every blocked wait, so drops surface as typed
+/// deadline errors instead of hangs. Per-node op offsets persist across
+/// attempts — the drill-side twin of the daemon's cross-generation fault
+/// clock.
+#[allow(clippy::too_many_arguments)]
+pub fn run_faulted(
+    model: &Model,
+    plan: &Plan,
+    weights: &WeightStore,
+    schedule: &FaultSchedule,
+    requests: u64,
+    input_seed: u64,
+    replay_budget: u32,
+    recv_deadline: Duration,
+) -> FaultDrillOutcome {
+    let nodes = schedule.nodes;
+    let (blocks, geos) = crate::cluster::plan_geometry(model, plan, nodes);
+    let blocks = Arc::new(blocks);
+    let geos = Arc::new(geos);
+    let model = Arc::new(model.clone());
+    let weights = Arc::new(weights.clone());
+    let sched = Arc::new(schedule.clone());
+
+    let mut offsets = vec![0u64; nodes];
+    let mut injected = FaultLog::default();
+    let (mut ok, mut failed, mut replay_attempts, mut mismatches) = (0u64, 0u64, 0u64, 0u64);
+    let l0 = &model.layers[0];
+    for i in 0..requests {
+        let input = Tensor::random(l0.in_h, l0.in_w, l0.in_c, input_seed + i);
+        let reference = run_reference(&model, &weights, &input);
+        let mut done = false;
+        for attempt in 0..=replay_budget {
+            if attempt > 0 {
+                replay_attempts += 1;
+            }
+            let run = faulted_attempt(
+                &model,
+                &blocks,
+                &geos,
+                &weights,
+                &input,
+                &sched,
+                &mut offsets,
+                &mut injected,
+                recv_deadline,
+            );
+            if let Ok(output) = run {
+                if reference.max_abs_diff(&output) != 0.0 {
+                    mismatches += 1;
+                }
+                ok += 1;
+                done = true;
+                break;
+            }
+        }
+        if !done {
+            failed += 1;
+        }
+    }
+    FaultDrillOutcome {
+        seed: schedule.seed,
+        events: schedule.len(),
+        requests,
+        ok,
+        failed,
+        replay_attempts,
+        mismatches,
+        injected,
+    }
+}
+
+/// One lockstep inference over a fresh fault-wrapped simulated mesh.
+/// Always advances `offsets` and absorbs the injection log, success or
+/// not — the fault clock never rewinds.
+#[allow(clippy::too_many_arguments)]
+fn faulted_attempt(
+    model: &Arc<Model>,
+    blocks: &Arc<Vec<(usize, usize, crate::partition::Scheme)>>,
+    geos: &Arc<Vec<crate::partition::inflate::BlockGeometry>>,
+    weights: &Arc<WeightStore>,
+    input: &Tensor,
+    sched: &Arc<FaultSchedule>,
+    offsets: &mut [u64],
+    injected: &mut FaultLog,
+    recv_deadline: Duration,
+) -> Result<Tensor, TransportError> {
+    let nodes = sched.nodes;
+    let mesh = crate::cluster::sim_mesh(nodes, recv_deadline);
+    let mut handles = Vec::with_capacity(nodes);
+    for (node, ex) in mesh.into_iter().enumerate() {
+        let model = Arc::clone(model);
+        let blocks = Arc::clone(blocks);
+        let geos = Arc::clone(geos);
+        let weights = Arc::clone(weights);
+        let sched = Arc::clone(sched);
+        let input = (node == 0).then(|| input.clone());
+        let offset = offsets[node];
+        handles.push(std::thread::spawn(move || {
+            let mut ex = FaultExchange::with_offset(ex, node, sched, offset);
+            let r = crate::cluster::node_main(
+                node,
+                nodes,
+                &model,
+                &blocks,
+                &geos,
+                &weights,
+                input.as_ref(),
+                &mut ex,
+            );
+            (r, ex.ops(), ex.log())
+        }));
+    }
+    let mut output: Option<Tensor> = None;
+    let mut err: Option<TransportError> = None;
+    for (node, h) in handles.into_iter().enumerate() {
+        let (r, ops, log) = h.join().expect("fault-drill node thread panicked");
+        offsets[node] = ops;
+        injected.absorb(&log);
+        match r {
+            Ok(res) => {
+                if node == 0 {
+                    output = res.output;
+                }
+            }
+            Err(e) => err = Some(err.unwrap_or(e)),
+        }
+    }
+    match (output, err) {
+        (Some(t), None) => Ok(t),
+        (_, Some(e)) => Err(e),
+        (None, None) => Err(TransportError::Protocol("leader produced no output".into())),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::sim_mesh;
+    use crate::model::zoo;
+    use crate::partition::{Region, Scheme};
+
+    fn patch() -> RegionTensor {
+        let r = Region::new(0, 2, 0, 2, 0, 1);
+        RegionTensor::new(r, Tensor::random(2, 2, 1, 3))
+    }
+
+    fn one_event(src: usize, at: u64, span: u64, fault: WireFault) -> FaultSchedule {
+        FaultSchedule {
+            nodes: 2,
+            seed: 0,
+            window_ops: 64,
+            events: vec![FaultEvent { src, at, span, fault }],
+        }
+    }
+
+    #[test]
+    fn schedules_are_deterministic_and_seed_sensitive() {
+        let a = FaultSchedule::generate(3, 11, 6, 256);
+        let b = FaultSchedule::generate(3, 11, 6, 256);
+        assert_eq!(a, b);
+        let c = FaultSchedule::generate(3, 12, 6, 256);
+        assert_ne!(a.events, c.events, "different seeds must differ");
+        assert!(!a.is_empty());
+    }
+
+    #[test]
+    fn one_fault_per_window_and_spans_stay_inside() {
+        for seed in 0..10u64 {
+            let s = FaultSchedule::generate(4, seed, 8, 128);
+            let mut windows_hit = Vec::new();
+            for e in &s.events {
+                let w = e.at / s.window_ops;
+                assert_eq!((e.at + e.span - 1) / s.window_ops, w, "span crosses its window");
+                windows_hit.push(w);
+            }
+            let mut dedup = windows_hit.clone();
+            dedup.dedup();
+            assert_eq!(windows_hit, dedup, "two faults in one window (seed {seed})");
+            // window 0 always proves the checksum path
+            let first = s.events.first().expect("window 0 is never quiet");
+            assert_eq!(first.at / s.window_ops, 0);
+            assert_eq!(first.fault, WireFault::Corrupt);
+        }
+    }
+
+    #[test]
+    fn partition_only_applies_to_its_destination() {
+        let s = one_event(0, 4, 8, WireFault::PartitionTo { dst: 1 });
+        assert_eq!(s.fault_for(0, 1, 4), Some(WireFault::PartitionTo { dst: 1 }));
+        assert_eq!(s.fault_for(0, 1, 11), Some(WireFault::PartitionTo { dst: 1 }));
+        assert_eq!(s.fault_for(0, 1, 12), None, "window expired");
+        assert_eq!(s.fault_for(0, 0, 4), None, "other destinations unaffected");
+        assert_eq!(s.fault_for(1, 1, 4), None, "other senders unaffected");
+    }
+
+    #[test]
+    fn schedule_json_lists_every_event() {
+        let s = FaultSchedule::generate(3, 5, 6, 64);
+        let j = s.to_json();
+        assert_eq!(j.get("nodes").and_then(Json::as_usize), Some(3));
+        assert_eq!(j.get("window_ops").and_then(Json::as_usize), Some(64));
+        let events = j.get("events").and_then(Json::as_arr).unwrap();
+        assert_eq!(events.len(), s.len());
+        assert_eq!(events[0].get("kind").and_then(Json::as_str), Some("corrupt"));
+    }
+
+    #[test]
+    fn corrupt_frame_is_caught_by_checksum_on_sim_fabric() {
+        // the acceptance invariant, sim side: a corrupted frame surfaces
+        // as the typed checksum error — never delivered, never numerics
+        let mut mesh = sim_mesh(2, Duration::from_millis(50));
+        let sched = Arc::new(one_event(0, 0, 1, WireFault::Corrupt));
+        let mut ex = FaultExchange::new(mesh.remove(0), 0, Arc::clone(&sched));
+        let err = ex.send(1, 0, patch()).unwrap_err();
+        assert!(
+            matches!(err, TransportError::Codec(codec::CodecError::BadChecksum { .. })),
+            "expected BadChecksum, got {err:?}"
+        );
+        assert_eq!(ex.log().corrupts, 1);
+        // the very next op is past the one-shot fault: the retry is clean
+        ex.send(1, 0, patch()).unwrap();
+        let mut store = PatchStore::new();
+        mesh.remove(0).recv_for(0, 1, &mut store).unwrap();
+    }
+
+    #[test]
+    fn dropped_frame_surfaces_as_typed_deadline() {
+        let mut mesh = sim_mesh(2, Duration::from_millis(40));
+        let mut receiver = mesh.pop().unwrap();
+        let sched = Arc::new(one_event(0, 0, 1, WireFault::Drop));
+        let mut ex = FaultExchange::new(mesh.pop().unwrap(), 0, sched);
+        ex.send(1, 0, patch()).unwrap(); // injected: silently dropped
+        assert_eq!(ex.log().drops, 1);
+        let mut store = PatchStore::new();
+        let err = receiver.recv_for(0, 1, &mut store).unwrap_err();
+        assert_eq!(err, TransportError::Deadline { boundary: 0, got: 0, expect: 1 });
+    }
+
+    #[test]
+    fn duplicate_is_buffered_ahead_not_double_counted() {
+        let mut mesh = sim_mesh(2, Duration::from_millis(100));
+        let mut receiver = mesh.pop().unwrap();
+        let sched = Arc::new(one_event(0, 0, 1, WireFault::Duplicate));
+        let mut ex = FaultExchange::new(mesh.pop().unwrap(), 0, sched);
+        ex.send(1, 0, patch()).unwrap();
+        ex.send(1, 0, patch()).unwrap(); // clean second send
+        assert_eq!(ex.log().dups, 1);
+        // the receiver sees exactly the two real patches; the stray copy
+        // parks in the reorder buffer without tripping the stale check
+        let mut store = PatchStore::new();
+        receiver.recv_for(0, 2, &mut store).unwrap();
+        assert_eq!(store.patches.len(), 2);
+    }
+
+    #[test]
+    fn offsets_move_the_fault_clock_across_attempts() {
+        let s = one_event(0, 3, 1, WireFault::Drop);
+        let sched = Arc::new(s);
+        let mut mesh = sim_mesh(2, Duration::from_millis(20));
+        let mut ex = FaultExchange::with_offset(mesh.remove(0), 0, sched, 4);
+        ex.send(1, 0, patch()).unwrap();
+        assert_eq!(ex.log().drops, 0, "op 4 is past the fault at op 3");
+        assert_eq!(ex.ops(), 5);
+    }
+
+    #[test]
+    fn benign_faults_preserve_numerics_without_replay() {
+        // delays, throttles and duplicates never abort an inference —
+        // outputs must match the reference with zero replays
+        let model = zoo::edgenet(16);
+        let plan = Plan::uniform(Scheme::InH, model.n_layers());
+        let weights = WeightStore::for_model(&model, 5);
+        let schedule = FaultSchedule {
+            nodes: 3,
+            seed: 1,
+            window_ops: 64,
+            events: vec![
+                FaultEvent { src: 0, at: 1, span: 1, fault: WireFault::Delay { micros: 400 } },
+                FaultEvent { src: 1, at: 2, span: 1, fault: WireFault::Duplicate },
+                FaultEvent {
+                    src: 2,
+                    at: 4,
+                    span: 12,
+                    fault: WireFault::SlowLink { micros: 100 },
+                },
+            ],
+        };
+        let out =
+            run_faulted(&model, &plan, &weights, &schedule, 2, 700, 3, Duration::from_millis(400));
+        out.verify().expect("fault invariants violated");
+        assert_eq!(out.ok, 2, "benign faults must not fail requests: {out}");
+        assert_eq!(out.replay_attempts, 0, "benign faults must not trigger replay: {out}");
+        assert!(out.injected.total() >= 3, "schedule injected nothing: {out}");
+    }
+
+    #[test]
+    fn disruptive_faults_recover_through_replay() {
+        let model = zoo::edgenet(16);
+        let plan = Plan::uniform(Scheme::InH, model.n_layers());
+        let weights = WeightStore::for_model(&model, 5);
+        let schedule = FaultSchedule {
+            nodes: 3,
+            seed: 2,
+            window_ops: 64,
+            events: vec![
+                FaultEvent { src: 0, at: 0, span: 1, fault: WireFault::Corrupt },
+                FaultEvent { src: 1, at: 20, span: 1, fault: WireFault::Drop },
+            ],
+        };
+        let out =
+            run_faulted(&model, &plan, &weights, &schedule, 3, 800, 5, Duration::from_millis(250));
+        out.verify().expect("fault invariants violated");
+        assert_eq!(out.ok, 3, "single-fault windows must end with ok == requests: {out}");
+        assert!(out.replay_attempts >= 1, "disruptive faults must exercise replay: {out}");
+        assert_eq!(out.mismatches, 0);
+        assert!(out.injected.corrupts >= 1 && out.injected.drops >= 1, "{out}");
+    }
+
+    #[test]
+    fn exhausted_replay_budget_fails_explicitly() {
+        // a fault pinned to every op: no attempt can succeed, and the
+        // drill must degrade to explicit failure — the accounting
+        // invariant (ok + failed == requests) is exactly what the serving
+        // layer preserves when ITS budget runs out
+        let model = zoo::edgenet(16);
+        let plan = Plan::uniform(Scheme::InH, model.n_layers());
+        let weights = WeightStore::for_model(&model, 5);
+        let schedule = FaultSchedule {
+            nodes: 3,
+            seed: 3,
+            window_ops: 64,
+            events: vec![FaultEvent { src: 0, at: 0, span: u64::MAX, fault: WireFault::Corrupt }],
+        };
+        let out =
+            run_faulted(&model, &plan, &weights, &schedule, 2, 900, 1, Duration::from_millis(150));
+        out.verify().expect("accounting must hold even at budget exhaustion");
+        assert_eq!(out.ok, 0);
+        assert_eq!(out.failed, 2);
+        assert_eq!(out.replay_attempts, 2, "one replay per request at budget 1");
+    }
+}

@@ -29,8 +29,11 @@
 pub mod codec;
 pub mod coord;
 pub mod daemon;
+pub mod fault;
 pub mod registry;
 pub mod tcp;
+
+use std::time::Duration;
 
 use crate::compute::{PatchStore, RegionTensor};
 
@@ -103,4 +106,143 @@ pub trait Exchange {
         expect: usize,
         store: &mut PatchStore,
     ) -> Result<(), TransportError>;
+}
+
+/// The one retry/timeout/backoff policy for control-plane calls — registry
+/// RPCs, coordinator dials, daemon boot registration. Before PR 7 every
+/// call site hard-coded its own constants (a 5 s dial here, a 5 s RPC
+/// deadline there, no retries anywhere); now they all run through
+/// [`RetryPolicy::run`], so timeouts are tuned in one place and transient
+/// unreachability (a registry that comes up a beat after its daemons, a
+/// peer mid-restart) is absorbed instead of fatal.
+///
+/// Backoff doubles from `base_backoff` up to `max_backoff`, with
+/// deterministic jitter: the jitter stream is seeded by
+/// `seed ^ fnv1a(label)`, so a given call site retries at reproducible
+/// offsets (replayable in tests) while distinct call sites desynchronize.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetryPolicy {
+    /// Total attempts (first try included). Clamped to at least 1.
+    pub attempts: u32,
+    /// Sleep before the first retry; doubles per retry.
+    pub base_backoff: Duration,
+    /// Backoff ceiling.
+    pub max_backoff: Duration,
+    /// Per-attempt deadline, handed to whatever dial/roundtrip the
+    /// attempt performs.
+    pub deadline: Duration,
+    /// Jitter seed (combined with the call-site label).
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy {
+            attempts: 3,
+            base_backoff: Duration::from_millis(20),
+            max_backoff: Duration::from_millis(250),
+            deadline: Duration::from_secs(2),
+            seed: 0x7e11_ab1e,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Run `op` up to `attempts` times, sleeping a jittered, doubling
+    /// backoff between attempts. `op` receives the attempt index (0-based)
+    /// and should bound its own blocking by [`RetryPolicy::deadline`].
+    /// Returns the first success, or the last error once attempts are
+    /// exhausted.
+    pub fn run<T>(
+        &self,
+        label: &str,
+        mut op: impl FnMut(u32) -> Result<T, TransportError>,
+    ) -> Result<T, TransportError> {
+        let attempts = self.attempts.max(1);
+        let mut rng = crate::util::rng::Rng::new(self.seed ^ codec::fnv1a(label.as_bytes()) as u64);
+        let mut backoff = self.base_backoff;
+        let mut last = TransportError::Protocol(format!("{label}: no attempt ran"));
+        for attempt in 0..attempts {
+            match op(attempt) {
+                Ok(v) => return Ok(v),
+                Err(e) => last = e,
+            }
+            if attempt + 1 < attempts {
+                std::thread::sleep(backoff.mul_f64(rng.range_f64(0.5, 1.5)));
+                backoff = (backoff * 2).min(self.max_backoff);
+            }
+        }
+        Err(last)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast_policy() -> RetryPolicy {
+        RetryPolicy {
+            attempts: 4,
+            base_backoff: Duration::from_millis(1),
+            max_backoff: Duration::from_millis(4),
+            deadline: Duration::from_millis(50),
+            ..RetryPolicy::default()
+        }
+    }
+
+    #[test]
+    fn retry_succeeds_after_transient_failures() {
+        let mut calls = 0u32;
+        let out = fast_policy().run("test-rpc", |attempt| {
+            calls += 1;
+            assert_eq!(attempt, calls - 1);
+            if attempt < 2 {
+                Err(TransportError::Io("connection refused".into()))
+            } else {
+                Ok(attempt)
+            }
+        });
+        assert_eq!(out, Ok(2));
+        assert_eq!(calls, 3, "succeeded on the third attempt, then stopped");
+    }
+
+    #[test]
+    fn retry_exhaustion_returns_the_last_error() {
+        let mut calls = 0u32;
+        let out: Result<(), _> = fast_policy().run("test-rpc", |attempt| {
+            calls += 1;
+            Err(TransportError::Io(format!("refused on attempt {attempt}")))
+        });
+        assert_eq!(calls, 4, "all attempts consumed");
+        assert_eq!(out, Err(TransportError::Io("refused on attempt 3".into())));
+    }
+
+    #[test]
+    fn zero_attempts_still_runs_once() {
+        let mut calls = 0u32;
+        let out = RetryPolicy { attempts: 0, ..fast_policy() }.run("test-rpc", |_| {
+            calls += 1;
+            Ok(7u32)
+        });
+        assert_eq!(out, Ok(7));
+        assert_eq!(calls, 1);
+    }
+
+    #[test]
+    fn jitter_is_deterministic_per_label() {
+        // same seed + label → identical jitter stream; different labels
+        // desynchronize. Probe the stream directly rather than timing
+        // sleeps (wall-clock assertions flake under CI load).
+        let p = RetryPolicy::default();
+        let stream = |label: &str| {
+            let mut rng =
+                crate::util::rng::Rng::new(p.seed ^ codec::fnv1a(label.as_bytes()) as u64);
+            (0..4).map(|_| rng.range_f64(0.5, 1.5)).collect::<Vec<_>>()
+        };
+        assert_eq!(stream("registry.register"), stream("registry.register"));
+        assert_ne!(stream("registry.register"), stream("coord.dial"));
+        for j in stream("registry.register") {
+            assert!((0.5..1.5).contains(&j));
+        }
+    }
 }

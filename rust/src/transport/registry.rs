@@ -19,10 +19,18 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::transport::codec::{Frame, RegistryEntry, WireMsg, CTL_NODE};
-use crate::transport::{tcp, TransportError};
+use crate::transport::{tcp, RetryPolicy, TransportError};
 
 /// Deadline for one registry RPC round trip.
 const RPC_DEADLINE: Duration = Duration::from_secs(5);
+
+/// The default policy for registry RPCs: a few attempts with jittered
+/// backoff, each bounded by the classic 5 s round-trip deadline. The
+/// convenience wrappers ([`register`]/[`renew`]/[`resolve`]) use this; the
+/// daemon threads its own [`RetryPolicy`] through the `_with` variants.
+pub fn rpc_policy() -> RetryPolicy {
+    RetryPolicy { deadline: RPC_DEADLINE, ..RetryPolicy::default() }
+}
 
 struct Row {
     ctl_addr: String,
@@ -134,6 +142,20 @@ pub fn register(
     data_addr: &str,
     speed: f64,
 ) -> Result<u64, TransportError> {
+    register_with(&rpc_policy(), registry, node, ctl_addr, data_addr, speed)
+}
+
+/// [`register`] under an explicit [`RetryPolicy`] — each attempt is one
+/// fresh connect + round trip, so a registry that comes up a beat after
+/// its daemons is absorbed instead of fatal.
+pub fn register_with(
+    policy: &RetryPolicy,
+    registry: &str,
+    node: u32,
+    ctl_addr: &str,
+    data_addr: &str,
+    speed: f64,
+) -> Result<u64, TransportError> {
     let req = Frame {
         node,
         term: 0,
@@ -143,37 +165,59 @@ pub fn register(
             speed,
         },
     };
-    match tcp::roundtrip(registry, &req, RPC_DEADLINE)?.msg {
-        WireMsg::RegisterOk { ttl_ms } => Ok(ttl_ms),
-        other => Err(TransportError::Protocol(format!(
-            "registry answered Register with type {}",
-            other.kind()
-        ))),
-    }
+    policy.run("registry.register", |_| {
+        match tcp::roundtrip(registry, &req, policy.deadline)?.msg {
+            WireMsg::RegisterOk { ttl_ms } => Ok(ttl_ms),
+            other => Err(TransportError::Protocol(format!(
+                "registry answered Register with type {}",
+                other.kind()
+            ))),
+        }
+    })
 }
 
 /// Renew a daemon's lease.
 pub fn renew(registry: &str, node: u32) -> Result<(), TransportError> {
+    renew_with(&rpc_policy(), registry, node)
+}
+
+/// [`renew`] under an explicit [`RetryPolicy`]. A renewal that misses all
+/// its attempts is reported — the caller decides whether the lease is
+/// worth keeping alive (the daemon gives up only when the registry stays
+/// gone).
+pub fn renew_with(policy: &RetryPolicy, registry: &str, node: u32) -> Result<(), TransportError> {
     let req = Frame { node, term: 0, msg: WireMsg::Renew };
-    match tcp::roundtrip(registry, &req, RPC_DEADLINE)?.msg {
-        WireMsg::RenewOk => Ok(()),
-        other => Err(TransportError::Protocol(format!(
-            "registry answered Renew with type {}",
-            other.kind()
-        ))),
-    }
+    policy.run("registry.renew", |_| {
+        match tcp::roundtrip(registry, &req, policy.deadline)?.msg {
+            WireMsg::RenewOk => Ok(()),
+            other => Err(TransportError::Protocol(format!(
+                "registry answered Renew with type {}",
+                other.kind()
+            ))),
+        }
+    })
 }
 
 /// The live (lease-unexpired) peer set, sorted by node id.
 pub fn resolve(registry: &str) -> Result<Vec<RegistryEntry>, TransportError> {
+    resolve_with(&rpc_policy(), registry)
+}
+
+/// [`resolve`] under an explicit [`RetryPolicy`].
+pub fn resolve_with(
+    policy: &RetryPolicy,
+    registry: &str,
+) -> Result<Vec<RegistryEntry>, TransportError> {
     let req = Frame { node: CTL_NODE, term: 0, msg: WireMsg::Resolve };
-    match tcp::roundtrip(registry, &req, RPC_DEADLINE)?.msg {
-        WireMsg::ResolveOk { entries } => Ok(entries),
-        other => Err(TransportError::Protocol(format!(
-            "registry answered Resolve with type {}",
-            other.kind()
-        ))),
-    }
+    policy.run("registry.resolve", |_| {
+        match tcp::roundtrip(registry, &req, policy.deadline)?.msg {
+            WireMsg::ResolveOk { entries } => Ok(entries),
+            other => Err(TransportError::Protocol(format!(
+                "registry answered Resolve with type {}",
+                other.kind()
+            ))),
+        }
+    })
 }
 
 /// Poll [`resolve`] until at least `min` daemons are live or `deadline`
@@ -250,6 +294,35 @@ mod tests {
         let entries = resolve(srv.addr()).unwrap();
         assert_eq!(entries.len(), 1);
         assert_eq!(entries[0].node, 3);
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn boot_registration_survives_a_late_registry() {
+        // the PR 7 hardening case: a daemon boots before its registry is
+        // listening. With per-attempt deadlines far shorter than the
+        // registry's arrival, only the policy's retries can save the boot.
+        let dir = crate::util::tmp::TempDir::new("latereg");
+        let addr = format!("unix:{}", dir.path().join("registry.sock").display());
+        let policy = RetryPolicy {
+            attempts: 10,
+            base_backoff: Duration::from_millis(10),
+            max_backoff: Duration::from_millis(40),
+            deadline: Duration::from_millis(100),
+            ..RetryPolicy::default()
+        };
+        let registrar = {
+            let addr = addr.clone();
+            std::thread::spawn(move || register_with(&policy, &addr, 4, "tcp:a:1", "tcp:a:2", 1.0))
+        };
+        // the daemon is already dialing; the registry shows up a beat later
+        std::thread::sleep(Duration::from_millis(250));
+        let srv = RegistryServer::spawn(&addr, Duration::from_secs(5)).unwrap();
+        let ttl = registrar.join().unwrap().expect("retries must absorb the late registry");
+        assert_eq!(ttl, 5000);
+        let entries = resolve(srv.addr()).unwrap();
+        assert_eq!(entries.len(), 1);
+        assert_eq!(entries[0].node, 4);
     }
 
     #[test]

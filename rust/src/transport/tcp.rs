@@ -674,6 +674,122 @@ mod tests {
         assert_eq!(store.patches[0].t.data[0], 4.0);
     }
 
+    #[test]
+    fn socket_reads_reject_malformed_frames_with_typed_errors() {
+        // satellite: malformed bytes through a real socket (not just the
+        // codec unit tests) — each flavor surfaces as its typed error
+        let (l, a) = listen("tcp:127.0.0.1:0").unwrap();
+        let server = std::thread::spawn(move || {
+            (0..3)
+                .map(|_| {
+                    let mut s = l.accept_blocking().unwrap();
+                    read_frame(&mut s).unwrap_err()
+                })
+                .collect::<Vec<_>>()
+        });
+        let good = codec::encode(&Frame {
+            node: 1,
+            term: 0,
+            msg: WireMsg::Patch { seq: 0, boundary: 0, patch: patch(1.0) },
+        });
+        let mut bad_magic = good.clone();
+        bad_magic[0] ^= 0xFF;
+        let mut bad_sum = good.clone();
+        let last = bad_sum.len() - 1;
+        bad_sum[last] ^= 0x01; // one payload bit: FNV-1a must catch it
+        let torn = good[..good.len() / 2].to_vec(); // half a frame, then EOF
+        for bytes in [bad_magic, bad_sum, torn] {
+            let mut s = connect(&a).unwrap();
+            s.write_all(&bytes).unwrap();
+            s.flush().unwrap();
+            s.shutdown_both();
+        }
+        let errs = server.join().unwrap();
+        assert!(
+            matches!(errs[0], TransportError::Codec(codec::CodecError::BadMagic(_))),
+            "clobbered magic: {:?}",
+            errs[0]
+        );
+        assert!(
+            matches!(errs[1], TransportError::Codec(codec::CodecError::BadChecksum { .. })),
+            "flipped payload byte: {:?}",
+            errs[1]
+        );
+        assert!(
+            matches!(errs[2], TransportError::Io(_)),
+            "torn frame hits EOF mid-payload: {:?}",
+            errs[2]
+        );
+    }
+
+    #[test]
+    fn corrupt_frame_on_the_wire_never_reaches_numerics() {
+        // acceptance invariant, tcp side: a checksum-corrupted patch is
+        // rejected by the reader and the connection torn down — the
+        // mangled tensor is never delivered, so corruption can only ever
+        // surface as a typed failure, never as wrong numerics
+        let (l1, a1) = listen("tcp:127.0.0.1:0").unwrap();
+        let peers = vec![(10u32, "tcp:unused".to_string()), (11u32, a1)];
+        let peers2 = peers.clone();
+        let h = std::thread::spawn(move || {
+            TcpExchange::connect(1, &peers2, &l1, 7, TcpOpts::default()).unwrap()
+        });
+        // hand-rolled rank 0: a real socket we can script raw bytes onto
+        let mut s = connect_retry(&peers[1].1, Duration::from_secs(5)).unwrap();
+        send_frame(&mut s, &Frame { node: 10, term: 7, msg: WireMsg::Hello }).unwrap();
+        let mut ex1 = h.join().unwrap();
+        ex1.set_seq(0);
+
+        // a clean patch crosses bit-exactly…
+        let clean = Frame {
+            node: 10,
+            term: 7,
+            msg: WireMsg::Patch { seq: 0, boundary: 0, patch: patch(2.5) },
+        };
+        send_frame(&mut s, &clean).unwrap();
+        let mut store = PatchStore::new();
+        ex1.recv_for(0, 1, &mut store).unwrap();
+        assert_eq!(store.patches[0].t.data, vec![2.5, -2.5]);
+
+        // …then the same wire carries a corrupted copy: one flipped byte
+        let mut bytes = codec::encode(&Frame {
+            node: 10,
+            term: 7,
+            msg: WireMsg::Patch { seq: 0, boundary: 1, patch: patch(9.0) },
+        });
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x01;
+        s.write_all(&bytes).unwrap();
+        s.flush().unwrap();
+        let mut store = PatchStore::new();
+        let err = ex1.recv_for(1, 1, &mut store).unwrap_err();
+        assert_eq!(err, TransportError::PeerDead(0), "corruption tears the connection down");
+        assert!(store.patches.is_empty(), "the mangled patch must never be delivered");
+    }
+
+    #[test]
+    fn phantom_dup_boundary_patches_park_and_purge() {
+        // the fault injector tags duplicate deliveries with boundary
+        // u32::MAX: they must park in the reorder buffer without
+        // displacing a real patch, and the next set_seq must purge them
+        let (mut ex0, mut ex1) = mesh2(TcpOpts::default());
+        ex0.set_seq(0);
+        ex1.set_seq(0);
+        ex0.send(1, u32::MAX as usize, patch(9.9)).unwrap();
+        ex0.send(1, 0, patch(1.5)).unwrap();
+        let mut store = PatchStore::new();
+        ex1.recv_for(0, 1, &mut store).unwrap();
+        assert_eq!(store.patches.len(), 1);
+        assert_eq!(store.patches[0].t.data[0], 1.5);
+        ex0.set_seq(1);
+        ex1.set_seq(1);
+        ex0.send(1, 0, patch(2.5)).unwrap();
+        let mut store = PatchStore::new();
+        ex1.recv_for(0, 1, &mut store).unwrap();
+        assert_eq!(store.patches.len(), 1);
+        assert_eq!(store.patches[0].t.data[0], 2.5);
+    }
+
     #[cfg(unix)]
     #[test]
     fn unix_domain_socket_round_trip() {

@@ -36,6 +36,7 @@ fn chaos_cfg(depth: usize) -> ServeConfig {
         batch_window: Duration::ZERO,
         queue_depth: 64,
         pipeline_depth: depth,
+        ..ServeConfig::default()
     }
 }
 
@@ -85,6 +86,8 @@ fn generated_chaos_three_seeds_pipelined() {
         ("requests_lost", Json::Num(sum(|o| o.lost) as f64)),
         ("mismatches", Json::Num(sum(|o| o.mismatches) as f64)),
         ("reordered", Json::Num(sum(|o| o.reordered) as f64)),
+        ("replays", Json::Num(sum(|o| o.replays) as f64)),
+        ("replay_attempts", Json::Num(sum(|o| o.replay_attempts) as f64)),
     ]);
 }
 
@@ -120,11 +123,46 @@ fn leader_killed_mid_stream_recovers_with_zero_lost() {
         "leader failover was not a speculative cache hit: {out}"
     );
     assert_eq!(out.min_nodes, 3, "post-failover traffic must ride 3 nodes: {out}");
-    // requests 3..11 deterministically re-admit under the new leader, so at
-    // least those 9 complete; whether requests 0..2 finish before the abort
-    // is a wall-clock race, but every verdict is accounted either way
-    assert!(out.ok >= 9, "{out}");
+    // with replay recovery, requests caught in flight by the abort are
+    // re-executed on the rebuilt pipeline instead of failing back to the
+    // client: every request completes, none are reported failed
+    assert_eq!(out.ok, 12, "replay must leave no request behind: {out}");
+    assert_eq!(out.failed_reported, 0, "{out}");
+    assert!(out.replay_attempts >= out.replays, "{out}");
     assert!(out.generations >= 2, "leader loss must rebuild the pipeline: {out}");
+}
+
+#[test]
+fn leader_kill_with_zero_replay_budget_degrades_to_explicit_failure() {
+    // replay_budget = 0 restores the pre-replay contract: requests caught
+    // in flight by the abort are failed back explicitly (never silently),
+    // and the accounting invariant ok + failed_reported == requests holds.
+    let model = zoo::edgenet(16);
+    let base = Testbed::new(4, Topology::Ring, Bandwidth::gbps(1.0));
+    let c4 = healthy_cost(&model, &base);
+    let schedule = ChaosSchedule {
+        nodes: 4,
+        seed: 0,
+        slot: c4,
+        events: vec![ChaosEvent::Kill { node: 0, from: 2.5 * c4, until: f64::INFINITY }],
+    };
+    let cfg = ServeConfig { replay_budget: 0, ..chaos_cfg(4) };
+    let out = run_chaos(
+        &model,
+        &base,
+        &schedule,
+        cfg,
+        ElasticConfig::default(),
+        12,
+        4_400,
+    );
+    out.verify().unwrap_or_else(|e| panic!("{e} ({out})"));
+    assert_eq!(out.replays, 0, "budget 0 must never replay: {out}");
+    assert_eq!(out.replay_attempts, 0, "{out}");
+    assert_eq!(out.ok + out.failed_reported, 12, "{out}");
+    // requests 3..11 deterministically re-admit under the new leader, so at
+    // least those 9 complete; in-flight requests at the abort are failed
+    assert!(out.ok >= 9, "{out}");
 }
 
 #[test]

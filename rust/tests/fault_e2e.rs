@@ -1,0 +1,186 @@
+//! Wire-fault end-to-end: the acceptance test for deterministic fault
+//! injection plus replay recovery, on both fabrics.
+//!
+//! Three seeded single-fault-per-window [`FaultSchedule`]s run against
+//!
+//! * the **sim** fabric — [`run_faulted`] replays the schedule over the
+//!   in-process mesh, and
+//! * the **tcp** fabric — one in-thread daemon per node over real
+//!   sockets, each wrapping its data plane in a `FaultExchange`, served
+//!   through [`Server::start_process`] with a bounded replay budget.
+//!
+//! The bar is identical on both: `ok == requests` (no request left
+//! behind), every delivered output bit-identical to the fault-free
+//! single-node reference, delivery order preserved, and corrupted frames
+//! caught by the checksum — surfaced as typed aborts and replayed, never
+//! as wrong numerics. Each test prints a single-line `RESULT {...}` JSON
+//! summary that CI's required `wire-chaos` job uploads.
+
+use std::time::Duration;
+
+use flexpie::compute::{run_reference, Tensor, WeightStore};
+use flexpie::config::FaultExperiment;
+use flexpie::model::{zoo, Model};
+use flexpie::partition::{Plan, Scheme};
+use flexpie::serve::{ServeConfig, Server};
+use flexpie::transport::coord::ProcessCluster;
+use flexpie::transport::daemon::{self, DaemonOpts};
+use flexpie::transport::fault::{run_faulted, FaultDrillOutcome};
+use flexpie::transport::registry::RegistryServer;
+use flexpie::transport::tcp::TcpOpts;
+use flexpie::util::bench::emit_result;
+use flexpie::util::json::Json;
+
+/// The fixed seeds CI runs as a required job.
+const CI_SEEDS: [u64; 3] = [11, 23, 47];
+
+fn experiment(seed: u64, fabric: &str) -> FaultExperiment {
+    FaultExperiment { seed, fabric: fabric.into(), ..FaultExperiment::default() }
+}
+
+fn input_for(model: &Model, seed: u64) -> Tensor {
+    let l0 = &model.layers[0];
+    Tensor::random(l0.in_h, l0.in_w, l0.in_c, seed)
+}
+
+#[test]
+fn sim_fabric_recovers_every_ci_seed_bit_identically() {
+    let model = zoo::edgenet(16);
+    let plan = Plan::uniform(Scheme::InH, model.n_layers());
+    let weights = WeightStore::for_model(&model, 5);
+    let mut results: Vec<FaultDrillOutcome> = Vec::new();
+    for &seed in &CI_SEEDS {
+        let exp = experiment(seed, "sim");
+        let schedule = exp.schedule();
+        assert!(!schedule.is_empty(), "seed {seed}: empty schedule");
+        let out = run_faulted(
+            &model,
+            &plan,
+            &weights,
+            &schedule,
+            exp.requests,
+            3_000 * (seed + 1),
+            exp.replay_budget,
+            Duration::from_millis(400),
+        );
+        out.verify().unwrap_or_else(|e| panic!("seed {seed}: {e} ({out})"));
+        assert_eq!(out.ok, exp.requests, "seed {seed}: a request was left behind: {out}");
+        assert_eq!(out.failed, 0, "seed {seed}: {out}");
+        assert!(
+            out.injected.corrupts >= 1,
+            "seed {seed}: window 0 must corrupt a frame and the checksum must catch it: {out}"
+        );
+        results.push(out);
+    }
+    let sum = |f: fn(&FaultDrillOutcome) -> u64| results.iter().map(f).sum::<u64>();
+    emit_result(vec![
+        ("bench", Json::Str("fault_e2e_sim".into())),
+        ("seeds", Json::arr(CI_SEEDS.iter().map(|&s| Json::Num(s as f64)))),
+        ("requests", Json::Num(sum(|o| o.requests) as f64)),
+        ("ok", Json::Num(sum(|o| o.ok) as f64)),
+        ("failed", Json::Num(sum(|o| o.failed) as f64)),
+        ("events_scripted", Json::Num(sum(|o| o.events as u64) as f64)),
+        ("faults_injected", Json::Num(sum(|o| o.injected.total()) as f64)),
+        ("corrupts_caught", Json::Num(sum(|o| o.injected.corrupts) as f64)),
+        ("replay_attempts", Json::Num(sum(|o| o.replay_attempts) as f64)),
+        ("mismatches", Json::Num(sum(|o| o.mismatches) as f64)),
+    ]);
+}
+
+#[test]
+fn tcp_fabric_recovers_every_ci_seed_bit_identically() {
+    let model = zoo::edgenet(16);
+    let plan = Plan::uniform(Scheme::InH, model.n_layers());
+    let (mut requests, mut ok, mut replays, mut attempts, mut failovers) =
+        (0u64, 0u64, 0u64, 0u64, 0u64);
+    for &seed in &CI_SEEDS {
+        // fewer requests than the sim drill: every wire fault here costs a
+        // real socket deadline, and window 0's corrupt still lands early
+        let exp = FaultExperiment { requests: 8, ..experiment(seed, "tcp") };
+        let schedule = exp.schedule();
+        let registry = RegistryServer::spawn("tcp:127.0.0.1:0", Duration::from_secs(5))
+            .expect("registry bind");
+        // short recv deadline: dropped frames must surface as typed
+        // deadline aborts quickly enough for reinstall + replay to finish
+        // inside the test budget, never as hangs
+        let tcp = TcpOpts { recv_deadline: Duration::from_millis(1500), ..TcpOpts::default() };
+        let mut daemons = Vec::new();
+        for node in 0..exp.nodes as u32 {
+            let mut opts = DaemonOpts::new(node, registry.addr());
+            opts.tcp = tcp;
+            // every daemon carries the same schedule; each injects only
+            // the events whose `src` matches its generation rank
+            opts.fault = Some(schedule.clone());
+            daemons.push(std::thread::spawn(move || daemon::run(opts)));
+        }
+        let mut pc = ProcessCluster::connect(registry.addr(), exp.nodes, Duration::from_secs(30))
+            .expect("cluster bring-up");
+        pc.infer_deadline = Duration::from_secs(10);
+        pc.install(&model, &plan, seed).expect("plan install");
+
+        let ws = WeightStore::for_model(&model, seed);
+        let server = Server::start_process(
+            pc,
+            ServeConfig {
+                max_batch: 1,
+                batch_window: Duration::ZERO,
+                queue_depth: 64,
+                pipeline_depth: 1,
+                replay_budget: exp.replay_budget,
+            },
+        );
+        let inputs: Vec<Tensor> =
+            (0..exp.requests).map(|i| input_for(&model, 7_000 * (seed + 1) + i)).collect();
+        let rxs: Vec<_> = inputs
+            .iter()
+            .map(|t| server.submit(t.clone()).expect("admission failed"))
+            .collect();
+        let mut last_seq: Option<u64> = None;
+        for (i, (input, rx)) in inputs.iter().zip(rxs).enumerate() {
+            let resp = rx
+                .recv()
+                .unwrap_or_else(|_| panic!("seed {seed}: request {i} failed over the wire"));
+            let reference = run_reference(&model, &ws, input);
+            assert_eq!(
+                reference.max_abs_diff(&resp.output),
+                0.0,
+                "seed {seed}: request {i} output diverged from the fault-free reference"
+            );
+            assert!(
+                last_seq.map_or(true, |p| resp.seq > p),
+                "seed {seed}: request {i} delivered out of order"
+            );
+            last_seq = Some(resp.seq);
+            ok += 1;
+        }
+        requests += exp.requests;
+        let stats = server.shutdown();
+        assert_eq!(stats.failed_on_dead_cluster, 0, "seed {seed}: a request was failed back");
+        // window 0 always corrupts a frame, the checksum kills that
+        // generation, and the router must have replayed through it
+        assert!(
+            stats.process_failovers >= 1,
+            "seed {seed}: the scripted corruption never aborted a generation"
+        );
+        assert!(
+            stats.replayed_on_dead_cluster >= 1,
+            "seed {seed}: recovery completed no replayed request"
+        );
+        assert!(stats.replay_attempts >= 1, "seed {seed}: no replay was attempted");
+        replays += stats.replayed_on_dead_cluster;
+        attempts += stats.replay_attempts;
+        failovers += stats.process_failovers;
+        drop(daemons); // threads exit with the Shutdown sent by the server
+    }
+    emit_result(vec![
+        ("bench", Json::Str("fault_e2e_tcp".into())),
+        ("seeds", Json::arr(CI_SEEDS.iter().map(|&s| Json::Num(s as f64)))),
+        ("requests", Json::Num(requests as f64)),
+        ("ok", Json::Num(ok as f64)),
+        ("failed", Json::Num(0.0)),
+        ("replays", Json::Num(replays as f64)),
+        ("replay_attempts", Json::Num(attempts as f64)),
+        ("failovers", Json::Num(failovers as f64)),
+        ("mismatches", Json::Num(0.0)),
+    ]);
+}

@@ -25,6 +25,7 @@ use std::time::Duration;
 use flexpie::compute::{run_reference, Tensor, WeightStore};
 use flexpie::model::{zoo, Model};
 use flexpie::partition::{Plan, Scheme};
+use flexpie::serve::{ServeConfig, Server};
 use flexpie::transport::coord::{InferOutcome, ProcessCluster};
 use flexpie::util::bench::emit_result;
 use flexpie::util::json::Json;
@@ -229,6 +230,65 @@ fn sigkill_worker_and_leader_chaos_audit() {
         ("worker_kills", Json::Num(1.0)),
         ("leader_kills", Json::Num(1.0)),
     ]);
+}
+
+#[test]
+fn served_sigkill_leader_replays_in_flight_to_completion() {
+    // The serving-layer twin of the SIGKILL drills: the router owns the
+    // recovery loop, so a leader killed mid-stream is invisible to
+    // clients — every request completes bit-identically and in order, and
+    // the router's replay counters prove the path was exercised.
+    let model = zoo::edgenet(16);
+    let plan = Plan::uniform(Scheme::InH, model.n_layers());
+    let (_reg, registry) = spawn_registry();
+    let mut daemons: Vec<Proc> = (0..3).map(|i| spawn_daemon(i, &registry)).collect();
+    let mut pc = connect(&registry, 3);
+    pc.install(&model, &plan, 71).expect("install");
+    pc.infer_deadline = Duration::from_secs(10);
+    let ws = WeightStore::for_model(&model, 71);
+
+    let server = Server::start_process(
+        pc,
+        ServeConfig {
+            max_batch: 1,
+            batch_window: Duration::ZERO,
+            queue_depth: 16,
+            pipeline_depth: 1,
+            replay_budget: 4,
+        },
+    );
+    let inputs: Vec<Tensor> = (0..6).map(|i| input_for(&model, 0x9E + i)).collect();
+    let rxs: Vec<_> = inputs
+        .iter()
+        .map(|t| server.submit(t.clone()).expect("admission failed"))
+        .collect();
+
+    let mut last_seq: Option<u64> = None;
+    let mut killed = false;
+    for (i, (input, rx)) in inputs.iter().zip(rxs).enumerate() {
+        let resp = rx
+            .recv()
+            .unwrap_or_else(|_| panic!("request {i} was failed back to the client"));
+        let reference = run_reference(&model, &ws, input);
+        assert_eq!(
+            reference.max_abs_diff(&resp.output),
+            0.0,
+            "request {i} output diverged from the reference"
+        );
+        assert!(last_seq.map_or(true, |p| resp.seq > p), "request {i} out of order");
+        last_seq = Some(resp.seq);
+        if !killed {
+            daemons[0].sigkill(); // node 0 — the current leader
+            killed = true;
+        }
+    }
+
+    let stats = server.shutdown();
+    assert_eq!(stats.requests, 6);
+    assert_eq!(stats.failed_on_dead_cluster, 0, "a request was failed back");
+    assert!(stats.process_failovers >= 1, "leader SIGKILL was never observed");
+    assert!(stats.replayed_on_dead_cluster >= 1, "no request rode the replay path");
+    assert!(stats.replay_attempts >= stats.replayed_on_dead_cluster);
 }
 
 #[test]
