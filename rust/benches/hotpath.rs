@@ -17,7 +17,8 @@ use flexpie::partition::inflate::BlockGeometry;
 use flexpie::partition::{union_volume, Region, Scheme};
 use flexpie::planner::exhaustive::plan_cost;
 use flexpie::partition::Plan;
-use flexpie::util::bench::{black_box, BenchRunner};
+use flexpie::util::bench::{black_box, emit_result, BenchRunner};
+use flexpie::util::json::Json;
 
 fn main() {
     let r = BenchRunner::new("hotpath");
@@ -83,7 +84,29 @@ fn main() {
     let mut store_pw = PatchStore::new();
     store_pw.add(RegionTensor::new(Region::full(32, 32, 64), Tensor::random(32, 32, 64, 3)));
     let out_pw = Region::full(32, 32, 64);
-    r.bench("native_pointwise/32x32x64x64", || {
+    let s_pw = r.bench("native_pointwise/32x32x64x64", || {
         compute_region(&pw, &wpw.layers[0], &store_pw, &out_pw).t.data[0]
     });
+
+    // the ISSUE 8 reference shape: one full 56×56×128→128 3×3 conv layer —
+    // the dominant kernel in the mobilenet-class zoo models
+    let big = LayerMeta::conv("big", ConvType::Standard, 56, 56, 128, 128, 3, 1, 1);
+    let mb = Model::new("big", vec![big.clone()]);
+    let wb = WeightStore::for_model(&mb, 4);
+    let mut store_big = PatchStore::new();
+    store_big.add(RegionTensor::new(Region::full(56, 56, 128), Tensor::random(56, 56, 128, 5)));
+    let out_big = Region::full(56, 56, 128);
+    let s_big = r.bench("native_conv/56x56x128x128", || {
+        compute_region(&big, &wb.layers[0], &store_big, &out_big).t.data[0]
+    });
+
+    emit_result(vec![
+        ("bench", Json::Str("hotpath".into())),
+        ("conv56_mean_s", Json::Num(s_big.mean_secs())),
+        ("pointwise32_mean_s", Json::Num(s_pw.mean_secs())),
+        ("conv56_gflops", Json::Num({
+            let flops = 2.0 * 56.0 * 56.0 * 128.0 * 128.0 * 9.0;
+            flops / s_big.mean_secs() / 1e9
+        })),
+    ]);
 }

@@ -1,0 +1,450 @@
+//! Kernel + allocation regression bench — the §Perf evidence for the
+//! blocked-kernel rewrite.
+//!
+//! Three measurements, one `RESULT {...}` JSON line (CI folds it into
+//! `BENCH_pr8.json`):
+//!
+//! 1. **Kernel speedups** — the pre-rewrite scalar kernels are embedded
+//!    here verbatim as baselines and every comparison first asserts the
+//!    blocked kernels produce *bitwise* identical outputs, so the speedup
+//!    numbers can never drift away from correctness.
+//! 2. **Tile parallelism** — [`compute_tile_set`] serial vs a 4-worker
+//!    pool over an 8-way InH split of the 56×56×128 conv.
+//! 3. **Allocation regression guard** — a counting global allocator plus
+//!    the pipeline arenas' own counters measure the steady-state serving
+//!    path (edgenet through [`BlockPipeline`]) with buffer reuse on vs
+//!    off. The arena-level ratio is asserted `>= FLEXPIE_ALLOC_GUARD`
+//!    (default 10) so a future change that reintroduces per-item churn
+//!    fails CI, not just a dashboard.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use flexpie::cluster::pipeline::BlockPipeline;
+use flexpie::compute::{
+    compute_region, compute_tile_set, unclamped_in_region, ComputeConfig, LayerWeights,
+    PatchStore, RegionTensor, Tensor, TensorArena, WeightStore,
+};
+use flexpie::model::{zoo, ConvType, LayerMeta, Model};
+use flexpie::partition::geometry::{in_region, out_tiles};
+use flexpie::partition::{Plan, Region, Scheme};
+use flexpie::util::bench::{black_box, emit_result, BenchRunner};
+use flexpie::util::json::Json;
+
+// --- counting allocator ----------------------------------------------------
+
+struct CountingAlloc;
+
+static HEAP_ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        HEAP_ALLOCS.fetch_add(1, Ordering::Relaxed);
+        unsafe { System.alloc(layout) }
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        unsafe { System.dealloc(ptr, layout) }
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        HEAP_ALLOCS.fetch_add(1, Ordering::Relaxed);
+        unsafe { System.realloc(ptr, layout, new_size) }
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        HEAP_ALLOCS.fetch_add(1, Ordering::Relaxed);
+        unsafe { System.alloc_zeroed(layout) }
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn heap_allocs() -> u64 {
+    HEAP_ALLOCS.load(Ordering::Relaxed)
+}
+
+// --- the pre-rewrite kernels, verbatim (the speedup baselines) -------------
+
+fn naive_conv2d(
+    layer: &LayerMeta,
+    weights: &LayerWeights,
+    input: &Tensor,
+    in_r: &Region,
+    out_r: &Region,
+    out: &mut Tensor,
+) {
+    let (k, s, p) = (layer.k, layer.s, layer.p);
+    let in_c = layer.in_c as usize;
+    let out_c = layer.out_c as usize;
+    let oc0 = out_r.c0 as usize;
+    let oc1 = out_r.c1 as usize;
+    let oc_len = oc1 - oc0;
+    let bias = &weights.b[oc0..oc1];
+    let in_w_stride = (in_r.w1 - in_r.w0) as usize * in_c;
+    let mut acc = vec![0.0f32; oc_len];
+
+    for oy in out_r.h0..out_r.h1 {
+        for ox in out_r.w0..out_r.w1 {
+            acc.copy_from_slice(bias);
+            for ky in 0..k {
+                let y = oy * s - p + ky;
+                if y < 0 || y >= layer.in_h {
+                    continue;
+                }
+                let row_base = (y - in_r.h0) as usize * in_w_stride;
+                for kx in 0..k {
+                    let x = ox * s - p + kx;
+                    if x < 0 || x >= layer.in_w {
+                        continue;
+                    }
+                    let px_base =
+                        row_base + (x - in_r.w0) as usize * in_c + (0i64 - in_r.c0) as usize;
+                    let xs = &input.data[px_base..px_base + in_c];
+                    let w_tap = ((ky * k + kx) as usize) * in_c * out_c;
+                    for (ic, &xv) in xs.iter().enumerate() {
+                        if xv == 0.0 {
+                            continue;
+                        }
+                        let wrow =
+                            &weights.w[w_tap + ic * out_c + oc0..w_tap + ic * out_c + oc1];
+                        for (a, &wv) in acc.iter_mut().zip(wrow) {
+                            *a += xv * wv;
+                        }
+                    }
+                }
+            }
+            let out_base =
+                ((oy - out_r.h0) * (out_r.w1 - out_r.w0) + (ox - out_r.w0)) as usize * oc_len;
+            out.data[out_base..out_base + oc_len].copy_from_slice(&acc);
+        }
+    }
+}
+
+fn naive_pointwise(
+    layer: &LayerMeta,
+    weights: &LayerWeights,
+    input: &Tensor,
+    in_r: &Region,
+    out_r: &Region,
+    out: &mut Tensor,
+) {
+    let in_c = layer.in_c as usize;
+    let out_c = layer.out_c as usize;
+    let oc0 = out_r.c0 as usize;
+    let oc1 = out_r.c1 as usize;
+    let oc_len = oc1 - oc0;
+    let bias = &weights.b[oc0..oc1];
+    let in_w_stride = (in_r.w1 - in_r.w0) as usize * in_c;
+    let ow_len = (out_r.w1 - out_r.w0) as usize;
+    let mut acc = vec![0.0f32; 4 * oc_len];
+
+    for oy in out_r.h0..out_r.h1 {
+        let row_base = (oy - in_r.h0) as usize * in_w_stride;
+        let mut ox = out_r.w0;
+        while ox < out_r.w1 {
+            let blk = ((out_r.w1 - ox) as usize).min(4);
+            for b in 0..blk {
+                acc[b * oc_len..(b + 1) * oc_len].copy_from_slice(bias);
+            }
+            for ic in 0..in_c {
+                let wrow = &weights.w[ic * out_c + oc0..ic * out_c + oc1];
+                for b in 0..blk {
+                    let xv = input.data[row_base + (ox + b as i64 - in_r.w0) as usize * in_c + ic];
+                    if xv == 0.0 {
+                        continue;
+                    }
+                    let a = &mut acc[b * oc_len..(b + 1) * oc_len];
+                    for (aj, &wv) in a.iter_mut().zip(wrow) {
+                        *aj += xv * wv;
+                    }
+                }
+            }
+            for b in 0..blk {
+                let out_base =
+                    ((oy - out_r.h0) as usize * ow_len + (ox - out_r.w0) as usize + b) * oc_len;
+                out.data[out_base..out_base + oc_len]
+                    .copy_from_slice(&acc[b * oc_len..(b + 1) * oc_len]);
+            }
+            ox += blk as i64;
+        }
+    }
+}
+
+fn naive_depthwise(
+    layer: &LayerMeta,
+    weights: &LayerWeights,
+    input: &Tensor,
+    in_r: &Region,
+    out_r: &Region,
+    out: &mut Tensor,
+) {
+    let (k, s, p) = (layer.k, layer.s, layer.p);
+    let out_c = layer.out_c as usize;
+    let c0 = out_r.c0;
+    let c_len = (out_r.c1 - out_r.c0) as usize;
+    let in_c_len = (in_r.c1 - in_r.c0) as usize;
+    let in_w_stride = (in_r.w1 - in_r.w0) as usize * in_c_len;
+    let bias = &weights.b[c0 as usize..out_r.c1 as usize];
+    let mut acc = vec![0.0f32; c_len];
+
+    for oy in out_r.h0..out_r.h1 {
+        for ox in out_r.w0..out_r.w1 {
+            acc.copy_from_slice(bias);
+            for ky in 0..k {
+                let y = oy * s - p + ky;
+                if y < 0 || y >= layer.in_h {
+                    continue;
+                }
+                for kx in 0..k {
+                    let x = ox * s - p + kx;
+                    if x < 0 || x >= layer.in_w {
+                        continue;
+                    }
+                    let px = (y - in_r.h0) as usize * in_w_stride
+                        + (x - in_r.w0) as usize * in_c_len
+                        + (c0 - in_r.c0) as usize;
+                    let xs = &input.data[px..px + c_len];
+                    let wq = ((ky * k + kx) as usize) * out_c + c0 as usize;
+                    let ws = &weights.w[wq..wq + c_len];
+                    for ((a, &xv), &wv) in acc.iter_mut().zip(xs).zip(ws) {
+                        *a += xv * wv;
+                    }
+                }
+            }
+            let out_base =
+                ((oy - out_r.h0) * (out_r.w1 - out_r.w0) + (ox - out_r.w0)) as usize * c_len;
+            out.data[out_base..out_base + c_len].copy_from_slice(&acc);
+        }
+    }
+}
+
+fn naive_dense(
+    layer: &LayerMeta,
+    weights: &LayerWeights,
+    input: &Tensor,
+    in_r: &Region,
+    out_r: &Region,
+    out: &mut Tensor,
+) {
+    for row in out_r.h0..out_r.h1 {
+        for oc in out_r.c0..out_r.c1 {
+            let mut acc = weights.b[oc as usize];
+            for ic in 0..layer.in_c {
+                acc += weights.w[(ic * layer.out_c + oc) as usize]
+                    * input.at(row - in_r.h0, 0, ic - in_r.c0);
+            }
+            *out.at_mut(row - out_r.h0, 0, oc - out_r.c0) = acc;
+        }
+    }
+}
+
+/// The pre-rewrite `compute_region`: always extract a dense receptive-field
+/// hull, then run the scalar kernel over it.
+fn naive_region(
+    layer: &LayerMeta,
+    weights: &LayerWeights,
+    store: &PatchStore,
+    out_r: &Region,
+) -> Tensor {
+    let valid = Region::full(layer.in_h, layer.in_w, layer.in_c);
+    let needed = valid.intersect(&in_region(layer, out_r));
+    let raw = unclamped_in_region(layer, out_r);
+    let input = store.extract(&raw, &needed, true);
+    let mut out =
+        Tensor::zeros(out_r.h1 - out_r.h0, out_r.w1 - out_r.w0, out_r.c1 - out_r.c0);
+    match layer.conv_t {
+        ConvType::Standard => naive_conv2d(layer, weights, &input, &raw, out_r, &mut out),
+        ConvType::Pointwise => naive_pointwise(layer, weights, &input, &raw, out_r, &mut out),
+        ConvType::Depthwise => naive_depthwise(layer, weights, &input, &raw, out_r, &mut out),
+        ConvType::Dense | ConvType::Attention => {
+            naive_dense(layer, weights, &input, &raw, out_r, &mut out)
+        }
+        ConvType::Pool => unreachable!("pool is not a speedup target"),
+    }
+    out
+}
+
+// --- harness ---------------------------------------------------------------
+
+fn full_store(t: Tensor) -> PatchStore {
+    let r = Region::full(t.h, t.w, t.c);
+    let mut s = PatchStore::new();
+    s.add(RegionTensor::new(r, t));
+    s
+}
+
+fn assert_bitwise_eq(label: &str, a: &Tensor, b: &Tensor) {
+    assert_eq!((a.h, a.w, a.c), (b.h, b.w, b.c), "{label}: shape diverged");
+    for (i, (x, y)) in a.data.iter().zip(&b.data).enumerate() {
+        assert!(
+            x.to_bits() == y.to_bits(),
+            "{label}: bit divergence at flat index {i}: {x:?} vs {y:?}"
+        );
+    }
+}
+
+/// Bench one layer shape: assert blocked == naive bitwise, then time both.
+/// Returns (naive mean s, blocked mean s).
+fn kernel_pair(
+    r: &BenchRunner,
+    label: &str,
+    layer: &LayerMeta,
+    seed: u64,
+) -> (f64, f64) {
+    let m = Model::new(layer.name.clone(), vec![layer.clone()]);
+    let ws = WeightStore::for_model(&m, seed);
+    let store = full_store(Tensor::random(layer.in_h, layer.in_w, layer.in_c, seed ^ 0xABCD));
+    let out_r = Region::full(layer.out_h, layer.out_w, layer.out_c);
+
+    let want = naive_region(layer, &ws.layers[0], &store, &out_r);
+    let got = compute_region(layer, &ws.layers[0], &store, &out_r);
+    assert_bitwise_eq(label, &want, &got.t);
+
+    let naive = r.bench(&format!("naive_{label}"), || {
+        naive_region(layer, &ws.layers[0], &store, &out_r).data[0]
+    });
+    let blocked = r.bench(&format!("blocked_{label}"), || {
+        compute_region(layer, &ws.layers[0], &store, &out_r).t.data[0]
+    });
+    (naive.mean_secs(), blocked.mean_secs())
+}
+
+/// Run `warmup + items` inferences through a pipelined edgenet and return
+/// (arena allocs, arena reuses, heap allocs over the post-warmup window,
+/// post-warmup elapsed seconds, items).
+fn serving_run(reuse: bool, warmup: u64, items: u64) -> (u64, u64, u64, f64) {
+    let model = zoo::edgenet(32);
+    let weights = WeightStore::for_model(&model, 1);
+    let plan = Plan::uniform(Scheme::InH, model.n_layers());
+    let cfg = ComputeConfig { reuse_buffers: reuse, ..ComputeConfig::default() };
+    let mut pipe = BlockPipeline::start_with(&model, &plan, &weights, 4, 4, 0, cfg);
+    let input = Tensor::random(32, 32, 3, 7);
+    for _ in 0..warmup {
+        pipe.submit(input.clone());
+        let _ = pipe.wait_complete();
+    }
+    let heap0 = heap_allocs();
+    let t0 = Instant::now();
+    for _ in 0..items {
+        pipe.submit(input.clone());
+        let _ = pipe.wait_complete();
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let heap = heap_allocs() - heap0;
+    let (_, stats) = pipe.finish();
+    let allocs: u64 = stats.stages.iter().map(|s| s.buf_allocs).sum();
+    let reuses: u64 = stats.stages.iter().map(|s| s.buf_reuses).sum();
+    (allocs, reuses, heap, elapsed)
+}
+
+fn main() {
+    let r = BenchRunner::new("kernel_bench");
+
+    // --- kernel speedups (bitwise-checked) ---------------------------------
+    let conv56 = LayerMeta::conv("c56", ConvType::Standard, 56, 56, 128, 128, 3, 1, 1);
+    let (conv_naive, conv_blocked) = kernel_pair(&r, "conv56x56x128x128", &conv56, 11);
+
+    let pw = LayerMeta::conv("pw", ConvType::Pointwise, 56, 56, 128, 128, 1, 1, 0);
+    let (pw_naive, pw_blocked) = kernel_pair(&r, "pointwise56x56x128x128", &pw, 12);
+
+    let dw = LayerMeta::conv("dw", ConvType::Depthwise, 56, 56, 128, 128, 3, 1, 1);
+    let (dw_naive, dw_blocked) = kernel_pair(&r, "depthwise56x56x128", &dw, 13);
+
+    let fc = LayerMeta::dense("fc", 128, 512, 512);
+    let (fc_naive, fc_blocked) = kernel_pair(&r, "dense128x512x512", &fc, 14);
+
+    // --- tile parallelism --------------------------------------------------
+    let m = Model::new("c56", vec![conv56.clone()]);
+    let ws = WeightStore::for_model(&m, 11);
+    let store = full_store(Tensor::random(56, 56, 128, 21));
+    let stores = [&store];
+    let tiles = out_tiles(&conv56, Scheme::InH, 8);
+    let items: Vec<(usize, Region)> = tiles.iter().map(|t| (0usize, *t)).collect();
+    let par_cfg = ComputeConfig { tile_workers: 4, parallel_threshold: 0, ..Default::default() };
+    {
+        // parallel must be bitwise identical to serial before it is timed
+        let mut a0 = TensorArena::new(true);
+        let mut a1 = TensorArena::new(true);
+        let serial = compute_tile_set(
+            &conv56, &ws.layers[0], &stores, &items, &ComputeConfig::serial(), &mut a0,
+        );
+        let par =
+            compute_tile_set(&conv56, &ws.layers[0], &stores, &items, &par_cfg, &mut a1);
+        for (s, p) in serial.iter().zip(&par) {
+            assert_bitwise_eq("tile_parallel", &s.t, &p.t);
+        }
+    }
+    let mut arena = TensorArena::new(true);
+    let serial_s = r
+        .bench("tiles_serial/8xInH", || {
+            let outs = compute_tile_set(
+                &conv56, &ws.layers[0], &stores, &items, &ComputeConfig::serial(), &mut arena,
+            );
+            let v = outs[0].t.data[0];
+            for o in outs {
+                arena.give(o.t);
+            }
+            black_box(v)
+        })
+        .mean_secs();
+    let par_s = r
+        .bench("tiles_parallel/8xInH/4w", || {
+            let outs =
+                compute_tile_set(&conv56, &ws.layers[0], &stores, &items, &par_cfg, &mut arena);
+            let v = outs[0].t.data[0];
+            for o in outs {
+                arena.give(o.t);
+            }
+            black_box(v)
+        })
+        .mean_secs();
+
+    // --- allocation regression guard --------------------------------------
+    // Steady-state arena allocations for `items` inferences = (warmup+items
+    // run) − (warmup-only run); the arena take sequence is a pure function
+    // of the item count, so the difference isolates the post-warmup window.
+    let (warmup, items_n) = (4, 48);
+    let (on_base, _, _, _) = serving_run(true, warmup, 0);
+    let (on_full, on_reuses, on_heap, on_elapsed) = serving_run(true, warmup, items_n);
+    let (off_base, _, _, _) = serving_run(false, warmup, 0);
+    let (off_full, _, off_heap, _) = serving_run(false, warmup, items_n);
+    let on_steady = on_full.saturating_sub(on_base);
+    let off_steady = off_full.saturating_sub(off_base);
+    let arena_ratio = off_steady as f64 / on_steady.max(1) as f64;
+    let heap_ratio = off_heap as f64 / on_heap.max(1) as f64;
+    let req_s = items_n as f64 / on_elapsed;
+    println!(
+        "serving arena allocs/{items_n} items: reuse={on_steady} (reuses={on_reuses}) \
+         no-reuse={off_steady} ratio={arena_ratio:.1} | heap {on_heap} vs {off_heap} \
+         ({heap_ratio:.2}x) | {req_s:.1} req/s"
+    );
+
+    let guard: f64 = std::env::var("FLEXPIE_ALLOC_GUARD")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(10.0);
+    assert!(
+        arena_ratio >= guard,
+        "allocation regression: steady-state arena alloc ratio {arena_ratio:.1} \
+         < guard {guard} (reuse on: {on_steady}, reuse off: {off_steady})"
+    );
+
+    emit_result(vec![
+        ("bench", Json::Str("kernel_bench".into())),
+        ("conv56_naive_s", Json::Num(conv_naive)),
+        ("conv56_blocked_s", Json::Num(conv_blocked)),
+        ("conv56_speedup", Json::Num(conv_naive / conv_blocked)),
+        ("pointwise_speedup", Json::Num(pw_naive / pw_blocked)),
+        ("depthwise_speedup", Json::Num(dw_naive / dw_blocked)),
+        ("dense_speedup", Json::Num(fc_naive / fc_blocked)),
+        ("tile_parallel_speedup", Json::Num(serial_s / par_s)),
+        ("tile_workers", Json::Num(par_cfg.tile_workers as f64)),
+        ("serve_items", Json::Num(items_n as f64)),
+        ("serve_arena_allocs_reuse", Json::Num(on_steady as f64)),
+        ("serve_arena_allocs_noreuse", Json::Num(off_steady as f64)),
+        ("serve_arena_alloc_ratio", Json::Num(arena_ratio)),
+        ("serve_heap_alloc_ratio", Json::Num(heap_ratio)),
+        ("serve_req_s", Json::Num(req_s)),
+        ("alloc_guard", Json::Num(guard)),
+    ]);
+}

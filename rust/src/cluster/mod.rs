@@ -36,7 +36,9 @@ use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::compute::{compute_region, PatchStore, RegionTensor, Tensor, WeightStore};
+use crate::compute::{
+    compute_tile_set, ComputeConfig, PatchStore, RegionTensor, Tensor, TensorArena, WeightStore,
+};
 use crate::model::Model;
 use crate::partition::geometry::out_tiles;
 use crate::partition::inflate::BlockGeometry;
@@ -107,6 +109,21 @@ pub fn run_distributed(
     input: &Tensor,
     nodes: usize,
 ) -> ClusterRun {
+    run_distributed_cfg(model, plan, weights, input, nodes, &ComputeConfig::default())
+}
+
+/// [`run_distributed`] with explicit compute tuning (worker pool size,
+/// buffer-arena behavior) — the serving router passes
+/// [`crate::serve::ServeConfig::compute`] through here.
+pub fn run_distributed_cfg(
+    model: &Model,
+    plan: &Plan,
+    weights: &WeightStore,
+    input: &Tensor,
+    nodes: usize,
+    cfg: &ComputeConfig,
+) -> ClusterRun {
+    let cfg = *cfg;
     let (blocks, geos) = plan_geometry(model, plan, nodes);
     let geos = Arc::new(geos);
     let blocks = Arc::new(blocks);
@@ -134,7 +151,17 @@ pub fn run_distributed(
         let blocks = Arc::clone(&blocks);
         handles.push(std::thread::spawn(move || {
             let mut ex = SimExchange::new(node, txs, rx);
-            node_main(node, nodes, &model, &blocks, &geos, &weights, input.as_deref(), &mut ex)
+            node_main(
+                node,
+                nodes,
+                &model,
+                &blocks,
+                &geos,
+                &weights,
+                input.as_deref(),
+                &mut ex,
+                &cfg,
+            )
         }));
     }
     drop(senders);
@@ -186,9 +213,21 @@ pub fn run_degraded(
     input: &Tensor,
     alive: &[bool],
 ) -> ClusterRun {
+    run_degraded_cfg(model, plan, weights, input, alive, &ComputeConfig::default())
+}
+
+/// [`run_degraded`] with explicit compute tuning.
+pub fn run_degraded_cfg(
+    model: &Model,
+    plan: &Plan,
+    weights: &WeightStore,
+    input: &Tensor,
+    alive: &[bool],
+    cfg: &ComputeConfig,
+) -> ClusterRun {
     let survivors = alive.iter().filter(|&&a| a).count();
     assert!(survivors >= 1, "no surviving nodes");
-    run_distributed(model, plan, weights, input, survivors)
+    run_distributed_cfg(model, plan, weights, input, survivors, cfg)
 }
 
 pub(crate) struct NodeResult {
@@ -250,6 +289,7 @@ pub(crate) fn node_main<E: Exchange>(
     weights: &WeightStore,
     input: Option<&Tensor>,
     ex: &mut E,
+    cfg: &ComputeConfig,
 ) -> Result<NodeResult, TransportError> {
     let layers = &model.layers;
     let n = layers.len();
@@ -257,6 +297,8 @@ pub(crate) fn node_main<E: Exchange>(
     let mut sent_msgs = 0usize;
     let mut traffic = vec![BoundaryTraffic::default(); blocks.len() + 1];
     let mut boundary = 0usize; // scatter = 0, after block b = b+1
+    let mut arena = TensorArena::new(cfg.reuse_buffers);
+    let mut items: Vec<(usize, Region)> = Vec::new();
 
     // --- scatter -----------------------------------------------------------
     let l0 = &layers[0];
@@ -295,14 +337,23 @@ pub(crate) fn node_main<E: Exchange>(
     // --- blocks ------------------------------------------------------------
     for (bi, &(s, e, scheme)) in blocks.iter().enumerate() {
         let geo = &geos[bi];
-        // compute layers s..=e on the (inflated) tiles
+        // compute layers s..=e on the (inflated) tiles — the tile set fans
+        // out over cfg.tile_workers and merges back in tile order
         for l in s..=e {
             let layer = &layers[l];
+            items.clear();
+            items.extend(geo.tiles[l - s][node].iter().map(|r| (0usize, *r)));
+            let outs =
+                compute_tile_set(layer, &weights.layers[l], &[&store], &items, cfg, &mut arena);
             let mut next = PatchStore::new();
-            for r in &geo.tiles[l - s][node] {
-                let out = compute_region(layer, &weights.layers[l], &store, r);
-                next.add(out);
+            for o in outs {
+                if o.region.is_empty() {
+                    arena.give(o.t);
+                } else {
+                    next.add(o);
+                }
             }
+            arena.give_store(&mut store);
             store = next;
         }
         // boundary out of this block
@@ -333,12 +384,12 @@ pub(crate) fn node_main<E: Exchange>(
             let need: Vec<Tile> = geos[bi + 1].entry_need.clone();
             // send: my canonical tiles ∩ everyone's needs
             for (to, ov) in boundary_sends(&have, &need, node) {
-                // find the patch data (store holds this block's outputs,
-                // which cover the canonical tile)
-                let dense = store.extract(&ov, &ov, true);
-                let mut tmp = PatchStore::new();
-                tmp.add(RegionTensor::new(ov, dense));
-                let patch = tmp.patches.pop().unwrap();
+                // extract the patch data (store holds this block's outputs,
+                // which cover the canonical tile) into a recycled buffer;
+                // `ov` is non-empty by construction
+                let mut dense = arena.take(0, 0, 0);
+                store.extract_into(&ov, &ov, true, &mut dense);
+                let patch = RegionTensor::new(ov, dense);
                 sent_bytes += patch.t.numel() as u64 * DTYPE_BYTES;
                 sent_msgs += 1;
                 traffic[boundary].bytes += patch.t.numel() as u64 * DTYPE_BYTES;

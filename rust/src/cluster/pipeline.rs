@@ -41,10 +41,12 @@
 //!
 //! ## Why the numerics are bit-identical to lockstep
 //!
-//! A stage computes each node's tiles with the same [`compute_region`]
-//! calls, from patch stores holding the same patch *set*, as the node
-//! threads do. Every output element has exactly one accumulation order
-//! (fixed by its region and the kernel loop structure), so redundantly
+//! A stage computes each node's tiles through the same
+//! [`compute_tile_set`] dispatch, from patch stores holding the same patch
+//! *set*, as the node threads do. Every output element has exactly one
+//! accumulation order (fixed by its region and the kernel loop structure —
+//! independent of blocking, of which worker computes the tile, and of
+//! whether the input was extracted or read in place), so redundantly
 //! computed overlaps carry equal values and patch order cannot change an
 //! extract. The streaming entry point ([`crate::engine::execute_stream`])
 //! asserts equality against the lockstep executor across the model zoo.
@@ -70,7 +72,9 @@ use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TryRe
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::compute::{compute_region, PatchStore, RegionTensor, Tensor, WeightStore};
+use crate::compute::{
+    compute_tile_set, ComputeConfig, PatchStore, RegionTensor, Tensor, TensorArena, WeightStore,
+};
 use crate::model::Model;
 use crate::partition::geometry::out_tiles;
 use crate::partition::inflate::BlockGeometry;
@@ -107,6 +111,12 @@ pub struct StageStats {
     /// scatter; the final stage counts the gather).
     pub bytes_sent: u64,
     pub msgs_sent: usize,
+    /// Tensor-buffer requests this stage's [`TensorArena`] served by
+    /// recycling a previously freed buffer. The arena persists across
+    /// items, so steady-state batches should be almost entirely reuses.
+    pub buf_reuses: u64,
+    /// Tensor-buffer requests that had to provision a fresh buffer.
+    pub buf_allocs: u64,
 }
 
 /// Whole-pipeline statistics from [`BlockPipeline::finish`] or
@@ -169,6 +179,7 @@ struct StageCtx {
     blocks: Vec<(usize, usize, Scheme)>,
     geos: Vec<BlockGeometry>,
     nodes: usize,
+    compute: ComputeConfig,
 }
 
 enum StageOut {
@@ -218,6 +229,22 @@ impl BlockPipeline {
         depth: usize,
         leader: usize,
     ) -> BlockPipeline {
+        Self::start_with(model, plan, weights, nodes, depth, leader, ComputeConfig::default())
+    }
+
+    /// [`Self::start_with_leader`] with explicit compute tuning — the
+    /// serving router passes [`crate::serve::ServeConfig::compute`] here so
+    /// every stage sizes its tile worker pool and buffer arena from one
+    /// config.
+    pub fn start_with(
+        model: &Model,
+        plan: &Plan,
+        weights: &WeightStore,
+        nodes: usize,
+        depth: usize,
+        leader: usize,
+        compute: ComputeConfig,
+    ) -> BlockPipeline {
         assert!(depth >= 1, "pipeline depth must be >= 1");
         let (blocks, geos) = super::plan_geometry(model, plan, nodes);
         let ctx = Arc::new(StageCtx {
@@ -226,6 +253,7 @@ impl BlockPipeline {
             blocks,
             geos,
             nodes,
+            compute,
         });
         let n_stages = ctx.blocks.len();
         let (done_tx, done_rx) = channel::<Completion>();
@@ -379,7 +407,20 @@ pub fn run_pipelined(
     nodes: usize,
     depth: usize,
 ) -> (Vec<Completion>, PipelineStats) {
-    let mut pipe = BlockPipeline::start(model, plan, weights, nodes, depth);
+    run_pipelined_cfg(model, plan, weights, inputs, nodes, depth, ComputeConfig::default())
+}
+
+/// [`run_pipelined`] with explicit compute tuning.
+pub fn run_pipelined_cfg(
+    model: &Model,
+    plan: &Plan,
+    weights: &WeightStore,
+    inputs: &[Tensor],
+    nodes: usize,
+    depth: usize,
+    compute: ComputeConfig,
+) -> (Vec<Completion>, PipelineStats) {
+    let mut pipe = BlockPipeline::start_with(model, plan, weights, nodes, depth, 0, compute);
     let mut out = Vec::with_capacity(inputs.len());
     for input in inputs {
         pipe.submit(input.clone());
@@ -402,12 +443,19 @@ fn stage_main(ctx: &StageCtx, bi: usize, rx: Receiver<Item>, out: StageOut) -> S
         busy: Duration::ZERO,
         bytes_sent: 0,
         msgs_sent: 0,
+        buf_reuses: 0,
+        buf_allocs: 0,
     };
+    // The arena outlives the item loop, so buffers recycle *across* items:
+    // after the first item warms the free list, steady-state batches run
+    // allocation-free on this stage.
+    let mut arena = TensorArena::new(ctx.compute.reuse_buffers);
+    let mut items: Vec<(usize, Region)> = Vec::new();
     while let Ok(mut item) = rx.recv() {
         let t0 = Instant::now();
         let mut stores = match item.payload {
             Payload::Input(input) => {
-                let (stores, b, m) = scatter(ctx, &input);
+                let (stores, b, m) = scatter(ctx, input, &mut arena);
                 item.bytes += b;
                 item.msgs += m;
                 stats.bytes_sent += b;
@@ -417,24 +465,46 @@ fn stage_main(ctx: &StageCtx, bi: usize, rx: Receiver<Item>, out: StageOut) -> S
             Payload::Stores(stores) => stores,
         };
 
-        // Block compute: each node's (possibly NT-inflated) tiles, layer by
-        // layer — the same calls the lockstep node threads make, in node
-        // order.
+        // Block compute: every node's (possibly NT-inflated) tiles, layer
+        // by layer — the whole layer's tile set (all nodes) fans out over
+        // ctx.compute.tile_workers and merges back in (node, tile) order,
+        // so each node's store receives its patches in the same order the
+        // lockstep node threads produce them.
         let geo = &ctx.geos[bi];
-        for (node, store) in stores.iter_mut().enumerate() {
-            for l in s..=e {
-                let layer = &ctx.model.layers[l];
-                let mut next = PatchStore::new();
-                for r in &geo.tiles[l - s][node] {
-                    next.add(compute_region(layer, &ctx.weights.layers[l], store, r));
-                }
-                *store = next;
+        for l in s..=e {
+            let layer = &ctx.model.layers[l];
+            items.clear();
+            for (node, tile) in geo.tiles[l - s].iter().enumerate() {
+                items.extend(tile.iter().map(|r| (node, *r)));
             }
+            let outs = {
+                let store_refs: Vec<&PatchStore> = stores.iter().collect();
+                compute_tile_set(
+                    layer,
+                    &ctx.weights.layers[l],
+                    &store_refs,
+                    &items,
+                    &ctx.compute,
+                    &mut arena,
+                )
+            };
+            let mut next: Vec<PatchStore> = (0..ctx.nodes).map(|_| PatchStore::new()).collect();
+            for (&(node, _), o) in items.iter().zip(outs) {
+                if o.region.is_empty() {
+                    arena.give(o.t);
+                } else {
+                    next[node].add(o);
+                }
+            }
+            for store in stores.iter_mut() {
+                arena.give_store(store);
+            }
+            stores = next;
         }
 
         match &out {
             StageOut::Stage(tx) => {
-                let (next_stores, b, m) = exchange(ctx, bi, stores);
+                let (next_stores, b, m) = exchange(ctx, bi, stores, &mut arena);
                 item.bytes += b;
                 item.msgs += m;
                 stats.bytes_sent += b;
@@ -452,7 +522,7 @@ fn stage_main(ctx: &StageCtx, bi: usize, rx: Receiver<Item>, out: StageOut) -> S
                 }
             }
             StageOut::Done(tx) => {
-                let (output, b, m) = gather(ctx, stores);
+                let (output, b, m) = gather(ctx, stores, &mut arena);
                 stats.bytes_sent += b;
                 stats.msgs_sent += m;
                 stats.items += 1;
@@ -469,24 +539,26 @@ fn stage_main(ctx: &StageCtx, bi: usize, rx: Receiver<Item>, out: StageOut) -> S
             }
         }
     }
+    stats.buf_reuses = arena.reuses;
+    stats.buf_allocs = arena.allocs;
     stats
 }
 
 /// The leader slices the model input into every node's entry requirement for
-/// block 0 — same patches and byte accounting as the lockstep scatter.
-fn scatter(ctx: &StageCtx, input: &Tensor) -> (Vec<PatchStore>, u64, usize) {
+/// block 0 — same patches and byte accounting as the lockstep scatter. Takes
+/// the input by value: the leader's own store holds the submitted tensor
+/// itself, and peer slices come out of the stage arena.
+fn scatter(ctx: &StageCtx, input: Tensor, arena: &mut TensorArena) -> (Vec<PatchStore>, u64, usize) {
     let l0 = &ctx.model.layers[0];
     let full_in = Region::full(l0.in_h, l0.in_w, l0.in_c);
-    let whole = RegionTensor::new(full_in, input.clone());
+    let whole = RegionTensor::new(full_in, input);
     let entry_need = &ctx.geos[0].entry_need;
     let mut stores: Vec<PatchStore> = (0..ctx.nodes).map(|_| PatchStore::new()).collect();
     let mut bytes = 0u64;
     let mut msgs = 0usize;
-    // the leader keeps the whole input locally (free); peers receive slices
-    stores[0].add(whole.clone());
     for (to, need) in entry_need.iter().enumerate().skip(1) {
         for r in need {
-            let patch = whole.slice(&r.intersect(&full_in));
+            let patch = whole.slice_with(&r.intersect(&full_in), arena);
             if patch.region.is_empty() {
                 continue;
             }
@@ -495,13 +567,20 @@ fn scatter(ctx: &StageCtx, input: &Tensor) -> (Vec<PatchStore>, u64, usize) {
             stores[to].add(patch);
         }
     }
+    // the leader keeps the whole input locally (free)
+    stores[0].add(whole);
     (stores, bytes, msgs)
 }
 
 /// The realignment exchange out of block `bi`: every producer's canonical
 /// tiles intersected with every consumer's entry requirement, priced one
 /// message per non-empty rect — exactly the matrix the cost model charges.
-fn exchange(ctx: &StageCtx, bi: usize, mut stores: Vec<PatchStore>) -> (Vec<PatchStore>, u64, usize) {
+fn exchange(
+    ctx: &StageCtx,
+    bi: usize,
+    mut stores: Vec<PatchStore>,
+    arena: &mut TensorArena,
+) -> (Vec<PatchStore>, u64, usize) {
     let (_, e, scheme) = ctx.blocks[bi];
     let producer = &ctx.model.layers[e];
     let have = out_tiles(producer, scheme, ctx.nodes);
@@ -513,7 +592,8 @@ fn exchange(ctx: &StageCtx, bi: usize, mut stores: Vec<PatchStore>) -> (Vec<Patc
         // the one shared send rule — identical message list, order, and
         // pricing to what a lockstep node thread would put on the wire
         for (to, ov) in super::boundary_sends(&have, need, from) {
-            let dense = store.extract(&ov, &ov, true);
+            let mut dense = arena.take(0, 0, 0);
+            store.extract_into(&ov, &ov, true, &mut dense);
             bytes += dense.numel() as u64 * DTYPE_BYTES;
             msgs += 1;
             incoming[to].push(RegionTensor::new(ov, dense));
@@ -534,20 +614,29 @@ fn exchange(ctx: &StageCtx, bi: usize, mut stores: Vec<PatchStore>) -> (Vec<Patc
 }
 
 /// Gather the last layer's tiles to the leader and materialize the output.
-fn gather(ctx: &StageCtx, mut stores: Vec<PatchStore>) -> (Tensor, u64, usize) {
+/// Peer patches move (not clone) into the gathered store, and the consumed
+/// stores' buffers return to the stage arena once the output is extracted.
+fn gather(
+    ctx: &StageCtx,
+    mut stores: Vec<PatchStore>,
+    arena: &mut TensorArena,
+) -> (Tensor, u64, usize) {
     let last = ctx.model.layers.last().expect("non-empty model");
     let mut bytes = 0u64;
     let mut msgs = 0usize;
     let mut gathered = std::mem::take(&mut stores[0]);
-    for store in stores.iter().skip(1) {
-        for rt in &store.patches {
+    for store in stores.iter_mut().skip(1) {
+        for rt in store.patches.drain(..) {
             bytes += rt.t.numel() as u64 * DTYPE_BYTES;
             msgs += 1;
-            gathered.add(rt.clone());
+            gathered.add(rt);
         }
     }
     let full = Region::full(last.out_h, last.out_w, last.out_c);
-    (gathered.extract(&full, &full, true), bytes, msgs)
+    let mut out = arena.take(0, 0, 0);
+    gathered.extract_into(&full, &full, true, &mut out);
+    arena.give_store(&mut gathered);
+    (out, bytes, msgs)
 }
 
 #[cfg(test)]

@@ -12,10 +12,127 @@
 //!
 //! Layout is HWC (`idx = (y·W + x)·C + c`), matching the feature-map
 //! orientation of the partition geometry and the JAX reference.
+//!
+//! ## The hot path (§Perf)
+//!
+//! Three properties keep per-node compute near hardware speed without
+//! giving up the bit-exactness contract:
+//!
+//! * **Blocked kernels with one reduction order.** [`conv2d`] splits each
+//!   output tile into an interior (every tap in-bounds — no validity
+//!   branches) swept in pixel blocks of [`PIXEL_BLOCK`], so each contiguous
+//!   weight row `w[ky,kx,ic,:]` is streamed once per block instead of once
+//!   per pixel, plus thin boundary strips on the guarded per-pixel path.
+//!   [`dense`] row-blocks the same way. Blocking only regroups *which
+//!   elements share a weight load* — every output element still accumulates
+//!   bias first, then taps in `(ky, kx, ic)` order — so outputs are
+//!   bit-identical to the scalar kernels and across every partitioning.
+//! * **Zero-copy dispatch.** When a store already holds a single patch
+//!   covering a tile's clamped receptive field (the common case: inflated
+//!   tiles, the leader's full input, the single-node reference), the
+//!   kernels index that patch directly — no dense extract copy at all.
+//! * **Recycled buffers.** [`TensorArena`] keeps freed tensor buffers on a
+//!   free list so steady-state serving allocates ~nothing per batch, and
+//!   [`compute_tile_set`] fans a stage's tiles over a scoped worker pool
+//!   ([`ComputeConfig::tile_workers`]) with a deterministic merge by tile
+//!   index — parallel and serial execution are bitwise equal because each
+//!   tile's accumulation order never depends on who computes it.
+
+use std::cell::RefCell;
 
 use crate::model::{ConvType, LayerMeta, Model};
 use crate::partition::Region;
 use crate::util::rng::Rng;
+
+/// Tuning knobs for the node-local compute hot path. Plumbed from
+/// [`crate::serve::ServeConfig`] into both executors; the defaults keep
+/// every entry point on the parallel, buffer-recycling path so the
+/// bit-exactness audits exercise what production runs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ComputeConfig {
+    /// Worker threads a stage may fan its tiles over (1 = serial).
+    pub tile_workers: usize,
+    /// Minimum total output volume (elements) across a tile set before the
+    /// worker pool engages — below this, thread spawn overhead dominates.
+    pub parallel_threshold: i64,
+    /// Recycle tensor buffers through the per-stage [`TensorArena`].
+    /// `false` drops every returned buffer — the baseline the allocation
+    /// regression bench measures against.
+    pub reuse_buffers: bool,
+}
+
+impl Default for ComputeConfig {
+    fn default() -> Self {
+        ComputeConfig { tile_workers: 2, parallel_threshold: 4096, reuse_buffers: true }
+    }
+}
+
+impl ComputeConfig {
+    /// Single-threaded variant (buffer reuse still on) — the reference
+    /// against which the parallel path is asserted bitwise identical.
+    pub fn serial() -> ComputeConfig {
+        ComputeConfig { tile_workers: 1, ..ComputeConfig::default() }
+    }
+}
+
+/// A free list of tensor buffers: `take` prefers recycling a previously
+/// `give`n allocation over provisioning a fresh one, which removes the
+/// allocation churn of the scatter/compute/exchange cycle — each stage
+/// returns as many buffers per item as it takes, so after one warm-up item
+/// the steady state allocates nothing.
+#[derive(Debug, Default)]
+pub struct TensorArena {
+    free: Vec<Vec<f32>>,
+    reuse: bool,
+    /// Takes that had to provision a fresh buffer.
+    pub allocs: u64,
+    /// Takes served from the free list.
+    pub reuses: u64,
+}
+
+/// Free-list cap — beyond this, returned buffers are dropped instead of
+/// hoarded (a plan change can strand arbitrarily many).
+const ARENA_MAX_FREE: usize = 256;
+
+impl TensorArena {
+    pub fn new(reuse: bool) -> TensorArena {
+        TensorArena { free: Vec::new(), reuse, allocs: 0, reuses: 0 }
+    }
+
+    /// A zeroed `(h, w, c)` tensor, recycling a freed buffer when one is
+    /// available (most recently freed first, for cache locality).
+    pub fn take(&mut self, h: i64, w: i64, c: i64) -> Tensor {
+        let len = (h * w * c) as usize;
+        let mut data = match self.free.pop() {
+            Some(buf) => {
+                self.reuses += 1;
+                buf
+            }
+            None => {
+                self.allocs += 1;
+                Vec::with_capacity(len)
+            }
+        };
+        data.clear();
+        data.resize(len, 0.0);
+        Tensor { h, w, c, data }
+    }
+
+    /// Return a tensor's buffer to the free list (dropped when reuse is
+    /// disabled or the list is full).
+    pub fn give(&mut self, t: Tensor) {
+        if self.reuse && self.free.len() < ARENA_MAX_FREE {
+            self.free.push(t.data);
+        }
+    }
+
+    /// Return every patch buffer of a consumed store.
+    pub fn give_store(&mut self, store: &mut PatchStore) {
+        for p in store.patches.drain(..) {
+            self.give(p.t);
+        }
+    }
+}
 
 /// A dense f32 tensor over an `(h, w, c)` box.
 #[derive(Debug, Clone, PartialEq)]
@@ -29,6 +146,24 @@ pub struct Tensor {
 impl Tensor {
     pub fn zeros(h: i64, w: i64, c: i64) -> Tensor {
         Tensor { h, w, c, data: vec![0.0; (h * w * c) as usize] }
+    }
+
+    /// Reshape in place, reusing the buffer; contents are unspecified (the
+    /// kernels overwrite every element of the shape they fill).
+    pub fn reshape(&mut self, h: i64, w: i64, c: i64) {
+        self.h = h;
+        self.w = w;
+        self.c = c;
+        self.data.resize((h * w * c) as usize, 0.0);
+    }
+
+    /// Reshape in place and zero-fill, reusing the buffer.
+    pub fn reshape_zeroed(&mut self, h: i64, w: i64, c: i64) {
+        self.h = h;
+        self.w = w;
+        self.c = c;
+        self.data.clear();
+        self.data.resize((h * w * c) as usize, 0.0);
     }
 
     #[inline]
@@ -86,17 +221,49 @@ impl RegionTensor {
     }
 
     /// Copy the overlap between this patch and `dst_region` into `dst`
-    /// (which covers `dst_region`).
+    /// (which covers `dst_region`). Row-contiguous overlaps collapse to
+    /// `copy_from_slice` spans: whole-block when the w and c extents line
+    /// up on both sides, per-`(y)` row when the channel extents do, and
+    /// per-`(y, x)` channel lane otherwise — never the scalar triple loop.
     pub fn copy_into(&self, dst_region: &Region, dst: &mut Tensor) {
         let ov = self.region.intersect(dst_region);
         if ov.is_empty() {
             return;
         }
+        let sc = (self.region.c1 - self.region.c0) as usize;
+        let dc = (dst_region.c1 - dst_region.c0) as usize;
+        let c_len = (ov.c1 - ov.c0) as usize;
+        let sw = (self.region.w1 - self.region.w0) as usize;
+        let dw = (dst_region.w1 - dst_region.w0) as usize;
+        let w_len = (ov.w1 - ov.w0) as usize;
+        let c_aligned = c_len == sc && c_len == dc;
+        if c_aligned && w_len == sw && w_len == dw {
+            // w and c extents align on both sides: the whole overlap is one
+            // contiguous block of rows on each side
+            let s0 = (ov.h0 - self.region.h0) as usize * sw * sc;
+            let d0 = (ov.h0 - dst_region.h0) as usize * dw * dc;
+            let n = (ov.h1 - ov.h0) as usize * w_len * c_len;
+            dst.data[d0..d0 + n].copy_from_slice(&self.t.data[s0..s0 + n]);
+            return;
+        }
         for y in ov.h0..ov.h1 {
-            for x in ov.w0..ov.w1 {
-                for ch in ov.c0..ov.c1 {
-                    *dst.at_mut(y - dst_region.h0, x - dst_region.w0, ch - dst_region.c0) =
-                        self.t.at(y - self.region.h0, x - self.region.w0, ch - self.region.c0);
+            let sy = (y - self.region.h0) as usize;
+            let dy = (y - dst_region.h0) as usize;
+            if c_aligned {
+                // channel extents align: each y row of the overlap is one
+                // contiguous span of w_len·c floats on both sides
+                let s0 = (sy * sw + (ov.w0 - self.region.w0) as usize) * sc;
+                let d0 = (dy * dw + (ov.w0 - dst_region.w0) as usize) * dc;
+                dst.data[d0..d0 + w_len * c_len]
+                    .copy_from_slice(&self.t.data[s0..s0 + w_len * c_len]);
+            } else {
+                // general case: per-pixel contiguous channel lanes
+                for x in ov.w0..ov.w1 {
+                    let s0 = (sy * sw + (x - self.region.w0) as usize) * sc
+                        + (ov.c0 - self.region.c0) as usize;
+                    let d0 = (dy * dw + (x - dst_region.w0) as usize) * dc
+                        + (ov.c0 - dst_region.c0) as usize;
+                    dst.data[d0..d0 + c_len].copy_from_slice(&self.t.data[s0..s0 + c_len]);
                 }
             }
         }
@@ -105,8 +272,21 @@ impl RegionTensor {
     /// Extract a sub-region as a new RegionTensor (for sending halos).
     pub fn slice(&self, sub: &Region) -> RegionTensor {
         let ov = self.region.intersect(sub);
-        let mut t =
-            Tensor::zeros(ov.h1 - ov.h0, ov.w1 - ov.w0, ov.c1 - ov.c0);
+        if ov.is_empty() {
+            return RegionTensor::new(Region::empty(), Tensor::zeros(0, 0, 0));
+        }
+        let mut t = Tensor::zeros(ov.h1 - ov.h0, ov.w1 - ov.w0, ov.c1 - ov.c0);
+        self.copy_into(&ov, &mut t);
+        RegionTensor::new(ov, t)
+    }
+
+    /// [`Self::slice`] drawing the destination buffer from `arena`.
+    pub fn slice_with(&self, sub: &Region, arena: &mut TensorArena) -> RegionTensor {
+        let ov = self.region.intersect(sub);
+        if ov.is_empty() {
+            return RegionTensor::new(Region::empty(), Tensor::zeros(0, 0, 0));
+        }
+        let mut t = arena.take(ov.h1 - ov.h0, ov.w1 - ov.w0, ov.c1 - ov.c0);
         self.copy_into(&ov, &mut t);
         RegionTensor::new(ov, t)
     }
@@ -130,34 +310,91 @@ impl PatchStore {
         }
     }
 
+    /// The first patch whose region contains all of `needed` — the
+    /// zero-copy dispatch target: kernels can index it directly instead of
+    /// extracting a dense working copy.
+    fn covering(&self, needed: &Region) -> Option<&RegionTensor> {
+        if needed.is_empty() {
+            return None;
+        }
+        self.patches.iter().find(|p| p.region.contains(needed))
+    }
+
     /// Materialize `region` as a dense tensor from the stored patches.
     /// `require_full` panics on coverage gaps inside the valid extent
     /// `valid` — gaps mean the exchange protocol failed to deliver data
     /// (outside `valid` is implicit zero padding).
     pub fn extract(&self, region: &Region, valid: &Region, require_full: bool) -> Tensor {
-        let mut out = Tensor::zeros(
+        let mut out = Tensor::zeros(0, 0, 0);
+        self.extract_into(region, valid, require_full, &mut out);
+        out
+    }
+
+    /// [`Self::extract`] into a caller-provided buffer (reshaped in place),
+    /// so repeated extracts on the serving hot path recycle one allocation.
+    pub fn extract_into(
+        &self,
+        region: &Region,
+        valid: &Region,
+        require_full: bool,
+        out: &mut Tensor,
+    ) {
+        out.reshape_zeroed(
             region.h1 - region.h0,
             region.w1 - region.w0,
             region.c1 - region.c0,
         );
         for p in &self.patches {
-            p.copy_into(region, &mut out);
+            p.copy_into(region, out);
         }
         if require_full {
             let needed = region.intersect(valid);
-            let covered = crate::partition::intersection_volume(
-                &self.patches.iter().map(|p| p.region).collect::<Vec<_>>(),
-                &[needed],
-            );
+            let missing = uncovered_volume(&needed, &self.patches);
             assert_eq!(
-                covered,
-                needed.volume(),
-                "coverage gap extracting {region:?}: have {covered} of {} cells",
+                missing,
+                0,
+                "coverage gap extracting {region:?}: have {} of {} cells",
+                needed.volume() - missing,
                 needed.volume()
             );
         }
-        out
     }
+}
+
+/// Volume of `needed` not covered by any patch region — the extract
+/// coverage audit, computed by recursive box subtraction with no
+/// intermediate region list: the first overlapping patch is carved out of
+/// `needed` (≤ 6 disjoint remainder boxes), each remainder recursing over
+/// the *later* patches only (earlier ones were already checked against an
+/// enclosing box and cannot intersect a remainder).
+fn uncovered_volume(needed: &Region, patches: &[RegionTensor]) -> i64 {
+    if needed.is_empty() {
+        return 0;
+    }
+    let mut hit = None;
+    for (i, p) in patches.iter().enumerate() {
+        let ov = p.region.intersect(needed);
+        if !ov.is_empty() {
+            hit = Some((i, ov));
+            break;
+        }
+    }
+    let Some((i, ov)) = hit else {
+        return needed.volume();
+    };
+    let rest = &patches[i + 1..];
+    let r = *needed;
+    // needed \ ov as disjoint boxes: h slabs above/below, then w slabs
+    // within the h band, then c slabs within the (h, w) band
+    let subs = [
+        Region { h1: ov.h0, ..r },
+        Region { h0: ov.h1, ..r },
+        Region { h0: ov.h0, h1: ov.h1, w1: ov.w0, ..r },
+        Region { h0: ov.h0, h1: ov.h1, w0: ov.w1, ..r },
+        Region { h0: ov.h0, h1: ov.h1, w0: ov.w0, w1: ov.w1, c1: ov.c0, ..r },
+        Region { h0: ov.h0, h1: ov.h1, w0: ov.w0, w1: ov.w1, c0: ov.c1, ..r },
+    ];
+    subs.iter().filter(|s| !s.is_empty()).map(|s| uncovered_volume(s, rest)).sum()
 }
 
 /// Per-layer weights (deterministically generated — the "pre-trained model"
@@ -216,31 +453,113 @@ pub fn compute_region(
     if out_r.is_empty() {
         return RegionTensor::new(Region::empty(), Tensor::zeros(0, 0, 0));
     }
+    let mut scratch = Tensor::zeros(0, 0, 0);
+    let mut out = Tensor::zeros(0, 0, 0);
+    compute_region_into(layer, weights, store, out_r, &mut scratch, &mut out);
+    RegionTensor::new(*out_r, out)
+}
+
+/// [`compute_region`] with caller-provided buffers: `scratch` holds the
+/// dense extract when one is needed, `out` is reshaped to the tile. When
+/// the store holds a single patch covering the tile's clamped receptive
+/// field, the kernels dispatch on the patch buffer directly — no copy.
+fn compute_region_into(
+    layer: &LayerMeta,
+    weights: &LayerWeights,
+    store: &PatchStore,
+    out_r: &Region,
+    scratch: &mut Tensor,
+    out: &mut Tensor,
+) {
     let in_needed = crate::partition::geometry::in_region(layer, out_r);
     let valid = Region::full(layer.in_h, layer.in_w, layer.in_c);
+    let needed = valid.intersect(&in_needed);
+    if let Some(p) = store.covering(&needed) {
+        // zero-copy fast path: the kernels clamp every tap into the valid
+        // extent, and `p` covers all of it
+        dispatch_kernel(layer, weights, &p.t, &p.region, out_r, out);
+        return;
+    }
     // Hull covering the receptive field *before* clamping, so padded reads
     // index zeros naturally.
     let raw = unclamped_in_region(layer, out_r);
-    let input = store.extract(&raw, &valid.intersect(&in_needed), true);
-    let mut out = Tensor::zeros(out_r.h1 - out_r.h0, out_r.w1 - out_r.w0, out_r.c1 - out_r.c0);
+    store.extract_into(&raw, &needed, true, scratch);
+    dispatch_kernel(layer, weights, scratch, &raw, out_r, out);
+}
 
-    match layer.conv_t {
-        ConvType::Standard | ConvType::Pointwise => {
-            conv2d(layer, weights, &input, &raw, out_r, &mut out, false)
+/// Compute a set of output tiles — `(store index, output region)` work
+/// items — returning one [`RegionTensor`] per item, in item order. With
+/// `cfg.tile_workers > 1` and enough total volume the items fan out over a
+/// scoped worker pool in contiguous chunks; chunked results merge back in
+/// item order and every tile's accumulation order is fixed by the kernels,
+/// so parallel execution is bitwise identical to serial. Output and
+/// scratch buffers come from (and scratches return to) `arena`.
+pub fn compute_tile_set(
+    layer: &LayerMeta,
+    weights: &LayerWeights,
+    stores: &[&PatchStore],
+    items: &[(usize, Region)],
+    cfg: &ComputeConfig,
+    arena: &mut TensorArena,
+) -> Vec<RegionTensor> {
+    let total: i64 = items.iter().map(|(_, r)| r.volume()).sum();
+    let workers = cfg.tile_workers.max(1).min(items.len());
+    if workers <= 1 || items.len() < 2 || total < cfg.parallel_threshold {
+        let mut scratch = arena.take(0, 0, 0);
+        let mut results = Vec::with_capacity(items.len());
+        for (si, r) in items {
+            let mut out = arena.take(0, 0, 0);
+            if r.is_empty() {
+                out.reshape_zeroed(0, 0, 0);
+                results.push(RegionTensor::new(Region::empty(), out));
+            } else {
+                compute_region_into(layer, weights, stores[*si], r, &mut scratch, &mut out);
+                results.push(RegionTensor::new(*r, out));
+            }
         }
-        ConvType::Depthwise => conv2d(layer, weights, &input, &raw, out_r, &mut out, true),
-        ConvType::Pool => pool_avg(layer, &input, &raw, out_r, &mut out),
-        ConvType::Dense | ConvType::Attention => {
-            dense(layer, weights, &input, &raw, out_r, &mut out)
-        }
+        arena.give(scratch);
+        return results;
     }
 
-    if layer.fused_activation {
-        for v in &mut out.data {
-            *v = v.max(0.0);
+    // pre-provision every buffer serially (the arena is not shared), then
+    // fan contiguous chunks over scoped workers — one scratch each
+    let chunk = items.len().div_ceil(workers);
+    let n_chunks = items.len().div_ceil(chunk);
+    let mut outs: Vec<Tensor> = (0..items.len()).map(|_| arena.take(0, 0, 0)).collect();
+    let mut scratches: Vec<Tensor> = (0..n_chunks).map(|_| arena.take(0, 0, 0)).collect();
+    std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(n_chunks);
+        for ((ich, och), scratch) in
+            items.chunks(chunk).zip(outs.chunks_mut(chunk)).zip(scratches.iter_mut())
+        {
+            handles.push(s.spawn(move || {
+                for ((si, r), out) in ich.iter().zip(och.iter_mut()) {
+                    if r.is_empty() {
+                        out.reshape_zeroed(0, 0, 0);
+                    } else {
+                        compute_region_into(layer, weights, stores[*si], r, scratch, out);
+                    }
+                }
+            }));
         }
+        for h in handles {
+            h.join().expect("tile worker panicked");
+        }
+    });
+    for s in scratches {
+        arena.give(s);
     }
-    RegionTensor::new(*out_r, out)
+    items
+        .iter()
+        .zip(outs)
+        .map(|(&(_, r), t)| {
+            if r.is_empty() {
+                RegionTensor::new(Region::empty(), t)
+            } else {
+                RegionTensor::new(r, t)
+            }
+        })
+        .collect()
 }
 
 /// The receptive-field hull of `out_r` *without* clamping to the input
@@ -263,11 +582,72 @@ pub fn unclamped_in_region(layer: &LayerMeta, r: &Region) -> Region {
     }
 }
 
-/// Standard/pointwise conv, axpy-structured for vectorization (§Perf):
-/// per output pixel, accumulate `acc[oc_range] += x[y,x,ic] · w[ky,kx,ic,:]`
-/// over taps — the weight row over `oc` is contiguous in the
-/// `(ky, kx, ic, oc)` layout, so the inner loop autovectorizes, and all
-/// index arithmetic is hoisted out of it.
+thread_local! {
+    /// Per-thread accumulator scratch shared by every kernel invocation on
+    /// the thread — kernels resize it at entry and overwrite from the bias
+    /// before reading, so reuse never leaks values between calls.
+    static ACC: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+}
+
+/// The single kernel dispatch every execution path funnels through —
+/// single-node reference, lockstep node tiles and pipelined stages all
+/// compute each output element with the identical accumulation sequence
+/// (bias, then taps in `(ky, kx, ic)` order), which is what makes
+/// distributed outputs bit-identical to the reference. `input` is a dense
+/// tensor covering `in_r`, which must contain every *valid* receptive
+/// position of `out_r` (with `in_r.c0 <= 0` for full-channel ops).
+fn dispatch_kernel(
+    layer: &LayerMeta,
+    weights: &LayerWeights,
+    input: &Tensor,
+    in_r: &Region,
+    out_r: &Region,
+    out: &mut Tensor,
+) {
+    let (oh, ow, oc) = (out_r.h1 - out_r.h0, out_r.w1 - out_r.w0, out_r.c1 - out_r.c0);
+    match layer.conv_t {
+        // dense writes only the x = 0 column (rows live on h, w == 1);
+        // zero-fill covers any wider extent
+        ConvType::Dense | ConvType::Attention => out.reshape_zeroed(oh, ow, oc),
+        // conv/pool kernels overwrite every element — plain reshape
+        _ => out.reshape(oh, ow, oc),
+    }
+    ACC.with(|cell| {
+        let mut guard = cell.borrow_mut();
+        let acc: &mut Vec<f32> = &mut guard;
+        match layer.conv_t {
+            ConvType::Standard | ConvType::Pointwise => {
+                conv2d(layer, weights, input, in_r, out_r, out, acc)
+            }
+            ConvType::Depthwise => conv2d_depthwise(layer, weights, input, in_r, out_r, out, acc),
+            ConvType::Pool => pool_avg(layer, input, in_r, out_r, out, acc),
+            ConvType::Dense | ConvType::Attention => {
+                dense(layer, weights, input, in_r, out_r, out, acc)
+            }
+        }
+    });
+    if layer.fused_activation {
+        for v in &mut out.data {
+            *v = v.max(0.0);
+        }
+    }
+}
+
+/// Output pixels swept per weight-row pass in the blocked conv interior —
+/// the knob that turns the conv from weight-bandwidth-bound (the whole
+/// filter streamed per pixel) into compute-bound (streamed once per
+/// block).
+const PIXEL_BLOCK: usize = 16;
+
+/// Rows swept per weight pass in the blocked dense matmul.
+const ROW_BLOCK: usize = 8;
+
+/// Standard/pointwise conv, blocked for cache reuse: the tile splits into
+/// an interior whose receptive fields are entirely in-bounds (no validity
+/// branches, [`PIXEL_BLOCK`]-pixel microkernel over the contiguous `oc`
+/// weight rows) and thin boundary strips on the guarded per-pixel path.
+/// Both paths accumulate each element as bias, then `(ky, kx, ic)` taps
+/// ascending — the one reduction order.
 #[allow(clippy::too_many_arguments)]
 fn conv2d(
     layer: &LayerMeta,
@@ -276,13 +656,40 @@ fn conv2d(
     in_r: &Region,
     out_r: &Region,
     out: &mut Tensor,
-    depthwise: bool,
+    acc: &mut Vec<f32>,
 ) {
-    if depthwise {
-        return conv2d_depthwise(layer, weights, input, in_r, out_r, out);
-    }
-    if layer.k == 1 && layer.s == 1 && layer.p == 0 {
-        return conv2d_pointwise(layer, weights, input, in_r, out_r, out);
+    let (k, s, p) = (layer.k, layer.s, layer.p);
+    // interior bounds: oy*s - p >= 0 and oy*s - p + k <= in_h (same for x)
+    let iy0 = out_r.h0.max((p + s - 1) / s).min(out_r.h1);
+    let last_y = layer.in_h - k + p;
+    let iy1 = if last_y >= 0 { (last_y / s + 1).clamp(iy0, out_r.h1) } else { iy0 };
+    let ix0 = out_r.w0.max((p + s - 1) / s).min(out_r.w1);
+    let last_x = layer.in_w - k + p;
+    let ix1 = if last_x >= 0 { (last_x / s + 1).clamp(ix0, out_r.w1) } else { ix0 };
+
+    conv2d_edge(layer, weights, input, in_r, out_r, out, (out_r.h0, iy0), (out_r.w0, out_r.w1), acc);
+    conv2d_edge(layer, weights, input, in_r, out_r, out, (iy1, out_r.h1), (out_r.w0, out_r.w1), acc);
+    conv2d_edge(layer, weights, input, in_r, out_r, out, (iy0, iy1), (out_r.w0, ix0), acc);
+    conv2d_edge(layer, weights, input, in_r, out_r, out, (iy0, iy1), (ix1, out_r.w1), acc);
+    conv2d_interior(layer, weights, input, in_r, out_r, out, (iy0, iy1), (ix0, ix1), acc);
+}
+
+/// Boundary-strip conv: per-pixel, with the invalid taps clipped out of the
+/// `ky`/`kx` ranges up front instead of branch-tested per tap.
+#[allow(clippy::too_many_arguments)]
+fn conv2d_edge(
+    layer: &LayerMeta,
+    weights: &LayerWeights,
+    input: &Tensor,
+    in_r: &Region,
+    out_r: &Region,
+    out: &mut Tensor,
+    ys: (i64, i64),
+    xs: (i64, i64),
+    acc: &mut Vec<f32>,
+) {
+    if ys.0 >= ys.1 || xs.0 >= xs.1 {
+        return;
     }
     let (k, s, p) = (layer.k, layer.s, layer.p);
     let in_c = layer.in_c as usize;
@@ -291,105 +698,126 @@ fn conv2d(
     let oc1 = out_r.c1 as usize;
     let oc_len = oc1 - oc0;
     let bias = &weights.b[oc0..oc1];
-    let in_w_stride = (in_r.w1 - in_r.w0) as usize * in_c;
-    let mut acc = vec![0.0f32; oc_len];
+    let in_cw = (in_r.c1 - in_r.c0) as usize;
+    let in_row = (in_r.w1 - in_r.w0) as usize * in_cw;
+    let c_off = (0i64 - in_r.c0) as usize; // full channel range ⇒ c0 <= 0
+    let ow = (out_r.w1 - out_r.w0) as usize;
+    acc.clear();
+    acc.resize(oc_len, 0.0);
 
-    for oy in out_r.h0..out_r.h1 {
-        for ox in out_r.w0..out_r.w1 {
+    for oy in ys.0..ys.1 {
+        let y0 = oy * s - p;
+        let ky0 = (-y0).max(0);
+        let ky1 = k.min(layer.in_h - y0);
+        for ox in xs.0..xs.1 {
+            let x0 = ox * s - p;
+            let kx0 = (-x0).max(0);
+            let kx1 = k.min(layer.in_w - x0);
             acc.copy_from_slice(bias);
-            for ky in 0..k {
-                let y = oy * s - p + ky;
-                if y < 0 || y >= layer.in_h {
-                    continue;
-                }
-                let row_base = (y - in_r.h0) as usize * in_w_stride;
-                for kx in 0..k {
-                    let x = ox * s - p + kx;
-                    if x < 0 || x >= layer.in_w {
-                        continue;
-                    }
-                    let px_base = row_base
-                        + (x - in_r.w0) as usize * in_c
-                        + (0i64 - in_r.c0) as usize; // full channel range ⇒ c0 = 0
-                    let xs = &input.data[px_base..px_base + in_c];
+            for ky in ky0..ky1 {
+                let row = (y0 + ky - in_r.h0) as usize * in_row;
+                for kx in kx0..kx1 {
+                    let px = row + (x0 + kx - in_r.w0) as usize * in_cw + c_off;
+                    let xv_lane = &input.data[px..px + in_c];
                     let w_tap = ((ky * k + kx) as usize) * in_c * out_c;
-                    for (ic, &xv) in xs.iter().enumerate() {
+                    for (ic, &xv) in xv_lane.iter().enumerate() {
                         if xv == 0.0 {
                             continue; // padding-adjacent zeros are common
                         }
-                        let wrow = &weights.w[w_tap + ic * out_c + oc0..w_tap + ic * out_c + oc1];
+                        let wrow =
+                            &weights.w[w_tap + ic * out_c + oc0..w_tap + ic * out_c + oc1];
                         for (a, &wv) in acc.iter_mut().zip(wrow) {
                             *a += xv * wv;
                         }
                     }
                 }
             }
-            let out_base = ((oy - out_r.h0) * (out_r.w1 - out_r.w0) + (ox - out_r.w0)) as usize
-                * oc_len;
-            out.data[out_base..out_base + oc_len].copy_from_slice(&acc);
+            let ob = ((oy - out_r.h0) as usize * ow + (ox - out_r.w0) as usize) * oc_len;
+            out.data[ob..ob + oc_len].copy_from_slice(&acc[..]);
         }
     }
 }
 
-/// Pointwise (1×1/s1/p0) fast path: a pure `(pixels × in_c) @ (in_c ×
-/// out_c)` matmul with 4-pixel row blocking for ILP — pointwise convs carry
-/// most of the FLOPs in MobileNet-style models (§Perf).
-fn conv2d_pointwise(
+/// Interior conv microkernel: every tap in-bounds, so the tile sweeps in
+/// [`PIXEL_BLOCK`]-pixel groups and each contiguous weight row
+/// `w[ky,kx,ic,:]` is loaded once per group instead of once per pixel —
+/// the cache-blocking that carries the conv speedup. The per-element
+/// accumulation order is unchanged from the edge path.
+#[allow(clippy::too_many_arguments)]
+fn conv2d_interior(
     layer: &LayerMeta,
     weights: &LayerWeights,
     input: &Tensor,
     in_r: &Region,
     out_r: &Region,
     out: &mut Tensor,
+    ys: (i64, i64),
+    xs: (i64, i64),
+    acc: &mut Vec<f32>,
 ) {
+    if ys.0 >= ys.1 || xs.0 >= xs.1 {
+        return;
+    }
+    let (k, s, p) = (layer.k, layer.s, layer.p);
     let in_c = layer.in_c as usize;
     let out_c = layer.out_c as usize;
     let oc0 = out_r.c0 as usize;
     let oc1 = out_r.c1 as usize;
     let oc_len = oc1 - oc0;
     let bias = &weights.b[oc0..oc1];
-    let in_w_stride = (in_r.w1 - in_r.w0) as usize * in_c;
-    let ow_len = (out_r.w1 - out_r.w0) as usize;
-    let mut acc = vec![0.0f32; 4 * oc_len];
+    let in_cw = (in_r.c1 - in_r.c0) as usize;
+    let in_row = (in_r.w1 - in_r.w0) as usize * in_cw;
+    let c_off = (0i64 - in_r.c0) as usize;
+    let ow = (out_r.w1 - out_r.w0) as usize;
+    acc.clear();
+    acc.resize(PIXEL_BLOCK * oc_len, 0.0);
 
-    for oy in out_r.h0..out_r.h1 {
-        let row_base = (oy - in_r.h0) as usize * in_w_stride;
-        let mut ox = out_r.w0;
-        while ox < out_r.w1 {
-            let blk = ((out_r.w1 - ox) as usize).min(4);
-            for b in 0..blk {
+    for oy in ys.0..ys.1 {
+        let y0 = oy * s - p;
+        let mut ox = xs.0;
+        while ox < xs.1 {
+            let pb = ((xs.1 - ox) as usize).min(PIXEL_BLOCK);
+            for b in 0..pb {
                 acc[b * oc_len..(b + 1) * oc_len].copy_from_slice(bias);
             }
-            for ic in 0..in_c {
-                let wrow = &weights.w[ic * out_c + oc0..ic * out_c + oc1];
-                for b in 0..blk {
-                    let xv = input.data
-                        [row_base + (ox + b as i64 - in_r.w0) as usize * in_c + ic];
-                    if xv == 0.0 {
-                        continue;
+            for ky in 0..k {
+                let row = (y0 + ky - in_r.h0) as usize * in_row;
+                for kx in 0..k {
+                    let x0 = ox * s - p + kx;
+                    let mut px = [0usize; PIXEL_BLOCK];
+                    for (b, pxb) in px.iter_mut().enumerate().take(pb) {
+                        *pxb = row + (x0 + b as i64 * s - in_r.w0) as usize * in_cw + c_off;
                     }
-                    let a = &mut acc[b * oc_len..(b + 1) * oc_len];
-                    for (aj, &wv) in a.iter_mut().zip(wrow) {
-                        *aj += xv * wv;
+                    let w_tap = ((ky * k + kx) as usize) * in_c * out_c;
+                    for ic in 0..in_c {
+                        let wrow =
+                            &weights.w[w_tap + ic * out_c + oc0..w_tap + ic * out_c + oc1];
+                        for b in 0..pb {
+                            let xv = input.data[px[b] + ic];
+                            if xv == 0.0 {
+                                continue;
+                            }
+                            let a = &mut acc[b * oc_len..(b + 1) * oc_len];
+                            for (aj, &wv) in a.iter_mut().zip(wrow) {
+                                *aj += xv * wv;
+                            }
+                        }
                     }
                 }
             }
-            for b in 0..blk {
-                let out_base = ((oy - out_r.h0) as usize * ow_len
-                    + (ox - out_r.w0) as usize
-                    + b)
-                    * oc_len;
-                out.data[out_base..out_base + oc_len]
-                    .copy_from_slice(&acc[b * oc_len..(b + 1) * oc_len]);
+            for b in 0..pb {
+                let ob =
+                    ((oy - out_r.h0) as usize * ow + (ox - out_r.w0) as usize + b) * oc_len;
+                out.data[ob..ob + oc_len].copy_from_slice(&acc[b * oc_len..(b + 1) * oc_len]);
             }
-            ox += blk as i64;
+            ox += pb as i64;
         }
     }
 }
 
 /// Depthwise conv: one filter per channel; the inner loop runs over the
 /// contiguous channel lane (`w[ky,kx,:]` and `x[y,x,:]` are both
-/// channel-contiguous).
+/// channel-contiguous), with invalid taps clipped out of the ranges.
 fn conv2d_depthwise(
     layer: &LayerMeta,
     weights: &LayerWeights,
@@ -397,74 +825,101 @@ fn conv2d_depthwise(
     in_r: &Region,
     out_r: &Region,
     out: &mut Tensor,
+    acc: &mut Vec<f32>,
 ) {
     let (k, s, p) = (layer.k, layer.s, layer.p);
     let out_c = layer.out_c as usize;
     let c0 = out_r.c0;
     let c_len = (out_r.c1 - out_r.c0) as usize;
-    let in_c_len = (in_r.c1 - in_r.c0) as usize;
-    let in_w_stride = (in_r.w1 - in_r.w0) as usize * in_c_len;
+    let in_cw = (in_r.c1 - in_r.c0) as usize;
+    let in_row = (in_r.w1 - in_r.w0) as usize * in_cw;
     let bias = &weights.b[c0 as usize..out_r.c1 as usize];
-    let mut acc = vec![0.0f32; c_len];
+    let ow = (out_r.w1 - out_r.w0) as usize;
+    acc.clear();
+    acc.resize(c_len, 0.0);
 
     for oy in out_r.h0..out_r.h1 {
+        let y0 = oy * s - p;
+        let ky0 = (-y0).max(0);
+        let ky1 = k.min(layer.in_h - y0);
         for ox in out_r.w0..out_r.w1 {
+            let x0 = ox * s - p;
+            let kx0 = (-x0).max(0);
+            let kx1 = k.min(layer.in_w - x0);
             acc.copy_from_slice(bias);
-            for ky in 0..k {
-                let y = oy * s - p + ky;
-                if y < 0 || y >= layer.in_h {
-                    continue;
-                }
-                for kx in 0..k {
-                    let x = ox * s - p + kx;
-                    if x < 0 || x >= layer.in_w {
-                        continue;
-                    }
+            for ky in ky0..ky1 {
+                let row = (y0 + ky - in_r.h0) as usize * in_row;
+                for kx in kx0..kx1 {
                     // input channel range mirrors the output's (c0..c1)
-                    let px = (y - in_r.h0) as usize * in_w_stride
-                        + (x - in_r.w0) as usize * in_c_len
-                        + (c0 - in_r.c0) as usize;
-                    let xs = &input.data[px..px + c_len];
+                    let px = row + (x0 + kx - in_r.w0) as usize * in_cw + (c0 - in_r.c0) as usize;
+                    let xv_lane = &input.data[px..px + c_len];
                     let wq = ((ky * k + kx) as usize) * out_c + c0 as usize;
                     let ws = &weights.w[wq..wq + c_len];
-                    for ((a, &xv), &wv) in acc.iter_mut().zip(xs).zip(ws) {
+                    for ((a, &xv), &wv) in acc.iter_mut().zip(xv_lane).zip(ws) {
                         *a += xv * wv;
                     }
                 }
             }
-            let out_base = ((oy - out_r.h0) * (out_r.w1 - out_r.w0) + (ox - out_r.w0)) as usize
-                * c_len;
-            out.data[out_base..out_base + c_len].copy_from_slice(&acc);
+            let ob = ((oy - out_r.h0) as usize * ow + (ox - out_r.w0) as usize) * c_len;
+            out.data[ob..ob + c_len].copy_from_slice(&acc[..]);
         }
     }
 }
 
-fn pool_avg(layer: &LayerMeta, input: &Tensor, in_r: &Region, out_r: &Region, out: &mut Tensor) {
+/// Average pool over the contiguous channel lane (one accumulator vector
+/// per pixel instead of a scalar per channel); padded taps are clipped out
+/// of the ranges and the divisor stays `k²` (count-include-pad semantics,
+/// same bits as the scalar kernel's per-element division).
+fn pool_avg(
+    layer: &LayerMeta,
+    input: &Tensor,
+    in_r: &Region,
+    out_r: &Region,
+    out: &mut Tensor,
+    acc: &mut Vec<f32>,
+) {
     let (k, s, p) = (layer.k, layer.s, layer.p);
+    let c0 = out_r.c0;
+    let c_len = (out_r.c1 - out_r.c0) as usize;
+    let in_cw = (in_r.c1 - in_r.c0) as usize;
+    let in_row = (in_r.w1 - in_r.w0) as usize * in_cw;
+    let ow = (out_r.w1 - out_r.w0) as usize;
+    let div = (k * k) as f32;
+    acc.clear();
+    acc.resize(c_len, 0.0);
+
     for oy in out_r.h0..out_r.h1 {
+        let y0 = oy * s - p;
+        let ky0 = (-y0).max(0);
+        let ky1 = k.min(layer.in_h - y0);
         for ox in out_r.w0..out_r.w1 {
-            for oc in out_r.c0..out_r.c1 {
-                let mut acc = 0.0f32;
-                for ky in 0..k {
-                    let y = oy * s - p + ky;
-                    if y < 0 || y >= layer.in_h {
-                        continue;
-                    }
-                    for kx in 0..k {
-                        let x = ox * s - p + kx;
-                        if x < 0 || x >= layer.in_w {
-                            continue;
-                        }
-                        acc += input.at(y - in_r.h0, x - in_r.w0, oc - in_r.c0);
+            let x0 = ox * s - p;
+            let kx0 = (-x0).max(0);
+            let kx1 = k.min(layer.in_w - x0);
+            for a in acc.iter_mut() {
+                *a = 0.0;
+            }
+            for ky in ky0..ky1 {
+                let row = (y0 + ky - in_r.h0) as usize * in_row;
+                for kx in kx0..kx1 {
+                    let px = row + (x0 + kx - in_r.w0) as usize * in_cw + (c0 - in_r.c0) as usize;
+                    for (a, &v) in acc.iter_mut().zip(&input.data[px..px + c_len]) {
+                        *a += v;
                     }
                 }
-                *out.at_mut(oy - out_r.h0, ox - out_r.w0, oc - out_r.c0) =
-                    acc / (k * k) as f32;
+            }
+            let ob = ((oy - out_r.h0) as usize * ow + (ox - out_r.w0) as usize) * c_len;
+            for (o, &a) in out.data[ob..ob + c_len].iter_mut().zip(&acc[..]) {
+                *o = a / div;
             }
         }
     }
 }
 
+/// Blocked dense matmul: `(rows × in_c) @ (in_c × out_c)` with rows on the
+/// h axis (w == 1), swept [`ROW_BLOCK`] rows per pass so each contiguous
+/// weight row `w[ic,:]` is loaded once per block. Per element the taps
+/// accumulate in ascending `ic` order — same bits as the scalar loop.
 fn dense(
     layer: &LayerMeta,
     weights: &LayerWeights,
@@ -472,37 +927,67 @@ fn dense(
     in_r: &Region,
     out_r: &Region,
     out: &mut Tensor,
+    acc: &mut Vec<f32>,
 ) {
-    // (rows × in_c) @ (in_c × out_c); rows live on the h axis, w == 1.
-    for row in out_r.h0..out_r.h1 {
-        for oc in out_r.c0..out_r.c1 {
-            let mut acc = weights.b[oc as usize];
-            for ic in 0..layer.in_c {
-                acc += weights.w[(ic * layer.out_c + oc) as usize]
-                    * input.at(row - in_r.h0, 0, ic - in_r.c0);
-            }
-            *out.at_mut(row - out_r.h0, 0, oc - out_r.c0) = acc;
+    let in_c = layer.in_c as usize;
+    let out_c = layer.out_c as usize;
+    let oc0 = out_r.c0 as usize;
+    let oc1 = out_r.c1 as usize;
+    let oc_len = oc1 - oc0;
+    let bias = &weights.b[oc0..oc1];
+    let in_cw = (in_r.c1 - in_r.c0) as usize;
+    let in_row = (in_r.w1 - in_r.w0) as usize * in_cw;
+    let c_off = (0i64 - in_r.c0) as usize;
+    let ow = (out_r.w1 - out_r.w0) as usize;
+    acc.clear();
+    acc.resize(ROW_BLOCK * oc_len, 0.0);
+
+    let mut row = out_r.h0;
+    while row < out_r.h1 {
+        let rb = ((out_r.h1 - row) as usize).min(ROW_BLOCK);
+        for b in 0..rb {
+            acc[b * oc_len..(b + 1) * oc_len].copy_from_slice(bias);
         }
+        let mut xb = [0usize; ROW_BLOCK];
+        for (b, x) in xb.iter_mut().enumerate().take(rb) {
+            *x = (row + b as i64 - in_r.h0) as usize * in_row + c_off;
+        }
+        for ic in 0..in_c {
+            let wrow = &weights.w[ic * out_c + oc0..ic * out_c + oc1];
+            for b in 0..rb {
+                let xv = input.data[xb[b] + ic];
+                let a = &mut acc[b * oc_len..(b + 1) * oc_len];
+                for (aj, &wv) in a.iter_mut().zip(wrow) {
+                    *aj += xv * wv;
+                }
+            }
+        }
+        for b in 0..rb {
+            let ob = (row + b as i64 - out_r.h0) as usize * ow * oc_len;
+            out.data[ob..ob + oc_len].copy_from_slice(&acc[b * oc_len..(b + 1) * oc_len]);
+        }
+        row += rb as i64;
     }
 }
 
 /// Single-node reference: run the whole model on one device. The oracle for
-/// every distributed-execution test.
+/// every distributed-execution test. Double-buffered: two tensors ping-pong
+/// as each layer's input and output — no per-layer clone, no patch store,
+/// no allocation past the first layer's growth to the largest activation.
 pub fn run_reference(model: &Model, weights: &WeightStore, input: &Tensor) -> Tensor {
     assert_eq!(
         (input.h, input.w, input.c),
         (model.layers[0].in_h, model.layers[0].in_w, model.layers[0].in_c),
         "input shape mismatch"
     );
-    let mut cur = input.clone();
+    let mut cur = Tensor::zeros(0, 0, 0);
+    let mut next = Tensor::zeros(0, 0, 0);
     for (i, layer) in model.layers.iter().enumerate() {
-        let mut store = PatchStore::new();
-        store.add(RegionTensor::new(
-            Region::full(layer.in_h, layer.in_w, layer.in_c),
-            cur,
-        ));
+        let in_full = Region::full(layer.in_h, layer.in_w, layer.in_c);
         let out_full = Region::full(layer.out_h, layer.out_w, layer.out_c);
-        cur = compute_region(layer, &weights.layers[i], &store, &out_full).t;
+        let src = if i == 0 { input } else { &cur };
+        dispatch_kernel(layer, &weights.layers[i], src, &in_full, &out_full, &mut next);
+        std::mem::swap(&mut cur, &mut next);
     }
     cur
 }
@@ -673,5 +1158,89 @@ mod tests {
         // deterministic
         let out2 = run_reference(&model, &ws, &input);
         assert_eq!(out.data, out2.data);
+    }
+
+    #[test]
+    fn uncovered_volume_matches_intersection_volume() {
+        // the allocation-free coverage check must agree with the original
+        // collect-then-union formulation on overlapping, partial and
+        // disjoint patch sets
+        let needed = Region::new(2, 10, 1, 9, 0, 4);
+        let patch_sets: Vec<Vec<Region>> = vec![
+            vec![],
+            vec![Region::new(0, 12, 0, 12, 0, 4)],
+            vec![Region::new(2, 6, 1, 9, 0, 4), Region::new(6, 10, 1, 9, 0, 4)],
+            vec![Region::new(0, 7, 0, 5, 0, 4), Region::new(4, 12, 3, 12, 1, 3)],
+            vec![Region::new(20, 30, 0, 5, 0, 4)],
+            vec![
+                Region::new(2, 10, 1, 5, 0, 2),
+                Region::new(2, 10, 1, 5, 2, 4),
+                Region::new(2, 10, 5, 9, 0, 4),
+                Region::new(3, 8, 2, 7, 1, 3), // redundant overlap
+            ],
+        ];
+        for regions in patch_sets {
+            let patches: Vec<RegionTensor> = regions
+                .iter()
+                .map(|r| {
+                    RegionTensor::new(
+                        *r,
+                        Tensor::zeros(r.h1 - r.h0, r.w1 - r.w0, r.c1 - r.c0),
+                    )
+                })
+                .collect();
+            let covered = crate::partition::intersection_volume(&regions, &[needed]);
+            assert_eq!(
+                uncovered_volume(&needed, &patches),
+                needed.volume() - covered,
+                "mismatch on {regions:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn arena_recycles_buffers() {
+        let mut arena = TensorArena::new(true);
+        let t = arena.take(4, 4, 2);
+        assert_eq!((arena.allocs, arena.reuses), (1, 0));
+        arena.give(t);
+        let t2 = arena.take(2, 2, 2);
+        assert_eq!((arena.allocs, arena.reuses), (1, 1));
+        assert!(t2.data.iter().all(|&v| v == 0.0), "recycled buffers must be zeroed");
+        // reuse disabled: give drops, every take provisions fresh
+        let mut cold = TensorArena::new(false);
+        let t = cold.take(4, 4, 2);
+        cold.give(t);
+        let _ = cold.take(4, 4, 2);
+        assert_eq!((cold.allocs, cold.reuses), (2, 0));
+    }
+
+    #[test]
+    fn copy_into_fast_paths_match_scalar_copy() {
+        // exercise all three copy tiers against a scalar oracle
+        let src_r = Region::new(1, 7, 2, 8, 0, 3);
+        let src = RegionTensor::new(src_r, Tensor::random(6, 6, 3, 9));
+        let cases = [
+            Region::new(1, 7, 2, 8, 0, 3),  // identical: whole-block tier
+            Region::new(0, 5, 2, 8, 0, 3),  // h offset, w+c aligned
+            Region::new(3, 9, 0, 6, 0, 3),  // w overlap: per-row tier
+            Region::new(2, 6, 4, 10, 1, 3), // channel sub-range: lane tier
+        ];
+        for dst_r in cases {
+            let mut fast =
+                Tensor::zeros(dst_r.h1 - dst_r.h0, dst_r.w1 - dst_r.w0, dst_r.c1 - dst_r.c0);
+            src.copy_into(&dst_r, &mut fast);
+            let mut slow = Tensor::zeros(fast.h, fast.w, fast.c);
+            let ov = src_r.intersect(&dst_r);
+            for y in ov.h0..ov.h1 {
+                for x in ov.w0..ov.w1 {
+                    for ch in ov.c0..ov.c1 {
+                        *slow.at_mut(y - dst_r.h0, x - dst_r.w0, ch - dst_r.c0) =
+                            src.t.at(y - src_r.h0, x - src_r.w0, ch - src_r.c0);
+                    }
+                }
+            }
+            assert_eq!(fast.data, slow.data, "copy mismatch into {dst_r:?}");
+        }
     }
 }

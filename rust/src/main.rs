@@ -363,6 +363,10 @@ fn cmd_serve(args: &Args) -> i32 {
         queue_depth: args.usize_or("queue", 128),
         pipeline_depth: args.usize_or("pipeline-depth", 1),
         replay_budget: args.u64_or("replay-budget", 3) as u32,
+        compute: flexpie::compute::ComputeConfig {
+            tile_workers: args.usize_or("tile-workers", 2),
+            ..Default::default()
+        },
     };
     // `--profile <stable|diurnal-drift|lossy-link|node-churn>` switches to
     // the elastic (condition-aware) serving path.

@@ -88,7 +88,7 @@ use std::sync::{mpsc::sync_channel, Arc};
 use std::time::{Duration, Instant};
 
 use crate::cluster::pipeline::{BlockPipeline, Completion};
-use crate::compute::{Tensor, WeightStore};
+use crate::compute::{ComputeConfig, Tensor, WeightStore};
 use crate::elastic::{ConditionTrace, ElasticConfig, ElasticFrontend};
 use crate::engine;
 use crate::metrics::{AdaptationMetrics, PipelineSummary, Summary};
@@ -116,6 +116,10 @@ pub struct ServeConfig {
     /// (process path). `0` restores the pre-replay behavior: every abort
     /// is an explicit client-visible failure.
     pub replay_budget: u32,
+    /// Node-compute tuning (tile worker pool, parallelism threshold,
+    /// buffer-arena reuse), threaded into both the lockstep and pipelined
+    /// executors.
+    pub compute: ComputeConfig,
 }
 
 impl Default for ServeConfig {
@@ -126,6 +130,7 @@ impl Default for ServeConfig {
             queue_depth: 128,
             pipeline_depth: 1,
             replay_budget: 3,
+            compute: ComputeConfig::default(),
         }
     }
 }
@@ -504,12 +509,22 @@ fn router_lockstep(
             .map(|req| {
                 let run = match &alive {
                     // elastic path: execute on the surviving sub-cluster
-                    Some(mask) => {
-                        crate::cluster::run_degraded(model, &plan, weights, &req.input, mask)
-                    }
-                    None => {
-                        crate::cluster::run_distributed(model, &plan, weights, &req.input, nodes)
-                    }
+                    Some(mask) => crate::cluster::run_degraded_cfg(
+                        model,
+                        &plan,
+                        weights,
+                        &req.input,
+                        mask,
+                        &cfg.compute,
+                    ),
+                    None => crate::cluster::run_distributed_cfg(
+                        model,
+                        &plan,
+                        weights,
+                        &req.input,
+                        nodes,
+                        &cfg.compute,
+                    ),
                 };
                 moved_bytes += run.bytes_exchanged;
                 moved_msgs += run.messages as u64;
@@ -745,12 +760,14 @@ fn router_pipelined(
                     gen_nodes = *nodes;
                     gen_cost = *virtual_time;
                     gen_leader = 0;
-                    pipe = Some(BlockPipeline::start(
+                    pipe = Some(BlockPipeline::start_with(
                         model,
                         plan,
                         weights,
                         *nodes,
                         cfg.pipeline_depth,
+                        0,
+                        cfg.compute,
                     ));
                 }
             }
@@ -781,13 +798,14 @@ fn router_pipelined(
                     gen_nodes = decision.nodes;
                     gen_cost = decision.cost_per_item;
                     gen_leader = decision.leader;
-                    pipe = Some(BlockPipeline::start_with_leader(
+                    pipe = Some(BlockPipeline::start_with(
                         model,
                         &decision.plan,
                         weights,
                         decision.nodes,
                         cfg.pipeline_depth,
                         decision.leader,
+                        cfg.compute,
                     ));
                 }
                 *vt += gen_cost * batch.len() as f64;

@@ -256,6 +256,7 @@ fn run_inference(
         &g.weights,
         input.as_ref(),
         &mut g.ex,
+        &crate::compute::ComputeConfig::default(),
     );
     match res {
         Ok(nr) => {

@@ -567,6 +567,7 @@ fn faulted_attempt(
                 &weights,
                 input.as_ref(),
                 &mut ex,
+                &crate::compute::ComputeConfig::default(),
             );
             (r, ex.ops(), ex.log())
         }));

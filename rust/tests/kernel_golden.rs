@@ -1,0 +1,208 @@
+//! Golden-value kernel tests — hand-computed expectations for the blocked
+//! kernels' trickiest paths (strided depthwise, padded pool at the image
+//! boundary, the zero-copy covering fast path with a halo-inflated patch)
+//! plus a parallel-vs-serial bitwise-equality property test.
+
+use flexpie::compute::{
+    compute_region, compute_tile_set, ComputeConfig, LayerWeights, PatchStore, RegionTensor,
+    Tensor, TensorArena, WeightStore,
+};
+use flexpie::model::{zoo, ConvType, LayerMeta, Model};
+use flexpie::partition::geometry::out_tiles;
+use flexpie::partition::{Region, Scheme};
+
+fn full_store(t: Tensor) -> PatchStore {
+    let r = Region::full(t.h, t.w, t.c);
+    let mut s = PatchStore::new();
+    s.add(RegionTensor::new(r, t));
+    s
+}
+
+/// Depthwise 3×3 stride-2 pad-1 over a 5×5×2 input, all-ones filters.
+/// Channel 0 holds constant 1.0 (counts the valid taps per window);
+/// channel 1 holds `y·5 + x` (sums the clamped window coordinates).
+#[test]
+fn depthwise_stride2_padded_golden() {
+    let l = LayerMeta::conv("dw", ConvType::Depthwise, 5, 5, 2, 2, 3, 2, 1);
+    assert_eq!((l.out_h, l.out_w), (3, 3));
+    let w = vec![1.0f32; (l.k * l.k * l.out_c) as usize];
+    let b = vec![0.5f32, -0.5];
+    let lw = LayerWeights { w, b };
+
+    let mut input = Tensor::zeros(5, 5, 2);
+    for y in 0..5 {
+        for x in 0..5 {
+            *input.at_mut(y, x, 0) = 1.0;
+            *input.at_mut(y, x, 1) = (y * 5 + x) as f32;
+        }
+    }
+    let store = full_store(input);
+    let out = compute_region(&l, &lw, &store, &Region::full(3, 3, 2));
+
+    // channel 0: #valid taps + 0.5 — corners see a 2×2 window, edges 2×3,
+    // the center the full 3×3
+    let taps = [[4.0, 6.0, 4.0], [6.0, 9.0, 6.0], [4.0, 6.0, 4.0]];
+    for oy in 0..3 {
+        for ox in 0..3 {
+            assert_eq!(
+                out.t.at(oy, ox, 0),
+                taps[oy as usize][ox as usize] + 0.5,
+                "ch0 at ({oy},{ox})"
+            );
+        }
+    }
+    // channel 1: sum of y·5+x over the clamped window, minus 0.5
+    for oy in 0..3 {
+        for ox in 0..3 {
+            let mut want = -0.5f32;
+            for ky in 0..3 {
+                for kx in 0..3 {
+                    let (y, x) = (oy * 2 - 1 + ky, ox * 2 - 1 + kx);
+                    if (0..5).contains(&y) && (0..5).contains(&x) {
+                        want += (y * 5 + x) as f32;
+                    }
+                }
+            }
+            assert_eq!(out.t.at(oy, ox, 1), want, "ch1 at ({oy},{ox})");
+        }
+    }
+}
+
+/// Average pool with padding: out-of-bounds taps contribute zero but the
+/// divisor stays `k·k` (count-include-pad semantics). A constant-4.0 input
+/// makes each output exactly `4·valid_taps/4 = valid_taps`.
+#[test]
+fn pool_padded_boundary_golden() {
+    let l = LayerMeta::conv("p", ConvType::Pool, 4, 4, 1, 1, 2, 2, 1);
+    assert_eq!((l.out_h, l.out_w), (3, 3));
+    let lw = LayerWeights { w: vec![], b: vec![] };
+    let mut input = Tensor::zeros(4, 4, 1);
+    for y in 0..4 {
+        for x in 0..4 {
+            *input.at_mut(y, x, 0) = 4.0;
+        }
+    }
+    let store = full_store(input);
+    let out = compute_region(&l, &lw, &store, &Region::full(3, 3, 1));
+    let want = [[1.0, 2.0, 1.0], [2.0, 4.0, 2.0], [1.0, 2.0, 1.0]];
+    for oy in 0..3 {
+        for ox in 0..3 {
+            assert_eq!(
+                out.t.at(oy, ox, 0),
+                want[oy as usize][ox as usize],
+                "pool at ({oy},{ox})"
+            );
+        }
+    }
+}
+
+/// 1×1 identity conv where the store's single patch is *larger* than the
+/// tile's receptive field (a halo-inflated patch, as produced by scatter).
+/// Exercises the zero-copy covering fast path's offset arithmetic: the
+/// kernel must index into the patch at `y - patch.h0`, not `y - needed.h0`.
+#[test]
+fn pointwise_identity_on_inflated_patch() {
+    let l = LayerMeta::conv("pw", ConvType::Pointwise, 6, 4, 2, 2, 1, 1, 0);
+    // identity weights in (ic, oc) order, zero bias
+    let mut w = vec![0.0f32; 4];
+    w[0] = 1.0; // ic0 -> oc0
+    w[3] = 1.0; // ic1 -> oc1
+    let lw = LayerWeights { w, b: vec![0.0, 0.0] };
+
+    // patch covers rows 1..5 — a strict superset of the tile's rows 2..4
+    let patch_r = Region::new(1, 5, 0, 4, 0, 2);
+    let mut t = Tensor::zeros(4, 4, 2);
+    for y in 1..5 {
+        for x in 0..4 {
+            for c in 0..2 {
+                *t.at_mut(y - 1, x, c) = (y * 100 + x * 10 + c) as f32;
+            }
+        }
+    }
+    let mut store = PatchStore::new();
+    store.add(RegionTensor::new(patch_r, t));
+
+    let out_r = Region::new(2, 4, 0, 4, 0, 2);
+    let out = compute_region(&l, &lw, &store, &out_r);
+    assert_eq!(out.region, out_r);
+    for y in 2..4 {
+        for x in 0..4 {
+            for c in 0..2 {
+                assert_eq!(
+                    out.t.at(y - 2, x, c),
+                    (y * 100 + x * 10 + c) as f32,
+                    "identity at ({y},{x},{c})"
+                );
+            }
+        }
+    }
+}
+
+/// Parallel tile execution must be *bitwise* identical to serial: same
+/// tiles, same stores, workers 1 vs 4. Checked across every layer kind in
+/// the edgenet zoo model and several tiling schemes.
+#[test]
+fn parallel_tiles_bitwise_equal_serial() {
+    let model = zoo::edgenet(32);
+    let weights = WeightStore::for_model(&model, 9);
+    let input = Tensor::random(model.layers[0].in_h, model.layers[0].in_w, model.layers[0].in_c, 7);
+
+    // run layer-by-layer on a full-activation store so every layer kind
+    // (conv/depthwise/pointwise/pool/dense) gets exercised
+    let mut cur = input;
+    for (li, l) in model.layers.iter().enumerate() {
+        let store = full_store(cur.clone());
+        for scheme in [Scheme::InH, Scheme::InW, Scheme::Grid2d] {
+            let tiles = out_tiles(l, scheme, 4);
+            let items: Vec<(usize, Region)> = tiles.iter().map(|r| (0usize, *r)).collect();
+            let stores = [&store];
+
+            let mut arena_s = TensorArena::new(true);
+            let serial =
+                compute_tile_set(l, &weights.layers[li], &stores, &items, &ComputeConfig::serial(), &mut arena_s);
+
+            let cfg = ComputeConfig { tile_workers: 4, parallel_threshold: 0, reuse_buffers: true };
+            let mut arena_p = TensorArena::new(true);
+            let par = compute_tile_set(l, &weights.layers[li], &stores, &items, &cfg, &mut arena_p);
+
+            assert_eq!(serial.len(), par.len());
+            for (s, p) in serial.iter().zip(par.iter()) {
+                assert_eq!(s.region, p.region, "layer {li} {scheme:?}");
+                let sb: Vec<u32> = s.t.data.iter().map(|v| v.to_bits()).collect();
+                let pb: Vec<u32> = p.t.data.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(sb, pb, "layer {li} {scheme:?} tile {:?} diverged", s.region);
+            }
+        }
+        // advance the activation via the reference single-tile path
+        let full = Region::full(l.out_h, l.out_w, l.out_c);
+        cur = compute_region(l, &weights.layers[li], &full_store(cur), &full).t;
+    }
+}
+
+/// Dense layers write only the x=0 column; a parallel run over row-split
+/// dense tiles must still match serial bit-for-bit (regression guard for
+/// the reshape_zeroed dispatch).
+#[test]
+fn parallel_dense_rows_bitwise_equal_serial() {
+    let l = LayerMeta::dense("fc", 64, 32, 48);
+    let m = Model::new("fc", vec![l.clone()]);
+    let ws = WeightStore::for_model(&m, 3);
+    let input = Tensor::random(64, 1, 32, 11);
+    let store = full_store(input);
+    let stores = [&store];
+    let items: Vec<(usize, Region)> = (0..4)
+        .map(|i| (0usize, Region::new(i * 16, (i + 1) * 16, 0, 1, 0, 48)))
+        .collect();
+
+    let mut arena_s = TensorArena::new(true);
+    let serial =
+        compute_tile_set(&l, &ws.layers[0], &stores, &items, &ComputeConfig::serial(), &mut arena_s);
+    let cfg = ComputeConfig { tile_workers: 4, parallel_threshold: 0, reuse_buffers: true };
+    let mut arena_p = TensorArena::new(true);
+    let par = compute_tile_set(&l, &ws.layers[0], &stores, &items, &cfg, &mut arena_p);
+    for (s, p) in serial.iter().zip(par.iter()) {
+        let sb: Vec<u32> = s.t.data.iter().map(|v| v.to_bits()).collect();
+        let pb: Vec<u32> = p.t.data.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(sb, pb, "dense tile {:?} diverged", s.region);
+    }
+}
