@@ -1,0 +1,61 @@
+//! Open-loop load harness: the full suite ladder (A1–A4 deterministic,
+//! B1–B2 Poisson with chaos), multi-process agents, merged tail-latency
+//! percentiles and SLO-violation fractions.
+//!
+//! One `RESULT` line per suite (CI assembles them into `BENCH_pr9.json`);
+//! the assembled JSON is also written to `bench_results/load_harness.json`.
+//!
+//! ```bash
+//! cargo bench --bench load_harness
+//! FLEXPIE_BENCH_FAST=1 cargo bench --bench load_harness   # CI smoke
+//! ```
+
+use flexpie::bench::harness::{self, HarnessOpts};
+use flexpie::util::bench::{emit_result_json, Table};
+
+fn main() {
+    let opts = HarnessOpts {
+        load_bin: env!("CARGO_BIN_EXE_flexpie-load").to_string(),
+        node_bin: env!("CARGO_BIN_EXE_flexpie-node").to_string(),
+        fast: std::env::var("FLEXPIE_BENCH_FAST").is_ok(),
+    };
+    let mut reports = Vec::new();
+    for spec in harness::suites(opts.fast) {
+        eprintln!("[load_harness] running suite {}", spec.name);
+        match harness::run_suite(&spec, &opts) {
+            Ok(r) => {
+                emit_result_json(&r.to_json());
+                reports.push(r);
+            }
+            Err(e) => {
+                eprintln!("load_harness: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+
+    let mut t = Table::new([
+        "suite", "mode", "sent", "ok", "shed", "p50", "p99", "p99.9", "goodput", "slo-viol",
+    ]);
+    for r in &reports {
+        t.row([
+            r.suite.clone(),
+            r.mode.clone(),
+            r.sent.to_string(),
+            r.ok.to_string(),
+            r.shed.to_string(),
+            format!("{:.0} µs", r.p50_us),
+            format!("{:.0} µs", r.p99_us),
+            format!("{:.0} µs", r.p999_us),
+            format!("{:.1} rps", r.goodput_rps),
+            format!("{:.3}", r.slo_violation_frac),
+        ]);
+    }
+    t.print();
+
+    let assembled = harness::assemble(&reports);
+    let out = std::path::Path::new("bench_results/load_harness.json");
+    if let Err(e) = assembled.save(out) {
+        eprintln!("[load_harness] warning: could not save {}: {e}", out.display());
+    }
+}

@@ -1,0 +1,712 @@
+//! Open-loop load harness: multi-process traffic against a serving stack,
+//! with tail-latency SLO reporting and a deterministic test spine.
+//!
+//! The orchestrator (this module) builds a server — in-process
+//! ([`Server::start_telemetry`]) or over the real wire fabric
+//! ([`Server::start_process`] on `flexpie-node` daemon processes) — opens a
+//! [`FrontDoor`], and fans N `flexpie-load agent` **processes** into it.
+//! Each agent paces a precomputed seeded schedule and reports a single
+//! `AGENT {json}` line: counts, an HDR-style latency histogram and its own
+//! `/proc` usage. The orchestrator merges the histograms exactly
+//! (bucket-wise, order-independent), samples the daemons' `/proc` around
+//! the run, and folds everything into one [`SuiteReport`].
+//!
+//! Two suite families:
+//!
+//! * **A1–A4 (deterministic, CI-gated).** Rng-free arrival processes and an
+//!   admission queue sized ≥ the total request count, so shedding is
+//!   *structurally impossible*: fixed seed ⇒ fixed schedule ⇒ `ok == sent`,
+//!   zero mismatches against the single-node reference, exact conservation
+//!   `sent == ok + shed + failed`. Latency numbers are reported, never
+//!   gated — that is what keeps the spine green on a noisy CI box.
+//! * **B1–B2 (Poisson, honest).** Open-loop Poisson at 0.5×/0.8× of the
+//!   capacity probed through the very same front door; B2 SIGKILLs the
+//!   leader daemon mid-run and rides the replay path. Gates here are
+//!   *structural* (conservation, monotone percentiles, B2 must observe
+//!   ≥1 failover and ≥1 replay); p50/p99/p99.9, goodput and the
+//!   SLO-violation fraction are the measured product.
+
+use std::io::{BufRead, BufReader};
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use crate::compute::WeightStore;
+use crate::elastic::{ConditionTrace, ElasticConfig};
+use crate::loadgen::agent::AgentReport;
+use crate::loadgen::hist::Histogram;
+use crate::loadgen::procfs::{self, ProcUsage};
+use crate::loadgen::{workload, ArrivalProcess, ScheduleSpec};
+use crate::net::{Bandwidth, Testbed, Topology};
+use crate::partition::{Plan, Scheme};
+use crate::serve::frontdoor::FrontDoor;
+use crate::serve::{RouterStats, ServeConfig, Server};
+use crate::telemetry::TelemetryConfig;
+use crate::transport::codec::{Frame, WireMsg};
+use crate::transport::coord::ProcessCluster;
+use crate::transport::registry::RegistryServer;
+use crate::transport::tcp;
+use crate::util::json::Json;
+
+/// How the suite's server is built.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// In-process telemetry-path server with this pipeline depth.
+    InProc { pipeline_depth: usize },
+    /// Real `flexpie-node` daemon processes over TCP; with `kill_leader`
+    /// the leader is SIGKILLed mid-run (the B2 chaos arc).
+    Process { nodes: usize, kill_leader: bool },
+}
+
+/// The offered load, resolved at run time.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Offered {
+    /// A fixed (rng-free for the A-suites) arrival process per agent.
+    Fixed(ArrivalProcess),
+    /// Poisson at `frac` × the capacity probed through the front door,
+    /// split evenly across agents.
+    PoissonAtCapacity(f64),
+}
+
+/// One suite: everything needed to reproduce its traffic bit-for-bit.
+#[derive(Debug, Clone)]
+pub struct SuiteSpec {
+    pub name: &'static str,
+    pub mode: Mode,
+    pub agents: u32,
+    pub requests_per_agent: usize,
+    pub offered: Offered,
+    /// Base seed; agent `i` uses `seed + i` for its schedule.
+    pub seed: u64,
+    /// Latency SLO replies are judged against (reported, not gated).
+    pub slo: Duration,
+    /// Admission queue depth. `None` ⇒ sized to `total + agents`, which
+    /// makes shedding structurally impossible — the A-suite determinism
+    /// trick.
+    pub queue_depth: Option<usize>,
+    /// A-suite gate: every request must be served (`ok == sent`).
+    pub deterministic: bool,
+}
+
+impl SuiteSpec {
+    fn total(&self) -> usize {
+        self.agents as usize * self.requests_per_agent
+    }
+
+    fn input_seed(&self) -> u64 {
+        700 + self.seed
+    }
+}
+
+/// The canonical suite list. `fast` shrinks request counts to CI-smoke
+/// scale without changing any suite's structure.
+pub fn suites(fast: bool) -> Vec<SuiteSpec> {
+    let n = |full: usize, smoke: usize| if fast { smoke } else { full };
+    vec![
+        // A1 — one agent, uniform arrivals, batcher path: the baseline spine
+        SuiteSpec {
+            name: "a1_baseline",
+            mode: Mode::InProc { pipeline_depth: 1 },
+            agents: 1,
+            requests_per_agent: n(32, 10),
+            offered: Offered::Fixed(ArrivalProcess::Uniform { rate_hz: 200.0 }),
+            seed: 11,
+            slo: Duration::from_millis(250),
+            queue_depth: None,
+            deterministic: true,
+        },
+        // A2 — four agents fanning into one queue under square-wave bursts
+        SuiteSpec {
+            name: "a2_fanin",
+            mode: Mode::InProc { pipeline_depth: 1 },
+            agents: 4,
+            requests_per_agent: n(24, 6),
+            offered: Offered::Fixed(ArrivalProcess::Burst {
+                base_hz: 50.0,
+                burst_hz: 400.0,
+                period_s: 0.08,
+                duty: 0.5,
+            }),
+            seed: 22,
+            slo: Duration::from_millis(250),
+            queue_depth: None,
+            deterministic: true,
+        },
+        // A3 — pipelined router under a rate step
+        SuiteSpec {
+            name: "a3_pipeline",
+            mode: Mode::InProc { pipeline_depth: 4 },
+            agents: 2,
+            requests_per_agent: n(24, 6),
+            offered: Offered::Fixed(ArrivalProcess::Step {
+                before_hz: 100.0,
+                after_hz: 300.0,
+                at_s: 0.06,
+            }),
+            seed: 33,
+            slo: Duration::from_millis(250),
+            queue_depth: None,
+            deterministic: true,
+        },
+        // A4 — the full wire stack: 3 daemon processes, process-mode server
+        SuiteSpec {
+            name: "a4_process",
+            mode: Mode::Process { nodes: 3, kill_leader: false },
+            agents: 2,
+            requests_per_agent: n(16, 5),
+            offered: Offered::Fixed(ArrivalProcess::Uniform { rate_hz: 60.0 }),
+            seed: 44,
+            slo: Duration::from_millis(500),
+            queue_depth: None,
+            deterministic: true,
+        },
+        // B1 — Poisson at half the probed capacity: the steady-tail number
+        SuiteSpec {
+            name: "b1_poisson_half",
+            mode: Mode::InProc { pipeline_depth: 1 },
+            agents: 2,
+            requests_per_agent: n(48, 10),
+            offered: Offered::PoissonAtCapacity(0.5),
+            seed: 55,
+            slo: Duration::from_millis(250),
+            queue_depth: Some(32),
+            deterministic: false,
+        },
+        // B2 — Poisson at 0.8× capacity with a mid-run leader SIGKILL: the
+        // tail *including* detection + reinstall + replay
+        SuiteSpec {
+            name: "b2_poisson_chaos",
+            mode: Mode::Process { nodes: 3, kill_leader: true },
+            agents: 2,
+            requests_per_agent: n(32, 8),
+            offered: Offered::PoissonAtCapacity(0.8),
+            seed: 66,
+            slo: Duration::from_millis(500),
+            queue_depth: Some(32),
+            deterministic: false,
+        },
+    ]
+}
+
+/// Where the harness finds the binaries it spawns.
+#[derive(Debug, Clone)]
+pub struct HarnessOpts {
+    /// Path to `flexpie-load` (agents are `flexpie-load agent …`).
+    pub load_bin: String,
+    /// Path to `flexpie-node` (daemons for the process suites).
+    pub node_bin: String,
+    /// Smoke-scale request counts (`FLEXPIE_BENCH_FAST`).
+    pub fast: bool,
+}
+
+impl HarnessOpts {
+    /// Resolve sibling binaries of the current executable — how the
+    /// `flexpie-load suite` CLI finds them without env-var plumbing.
+    pub fn siblings_of_current_exe() -> Result<HarnessOpts, String> {
+        let me = std::env::current_exe().map_err(|e| format!("current_exe: {e}"))?;
+        let dir = me.parent().ok_or("current_exe has no parent dir")?;
+        let sibling = |name: &str| dir.join(name).to_string_lossy().into_owned();
+        Ok(HarnessOpts {
+            load_bin: me.to_string_lossy().into_owned(),
+            node_bin: sibling("flexpie-node"),
+            fast: std::env::var("FLEXPIE_BENCH_FAST").is_ok(),
+        })
+    }
+}
+
+/// The merged, gated result of one suite run.
+#[derive(Debug, Clone)]
+pub struct SuiteReport {
+    pub suite: String,
+    pub mode: String,
+    pub agents: u32,
+    pub sent: u64,
+    pub ok: u64,
+    pub shed: u64,
+    pub failed: u64,
+    pub mismatches: u64,
+    pub slo_ms: f64,
+    /// Requests that got a reply within the SLO.
+    pub slo_ok: u64,
+    /// `1 − slo_ok/sent`: shed and failed requests count as violations.
+    pub slo_violation_frac: f64,
+    /// Total offered rate implied by the generated schedules.
+    pub offered_rps: f64,
+    /// Served requests per second of the slowest agent's span.
+    pub goodput_rps: f64,
+    pub p50_us: f64,
+    pub p90_us: f64,
+    pub p99_us: f64,
+    pub p999_us: f64,
+    pub mean_us: f64,
+    pub max_us: f64,
+    /// Merged across every agent process — exact, order-independent.
+    pub hist: Histogram,
+    pub queue_peak: usize,
+    pub queue_wait_max_us: f64,
+    /// Process mode: reinstall-and-retry rounds after a member death.
+    pub failovers: u64,
+    /// Process mode: total request re-executions on the replay path.
+    pub replays: u64,
+    /// Peak agent RSS / summed agent CPU over the run.
+    pub agent_rss_peak: u64,
+    pub agent_cpu_ms: u64,
+    /// Peak daemon RSS / summed daemon CPU (0 for in-process suites).
+    pub daemon_rss_peak: u64,
+    pub daemon_cpu_ms: u64,
+    /// Orchestrator (server + front door live here) CPU over the run.
+    pub self_cpu_ms: u64,
+    pub wall_s: f64,
+}
+
+impl SuiteReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("suite", Json::Str(self.suite.clone())),
+            ("mode", Json::Str(self.mode.clone())),
+            ("agents", Json::Num(self.agents as f64)),
+            ("sent", Json::Num(self.sent as f64)),
+            ("ok", Json::Num(self.ok as f64)),
+            ("shed", Json::Num(self.shed as f64)),
+            ("failed", Json::Num(self.failed as f64)),
+            ("mismatches", Json::Num(self.mismatches as f64)),
+            ("slo_ms", Json::Num(self.slo_ms)),
+            ("slo_ok", Json::Num(self.slo_ok as f64)),
+            ("slo_violation_frac", Json::Num(self.slo_violation_frac)),
+            ("offered_rps", Json::Num(self.offered_rps)),
+            ("goodput_rps", Json::Num(self.goodput_rps)),
+            ("p50_us", Json::Num(self.p50_us)),
+            ("p90_us", Json::Num(self.p90_us)),
+            ("p99_us", Json::Num(self.p99_us)),
+            ("p999_us", Json::Num(self.p999_us)),
+            ("mean_us", Json::Num(self.mean_us)),
+            ("max_us", Json::Num(self.max_us)),
+            ("queue_peak", Json::Num(self.queue_peak as f64)),
+            ("queue_wait_max_us", Json::Num(self.queue_wait_max_us)),
+            ("failovers", Json::Num(self.failovers as f64)),
+            ("replays", Json::Num(self.replays as f64)),
+            ("agent_rss_peak", Json::Num(self.agent_rss_peak as f64)),
+            ("agent_cpu_ms", Json::Num(self.agent_cpu_ms as f64)),
+            ("daemon_rss_peak", Json::Num(self.daemon_rss_peak as f64)),
+            ("daemon_cpu_ms", Json::Num(self.daemon_cpu_ms as f64)),
+            ("self_cpu_ms", Json::Num(self.self_cpu_ms as f64)),
+            ("wall_s", Json::Num(self.wall_s)),
+        ])
+    }
+}
+
+/// Assemble suite reports into the committed bench-trajectory artifact.
+pub fn assemble(reports: &[SuiteReport]) -> Json {
+    Json::obj(vec![
+        ("bench", Json::Str("load_harness".into())),
+        ("pr", Json::Num(9.0)),
+        ("suites", Json::Arr(reports.iter().map(SuiteReport::to_json).collect())),
+    ])
+}
+
+// ---------------------------------------------------------------------------
+// child processes
+// ---------------------------------------------------------------------------
+
+/// A child process SIGKILLed (and reaped) on drop.
+struct Proc {
+    child: Child,
+}
+
+impl Proc {
+    fn sigkill(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+
+    fn pid(&self) -> u32 {
+        self.child.id()
+    }
+}
+
+impl Drop for Proc {
+    fn drop(&mut self) {
+        self.sigkill();
+    }
+}
+
+/// Spawn a `flexpie-node` daemon and wait for its `READY` banner.
+fn spawn_daemon(node_bin: &str, node: u32, registry: &str) -> Result<Proc, String> {
+    let mut child = Command::new(node_bin)
+        .args(["--node", &node.to_string(), "--registry", registry])
+        .stdout(Stdio::piped())
+        .spawn()
+        .map_err(|e| format!("spawn {node_bin}: {e}"))?;
+    let mut out = BufReader::new(child.stdout.take().expect("stdout piped"));
+    let mut line = String::new();
+    out.read_line(&mut line).map_err(|e| format!("daemon {node} banner: {e}"))?;
+    if !line.starts_with("READY ") {
+        let _ = child.kill();
+        return Err(format!("daemon {node}: unexpected banner {line:?}"));
+    }
+    Ok(Proc { child })
+}
+
+/// Spawn one `flexpie-load agent` process against `addr`.
+fn spawn_agent(
+    opts: &HarnessOpts,
+    spec: &SuiteSpec,
+    arrival: &ArrivalProcess,
+    id: u32,
+    addr: &str,
+) -> Result<Child, String> {
+    let mut cmd = Command::new(&opts.load_bin);
+    cmd.arg("agent")
+        .args(["--id", &id.to_string()])
+        .args(["--addr", addr])
+        .args(["--requests", &spec.requests_per_agent.to_string()])
+        .args(["--seed", &(spec.seed + id as u64).to_string()])
+        .args(["--input-seed", &spec.input_seed().to_string()])
+        .args(["--slo-ms", &format!("{}", spec.slo.as_secs_f64() * 1e3)])
+        .args(arrival.to_cli())
+        .stdout(Stdio::piped());
+    cmd.spawn().map_err(|e| format!("spawn {}: {e}", opts.load_bin))
+}
+
+/// Collect an agent's single `AGENT` report line and reap the process.
+fn reap_agent(suite: &str, id: u32, mut child: Child) -> Result<AgentReport, String> {
+    let out = BufReader::new(child.stdout.take().expect("stdout piped"));
+    let mut report = None;
+    for line in out.lines() {
+        let line = line.map_err(|e| format!("{suite}: agent {id} stdout: {e}"))?;
+        if let Some(parsed) = AgentReport::parse_line(&line) {
+            report = Some(parsed.map_err(|e| format!("{suite}: agent {id}: {e}"))?);
+        }
+    }
+    let status = child.wait().map_err(|e| format!("{suite}: agent {id} wait: {e}"))?;
+    if !status.success() {
+        return Err(format!("{suite}: agent {id} exited with {status}"));
+    }
+    report.ok_or_else(|| format!("{suite}: agent {id} never printed its report"))
+}
+
+// ---------------------------------------------------------------------------
+// suite runner
+// ---------------------------------------------------------------------------
+
+/// Sequential closed-loop capacity probe through the front door: the mean
+/// service latency of a lone client, inverted into requests/second.
+fn probe_capacity_rps(addr: &str, spec: &SuiteSpec, fast: bool) -> Result<(f64, u64), String> {
+    let warmup = 2usize;
+    let probes = if fast { 6 } else { 16 };
+    let mut stream =
+        tcp::connect_retry(addr, Duration::from_secs(5)).map_err(|e| format!("probe: {e}"))?;
+    let input = workload::input(0, spec.input_seed(), 4);
+    let mut total = Duration::ZERO;
+    for k in 0..(warmup + probes) as u64 {
+        let t = Instant::now();
+        let msg = WireMsg::Submit { seq: k, input: input.clone() };
+        let frame = Frame { node: u32::MAX, term: 0, msg };
+        tcp::send_frame(&mut stream, &frame).map_err(|e| format!("probe send: {e}"))?;
+        match tcp::read_frame(&mut stream).map_err(|e| format!("probe read: {e}"))?.msg {
+            WireMsg::Reply { .. } => {}
+            other => return Err(format!("probe: unexpected kind {}", other.kind())),
+        }
+        if k as usize >= warmup {
+            total += t.elapsed();
+        }
+    }
+    let mean = total.as_secs_f64() / probes as f64;
+    Ok((1.0 / mean.max(1e-6), (warmup + probes) as u64))
+}
+
+/// The server and its supporting cast for one suite.
+struct Stack {
+    server: Option<Server>,
+    door: Option<FrontDoor>,
+    // Process mode: registry + daemons, in shutdown order.
+    _registry: Option<RegistryServer>,
+    daemons: Vec<Proc>,
+    daemon_base: Vec<(u32, Option<ProcUsage>)>,
+}
+
+fn build_stack(spec: &SuiteSpec, opts: &HarnessOpts) -> Result<Stack, String> {
+    let model = workload::model();
+    let weights = WeightStore::for_model(&model, workload::WEIGHT_SEED);
+    let cfg = ServeConfig {
+        max_batch: 8,
+        batch_window: Duration::from_millis(1),
+        queue_depth: spec.queue_depth.unwrap_or(spec.total() + spec.agents as usize),
+        pipeline_depth: match spec.mode {
+            Mode::InProc { pipeline_depth } => pipeline_depth,
+            Mode::Process { .. } => 1,
+        },
+        replay_budget: 4,
+        ..ServeConfig::default()
+    };
+    let (server, registry, daemons, daemon_base) = match spec.mode {
+        Mode::InProc { .. } => {
+            let server = Server::start_telemetry(
+                model,
+                weights,
+                Testbed::new(4, Topology::Ring, Bandwidth::gbps(5.0)),
+                ConditionTrace::stable(4),
+                TelemetryConfig::default(),
+                cfg,
+                ElasticConfig::default(),
+            );
+            (server, None, Vec::new(), Vec::new())
+        }
+        Mode::Process { nodes, .. } => {
+            let reg = RegistryServer::spawn("tcp:127.0.0.1:0", Duration::from_millis(600))
+                .map_err(|e| format!("{}: registry bind: {e}", spec.name))?;
+            let daemons: Vec<Proc> = (0..nodes as u32)
+                .map(|id| spawn_daemon(&opts.node_bin, id, reg.addr()))
+                .collect::<Result<_, _>>()?;
+            let base = daemons
+                .iter()
+                .map(|p| (p.pid(), procfs::usage_of(p.pid())))
+                .collect();
+            let mut pc = ProcessCluster::connect(reg.addr(), nodes, Duration::from_secs(30))
+                .map_err(|e| format!("{}: cluster bring-up: {e:?}", spec.name))?;
+            pc.infer_deadline = Duration::from_secs(10);
+            let plan = Plan::uniform(Scheme::InH, model.n_layers());
+            pc.install(&model, &plan, workload::WEIGHT_SEED)
+                .map_err(|e| format!("{}: plan install: {e:?}", spec.name))?;
+            (Server::start_process(pc, cfg), Some(reg), daemons, base)
+        }
+    };
+    let door = FrontDoor::start(server.handle(), "tcp:127.0.0.1:0")
+        .map_err(|e| format!("{}: front door bind: {e}", spec.name))?;
+    Ok(Stack {
+        server: Some(server),
+        door: Some(door),
+        _registry: registry,
+        daemons,
+        daemon_base,
+    })
+}
+
+/// Run one suite end to end: build the stack, resolve the offered load,
+/// fan the agents in, merge their reports, apply the structural gates.
+pub fn run_suite(spec: &SuiteSpec, opts: &HarnessOpts) -> Result<SuiteReport, String> {
+    let self0 = procfs::self_usage();
+    let wall0 = Instant::now();
+    let mut stack = build_stack(spec, opts)?;
+    let addr = stack.door.as_ref().unwrap().addr().to_string();
+
+    // Resolve the offered load — B-suites scale to measured capacity.
+    let (arrival, probed) = match &spec.offered {
+        Offered::Fixed(p) => (p.clone(), 0u64),
+        Offered::PoissonAtCapacity(frac) => {
+            let (cap, probed) = probe_capacity_rps(&addr, spec, opts.fast)?;
+            (
+                ArrivalProcess::Poisson { rate_hz: (frac * cap / spec.agents as f64).max(1.0) },
+                probed,
+            )
+        }
+    };
+
+    // The longest agent schedule, regenerated here from the same specs the
+    // agents will use — the harness knows the traffic before it starts.
+    let span_ns = (0..spec.agents)
+        .map(|i| {
+            let s = ScheduleSpec {
+                process: arrival.clone(),
+                requests: spec.requests_per_agent,
+                seed: spec.seed + i as u64,
+            };
+            s.generate().offsets_ns.last().copied().unwrap_or(0)
+        })
+        .max()
+        .unwrap_or(0);
+    let offered_rps = if span_ns == 0 {
+        0.0
+    } else {
+        spec.total() as f64 / (span_ns as f64 / 1e9)
+    };
+
+    // B2: SIGKILL the leader daemon ~40% into the schedule span. The kill
+    // point is seeded (a pure function of the schedule); the wall-clock
+    // alignment is best-effort, as any real chaos is.
+    let killer = match spec.mode {
+        Mode::Process { kill_leader: true, .. } => {
+            let mut leader = stack.daemons.remove(0);
+            let delay = Duration::from_millis(300) + Duration::from_nanos(span_ns * 2 / 5);
+            Some(std::thread::spawn(move || {
+                std::thread::sleep(delay);
+                leader.sigkill();
+            }))
+        }
+        _ => None,
+    };
+
+    let children: Vec<Child> = (0..spec.agents)
+        .map(|i| spawn_agent(opts, spec, &arrival, i, &addr))
+        .collect::<Result<_, _>>()?;
+    let reports: Vec<AgentReport> = children
+        .into_iter()
+        .enumerate()
+        .map(|(i, c)| reap_agent(spec.name, i as u32, c))
+        .collect::<Result<_, _>>()?;
+    if let Some(k) = killer {
+        let _ = k.join();
+    }
+
+    // Daemon usage deltas before teardown (the killed leader reads None).
+    let (mut daemon_rss_peak, mut daemon_cpu_ms) = (0u64, 0u64);
+    for (pid, base) in &stack.daemon_base {
+        if let (Some(now), Some(base)) = (procfs::usage_of(*pid), base) {
+            let d = now.since(base);
+            daemon_rss_peak = daemon_rss_peak.max(d.rss_bytes);
+            daemon_cpu_ms += d.cpu_ms;
+        }
+    }
+
+    // Teardown order is load-bearing: the front door must release its
+    // ServerHandle clones before shutdown() can drain the router.
+    stack.door.take().unwrap().stop();
+    let stats: RouterStats = stack.server.take().unwrap().shutdown();
+    drop(stack);
+
+    let report = merge_reports(spec, &reports, &stats, offered_rps)?;
+    let self_cpu_ms = match (self0, procfs::self_usage()) {
+        (Some(a), Some(b)) => b.since(&a).cpu_ms,
+        _ => 0,
+    };
+    let report = SuiteReport {
+        self_cpu_ms,
+        wall_s: wall0.elapsed().as_secs_f64(),
+        daemon_rss_peak,
+        daemon_cpu_ms,
+        ..report
+    };
+    gate(spec, &report, &stats, probed)?;
+    Ok(report)
+}
+
+/// Merge per-agent reports into one suite report (histograms bucket-wise —
+/// exact and order-independent — counters summed).
+fn merge_reports(
+    spec: &SuiteSpec,
+    reports: &[AgentReport],
+    stats: &RouterStats,
+    offered_rps: f64,
+) -> Result<SuiteReport, String> {
+    let mut hist = Histogram::new();
+    let (mut sent, mut ok, mut shed, mut failed) = (0u64, 0u64, 0u64, 0u64);
+    let (mut mismatches, mut slo_ok) = (0u64, 0u64);
+    let (mut agent_rss_peak, mut agent_cpu_ms) = (0u64, 0u64);
+    let mut span = Duration::ZERO;
+    for r in reports {
+        if r.ok + r.shed + r.failed != r.sent {
+            return Err(format!(
+                "{}: agent {} accounting broken: {} + {} + {} != {}",
+                spec.name, r.id, r.ok, r.shed, r.failed, r.sent
+            ));
+        }
+        hist.merge(&r.hist);
+        sent += r.sent;
+        ok += r.ok;
+        shed += r.shed;
+        failed += r.failed;
+        mismatches += r.mismatches;
+        slo_ok += r.slo_ok;
+        span = span.max(r.span);
+        if let Some(u) = &r.usage {
+            agent_rss_peak = agent_rss_peak.max(u.rss_bytes);
+            agent_cpu_ms += u.cpu_ms;
+        }
+    }
+    let p = |q: f64| hist.percentile(q) as f64 / 1e3;
+    Ok(SuiteReport {
+        suite: spec.name.into(),
+        mode: match spec.mode {
+            Mode::InProc { .. } => "inproc".into(),
+            Mode::Process { .. } => "process".into(),
+        },
+        agents: spec.agents,
+        sent,
+        ok,
+        shed,
+        failed,
+        mismatches,
+        slo_ms: spec.slo.as_secs_f64() * 1e3,
+        slo_ok,
+        slo_violation_frac: if sent == 0 { 0.0 } else { 1.0 - slo_ok as f64 / sent as f64 },
+        offered_rps,
+        goodput_rps: if span.is_zero() { 0.0 } else { ok as f64 / span.as_secs_f64() },
+        p50_us: p(0.50),
+        p90_us: p(0.90),
+        p99_us: p(0.99),
+        p999_us: p(0.999),
+        mean_us: hist.mean() / 1e3,
+        max_us: hist.max() as f64 / 1e3,
+        hist,
+        queue_peak: stats.queue_peak,
+        queue_wait_max_us: stats.queue_wait_max.as_secs_f64() * 1e6,
+        failovers: stats.process_failovers,
+        replays: stats.replay_attempts,
+        agent_rss_peak,
+        agent_cpu_ms,
+        daemon_rss_peak: 0,
+        daemon_cpu_ms: 0,
+        self_cpu_ms: 0,
+        wall_s: 0.0,
+    })
+}
+
+/// The structural gates: what CI fails on. Latency magnitudes are never
+/// gated; counts, conservation, bit-exactness and shape are.
+fn gate(spec: &SuiteSpec, r: &SuiteReport, stats: &RouterStats, probed: u64) -> Result<(), String> {
+    let check = |cond: bool, msg: String| if cond { Ok(()) } else { Err(msg) };
+    check(
+        r.sent == spec.total() as u64,
+        format!("{}: sent {} != scheduled {}", spec.name, r.sent, spec.total()),
+    )?;
+    check(
+        r.mismatches == 0,
+        format!("{}: {} replies diverged from the reference", spec.name, r.mismatches),
+    )?;
+    // every admitted request is either a reply the agents saw, a probe
+    // roundtrip, or an explicit post-admission failure — no silent drops
+    check(
+        stats.requests == r.ok + r.failed + probed,
+        format!(
+            "{}: router pulled {} requests but agents saw ok={} failed={} (+{probed} probes)",
+            spec.name, stats.requests, r.ok, r.failed
+        ),
+    )?;
+    let ps = [r.p50_us, r.p90_us, r.p99_us, r.p999_us];
+    check(
+        ps.windows(2).all(|w| w[0] <= w[1]),
+        format!("{}: percentiles not monotone: {ps:?}", spec.name),
+    )?;
+    if spec.deterministic {
+        check(
+            r.ok == r.sent && r.shed == 0 && r.failed == 0,
+            format!(
+                "{}: deterministic suite shed/failed traffic: ok={} shed={} failed={} sent={}",
+                spec.name, r.ok, r.shed, r.failed, r.sent
+            ),
+        )?;
+        // every within-SLO reply is part of the recorded population
+        check(
+            r.slo_ok <= r.hist.count() && r.hist.count() == r.ok,
+            format!(
+                "{}: histogram population {} inconsistent with ok={} slo_ok={}",
+                spec.name,
+                r.hist.count(),
+                r.ok,
+                r.slo_ok
+            ),
+        )?;
+    }
+    if let Mode::Process { kill_leader: true, .. } = spec.mode {
+        check(
+            r.failovers >= 1,
+            format!("{}: leader SIGKILL never forced a failover", spec.name),
+        )?;
+        check(r.replays >= 1, format!("{}: no request rode the replay path", spec.name))?;
+    }
+    Ok(())
+}
+
+/// Run every suite in order; stop at the first structural failure.
+pub fn run_all(opts: &HarnessOpts) -> Result<Vec<SuiteReport>, String> {
+    suites(opts.fast).iter().map(|s| run_suite(s, opts)).collect()
+}

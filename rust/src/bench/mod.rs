@@ -13,6 +13,8 @@
 //! | [`search_time`] | §4 "DPP search time cost" + pruning ablation |
 //! | [`ablation`] | design ablations: CE-vs-oracle regret, fusion-off, scheme-set restrictions |
 
+pub mod harness;
+
 use std::sync::Arc;
 
 use crate::baselines::Solution;

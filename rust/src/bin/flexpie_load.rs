@@ -1,0 +1,123 @@
+//! `flexpie-load` — open-loop load agent and suite orchestrator.
+//!
+//! ```text
+//! # one load-agent process (spawned by the harness, one per traffic source)
+//! flexpie-load agent --addr tcp:127.0.0.1:4600 --id 0 --requests 32 \
+//!                    --seed 11 --arrival poisson --rate 120 [--slo-ms 250] \
+//!                    [--distinct 4] [--input-seed 711] [--reply-timeout-ms 30000]
+//!
+//! # the full suite ladder (A1–A4 deterministic, B1–B2 Poisson)
+//! flexpie-load suite [--suite a1_baseline] [--node-bin PATH] [--out FILE]
+//! ```
+//!
+//! `agent` paces a seeded schedule into a serving front door and prints one
+//! `AGENT {json}` line (counts, latency histogram, `/proc` self-usage).
+//! `suite` builds the server stack itself, fans agent subprocesses in, and
+//! prints one `RESULT {json}` line per suite; `--out` also writes the
+//! assembled trajectory JSON (the `BENCH_pr9.json` artifact).
+//! `FLEXPIE_BENCH_FAST=1` shrinks every suite to CI-smoke scale.
+
+use std::time::Duration;
+
+use flexpie::bench::harness::{self, HarnessOpts};
+use flexpie::loadgen::agent::{self, AgentOpts};
+use flexpie::loadgen::{ArrivalProcess, ScheduleSpec};
+use flexpie::util::bench::emit_result_json;
+use flexpie::util::cli::Args;
+
+fn usage() -> ! {
+    eprintln!(
+        "flexpie-load — FlexPie open-loop load harness\n\
+         usage: flexpie-load agent --addr <addr> [--id N] [--requests N] [--seed N]\n\
+         \x20                      [--arrival uniform|poisson|burst|step] [--rate HZ] …\n\
+         \x20      flexpie-load suite [--suite NAME] [--node-bin PATH] [--out FILE]"
+    );
+    std::process::exit(2);
+}
+
+fn agent_main(args: &Args) {
+    let Some(addr) = args.get("addr") else { usage() };
+    let process = match ArrivalProcess::from_args(args) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("flexpie-load agent: {e}");
+            std::process::exit(2);
+        }
+    };
+    let opts = AgentOpts {
+        id: args.u64_or("id", 0) as u32,
+        addr: addr.to_string(),
+        spec: ScheduleSpec {
+            process,
+            requests: args.usize_or("requests", 32),
+            seed: args.u64_or("seed", 1),
+        },
+        distinct: args.u64_or("distinct", 4),
+        input_seed: args.u64_or("input-seed", 700),
+        slo: Duration::from_secs_f64(args.f64_or("slo-ms", 250.0) / 1e3),
+        connect_deadline: Duration::from_millis(args.u64_or("connect-deadline-ms", 10_000)),
+        reply_timeout: Duration::from_millis(args.u64_or("reply-timeout-ms", 30_000)),
+    };
+    match agent::run(&opts) {
+        Ok(report) => println!("{}", report.to_line()),
+        Err(e) => {
+            eprintln!("flexpie-load agent: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn suite_main(args: &Args) {
+    let mut opts = match HarnessOpts::siblings_of_current_exe() {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("flexpie-load suite: {e}");
+            std::process::exit(1);
+        }
+    };
+    if let Some(nb) = args.get("node-bin") {
+        opts.node_bin = nb.to_string();
+    }
+    let only = args.get("suite");
+    let mut reports = Vec::new();
+    for spec in harness::suites(opts.fast) {
+        if only.is_some_and(|n| n != spec.name) {
+            continue;
+        }
+        eprintln!("[flexpie-load] running suite {}", spec.name);
+        match harness::run_suite(&spec, &opts) {
+            Ok(report) => {
+                emit_result_json(&report.to_json());
+                reports.push(report);
+            }
+            Err(e) => {
+                eprintln!("flexpie-load suite: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+    if reports.is_empty() {
+        eprintln!("flexpie-load suite: no suite matched");
+        std::process::exit(2);
+    }
+    if let Some(out) = args.get("out") {
+        if let Err(e) = harness::assemble(&reports).save(std::path::Path::new(out)) {
+            eprintln!("flexpie-load suite: write {out}: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn main() {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        usage();
+    }
+    let cmd = argv.remove(0);
+    let args = Args::parse(argv);
+    match cmd.as_str() {
+        "agent" => agent_main(&args),
+        "suite" => suite_main(&args),
+        _ => usage(),
+    }
+}

@@ -30,7 +30,8 @@
 //! | [`runtime`] | PJRT client wrapper: loads `artifacts/*.hlo.txt` (AOT-compiled JAX/Pallas) |
 //! | [`serve`] | serving front-end: request router + dynamic batcher + pipelined throughput mode |
 //! | [`transport`] | real wire transport: versioned frame codec, TCP/UDS socket fabric, TTL-leased registry, node daemon + process coordinator |
-//! | [`bench`] | generators for every paper table/figure (Fig 2, 7, 8, 9, search time, ablations) |
+//! | [`loadgen`] | open-loop traffic: seeded arrival schedules, HDR-style latency histograms, `/proc` sampling, the load-agent process |
+//! | [`bench`] | generators for every paper table/figure (Fig 2, 7, 8, 9, search time, ablations) + the tail-latency load harness |
 //!
 //! Layers 1/2 (Pallas kernels + JAX model) live under `python/compile/` and
 //! run **only at build time** (`make artifacts`); this crate is self-contained
@@ -57,6 +58,7 @@ pub mod config;
 pub mod cost;
 pub mod elastic;
 pub mod engine;
+pub mod loadgen;
 pub mod metrics;
 pub mod model;
 pub mod net;

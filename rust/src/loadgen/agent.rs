@@ -1,0 +1,319 @@
+//! The open-loop load agent: paces a precomputed [`Schedule`] into a
+//! serving front door and audits every reply.
+//!
+//! Open loop means arrivals never wait for service: a writer (the calling
+//! thread) sends [`WireMsg::Submit`] frames at the schedule's offsets while
+//! a reader thread matches [`WireMsg::Reply`] / [`WireMsg::Denied`] frames
+//! by sequence number and records latency into a mergeable
+//! [`Histogram`]. A slow server therefore shows up as a growing tail —
+//! never as a silently stretched schedule, which is the classic
+//! closed-loop measurement bug (coordinated omission).
+//!
+//! The agent also audits correctness, not just speed: it precomputes the
+//! single-node reference output for each distinct input and compares every
+//! reply bit-exactly, so a harness assertion about "bit-identical outputs"
+//! is checked at the edge, in the process that received the bytes.
+//!
+//! One process per agent: [`run`] is called by `flexpie-load agent`, and
+//! the report travels back to the orchestrator as a single
+//! `AGENT {json}` line on stdout ([`AgentReport::to_line`]).
+
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::compute::{Tensor, WeightStore};
+use crate::loadgen::hist::Histogram;
+use crate::loadgen::procfs::{self, ProcUsage};
+use crate::loadgen::{workload, ScheduleSpec};
+use crate::transport::codec::{Frame, WireMsg};
+use crate::transport::tcp;
+use crate::util::json::Json;
+
+/// Stdout marker the orchestrator greps for.
+pub const LINE_PREFIX: &str = "AGENT ";
+
+/// Agent configuration — everything arrives via `flexpie-load agent` CLI
+/// flags, so every field must be expressible as a flag.
+#[derive(Debug, Clone)]
+pub struct AgentOpts {
+    /// Agent id (also the wire sender id).
+    pub id: u32,
+    /// Front-door address to dial.
+    pub addr: String,
+    /// The arrival schedule to pace.
+    pub spec: ScheduleSpec,
+    /// Distinct inputs cycled by sequence number.
+    pub distinct: u64,
+    /// Seed base for input derivation.
+    pub input_seed: u64,
+    /// Per-suite latency SLO replies are judged against.
+    pub slo: Duration,
+    /// How long to keep dialing the front door.
+    pub connect_deadline: Duration,
+    /// Per-read reply timeout — a server that goes quiet this long is a
+    /// failed run, not a hang.
+    pub reply_timeout: Duration,
+}
+
+impl Default for AgentOpts {
+    fn default() -> Self {
+        AgentOpts {
+            id: 0,
+            addr: String::new(),
+            spec: ScheduleSpec {
+                process: crate::loadgen::ArrivalProcess::Uniform { rate_hz: 100.0 },
+                requests: 32,
+                seed: 1,
+            },
+            distinct: 4,
+            input_seed: 900,
+            slo: Duration::from_millis(250),
+            connect_deadline: Duration::from_secs(10),
+            reply_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// What one agent measured. Serializes to/from the `AGENT {json}` line.
+#[derive(Debug, Clone)]
+pub struct AgentReport {
+    pub id: u32,
+    pub sent: u64,
+    /// Replies received (served requests).
+    pub ok: u64,
+    /// Denied at admission: queue full or server stopped.
+    pub shed: u64,
+    /// Failed after admission (denial reason 2).
+    pub failed: u64,
+    /// Replies whose output was not bit-identical to the reference.
+    pub mismatches: u64,
+    /// Replies within the SLO.
+    pub slo_ok: u64,
+    /// First send → last terminal frame.
+    pub span: Duration,
+    /// Reply latency histogram (nanoseconds).
+    pub hist: Histogram,
+    /// This process's resource delta around the run (None off Linux).
+    pub usage: Option<ProcUsage>,
+}
+
+impl AgentReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::Num(self.id as f64)),
+            ("sent", Json::Num(self.sent as f64)),
+            ("ok", Json::Num(self.ok as f64)),
+            ("shed", Json::Num(self.shed as f64)),
+            ("failed", Json::Num(self.failed as f64)),
+            ("mismatches", Json::Num(self.mismatches as f64)),
+            ("slo_ok", Json::Num(self.slo_ok as f64)),
+            ("span_ns", Json::Num(self.span.as_nanos() as f64)),
+            ("hist", self.hist.to_json()),
+            ("proc", self.usage.as_ref().map_or(Json::Null, ProcUsage::to_json)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<AgentReport, String> {
+        let f = |k: &str| -> Result<u64, String> {
+            Ok(v.req(k)?.as_f64().ok_or_else(|| format!("{k} not a number"))? as u64)
+        };
+        Ok(AgentReport {
+            id: f("id")? as u32,
+            sent: f("sent")?,
+            ok: f("ok")?,
+            shed: f("shed")?,
+            failed: f("failed")?,
+            mismatches: f("mismatches")?,
+            slo_ok: f("slo_ok")?,
+            span: Duration::from_nanos(f("span_ns")?),
+            hist: Histogram::from_json(v.req("hist")?)?,
+            usage: match v.req("proc")? {
+                Json::Null => None,
+                other => Some(ProcUsage::from_json(other)?),
+            },
+        })
+    }
+
+    /// The single stdout line the orchestrator parses.
+    pub fn to_line(&self) -> String {
+        format!("{LINE_PREFIX}{}", self.to_json().to_string())
+    }
+
+    /// Parse a stdout line if it is an agent report.
+    pub fn parse_line(line: &str) -> Option<Result<AgentReport, String>> {
+        let body = line.strip_prefix(LINE_PREFIX)?;
+        Some(crate::util::json::parse(body).and_then(|v| AgentReport::from_json(&v)))
+    }
+}
+
+/// Drive one agent run to completion. Blocks until every submission has
+/// its terminal frame (or the reply timeout declares the server dead).
+pub fn run(opts: &AgentOpts) -> Result<AgentReport, String> {
+    let schedule = opts.spec.generate();
+    let total = schedule.offsets_ns.len();
+
+    // Precompute inputs and their single-node reference outputs: replies
+    // are audited bit-exactly at the edge.
+    let model = workload::model();
+    let ws = WeightStore::for_model(&model, workload::WEIGHT_SEED);
+    let distinct = opts.distinct.max(1);
+    let inputs: Vec<Tensor> =
+        (0..distinct).map(|i| workload::input(i, opts.input_seed, distinct)).collect();
+    let expected: Vec<Tensor> =
+        inputs.iter().map(|t| crate::compute::run_reference(&model, &ws, t)).collect();
+
+    let usage0 = procfs::self_usage();
+    let stream = tcp::connect_retry(&opts.addr, opts.connect_deadline)
+        .map_err(|e| format!("agent {}: connect {}: {e}", opts.id, opts.addr))?;
+    let mut rstream = stream
+        .try_clone()
+        .map_err(|e| format!("agent {}: clone stream: {e}", opts.id))?;
+    rstream
+        .set_read_timeout(Some(opts.reply_timeout))
+        .map_err(|e| format!("agent {}: set timeout: {e}", opts.id))?;
+
+    // send instants, indexed by sequence number, shared writer → reader
+    let send_times: Arc<Mutex<Vec<Option<Instant>>>> = Arc::new(Mutex::new(vec![None; total]));
+
+    struct Tally {
+        ok: u64,
+        shed: u64,
+        failed: u64,
+        mismatches: u64,
+        slo_ok: u64,
+        hist: Histogram,
+        last: Option<Instant>,
+    }
+
+    let reader_times = send_times.clone();
+    let reader_expected = expected.clone();
+    let slo = opts.slo;
+    let agent_id = opts.id;
+    let reader = std::thread::spawn(move || -> Result<Tally, String> {
+        let mut t = Tally {
+            ok: 0,
+            shed: 0,
+            failed: 0,
+            mismatches: 0,
+            slo_ok: 0,
+            hist: Histogram::new(),
+            last: None,
+        };
+        let mut terminal = 0usize;
+        while terminal < total {
+            let frame = tcp::read_frame(&mut rstream)
+                .map_err(|e| format!("agent {agent_id}: read reply: {e}"))?;
+            match frame.msg {
+                WireMsg::Reply { seq, output } => {
+                    let now = Instant::now();
+                    let sent_at = reader_times.lock().unwrap()[seq as usize]
+                        .ok_or_else(|| format!("agent {agent_id}: reply for unsent seq {seq}"))?;
+                    let lat = now.duration_since(sent_at);
+                    t.hist.record(lat.as_nanos() as u64);
+                    if lat <= slo {
+                        t.slo_ok += 1;
+                    }
+                    let want = &reader_expected[(seq % distinct) as usize];
+                    if want.max_abs_diff(&output) != 0.0 {
+                        t.mismatches += 1;
+                    }
+                    t.ok += 1;
+                    t.last = Some(now);
+                    terminal += 1;
+                }
+                WireMsg::Denied { reason, .. } => {
+                    if reason == 0 || reason == 1 {
+                        t.shed += 1;
+                    } else {
+                        t.failed += 1;
+                    }
+                    t.last = Some(Instant::now());
+                    terminal += 1;
+                }
+                other => {
+                    return Err(format!(
+                        "agent {agent_id}: unexpected frame kind {}",
+                        other.kind()
+                    ))
+                }
+            }
+        }
+        Ok(t)
+    });
+
+    // Writer: pace the schedule on this thread. `stream` is the write half.
+    let mut wstream = stream;
+    let start = Instant::now();
+    for (i, &off) in schedule.offsets_ns.iter().enumerate() {
+        let target = start + Duration::from_nanos(off);
+        let now = Instant::now();
+        if target > now {
+            std::thread::sleep(target - now);
+        }
+        let input = inputs[(i as u64 % distinct) as usize].clone();
+        send_times.lock().unwrap()[i] = Some(Instant::now());
+        let frame =
+            Frame { node: opts.id, term: 0, msg: WireMsg::Submit { seq: i as u64, input } };
+        tcp::send_frame(&mut wstream, &frame)
+            .map_err(|e| format!("agent {}: send seq {i}: {e}", opts.id))?;
+    }
+
+    let tally = reader.join().map_err(|_| format!("agent {}: reader panicked", opts.id))??;
+    drop(wstream); // close our half only after both sides are done
+    let span = tally.last.map_or(Duration::ZERO, |l| l.duration_since(start));
+    let usage = match (usage0, procfs::self_usage()) {
+        (Some(a), Some(b)) => Some(b.since(&a)),
+        _ => None,
+    };
+    Ok(AgentReport {
+        id: opts.id,
+        sent: total as u64,
+        ok: tally.ok,
+        shed: tally.shed,
+        failed: tally.failed,
+        mismatches: tally.mismatches,
+        slo_ok: tally.slo_ok,
+        span,
+        hist: tally.hist,
+        usage,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_line_round_trips() {
+        let mut hist = Histogram::new();
+        for v in [1_000u64, 2_000, 3_000_000] {
+            hist.record(v);
+        }
+        let r = AgentReport {
+            id: 3,
+            sent: 3,
+            ok: 2,
+            shed: 1,
+            failed: 0,
+            mismatches: 0,
+            slo_ok: 2,
+            span: Duration::from_millis(12),
+            hist,
+            usage: Some(ProcUsage { rss_bytes: 4096, cpu_ms: 10, read_bytes: 0, write_bytes: 1 }),
+        };
+        let line = r.to_line();
+        assert!(line.starts_with(LINE_PREFIX));
+        assert_eq!(line.lines().count(), 1, "report must stay a single line");
+        let back = AgentReport::parse_line(&line).unwrap().unwrap();
+        assert_eq!(back.id, r.id);
+        assert_eq!(back.sent, r.sent);
+        assert_eq!(back.ok, r.ok);
+        assert_eq!(back.shed, r.shed);
+        assert_eq!(back.slo_ok, r.slo_ok);
+        assert_eq!(back.span, r.span);
+        assert_eq!(back.hist.count(), r.hist.count());
+        assert_eq!(back.hist.max(), r.hist.max());
+        assert_eq!(back.usage, r.usage);
+        assert!(AgentReport::parse_line("RESULT {}").is_none());
+    }
+}

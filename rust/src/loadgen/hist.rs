@@ -1,0 +1,272 @@
+//! HDR-style log-bucketed latency histogram with an **exact** merge.
+//!
+//! Values below 32 map to their own bucket; every power-of-two octave above
+//! that is split into 32 sub-buckets, so relative resolution stays ≈3%
+//! across the full `u64` range at a fixed 1920 buckets. Recording and
+//! merging are pure integer bucket arithmetic: `merge(a, b)` is bucket-wise
+//! addition, hence commutative, associative and lossless — N agent
+//! processes can each record locally and the orchestrator's merged
+//! percentiles are identical to single-process recording, in any merge
+//! order. Percentiles are reported at the **bucket ceiling** (clamped to
+//! the exact tracked max), which keeps them conservative, monotone in the
+//! quantile, and within one bucket width of the true sample percentile.
+
+use crate::util::json::Json;
+
+/// Values `0..LINEAR` get unit-width buckets.
+const LINEAR: u64 = 32;
+/// Sub-buckets per octave above the linear range.
+const SUB: usize = 32;
+/// Octaves `k = 5..=63` (values `32..=u64::MAX`).
+const OCTAVES: usize = 59;
+/// Total bucket count: 32 linear + 59 octaves × 32 sub-buckets.
+pub const N_BUCKETS: usize = LINEAR as usize + OCTAVES * SUB;
+
+/// Bucket index for a recorded value.
+fn index(v: u64) -> usize {
+    if v < LINEAR {
+        return v as usize;
+    }
+    let k = 63 - v.leading_zeros() as usize; // 5..=63
+    let sub = ((v - (1u64 << k)) >> (k - 5)) as usize;
+    LINEAR as usize + (k - 5) * SUB + sub
+}
+
+/// Largest value mapping to bucket `idx` — the ceiling percentiles report.
+fn bucket_high(idx: usize) -> u64 {
+    if idx < LINEAR as usize {
+        return idx as u64;
+    }
+    let k = (idx - LINEAR as usize) / SUB + 5;
+    let sub = ((idx - LINEAR as usize) % SUB) as u64;
+    let low = (1u64 << k) + (sub << (k - 5));
+    low + ((1u64 << (k - 5)) - 1)
+}
+
+/// Width of the bucket holding `v` — the error bound on percentiles.
+pub fn bucket_width(v: u64) -> u64 {
+    if v < LINEAR {
+        1
+    } else {
+        1u64 << ((63 - v.leading_zeros() as u64) - 5)
+    }
+}
+
+/// The histogram. Buckets are dense (`N_BUCKETS` u64 counters, ~15 KiB);
+/// the JSON form is sparse.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    count: u64,
+    min: u64,
+    max: u64,
+    sum: u128,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram { counts: vec![0; N_BUCKETS], count: 0, min: u64::MAX, max: 0, sum: 0 }
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram::default()
+    }
+
+    pub fn record(&mut self, v: u64) {
+        self.counts[index(v)] += 1;
+        self.count += 1;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+        self.sum += v as u128;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn min(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Fold `other` in: exact bucket-wise addition. Commutative and
+    /// order-independent — the property the orchestrator's multi-agent
+    /// merge (and its property test) relies on.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        self.sum += other.sum;
+    }
+
+    /// Value at quantile `q` in `[0, 1]`: the ceiling of the bucket holding
+    /// the `ceil(q·count)`-th smallest sample, clamped to the tracked max.
+    /// 0 for an empty histogram.
+    pub fn percentile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (idx, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return bucket_high(idx).min(self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Sparse JSON form: counters plus `[[bucket, count], ...]`. Bucket
+    /// counts survive f64 transport exactly below 2^53 — far beyond any
+    /// realistic run.
+    pub fn to_json(&self) -> Json {
+        let buckets = self
+            .counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| Json::arr([Json::Num(i as f64), Json::Num(c as f64)]))
+            .collect::<Vec<_>>();
+        Json::obj(vec![
+            ("count", Json::Num(self.count as f64)),
+            ("min", Json::Num(self.min() as f64)),
+            ("max", Json::Num(self.max as f64)),
+            ("sum", Json::Num(self.sum as f64)),
+            ("buckets", Json::Arr(buckets)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Histogram, String> {
+        let mut h = Histogram::new();
+        let count = v.req("count")?.as_f64().ok_or("count not a number")? as u64;
+        let min = v.req("min")?.as_f64().ok_or("min not a number")? as u64;
+        let max = v.req("max")?.as_f64().ok_or("max not a number")? as u64;
+        let sum = v.req("sum")?.as_f64().ok_or("sum not a number")? as u128;
+        let mut total = 0u64;
+        for b in v.req("buckets")?.as_arr().ok_or("buckets not an array")? {
+            let pair = b.as_arr().ok_or("bucket entry not a pair")?;
+            if pair.len() != 2 {
+                return Err("bucket entry not a pair".into());
+            }
+            let idx = pair[0].as_f64().ok_or("bucket index not a number")? as usize;
+            let c = pair[1].as_f64().ok_or("bucket count not a number")? as u64;
+            if idx >= N_BUCKETS {
+                return Err(format!("bucket index {idx} out of range"));
+            }
+            h.counts[idx] += c;
+            total += c;
+        }
+        if total != count {
+            return Err(format!("bucket counts sum to {total}, header says {count}"));
+        }
+        h.count = count;
+        h.min = if count == 0 { u64::MAX } else { min };
+        h.max = max;
+        h.sum = sum;
+        Ok(h)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn indexing_is_monotone_and_in_range() {
+        let mut prev = 0usize;
+        for v in (0..4096u64).chain([1 << 20, 1 << 40, u64::MAX / 2, u64::MAX]) {
+            let i = index(v);
+            assert!(i < N_BUCKETS, "index {i} out of range for {v}");
+            assert!(i >= prev, "index not monotone at {v}");
+            prev = i;
+            assert!(bucket_high(i) >= v, "ceiling below value at {v}");
+            assert!(bucket_high(i) - v < bucket_width(v), "ceiling too far at {v}");
+        }
+    }
+
+    #[test]
+    fn percentile_matches_exact_samples_in_linear_range() {
+        // below LINEAR every bucket is exact, so percentiles are exact
+        let mut h = Histogram::new();
+        for v in 1..=20u64 {
+            h.record(v);
+        }
+        assert_eq!(h.percentile(0.5), 10);
+        assert_eq!(h.percentile(1.0), 20);
+        assert_eq!(h.min(), 1);
+        assert_eq!(h.count(), 20);
+    }
+
+    #[test]
+    fn percentiles_are_monotone_and_clamped() {
+        let mut h = Histogram::new();
+        let mut rng = Rng::new(9);
+        for _ in 0..1000 {
+            h.record(rng.below(2_000_000) as u64);
+        }
+        let qs = [0.5, 0.9, 0.99, 0.999, 1.0];
+        let ps: Vec<u64> = qs.iter().map(|&q| h.percentile(q)).collect();
+        for w in ps.windows(2) {
+            assert!(w[0] <= w[1], "percentiles not monotone: {ps:?}");
+        }
+        assert!(*ps.last().unwrap() <= h.max());
+    }
+
+    #[test]
+    fn empty_histogram_is_all_zero() {
+        let h = Histogram::new();
+        assert_eq!(h.percentile(0.99), 0);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), 0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn json_round_trip_preserves_everything() {
+        let mut h = Histogram::new();
+        let mut rng = Rng::new(3);
+        for _ in 0..500 {
+            h.record(rng.below(10_000_000) as u64);
+        }
+        let text = h.to_json().to_string();
+        let back = Histogram::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.counts, h.counts);
+        assert_eq!(back.count, h.count);
+        assert_eq!(back.min, h.min);
+        assert_eq!(back.max, h.max);
+        assert_eq!(back.sum, h.sum);
+    }
+
+    #[test]
+    fn from_json_rejects_inconsistent_counts() {
+        let mut h = Histogram::new();
+        h.record(5);
+        let mut v = h.to_json();
+        if let Json::Obj(m) = &mut v {
+            m.insert("count".into(), Json::Num(2.0));
+        }
+        assert!(Histogram::from_json(&v).is_err());
+    }
+}

@@ -1,0 +1,293 @@
+//! Open-loop load generation: seeded arrival schedules, mergeable latency
+//! histograms, per-process resource sampling and the load-agent loop.
+//!
+//! The paper evaluates closed-loop batch latency; the ROADMAP's north star
+//! is heavy open traffic, where the currency is p99/p99.9 under Poisson
+//! arrivals. The pieces here are built so a multi-process harness
+//! ([`crate::bench::harness`]) can be **deterministic where it matters and
+//! honest where it can't be**:
+//!
+//! * [`Schedule`]s are generated ahead of time from a [`ScheduleSpec`] —
+//!   same seed, same spec ⇒ byte-identical offsets, no wall clock in the
+//!   generator. The agent then *paces* the precomputed offsets, so the
+//!   arrival process is fixed before the first request leaves.
+//! * [`hist::Histogram`] is an HDR-style log-bucketed histogram whose merge
+//!   is exact (bucket-wise addition, order-independent): N agent processes
+//!   each report their own histogram as JSON and the orchestrator's merged
+//!   percentiles are identical to what one process recording every sample
+//!   would have reported.
+//! * [`procfs`] samples `/proc/<pid>/{statm,stat,io}` around a run — RSS,
+//!   CPU time and real I/O per process, `None` off Linux rather than wrong.
+//! * [`agent`] is the open-loop client: it never waits for a response
+//!   before sending the next request (a writer thread paces the schedule, a
+//!   reader thread matches replies by sequence number), which is what makes
+//!   the measured tail an *arrival-process* tail instead of a closed-loop
+//!   artifact.
+
+pub mod agent;
+pub mod hist;
+pub mod procfs;
+
+use crate::util::cli::Args;
+use crate::util::rng::Rng;
+
+/// The arrival process a schedule is drawn from. Rates are requests per
+/// second of *offered* load (open loop: arrivals don't wait for service).
+///
+/// `Uniform`, `Burst` and `Step` are rng-free — their schedules depend only
+/// on the rate parameters, which is exactly what the deterministic A-suites
+/// want. `Poisson` consumes the spec's seed (exponential inter-arrivals via
+/// inverse-CDF), the regime the B-suites measure tails under.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArrivalProcess {
+    /// Fixed inter-arrival gap `1/rate_hz`.
+    Uniform { rate_hz: f64 },
+    /// Exponential inter-arrivals with mean `1/rate_hz`.
+    Poisson { rate_hz: f64 },
+    /// Square-wave modulation: `burst_hz` for the first `duty` fraction of
+    /// every `period_s`, `base_hz` for the rest.
+    Burst { base_hz: f64, burst_hz: f64, period_s: f64, duty: f64 },
+    /// Rate change at an absolute offset: `before_hz` until `at_s`,
+    /// `after_hz` after.
+    Step { before_hz: f64, after_hz: f64, at_s: f64 },
+}
+
+impl ArrivalProcess {
+    /// CLI flags understood by [`ArrivalProcess::from_args`] — the harness
+    /// hands a spec to an agent *process* through these.
+    pub fn to_cli(&self) -> Vec<String> {
+        let f = |v: f64| format!("{v}");
+        match self {
+            ArrivalProcess::Uniform { rate_hz } => {
+                vec!["--arrival".into(), "uniform".into(), "--rate".into(), f(*rate_hz)]
+            }
+            ArrivalProcess::Poisson { rate_hz } => {
+                vec!["--arrival".into(), "poisson".into(), "--rate".into(), f(*rate_hz)]
+            }
+            ArrivalProcess::Burst { base_hz, burst_hz, period_s, duty } => vec![
+                "--arrival".into(),
+                "burst".into(),
+                "--rate".into(),
+                f(*base_hz),
+                "--burst-rate".into(),
+                f(*burst_hz),
+                "--period".into(),
+                f(*period_s),
+                "--duty".into(),
+                f(*duty),
+            ],
+            ArrivalProcess::Step { before_hz, after_hz, at_s } => vec![
+                "--arrival".into(),
+                "step".into(),
+                "--rate".into(),
+                f(*before_hz),
+                "--after-rate".into(),
+                f(*after_hz),
+                "--at".into(),
+                f(*at_s),
+            ],
+        }
+    }
+
+    /// Parse the flags emitted by [`ArrivalProcess::to_cli`].
+    pub fn from_args(args: &Args) -> Result<ArrivalProcess, String> {
+        let rate = args.f64_or("rate", 100.0);
+        match args.get_or("arrival", "uniform") {
+            "uniform" => Ok(ArrivalProcess::Uniform { rate_hz: rate }),
+            "poisson" => Ok(ArrivalProcess::Poisson { rate_hz: rate }),
+            "burst" => Ok(ArrivalProcess::Burst {
+                base_hz: rate,
+                burst_hz: args.f64_or("burst-rate", 2.0 * rate),
+                period_s: args.f64_or("period", 0.1),
+                duty: args.f64_or("duty", 0.5),
+            }),
+            "step" => Ok(ArrivalProcess::Step {
+                before_hz: rate,
+                after_hz: args.f64_or("after-rate", 2.0 * rate),
+                at_s: args.f64_or("at", 0.1),
+            }),
+            other => Err(format!("unknown arrival process {other:?}")),
+        }
+    }
+}
+
+/// Everything that determines a schedule. Two equal specs generate
+/// byte-identical schedules — the determinism the CI-gated suites lean on.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScheduleSpec {
+    pub process: ArrivalProcess,
+    /// Total requests in the schedule.
+    pub requests: usize,
+    /// Seed for the stochastic processes (ignored by the rng-free ones).
+    pub seed: u64,
+}
+
+impl ScheduleSpec {
+    /// Generate the full arrival schedule ahead of time. Pure function of
+    /// the spec: no wall clock, no global state.
+    pub fn generate(&self) -> Schedule {
+        let mut rng = Rng::new(self.seed);
+        let mut t = 0.0f64; // seconds since schedule start
+        let mut offsets_ns = Vec::with_capacity(self.requests);
+        for _ in 0..self.requests {
+            offsets_ns.push((t * 1e9).round() as u64);
+            let dt = match &self.process {
+                ArrivalProcess::Uniform { rate_hz } => 1.0 / rate_hz,
+                ArrivalProcess::Poisson { rate_hz } => {
+                    // inverse-CDF exponential; 1 - u avoids ln(0)
+                    -(1.0 - rng.f64()).ln() / rate_hz
+                }
+                ArrivalProcess::Burst { base_hz, burst_hz, period_s, duty } => {
+                    let phase = (t / period_s).fract();
+                    1.0 / if phase < *duty { *burst_hz } else { *base_hz }
+                }
+                ArrivalProcess::Step { before_hz, after_hz, at_s } => {
+                    1.0 / if t < *at_s { *before_hz } else { *after_hz }
+                }
+            };
+            t += dt;
+        }
+        Schedule { offsets_ns }
+    }
+}
+
+/// A precomputed arrival schedule: request `i` leaves at `offsets_ns[i]`
+/// nanoseconds after the agent's start instant.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Schedule {
+    pub offsets_ns: Vec<u64>,
+}
+
+impl Schedule {
+    /// Canonical byte serialization (LE u64 count, then LE u64 offsets) —
+    /// what the determinism test compares across generator runs.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(8 + 8 * self.offsets_ns.len());
+        out.extend_from_slice(&(self.offsets_ns.len() as u64).to_le_bytes());
+        for &o in &self.offsets_ns {
+            out.extend_from_slice(&o.to_le_bytes());
+        }
+        out
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<Schedule, String> {
+        if bytes.len() < 8 {
+            return Err("schedule shorter than its header".into());
+        }
+        let n = u64::from_le_bytes(bytes[0..8].try_into().unwrap()) as usize;
+        if bytes.len() != 8 + 8 * n {
+            return Err(format!("schedule declares {n} offsets, has {} bytes", bytes.len() - 8));
+        }
+        let offsets_ns = (0..n)
+            .map(|i| u64::from_le_bytes(bytes[8 + 8 * i..16 + 8 * i].try_into().unwrap()))
+            .collect();
+        Ok(Schedule { offsets_ns })
+    }
+
+    /// Mean inter-arrival gap in seconds (0 for degenerate schedules).
+    pub fn mean_gap_secs(&self) -> f64 {
+        if self.offsets_ns.len() < 2 {
+            return 0.0;
+        }
+        let span = self.offsets_ns.last().unwrap() - self.offsets_ns[0];
+        span as f64 / 1e9 / (self.offsets_ns.len() - 1) as f64
+    }
+}
+
+/// The fixed workload every load suite drives: one small model, a handful
+/// of distinct inputs cycled by sequence number. Shared between the agents
+/// (which verify replies bit-exactly against the single-node reference) and
+/// the harness (which sizes servers for it) so the two can never drift.
+pub mod workload {
+    use crate::compute::Tensor;
+    use crate::model::{zoo, Model};
+
+    /// Weight-derivation seed, matching the serving tests.
+    pub const WEIGHT_SEED: u64 = 5;
+    /// Input tensor shape `(h, w, c)`.
+    pub const INPUT_SHAPE: (i64, i64, i64) = (16, 16, 3);
+
+    pub fn model() -> Model {
+        zoo::edgenet(16)
+    }
+
+    /// Input for request `seq`: one of `distinct` tensors derived from
+    /// `base_seed` — small enough for agents to hold every reference
+    /// output, varied enough to catch cross-request mixups.
+    pub fn input(seq: u64, base_seed: u64, distinct: u64) -> Tensor {
+        let (h, w, c) = INPUT_SHAPE;
+        Tensor::random(h, w, c, base_seed + seq % distinct.max(1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_schedule_is_exact() {
+        let spec = ScheduleSpec {
+            process: ArrivalProcess::Uniform { rate_hz: 1000.0 },
+            requests: 4,
+            seed: 1,
+        };
+        let s = spec.generate();
+        assert_eq!(s.offsets_ns, vec![0, 1_000_000, 2_000_000, 3_000_000]);
+    }
+
+    #[test]
+    fn burst_and_step_modulate_the_gap() {
+        let burst = ScheduleSpec {
+            process: ArrivalProcess::Burst {
+                base_hz: 100.0,
+                burst_hz: 1000.0,
+                period_s: 0.1,
+                duty: 0.5,
+            },
+            requests: 200,
+            seed: 0,
+        }
+        .generate();
+        let gaps: Vec<u64> =
+            burst.offsets_ns.windows(2).map(|w| w[1] - w[0]).collect();
+        assert!(gaps.contains(&1_000_000), "no burst-phase gap");
+        assert!(gaps.contains(&10_000_000), "no base-phase gap");
+
+        let step = ScheduleSpec {
+            process: ArrivalProcess::Step { before_hz: 100.0, after_hz: 1000.0, at_s: 0.05 },
+            requests: 100,
+            seed: 0,
+        }
+        .generate();
+        let gaps: Vec<u64> = step.offsets_ns.windows(2).map(|w| w[1] - w[0]).collect();
+        assert_eq!(gaps.first(), Some(&10_000_000));
+        assert_eq!(gaps.last(), Some(&1_000_000));
+    }
+
+    #[test]
+    fn schedule_bytes_round_trip() {
+        let spec = ScheduleSpec {
+            process: ArrivalProcess::Poisson { rate_hz: 500.0 },
+            requests: 64,
+            seed: 7,
+        };
+        let s = spec.generate();
+        let back = Schedule::from_bytes(&s.to_bytes()).unwrap();
+        assert_eq!(back, s);
+        assert!(Schedule::from_bytes(&s.to_bytes()[..9]).is_err());
+    }
+
+    #[test]
+    fn arrival_cli_round_trips() {
+        for p in [
+            ArrivalProcess::Uniform { rate_hz: 123.5 },
+            ArrivalProcess::Poisson { rate_hz: 77.25 },
+            ArrivalProcess::Burst { base_hz: 10.0, burst_hz: 90.0, period_s: 0.25, duty: 0.3 },
+            ArrivalProcess::Step { before_hz: 40.0, after_hz: 160.0, at_s: 0.5 },
+        ] {
+            let argv = p.to_cli();
+            let args = Args::parse(argv);
+            assert_eq!(ArrivalProcess::from_args(&args).unwrap(), p);
+        }
+    }
+}

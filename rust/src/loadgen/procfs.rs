@@ -1,0 +1,136 @@
+//! Per-process resource sampling from `/proc/<pid>/{statm,stat,io}`.
+//!
+//! The harness brackets every run with these samples — each load agent
+//! self-reports its own usage in its result line, the orchestrator samples
+//! the node daemons (which can't self-report) and itself. Everything is
+//! best-effort `Option`: off Linux, or for a pid that just exited, the
+//! answer is `None`, never a guess. All reads are plain `std::fs` — no
+//! dependencies.
+
+use crate::util::json::Json;
+
+/// Page size `/proc/<pid>/statm` counts in. Fixed at 4 KiB: every platform
+/// this harness targets (x86-64/aarch64 Linux defaults) uses it, and being
+/// a few pages off on an exotic config only scales a *reported* gauge.
+const PAGE_BYTES: u64 = 4096;
+/// Kernel USER_HZ for `utime`/`stime` ticks (100 on all mainstream builds).
+const TICK_MS: u64 = 10;
+
+/// One resource snapshot of one process.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ProcUsage {
+    /// Resident set size in bytes (a gauge, not a counter).
+    pub rss_bytes: u64,
+    /// User + system CPU time consumed so far, in milliseconds.
+    pub cpu_ms: u64,
+    /// Bytes actually fetched from the storage layer (`/proc/<pid>/io`
+    /// `read_bytes`); 0 when the file is unreadable (permissions).
+    pub read_bytes: u64,
+    /// Bytes sent to the storage layer (`write_bytes`); 0 when unreadable.
+    pub write_bytes: u64,
+}
+
+impl ProcUsage {
+    /// Usage *since* `earlier`: CPU and I/O are counter deltas, RSS stays
+    /// the later gauge.
+    pub fn since(&self, earlier: &ProcUsage) -> ProcUsage {
+        ProcUsage {
+            rss_bytes: self.rss_bytes,
+            cpu_ms: self.cpu_ms.saturating_sub(earlier.cpu_ms),
+            read_bytes: self.read_bytes.saturating_sub(earlier.read_bytes),
+            write_bytes: self.write_bytes.saturating_sub(earlier.write_bytes),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("rss_bytes", Json::Num(self.rss_bytes as f64)),
+            ("cpu_ms", Json::Num(self.cpu_ms as f64)),
+            ("read_bytes", Json::Num(self.read_bytes as f64)),
+            ("write_bytes", Json::Num(self.write_bytes as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<ProcUsage, String> {
+        let f = |k: &str| -> Result<u64, String> {
+            Ok(v.req(k)?.as_f64().ok_or_else(|| format!("{k} not a number"))? as u64)
+        };
+        Ok(ProcUsage {
+            rss_bytes: f("rss_bytes")?,
+            cpu_ms: f("cpu_ms")?,
+            read_bytes: f("read_bytes")?,
+            write_bytes: f("write_bytes")?,
+        })
+    }
+}
+
+/// Snapshot `pid`'s usage. `None` when `/proc` is absent (non-Linux) or the
+/// process is gone.
+pub fn usage_of(pid: u32) -> Option<ProcUsage> {
+    let statm = std::fs::read_to_string(format!("/proc/{pid}/statm")).ok()?;
+    let rss_pages: u64 = statm.split_whitespace().nth(1)?.parse().ok()?;
+    let stat = std::fs::read_to_string(format!("/proc/{pid}/stat")).ok()?;
+    // fields 14/15 (utime/stime) counted *after* the parenthesized comm,
+    // which may itself contain spaces and parentheses — split at the last ')'
+    let after = &stat[stat.rfind(')')? + 1..];
+    let fields: Vec<&str> = after.split_whitespace().collect();
+    let utime: u64 = fields.get(11)?.parse().ok()?;
+    let stime: u64 = fields.get(12)?.parse().ok()?;
+    // io is privileged on some kernels — degrade to zeros, not None
+    let (mut read_bytes, mut write_bytes) = (0u64, 0u64);
+    if let Ok(io) = std::fs::read_to_string(format!("/proc/{pid}/io")) {
+        for line in io.lines() {
+            if let Some(v) = line.strip_prefix("read_bytes: ") {
+                read_bytes = v.trim().parse().unwrap_or(0);
+            } else if let Some(v) = line.strip_prefix("write_bytes: ") {
+                write_bytes = v.trim().parse().unwrap_or(0);
+            }
+        }
+    }
+    Some(ProcUsage {
+        rss_bytes: rss_pages * PAGE_BYTES,
+        cpu_ms: (utime + stime) * TICK_MS,
+        read_bytes,
+        write_bytes,
+    })
+}
+
+/// Snapshot the calling process.
+pub fn self_usage() -> Option<ProcUsage> {
+    usage_of(std::process::id())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn self_usage_is_sane_on_linux() {
+        let Some(u) = self_usage() else {
+            return; // not a /proc platform — nothing to assert
+        };
+        assert!(u.rss_bytes > PAGE_BYTES, "a live test process resides in memory");
+    }
+
+    #[test]
+    fn since_subtracts_counters_keeps_gauge() {
+        let a = ProcUsage { rss_bytes: 100, cpu_ms: 50, read_bytes: 10, write_bytes: 5 };
+        let b = ProcUsage { rss_bytes: 80, cpu_ms: 120, read_bytes: 30, write_bytes: 9 };
+        let d = b.since(&a);
+        assert_eq!(d, ProcUsage { rss_bytes: 80, cpu_ms: 70, read_bytes: 20, write_bytes: 4 });
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let u = ProcUsage { rss_bytes: 12345, cpu_ms: 678, read_bytes: 9, write_bytes: 0 };
+        let text = u.to_json().to_string();
+        let back = ProcUsage::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, u);
+    }
+
+    #[test]
+    fn dead_pid_yields_none() {
+        // pid 4_000_000 exceeds default pid_max; on non-Linux /proc is absent
+        assert_eq!(usage_of(4_000_000), None);
+    }
+}

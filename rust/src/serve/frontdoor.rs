@@ -1,0 +1,280 @@
+//! Wire front door: open-loop request admission over TCP/UDS.
+//!
+//! Load agents are separate OS processes; this is the socket they fan
+//! requests into. One accept thread owns the listener; each connection gets
+//! a **reader** (decodes [`WireMsg::Submit`] frames and admits them through
+//! a [`ServerHandle`] — `try_send`, never blocking, so backpressure stays a
+//! protocol-visible [`WireMsg::Denied`] instead of TCP-buffer pushback) and
+//! a **writer** (completes admissions in FIFO order — safe because the
+//! router serves FIFO, so one connection's responses arrive in its own
+//! submission order — and owns the socket's write half, so replies and
+//! denials never interleave mid-frame).
+//!
+//! Every submission gets exactly one terminal frame: `Reply{seq}` with the
+//! output, or `Denied{seq, reason}` (0 = queue full, 1 = server stopped,
+//! 2 = failed after admission — shutdown drain, exhausted replay budget).
+//! That accounting conservation (`sent == ok + shed + failed`) is what the
+//! load harness audits.
+//!
+//! Shutdown order matters: a connection's reader holds a [`ServerHandle`]
+//! clone, which keeps the server's admission queue open. [`FrontDoor::stop`]
+//! forces every connection closed and joins its threads — call it *before*
+//! [`super::Server::shutdown`], or the router's final drain waits forever
+//! for the queue to disconnect.
+
+use std::io::ErrorKind;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::serve::{AdmitError, Response, ServerHandle};
+use crate::transport::codec::{Frame, WireMsg, CTL_NODE};
+use crate::transport::tcp::{self, Stream};
+
+/// Denial reason codes on the wire.
+pub const DENY_QUEUE_FULL: u8 = 0;
+pub const DENY_STOPPED: u8 = 1;
+pub const DENY_FAILED: u8 = 2;
+
+/// How often the accept loop polls for new connections / the stop flag.
+const ACCEPT_TICK: Duration = Duration::from_millis(2);
+
+/// One admitted-or-shed submission handed from a connection's reader to
+/// its writer, completed strictly in arrival order.
+enum Outcome {
+    /// Admitted: await the router's response.
+    Pending(u64, Receiver<Response>),
+    /// Refused at admission with this reason code.
+    Shed(u64, u8),
+}
+
+/// The running front door. Dropping it without [`FrontDoor::stop`] leaks
+/// the accept thread (and its server handles) until the process exits —
+/// always stop it.
+pub struct FrontDoor {
+    addr: String,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<(Stream, JoinHandle<()>)>>>,
+}
+
+impl FrontDoor {
+    /// Bind `bind` (`tcp:host:port`, port 0 for ephemeral, or
+    /// `unix:/path`) and start accepting load connections into `handle`.
+    pub fn start(handle: ServerHandle, bind: &str) -> std::io::Result<FrontDoor> {
+        let (listener, addr) = tcp::listen(bind)?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<(Stream, JoinHandle<()>)>>> = Arc::new(Mutex::new(Vec::new()));
+        let accept_stop = stop.clone();
+        let accept_conns = conns.clone();
+        let accept = std::thread::spawn(move || {
+            while !accept_stop.load(Ordering::Acquire) {
+                match listener.accept_nonblocking() {
+                    Ok(stream) => {
+                        let peer = match stream.try_clone() {
+                            Ok(c) => c,
+                            Err(_) => continue, // connection died at accept
+                        };
+                        let h = handle.clone();
+                        let t = std::thread::spawn(move || serve_conn(stream, h));
+                        accept_conns.lock().unwrap().push((peer, t));
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                        std::thread::sleep(ACCEPT_TICK);
+                    }
+                    Err(_) => std::thread::sleep(ACCEPT_TICK),
+                }
+            }
+            // the accept thread owned the last long-lived ServerHandle
+            // clone (`handle` moves in here); dropping it on exit lets the
+            // server's admission queue disconnect once the connection
+            // threads are gone too
+        });
+        Ok(FrontDoor { addr, stop, accept: Some(accept), conns })
+    }
+
+    /// Canonical dial address (`tcp:host:port` with the real port).
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Stop accepting, force every open connection closed, and join all
+    /// threads. After this returns no [`ServerHandle`] clone survives in
+    /// the front door, so [`super::Server::shutdown`] can drain.
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(t) = self.accept.take() {
+            let _ = t.join();
+        }
+        let conns = std::mem::take(&mut *self.conns.lock().unwrap());
+        for (stream, thread) in conns {
+            // unblocks a reader parked in read_frame on an idle connection
+            stream.shutdown_both();
+            let _ = thread.join();
+        }
+    }
+}
+
+/// Reader half of one connection: decode submissions, admit, hand the
+/// outcome to the writer. Exits on EOF / reset / forced shutdown.
+fn serve_conn(mut stream: Stream, handle: ServerHandle) {
+    let Ok(mut wstream) = stream.try_clone() else {
+        return;
+    };
+    let (tx, rx): (Sender<Outcome>, Receiver<Outcome>) = channel();
+    let writer = std::thread::spawn(move || write_outcomes(&mut wstream, rx));
+    loop {
+        match tcp::read_frame(&mut stream) {
+            Ok(Frame { msg: WireMsg::Submit { seq, input }, .. }) => {
+                let outcome = match handle.submit(input) {
+                    Ok(resp) => Outcome::Pending(seq, resp),
+                    Err(AdmitError::QueueFull) => Outcome::Shed(seq, DENY_QUEUE_FULL),
+                    Err(AdmitError::Stopped) => Outcome::Shed(seq, DENY_STOPPED),
+                };
+                if tx.send(outcome).is_err() {
+                    break; // writer died (client unreachable): stop reading
+                }
+            }
+            // tolerate but ignore anything else well-formed (e.g. Hello)
+            Ok(_) => {}
+            Err(_) => break,
+        }
+    }
+    drop(tx); // writer drains the in-flight tail, then exits
+    let _ = writer.join();
+}
+
+/// Writer half: one terminal frame per submission, FIFO. Blocking on
+/// `resp.recv()` is head-of-line only for *this* connection, and the
+/// router completes FIFO anyway.
+fn write_outcomes(stream: &mut Stream, rx: Receiver<Outcome>) {
+    for outcome in rx.iter() {
+        let msg = match outcome {
+            Outcome::Pending(seq, resp) => match resp.recv() {
+                Ok(r) => WireMsg::Reply { seq, output: r.output },
+                // admitted but failed: shutdown drain or exhausted replays
+                Err(_) => WireMsg::Denied { seq, reason: DENY_FAILED },
+            },
+            Outcome::Shed(seq, reason) => WireMsg::Denied { seq, reason },
+        };
+        let frame = Frame { node: CTL_NODE, term: 0, msg };
+        if tcp::send_frame(stream, &frame).is_err() {
+            break; // client gone — pending receivers drop, nothing hangs
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compute::{Tensor, WeightStore};
+    use crate::model::zoo;
+    use crate::net::{Bandwidth, Testbed, Topology};
+    use crate::partition::{Plan, Scheme};
+    use crate::serve::{ServeConfig, Server};
+
+    fn wire_server(cfg: ServeConfig) -> (Server, FrontDoor) {
+        let model = zoo::edgenet(16);
+        let plan = Plan::uniform(Scheme::InH, model.n_layers());
+        let weights = WeightStore::for_model(&model, 5);
+        let testbed = Testbed::new(4, Topology::Ring, Bandwidth::gbps(5.0));
+        let server = Server::start(model, plan, weights, testbed, cfg);
+        let door = FrontDoor::start(server.handle(), "tcp:127.0.0.1:0").unwrap();
+        (server, door)
+    }
+
+    fn submit(stream: &mut Stream, seq: u64, input: Tensor) {
+        let frame = Frame { node: 1, term: 0, msg: WireMsg::Submit { seq, input } };
+        tcp::send_frame(stream, &frame).unwrap();
+    }
+
+    #[test]
+    fn replies_match_reference_and_quote_seq() {
+        let (server, door) = wire_server(ServeConfig::default());
+        let model = zoo::edgenet(16);
+        let ws = WeightStore::for_model(&model, 5);
+        let mut stream = tcp::connect(door.addr()).unwrap();
+        for seq in 0..3u64 {
+            let input = Tensor::random(16, 16, 3, 700 + seq);
+            let reference = crate::compute::run_reference(&model, &ws, &input);
+            submit(&mut stream, seq, input);
+            match tcp::read_frame(&mut stream).unwrap().msg {
+                WireMsg::Reply { seq: got, output } => {
+                    assert_eq!(got, seq);
+                    assert_eq!(reference.max_abs_diff(&output), 0.0);
+                }
+                other => panic!("expected Reply, got kind {}", other.kind()),
+            }
+        }
+        drop(stream);
+        door.stop();
+        let stats = server.shutdown();
+        assert_eq!(stats.requests, 3);
+    }
+
+    #[test]
+    fn overload_is_denied_not_buffered() {
+        // queue_depth 1 and a slammed front door: at least one submission
+        // must come back Denied(queue full), and every submission gets
+        // exactly one terminal frame
+        let cfg = ServeConfig {
+            max_batch: 1,
+            batch_window: Duration::ZERO,
+            queue_depth: 1,
+            ..ServeConfig::default()
+        };
+        let (server, door) = wire_server(cfg);
+        let mut stream = tcp::connect(door.addr()).unwrap();
+        let total = 24u64;
+        for seq in 0..total {
+            submit(&mut stream, seq, Tensor::random(16, 16, 3, seq));
+        }
+        let mut ok = 0u64;
+        let mut shed = 0u64;
+        let mut seen = Vec::new();
+        for _ in 0..total {
+            match tcp::read_frame(&mut stream).unwrap().msg {
+                WireMsg::Reply { seq, .. } => {
+                    ok += 1;
+                    seen.push(seq);
+                }
+                WireMsg::Denied { seq, reason } => {
+                    assert_eq!(reason, DENY_QUEUE_FULL);
+                    shed += 1;
+                    seen.push(seq);
+                }
+                other => panic!("unexpected kind {}", other.kind()),
+            }
+        }
+        assert_eq!(ok + shed, total, "one terminal frame per submission");
+        assert!(ok >= 1, "nothing served");
+        assert!(shed >= 1, "queue_depth 1 never backpressured");
+        seen.sort_unstable();
+        assert_eq!(seen, (0..total).collect::<Vec<_>>(), "a seq went unanswered");
+        drop(stream);
+        door.stop();
+        let stats = server.shutdown();
+        assert_eq!(stats.requests, ok);
+    }
+
+    #[test]
+    fn stop_with_idle_connection_does_not_hang() {
+        // an agent that connected but never disconnects must not wedge
+        // stop(): the forced shutdown unblocks its reader
+        let (server, door) = wire_server(ServeConfig::default());
+        let mut stream = tcp::connect(door.addr()).unwrap();
+        submit(&mut stream, 0, Tensor::random(16, 16, 3, 1));
+        assert!(matches!(
+            tcp::read_frame(&mut stream).unwrap().msg,
+            WireMsg::Reply { seq: 0, .. }
+        ));
+        // keep the connection open across stop()
+        door.stop();
+        let stats = server.shutdown();
+        assert_eq!(stats.requests, 1);
+        drop(stream);
+    }
+}

@@ -81,9 +81,11 @@
 //! ([`RouterStats::failed_on_dead_cluster`]) — the same
 //! zero-silent-drop contract as every other path.
 
+pub mod frontdoor;
+
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TrySendError};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError};
 use std::sync::{mpsc::sync_channel, Arc};
 use std::time::{Duration, Instant};
 
@@ -177,11 +179,85 @@ pub enum AdmitError {
     Stopped,
 }
 
+/// Admission-queue occupancy shared between the submit side and the
+/// router: submits increment, the router decrements as it pulls requests
+/// into a batch, and the high-water mark rides back on
+/// [`RouterStats::queue_peak`]. Plain counters, no locks — the open-loop
+/// harness reads the gauge while load is in flight.
+#[derive(Debug, Default)]
+pub struct QueueGauge {
+    depth: AtomicUsize,
+    peak: AtomicUsize,
+}
+
+impl QueueGauge {
+    fn admitted(&self) {
+        let d = self.depth.fetch_add(1, Ordering::SeqCst) + 1;
+        self.peak.fetch_max(d, Ordering::SeqCst);
+    }
+
+    fn dequeued(&self) {
+        self.depth.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    /// Requests currently sitting in the admission queue.
+    pub fn depth(&self) -> usize {
+        self.depth.load(Ordering::SeqCst)
+    }
+
+    /// Deepest the queue has ever been.
+    pub fn peak(&self) -> usize {
+        self.peak.load(Ordering::SeqCst)
+    }
+}
+
+/// A cloneable submit-side handle: the open-loop front door
+/// ([`frontdoor::FrontDoor`]) fans wire connections into one of these from
+/// its own threads. Holding a handle keeps the admission queue open —
+/// [`Server::shutdown`] can only drain once every handle is dropped, so
+/// stop the front door first.
+#[derive(Clone)]
+pub struct ServerHandle {
+    tx: SyncSender<Request>,
+    gauge: Arc<QueueGauge>,
+}
+
+impl ServerHandle {
+    /// Submit without waiting; returns the response channel. Identical
+    /// admission contract to [`Server::submit`].
+    pub fn submit(&self, input: Tensor) -> Result<Receiver<Response>, AdmitError> {
+        submit_via(&self.tx, &self.gauge, input)
+    }
+
+    /// The shared queue-occupancy gauge.
+    pub fn gauge(&self) -> &QueueGauge {
+        &self.gauge
+    }
+}
+
+fn submit_via(
+    tx: &SyncSender<Request>,
+    gauge: &QueueGauge,
+    input: Tensor,
+) -> Result<Receiver<Response>, AdmitError> {
+    let (resp_tx, resp_rx) = channel();
+    let req = Request { input, enqueued: Instant::now(), resp: resp_tx };
+    match tx.try_send(req) {
+        Ok(()) => {
+            gauge.admitted();
+            Ok(resp_rx)
+        }
+        Err(TrySendError::Full(_)) => Err(AdmitError::QueueFull),
+        Err(TrySendError::Disconnected(_)) => Err(AdmitError::Stopped),
+    }
+}
+
 /// The serving handle. Dropping the server (or calling
 /// [`Server::shutdown`]) stops the router.
 pub struct Server {
-    tx: std::sync::mpsc::SyncSender<Request>,
+    tx: SyncSender<Request>,
     stop: Arc<AtomicBool>,
+    gauge: Arc<QueueGauge>,
     router: Option<std::thread::JoinHandle<RouterStats>>,
 }
 
@@ -232,6 +308,15 @@ pub struct RouterStats {
     /// could not be rebuilt (no survivors / reinstall kept failing). Their
     /// response channels disconnect — never a hang, never a silent drop.
     pub failed_on_dead_cluster: u64,
+    /// Deepest the admission queue ever got (from the shared
+    /// [`QueueGauge`]) — the open-loop harness's headroom signal.
+    pub queue_peak: usize,
+    /// Total time requests spent in the admission queue before the router
+    /// pulled them (queue age, summed over requests; divide by
+    /// [`RouterStats::requests`] for the mean).
+    pub queue_wait_total: Duration,
+    /// Worst single admission-queue wait.
+    pub queue_wait_max: Duration,
 }
 
 /// Where the router gets the plan for the next batch.
@@ -316,20 +401,26 @@ impl Server {
     pub fn start_process(cluster: crate::transport::coord::ProcessCluster, cfg: ServeConfig) -> Server {
         let (tx, rx) = sync_channel::<Request>(cfg.queue_depth);
         let stop = Arc::new(AtomicBool::new(false));
+        let gauge = Arc::new(QueueGauge::default());
         let router_stop = stop.clone();
-        let router = std::thread::spawn(move || router_process(rx, &cfg, cluster, &router_stop));
-        Server { tx, stop, router: Some(router) }
+        let router_gauge = gauge.clone();
+        let router = std::thread::spawn(move || {
+            router_process(rx, &cfg, cluster, &router_stop, &router_gauge)
+        });
+        Server { tx, stop, gauge, router: Some(router) }
     }
 
     fn spawn(model: Model, weights: WeightStore, cfg: ServeConfig, source: PlanSource) -> Server {
         let (tx, rx) = sync_channel::<Request>(cfg.queue_depth);
         let stop = Arc::new(AtomicBool::new(false));
+        let gauge = Arc::new(QueueGauge::default());
         let router_stop = stop.clone();
+        let router_gauge = gauge.clone();
         let router = std::thread::spawn(move || {
             let weights = Arc::new(weights);
-            router_main(rx, &model, &weights, &cfg, source, &router_stop)
+            router_main(rx, &model, &weights, &cfg, source, &router_stop, &router_gauge)
         });
-        Server { tx, stop, router: Some(router) }
+        Server { tx, stop, gauge, router: Some(router) }
     }
 
     /// Submit one inference and wait for its completion.
@@ -340,13 +431,15 @@ impl Server {
 
     /// Submit without waiting; returns the response channel.
     pub fn submit(&self, input: Tensor) -> Result<Receiver<Response>, AdmitError> {
-        let (resp_tx, resp_rx) = channel();
-        let req = Request { input, enqueued: Instant::now(), resp: resp_tx };
-        match self.tx.try_send(req) {
-            Ok(()) => Ok(resp_rx),
-            Err(TrySendError::Full(_)) => Err(AdmitError::QueueFull),
-            Err(TrySendError::Disconnected(_)) => Err(AdmitError::Stopped),
-        }
+        submit_via(&self.tx, &self.gauge, input)
+    }
+
+    /// A cloneable submit-side handle for threads that fan requests in —
+    /// the wire front door, load agents, anything that must not own the
+    /// server. Drop every handle before [`Server::shutdown`] so the
+    /// router's final drain can observe the queue closing.
+    pub fn handle(&self) -> ServerHandle {
+        ServerHandle { tx: self.tx.clone(), gauge: self.gauge.clone() }
     }
 
     /// Stop the router and return its counters. The batch (and pipeline
@@ -372,11 +465,24 @@ fn router_main(
     cfg: &ServeConfig,
     source: PlanSource,
     stop: &AtomicBool,
+    gauge: &QueueGauge,
 ) -> RouterStats {
     if cfg.pipeline_depth > 1 {
-        router_pipelined(rx, model, weights, cfg, source, stop)
+        router_pipelined(rx, model, weights, cfg, source, stop, gauge)
     } else {
-        router_lockstep(rx, model, weights, cfg, source, stop)
+        router_lockstep(rx, model, weights, cfg, source, stop, gauge)
+    }
+}
+
+/// Account a freshly collected batch leaving the admission queue: decrement
+/// the occupancy gauge and fold each request's queue age into the stats.
+fn note_dequeued(batch: &[Request], gauge: &QueueGauge, stats: &mut RouterStats) {
+    let now = Instant::now();
+    for req in batch {
+        gauge.dequeued();
+        let wait = now.saturating_duration_since(req.enqueued);
+        stats.queue_wait_total += wait;
+        stats.queue_wait_max = stats.queue_wait_max.max(wait);
     }
 }
 
@@ -457,8 +563,9 @@ fn next_request_reaping(
 /// disconnects instead of hanging. Blocks until the queue sender is gone
 /// ([`Server::shutdown`] drops it right after setting the stop flag), so
 /// the accounting also covers a submit racing the shutdown.
-fn fail_queued(rx: Receiver<Request>, stats: &mut RouterStats) {
+fn fail_queued(rx: Receiver<Request>, gauge: &QueueGauge, stats: &mut RouterStats) {
     for _req in rx.iter() {
+        gauge.dequeued();
         stats.failed_on_shutdown += 1;
     }
 }
@@ -470,11 +577,13 @@ fn router_lockstep(
     cfg: &ServeConfig,
     mut source: PlanSource,
     stop: &AtomicBool,
+    gauge: &QueueGauge,
 ) -> RouterStats {
     let mut stats = RouterStats::default();
     let mut next_seq = 0u64;
 
     while let Some(batch) = collect_batch(&rx, cfg) {
+        note_dequeued(&batch, gauge, &mut stats);
         stats.batches += 1;
         stats.requests += batch.len() as u64;
         stats.max_batch_seen = stats.max_batch_seen.max(batch.len());
@@ -561,7 +670,8 @@ fn router_lockstep(
     // shutdown: fail whatever the stop flag stranded in the queue, then
     // stop the background planner (draining its queued asks) and fold its
     // counters into the router stats
-    fail_queued(rx, &mut stats);
+    fail_queued(rx, gauge, &mut stats);
+    stats.queue_peak = gauge.peak();
     if let PlanSource::Elastic { fe, .. } = source {
         let (adaptation, stall) = fe.finish();
         stats.adaptation = Some(adaptation);
@@ -584,6 +694,7 @@ fn router_process(
     cfg: &ServeConfig,
     mut cluster: crate::transport::coord::ProcessCluster,
     stop: &AtomicBool,
+    gauge: &QueueGauge,
 ) -> RouterStats {
     use crate::transport::coord::RecoveryOutcome;
     let mut stats = RouterStats::default();
@@ -591,6 +702,7 @@ fn router_process(
     let mut cluster_dead = false;
 
     while let Some(batch) = collect_batch(&rx, cfg) {
+        note_dequeued(&batch, gauge, &mut stats);
         stats.batches += 1;
         stats.requests += batch.len() as u64;
         stats.max_batch_seen = stats.max_batch_seen.max(batch.len());
@@ -639,7 +751,8 @@ fn router_process(
             break;
         }
     }
-    fail_queued(rx, &mut stats);
+    fail_queued(rx, gauge, &mut stats);
+    stats.queue_peak = gauge.peak();
     cluster.shutdown();
     stats
 }
@@ -732,6 +845,7 @@ fn router_pipelined(
     cfg: &ServeConfig,
     mut source: PlanSource,
     stop: &AtomicBool,
+    gauge: &QueueGauge,
 ) -> RouterStats {
     let mut stats = RouterStats::default();
     let mut summary = PipelineSummary::default();
@@ -746,6 +860,7 @@ fn router_pipelined(
     while let Some(first) = next_request_reaping(&rx, &mut pipe, &mut pending, &mut next_seq) {
         let mut batch = vec![first];
         fill_batch(&rx, cfg, &mut batch);
+        note_dequeued(&batch, gauge, &mut stats);
         stats.batches += 1;
         stats.max_batch_seen = stats.max_batch_seen.max(batch.len());
 
@@ -873,7 +988,8 @@ fn router_pipelined(
     if let Some(running) = pipe.take() {
         drain_generation(running, &mut pending, &mut summary, &mut next_seq);
     }
-    fail_queued(rx, &mut stats);
+    fail_queued(rx, gauge, &mut stats);
+    stats.queue_peak = gauge.peak();
     if summary.generations > 0 {
         stats.pipeline = Some(summary);
     }
@@ -983,6 +1099,37 @@ mod tests {
         fill_batch_until(&rx, 8, stale, &mut batch);
         assert!(batch.is_empty(), "an expired window must admit nothing");
         assert!(rx.try_recv().is_ok(), "the queued request stays admitted for the next batch");
+    }
+
+    #[test]
+    fn queue_counters_track_depth_and_wait() {
+        // four requests held by a long batch window must register on the
+        // occupancy gauge and accumulate queue age, and the gauge must
+        // read empty again once the router has drained everything
+        let cfg = ServeConfig {
+            max_batch: 8,
+            batch_window: Duration::from_millis(120),
+            queue_depth: 16,
+            ..ServeConfig::default()
+        };
+        let (server, _) = setup(cfg);
+        let handle = server.handle();
+        let rxs: Vec<_> = (0..4)
+            .map(|i| handle.submit(Tensor::random(16, 16, 3, i)).unwrap())
+            .collect();
+        assert!(handle.gauge().peak() >= 1, "admissions never registered");
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        assert_eq!(handle.gauge().depth(), 0, "gauge must drain to zero");
+        let stats = server.shutdown();
+        assert!(stats.queue_peak >= 1, "peak not recorded: {stats:?}");
+        assert!(
+            stats.queue_wait_max >= Duration::from_millis(60),
+            "first request waited out the batch window: {:?}",
+            stats.queue_wait_max
+        );
+        assert!(stats.queue_wait_total >= stats.queue_wait_max);
     }
 
     #[test]

@@ -167,6 +167,17 @@ pub enum WireMsg {
     /// Anyone -> registry: fetch the live (unexpired) peer set.
     Resolve,
     ResolveOk { entries: Vec<RegistryEntry> },
+
+    // --- open-loop front door (load client <-> serving process) ---------
+    /// Client -> front door: admit inference `seq` (client-scoped sequence
+    /// number; the reply quotes it back).
+    Submit { seq: u64, input: Tensor },
+    /// Front door -> client: completed inference for `seq`.
+    Reply { seq: u64, output: Tensor },
+    /// Front door -> client: `seq` was not served. `reason` 0 = admission
+    /// queue full (backpressure — retryable), 1 = server stopped, 2 =
+    /// failed after admission (shutdown drain or exhausted replay budget).
+    Denied { seq: u64, reason: u8 },
 }
 
 impl WireMsg {
@@ -192,6 +203,9 @@ impl WireMsg {
             WireMsg::RenewOk => 17,
             WireMsg::Resolve => 18,
             WireMsg::ResolveOk { .. } => 19,
+            WireMsg::Submit { .. } => 20,
+            WireMsg::Reply { .. } => 21,
+            WireMsg::Denied { .. } => 22,
         }
     }
 }
@@ -572,6 +586,18 @@ fn encode_payload(msg: &WireMsg) -> Vec<u8> {
                 w.f64(e.speed);
             }
         }
+        WireMsg::Submit { seq, input } => {
+            w.u64(*seq);
+            w.tensor(input);
+        }
+        WireMsg::Reply { seq, output } => {
+            w.u64(*seq);
+            w.tensor(output);
+        }
+        WireMsg::Denied { seq, reason } => {
+            w.u64(*seq);
+            w.u8(*reason);
+        }
     }
     w.buf
 }
@@ -668,6 +694,21 @@ fn decode_payload(kind: u16, payload: &[u8]) -> Result<WireMsg, CodecError> {
                 entries.push(RegistryEntry { node, ctl_addr, data_addr, speed });
             }
             WireMsg::ResolveOk { entries }
+        }
+        20 => {
+            let seq = r.u64()?;
+            let input = r.tensor()?;
+            WireMsg::Submit { seq, input }
+        }
+        21 => {
+            let seq = r.u64()?;
+            let output = r.tensor()?;
+            WireMsg::Reply { seq, output }
+        }
+        22 => {
+            let seq = r.u64()?;
+            let reason = r.u8()?;
+            WireMsg::Denied { seq, reason }
         }
         other => return Err(CodecError::BadType(other)),
     };
@@ -828,6 +869,17 @@ mod tests {
                     }],
                 },
             },
+            Frame {
+                node: 7,
+                term: 0,
+                msg: WireMsg::Submit { seq: 3, input: Tensor::random(2, 3, 1, 8) },
+            },
+            Frame {
+                node: CTL_NODE,
+                term: 0,
+                msg: WireMsg::Reply { seq: 3, output: Tensor::random(1, 1, 4, 9) },
+            },
+            Frame { node: CTL_NODE, term: 0, msg: WireMsg::Denied { seq: 4, reason: 1 } },
         ]
     }
 
@@ -839,7 +891,7 @@ mod tests {
         let mut kinds: Vec<u16> = frames.iter().map(|f| f.msg.kind()).collect();
         kinds.sort_unstable();
         kinds.dedup();
-        assert_eq!(kinds, (1u16..=19).collect::<Vec<_>>(), "sample set misses a msg type");
+        assert_eq!(kinds, (1u16..=22).collect::<Vec<_>>(), "sample set misses a msg type");
         for f in frames {
             let bytes = encode(&f);
             let (back, used) = decode(&bytes).expect("decode");

@@ -105,6 +105,15 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Render the single-line `RESULT {...}` JSON trajectory record without
+/// printing it — split from [`emit_result`] so the one-line/escaping
+/// contract is unit-testable: string fields may contain quotes, backslashes
+/// or newlines and the record must still be one grep-able line that parses
+/// back to the same values.
+pub fn result_line(v: &crate::util::json::Json) -> String {
+    format!("RESULT {}", v.to_string())
+}
+
 /// Emit the single-line `RESULT {...}` JSON trajectory record.
 ///
 /// Every bench and e2e summary prints exactly this shape, and CI greps it
@@ -112,7 +121,13 @@ pub fn black_box<T>(x: T) -> T {
 /// emitter keeps the prefix and formatting identical everywhere so the
 /// extraction can never drift per target.
 pub fn emit_result(fields: Vec<(&str, crate::util::json::Json)>) {
-    println!("RESULT {}", crate::util::json::Json::obj(fields).to_string());
+    println!("{}", result_line(&crate::util::json::Json::obj(fields)));
+}
+
+/// [`emit_result`] for callers that already hold an assembled [`Json`]
+/// object (e.g. a harness suite report).
+pub fn emit_result_json(v: &crate::util::json::Json) {
+    println!("{}", result_line(v));
 }
 
 /// Fixed-width table printer for the paper-figure benches.
@@ -197,6 +212,23 @@ mod tests {
     fn table_rejects_ragged_rows() {
         let mut t = Table::new(["a", "b"]);
         t.row(["only one"]);
+    }
+
+    #[test]
+    fn result_line_survives_pathological_fields() {
+        use crate::util::json::{parse, Json};
+        // quotes, backslashes, newlines and tabs in a string field must
+        // neither break the single-line contract nor the parse-back
+        let name = "suite \"q\"\\path\nwith\tnewline";
+        let line = result_line(&Json::obj(vec![
+            ("suite", Json::Str(name.into())),
+            ("ok", Json::Num(3.0)),
+        ]));
+        assert!(line.starts_with("RESULT {"), "{line}");
+        assert_eq!(line.lines().count(), 1, "RESULT must stay one grep-able line");
+        let v = parse(line.strip_prefix("RESULT ").unwrap()).unwrap();
+        assert_eq!(v.req("suite").unwrap().as_str(), Some(name));
+        assert_eq!(v.req("ok").unwrap().as_f64(), Some(3.0));
     }
 
     #[test]

@@ -1,0 +1,173 @@
+//! Property tests for the load-generation spine: histogram merge
+//! correctness (the thing that makes multi-process percentiles trustworthy)
+//! and arrival-schedule determinism (the thing that makes the A-suites
+//! CI-gateable).
+//!
+//! Replay a failure with `FLEXPIE_PROP_SEED=<seed> cargo test --test loadgen_props`.
+
+use flexpie::loadgen::hist::{bucket_width, Histogram};
+use flexpie::loadgen::{ArrivalProcess, ScheduleSpec};
+use flexpie::util::prop::check;
+use flexpie::util::rng::Rng;
+use flexpie::{prop_assert, prop_assert_eq};
+
+/// Latency-like values spanning the linear buckets (< 32 ns) through
+/// multi-second outliers — every octave the histogram owns.
+fn random_samples(rng: &mut Rng, n: usize) -> Vec<u64> {
+    (0..n)
+        .map(|_| {
+            let magnitude = 10u64.pow(rng.range_incl(0, 10) as u32);
+            rng.next_u64() % magnitude.max(1)
+        })
+        .collect()
+}
+
+fn record_all(samples: &[u64]) -> Histogram {
+    let mut h = Histogram::new();
+    for &v in samples {
+        h.record(v);
+    }
+    h
+}
+
+/// The harness's percentile convention over raw samples: rank
+/// `ceil(q·n)` clamped to `[1, n]`, 1-indexed into the sorted list.
+fn exact_percentile(sorted: &[u64], q: f64) -> u64 {
+    let rank = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+    sorted[rank - 1]
+}
+
+#[test]
+fn prop_merge_is_commutative_and_exact() {
+    check("hist_merge_commutative", 200, |rng| {
+        let a = random_samples(rng, rng.range_incl(0, 400));
+        let b = random_samples(rng, rng.range_incl(1, 400));
+        let (ha, hb) = (record_all(&a), record_all(&b));
+
+        let mut ab = ha.clone();
+        ab.merge(&hb);
+        let mut ba = hb.clone();
+        ba.merge(&ha);
+
+        prop_assert_eq!(ab.count(), ba.count());
+        prop_assert_eq!(ab.min(), ba.min());
+        prop_assert_eq!(ab.max(), ba.max());
+        prop_assert_eq!(ab.to_json().to_string(), ba.to_json().to_string());
+        for q in [0.0, 0.5, 0.9, 0.99, 0.999, 1.0] {
+            prop_assert!(
+                ab.percentile(q) == ba.percentile(q),
+                "q={q}: {} vs {}",
+                ab.percentile(q),
+                ba.percentile(q)
+            );
+        }
+
+        // merging is also exactly "recording everything in one place"
+        let mut both = a.clone();
+        both.extend_from_slice(&b);
+        let single = record_all(&both);
+        prop_assert_eq!(ab.to_json().to_string(), single.to_json().to_string());
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_merged_percentiles_within_one_bucket_of_raw() {
+    check("hist_percentile_error_bound", 200, |rng| {
+        let a = random_samples(rng, rng.range_incl(1, 300));
+        let b = random_samples(rng, rng.range_incl(1, 300));
+        let mut h = record_all(&a);
+        h.merge(&record_all(&b));
+
+        let mut all = a.clone();
+        all.extend_from_slice(&b);
+        all.sort_unstable();
+        for q in [0.5, 0.9, 0.99, 0.999] {
+            let exact = exact_percentile(&all, q);
+            let got = h.percentile(q);
+            // the histogram answers with the ceiling of the bucket holding
+            // the rank-q sample (clamped to the tracked max), so it can
+            // only overshoot, and never by more than that bucket's width
+            prop_assert!(
+                got >= exact && got - exact <= bucket_width(exact),
+                "q={q}: got {got}, exact {exact}, width {}",
+                bucket_width(exact)
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_count_conservation_across_agent_merges() {
+    check("hist_count_conservation", 150, |rng| {
+        // one sample population, sharded across 1..=6 "agents" — the merged
+        // histogram must conserve every recorded sample and every moment
+        // the shards tracked
+        let samples = random_samples(rng, rng.range_incl(1, 600));
+        let agents = rng.range_incl(1, 6);
+        let mut shards = vec![Histogram::new(); agents];
+        for (i, &v) in samples.iter().enumerate() {
+            shards[i % agents].record(v);
+        }
+        prop_assert_eq!(
+            shards.iter().map(Histogram::count).sum::<u64>(),
+            samples.len() as u64
+        );
+        let mut merged = Histogram::new();
+        for s in &shards {
+            merged.merge(s);
+        }
+        let single = record_all(&samples);
+        prop_assert_eq!(merged.count(), samples.len() as u64);
+        prop_assert_eq!(merged.min(), single.min());
+        prop_assert_eq!(merged.max(), single.max());
+        prop_assert_eq!(merged.to_json().to_string(), single.to_json().to_string());
+
+        // and the JSON round trip an agent report rides preserves it all
+        let back = Histogram::from_json(&merged.to_json()).unwrap();
+        prop_assert_eq!(back.to_json().to_string(), merged.to_json().to_string());
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_schedules_are_seed_deterministic() {
+    check("schedule_determinism", 100, |rng| {
+        let rate_hz = rng.range_f64(10.0, 5_000.0);
+        let seed = rng.next_u64();
+        let spec = ScheduleSpec {
+            process: ArrivalProcess::Poisson { rate_hz },
+            requests: rng.range_incl(2, 200),
+            seed,
+        };
+        // same spec, two generator runs: byte-identical
+        prop_assert_eq!(spec.generate().to_bytes(), spec.generate().to_bytes());
+        // a different seed must actually change a Poisson schedule
+        let other = ScheduleSpec { seed: seed.wrapping_add(1), ..spec.clone() };
+        prop_assert!(
+            spec.generate().to_bytes() != other.generate().to_bytes(),
+            "seed change left the schedule identical (rate {rate_hz})"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn poisson_mean_gap_converges_to_rate() {
+    // seeded, no wall clock: the sample mean of 4000 exponential gaps must
+    // sit within 10% of 1/λ
+    for (rate_hz, seed) in [(100.0f64, 1u64), (1_000.0, 2), (20_000.0, 3)] {
+        let spec = ScheduleSpec {
+            process: ArrivalProcess::Poisson { rate_hz },
+            requests: 4_000,
+            seed,
+        };
+        let mean = spec.generate().mean_gap_secs();
+        let want = 1.0 / rate_hz;
+        assert!(
+            (mean - want).abs() / want < 0.10,
+            "rate {rate_hz}: mean gap {mean:.3e}, want ≈{want:.3e}"
+        );
+    }
+}

@@ -1,0 +1,97 @@
+//! End-to-end load-harness test: suite A1 (the deterministic baseline)
+//! driven exactly the way CI drives it — real `flexpie-load agent`
+//! processes over TCP into an in-process server — plus the `flexpie-load
+//! suite` CLI surface and its `RESULT` line contract.
+
+use std::process::Command;
+
+use flexpie::bench::harness::{self, HarnessOpts};
+use flexpie::util::bench::result_line;
+use flexpie::util::json::{self, Json};
+
+fn opts() -> HarnessOpts {
+    HarnessOpts {
+        load_bin: env!("CARGO_BIN_EXE_flexpie-load").to_string(),
+        node_bin: env!("CARGO_BIN_EXE_flexpie-node").to_string(),
+        fast: true,
+    }
+}
+
+fn a1() -> harness::SuiteSpec {
+    harness::suites(true)
+        .into_iter()
+        .find(|s| s.name == "a1_baseline")
+        .expect("a1_baseline in the suite list")
+}
+
+#[test]
+fn a1_serves_every_request_bit_exactly() {
+    let spec = a1();
+    let report = harness::run_suite(&spec, &opts()).expect("a1 must pass its gates");
+    // the determinism contract: queue ≥ schedule ⇒ nothing shed, nothing
+    // failed, every reply bit-identical to the single-node reference
+    let total = spec.agents as u64 * spec.requests_per_agent as u64;
+    assert_eq!(report.sent, total);
+    assert_eq!(report.ok, total, "ok != requests: {report:?}");
+    assert_eq!(report.shed, 0);
+    assert_eq!(report.failed, 0);
+    assert_eq!(report.mismatches, 0, "a reply diverged from the reference");
+    assert_eq!(report.hist.count(), total);
+    assert!(report.goodput_rps > 0.0);
+    assert!(report.queue_peak >= 1, "traffic never touched the queue");
+}
+
+#[test]
+fn a1_result_json_is_well_formed() {
+    let report = harness::run_suite(&a1(), &opts()).expect("a1 must pass its gates");
+    let line = result_line(&report.to_json());
+    assert!(line.starts_with("RESULT {"));
+    assert_eq!(line.lines().count(), 1, "RESULT must stay one grep-able line");
+    let v = json::parse(line.strip_prefix("RESULT ").unwrap()).expect("RESULT body parses");
+
+    // every declared percentile present, numeric and monotone non-decreasing
+    let pct = ["p50_us", "p90_us", "p99_us", "p999_us"];
+    let mut prev = 0.0f64;
+    for key in pct {
+        let p = v
+            .req(key)
+            .unwrap_or_else(|e| panic!("missing {key}: {e}"))
+            .as_f64()
+            .unwrap_or_else(|| panic!("{key} not numeric"));
+        assert!(p >= prev, "{key} = {p} < previous percentile {prev}");
+        prev = p;
+    }
+    for key in ["suite", "mode", "sent", "ok", "slo_violation_frac", "goodput_rps"] {
+        assert!(v.req(key).is_ok(), "missing field {key}");
+    }
+    assert_eq!(v.req("suite").unwrap().as_str(), Some("a1_baseline"));
+    assert_eq!(v.req("slo_violation_frac").unwrap().as_f64(), Some(0.0));
+}
+
+#[test]
+fn suite_cli_emits_the_result_contract() {
+    // the exact surface CI scrapes: `flexpie-load suite --suite a1_baseline`
+    // on a fast profile, one RESULT line on stdout
+    let out = Command::new(env!("CARGO_BIN_EXE_flexpie-load"))
+        .args(["suite", "--suite", "a1_baseline"])
+        .args(["--node-bin", env!("CARGO_BIN_EXE_flexpie-node")])
+        .env("FLEXPIE_BENCH_FAST", "1")
+        .output()
+        .expect("run flexpie-load suite");
+    assert!(
+        out.status.success(),
+        "suite exited with {}: {}",
+        out.status,
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8(out.stdout).expect("utf-8 stdout");
+    let results: Vec<&str> =
+        stdout.lines().filter(|l| l.starts_with("RESULT ")).collect();
+    assert_eq!(results.len(), 1, "expected exactly one RESULT line:\n{stdout}");
+    let v = json::parse(results[0].strip_prefix("RESULT ").unwrap()).expect("parses");
+    assert_eq!(v.req("suite").unwrap().as_str(), Some("a1_baseline"));
+    let sent = v.req("sent").unwrap().as_f64().unwrap();
+    let ok = v.req("ok").unwrap().as_f64().unwrap();
+    assert_eq!(sent, ok, "deterministic suite shed traffic");
+    assert!(matches!(v.req("mismatches").unwrap(), Json::Num(n) if *n == 0.0));
+}

@@ -1,0 +1,92 @@
+#!/usr/bin/env python3
+"""Check a measured load-harness run against the committed BENCH_pr9.json.
+
+The committed file holds the machine-independent facts of the suite ladder
+(structure, seeds, request totals, zero-loss gates); the measured file is
+what `cargo bench --bench load_harness` (or `flexpie-load suite --out`)
+wrote on this machine. This script is the CI tripwire that keeps the two
+from drifting: if someone edits the suite table in
+rust/src/bench/harness.rs, the committed trajectory point must move with
+it, in the same PR.
+
+Latency magnitudes are machine-dependent and are deliberately NOT checked
+— only structure: counts, conservation, determinism gates, percentile
+monotonicity, and the B2 chaos minima.
+
+Usage: check_bench_pr9.py [--profile smoke|full] EXPECTED.json MEASURED.json
+"""
+
+import argparse
+import json
+import sys
+
+
+def fail(msg):
+    print(f"check_bench_pr9: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--profile", choices=["smoke", "full"], default="smoke")
+    ap.add_argument("expected")
+    ap.add_argument("measured")
+    args = ap.parse_args()
+
+    with open(args.expected) as f:
+        expected = json.load(f)
+    with open(args.measured) as f:
+        measured = json.load(f)
+
+    if measured.get("bench") != expected.get("bench"):
+        fail(f"bench name {measured.get('bench')!r} != {expected.get('bench')!r}")
+    if measured.get("pr") != expected.get("pr"):
+        fail(f"pr {measured.get('pr')!r} != {expected.get('pr')!r}")
+
+    got = {s["suite"]: s for s in measured.get("suites", [])}
+    want_names = [s["suite"] for s in expected["suites"]]
+    if sorted(got) != sorted(want_names):
+        fail(f"suite set {sorted(got)} != committed {sorted(want_names)}")
+
+    for want in expected["suites"]:
+        name = want["suite"]
+        m = got[name]
+
+        def eq(key, want_v, got_v):
+            if got_v != want_v:
+                fail(f"{name}: {key} = {got_v!r}, committed expectation {want_v!r}")
+
+        eq("mode", want["mode"], m["mode"])
+        eq("agents", want["agents"], m["agents"])
+        eq("slo_ms", want["slo_ms"], m["slo_ms"])
+        eq("sent", want["sent"][args.profile], m["sent"])
+        eq("mismatches", 0, m["mismatches"])
+
+        if m["ok"] + m["shed"] + m["failed"] != m["sent"]:
+            fail(
+                f"{name}: conservation broken: ok {m['ok']} + shed {m['shed']}"
+                f" + failed {m['failed']} != sent {m['sent']}"
+            )
+
+        if want["deterministic"]:
+            eq("ok", m["sent"], m["ok"])
+            eq("shed", 0, m["shed"])
+            eq("failed", 0, m["failed"])
+            eq("slo_violation_frac", 0.0, m["slo_violation_frac"])
+
+        pct = [m["p50_us"], m["p90_us"], m["p99_us"], m["p999_us"]]
+        if any(b < a for a, b in zip(pct, pct[1:])):
+            fail(f"{name}: percentiles not monotone: {pct}")
+
+        chaos = want.get("chaos")
+        if chaos:
+            if m["failovers"] < chaos["min_failovers"]:
+                fail(f"{name}: failovers {m['failovers']} < {chaos['min_failovers']}")
+            if m["replays"] < chaos["min_replays"]:
+                fail(f"{name}: replays {m['replays']} < {chaos['min_replays']}")
+
+    print(f"check_bench_pr9: OK — {len(want_names)} suites match the committed trajectory point")
+
+
+if __name__ == "__main__":
+    main()
