@@ -18,6 +18,9 @@ fn main() {
         load_bin: env!("CARGO_BIN_EXE_flexpie-load").to_string(),
         node_bin: env!("CARGO_BIN_EXE_flexpie-node").to_string(),
         fast: std::env::var("FLEXPIE_BENCH_FAST").is_ok(),
+        // every run leaves trace/metrics artifacts next to the trajectory
+        // JSON — `tools/check_trace.py` gates them in CI
+        artifact_dir: Some("bench_results".to_string()),
     };
     let mut reports = Vec::new();
     for spec in harness::suites(opts.fast) {
@@ -35,7 +38,8 @@ fn main() {
     }
 
     let mut t = Table::new([
-        "suite", "mode", "sent", "ok", "shed", "p50", "p99", "p99.9", "goodput", "slo-viol",
+        "suite", "mode", "sent", "ok", "shed", "p50", "p99", "p99.9", "q-p99", "svc-p99",
+        "wire-p99", "goodput", "slo-viol",
     ]);
     for r in &reports {
         t.row([
@@ -47,6 +51,9 @@ fn main() {
             format!("{:.0} µs", r.p50_us),
             format!("{:.0} µs", r.p99_us),
             format!("{:.0} µs", r.p999_us),
+            format!("{:.0} µs", r.queue_hist.percentile(0.99) as f64 / 1e3),
+            format!("{:.0} µs", r.service_hist.percentile(0.99) as f64 / 1e3),
+            format!("{:.0} µs", r.wire_hist.percentile(0.99) as f64 / 1e3),
             format!("{:.1} rps", r.goodput_rps),
             format!("{:.3}", r.slo_violation_frac),
         ]);

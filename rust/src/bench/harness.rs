@@ -28,6 +28,7 @@
 
 use std::io::{BufRead, BufReader};
 use std::process::{Child, Command, Stdio};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::compute::WeightStore;
@@ -36,11 +37,13 @@ use crate::loadgen::agent::AgentReport;
 use crate::loadgen::hist::Histogram;
 use crate::loadgen::procfs::{self, ProcUsage};
 use crate::loadgen::{workload, ArrivalProcess, ScheduleSpec};
+use crate::metrics::Registry;
 use crate::net::{Bandwidth, Testbed, Topology};
 use crate::partition::{Plan, Scheme};
 use crate::serve::frontdoor::FrontDoor;
 use crate::serve::{RouterStats, ServeConfig, Server};
 use crate::telemetry::TelemetryConfig;
+use crate::trace::merge_spans;
 use crate::transport::codec::{Frame, WireMsg};
 use crate::transport::coord::ProcessCluster;
 use crate::transport::registry::RegistryServer;
@@ -85,6 +88,11 @@ pub struct SuiteSpec {
     pub queue_depth: Option<usize>,
     /// A-suite gate: every request must be served (`ok == sent`).
     pub deterministic: bool,
+    /// Warm-up fraction: each agent trims this leading fraction of its
+    /// arrivals from the latency histogram and SLO tally (cold caches and
+    /// arena warm-up are not steady state). Conservation counts always
+    /// cover the full schedule; the trim is flagged in the RESULT line.
+    pub warmup: f64,
 }
 
 impl SuiteSpec {
@@ -113,6 +121,7 @@ pub fn suites(fast: bool) -> Vec<SuiteSpec> {
             slo: Duration::from_millis(250),
             queue_depth: None,
             deterministic: true,
+            warmup: 0.0,
         },
         // A2 — four agents fanning into one queue under square-wave bursts
         SuiteSpec {
@@ -130,6 +139,7 @@ pub fn suites(fast: bool) -> Vec<SuiteSpec> {
             slo: Duration::from_millis(250),
             queue_depth: None,
             deterministic: true,
+            warmup: 0.0,
         },
         // A3 — pipelined router under a rate step
         SuiteSpec {
@@ -146,6 +156,7 @@ pub fn suites(fast: bool) -> Vec<SuiteSpec> {
             slo: Duration::from_millis(250),
             queue_depth: None,
             deterministic: true,
+            warmup: 0.0,
         },
         // A4 — the full wire stack: 3 daemon processes, process-mode server
         SuiteSpec {
@@ -158,6 +169,7 @@ pub fn suites(fast: bool) -> Vec<SuiteSpec> {
             slo: Duration::from_millis(500),
             queue_depth: None,
             deterministic: true,
+            warmup: 0.0,
         },
         // B1 — Poisson at half the probed capacity: the steady-tail number
         SuiteSpec {
@@ -170,6 +182,7 @@ pub fn suites(fast: bool) -> Vec<SuiteSpec> {
             slo: Duration::from_millis(250),
             queue_depth: Some(32),
             deterministic: false,
+            warmup: 0.1,
         },
         // B2 — Poisson at 0.8× capacity with a mid-run leader SIGKILL: the
         // tail *including* detection + reinstall + replay
@@ -183,6 +196,7 @@ pub fn suites(fast: bool) -> Vec<SuiteSpec> {
             slo: Duration::from_millis(500),
             queue_depth: Some(32),
             deterministic: false,
+            warmup: 0.1,
         },
     ]
 }
@@ -196,6 +210,11 @@ pub struct HarnessOpts {
     pub node_bin: String,
     /// Smoke-scale request counts (`FLEXPIE_BENCH_FAST`).
     pub fast: bool,
+    /// When set, each suite writes its merged span trees
+    /// (`trace_<suite>.json`) and unified counter snapshot
+    /// (`metrics_<suite>.json`) into this directory — the CI artifacts
+    /// `tools/check_trace.py` gates on.
+    pub artifact_dir: Option<String>,
 }
 
 impl HarnessOpts {
@@ -209,6 +228,7 @@ impl HarnessOpts {
             load_bin: me.to_string_lossy().into_owned(),
             node_bin: sibling("flexpie-node"),
             fast: std::env::var("FLEXPIE_BENCH_FAST").is_ok(),
+            artifact_dir: None,
         })
     }
 }
@@ -241,6 +261,20 @@ pub struct SuiteReport {
     pub max_us: f64,
     /// Merged across every agent process — exact, order-independent.
     pub hist: Histogram,
+    /// Warm-up fraction the agents trimmed, and how many replies the trim
+    /// removed from the histogram/SLO population (they still count in `ok`).
+    pub warmup: f64,
+    pub trimmed: u64,
+    /// Per-request latency decomposition from the server's merged span
+    /// trees: where each request's time went. Histogram units are
+    /// nanoseconds, same as `hist`.
+    pub queue_hist: Histogram,
+    pub service_hist: Histogram,
+    pub wire_hist: Histogram,
+    /// Span trees merged from the server's flight recorder, and how many
+    /// passed the merger's nesting + conservation checks.
+    pub traces: u64,
+    pub trace_well_formed: u64,
     pub queue_peak: usize,
     pub queue_wait_max_us: f64,
     /// Process mode: reinstall-and-retry rounds after a member death.
@@ -280,6 +314,16 @@ impl SuiteReport {
             ("p999_us", Json::Num(self.p999_us)),
             ("mean_us", Json::Num(self.mean_us)),
             ("max_us", Json::Num(self.max_us)),
+            ("warmup", Json::Num(self.warmup)),
+            ("trimmed", Json::Num(self.trimmed as f64)),
+            ("queue_p50_us", Json::Num(self.queue_hist.percentile(0.50) as f64 / 1e3)),
+            ("queue_p99_us", Json::Num(self.queue_hist.percentile(0.99) as f64 / 1e3)),
+            ("service_p50_us", Json::Num(self.service_hist.percentile(0.50) as f64 / 1e3)),
+            ("service_p99_us", Json::Num(self.service_hist.percentile(0.99) as f64 / 1e3)),
+            ("wire_p50_us", Json::Num(self.wire_hist.percentile(0.50) as f64 / 1e3)),
+            ("wire_p99_us", Json::Num(self.wire_hist.percentile(0.99) as f64 / 1e3)),
+            ("traces", Json::Num(self.traces as f64)),
+            ("trace_well_formed", Json::Num(self.trace_well_formed as f64)),
             ("queue_peak", Json::Num(self.queue_peak as f64)),
             ("queue_wait_max_us", Json::Num(self.queue_wait_max_us)),
             ("failovers", Json::Num(self.failovers as f64)),
@@ -362,6 +406,7 @@ fn spawn_agent(
         .args(["--seed", &(spec.seed + id as u64).to_string()])
         .args(["--input-seed", &spec.input_seed().to_string()])
         .args(["--slo-ms", &format!("{}", spec.slo.as_secs_f64() * 1e3)])
+        .args(["--warmup", &spec.warmup.to_string()])
         .args(arrival.to_cli())
         .stdout(Stdio::piped());
     cmd.spawn().map_err(|e| format!("spawn {}: {e}", opts.load_bin))
@@ -558,12 +603,27 @@ pub fn run_suite(spec: &SuiteSpec, opts: &HarnessOpts) -> Result<SuiteReport, St
     }
 
     // Teardown order is load-bearing: the front door must release its
-    // ServerHandle clones before shutdown() can drain the router.
+    // ServerHandle clones before shutdown() can drain the router. The
+    // flight recorder outlives the server (Arc) so the span trees can be
+    // merged after the router joined — every span is final by then.
     stack.door.take().unwrap().stop();
+    let recorder = Arc::clone(stack.server.as_ref().unwrap().recorder());
     let stats: RouterStats = stack.server.take().unwrap().shutdown();
     drop(stack);
+    let trees = merge_spans(&recorder.snapshot());
 
-    let report = merge_reports(spec, &reports, &stats, offered_rps)?;
+    let mut report = merge_reports(spec, &reports, &stats, offered_rps)?;
+    report.traces = trees.len() as u64;
+    for t in &trees {
+        if t.well_formed {
+            report.trace_well_formed += 1;
+        }
+        report.queue_hist.record(t.queue_ns);
+        report.service_hist.record(t.service_ns);
+        if t.wire_ns > 0 {
+            report.wire_hist.record(t.wire_ns);
+        }
+    }
     let self_cpu_ms = match (self0, procfs::self_usage()) {
         (Some(a), Some(b)) => b.since(&a).cpu_ms,
         _ => 0,
@@ -575,8 +635,63 @@ pub fn run_suite(spec: &SuiteSpec, opts: &HarnessOpts) -> Result<SuiteReport, St
         daemon_cpu_ms,
         ..report
     };
+    if let Some(dir) = &opts.artifact_dir {
+        write_artifacts(dir, spec, &trees, &report, &stats)?;
+    }
     gate(spec, &report, &stats, probed)?;
     Ok(report)
+}
+
+/// Write the per-suite trace and metrics artifacts `tools/check_trace.py`
+/// gates on: the merged span trees and a flat named-counter snapshot.
+fn write_artifacts(
+    dir: &str,
+    spec: &SuiteSpec,
+    trees: &[crate::trace::TraceTree],
+    r: &SuiteReport,
+    stats: &RouterStats,
+) -> Result<(), String> {
+    std::fs::create_dir_all(dir).map_err(|e| format!("{}: mkdir {dir}: {e}", spec.name))?;
+    let trace_json = Json::obj(vec![
+        ("suite", Json::Str(spec.name.into())),
+        ("mode", Json::Str(r.mode.clone())),
+        ("warmup", Json::Num(spec.warmup)),
+        ("trees", Json::Arr(trees.iter().map(crate::trace::TraceTree::to_json).collect())),
+    ]);
+    let tpath = format!("{dir}/trace_{}.json", spec.name);
+    trace_json
+        .save(std::path::Path::new(&tpath))
+        .map_err(|e| format!("{}: write {tpath}: {e}", spec.name))?;
+
+    let mut reg = Registry::new();
+    reg.set("router.requests", stats.requests);
+    reg.set("router.queue_peak", stats.queue_peak as u64);
+    reg.set("router.shed.queue_full", stats.shed_queue_full);
+    reg.set("router.shed.stopped", stats.shed_stopped);
+    reg.set("router.shed.failed", stats.shed_failed);
+    reg.set("router.failovers", stats.process_failovers);
+    reg.set("router.replays", stats.replay_attempts);
+    reg.set("trace.traces", r.traces);
+    reg.set("trace.well_formed", r.trace_well_formed);
+    reg.set("agents.sent", r.sent);
+    reg.set("agents.ok", r.ok);
+    reg.set("agents.shed", r.shed);
+    reg.set("agents.failed", r.failed);
+    reg.set("agents.trimmed", r.trimmed);
+    reg.set("agents.rss_peak_bytes", r.agent_rss_peak);
+    reg.set("agents.cpu_ms", r.agent_cpu_ms);
+    reg.set("daemons.rss_peak_bytes", r.daemon_rss_peak);
+    reg.set("daemons.cpu_ms", r.daemon_cpu_ms);
+    if let Some(ts) = &stats.trace {
+        reg.set("trace.queue_ns_sum", ts.queue_ns_sum);
+        reg.set("trace.service_ns_sum", ts.service_ns_sum);
+        reg.set("trace.wire_ns_sum", ts.wire_ns_sum);
+        reg.set("trace.total_ns_sum", ts.total_ns_sum);
+    }
+    let mpath = format!("{dir}/metrics_{}.json", spec.name);
+    std::fs::write(&mpath, reg.to_json())
+        .map_err(|e| format!("{}: write {mpath}: {e}", spec.name))?;
+    Ok(())
 }
 
 /// Merge per-agent reports into one suite report (histograms bucket-wise —
@@ -589,7 +704,7 @@ fn merge_reports(
 ) -> Result<SuiteReport, String> {
     let mut hist = Histogram::new();
     let (mut sent, mut ok, mut shed, mut failed) = (0u64, 0u64, 0u64, 0u64);
-    let (mut mismatches, mut slo_ok) = (0u64, 0u64);
+    let (mut mismatches, mut slo_ok, mut trimmed) = (0u64, 0u64, 0u64);
     let (mut agent_rss_peak, mut agent_cpu_ms) = (0u64, 0u64);
     let mut span = Duration::ZERO;
     for r in reports {
@@ -606,6 +721,7 @@ fn merge_reports(
         failed += r.failed;
         mismatches += r.mismatches;
         slo_ok += r.slo_ok;
+        trimmed += r.trimmed;
         span = span.max(r.span);
         if let Some(u) = &r.usage {
             agent_rss_peak = agent_rss_peak.max(u.rss_bytes);
@@ -613,6 +729,9 @@ fn merge_reports(
         }
     }
     let p = |q: f64| hist.percentile(q) as f64 / 1e3;
+    // warm-up replies were never judged against the SLO, so they leave the
+    // violation denominator too (shed/failed still count as violations)
+    let judged = sent.saturating_sub(trimmed);
     Ok(SuiteReport {
         suite: spec.name.into(),
         mode: match spec.mode {
@@ -627,7 +746,7 @@ fn merge_reports(
         mismatches,
         slo_ms: spec.slo.as_secs_f64() * 1e3,
         slo_ok,
-        slo_violation_frac: if sent == 0 { 0.0 } else { 1.0 - slo_ok as f64 / sent as f64 },
+        slo_violation_frac: if judged == 0 { 0.0 } else { 1.0 - slo_ok as f64 / judged as f64 },
         offered_rps,
         goodput_rps: if span.is_zero() { 0.0 } else { ok as f64 / span.as_secs_f64() },
         p50_us: p(0.50),
@@ -637,6 +756,13 @@ fn merge_reports(
         mean_us: hist.mean() / 1e3,
         max_us: hist.max() as f64 / 1e3,
         hist,
+        warmup: spec.warmup,
+        trimmed,
+        queue_hist: Histogram::new(),
+        service_hist: Histogram::new(),
+        wire_hist: Histogram::new(),
+        traces: 0,
+        trace_well_formed: 0,
         queue_peak: stats.queue_peak,
         queue_wait_max_us: stats.queue_wait_max.as_secs_f64() * 1e6,
         failovers: stats.process_failovers,
@@ -676,6 +802,23 @@ fn gate(spec: &SuiteSpec, r: &SuiteReport, stats: &RouterStats, probed: u64) -> 
         ps.windows(2).all(|w| w[0] <= w[1]),
         format!("{}: percentiles not monotone: {ps:?}", spec.name),
     )?;
+    // per-reason shed conservation: the server's FrontDoor counters must
+    // equal what the agents observed on the wire, reason by reason
+    // (agents fold reasons 0 and 1 into `shed`, reason 2 is `failed`)
+    check(
+        stats.shed_queue_full + stats.shed_stopped == r.shed,
+        format!(
+            "{}: server shed {}+{} != agents' observed shed {}",
+            spec.name, stats.shed_queue_full, stats.shed_stopped, r.shed
+        ),
+    )?;
+    check(
+        stats.shed_failed == r.failed,
+        format!(
+            "{}: server failed counter {} != agents' observed failed {}",
+            spec.name, stats.shed_failed, r.failed
+        ),
+    )?;
     if spec.deterministic {
         check(
             r.ok == r.sent && r.shed == 0 && r.failed == 0,
@@ -684,13 +827,16 @@ fn gate(spec: &SuiteSpec, r: &SuiteReport, stats: &RouterStats, probed: u64) -> 
                 spec.name, r.ok, r.shed, r.failed, r.sent
             ),
         )?;
-        // every within-SLO reply is part of the recorded population
+        // every within-SLO reply is part of the recorded population, and
+        // warm-up trimming removes replies from the histogram only — the
+        // recorded + trimmed populations must still cover every reply
         check(
-            r.slo_ok <= r.hist.count() && r.hist.count() == r.ok,
+            r.slo_ok <= r.hist.count() && r.hist.count() + r.trimmed == r.ok,
             format!(
-                "{}: histogram population {} inconsistent with ok={} slo_ok={}",
+                "{}: histogram population {} (+{} trimmed) inconsistent with ok={} slo_ok={}",
                 spec.name,
                 r.hist.count(),
+                r.trimmed,
                 r.ok,
                 r.slo_ok
             ),
@@ -702,6 +848,35 @@ fn gate(spec: &SuiteSpec, r: &SuiteReport, stats: &RouterStats, probed: u64) -> 
             format!("{}: leader SIGKILL never forced a failover", spec.name),
         )?;
         check(r.replays >= 1, format!("{}: no request rode the replay path", spec.name))?;
+    }
+    // Tracing is always on: a run that merged no span trees means the span
+    // path regressed, not that tracing was "off".
+    check(r.traces >= 1, format!("{}: no span trees recorded", spec.name))?;
+    check(
+        r.trace_well_formed <= r.traces,
+        format!(
+            "{}: well-formed {} exceeds trees {}",
+            spec.name, r.trace_well_formed, r.traces
+        ),
+    )?;
+    if spec.deterministic {
+        // no chaos and no replays: every tree must pass the merger's
+        // nesting + decomposition-conservation checks
+        check(
+            r.trace_well_formed == r.traces,
+            format!(
+                "{}: {} of {} span trees failed nesting/conservation",
+                spec.name,
+                r.traces - r.trace_well_formed,
+                r.traces
+            ),
+        )?;
+    }
+    if let Mode::Process { .. } = spec.mode {
+        check(
+            r.wire_hist.count() >= 1,
+            format!("{}: process mode recorded no wire spans", spec.name),
+        )?;
     }
     Ok(())
 }

@@ -1,11 +1,13 @@
 //! `flexpie-ctl` — coordinator-side tooling for the wire transport.
 //!
 //! ```text
-//! flexpie-ctl registry [--bind tcp:127.0.0.1:0] [--ttl-ms 1000]
-//! flexpie-ctl resolve  --registry <addr>
-//! flexpie-ctl serve    --registry <addr> --nodes 3 [--model edgenet] \
-//!                      [--scheme inh|inw|outc|grid] [--seed 5] [--requests 8]
-//! flexpie-ctl shutdown --registry <addr>
+//! flexpie-ctl registry   [--bind tcp:127.0.0.1:0] [--ttl-ms 1000]
+//! flexpie-ctl resolve    --registry <addr>
+//! flexpie-ctl serve      --registry <addr> --nodes 3 [--model edgenet] \
+//!                        [--scheme inh|inw|outc|grid] [--seed 5] [--requests 8]
+//! flexpie-ctl trace-dump --registry <addr> [--json]
+//! flexpie-ctl metrics    --registry <addr> [--json]
+//! flexpie-ctl shutdown   --registry <addr>
 //! ```
 //!
 //! `registry` hosts the TTL-leased discovery service in this process and
@@ -13,17 +15,24 @@
 //! discovers the live daemons, installs a plan, drives inferences through
 //! the cluster and — because the weights derive deterministically from the
 //! seed — verifies every output against the in-process single-node
-//! reference, bit for bit.
+//! reference, bit for bit. `trace-dump` pulls every daemon's flight
+//! recorder, merges the spans into per-request trees and prints the
+//! queue/service/wire decomposition; `metrics` prints the unified named
+//! counters (per-node RSS/CPU, span tallies). Both attach to daemons that
+//! have no serving coordinator connected.
 
 use std::sync::atomic::AtomicBool;
 use std::time::Duration;
 
 use flexpie::compute::{run_reference, Tensor, WeightStore};
+use flexpie::metrics::Registry;
 use flexpie::model::zoo;
 use flexpie::partition::{Plan, Scheme};
-use flexpie::transport::coord::{InferOutcome, ProcessCluster};
+use flexpie::trace::{merge_spans, SpanRecord, TraceSummary};
+use flexpie::transport::coord::{InferOutcome, NodeTraceDump, ProcessCluster};
 use flexpie::transport::{registry, tcp};
 use flexpie::util::cli::Args;
+use flexpie::util::json::Json;
 
 fn main() {
     let args = Args::from_env();
@@ -31,12 +40,14 @@ fn main() {
         Some("registry") => cmd_registry(&args),
         Some("resolve") => cmd_resolve(&args),
         Some("serve") => cmd_serve(&args),
+        Some("trace-dump") => cmd_trace_dump(&args),
+        Some("metrics") => cmd_metrics(&args),
         Some("shutdown") => cmd_shutdown(&args),
         _ => {
             eprintln!(
                 "flexpie-ctl — FlexPie wire-transport coordinator\n\
-                 commands: registry | resolve | serve | shutdown\n\
-                 see README.md (\"Wire transport\") for usage"
+                 commands: registry | resolve | serve | trace-dump | metrics | shutdown\n\
+                 see README.md (\"Wire transport\", \"Observability\") for usage"
             );
             2
         }
@@ -163,6 +174,112 @@ fn cmd_serve(args: &Args) -> i32 {
     }
     println!("served {ok} ok, {failed} failed-and-reinstalled, 0 silently dropped");
     pc.shutdown();
+    0
+}
+
+/// Attach to every live daemon (no plan install) and pull the flight
+/// recorders + resource deltas. Shared by `trace-dump` and `metrics`.
+fn pull_dumps(args: &Args, cmd: &str) -> Result<Vec<NodeTraceDump>, String> {
+    let reg =
+        args.get("registry").ok_or_else(|| format!("flexpie-ctl {cmd}: --registry required"))?;
+    let mut pc = ProcessCluster::connect(reg, 1, Duration::from_secs(10))
+        .map_err(|e| format!("flexpie-ctl {cmd}: cluster bring-up: {e}"))?;
+    pc.infer_deadline = Duration::from_secs(10);
+    pc.attach().map_err(|e| format!("flexpie-ctl {cmd}: attach: {e}"))?;
+    Ok(pc.trace_dump())
+}
+
+fn cmd_trace_dump(args: &Args) -> i32 {
+    let dumps = match pull_dumps(args, "trace-dump") {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("{e}");
+            return if e.contains("--registry") { 2 } else { 1 };
+        }
+    };
+    let spans: Vec<SpanRecord> =
+        dumps.iter().flat_map(|d| d.spans.iter().copied()).collect();
+    let trees = merge_spans(&spans);
+    if args.has("json") {
+        let v = Json::obj(vec![
+            (
+                "nodes",
+                Json::Arr(
+                    dumps
+                        .iter()
+                        .map(|d| {
+                            Json::obj(vec![
+                                ("node", Json::Num(d.node as f64)),
+                                ("spans", Json::Num(d.spans.len() as f64)),
+                                ("rss_bytes", Json::Num(d.rss_bytes as f64)),
+                                ("cpu_ms", Json::Num(d.cpu_ms as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("trees", Json::Arr(trees.iter().map(|t| t.to_json()).collect())),
+        ]);
+        println!("{}", v.to_string());
+        return 0;
+    }
+    for d in &dumps {
+        println!(
+            "node {}: {} span(s), rss {} KiB, cpu {} ms",
+            d.node,
+            d.spans.len(),
+            d.rss_bytes / 1024,
+            d.cpu_ms
+        );
+    }
+    for t in &trees {
+        println!(
+            "trace {} gen {}: total {} µs = queue {} + service {} + wire {} µs, \
+             {} stage span(s){}{}",
+            t.trace_id,
+            t.gen,
+            t.total_ns / 1000,
+            t.queue_ns / 1000,
+            t.service_ns / 1000,
+            t.wire_ns / 1000,
+            t.stages.len(),
+            if t.well_formed { "" } else { " [NOT WELL-FORMED]" },
+            if t.truncated { " [TRUNCATED]" } else { "" },
+        );
+    }
+    let summary = TraceSummary::from_trees(&trees);
+    println!("{summary}");
+    0
+}
+
+fn cmd_metrics(args: &Args) -> i32 {
+    let dumps = match pull_dumps(args, "metrics") {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("{e}");
+            return if e.contains("--registry") { 2 } else { 1 };
+        }
+    };
+    let spans: Vec<SpanRecord> =
+        dumps.iter().flat_map(|d| d.spans.iter().copied()).collect();
+    let trees = merge_spans(&spans);
+    let summary = TraceSummary::from_trees(&trees);
+    let mut reg = Registry::new();
+    for d in &dumps {
+        reg.set(&format!("node{}.rss_bytes", d.node), d.rss_bytes);
+        reg.set(&format!("node{}.cpu_ms", d.node), d.cpu_ms);
+        reg.set(&format!("node{}.spans", d.node), d.spans.len() as u64);
+    }
+    reg.set("trace.traces", summary.traces);
+    reg.set("trace.well_formed", summary.well_formed);
+    reg.set("trace.truncated", summary.truncated);
+    reg.set("trace.service_ns_sum", summary.service_ns_sum);
+    reg.set("trace.wire_ns_sum", summary.wire_ns_sum);
+    if args.has("json") {
+        println!("{}", reg.to_json());
+    } else {
+        print!("{reg}");
+    }
     0
 }
 

@@ -4,10 +4,12 @@
 //! # one load-agent process (spawned by the harness, one per traffic source)
 //! flexpie-load agent --addr tcp:127.0.0.1:4600 --id 0 --requests 32 \
 //!                    --seed 11 --arrival poisson --rate 120 [--slo-ms 250] \
-//!                    [--distinct 4] [--input-seed 711] [--reply-timeout-ms 30000]
+//!                    [--distinct 4] [--input-seed 711] [--reply-timeout-ms 30000] \
+//!                    [--warmup 0.1]
 //!
 //! # the full suite ladder (A1–A4 deterministic, B1–B2 Poisson)
-//! flexpie-load suite [--suite a1_baseline] [--node-bin PATH] [--out FILE]
+//! flexpie-load suite [--suite a1_baseline] [--node-bin PATH] [--out FILE] \
+//!                    [--artifacts DIR]
 //! ```
 //!
 //! `agent` paces a seeded schedule into a serving front door and prints one
@@ -30,7 +32,8 @@ fn usage() -> ! {
         "flexpie-load — FlexPie open-loop load harness\n\
          usage: flexpie-load agent --addr <addr> [--id N] [--requests N] [--seed N]\n\
          \x20                      [--arrival uniform|poisson|burst|step] [--rate HZ] …\n\
-         \x20      flexpie-load suite [--suite NAME] [--node-bin PATH] [--out FILE]"
+         \x20      flexpie-load suite [--suite NAME] [--node-bin PATH] [--out FILE]\n\
+         \x20                         [--artifacts DIR]"
     );
     std::process::exit(2);
 }
@@ -57,6 +60,7 @@ fn agent_main(args: &Args) {
         slo: Duration::from_secs_f64(args.f64_or("slo-ms", 250.0) / 1e3),
         connect_deadline: Duration::from_millis(args.u64_or("connect-deadline-ms", 10_000)),
         reply_timeout: Duration::from_millis(args.u64_or("reply-timeout-ms", 30_000)),
+        warmup: args.f64_or("warmup", 0.0),
     };
     match agent::run(&opts) {
         Ok(report) => println!("{}", report.to_line()),
@@ -77,6 +81,9 @@ fn suite_main(args: &Args) {
     };
     if let Some(nb) = args.get("node-bin") {
         opts.node_bin = nb.to_string();
+    }
+    if let Some(dir) = args.get("artifacts") {
+        opts.artifact_dir = Some(dir.to_string());
     }
     let only = args.get("suite");
     let mut reports = Vec::new();

@@ -79,6 +79,7 @@ use crate::model::Model;
 use crate::partition::geometry::out_tiles;
 use crate::partition::inflate::BlockGeometry;
 use crate::partition::{Plan, Region, Scheme};
+use crate::trace::{FlightRecorder, SpanRecord, KIND_STAGE};
 use crate::DTYPE_BYTES;
 
 /// One finished inference leaving the pipeline.
@@ -166,6 +167,9 @@ enum Payload {
 
 struct Item {
     seq: u64,
+    /// Trace id riding with this item (0 = untraced): stage threads record
+    /// their busy interval for it when the pipeline holds a recorder.
+    trace: u64,
     payload: Payload,
     /// Bytes/messages accumulated by the boundaries this item has crossed.
     bytes: u64,
@@ -180,6 +184,8 @@ struct StageCtx {
     geos: Vec<BlockGeometry>,
     nodes: usize,
     compute: ComputeConfig,
+    /// Span sink for traced items (`None` = tracing off, zero overhead).
+    recorder: Option<Arc<FlightRecorder>>,
 }
 
 enum StageOut {
@@ -245,6 +251,24 @@ impl BlockPipeline {
         leader: usize,
         compute: ComputeConfig,
     ) -> BlockPipeline {
+        Self::start_traced(model, plan, weights, nodes, depth, leader, compute, None)
+    }
+
+    /// [`Self::start_with`] plus a span sink: stage threads record one
+    /// `KIND_STAGE` span per traced item (`node` = stage index) into
+    /// `recorder` — the serving router passes its flight recorder here so
+    /// per-stage busy time joins each request's span tree.
+    #[allow(clippy::too_many_arguments)]
+    pub fn start_traced(
+        model: &Model,
+        plan: &Plan,
+        weights: &WeightStore,
+        nodes: usize,
+        depth: usize,
+        leader: usize,
+        compute: ComputeConfig,
+        recorder: Option<Arc<FlightRecorder>>,
+    ) -> BlockPipeline {
         assert!(depth >= 1, "pipeline depth must be >= 1");
         let (blocks, geos) = super::plan_geometry(model, plan, nodes);
         let ctx = Arc::new(StageCtx {
@@ -254,6 +278,7 @@ impl BlockPipeline {
             geos,
             nodes,
             compute,
+            recorder,
         });
         let n_stages = ctx.blocks.len();
         let (done_tx, done_rx) = channel::<Completion>();
@@ -308,12 +333,19 @@ impl BlockPipeline {
     /// Submit one inference; blocks when `depth` submissions are already
     /// queued at the entry (backpressure).
     pub fn submit(&mut self, input: Tensor) {
+        self.submit_traced(input, 0);
+    }
+
+    /// [`Self::submit`] carrying a trace id (0 = untraced): each stage
+    /// records its busy interval for this item when the pipeline was
+    /// started with a recorder.
+    pub fn submit_traced(&mut self, input: Tensor, trace: u64) {
         let seq = self.submitted;
         self.submitted += 1;
         self.input
             .as_ref()
             .expect("pipeline already drained")
-            .send(Item { seq, payload: Payload::Input(input), bytes: 0, msgs: 0 })
+            .send(Item { seq, trace, payload: Payload::Input(input), bytes: 0, msgs: 0 })
             .expect("pipeline stage died");
     }
 
@@ -510,9 +542,12 @@ fn stage_main(ctx: &StageCtx, bi: usize, rx: Receiver<Item>, out: StageOut) -> S
                 stats.bytes_sent += b;
                 stats.msgs_sent += m;
                 stats.items += 1;
-                stats.busy += t0.elapsed();
+                let busy = t0.elapsed();
+                stats.busy += busy;
+                record_stage_span(ctx, bi, item.trace, busy);
                 let fwd = Item {
                     seq: item.seq,
+                    trace: item.trace,
                     payload: Payload::Stores(next_stores),
                     bytes: item.bytes,
                     msgs: item.msgs,
@@ -526,7 +561,9 @@ fn stage_main(ctx: &StageCtx, bi: usize, rx: Receiver<Item>, out: StageOut) -> S
                 stats.bytes_sent += b;
                 stats.msgs_sent += m;
                 stats.items += 1;
-                stats.busy += t0.elapsed();
+                let busy = t0.elapsed();
+                stats.busy += busy;
+                record_stage_span(ctx, bi, item.trace, busy);
                 let done = Completion {
                     seq: item.seq,
                     output,
@@ -542,6 +579,27 @@ fn stage_main(ctx: &StageCtx, bi: usize, rx: Receiver<Item>, out: StageOut) -> S
     stats.buf_reuses = arena.reuses;
     stats.buf_allocs = arena.allocs;
     stats
+}
+
+/// Record this stage's busy interval for a traced item (`node` carries the
+/// stage index — stage threads share one process, so their spans live on
+/// the recorder's single clock).
+fn record_stage_span(ctx: &StageCtx, bi: usize, trace: u64, busy: Duration) {
+    let Some(rec) = ctx.recorder.as_deref() else {
+        return;
+    };
+    if trace == 0 {
+        return;
+    }
+    let dur_ns = busy.as_nanos() as u64;
+    rec.record(SpanRecord {
+        trace_id: trace,
+        gen: 0,
+        kind: KIND_STAGE,
+        node: bi as u32,
+        start_ns: rec.now_ns().saturating_sub(dur_ns),
+        dur_ns,
+    });
 }
 
 /// The leader slices the model input into every node's entry requirement for
@@ -815,6 +873,64 @@ mod tests {
             let reference = run_reference(&model, &ws, input);
             assert_eq!(reference.max_abs_diff(&c.output), 0.0);
         }
+    }
+
+    #[test]
+    fn traced_items_record_one_span_per_stage() {
+        let model = zoo::edgenet(16);
+        let ws = WeightStore::for_model(&model, 9);
+        let plan = Plan::uniform(Scheme::InH, model.n_layers());
+        let n_stages = plan.blocks().len();
+        let rec = Arc::new(FlightRecorder::new());
+        let mut pipe = BlockPipeline::start_traced(
+            &model,
+            &plan,
+            &ws,
+            4,
+            2,
+            0,
+            ComputeConfig::default(),
+            Some(Arc::clone(&rec)),
+        );
+        let ins = inputs(&model, 4, 820);
+        for (i, t) in ins.iter().enumerate() {
+            pipe.submit_traced(t.clone(), 100 + i as u64);
+        }
+        let (rest, _) = pipe.finish();
+        assert_eq!(rest.len(), 4);
+        let spans = rec.snapshot();
+        for i in 0..4u64 {
+            let trace = 100 + i;
+            let mine: Vec<_> =
+                spans.iter().filter(|s| s.trace_id == trace && s.kind == KIND_STAGE).collect();
+            assert_eq!(mine.len(), n_stages, "trace {trace} missing stage spans");
+            let mut stages: Vec<u32> = mine.iter().map(|s| s.node).collect();
+            stages.sort_unstable();
+            assert_eq!(stages, (0..n_stages as u32).collect::<Vec<_>>());
+            assert!(mine.iter().all(|s| s.dur_ns > 0), "stage spans must carry busy time");
+        }
+    }
+
+    #[test]
+    fn untraced_items_record_nothing() {
+        let model = zoo::edgenet(16);
+        let ws = WeightStore::for_model(&model, 9);
+        let plan = Plan::uniform(Scheme::InH, model.n_layers());
+        let rec = Arc::new(FlightRecorder::new());
+        let mut pipe = BlockPipeline::start_traced(
+            &model,
+            &plan,
+            &ws,
+            3,
+            1,
+            0,
+            ComputeConfig::default(),
+            Some(Arc::clone(&rec)),
+        );
+        pipe.submit(inputs(&model, 1, 830).pop().unwrap());
+        let (rest, _) = pipe.finish();
+        assert_eq!(rest.len(), 1);
+        assert_eq!(rec.recorded(), 0, "trace id 0 must not record spans");
     }
 
     #[test]

@@ -67,6 +67,7 @@ pub mod planner;
 pub mod runtime;
 pub mod serve;
 pub mod telemetry;
+pub mod trace;
 pub mod transport;
 pub mod util;
 

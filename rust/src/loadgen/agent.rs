@@ -53,6 +53,12 @@ pub struct AgentOpts {
     /// Per-read reply timeout — a server that goes quiet this long is a
     /// failed run, not a hang.
     pub reply_timeout: Duration,
+    /// Warm-up fraction (0.0..1.0): the leading `warmup × requests`
+    /// arrivals are *excluded* from the latency histogram and SLO tally —
+    /// they measure cold caches and arena warm-up, not steady state. They
+    /// still count toward `sent`/`ok`/`shed`/`failed`, so accounting
+    /// conservation always covers the full schedule.
+    pub warmup: f64,
 }
 
 impl Default for AgentOpts {
@@ -70,6 +76,7 @@ impl Default for AgentOpts {
             slo: Duration::from_millis(250),
             connect_deadline: Duration::from_secs(10),
             reply_timeout: Duration::from_secs(30),
+            warmup: 0.0,
         }
     }
 }
@@ -87,8 +94,11 @@ pub struct AgentReport {
     pub failed: u64,
     /// Replies whose output was not bit-identical to the reference.
     pub mismatches: u64,
-    /// Replies within the SLO.
+    /// Replies within the SLO (warm-up replies excluded).
     pub slo_ok: u64,
+    /// Warm-up replies trimmed from the histogram and SLO tally (they
+    /// still count in `ok`).
+    pub trimmed: u64,
     /// First send → last terminal frame.
     pub span: Duration,
     /// Reply latency histogram (nanoseconds).
@@ -107,6 +117,7 @@ impl AgentReport {
             ("failed", Json::Num(self.failed as f64)),
             ("mismatches", Json::Num(self.mismatches as f64)),
             ("slo_ok", Json::Num(self.slo_ok as f64)),
+            ("trimmed", Json::Num(self.trimmed as f64)),
             ("span_ns", Json::Num(self.span.as_nanos() as f64)),
             ("hist", self.hist.to_json()),
             ("proc", self.usage.as_ref().map_or(Json::Null, ProcUsage::to_json)),
@@ -125,6 +136,7 @@ impl AgentReport {
             failed: f("failed")?,
             mismatches: f("mismatches")?,
             slo_ok: f("slo_ok")?,
+            trimmed: f("trimmed")?,
             span: Duration::from_nanos(f("span_ns")?),
             hist: Histogram::from_json(v.req("hist")?)?,
             usage: match v.req("proc")? {
@@ -181,9 +193,14 @@ pub fn run(opts: &AgentOpts) -> Result<AgentReport, String> {
         failed: u64,
         mismatches: u64,
         slo_ok: u64,
+        trimmed: u64,
         hist: Histogram,
         last: Option<Instant>,
     }
+
+    // warm-up cutoff: sequence numbers below this are audited but not
+    // measured (cold-start latency would pollute the steady-state tail)
+    let warm_cutoff = (total as f64 * opts.warmup.clamp(0.0, 1.0)).floor() as u64;
 
     let reader_times = send_times.clone();
     let reader_expected = expected.clone();
@@ -196,6 +213,7 @@ pub fn run(opts: &AgentOpts) -> Result<AgentReport, String> {
             failed: 0,
             mismatches: 0,
             slo_ok: 0,
+            trimmed: 0,
             hist: Histogram::new(),
             last: None,
         };
@@ -209,9 +227,13 @@ pub fn run(opts: &AgentOpts) -> Result<AgentReport, String> {
                     let sent_at = reader_times.lock().unwrap()[seq as usize]
                         .ok_or_else(|| format!("agent {agent_id}: reply for unsent seq {seq}"))?;
                     let lat = now.duration_since(sent_at);
-                    t.hist.record(lat.as_nanos() as u64);
-                    if lat <= slo {
-                        t.slo_ok += 1;
+                    if seq >= warm_cutoff {
+                        t.hist.record(lat.as_nanos() as u64);
+                        if lat <= slo {
+                            t.slo_ok += 1;
+                        }
+                    } else {
+                        t.trimmed += 1;
                     }
                     let want = &reader_expected[(seq % distinct) as usize];
                     if want.max_abs_diff(&output) != 0.0 {
@@ -273,6 +295,7 @@ pub fn run(opts: &AgentOpts) -> Result<AgentReport, String> {
         failed: tally.failed,
         mismatches: tally.mismatches,
         slo_ok: tally.slo_ok,
+        trimmed: tally.trimmed,
         span,
         hist: tally.hist,
         usage,
@@ -297,6 +320,7 @@ mod tests {
             failed: 0,
             mismatches: 0,
             slo_ok: 2,
+            trimmed: 1,
             span: Duration::from_millis(12),
             hist,
             usage: Some(ProcUsage { rss_bytes: 4096, cpu_ms: 10, read_bytes: 0, write_bytes: 1 }),
@@ -310,6 +334,7 @@ mod tests {
         assert_eq!(back.ok, r.ok);
         assert_eq!(back.shed, r.shed);
         assert_eq!(back.slo_ok, r.slo_ok);
+        assert_eq!(back.trimmed, r.trimmed);
         assert_eq!(back.span, r.span);
         assert_eq!(back.hist.count(), r.hist.count());
         assert_eq!(back.hist.max(), r.hist.max());

@@ -197,6 +197,11 @@ pub struct PipelineSummary {
     /// Items served by the dominant generation (the one the occupancy
     /// snapshot describes).
     pub items_dominant: u64,
+    /// Tensor-buffer requests served by arena recycling, summed across all
+    /// stages and generations — the steady-state allocation story.
+    pub buf_reuses: u64,
+    /// Tensor-buffer requests that provisioned a fresh buffer.
+    pub buf_allocs: u64,
 }
 
 impl PipelineSummary {
@@ -220,13 +225,84 @@ impl std::fmt::Display for PipelineSummary {
             self.occupancy.iter().map(|o| format!("{:.0}%", o * 100.0)).collect();
         write!(
             f,
-            "stages={} items={} generations={} bottleneck=s{} occupancy=[{}]",
+            "stages={} items={} generations={} bottleneck=s{} occupancy=[{}] buf={}r/{}a",
             self.stages,
             self.items,
             self.generations,
             self.bottleneck_stage,
-            occ.join(" ")
+            occ.join(" "),
+            self.buf_reuses,
+            self.buf_allocs
         )
+    }
+}
+
+/// Unified named-counter snapshot: one flat, sorted `name → value` map that
+/// every subsystem's counters fold into ([`crate::serve::RouterStats`],
+/// [`AdaptationMetrics`], [`PipelineSummary`], per-node resource deltas from
+/// trace dumps). A registry is a *snapshot*, not a live sink — build one at
+/// a reporting boundary (server shutdown, `flexpie-ctl metrics`), dump it,
+/// drop it. Keys are dotted paths (`router.requests`,
+/// `router.shed.queue_full`, `node3.rss_bytes`) so grep and diff stay easy.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Registry {
+    counters: std::collections::BTreeMap<String, u64>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Set (or overwrite) a counter.
+    pub fn set(&mut self, name: &str, value: u64) {
+        self.counters.insert(name.to_string(), value);
+    }
+
+    /// Add to a counter, creating it at zero first.
+    pub fn add(&mut self, name: &str, delta: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += delta;
+    }
+
+    /// Look a counter up (`None` = never set — distinct from zero).
+    pub fn get(&self, name: &str) -> Option<u64> {
+        self.counters.get(name).copied()
+    }
+
+    pub fn len(&self) -> usize {
+        self.counters.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty()
+    }
+
+    /// All counters in sorted-name order.
+    pub fn counters(&self) -> impl Iterator<Item = (&str, u64)> {
+        self.counters.iter().map(|(k, v)| (k.as_str(), *v))
+    }
+
+    /// Flat JSON object, keys in sorted order (names are code-controlled
+    /// dotted identifiers, so no escaping is ever needed).
+    pub fn to_json(&self) -> String {
+        let mut s = String::from("{");
+        for (i, (k, v)) in self.counters.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!("\"{k}\":{v}"));
+        }
+        s.push('}');
+        s
+    }
+}
+
+impl std::fmt::Display for Registry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        for (k, v) in self.counters.iter() {
+            writeln!(f, "{k} {v}")?;
+        }
+        Ok(())
     }
 }
 
@@ -325,6 +401,26 @@ mod tests {
         assert_eq!(p.bottleneck_stage, 2);
         let s = p.to_string();
         assert!(s.contains("generations=3"), "{s}");
+    }
+
+    #[test]
+    fn registry_is_sorted_and_json_round_readable() {
+        let mut r = Registry::new();
+        r.set("router.requests", 42);
+        r.set("node3.rss_bytes", 1024);
+        r.add("router.shed.queue_full", 2);
+        r.add("router.shed.queue_full", 3);
+        assert_eq!(r.get("router.shed.queue_full"), Some(5));
+        assert_eq!(r.get("missing"), None);
+        assert_eq!(r.len(), 3);
+        let names: Vec<&str> = r.counters().map(|(k, _)| k).collect();
+        assert_eq!(names, vec!["node3.rss_bytes", "router.requests", "router.shed.queue_full"]);
+        assert_eq!(
+            r.to_json(),
+            "{\"node3.rss_bytes\":1024,\"router.requests\":42,\"router.shed.queue_full\":5}"
+        );
+        let text = r.to_string();
+        assert!(text.contains("router.requests 42"), "{text}");
     }
 
     #[test]

@@ -14,7 +14,10 @@
 //! output, or `Denied{seq, reason}` (0 = queue full, 1 = server stopped,
 //! 2 = failed after admission — shutdown drain, exhausted replay budget).
 //! That accounting conservation (`sent == ok + shed + failed`) is what the
-//! load harness audits.
+//! load harness audits. Every denial is also tallied per reason into the
+//! server's shared [`crate::serve::ShedCounters`], so
+//! [`crate::serve::RouterStats`] reports the same split the agents observe
+//! on the wire — the harness asserts the two views agree.
 //!
 //! Shutdown order matters: a connection's reader holds a [`ServerHandle`]
 //! clone, which keeps the server's admission queue open. [`FrontDoor::stop`]
@@ -125,14 +128,21 @@ fn serve_conn(mut stream: Stream, handle: ServerHandle) {
         return;
     };
     let (tx, rx): (Sender<Outcome>, Receiver<Outcome>) = channel();
-    let writer = std::thread::spawn(move || write_outcomes(&mut wstream, rx));
+    let shed = handle.shed_arc();
+    let writer = std::thread::spawn(move || write_outcomes(&mut wstream, rx, &shed));
     loop {
         match tcp::read_frame(&mut stream) {
             Ok(Frame { msg: WireMsg::Submit { seq, input }, .. }) => {
                 let outcome = match handle.submit(input) {
                     Ok(resp) => Outcome::Pending(seq, resp),
-                    Err(AdmitError::QueueFull) => Outcome::Shed(seq, DENY_QUEUE_FULL),
-                    Err(AdmitError::Stopped) => Outcome::Shed(seq, DENY_STOPPED),
+                    Err(AdmitError::QueueFull) => {
+                        handle.shed().note(DENY_QUEUE_FULL);
+                        Outcome::Shed(seq, DENY_QUEUE_FULL)
+                    }
+                    Err(AdmitError::Stopped) => {
+                        handle.shed().note(DENY_STOPPED);
+                        Outcome::Shed(seq, DENY_STOPPED)
+                    }
                 };
                 if tx.send(outcome).is_err() {
                     break; // writer died (client unreachable): stop reading
@@ -149,14 +159,18 @@ fn serve_conn(mut stream: Stream, handle: ServerHandle) {
 
 /// Writer half: one terminal frame per submission, FIFO. Blocking on
 /// `resp.recv()` is head-of-line only for *this* connection, and the
-/// router completes FIFO anyway.
-fn write_outcomes(stream: &mut Stream, rx: Receiver<Outcome>) {
+/// router completes FIFO anyway. Post-admission failures are counted here
+/// — the writer is the first to observe the response channel disconnect.
+fn write_outcomes(stream: &mut Stream, rx: Receiver<Outcome>, shed: &crate::serve::ShedCounters) {
     for outcome in rx.iter() {
         let msg = match outcome {
             Outcome::Pending(seq, resp) => match resp.recv() {
                 Ok(r) => WireMsg::Reply { seq, output: r.output },
                 // admitted but failed: shutdown drain or exhausted replays
-                Err(_) => WireMsg::Denied { seq, reason: DENY_FAILED },
+                Err(_) => {
+                    shed.note(DENY_FAILED);
+                    WireMsg::Denied { seq, reason: DENY_FAILED }
+                }
             },
             Outcome::Shed(seq, reason) => WireMsg::Denied { seq, reason },
         };
@@ -258,6 +272,11 @@ mod tests {
         door.stop();
         let stats = server.shutdown();
         assert_eq!(stats.requests, ok);
+        // per-reason shed conservation: the server's counters must equal
+        // what the client observed on the wire
+        assert_eq!(stats.shed_queue_full, shed, "per-reason shed counter diverged");
+        assert_eq!(stats.shed_stopped, 0);
+        assert_eq!(stats.shed_failed, 0);
     }
 
     #[test]

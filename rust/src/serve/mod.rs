@@ -80,16 +80,26 @@
 //! or an unrecoverable cluster fails requests
 //! ([`RouterStats::failed_on_dead_cluster`]) — the same
 //! zero-silent-drop contract as every other path.
+//!
+//! Every admitted request is **traced**: admission assigns a process-unique
+//! trace id ([`crate::trace`]) and the router records queue / service /
+//! wire / end-to-end spans into a server-owned lock-free
+//! [`FlightRecorder`] as each response completes (pipelined stages add
+//! per-stage busy spans; the process router derives the wire span as its
+//! measured round trip minus the daemon-reported compute time). Recording
+//! is allocation-free on the serving path; [`Server::shutdown`] merges the
+//! recorder into [`RouterStats::trace`], and the open-loop harness drains
+//! it for percentile-level latency decomposition.
 
 pub mod frontdoor;
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError};
 use std::sync::{mpsc::sync_channel, Arc};
 use std::time::{Duration, Instant};
 
-use crate::cluster::pipeline::{BlockPipeline, Completion};
+use crate::cluster::pipeline::{BlockPipeline, Completion, PipelineStats};
 use crate::compute::{ComputeConfig, Tensor, WeightStore};
 use crate::elastic::{ConditionTrace, ElasticConfig, ElasticFrontend};
 use crate::engine;
@@ -98,6 +108,10 @@ use crate::model::Model;
 use crate::net::Testbed;
 use crate::partition::Plan;
 use crate::telemetry::{TelemetryConfig, TelemetrySource};
+use crate::trace::{
+    merge_spans, FlightRecorder, SpanRecord, TraceSummary, CTL_NODE, KIND_QUEUE, KIND_SERVICE,
+    KIND_TOTAL, KIND_WIRE,
+};
 
 /// Server configuration.
 #[derive(Debug, Clone)]
@@ -169,6 +183,10 @@ pub struct Response {
 struct Request {
     input: Tensor,
     enqueued: Instant,
+    /// Trace id assigned at admission (never 0 — every request is traced;
+    /// the recorder is lock-free and allocation-free, so tracing is on by
+    /// default).
+    trace: u64,
     resp: Sender<Response>,
 }
 
@@ -177,6 +195,44 @@ struct Request {
 pub enum AdmitError {
     QueueFull,
     Stopped,
+}
+
+/// Per-reason shed counters, shared between every [`ServerHandle`] clone
+/// (the front door increments them as it denies submissions) and folded
+/// into [`RouterStats`] at shutdown. Reason codes mirror the wire denial
+/// codes: [`frontdoor::DENY_QUEUE_FULL`], [`frontdoor::DENY_STOPPED`],
+/// [`frontdoor::DENY_FAILED`] — the load harness asserts conservation
+/// against the agents' own per-reason tallies.
+#[derive(Debug, Default)]
+pub struct ShedCounters {
+    queue_full: AtomicU64,
+    stopped: AtomicU64,
+    failed: AtomicU64,
+}
+
+impl ShedCounters {
+    /// Count one denial under its wire reason code. Unknown codes count as
+    /// `failed` — a denial is never silently dropped from the books.
+    pub fn note(&self, reason: u8) {
+        let c = match reason {
+            frontdoor::DENY_QUEUE_FULL => &self.queue_full,
+            frontdoor::DENY_STOPPED => &self.stopped,
+            _ => &self.failed,
+        };
+        c.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn queue_full(&self) -> u64 {
+        self.queue_full.load(Ordering::Relaxed)
+    }
+
+    pub fn stopped(&self) -> u64 {
+        self.stopped.load(Ordering::Relaxed)
+    }
+
+    pub fn failed(&self) -> u64 {
+        self.failed.load(Ordering::Relaxed)
+    }
 }
 
 /// Admission-queue occupancy shared between the submit side and the
@@ -220,28 +276,52 @@ impl QueueGauge {
 pub struct ServerHandle {
     tx: SyncSender<Request>,
     gauge: Arc<QueueGauge>,
+    recorder: Arc<FlightRecorder>,
+    shed: Arc<ShedCounters>,
 }
 
 impl ServerHandle {
     /// Submit without waiting; returns the response channel. Identical
     /// admission contract to [`Server::submit`].
     pub fn submit(&self, input: Tensor) -> Result<Receiver<Response>, AdmitError> {
-        submit_via(&self.tx, &self.gauge, input)
+        submit_via(&self.tx, &self.gauge, &self.recorder, input)
     }
 
     /// The shared queue-occupancy gauge.
     pub fn gauge(&self) -> &QueueGauge {
         &self.gauge
     }
+
+    /// The server's flight recorder (span source for trace dumps).
+    pub fn recorder(&self) -> &FlightRecorder {
+        &self.recorder
+    }
+
+    /// The shared per-reason shed counters.
+    pub fn shed(&self) -> &ShedCounters {
+        &self.shed
+    }
+
+    /// An owning clone of the shed counters for threads that outlive this
+    /// handle (the front door's per-connection writers).
+    pub fn shed_arc(&self) -> Arc<ShedCounters> {
+        Arc::clone(&self.shed)
+    }
 }
 
 fn submit_via(
     tx: &SyncSender<Request>,
     gauge: &QueueGauge,
+    recorder: &FlightRecorder,
     input: Tensor,
 ) -> Result<Receiver<Response>, AdmitError> {
     let (resp_tx, resp_rx) = channel();
-    let req = Request { input, enqueued: Instant::now(), resp: resp_tx };
+    let req = Request {
+        input,
+        enqueued: Instant::now(),
+        trace: recorder.next_trace_id(),
+        resp: resp_tx,
+    };
     match tx.try_send(req) {
         Ok(()) => {
             gauge.admitted();
@@ -258,6 +338,8 @@ pub struct Server {
     tx: SyncSender<Request>,
     stop: Arc<AtomicBool>,
     gauge: Arc<QueueGauge>,
+    recorder: Arc<FlightRecorder>,
+    shed: Arc<ShedCounters>,
     router: Option<std::thread::JoinHandle<RouterStats>>,
 }
 
@@ -317,6 +399,19 @@ pub struct RouterStats {
     pub queue_wait_total: Duration,
     /// Worst single admission-queue wait.
     pub queue_wait_max: Duration,
+    /// Front-door denials for a full admission queue (wire reason 0) —
+    /// from the shared [`ShedCounters`], zero when no front door ran.
+    pub shed_queue_full: u64,
+    /// Front-door denials because the server had stopped (wire reason 1).
+    pub shed_stopped: u64,
+    /// Admitted-but-failed denials (wire reason 2): shutdown drain or an
+    /// exhausted replay budget, observed by the front door as a response
+    /// channel disconnecting.
+    pub shed_failed: u64,
+    /// Merged span trees from the server's flight recorder: what tracing
+    /// saw, aggregated ([`crate::trace::TraceSummary`]). `None` only when
+    /// nothing was ever recorded.
+    pub trace: Option<TraceSummary>,
 }
 
 /// Where the router gets the plan for the next batch.
@@ -402,25 +497,40 @@ impl Server {
         let (tx, rx) = sync_channel::<Request>(cfg.queue_depth);
         let stop = Arc::new(AtomicBool::new(false));
         let gauge = Arc::new(QueueGauge::default());
+        let recorder = Arc::new(FlightRecorder::new());
+        let shed = Arc::new(ShedCounters::default());
         let router_stop = stop.clone();
         let router_gauge = gauge.clone();
+        let router_recorder = recorder.clone();
         let router = std::thread::spawn(move || {
-            router_process(rx, &cfg, cluster, &router_stop, &router_gauge)
+            router_process(rx, &cfg, cluster, &router_stop, &router_gauge, &router_recorder)
         });
-        Server { tx, stop, gauge, router: Some(router) }
+        Server { tx, stop, gauge, recorder, shed, router: Some(router) }
     }
 
     fn spawn(model: Model, weights: WeightStore, cfg: ServeConfig, source: PlanSource) -> Server {
         let (tx, rx) = sync_channel::<Request>(cfg.queue_depth);
         let stop = Arc::new(AtomicBool::new(false));
         let gauge = Arc::new(QueueGauge::default());
+        let recorder = Arc::new(FlightRecorder::new());
+        let shed = Arc::new(ShedCounters::default());
         let router_stop = stop.clone();
         let router_gauge = gauge.clone();
+        let router_recorder = recorder.clone();
         let router = std::thread::spawn(move || {
             let weights = Arc::new(weights);
-            router_main(rx, &model, &weights, &cfg, source, &router_stop, &router_gauge)
+            router_main(
+                rx,
+                &model,
+                &weights,
+                &cfg,
+                source,
+                &router_stop,
+                &router_gauge,
+                &router_recorder,
+            )
         });
-        Server { tx, stop, gauge, router: Some(router) }
+        Server { tx, stop, gauge, recorder, shed, router: Some(router) }
     }
 
     /// Submit one inference and wait for its completion.
@@ -431,7 +541,14 @@ impl Server {
 
     /// Submit without waiting; returns the response channel.
     pub fn submit(&self, input: Tensor) -> Result<Receiver<Response>, AdmitError> {
-        submit_via(&self.tx, &self.gauge, input)
+        submit_via(&self.tx, &self.gauge, &self.recorder, input)
+    }
+
+    /// The server's flight recorder: drain it ([`FlightRecorder::snapshot`])
+    /// and feed [`merge_spans`] for per-request latency decomposition while
+    /// the server is still running.
+    pub fn recorder(&self) -> &Arc<FlightRecorder> {
+        &self.recorder
     }
 
     /// A cloneable submit-side handle for threads that fan requests in —
@@ -439,7 +556,12 @@ impl Server {
     /// server. Drop every handle before [`Server::shutdown`] so the
     /// router's final drain can observe the queue closing.
     pub fn handle(&self) -> ServerHandle {
-        ServerHandle { tx: self.tx.clone(), gauge: self.gauge.clone() }
+        ServerHandle {
+            tx: self.tx.clone(),
+            gauge: self.gauge.clone(),
+            recorder: self.recorder.clone(),
+            shed: self.shed.clone(),
+        }
     }
 
     /// Stop the router and return its counters. The batch (and pipeline
@@ -449,15 +571,25 @@ impl Server {
     /// receiver.
     pub fn shutdown(mut self) -> RouterStats {
         let handle = self.router.take().unwrap();
+        let shed = Arc::clone(&self.shed);
+        let recorder = Arc::clone(&self.recorder);
         self.stop.store(true, Ordering::Release);
         drop(self); // drops the queue sender → the router's drain terminates
-        handle.join().expect("router panicked")
+        let mut stats = handle.join().expect("router panicked");
+        stats.shed_queue_full = shed.queue_full();
+        stats.shed_stopped = shed.stopped();
+        stats.shed_failed = shed.failed();
+        if recorder.recorded() > 0 {
+            stats.trace = Some(TraceSummary::from_trees(&merge_spans(&recorder.snapshot())));
+        }
+        stats
     }
 }
 
 // No custom Drop: dropping the Server closes the admission queue (tx) and
 // detaches the router thread, which exits once the queue drains.
 
+#[allow(clippy::too_many_arguments)]
 fn router_main(
     rx: Receiver<Request>,
     model: &Model,
@@ -466,11 +598,49 @@ fn router_main(
     source: PlanSource,
     stop: &AtomicBool,
     gauge: &QueueGauge,
+    recorder: &Arc<FlightRecorder>,
 ) -> RouterStats {
     if cfg.pipeline_depth > 1 {
-        router_pipelined(rx, model, weights, cfg, source, stop, gauge)
+        router_pipelined(rx, model, weights, cfg, source, stop, gauge, recorder)
     } else {
-        router_lockstep(rx, model, weights, cfg, source, stop, gauge)
+        router_lockstep(rx, model, weights, cfg, source, stop, gauge, recorder)
+    }
+}
+
+/// Record the router-side spans for one completed request — the end-to-end
+/// interval plus its queue / service / (process-mode) wire components, all
+/// on the router's clock, laid out back to back from the admission instant
+/// so the merger's nesting and conservation checks are meaningful. The
+/// total is measured independently (admission → now); the components are
+/// whatever each path measured for them.
+fn record_request_spans(
+    recorder: &FlightRecorder,
+    trace: u64,
+    gen: u64,
+    enqueued: Instant,
+    queue_ns: u64,
+    service_ns: u64,
+    wire_ns: u64,
+) {
+    if trace == 0 {
+        return;
+    }
+    let now_ns = recorder.now_ns();
+    let total_ns = enqueued.elapsed().as_nanos() as u64;
+    let start = now_ns.saturating_sub(total_ns);
+    let span = |kind: u8, start_ns: u64, dur_ns: u64| SpanRecord {
+        trace_id: trace,
+        gen,
+        kind,
+        node: CTL_NODE,
+        start_ns,
+        dur_ns,
+    };
+    recorder.record(span(KIND_TOTAL, start, total_ns));
+    recorder.record(span(KIND_QUEUE, start, queue_ns));
+    recorder.record(span(KIND_SERVICE, start + queue_ns, service_ns));
+    if wire_ns > 0 {
+        recorder.record(span(KIND_WIRE, start + queue_ns + service_ns, wire_ns));
     }
 }
 
@@ -537,11 +707,12 @@ fn next_request_reaping(
     pipe: &mut Option<BlockPipeline>,
     pending: &mut VecDeque<Pending>,
     next_seq: &mut u64,
+    recorder: &FlightRecorder,
 ) -> Option<Request> {
     loop {
         if let Some(p) = pipe.as_mut() {
             while let Some(c) = p.try_complete() {
-                complete_front(pending, c, next_seq);
+                complete_front(pending, c, next_seq, recorder);
             }
         }
         if pending.is_empty() {
@@ -570,6 +741,7 @@ fn fail_queued(rx: Receiver<Request>, gauge: &QueueGauge, stats: &mut RouterStat
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn router_lockstep(
     rx: Receiver<Request>,
     model: &Model,
@@ -578,6 +750,7 @@ fn router_lockstep(
     mut source: PlanSource,
     stop: &AtomicBool,
     gauge: &QueueGauge,
+    recorder: &FlightRecorder,
 ) -> RouterStats {
     let mut stats = RouterStats::default();
     let mut next_seq = 0u64;
@@ -651,9 +824,10 @@ fn router_lockstep(
         for (req, output) in batch.into_iter().zip(outputs) {
             let seq = next_seq;
             next_seq += 1;
+            let queued = service_start.duration_since(req.enqueued);
             let _ = req.resp.send(Response {
                 output,
-                queued: service_start.duration_since(req.enqueued),
+                queued,
                 service,
                 virtual_time,
                 batch_size,
@@ -661,6 +835,15 @@ fn router_lockstep(
                 leader,
                 seq,
             });
+            record_request_spans(
+                recorder,
+                req.trace,
+                0,
+                req.enqueued,
+                queued.as_nanos() as u64,
+                service.as_nanos() as u64,
+                0,
+            );
         }
         if stop.load(Ordering::Acquire) {
             break;
@@ -695,6 +878,7 @@ fn router_process(
     mut cluster: crate::transport::coord::ProcessCluster,
     stop: &AtomicBool,
     gauge: &QueueGauge,
+    recorder: &FlightRecorder,
 ) -> RouterStats {
     use crate::transport::coord::RecoveryOutcome;
     let mut stats = RouterStats::default();
@@ -716,7 +900,11 @@ fn router_process(
                 stats.failed_on_dead_cluster += 1;
                 continue;
             }
-            let report = cluster.infer_with_recovery(&req.input, cfg.replay_budget);
+            // this request's own dispatch instant: everything before it is
+            // queue wait (including earlier requests of the same batch)
+            let dispatched = Instant::now();
+            let report =
+                cluster.infer_with_recovery_traced(&req.input, cfg.replay_budget, req.trace);
             stats.process_failovers += report.failovers as u64;
             stats.replay_attempts += report.replays as u64;
             match report.outcome {
@@ -726,6 +914,13 @@ fn router_process(
                     }
                     let seq = next_seq;
                     next_seq += 1;
+                    // Wire time is derived — coordinator round trip minus
+                    // daemon-reported compute, both measured on their own
+                    // clock. The daemon's service span for the successful
+                    // attempt merges in by (trace, term) from trace dumps.
+                    let wire_ns = run.roundtrip_ns.saturating_sub(run.service_ns);
+                    let queue_ns =
+                        dispatched.saturating_duration_since(req.enqueued).as_nanos() as u64;
                     let _ = req.resp.send(Response {
                         output: run.output,
                         queued: service_start.duration_since(req.enqueued),
@@ -737,6 +932,15 @@ fn router_process(
                         leader: cluster.leader() as usize,
                         seq,
                     });
+                    record_request_spans(
+                        recorder,
+                        req.trace,
+                        run.term,
+                        req.enqueued,
+                        queue_ns,
+                        run.service_ns,
+                        wire_ns,
+                    );
                 }
                 // budget spent: the cluster is rebuilt and healthy, but
                 // this request degrades to the explicit-failure contract
@@ -771,22 +975,54 @@ struct Pending {
     virtual_time: f64,
     /// Re-executions already spent on this request.
     replays: u32,
+    /// Admission-assigned trace id, carried through replays.
+    trace: u64,
 }
 
-fn complete_front(pending: &mut VecDeque<Pending>, c: Completion, next_seq: &mut u64) {
+fn complete_front(
+    pending: &mut VecDeque<Pending>,
+    c: Completion,
+    next_seq: &mut u64,
+    recorder: &FlightRecorder,
+) {
     let p = pending.pop_front().expect("completion without a pending request");
     let seq = *next_seq;
     *next_seq += 1;
+    let queued = p.submitted.duration_since(p.enqueued);
+    let service = p.submitted.elapsed();
     let _ = p.resp.send(Response {
         output: c.output,
-        queued: p.submitted.duration_since(p.enqueued),
-        service: p.submitted.elapsed(),
+        queued,
+        service,
         virtual_time: p.virtual_time,
         batch_size: p.batch_size,
         nodes: p.nodes,
         leader: p.leader,
         seq,
     });
+    record_request_spans(
+        recorder,
+        p.trace,
+        0,
+        p.enqueued,
+        queued.as_nanos() as u64,
+        service.as_nanos() as u64,
+        0,
+    );
+}
+
+/// Fold one finished generation's stage statistics into the summary —
+/// occupancy snapshot plus the arena-reuse counters the metrics registry
+/// reports.
+fn absorb_pipeline(summary: &mut PipelineSummary, pstats: &PipelineStats) {
+    summary.absorb(
+        pstats.stages.len(),
+        pstats.items,
+        pstats.occupancy(),
+        pstats.bottleneck_stage(),
+    );
+    summary.buf_reuses += pstats.stages.iter().map(|s| s.buf_reuses).sum::<u64>();
+    summary.buf_allocs += pstats.stages.iter().map(|s| s.buf_allocs).sum::<u64>();
 }
 
 /// Drain one pipeline generation: complete everything in flight, then fold
@@ -796,18 +1032,14 @@ fn drain_generation(
     pending: &mut VecDeque<Pending>,
     summary: &mut PipelineSummary,
     next_seq: &mut u64,
+    recorder: &FlightRecorder,
 ) {
     let (rest, pstats) = pipe.finish();
     for c in rest {
-        complete_front(pending, c, next_seq);
+        complete_front(pending, c, next_seq, recorder);
     }
     debug_assert!(pending.is_empty(), "drained generation left requests pending");
-    summary.absorb(
-        pstats.stages.len(),
-        pstats.items,
-        pstats.occupancy(),
-        pstats.bottleneck_stage(),
-    );
+    absorb_pipeline(summary, &pstats);
 }
 
 /// Abort one pipeline generation whose leader died: in-flight completions
@@ -829,15 +1061,11 @@ fn abort_generation(
         "abort accounting diverged from the pending queue"
     );
     let orphans = std::mem::take(pending);
-    summary.absorb(
-        pstats.stages.len(),
-        pstats.items,
-        pstats.occupancy(),
-        pstats.bottleneck_stage(),
-    );
+    absorb_pipeline(summary, &pstats);
     orphans
 }
 
+#[allow(clippy::too_many_arguments)]
 fn router_pipelined(
     rx: Receiver<Request>,
     model: &Model,
@@ -846,6 +1074,7 @@ fn router_pipelined(
     mut source: PlanSource,
     stop: &AtomicBool,
     gauge: &QueueGauge,
+    recorder: &Arc<FlightRecorder>,
 ) -> RouterStats {
     let mut stats = RouterStats::default();
     let mut summary = PipelineSummary::default();
@@ -857,7 +1086,9 @@ fn router_pipelined(
     let mut gen_cost = 0.0f64;
     let mut gen_leader = 0usize;
 
-    while let Some(first) = next_request_reaping(&rx, &mut pipe, &mut pending, &mut next_seq) {
+    while let Some(first) =
+        next_request_reaping(&rx, &mut pipe, &mut pending, &mut next_seq, recorder)
+    {
         let mut batch = vec![first];
         fill_batch(&rx, cfg, &mut batch);
         note_dequeued(&batch, gauge, &mut stats);
@@ -875,7 +1106,7 @@ fn router_pipelined(
                     gen_nodes = *nodes;
                     gen_cost = *virtual_time;
                     gen_leader = 0;
-                    pipe = Some(BlockPipeline::start_with(
+                    pipe = Some(BlockPipeline::start_traced(
                         model,
                         plan,
                         weights,
@@ -883,6 +1114,7 @@ fn router_pipelined(
                         cfg.pipeline_depth,
                         0,
                         cfg.compute,
+                        Some(Arc::clone(recorder)),
                     ));
                 }
             }
@@ -902,7 +1134,13 @@ fn router_pipelined(
                             // Ordinary drain-and-flush: finish every
                             // in-flight inference under the old plan, then
                             // consult the frontend for the new generation.
-                            drain_generation(running, &mut pending, &mut summary, &mut next_seq);
+                            drain_generation(
+                                running,
+                                &mut pending,
+                                &mut summary,
+                                &mut next_seq,
+                                recorder,
+                            );
                         }
                     } else {
                         pipe = Some(running);
@@ -913,7 +1151,7 @@ fn router_pipelined(
                     gen_nodes = decision.nodes;
                     gen_cost = decision.cost_per_item;
                     gen_leader = decision.leader;
-                    pipe = Some(BlockPipeline::start_with(
+                    pipe = Some(BlockPipeline::start_traced(
                         model,
                         &decision.plan,
                         weights,
@@ -921,6 +1159,7 @@ fn router_pipelined(
                         cfg.pipeline_depth,
                         decision.leader,
                         cfg.compute,
+                        Some(Arc::clone(recorder)),
                     ));
                 }
                 *vt += gen_cost * batch.len() as f64;
@@ -941,7 +1180,7 @@ fn router_pipelined(
                 stats.failed_on_leader_loss += 1;
                 continue;
             }
-            p.submit(orphan.input.clone());
+            p.submit_traced(orphan.input.clone(), orphan.trace);
             stats.replay_attempts += 1;
             if orphan.replays == 0 {
                 stats.replayed_on_leader_loss += 1; // count requests once
@@ -960,7 +1199,7 @@ fn router_pipelined(
         let submitted = Instant::now();
         for req in batch {
             // blocks on backpressure past pipeline_depth
-            p.submit(req.input.clone());
+            p.submit_traced(req.input.clone(), req.trace);
             pending.push_back(Pending {
                 input: req.input,
                 resp: req.resp,
@@ -971,12 +1210,13 @@ fn router_pipelined(
                 leader: gen_leader,
                 virtual_time: gen_cost,
                 replays: 0,
+                trace: req.trace,
             });
             stats.requests += 1;
         }
         // Reap whatever has streamed out while feeding.
         while let Some(c) = p.try_complete() {
-            complete_front(&mut pending, c, &mut next_seq);
+            complete_front(&mut pending, c, &mut next_seq, recorder);
         }
         if stop.load(Ordering::Acquire) {
             break;
@@ -986,7 +1226,7 @@ fn router_pipelined(
     // Final drain: everything admitted into the pipeline completes; only
     // requests still in the admission queue are failed.
     if let Some(running) = pipe.take() {
-        drain_generation(running, &mut pending, &mut summary, &mut next_seq);
+        drain_generation(running, &mut pending, &mut summary, &mut next_seq, recorder);
     }
     fail_queued(rx, gauge, &mut stats);
     stats.queue_peak = gauge.peak();
@@ -1093,8 +1333,13 @@ mod tests {
         let (resp, _keep) = channel();
         let stale = Instant::now();
         std::thread::sleep(Duration::from_millis(5));
-        tx.send(Request { input: Tensor::random(2, 2, 1, 1), enqueued: Instant::now(), resp })
-            .unwrap();
+        tx.send(Request {
+            input: Tensor::random(2, 2, 1, 1),
+            enqueued: Instant::now(),
+            trace: 1,
+            resp,
+        })
+        .unwrap();
         let mut batch = Vec::new();
         fill_batch_until(&rx, 8, stale, &mut batch);
         assert!(batch.is_empty(), "an expired window must admit nothing");
@@ -1378,6 +1623,70 @@ mod tests {
         assert_eq!(stats.requests, 3);
         assert_eq!(stats.process_failovers, 0);
         assert_eq!(stats.failed_on_dead_cluster, 0);
+        let s = stats.trace.expect("process-mode requests are traced");
+        assert_eq!(s.traces, 3);
+        assert_eq!(s.well_formed, 3, "{s}");
+        assert!(s.wire_ns_sum > 0, "wire component must be attributed: {s}");
+    }
+
+    #[test]
+    fn lockstep_traces_decompose_within_tolerance() {
+        // sim-fabric conservation property: every served request's merged
+        // span tree must be well-formed — queue + service accounts for the
+        // end-to-end interval within the merger's tolerance
+        let (server, _) = setup(ServeConfig::default());
+        let n = 5u64;
+        for i in 0..n {
+            server.infer(Tensor::random(16, 16, 3, i)).unwrap();
+        }
+        let trees = crate::trace::merge_spans(&server.recorder().snapshot());
+        assert_eq!(trees.len() as u64, n, "one tree per request");
+        for t in &trees {
+            assert!(t.well_formed, "decomposition must validate: {t:?}");
+            assert!(!t.truncated);
+            assert!(t.total_ns > 0);
+            assert!(
+                t.queue_ns + t.service_ns <= t.total_ns + crate::trace::TOL_ABS_NS,
+                "components exceed the total beyond tolerance: {t:?}"
+            );
+        }
+        let stats = server.shutdown();
+        let s = stats.trace.expect("every request is traced");
+        assert_eq!(s.traces, n);
+        assert_eq!(s.well_formed, n);
+        assert_eq!(s.truncated, 0);
+        assert_eq!(stats.shed_queue_full, 0, "no front door ran");
+    }
+
+    #[test]
+    fn pipelined_traces_carry_per_stage_spans() {
+        let cfg = ServeConfig {
+            max_batch: 2,
+            batch_window: Duration::ZERO,
+            queue_depth: 32,
+            pipeline_depth: 3,
+            ..ServeConfig::default()
+        };
+        let (server, model) = setup(cfg);
+        let rxs: Vec<_> = (0..6u64)
+            .map(|i| server.submit(Tensor::random(16, 16, 3, 40 + i)).unwrap())
+            .collect();
+        for rx in rxs {
+            rx.recv().expect("request lost");
+        }
+        let trees = crate::trace::merge_spans(&server.recorder().snapshot());
+        assert_eq!(trees.len(), 6);
+        let stages = model.n_layers(); // uniform InH: one stage per layer
+        for t in &trees {
+            assert!(t.well_formed, "{t:?}");
+            assert_eq!(t.stages.len(), stages, "per-stage spans missing: {t:?}");
+            assert!(t.stages.iter().all(|&(_, ns)| ns > 0));
+        }
+        let stats = server.shutdown();
+        let p = stats.pipeline.expect("pipelined path reports stage stats");
+        assert!(p.buf_reuses > 0, "steady-state stages must recycle buffers");
+        let s = stats.trace.expect("trace summary present");
+        assert_eq!(s.well_formed, 6);
     }
 
     #[test]

@@ -1,0 +1,572 @@
+//! Per-request distributed tracing: spans, a bounded lock-free flight
+//! recorder, and a deterministic span-tree merger.
+//!
+//! Every admitted request gets a trace id at the front door (or at
+//! [`crate::serve::Server`]'s in-process submit). As the request moves
+//! through the serving vertical, each participant records **spans** —
+//! `(trace id, generation, kind, node, start, duration)` tuples — into a
+//! process-local [`FlightRecorder`]: the router records queue wait and the
+//! end-to-end interval, pipeline stage threads record per-stage busy time,
+//! node daemons record their compute interval, and the coordinator
+//! synthesizes the wire span from its measured round trip minus the
+//! daemon-reported service time (clocks across processes are *not*
+//! synchronized, so only process-local intervals and shipped durations are
+//! ever trusted).
+//!
+//! Recording is built for the steady-state serving path: the recorder is a
+//! fixed-size ring of seqlock-stamped slots, writes are lock-free
+//! (`fetch_add` on a cursor plus relaxed stores), and nothing allocates —
+//! the `FLEXPIE_ALLOC_GUARD` gate stays honest with tracing on. Draining
+//! ([`FlightRecorder::snapshot`]) allocates, but only at dump time.
+//!
+//! [`merge_spans`] turns a bag of records — arriving out of order,
+//! duplicated, or with whole nodes missing — into one [`TraceTree`] per
+//! `(trace id, generation)`, deterministically (sort + dedupe, last-writer
+//! -wins on conflicting duplicates), and validates each tree: components
+//! must nest inside the end-to-end interval (same-recorder spans only) and
+//! queue + service + wire must sum to the total within a tolerance. A tree
+//! with no end-to-end span (a dropped node, a failed attempt) is marked
+//! `truncated` — never a panic.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Span kind codes (the `kind` field of [`SpanRecord`]).
+pub const KIND_QUEUE: u8 = 0;
+/// Compute interval: `node_main` wall time on the recording node.
+pub const KIND_SERVICE: u8 = 1;
+/// Wire time: coordinator round trip minus daemon-reported service.
+pub const KIND_WIRE: u8 = 2;
+/// One pipeline stage's busy time for this request (`node` = stage index).
+pub const KIND_STAGE: u8 = 3;
+/// End-to-end: enqueue at admission → response completed.
+pub const KIND_TOTAL: u8 = 4;
+/// Codes above this are corrupt and dropped by the merger.
+pub const KIND_MAX: u8 = KIND_TOTAL;
+
+/// The node id routers/coordinators record under (daemons use their real
+/// node id). Mirrors the wire codec's `CTL_NODE`.
+pub const CTL_NODE: u32 = u32::MAX;
+
+/// Decomposition tolerance: |total − (queue+service+wire)| must be within
+/// `TOL_FRAC · total + TOL_ABS_NS`.
+pub const TOL_FRAC: f64 = 0.15;
+pub const TOL_ABS_NS: u64 = 3_000_000;
+
+/// One span. Plain-old-data and fixed-size so it can live in a lock-free
+/// ring slot and travel the wire as six little-endian fields.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct SpanRecord {
+    pub trace_id: u64,
+    /// Plan generation (the wire term) the span was recorded under.
+    pub gen: u64,
+    /// One of the `KIND_*` codes.
+    pub kind: u8,
+    /// Recording node id; `CTL_NODE` for router/coordinator spans, the
+    /// stage index for `KIND_STAGE`.
+    pub node: u32,
+    /// Start instant in the *recording process's* clock (ns since its
+    /// recorder epoch). Comparable only between spans of the same node.
+    pub start_ns: u64,
+    pub dur_ns: u64,
+}
+
+// --- flight recorder -----------------------------------------------------
+
+/// One seqlock-stamped ring slot: `ver` is odd while a write is in
+/// flight; readers accept a slot only when `ver` is even and unchanged
+/// across the field reads.
+struct Slot {
+    ver: AtomicU64,
+    f: [AtomicU64; 5],
+}
+
+/// Bounded per-process span buffer: fixed-size ring, lock-free writes,
+/// zero allocation in steady state. Oldest spans are overwritten when the
+/// ring wraps — a flight recorder, not a database.
+pub struct FlightRecorder {
+    slots: Box<[Slot]>,
+    cursor: AtomicU64,
+    ids: AtomicU64,
+    epoch: Instant,
+}
+
+/// Default ring capacity: 5 spans per request × thousands of in-flight
+/// requests before wrap, at ~48 B/slot.
+pub const DEFAULT_CAPACITY: usize = 16 * 1024;
+
+impl Default for FlightRecorder {
+    fn default() -> Self {
+        FlightRecorder::with_capacity(DEFAULT_CAPACITY)
+    }
+}
+
+impl FlightRecorder {
+    pub fn new() -> FlightRecorder {
+        FlightRecorder::default()
+    }
+
+    pub fn with_capacity(capacity: usize) -> FlightRecorder {
+        let cap = capacity.max(1);
+        let slots = (0..cap)
+            .map(|_| Slot { ver: AtomicU64::new(0), f: Default::default() })
+            .collect::<Vec<_>>()
+            .into_boxed_slice();
+        FlightRecorder { slots, cursor: AtomicU64::new(0), ids: AtomicU64::new(1), epoch: Instant::now() }
+    }
+
+    /// Allocate a fresh trace id (process-unique, monotonically increasing,
+    /// never 0 — 0 means "untraced").
+    pub fn next_trace_id(&self) -> u64 {
+        self.ids.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Nanoseconds since this recorder's epoch — the clock every span's
+    /// `start_ns` is measured on.
+    pub fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    /// Record one span. Lock-free and allocation-free: a cursor
+    /// `fetch_add` plus six relaxed stores under a seqlock stamp. Two
+    /// writers landing on the *same* slot (a full ring wrap inside one
+    /// write) can tear it; the merger treats a torn slot like any other
+    /// corrupt record.
+    pub fn record(&self, r: SpanRecord) {
+        let i = (self.cursor.fetch_add(1, Ordering::Relaxed) % self.slots.len() as u64) as usize;
+        let s = &self.slots[i];
+        s.ver.fetch_add(1, Ordering::AcqRel); // odd: write in flight
+        s.f[0].store(r.trace_id, Ordering::Relaxed);
+        s.f[1].store(r.gen, Ordering::Relaxed);
+        s.f[2].store(((r.node as u64) << 8) | r.kind as u64, Ordering::Relaxed);
+        s.f[3].store(r.start_ns, Ordering::Relaxed);
+        s.f[4].store(r.dur_ns, Ordering::Relaxed);
+        s.ver.fetch_add(1, Ordering::Release); // even: visible
+    }
+
+    /// Spans recorded so far (including any the ring has overwritten).
+    pub fn recorded(&self) -> u64 {
+        self.cursor.load(Ordering::Relaxed)
+    }
+
+    /// Drain every currently-readable span. Slots mid-write are skipped,
+    /// not waited on. Allocates — dump-time only.
+    pub fn snapshot(&self) -> Vec<SpanRecord> {
+        let mut out = Vec::new();
+        for s in self.slots.iter() {
+            let v0 = s.ver.load(Ordering::Acquire);
+            if v0 == 0 || v0 % 2 == 1 {
+                continue; // never written, or a write is in flight
+            }
+            let trace_id = s.f[0].load(Ordering::Relaxed);
+            let gen = s.f[1].load(Ordering::Relaxed);
+            let packed = s.f[2].load(Ordering::Relaxed);
+            let start_ns = s.f[3].load(Ordering::Relaxed);
+            let dur_ns = s.f[4].load(Ordering::Relaxed);
+            if s.ver.load(Ordering::Acquire) != v0 {
+                continue; // overwritten underneath us
+            }
+            out.push(SpanRecord {
+                trace_id,
+                gen,
+                kind: (packed & 0xFF) as u8,
+                node: (packed >> 8) as u32,
+                start_ns,
+                dur_ns,
+            });
+        }
+        out
+    }
+}
+
+// --- merger --------------------------------------------------------------
+
+/// One assembled per-request span tree with its latency decomposition.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceTree {
+    pub trace_id: u64,
+    pub gen: u64,
+    /// End-to-end ns (0 when `truncated`).
+    pub total_ns: u64,
+    pub queue_ns: u64,
+    pub service_ns: u64,
+    pub wire_ns: u64,
+    /// Per-stage busy ns, sorted by stage index.
+    pub stages: Vec<(u32, u64)>,
+    /// No end-to-end span reached the merger — a failed attempt or a
+    /// dropped node. The components above are whatever did arrive.
+    pub truncated: bool,
+    /// Complete, nested, and conservation holds within tolerance.
+    pub well_formed: bool,
+}
+
+impl TraceTree {
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let stages = self
+            .stages
+            .iter()
+            .map(|&(s, ns)| Json::arr([Json::Num(s as f64), Json::Num(ns as f64)]))
+            .collect::<Vec<_>>();
+        Json::obj(vec![
+            ("trace", Json::Num(self.trace_id as f64)),
+            ("gen", Json::Num(self.gen as f64)),
+            ("total_ns", Json::Num(self.total_ns as f64)),
+            ("queue_ns", Json::Num(self.queue_ns as f64)),
+            ("service_ns", Json::Num(self.service_ns as f64)),
+            ("wire_ns", Json::Num(self.wire_ns as f64)),
+            ("stages", Json::Arr(stages)),
+            ("truncated", Json::Bool(self.truncated)),
+            ("well_formed", Json::Bool(self.well_formed)),
+        ])
+    }
+}
+
+/// Assemble span trees from a bag of records with the default tolerance.
+/// Deterministic in the face of out-of-order, duplicated, or missing
+/// delivery: records are sorted and deduped first, so any permutation of
+/// the same multiset yields the same trees.
+pub fn merge_spans(records: &[SpanRecord]) -> Vec<TraceTree> {
+    merge_spans_tol(records, TOL_FRAC, TOL_ABS_NS)
+}
+
+/// [`merge_spans`] with an explicit conservation tolerance.
+pub fn merge_spans_tol(records: &[SpanRecord], tol_frac: f64, tol_abs_ns: u64) -> Vec<TraceTree> {
+    let mut recs: Vec<SpanRecord> = records
+        .iter()
+        .copied()
+        .filter(|r| r.kind <= KIND_MAX && r.trace_id != 0)
+        .collect();
+    recs.sort_unstable();
+    recs.dedup();
+
+    let mut trees = Vec::new();
+    let mut i = 0;
+    while i < recs.len() {
+        let (tid, gen) = (recs[i].trace_id, recs[i].gen);
+        let mut j = i;
+        while j < recs.len() && recs[j].trace_id == tid && recs[j].gen == gen {
+            j += 1;
+        }
+        trees.push(assemble(&recs[i..j], tol_frac, tol_abs_ns));
+        i = j;
+    }
+    trees
+}
+
+/// Build and validate one tree from the (sorted, deduped) records of one
+/// `(trace id, generation)` group.
+fn assemble(group: &[SpanRecord], tol_frac: f64, tol_abs_ns: u64) -> TraceTree {
+    // Conflicting duplicates (same kind + node, different interval) resolve
+    // to the last record in sort order — deterministic last-writer-wins.
+    let pick = |kind: u8| -> Option<SpanRecord> {
+        group.iter().rev().find(|r| r.kind == kind).copied()
+    };
+    let total = pick(KIND_TOTAL);
+    let queue = pick(KIND_QUEUE);
+    // Service can be reported twice — by the daemon that measured it and by
+    // the coordinator that synthesized it from the Output frame. The
+    // critical-path compute time is the longest one.
+    let service_ns =
+        group.iter().filter(|r| r.kind == KIND_SERVICE).map(|r| r.dur_ns).max().unwrap_or(0);
+    let wire_ns = group.iter().filter(|r| r.kind == KIND_WIRE).map(|r| r.dur_ns).max().unwrap_or(0);
+
+    let mut stages: Vec<(u32, u64)> = Vec::new();
+    for r in group.iter().filter(|r| r.kind == KIND_STAGE) {
+        match stages.iter_mut().find(|(s, _)| *s == r.node) {
+            Some((_, ns)) => *ns = (*ns).max(r.dur_ns),
+            None => stages.push((r.node, r.dur_ns)),
+        }
+    }
+    stages.sort_unstable();
+
+    let truncated = total.is_none();
+    let queue_ns = queue.map_or(0, |q| q.dur_ns);
+    let total_ns = total.map_or(0, |t| t.dur_ns);
+
+    let mut well_formed = !truncated;
+    if let Some(t) = total {
+        let slack = (tol_frac * total_ns as f64) as u64 + tol_abs_ns;
+        // conservation: the decomposition must account for the total
+        let parts = queue_ns + service_ns + wire_ns;
+        if parts > total_ns + slack || total_ns > parts + slack {
+            well_formed = false;
+        }
+        // nesting: same-recorder child intervals sit inside the total.
+        // Spans from other nodes carry a different process clock, so only
+        // durations are checked for them.
+        let t_end = t.start_ns + t.dur_ns;
+        for r in group.iter().filter(|r| r.kind != KIND_TOTAL) {
+            if r.kind != KIND_STAGE && r.node == t.node {
+                if r.start_ns + tol_abs_ns < t.start_ns
+                    || r.start_ns + r.dur_ns > t_end + slack
+                {
+                    well_formed = false;
+                }
+            }
+            if r.kind != KIND_STAGE && r.dur_ns > total_ns + slack {
+                well_formed = false;
+            }
+        }
+    }
+
+    TraceTree {
+        trace_id: group[0].trace_id,
+        gen: group[0].gen,
+        total_ns,
+        queue_ns,
+        service_ns,
+        wire_ns,
+        stages,
+        truncated,
+        well_formed,
+    }
+}
+
+// --- summary -------------------------------------------------------------
+
+/// Aggregate view over merged trees — joins `RouterStats` so every server
+/// shutdown reports what its tracing saw.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TraceSummary {
+    pub traces: u64,
+    pub well_formed: u64,
+    pub truncated: u64,
+    pub total_ns_sum: u64,
+    pub queue_ns_sum: u64,
+    pub service_ns_sum: u64,
+    pub wire_ns_sum: u64,
+}
+
+impl TraceSummary {
+    pub fn from_trees(trees: &[TraceTree]) -> TraceSummary {
+        let mut s = TraceSummary::default();
+        for t in trees {
+            s.traces += 1;
+            s.well_formed += t.well_formed as u64;
+            s.truncated += t.truncated as u64;
+            s.total_ns_sum += t.total_ns;
+            s.queue_ns_sum += t.queue_ns;
+            s.service_ns_sum += t.service_ns;
+            s.wire_ns_sum += t.wire_ns;
+        }
+        s
+    }
+}
+
+impl std::fmt::Display for TraceSummary {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mean = |sum: u64| {
+            if self.traces == 0 { 0.0 } else { sum as f64 / self.traces as f64 / 1e6 }
+        };
+        write!(
+            f,
+            "traces={} well_formed={} truncated={} mean_ms total={:.3} queue={:.3} service={:.3} wire={:.3}",
+            self.traces,
+            self.well_formed,
+            self.truncated,
+            mean(self.total_ns_sum),
+            mean(self.queue_ns_sum),
+            mean(self.service_ns_sum),
+            mean(self.wire_ns_sum)
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn well_formed_group(tid: u64, gen: u64) -> Vec<SpanRecord> {
+        // total [0, 10ms]; queue [0, 2ms]; wire 1ms; service 7ms (daemon
+        // clock, different node) — conservation: 2+7+1 = 10.
+        vec![
+            SpanRecord { trace_id: tid, gen, kind: KIND_TOTAL, node: CTL_NODE, start_ns: 0, dur_ns: 10_000_000 },
+            SpanRecord { trace_id: tid, gen, kind: KIND_QUEUE, node: CTL_NODE, start_ns: 0, dur_ns: 2_000_000 },
+            SpanRecord { trace_id: tid, gen, kind: KIND_WIRE, node: CTL_NODE, start_ns: 2_000_000, dur_ns: 1_000_000 },
+            SpanRecord { trace_id: tid, gen, kind: KIND_SERVICE, node: 3, start_ns: 55_000, dur_ns: 7_000_000 },
+            SpanRecord { trace_id: tid, gen, kind: KIND_STAGE, node: 0, start_ns: 60_000, dur_ns: 3_000_000 },
+            SpanRecord { trace_id: tid, gen, kind: KIND_STAGE, node: 1, start_ns: 70_000, dur_ns: 4_000_000 },
+        ]
+    }
+
+    #[test]
+    fn merge_assembles_well_formed_tree() {
+        let trees = merge_spans(&well_formed_group(7, 2));
+        assert_eq!(trees.len(), 1);
+        let t = &trees[0];
+        assert!(t.well_formed, "tree should validate: {t:?}");
+        assert!(!t.truncated);
+        assert_eq!((t.trace_id, t.gen), (7, 2));
+        assert_eq!(t.total_ns, 10_000_000);
+        assert_eq!(t.queue_ns, 2_000_000);
+        assert_eq!(t.service_ns, 7_000_000);
+        assert_eq!(t.wire_ns, 1_000_000);
+        assert_eq!(t.stages, vec![(0, 3_000_000), (1, 4_000_000)]);
+    }
+
+    #[test]
+    fn merge_is_order_and_duplicate_invariant() {
+        // property: any shuffle + duplication of the same records yields
+        // identical trees — the determinism the trace-dump path relies on
+        let mut base = Vec::new();
+        for tid in 1..=6u64 {
+            base.extend(well_formed_group(tid, tid % 3));
+        }
+        let reference = merge_spans(&base);
+        let mut rng = Rng::new(42);
+        for _ in 0..50 {
+            let mut perm = base.clone();
+            // duplicate a random sample
+            for _ in 0..rng.below(10) {
+                let i = rng.below(base.len());
+                perm.push(base[i]);
+            }
+            // Fisher–Yates shuffle
+            for i in (1..perm.len()).rev() {
+                let j = rng.below(i + 1);
+                perm.swap(i, j);
+            }
+            assert_eq!(merge_spans(&perm), reference, "merge must be order/dup invariant");
+        }
+    }
+
+    #[test]
+    fn missing_total_marks_truncated_never_panics() {
+        // dropped node: the end-to-end span never arrives
+        let mut g = well_formed_group(9, 1);
+        g.retain(|r| r.kind != KIND_TOTAL);
+        let trees = merge_spans(&g);
+        assert_eq!(trees.len(), 1);
+        assert!(trees[0].truncated);
+        assert!(!trees[0].well_formed);
+        assert_eq!(trees[0].total_ns, 0);
+        // components that did arrive are preserved for inspection
+        assert_eq!(trees[0].service_ns, 7_000_000);
+    }
+
+    #[test]
+    fn random_subsets_never_panic_and_stay_deterministic() {
+        // property: dropping any subset of spans yields *some* valid answer
+        // (possibly truncated trees), never a panic, and stays deterministic
+        let mut base = Vec::new();
+        for tid in 1..=4u64 {
+            base.extend(well_formed_group(tid, 0));
+        }
+        let mut rng = Rng::new(7);
+        for _ in 0..100 {
+            let kept: Vec<SpanRecord> =
+                base.iter().copied().filter(|_| rng.below(2) == 0).collect();
+            let a = merge_spans(&kept);
+            let b = merge_spans(&kept);
+            assert_eq!(a, b);
+            for t in &a {
+                assert!(t.truncated || t.total_ns > 0);
+            }
+        }
+    }
+
+    #[test]
+    fn conservation_violation_is_flagged() {
+        let mut g = well_formed_group(3, 0);
+        // service claims 3x the total — decomposition can't account
+        g.iter_mut().find(|r| r.kind == KIND_SERVICE).unwrap().dur_ns = 30_000_000;
+        let trees = merge_spans(&g);
+        assert!(!trees[0].well_formed);
+        assert!(!trees[0].truncated);
+    }
+
+    #[test]
+    fn nesting_violation_is_flagged() {
+        let mut g = well_formed_group(3, 0);
+        // queue span starts long before the total's interval on the same clock
+        let q = g.iter_mut().find(|r| r.kind == KIND_QUEUE).unwrap();
+        q.start_ns = 0;
+        let t = g.iter_mut().find(|r| r.kind == KIND_TOTAL).unwrap();
+        t.start_ns = 500_000_000;
+        let trees = merge_spans(&g);
+        assert!(!trees[0].well_formed, "child escaping the parent interval must flag");
+    }
+
+    #[test]
+    fn corrupt_kinds_and_untraced_ids_are_dropped() {
+        let mut g = well_formed_group(5, 0);
+        g.push(SpanRecord { trace_id: 5, gen: 0, kind: 250, node: 1, start_ns: 1, dur_ns: 1 });
+        g.push(SpanRecord { trace_id: 0, gen: 0, kind: KIND_TOTAL, node: 1, start_ns: 1, dur_ns: 1 });
+        let trees = merge_spans(&g);
+        assert_eq!(trees.len(), 1);
+        assert!(trees[0].well_formed);
+    }
+
+    #[test]
+    fn recorder_round_trips_and_wraps() {
+        let rec = FlightRecorder::with_capacity(8);
+        for i in 0..20u64 {
+            rec.record(SpanRecord {
+                trace_id: i + 1,
+                gen: 1,
+                kind: KIND_TOTAL,
+                node: 2,
+                start_ns: i * 10,
+                dur_ns: 5,
+            });
+        }
+        assert_eq!(rec.recorded(), 20);
+        let snap = rec.snapshot();
+        assert_eq!(snap.len(), 8, "ring keeps only the last capacity spans");
+        for r in &snap {
+            assert!(r.trace_id > 12, "oldest spans were overwritten, kept {r:?}");
+            assert_eq!(r.node, 2);
+        }
+    }
+
+    #[test]
+    fn recorder_is_safe_under_concurrent_writers() {
+        let rec = std::sync::Arc::new(FlightRecorder::with_capacity(64));
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let rec = rec.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..1000u64 {
+                    rec.record(SpanRecord {
+                        trace_id: t * 10_000 + i + 1,
+                        gen: t,
+                        kind: (i % 5) as u8,
+                        node: t as u32,
+                        start_ns: i,
+                        dur_ns: 1,
+                    });
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(rec.recorded(), 4000);
+        // snapshot + merge must digest whatever survived without panicking
+        let _ = merge_spans(&rec.snapshot());
+    }
+
+    #[test]
+    fn trace_ids_are_unique_and_nonzero() {
+        let rec = FlightRecorder::new();
+        let a = rec.next_trace_id();
+        let b = rec.next_trace_id();
+        assert!(a != 0 && b != 0 && a != b);
+    }
+
+    #[test]
+    fn summary_counts_and_display() {
+        let mut recs = well_formed_group(1, 0);
+        let mut cut = well_formed_group(2, 0);
+        cut.retain(|r| r.kind != KIND_TOTAL);
+        recs.extend(cut);
+        let s = TraceSummary::from_trees(&merge_spans(&recs));
+        assert_eq!(s.traces, 2);
+        assert_eq!(s.well_formed, 1);
+        assert_eq!(s.truncated, 1);
+        let text = s.to_string();
+        assert!(text.contains("traces=2"), "{text}");
+    }
+}

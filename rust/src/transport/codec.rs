@@ -7,7 +7,7 @@
 //! ```text
 //! offset  size  field        encoding
 //! 0       4     magic        0x4658_5049 ("FXPI"), u32 LE
-//! 4       2     version      u16 LE, currently 1
+//! 4       2     version      u16 LE, currently 2 (1 still decodes)
 //! 6       2     msg type     u16 LE, one discriminant per WireMsg variant
 //! 8       4     sender node  u32 LE (CTL_NODE for the coordinator)
 //! 12      8     term         u64 LE — plan generation; stale terms drop
@@ -15,6 +15,12 @@
 //! 24      4     checksum     u32 LE, FNV-1a over the payload bytes
 //! 28      —     payload      message-specific little-endian body
 //! ```
+//!
+//! Version 2 appends trace context to the `Infer`/`Begin`/`Output`
+//! payloads (a trace id, plus the daemon-measured service time on
+//! `Output`). Decoding is version-aware: a v1 frame parses exactly as
+//! before with the trace fields zeroed (0 = untraced), so old peers'
+//! frames keep working — the fallback the codec tests pin down.
 //!
 //! All integers are explicit little-endian (`to_le_bytes`); floats travel as
 //! their IEEE-754 bit patterns, so tensors survive the wire bit-exactly —
@@ -27,11 +33,14 @@
 use crate::compute::{RegionTensor, Tensor};
 use crate::model::{ConvType, LayerMeta, Model, OpKind};
 use crate::partition::{Mode, Plan, PlanStep, Region, Scheme};
+use crate::trace::SpanRecord;
 
 /// `"FXPI"` interpreted as a little-endian u32.
 pub const MAGIC: u32 = 0x4658_5049;
-/// Current wire protocol version.
-pub const VERSION: u16 = 1;
+/// Current wire protocol version (encodes trace context).
+pub const VERSION: u16 = 2;
+/// Oldest version this codec still decodes (no trace context).
+pub const MIN_VERSION: u16 = 1;
 /// Frame header size in bytes.
 pub const HEADER_LEN: usize = 28;
 /// Hard cap on payload size (64 MiB) — anything larger is rejected before
@@ -139,11 +148,14 @@ pub enum WireMsg {
     Abort,
     /// Finish in-flight work, accept no more.
     Drain,
-    /// Coordinator -> leader: run inference `seq` on `input`.
-    Infer { seq: u64, input: Tensor },
+    /// Coordinator -> leader: run inference `seq` on `input`. `trace` is
+    /// the request's trace id (0 = untraced; absent on v1 frames).
+    Infer { seq: u64, input: Tensor, trace: u64 },
     /// Coordinator -> worker: participate in inference `seq`.
-    Begin { seq: u64 },
+    Begin { seq: u64, trace: u64 },
     /// Leader -> coordinator: gathered output plus traffic accounting.
+    /// `trace` echoes the `Infer` trace id and `service_ns` reports the
+    /// leader's measured compute wall time (both 0 on v1 frames).
     Output {
         seq: u64,
         output: Tensor,
@@ -151,6 +163,8 @@ pub enum WireMsg {
         msgs: u64,
         /// Per-boundary `(bytes, msgs)`.
         traffic: Vec<(u64, u64)>,
+        trace: u64,
+        service_ns: u64,
     },
     /// Leader -> coordinator: inference `seq` failed because `node` died.
     Failed { seq: u64, node: u32 },
@@ -178,6 +192,13 @@ pub enum WireMsg {
     /// queue full (backpressure — retryable), 1 = server stopped, 2 =
     /// failed after admission (shutdown drain or exhausted replay budget).
     Denied { seq: u64, reason: u8 },
+
+    // --- observability (coordinator <-> daemon) -------------------------
+    /// Coordinator -> daemon: ship your flight recorder + resource usage.
+    TraceDump,
+    /// Daemon -> coordinator: drained spans plus the daemon's RSS gauge
+    /// and CPU-time delta since daemon boot (0s when `/proc` is absent).
+    TraceData { spans: Vec<SpanRecord>, rss_bytes: u64, cpu_ms: u64 },
 }
 
 impl WireMsg {
@@ -206,6 +227,8 @@ impl WireMsg {
             WireMsg::Submit { .. } => 20,
             WireMsg::Reply { .. } => 21,
             WireMsg::Denied { .. } => 22,
+            WireMsg::TraceDump => 23,
+            WireMsg::TraceData { .. } => 24,
         }
     }
 }
@@ -551,12 +574,16 @@ fn encode_payload(msg: &WireMsg) -> Vec<u8> {
             }
         }
         WireMsg::Elect { leader } => w.u32(*leader),
-        WireMsg::Infer { seq, input } => {
+        WireMsg::Infer { seq, input, trace } => {
             w.u64(*seq);
             w.tensor(input);
+            w.u64(*trace);
         }
-        WireMsg::Begin { seq } => w.u64(*seq),
-        WireMsg::Output { seq, output, bytes, msgs, traffic } => {
+        WireMsg::Begin { seq, trace } => {
+            w.u64(*seq);
+            w.u64(*trace);
+        }
+        WireMsg::Output { seq, output, bytes, msgs, traffic, trace, service_ns } => {
             w.u64(*seq);
             w.tensor(output);
             w.u64(*bytes);
@@ -566,6 +593,8 @@ fn encode_payload(msg: &WireMsg) -> Vec<u8> {
                 w.u64(*b);
                 w.u64(*m);
             }
+            w.u64(*trace);
+            w.u64(*service_ns);
         }
         WireMsg::Failed { seq, node } => {
             w.u64(*seq);
@@ -598,12 +627,29 @@ fn encode_payload(msg: &WireMsg) -> Vec<u8> {
             w.u64(*seq);
             w.u8(*reason);
         }
+        WireMsg::TraceDump => {}
+        WireMsg::TraceData { spans, rss_bytes, cpu_ms } => {
+            w.u32(spans.len() as u32);
+            for s in spans {
+                w.u64(s.trace_id);
+                w.u64(s.gen);
+                w.u8(s.kind);
+                w.u32(s.node);
+                w.u64(s.start_ns);
+                w.u64(s.dur_ns);
+            }
+            w.u64(*rss_bytes);
+            w.u64(*cpu_ms);
+        }
     }
     w.buf
 }
 
-fn decode_payload(kind: u16, payload: &[u8]) -> Result<WireMsg, CodecError> {
+fn decode_payload(version: u16, kind: u16, payload: &[u8]) -> Result<WireMsg, CodecError> {
     let mut r = Reader::new(payload);
+    // v1 peers never wrote trace context; read it only on v2+ frames so
+    // old frames keep parsing byte-for-byte (decode fallback).
+    let traced = version >= 2;
     let msg = match kind {
         1 => WireMsg::Hello,
         2 => WireMsg::Heartbeat,
@@ -650,9 +696,14 @@ fn decode_payload(kind: u16, payload: &[u8]) -> Result<WireMsg, CodecError> {
         9 => {
             let seq = r.u64()?;
             let input = r.tensor()?;
-            WireMsg::Infer { seq, input }
+            let trace = if traced { r.u64()? } else { 0 };
+            WireMsg::Infer { seq, input, trace }
         }
-        10 => WireMsg::Begin { seq: r.u64()? },
+        10 => {
+            let seq = r.u64()?;
+            let trace = if traced { r.u64()? } else { 0 };
+            WireMsg::Begin { seq, trace }
+        }
         11 => {
             let seq = r.u64()?;
             let output = r.tensor()?;
@@ -665,7 +716,9 @@ fn decode_payload(kind: u16, payload: &[u8]) -> Result<WireMsg, CodecError> {
                 let m = r.u64()?;
                 traffic.push((b, m));
             }
-            WireMsg::Output { seq, output, bytes, msgs, traffic }
+            let (trace, service_ns) =
+                if traced { (r.u64()?, r.u64()?) } else { (0, 0) };
+            WireMsg::Output { seq, output, bytes, msgs, traffic, trace, service_ns }
         }
         12 => {
             let seq = r.u64()?;
@@ -710,6 +763,24 @@ fn decode_payload(kind: u16, payload: &[u8]) -> Result<WireMsg, CodecError> {
             let reason = r.u8()?;
             WireMsg::Denied { seq, reason }
         }
+        23 => WireMsg::TraceDump,
+        24 => {
+            let n = r.u32()? as usize;
+            let mut spans = Vec::with_capacity(n.min(65536));
+            for _ in 0..n {
+                spans.push(SpanRecord {
+                    trace_id: r.u64()?,
+                    gen: r.u64()?,
+                    kind: r.u8()?,
+                    node: r.u32()?,
+                    start_ns: r.u64()?,
+                    dur_ns: r.u64()?,
+                });
+            }
+            let rss_bytes = r.u64()?;
+            let cpu_ms = r.u64()?;
+            WireMsg::TraceData { spans, rss_bytes, cpu_ms }
+        }
         other => return Err(CodecError::BadType(other)),
     };
     r.done()?;
@@ -737,6 +808,9 @@ pub fn encode(frame: &Frame) -> Vec<u8> {
 /// [`decode_body`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Header {
+    /// Negotiated wire version (`MIN_VERSION..=VERSION`); payload decoding
+    /// is version-aware.
+    pub version: u16,
     pub msg_type: u16,
     pub node: u32,
     pub term: u64,
@@ -754,7 +828,7 @@ pub fn decode_header(buf: &[u8]) -> Result<Header, CodecError> {
         return Err(CodecError::BadMagic(magic));
     }
     let version = u16::from_le_bytes(buf[4..6].try_into().unwrap());
-    if version != VERSION {
+    if !(MIN_VERSION..=VERSION).contains(&version) {
         return Err(CodecError::BadVersion(version));
     }
     let msg_type = u16::from_le_bytes(buf[6..8].try_into().unwrap());
@@ -765,7 +839,7 @@ pub fn decode_header(buf: &[u8]) -> Result<Header, CodecError> {
         return Err(CodecError::Oversized { len: payload_len, max: MAX_PAYLOAD });
     }
     let checksum = u32::from_le_bytes(buf[24..28].try_into().unwrap());
-    Ok(Header { msg_type, node, term, payload_len, checksum })
+    Ok(Header { version, msg_type, node, term, payload_len, checksum })
 }
 
 /// Verify the checksum and decode the payload against a parsed header.
@@ -780,7 +854,7 @@ pub fn decode_body(h: &Header, payload: &[u8]) -> Result<Frame, CodecError> {
     if got != h.checksum {
         return Err(CodecError::BadChecksum { want: h.checksum, got });
     }
-    let msg = decode_payload(h.msg_type, payload)?;
+    let msg = decode_payload(h.version, h.msg_type, payload)?;
     Ok(Frame { node: h.node, term: h.term, msg })
 }
 
@@ -829,8 +903,12 @@ mod tests {
             Frame { node: 2, term: 4, msg: WireMsg::Ready },
             Frame { node: CTL_NODE, term: 4, msg: WireMsg::Abort },
             Frame { node: CTL_NODE, term: 4, msg: WireMsg::Drain },
-            Frame { node: CTL_NODE, term: 4, msg: WireMsg::Infer { seq: 42, input: t.clone() } },
-            Frame { node: CTL_NODE, term: 4, msg: WireMsg::Begin { seq: 42 } },
+            Frame {
+                node: CTL_NODE,
+                term: 4,
+                msg: WireMsg::Infer { seq: 42, input: t.clone(), trace: 901 },
+            },
+            Frame { node: CTL_NODE, term: 4, msg: WireMsg::Begin { seq: 42, trace: 901 } },
             Frame {
                 node: 0,
                 term: 4,
@@ -840,6 +918,8 @@ mod tests {
                     bytes: 1024,
                     msgs: 7,
                     traffic: vec![(512, 3), (512, 4)],
+                    trace: 901,
+                    service_ns: 2_500_000,
                 },
             },
             Frame { node: 0, term: 4, msg: WireMsg::Failed { seq: 43, node: 2 } },
@@ -880,6 +960,33 @@ mod tests {
                 msg: WireMsg::Reply { seq: 3, output: Tensor::random(1, 1, 4, 9) },
             },
             Frame { node: CTL_NODE, term: 0, msg: WireMsg::Denied { seq: 4, reason: 1 } },
+            Frame { node: CTL_NODE, term: 4, msg: WireMsg::TraceDump },
+            Frame {
+                node: 2,
+                term: 4,
+                msg: WireMsg::TraceData {
+                    spans: vec![
+                        crate::trace::SpanRecord {
+                            trace_id: 901,
+                            gen: 4,
+                            kind: crate::trace::KIND_SERVICE,
+                            node: 2,
+                            start_ns: 1_000,
+                            dur_ns: 2_500_000,
+                        },
+                        crate::trace::SpanRecord {
+                            trace_id: 902,
+                            gen: 4,
+                            kind: crate::trace::KIND_STAGE,
+                            node: 1,
+                            start_ns: 9_000,
+                            dur_ns: 700_000,
+                        },
+                    ],
+                    rss_bytes: 8 << 20,
+                    cpu_ms: 120,
+                },
+            },
         ]
     }
 
@@ -891,7 +998,7 @@ mod tests {
         let mut kinds: Vec<u16> = frames.iter().map(|f| f.msg.kind()).collect();
         kinds.sort_unstable();
         kinds.dedup();
-        assert_eq!(kinds, (1u16..=22).collect::<Vec<_>>(), "sample set misses a msg type");
+        assert_eq!(kinds, (1u16..=24).collect::<Vec<_>>(), "sample set misses a msg type");
         for f in frames {
             let bytes = encode(&f);
             let (back, used) = decode(&bytes).expect("decode");
@@ -908,7 +1015,11 @@ mod tests {
     #[test]
     fn tensors_survive_the_wire_bit_exactly() {
         let t = Tensor::random(8, 8, 3, 1234);
-        let f = Frame { node: CTL_NODE, term: 1, msg: WireMsg::Infer { seq: 1, input: t.clone() } };
+        let f = Frame {
+            node: CTL_NODE,
+            term: 1,
+            msg: WireMsg::Infer { seq: 1, input: t.clone(), trace: 0 },
+        };
         let (back, _) = decode(&encode(&f)).unwrap();
         match back.msg {
             WireMsg::Infer { input, .. } => assert_eq!(input.max_abs_diff(&t), 0.0),
@@ -918,7 +1029,7 @@ mod tests {
 
     #[test]
     fn truncated_frames_reject_typed() {
-        let f = Frame { node: 1, term: 2, msg: WireMsg::Begin { seq: 9 } };
+        let f = Frame { node: 1, term: 2, msg: WireMsg::Begin { seq: 9, trace: 0 } };
         let bytes = encode(&f);
         // header cut short
         assert!(matches!(
@@ -963,7 +1074,7 @@ mod tests {
 
     #[test]
     fn checksum_mismatch_rejected() {
-        let f = Frame { node: 1, term: 2, msg: WireMsg::Begin { seq: 9 } };
+        let f = Frame { node: 1, term: 2, msg: WireMsg::Begin { seq: 9, trace: 0 } };
         let mut bytes = encode(&f);
         let last = bytes.len() - 1;
         bytes[last] ^= 0x01; // flip one payload bit
@@ -1000,6 +1111,69 @@ mod tests {
         bytes.push(0xAB);
         let sum = fnv1a(&[0xAB]);
         bytes[24..28].copy_from_slice(&sum.to_le_bytes());
+        assert!(matches!(decode(&bytes), Err(CodecError::BadPayload(_))));
+    }
+
+    /// Build a raw frame with an arbitrary version stamp — what a v1 peer
+    /// would put on the wire.
+    fn raw_frame(version: u16, kind: u16, node: u32, term: u64, payload: &[u8]) -> Vec<u8> {
+        let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+        out.extend_from_slice(&MAGIC.to_le_bytes());
+        out.extend_from_slice(&version.to_le_bytes());
+        out.extend_from_slice(&kind.to_le_bytes());
+        out.extend_from_slice(&node.to_le_bytes());
+        out.extend_from_slice(&term.to_le_bytes());
+        out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        out.extend_from_slice(&fnv1a(payload).to_le_bytes());
+        out.extend_from_slice(payload);
+        out
+    }
+
+    #[test]
+    fn v1_frames_still_decode_without_trace_context() {
+        // A v1 Begin payload is just the seq — no trace id field.
+        let bytes = raw_frame(1, 10, CTL_NODE, 3, &9u64.to_le_bytes());
+        let (f, used) = decode(&bytes).expect("v1 Begin must decode");
+        assert_eq!(used, bytes.len());
+        assert!(matches!(f.msg, WireMsg::Begin { seq: 9, trace: 0 }));
+
+        // A v1 Infer payload: seq + tensor, nothing after.
+        let t = Tensor::random(2, 2, 1, 5);
+        let mut w = Writer::new();
+        w.u64(42);
+        w.tensor(&t);
+        let bytes = raw_frame(1, 9, CTL_NODE, 3, &w.buf);
+        let (f, _) = decode(&bytes).expect("v1 Infer must decode");
+        match f.msg {
+            WireMsg::Infer { seq, input, trace } => {
+                assert_eq!((seq, trace), (42, 0));
+                assert_eq!(input.max_abs_diff(&t), 0.0);
+            }
+            other => panic!("wrong variant {other:?}"),
+        }
+
+        // A v1 Output payload ends after the traffic vector.
+        let mut w = Writer::new();
+        w.u64(42);
+        w.tensor(&t);
+        w.u64(100);
+        w.u64(2);
+        w.u32(1);
+        w.u64(100);
+        w.u64(2);
+        let bytes = raw_frame(1, 11, 0, 3, &w.buf);
+        let (f, _) = decode(&bytes).expect("v1 Output must decode");
+        match f.msg {
+            WireMsg::Output { seq, trace, service_ns, .. } => {
+                assert_eq!((seq, trace, service_ns), (42, 0, 0));
+            }
+            other => panic!("wrong variant {other:?}"),
+        }
+
+        // The same v1 payloads under a v2 stamp are *rejected* (missing
+        // trace fields), not misread — trailing-byte discipline holds both
+        // ways.
+        let bytes = raw_frame(2, 10, CTL_NODE, 3, &9u64.to_le_bytes());
         assert!(matches!(decode(&bytes), Err(CodecError::BadPayload(_))));
     }
 

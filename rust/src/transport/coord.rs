@@ -28,6 +28,7 @@ use std::time::{Duration, Instant};
 use crate::compute::Tensor;
 use crate::model::Model;
 use crate::partition::Plan;
+use crate::trace::SpanRecord;
 use crate::transport::codec::{Frame, RegistryEntry, WireMsg, CTL_NODE};
 use crate::transport::tcp::{self, Stream};
 use crate::transport::{registry, RetryPolicy, TransportError};
@@ -43,10 +44,18 @@ enum CtlEvent {
         bytes: u64,
         msgs: u64,
         traffic: Vec<(u64, u64)>,
+        trace: u64,
+        service_ns: u64,
     },
     Failed {
         seq: u64,
         culprit: u32,
+    },
+    TraceData {
+        node: u32,
+        spans: Vec<SpanRecord>,
+        rss_bytes: u64,
+        cpu_ms: u64,
     },
     Eof {
         node: u32,
@@ -62,6 +71,27 @@ pub struct ProcessRun {
     pub bytes: u64,
     pub msgs: u64,
     pub traffic: Vec<(u64, u64)>,
+    /// Trace id echoed by the leader (0 = untraced).
+    pub trace: u64,
+    /// Leader-measured compute wall time for this inference.
+    pub service_ns: u64,
+    /// Coordinator-measured dispatch→output round trip. Clocks across
+    /// processes are unsynchronized, so wire time is *derived*:
+    /// `roundtrip − service`, both measured locally by their owner.
+    pub roundtrip_ns: u64,
+    /// The plan generation (term) that served this inference.
+    pub term: u64,
+}
+
+/// One daemon's answer to a [`ProcessCluster::trace_dump`] RPC.
+#[derive(Debug)]
+pub struct NodeTraceDump {
+    pub node: u32,
+    pub spans: Vec<SpanRecord>,
+    /// RSS gauge at dump time (0 when `/proc` is absent).
+    pub rss_bytes: u64,
+    /// CPU-ms consumed since daemon boot.
+    pub cpu_ms: u64,
 }
 
 /// Every inference ends in exactly one of these — the zero-silent-drop
@@ -280,6 +310,26 @@ impl ProcessCluster {
         Err(TransportError::Protocol("plan install kept failing after 5 attempts".into()))
     }
 
+    /// Dial every live daemon's control plane **without installing a
+    /// plan** — just enough membership for control RPCs that need no
+    /// generation, like [`ProcessCluster::trace_dump`]. Daemons serve one
+    /// coordinator at a time, so attach only when no serving coordinator
+    /// is connected (e.g. after a harness run tore its server down, or
+    /// from `flexpie-ctl trace-dump` against an idle cluster).
+    pub fn attach(&mut self) -> Result<(), TransportError> {
+        let mut entries = registry::resolve_with(&self.retry, &self.registry)?;
+        entries.retain(|e| !self.banned.contains(&e.node));
+        if entries.is_empty() {
+            return Err(TransportError::Protocol("no live daemons to attach to".into()));
+        }
+        let mut next = Vec::with_capacity(entries.len());
+        for e in &entries {
+            next.push(self.dial(e)?);
+        }
+        self.members = next;
+        Ok(())
+    }
+
     fn dial(&self, e: &RegistryEntry) -> Result<Member, TransportError> {
         let writer = self
             .retry
@@ -292,6 +342,18 @@ impl ProcessCluster {
     /// Serve one inference. Always returns an outcome — `Done` with the
     /// gathered output, or an explicit `Failed` naming the evidence.
     pub fn infer(&mut self, input: &Tensor) -> Result<InferOutcome, TransportError> {
+        self.infer_traced(input, 0)
+    }
+
+    /// [`ProcessCluster::infer`] carrying a trace id: the id rides the
+    /// `Begin`/`Infer` frames, the leader echoes it on `Output` with its
+    /// measured service time, and the round trip is clocked here — the
+    /// three ingredients of the queue/service/wire decomposition.
+    pub fn infer_traced(
+        &mut self,
+        input: &Tensor,
+        trace: u64,
+    ) -> Result<InferOutcome, TransportError> {
         assert!(!self.members.is_empty(), "install a plan before inferring");
         let seq = self.next_seq;
         self.next_seq += 1;
@@ -299,8 +361,9 @@ impl ProcessCluster {
 
         // workers first so their exchanges are already listening by the
         // time the leader's scatter lands (buffered either way)
+        let start = Instant::now();
         for i in (1..self.members.len()).rev() {
-            let frame = Frame { node: CTL_NODE, term, msg: WireMsg::Begin { seq } };
+            let frame = Frame { node: CTL_NODE, term, msg: WireMsg::Begin { seq, trace } };
             if tcp::send_frame(&mut self.members[i].writer, &frame).is_err() {
                 let dead = self.members[i].entry.node;
                 return Ok(InferOutcome::Failed { seq, dead: Some(dead) });
@@ -309,26 +372,31 @@ impl ProcessCluster {
         let infer = Frame {
             node: CTL_NODE,
             term,
-            msg: WireMsg::Infer { seq, input: input.clone() },
+            msg: WireMsg::Infer { seq, input: input.clone(), trace },
         };
         if tcp::send_frame(&mut self.members[0].writer, &infer).is_err() {
             let dead = self.members[0].entry.node;
             return Ok(InferOutcome::Failed { seq, dead: Some(dead) });
         }
 
-        let start = Instant::now();
         loop {
             if start.elapsed() > self.infer_deadline {
                 return Ok(InferOutcome::Failed { seq, dead: None });
             }
             match self.events.recv_timeout(Duration::from_millis(20)) {
-                Ok(CtlEvent::Output { seq: s, output, bytes, msgs, traffic }) if s == seq => {
+                Ok(CtlEvent::Output { seq: s, output, bytes, msgs, traffic, trace, service_ns })
+                    if s == seq =>
+                {
                     return Ok(InferOutcome::Done(ProcessRun {
                         seq,
                         output,
                         bytes,
                         msgs,
                         traffic,
+                        trace,
+                        service_ns,
+                        roundtrip_ns: start.elapsed().as_nanos() as u64,
+                        term,
                     }));
                 }
                 Ok(CtlEvent::Failed { seq: s, culprit }) if s == seq => {
@@ -358,10 +426,22 @@ impl ProcessCluster {
     /// cluster is still rebuilt for the next request, and nothing is ever
     /// silently dropped.
     pub fn infer_with_recovery(&mut self, input: &Tensor, budget: u32) -> RecoveryReport {
+        self.infer_with_recovery_traced(input, budget, 0)
+    }
+
+    /// [`ProcessCluster::infer_with_recovery`] carrying a trace id. The
+    /// trace fields in the returned run describe the **successful** attempt
+    /// (failed attempts never produce an `Output`).
+    pub fn infer_with_recovery_traced(
+        &mut self,
+        input: &Tensor,
+        budget: u32,
+        trace: u64,
+    ) -> RecoveryReport {
         let mut replays = 0u32;
         let mut failovers = 0u32;
         loop {
-            match self.infer(input) {
+            match self.infer_traced(input, trace) {
                 Ok(InferOutcome::Done(run)) => {
                     return RecoveryReport {
                         outcome: RecoveryOutcome::Done(run),
@@ -394,6 +474,39 @@ impl ProcessCluster {
         }
     }
 
+    /// Ask every live member for its flight recorder + resource usage
+    /// (the `flexpie-ctl trace-dump` RPC). Best-effort per member: a
+    /// daemon that dies mid-dump is simply absent from the answer — the
+    /// merger marks its trees truncated instead of failing the dump.
+    pub fn trace_dump(&mut self) -> Vec<NodeTraceDump> {
+        let term = self.term;
+        let mut expect: BTreeSet<u32> = BTreeSet::new();
+        for m in self.members.iter_mut() {
+            let frame = Frame { node: CTL_NODE, term, msg: WireMsg::TraceDump };
+            if tcp::send_frame(&mut m.writer, &frame).is_ok() {
+                expect.insert(m.entry.node);
+            }
+        }
+        let mut dumps = Vec::new();
+        let start = Instant::now();
+        while !expect.is_empty() && start.elapsed() < self.infer_deadline {
+            match self.events.recv_timeout(Duration::from_millis(20)) {
+                Ok(CtlEvent::TraceData { node, spans, rss_bytes, cpu_ms }) => {
+                    if expect.remove(&node) {
+                        dumps.push(NodeTraceDump { node, spans, rss_bytes, cpu_ms });
+                    }
+                }
+                Ok(CtlEvent::Eof { node }) => {
+                    expect.remove(&node);
+                }
+                Ok(_) | Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        dumps.sort_by_key(|d| d.node);
+        dumps
+    }
+
     /// Ask every member daemon to exit, then drop the connections.
     pub fn shutdown(mut self) {
         for m in self.members.iter_mut() {
@@ -410,10 +523,13 @@ fn spawn_ctl_reader(mut s: Stream, node: u32, tx: Sender<CtlEvent>) {
             Ok(f) => {
                 let ev = match f.msg {
                     WireMsg::Ready => CtlEvent::Ready { node, term: f.term },
-                    WireMsg::Output { seq, output, bytes, msgs, traffic } => {
-                        CtlEvent::Output { seq, output, bytes, msgs, traffic }
+                    WireMsg::Output { seq, output, bytes, msgs, traffic, trace, service_ns } => {
+                        CtlEvent::Output { seq, output, bytes, msgs, traffic, trace, service_ns }
                     }
                     WireMsg::Failed { seq, node: culprit } => CtlEvent::Failed { seq, culprit },
+                    WireMsg::TraceData { spans, rss_bytes, cpu_ms } => {
+                        CtlEvent::TraceData { node, spans, rss_bytes, cpu_ms }
+                    }
                     _ => continue,
                 };
                 if tx.send(ev).is_err() {
@@ -480,6 +596,29 @@ mod tests {
                 }
             }
         }
+
+        // traced inference: the id echoes back with a measured
+        // decomposition, and a trace-dump finds the leader's service span
+        let input = Tensor::random(16, 16, 3, 2000);
+        match pc.infer_traced(&input, 77).unwrap() {
+            InferOutcome::Done(run) => {
+                assert_eq!(run.trace, 77);
+                assert!(run.service_ns > 0, "leader must measure its compute");
+                assert!(
+                    run.roundtrip_ns >= run.service_ns,
+                    "round trip {} shorter than service {}",
+                    run.roundtrip_ns,
+                    run.service_ns
+                );
+            }
+            InferOutcome::Failed { dead, .. } => panic!("traced inference failed ({dead:?})"),
+        }
+        let dumps = pc.trace_dump();
+        assert_eq!(dumps.len(), 3, "every daemon answers the dump");
+        assert!(
+            dumps.iter().any(|d| d.spans.iter().any(|s| s.trace_id == 77)),
+            "no daemon recorded the traced inference"
+        );
         pc.shutdown();
     }
 

@@ -27,10 +27,14 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
+use std::time::Instant;
+
 use crate::compute::{Tensor, WeightStore};
+use crate::loadgen::procfs;
 use crate::model::Model;
 use crate::partition::inflate::BlockGeometry;
 use crate::partition::Scheme;
+use crate::trace::{FlightRecorder, SpanRecord, KIND_SERVICE};
 use crate::transport::codec::{Frame, WireMsg, CTL_NODE};
 use crate::transport::fault::{FaultExchange, FaultSchedule};
 use crate::transport::tcp::{self, TcpExchange, TcpOpts};
@@ -149,6 +153,11 @@ fn control_loop(
     // (a one-shot fault fires once, a windowed fault expires) instead of
     // rewinding to the same fault forever
     let mut fault_base: u64 = 0;
+    // per-process flight recorder: traced inferences record their compute
+    // span here; TraceDump ships (and implicitly keeps) its contents.
+    // Resource accounting is a delta against this boot-time sample.
+    let recorder = FlightRecorder::new();
+    let usage0 = procfs::self_usage();
     loop {
         // one coordinator at a time; when it disconnects, await the next
         let mut ctl = ctl_l.accept_blocking()?;
@@ -198,10 +207,10 @@ fn control_loop(
                         }
                     }
                 }
-                WireMsg::Begin { seq } => {
+                WireMsg::Begin { seq, trace } => {
                     let ok = match gen.as_mut() {
                         Some(g) if frame.term == g.term => {
-                            run_inference(g, seq, None, &mut ctl, opts.node)
+                            run_inference(g, seq, trace, None, &mut ctl, opts.node, &recorder)
                         }
                         _ => true,
                     };
@@ -212,10 +221,10 @@ fn control_loop(
                         gen = None;
                     }
                 }
-                WireMsg::Infer { seq, input } => {
+                WireMsg::Infer { seq, input, trace } => {
                     let ok = match gen.as_mut() {
                         Some(g) if frame.term == g.term => {
-                            run_inference(g, seq, Some(input), &mut ctl, opts.node)
+                            run_inference(g, seq, trace, Some(input), &mut ctl, opts.node, &recorder)
                         }
                         _ => true,
                     };
@@ -225,6 +234,29 @@ fn control_loop(
                     if !ok {
                         gen = None;
                     }
+                }
+                WireMsg::TraceDump => {
+                    // ship the flight recorder plus this process's resource
+                    // delta — the coordinator's per-node accounting source
+                    let (rss_bytes, cpu_ms) = match (usage0, procfs::self_usage()) {
+                        (Some(a), Some(b)) => {
+                            let d = b.since(&a);
+                            (d.rss_bytes, d.cpu_ms)
+                        }
+                        _ => (0, 0),
+                    };
+                    let _ = tcp::send_frame(
+                        &mut ctl,
+                        &Frame {
+                            node: opts.node,
+                            term: frame.term,
+                            msg: WireMsg::TraceData {
+                                spans: recorder.snapshot(),
+                                rss_bytes,
+                                cpu_ms,
+                            },
+                        },
+                    );
                 }
                 WireMsg::Abort | WireMsg::Drain | WireMsg::Elect { .. } => {
                     // lockstep daemons hold nothing between frames; election
@@ -239,14 +271,19 @@ fn control_loop(
 
 /// Execute one inference over the generation's mesh. Returns false when
 /// the generation is poisoned (a transport failure) and must be replaced.
+#[allow(clippy::too_many_arguments)]
 fn run_inference(
     g: &mut Generation,
     seq: u64,
+    trace: u64,
     input: Option<Tensor>,
     ctl: &mut tcp::Stream,
     my_id: u32,
+    recorder: &FlightRecorder,
 ) -> bool {
     g.ex.inner_mut().set_seq(seq);
+    let start_ns = recorder.now_ns();
+    let t0 = Instant::now();
     let res = crate::cluster::node_main(
         g.rank,
         g.nodes,
@@ -258,6 +295,17 @@ fn run_inference(
         &mut g.ex,
         &crate::compute::ComputeConfig::default(),
     );
+    let service_ns = t0.elapsed().as_nanos() as u64;
+    if trace != 0 {
+        recorder.record(SpanRecord {
+            trace_id: trace,
+            gen: g.term,
+            kind: KIND_SERVICE,
+            node: my_id,
+            start_ns,
+            dur_ns: service_ns,
+        });
+    }
     match res {
         Ok(nr) => {
             if g.rank == 0 {
@@ -277,6 +325,8 @@ fn run_inference(
                             bytes: nr.sent_bytes,
                             msgs: nr.sent_msgs as u64,
                             traffic,
+                            trace,
+                            service_ns,
                         },
                     },
                 );

@@ -803,9 +803,10 @@ mod tests {
             read_frame(&mut s).unwrap()
         });
         let mut s = connect(&addr).unwrap();
-        send_frame(&mut s, &Frame { node: 5, term: 2, msg: WireMsg::Begin { seq: 77 } }).unwrap();
+        send_frame(&mut s, &Frame { node: 5, term: 2, msg: WireMsg::Begin { seq: 77, trace: 0 } })
+            .unwrap();
         let f = h.join().unwrap();
         assert_eq!((f.node, f.term), (5, 2));
-        assert!(matches!(f.msg, WireMsg::Begin { seq: 77 }));
+        assert!(matches!(f.msg, WireMsg::Begin { seq: 77, .. }));
     }
 }

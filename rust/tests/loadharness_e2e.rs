@@ -14,6 +14,7 @@ fn opts() -> HarnessOpts {
         load_bin: env!("CARGO_BIN_EXE_flexpie-load").to_string(),
         node_bin: env!("CARGO_BIN_EXE_flexpie-node").to_string(),
         fast: true,
+        artifact_dir: None,
     }
 }
 
@@ -39,6 +40,65 @@ fn a1_serves_every_request_bit_exactly() {
     assert_eq!(report.hist.count(), total);
     assert!(report.goodput_rps > 0.0);
     assert!(report.queue_peak >= 1, "traffic never touched the queue");
+    // tracing is always on: every served request left a merged span tree,
+    // and with no chaos every tree passes nesting + conservation (the
+    // run_suite gate enforces this too — assert it here so a gate
+    // relaxation cannot silently drop the contract)
+    assert!(report.traces >= total, "missing span trees: {}", report.traces);
+    assert_eq!(report.trace_well_formed, report.traces);
+    assert_eq!(report.queue_hist.count(), report.traces);
+    assert_eq!(report.service_hist.count(), report.traces);
+}
+
+#[test]
+fn shed_counters_conserve_under_forced_overload() {
+    // a deliberately undersized queue under a burst: some submissions must
+    // come back Denied(queue full), and the per-reason server counters must
+    // equal the agents' wire observations — run_suite's conservation gate
+    // (server shed == agent shed, reason by reason) enforces exactly that,
+    // so this test passing with report.shed > 0 is the e2e conservation
+    // proof for the non-trivial case
+    let spec = harness::SuiteSpec {
+        name: "shed_conservation",
+        mode: harness::Mode::InProc { pipeline_depth: 1 },
+        agents: 2,
+        requests_per_agent: 16,
+        offered: harness::Offered::Fixed(flexpie::loadgen::ArrivalProcess::Burst {
+            base_hz: 50.0,
+            burst_hz: 4000.0,
+            period_s: 0.05,
+            duty: 0.8,
+        }),
+        seed: 77,
+        slo: std::time::Duration::from_millis(250),
+        queue_depth: Some(1),
+        deterministic: false,
+        warmup: 0.0,
+    };
+    let report = harness::run_suite(&spec, &opts()).expect("gates must hold under overload");
+    assert_eq!(report.ok + report.shed + report.failed, report.sent, "conservation broke");
+    assert!(report.shed > 0, "queue_depth 1 under a 4 kHz burst never shed — suspicious");
+}
+
+#[test]
+fn warmup_trims_histogram_but_not_conservation() {
+    // same A1 shape with a 25% warm-up: conservation still covers the full
+    // schedule, but the histogram population shrinks by exactly the trim
+    let mut spec = a1();
+    spec.warmup = 0.25;
+    let report = harness::run_suite(&spec, &opts()).expect("warmed-up a1 must pass its gates");
+    let total = spec.agents as u64 * spec.requests_per_agent as u64;
+    assert_eq!(report.sent, total);
+    assert_eq!(report.ok, total);
+    let expected_trim =
+        spec.agents as u64 * (spec.requests_per_agent as f64 * spec.warmup).floor() as u64;
+    assert_eq!(report.trimmed, expected_trim, "trim must be the configured leading fraction");
+    assert_eq!(report.hist.count() + report.trimmed, report.ok);
+    // the RESULT line carries the flag so a trimmed run can never pass as
+    // an untrimmed one
+    let v = report.to_json();
+    assert_eq!(v.req("warmup").unwrap().as_f64(), Some(0.25));
+    assert_eq!(v.req("trimmed").unwrap().as_f64(), Some(expected_trim as f64));
 }
 
 #[test]

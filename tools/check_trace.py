@@ -1,0 +1,144 @@
+#!/usr/bin/env python3
+"""Gate the per-suite trace/metrics artifacts the load harness writes.
+
+`cargo bench --bench load_harness` (or `flexpie-load suite --artifacts DIR`)
+leaves two files per suite in the artifact directory:
+
+  trace_<suite>.json   — merged span trees (queue/service/wire decomposition)
+  metrics_<suite>.json — flat named-counter snapshot (Registry::to_json)
+
+This script is the CI tripwire for the tracing contract:
+
+  * every tree re-passes conservation: |total − (queue+service+wire)| within
+    the merger's tolerance (15% of total, 3 ms absolute floor) for trees the
+    merger called well-formed — catches a merger that stamps well_formed
+    without checking;
+  * stage spans nest: per-tree stage busy time never exceeds the service
+    component it decomposes;
+  * ≥ --min-well-formed of trees are well-formed (chaos suites, which
+    truncate trees by design when a daemon dies mid-request, only need one);
+  * process-mode suites observed at least one nonzero wire component —
+    an all-zero wire column means the daemon service spans never made it
+    back and the decomposition silently degenerated;
+  * the counter snapshot conserves: ok + shed + failed == sent, the server's
+    per-reason shed counters equal the agents' wire observations, and the
+    tree count in the trace file equals trace.traces in the metrics file.
+
+Latency magnitudes are machine-dependent and deliberately not checked.
+
+Usage: check_trace.py [--dir bench_results] [--min-well-formed 0.99]
+"""
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+TOL_FRAC = 0.15
+TOL_ABS_NS = 3_000_000
+
+
+def fail(msg):
+    print(f"check_trace: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def check_trees(suite, doc):
+    mode = doc.get("mode")
+    trees = doc.get("trees", [])
+    if not trees:
+        fail(f"{suite}: no span trees — tracing is always on, so zero trees is a regression")
+
+    well_formed = 0
+    wire_nonzero = 0
+    for t in trees:
+        total = t["total_ns"]
+        parts = t["queue_ns"] + t["service_ns"] + t["wire_ns"]
+        stage_sum = sum(ns for _, ns in t.get("stages", []))
+        if t["well_formed"]:
+            well_formed += 1
+            if t["truncated"]:
+                fail(f"{suite}: trace {t['trace']} is both well_formed and truncated")
+            if total <= 0:
+                fail(f"{suite}: trace {t['trace']} well-formed with total_ns {total}")
+            tol = max(TOL_FRAC * total, TOL_ABS_NS)
+            if abs(total - parts) > tol:
+                fail(
+                    f"{suite}: trace {t['trace']} conservation broken: total {total} ns"
+                    f" vs queue+service+wire {parts} ns (tol {tol:.0f} ns)"
+                )
+            if stage_sum > t["service_ns"] + TOL_ABS_NS:
+                fail(
+                    f"{suite}: trace {t['trace']} stage spans do not nest: stage sum"
+                    f" {stage_sum} ns > service {t['service_ns']} ns"
+                )
+        if t["wire_ns"] > 0:
+            wire_nonzero += 1
+
+    frac = well_formed / len(trees)
+    chaos = "chaos" in suite
+    floor = 1 / len(trees) if chaos else args.min_well_formed
+    if frac < floor:
+        fail(
+            f"{suite}: only {well_formed}/{len(trees)} trees well-formed"
+            f" ({frac:.3f} < {floor:.3f})"
+        )
+    if mode == "process" and wire_nonzero == 0:
+        fail(f"{suite}: process mode but every wire component is zero")
+    return len(trees), frac
+
+
+def check_metrics(suite, reg, n_trees):
+    def get(key):
+        if key not in reg:
+            fail(f"{suite}: metrics missing counter {key!r}")
+        return reg[key]
+
+    sent = get("agents.sent")
+    ok, shed, failed = get("agents.ok"), get("agents.shed"), get("agents.failed")
+    if ok + shed + failed != sent:
+        fail(f"{suite}: conservation broken: ok {ok} + shed {shed} + failed {failed} != sent {sent}")
+    if get("router.shed.queue_full") + get("router.shed.stopped") != shed:
+        fail(f"{suite}: server shed counters disagree with the agents' {shed} wire sheds")
+    if get("router.shed.failed") != failed:
+        fail(f"{suite}: server failure counter disagrees with the agents' {failed} failures")
+    traces, wf = get("trace.traces"), get("trace.well_formed")
+    if traces != n_trees:
+        fail(f"{suite}: metrics say {traces} traces but the trace file holds {n_trees} trees")
+    if wf > traces:
+        fail(f"{suite}: well_formed {wf} > traces {traces}")
+
+
+def main():
+    trace_files = sorted(glob.glob(os.path.join(args.dir, "trace_*.json")))
+    if not trace_files:
+        fail(f"no trace_*.json under {args.dir!r} — did the bench run with artifacts enabled?")
+
+    checked = 0
+    for tpath in trace_files:
+        suite = os.path.basename(tpath)[len("trace_") : -len(".json")]
+        with open(tpath) as f:
+            doc = json.load(f)
+        if doc.get("suite") != suite:
+            fail(f"{tpath}: suite field {doc.get('suite')!r} != filename suite {suite!r}")
+        n_trees, frac = check_trees(suite, doc)
+
+        mpath = os.path.join(args.dir, f"metrics_{suite}.json")
+        if not os.path.exists(mpath):
+            fail(f"{suite}: trace file present but {mpath} missing")
+        with open(mpath) as f:
+            reg = json.load(f)
+        check_metrics(suite, reg, n_trees)
+        print(f"check_trace: {suite}: {n_trees} trees, {frac:.1%} well-formed — ok")
+        checked += 1
+
+    print(f"check_trace: OK — {checked} suite(s) pass nesting, conservation and wire gates")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="bench_results")
+    ap.add_argument("--min-well-formed", type=float, default=0.99)
+    args = ap.parse_args()
+    main()
